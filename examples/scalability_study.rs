@@ -1,0 +1,75 @@
+//! Scalability study (paper §6.2.2, Figs. 12-14): how data loading and
+//! each PDF-computation method scale from 10 to 60 simulated Grid5000
+//! nodes, including the ML vs Grouping+ML crossover.
+//!
+//! ```text
+//! cargo run --release --example scalability_study
+//! ```
+
+use anyhow::Result;
+use pdfflow::coordinator::loader::load_window;
+use pdfflow::cube::CubeDims;
+use pdfflow::prelude::*;
+use pdfflow::storage::{DatasetReader, WindowCache};
+use pdfflow::util::timing::fmt_secs;
+
+fn main() -> Result<()> {
+    let mut cfg = ExperimentConfig::set1();
+    cfg.dataset.dims = CubeDims::new(256, 64, 64);
+    cfg.dataset.n_sims = 100;
+    cfg.pipeline.window_lines = 16;
+    cfg.slice = cfg.dataset.dims.nz * 201 / 501;
+    cfg.data_dir = "data/example-seismic".into(); // shared with seismic_slice
+
+    let data = SyntheticDataset::generate(&cfg.dataset, &cfg.data_dir)?;
+    let engine = Engine::load_default(&cfg.artifacts_dir)?;
+
+    // Fig 12 analog: loading time vs nodes (cold cache each time).
+    println!("{:<8} {:>14}", "nodes", "loading(sim)");
+    for nodes in [10, 20, 30, 40, 50, 60] {
+        let reader = DatasetReader::new(&data);
+        let cache = WindowCache::new(0);
+        let mut cluster = SimCluster::new(ClusterSpec::g5k(nodes));
+        for w in data.spec.dims.windows(cfg.slice, cfg.pipeline.window_lines) {
+            load_window(&reader, &cache, &engine, &mut cluster, w)?;
+        }
+        println!("{:<8} {:>14}", nodes, fmt_secs(cluster.total()));
+    }
+
+    // Fig 13/14 analog: PDF computation vs nodes per method.
+    let methods = [
+        Method::Baseline,
+        Method::Grouping,
+        Method::Ml,
+        Method::GroupingMl,
+    ];
+    print!("\n{:<8}", "nodes");
+    for m in &methods {
+        print!(" {:>14}", m.name());
+    }
+    println!("   (fit sim, 10-types)");
+    for nodes in [10, 20, 30, 40, 50, 60] {
+        let mut pipeline = Pipeline::new(
+            &data,
+            &engine,
+            SimCluster::new(ClusterSpec::g5k(nodes)),
+            cfg.pipeline.clone(),
+        );
+        pipeline.ensure_tree(cfg.train_slice, TypeSet::Ten, 25_000)?;
+        print!("{:<8}", nodes);
+        let mut times = Vec::new();
+        for m in &methods {
+            let r = pipeline.run_slice(*m, cfg.slice, TypeSet::Ten)?;
+            times.push(r.fit_sim_s);
+            print!(" {:>14}", fmt_secs(r.fit_sim_s));
+        }
+        let ml = times[2];
+        let gml = times[3];
+        println!(
+            "   winner: {}",
+            if ml < gml { "ml" } else { "grouping+ml" }
+        );
+    }
+    println!("\npaper Fig. 14: Grouping+ML wins on small clusters; ML overtakes past ~10-20 nodes.");
+    Ok(())
+}

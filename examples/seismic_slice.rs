@@ -1,0 +1,131 @@
+//! END-TO-END driver (DESIGN.md §Experiment-Index "headline"): the full
+//! system on a real small workload.
+//!
+//! Reproduces the paper's §6.2 experiment at 1/100 scale: generate the
+//! Set1-analog seismic dataset (100 simulations of a 256x64x64 cube),
+//! train the decision tree on previously generated output, run all six
+//! methods x {4,10}-types over the Slice-201 analog, and report the
+//! paper's headline: how many times faster than Baseline the best method
+//! is, at what error cost. Finishes with the Sampling feature survey.
+//!
+//! ```text
+//! cargo run --release --example seismic_slice
+//! ```
+
+use anyhow::Result;
+use pdfflow::coordinator::sampling::run_sampling;
+use pdfflow::coordinator::Sampler;
+use pdfflow::cube::CubeDims;
+use pdfflow::prelude::*;
+use pdfflow::storage::{DatasetReader, WindowCache};
+use pdfflow::util::timing::{fmt_bytes, fmt_secs, Stopwatch};
+
+fn main() -> Result<()> {
+    let mut cfg = ExperimentConfig::set1();
+    // 1/100-volume analog (paper: 251x501x501, 1000 sims, 235 GB).
+    cfg.dataset.dims = CubeDims::new(256, 64, 64);
+    cfg.dataset.n_sims = 100;
+    cfg.pipeline.window_lines = 16;
+    cfg.slice = cfg.dataset.dims.nz * 201 / 501;
+    cfg.data_dir = "data/example-seismic".into();
+
+    println!("== pdfflow end-to-end: seismic slice ==");
+    let sw = Stopwatch::start();
+    let data = SyntheticDataset::generate(&cfg.dataset, &cfg.data_dir)?;
+    println!(
+        "dataset: {} files, {} ({}x{}x{} cube, {} observations/point) [{}]",
+        data.files.len(),
+        fmt_bytes(data.total_bytes()),
+        data.spec.dims.nx,
+        data.spec.dims.ny,
+        data.spec.dims.nz,
+        data.spec.n_sims,
+        fmt_secs(sw.secs())
+    );
+
+    let engine = Engine::load_default(&cfg.artifacts_dir)?;
+    let mut pipeline = Pipeline::new(
+        &data,
+        &engine,
+        SimCluster::new(cfg.cluster.clone()),
+        cfg.pipeline.clone(),
+    );
+
+    // "Previously generated output data" -> decision tree (paper §5.3.1).
+    let sw = Stopwatch::start();
+    let model_error = pipeline.ensure_tree(cfg.train_slice, TypeSet::Ten, 25_000)?;
+    println!(
+        "decision tree: model error {:.4} [{}]",
+        model_error,
+        fmt_secs(sw.secs())
+    );
+
+    // All methods x type sets over the Slice-201 analog.
+    println!(
+        "\n{:<14} {:<8} {:>12} {:>12} {:>9} {:>7} {:>7}",
+        "method", "types", "fit(real)", "fit(sim)", "E", "fits", "groups"
+    );
+    let mut baseline = [0.0f64; 2];
+    let mut best: Option<(Method, TypeSet, f64)> = None;
+    for (ti, types) in [TypeSet::Four, TypeSet::Ten].into_iter().enumerate() {
+        for method in Method::ALL {
+            let r = pipeline.run_slice(method, cfg.slice, types)?;
+            println!(
+                "{:<14} {:<8} {:>12} {:>12} {:>9.4} {:>7} {:>7}",
+                method.name(),
+                types.name(),
+                fmt_secs(r.fit_real_s),
+                fmt_secs(r.fit_sim_s),
+                r.avg_error,
+                r.fits,
+                r.groups
+            );
+            if method == Method::Baseline {
+                baseline[ti] = r.fit_sim_s;
+            }
+            // The paper's headline factor compares within 10-types.
+            if ti == 1 && method != Method::Baseline
+                && best.map_or(true, |(_, _, t)| r.fit_sim_s < t)
+            {
+                best = Some((method, types, r.fit_sim_s));
+            }
+        }
+    }
+    let (bm, bt, btime) = best.unwrap();
+    println!(
+        "\nHEADLINE: {} ({}) is {:.0}x faster than Baseline (10-types) on the simulated \
+         LNCC cluster (paper reports up to 33x for Grouping+ML)",
+        bm.name(),
+        bt.name(),
+        baseline[1] / btime.max(1e-12),
+    );
+
+    // Sampling survey (paper §5.4): slice features without fitting.
+    let tree = pipeline.tree.clone().unwrap();
+    let reader = DatasetReader::new(&data);
+    let cache = WindowCache::new(512 << 20);
+    let mut cluster = SimCluster::new(cfg.cluster.clone());
+    let rep = run_sampling(
+        &reader, &cache, &engine, &mut cluster, &tree, cfg.slice, 0.1, Sampler::Random, 42,
+    )?;
+    println!(
+        "\nsampling (rate 0.1): {} points, load {} compute {} — slice features:",
+        rep.n_sampled,
+        fmt_secs(rep.load_real_s),
+        fmt_secs(rep.compute_real_s)
+    );
+    println!(
+        "  avg mean {:.1}  avg std {:.1}",
+        rep.features.avg_mean, rep.features.avg_std
+    );
+    for (i, pct) in rep.features.type_percentages.iter().enumerate() {
+        if *pct > 0.005 {
+            println!(
+                "  {:<12} {:>5.1}%",
+                DistType::from_id(i).unwrap().name(),
+                pct * 100.0
+            );
+        }
+    }
+    Ok(())
+}

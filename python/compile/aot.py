@@ -1,0 +1,113 @@
+"""AOT compile path: lower every L2 graph to HLO text + manifest.json.
+
+Interchange format is HLO **text**, NOT ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Run once at build time (``make artifacts``); never on the request path.
+
+    cd python && python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import distfit, model
+
+# Default artifact configurations: (batch, obs, types)
+#   256x1000 — Set1/Set2-analog production shape (paper: 1000 simulations)
+#   64x100   — fast shape for tests and small workloads
+#   64x4000  — Set3-analog (paper: 10000 observations/point, scaled 0.4x)
+DEFAULT_CONFIGS = [
+    (256, 1000),
+    (64, 100),
+    (64, 4000),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build(out_dir: str, configs, use_pallas: bool = True, verbose: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "format": 1,
+        "l_bins": distfit.DEFAULT_BINS,
+        "types": distfit.TYPES,
+        "stats_cols": distfit.STATS_COLS,
+        "penalty_error": distfit.PENALTY_ERROR,
+        "use_pallas": use_pallas,
+        "artifacts": [],
+    }
+    for batch, obs in configs:
+        for spec in model.build_specs(batch, obs, use_pallas=use_pallas):
+            t0 = time.time()
+            text = to_hlo_text(model.lower_spec(spec))
+            fname = f"{spec.name}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            manifest["artifacts"].append(
+                {
+                    "name": spec.name,
+                    "file": fname,
+                    "kind": spec.kind,
+                    "type": spec.type_name,
+                    "n_types": spec.n_types,
+                    "batch": spec.batch,
+                    "obs": spec.obs,
+                    "out_cols": spec.out_cols,
+                }
+            )
+            if verbose:
+                print(
+                    f"  {spec.name:40s} {len(text)/1024:8.1f} KiB "
+                    f"({time.time()-t0:5.1f}s)"
+                )
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--configs",
+        default=None,
+        help="comma-separated BxN list, e.g. '256x1000,64x100' (default: all)",
+    )
+    ap.add_argument(
+        "--no-pallas",
+        action="store_true",
+        help="lower with the pure-jnp reference kernels instead of Pallas",
+    )
+    args = ap.parse_args()
+    if args.configs:
+        configs = []
+        for part in args.configs.split(","):
+            b, n = part.lower().split("x")
+            configs.append((int(b), int(n)))
+    else:
+        configs = DEFAULT_CONFIGS
+    print(f"jax {jax.__version__}; lowering {configs} -> {args.out}")
+    t0 = time.time()
+    manifest = build(args.out, configs, use_pallas=not args.no_pallas)
+    print(f"wrote {len(manifest['artifacts'])} artifacts in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,414 @@
+"""L2: batched distribution fitting + Eq.5 error for the paper's 10 types.
+
+This module replaces the external R program (``fitdistr``) the paper calls
+per point from a Spark Map task. Everything is a single fused XLA graph per
+artifact: sufficient statistics (L1 Pallas kernel), per-type closed-form /
+method-of-moments estimators, CDF evaluation on the Eq.5 interval edges,
+and the histogram-vs-CDF error.
+
+Canonical type order (index = type id used across python, rust and the
+decision tree):
+
+    0 normal      1 uniform      2 exponential  3 lognormal
+    4 cauchy      5 gamma        6 geometric    7 logistic
+    8 student_t   9 weibull
+
+4-types = indices 0..3 (the paper's input-parameter families);
+10-types = all of them.
+
+Eq. 5 (paper): split [min, max] of each point's observations into L equal
+intervals; error = sum_k | Freq_k/N - (CDF(e_k) - CDF(e_{k-1})) |. The
+error lies in [0, 2]; types whose support excludes the data (e.g.
+log-normal on v <= 0) receive the penalty error 2.0, mirroring an R fit
+failure.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import betainc, gammainc, gammaln
+
+
+def erf(x):
+    """erf via Abramowitz–Stegun 7.1.26 (|abs err| < 1.5e-7).
+
+    jax.scipy.special.erf lowers to the dedicated `erf` HLO opcode, which
+    the xla crate's XLA 0.5.1 text parser rejects ("Unknown opcode: erf").
+    This polynomial uses only mul/add/exp — parseable everywhere — and its
+    error is far below the f32 precision of the artifacts.
+    """
+    a = (0.254829592, -0.284496736, 1.421413741, -1.453152027, 1.061405429)
+    s = jnp.sign(x)
+    z = jnp.abs(x)
+    t = 1.0 / (1.0 + 0.3275911 * z)
+    poly = t * (a[0] + t * (a[1] + t * (a[2] + t * (a[3] + t * a[4]))))
+    return s * (1.0 - poly * jnp.exp(-z * z))
+
+from .kernels.histogram import DEFAULT_BINS, histogram
+from .kernels.moments import MAX, MIN, SUM, SUM2, SUM3, SUM4, SUMLOG, SUMLOG2, moments
+from .kernels import ref as kref
+
+TYPES = [
+    "normal",
+    "uniform",
+    "exponential",
+    "lognormal",
+    "cauchy",
+    "gamma",
+    "geometric",
+    "logistic",
+    "student_t",
+    "weibull",
+]
+TYPE_INDEX = {t: i for i, t in enumerate(TYPES)}
+PENALTY_ERROR = 2.0
+_EPS = 1e-12
+
+
+# ---------------------------------------------------------------------------
+# Sufficient statistics
+# ---------------------------------------------------------------------------
+
+# Quantiles are only consumed by the cauchy estimator. XLA's sort is the
+# single most expensive op in the stats graph (87 of 92 ms per 256x1000
+# batch on this host), so rows wider than QUANTILE_SUBSAMPLE columns are
+# strided down first — observations are i.i.d. across simulation files,
+# so a stride-k subsample is a uniform subsample; the induced quantile
+# standard error (~1.25/sqrt(256) of the local density scale) is far
+# below the Eq.5 histogram resolution. The rust oracle
+# (stats::PointStats) mirrors this estimator exactly.
+QUANTILE_SUBSAMPLE = 256
+
+
+def _quantiles_sorted(values: jax.Array):
+    """(q25, q50, q75) per row: strided subsample + sort + interpolation."""
+    n_full = values.shape[1]
+    stride = max(1, -(-n_full // QUANTILE_SUBSAMPLE))  # ceil div
+    sub = values[:, ::stride]
+    vs = jnp.sort(sub, axis=1)
+    n = sub.shape[1]
+    out = []
+    for q in (0.25, 0.50, 0.75):
+        pos = q * (n - 1)
+        lo = int(pos)
+        hi = min(lo + 1, n - 1)
+        frac = pos - lo
+        out.append(vs[:, lo] * (1.0 - frac) + vs[:, hi] * frac)
+    return out
+
+
+
+
+def sufficient_stats(values: jax.Array, use_pallas: bool = True) -> dict:
+    """Per-point statistics shared by every estimator.
+
+    Returns a dict of (B,) arrays: mean, var (sample), std, min, max, skew,
+    kurt_ex, meanlog, stdlog, q25, q50, q75, pos_frac.
+    """
+    b, n = values.shape
+    raw = moments(values) if use_pallas else kref.moments_ref(values)
+    nf = float(n)
+    m1 = raw[:, SUM] / nf
+    # Central moments from raw power sums.
+    m2 = jnp.maximum(raw[:, SUM2] / nf - m1 * m1, 0.0)
+    m3 = raw[:, SUM3] / nf - 3.0 * m1 * raw[:, SUM2] / nf + 2.0 * m1**3
+    m4 = (
+        raw[:, SUM4] / nf
+        - 4.0 * m1 * raw[:, SUM3] / nf
+        + 6.0 * m1 * m1 * raw[:, SUM2] / nf
+        - 3.0 * m1**4
+    )
+    var = m2 * nf / max(nf - 1.0, 1.0)  # sample variance
+    std = jnp.sqrt(var)
+    m2s = jnp.maximum(m2, _EPS)
+    skew = m3 / m2s**1.5
+    kurt_ex = m4 / (m2s * m2s) - 3.0
+    meanlog = raw[:, SUMLOG] / nf
+    stdlog = jnp.sqrt(jnp.maximum(raw[:, SUMLOG2] / nf - meanlog * meanlog, 0.0))
+    # Quantiles for the cauchy estimator (sort-based; outside the L1
+    # kernel). One jnp.sort + three static interpolated gathers: ~4x
+    # cheaper than jnp.percentile's generic path, which dominated the
+    # stats graph before (EXPERIMENTS.md §Perf L2-1).
+    q25, q50, q75 = _quantiles_sorted(values)
+    pos_frac = jnp.mean((values > 0.0).astype(jnp.float32), axis=1)
+    return {
+        "mean": m1,
+        "var": var,
+        "std": std,
+        "min": raw[:, MIN],
+        "max": raw[:, MAX],
+        "skew": skew,
+        "kurt_ex": kurt_ex,
+        "meanlog": meanlog,
+        "stdlog": stdlog,
+        "q25": q25,
+        "q50": q50,
+        "q75": q75,
+        "pos_frac": pos_frac,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Per-type estimators: stats -> (params (B,3), supported (B,) bool)
+# and CDFs: (params, x (B,K)) -> (B,K)
+# ---------------------------------------------------------------------------
+
+
+def _fit_normal(s):
+    p = jnp.stack([s["mean"], jnp.maximum(s["std"], _EPS), jnp.zeros_like(s["mean"])], 1)
+    return p, jnp.ones_like(s["mean"], bool)
+
+
+def _cdf_normal(p, x):
+    mu, sigma = p[:, 0:1], p[:, 1:2]
+    return 0.5 * (1.0 + erf((x - mu) / (sigma * jnp.sqrt(2.0) + _EPS)))
+
+
+def _fit_uniform(s):
+    p = jnp.stack([s["min"], s["max"], jnp.zeros_like(s["mean"])], 1)
+    return p, jnp.ones_like(s["mean"], bool)
+
+
+def _cdf_uniform(p, x):
+    a, b = p[:, 0:1], p[:, 1:2]
+    return jnp.clip((x - a) / jnp.maximum(b - a, _EPS), 0.0, 1.0)
+
+
+def _fit_exponential(s):
+    lam = 1.0 / jnp.maximum(s["mean"], _EPS)
+    p = jnp.stack([lam, jnp.zeros_like(lam), jnp.zeros_like(lam)], 1)
+    return p, s["min"] >= 0.0
+
+
+def _cdf_exponential(p, x):
+    lam = p[:, 0:1]
+    return jnp.where(x < 0.0, 0.0, 1.0 - jnp.exp(-lam * jnp.maximum(x, 0.0)))
+
+
+def _fit_lognormal(s):
+    p = jnp.stack(
+        [s["meanlog"], jnp.maximum(s["stdlog"], _EPS), jnp.zeros_like(s["mean"])], 1
+    )
+    return p, s["min"] > 0.0
+
+
+def _cdf_lognormal(p, x):
+    mu, sigma = p[:, 0:1], p[:, 1:2]
+    lx = jnp.log(jnp.maximum(x, _EPS))
+    c = 0.5 * (1.0 + erf((lx - mu) / (sigma * jnp.sqrt(2.0) + _EPS)))
+    return jnp.where(x <= 0.0, 0.0, c)
+
+
+def _fit_cauchy(s):
+    scale = jnp.maximum((s["q75"] - s["q25"]) * 0.5, _EPS)
+    p = jnp.stack([s["q50"], scale, jnp.zeros_like(scale)], 1)
+    return p, jnp.ones_like(scale, bool)
+
+
+def _cdf_cauchy(p, x):
+    loc, scale = p[:, 0:1], p[:, 1:2]
+    return jnp.arctan((x - loc) / scale) / jnp.pi + 0.5
+
+
+def _fit_gamma(s):
+    var = jnp.maximum(s["var"], _EPS)
+    mean = jnp.maximum(s["mean"], _EPS)
+    k = jnp.clip(mean * mean / var, 1e-3, 1e6)
+    theta = var / mean
+    p = jnp.stack([k, jnp.maximum(theta, _EPS), jnp.zeros_like(k)], 1)
+    return p, (s["min"] >= 0.0) & (s["mean"] > 0.0)
+
+
+def _cdf_gamma(p, x):
+    k, theta = p[:, 0:1], p[:, 1:2]
+    return gammainc(k, jnp.maximum(x, 0.0) / theta)
+
+
+def _fit_geometric(s):
+    prob = 1.0 / jnp.maximum(1.0 + s["mean"], 1.0 + _EPS)
+    p = jnp.stack([prob, jnp.zeros_like(prob), jnp.zeros_like(prob)], 1)
+    return p, s["min"] >= 0.0
+
+
+def _cdf_geometric(p, x):
+    prob = jnp.clip(p[:, 0:1], _EPS, 1.0 - _EPS)
+    k = jnp.floor(jnp.maximum(x, -1.0))
+    c = 1.0 - jnp.exp((k + 1.0) * jnp.log1p(-prob))
+    return jnp.where(x < 0.0, 0.0, c)
+
+
+def _fit_logistic(s):
+    scale = jnp.maximum(s["std"] * jnp.sqrt(3.0) / jnp.pi, _EPS)
+    p = jnp.stack([s["mean"], scale, jnp.zeros_like(scale)], 1)
+    return p, jnp.ones_like(scale, bool)
+
+
+def _cdf_logistic(p, x):
+    loc, scale = p[:, 0:1], p[:, 1:2]
+    return jax.nn.sigmoid((x - loc) / scale)
+
+
+def _fit_student_t(s):
+    # Method of moments: excess kurtosis of t_nu is 6/(nu-4).
+    nu = 4.0 + 6.0 / jnp.maximum(s["kurt_ex"], 0.03)
+    nu = jnp.clip(nu, 2.1, 200.0)
+    scale = jnp.sqrt(jnp.maximum(s["var"] * (nu - 2.0) / nu, _EPS))
+    p = jnp.stack([s["mean"], scale, nu], 1)
+    return p, jnp.ones_like(nu, bool)
+
+
+def _cdf_student_t(p, x):
+    loc, scale, nu = p[:, 0:1], p[:, 1:2], p[:, 2:3]
+    z = (x - loc) / scale
+    w = nu / (nu + z * z)
+    tail = 0.5 * betainc(nu * 0.5, 0.5, w)
+    return jnp.where(z < 0.0, tail, 1.0 - tail)
+
+
+def _fit_weibull(s):
+    mean = jnp.maximum(s["mean"], _EPS)
+    cv = jnp.maximum(s["std"], _EPS) / mean
+    # Justus (1978) approximation for the shape parameter.
+    k = jnp.clip(cv ** (-1.086), 0.05, 50.0)
+    lam = mean / jnp.exp(gammaln(1.0 + 1.0 / k))
+    p = jnp.stack([k, jnp.maximum(lam, _EPS), jnp.zeros_like(k)], 1)
+    return p, s["min"] >= 0.0
+
+
+def _cdf_weibull(p, x):
+    k, lam = p[:, 0:1], p[:, 1:2]
+    return 1.0 - jnp.exp(-jnp.power(jnp.maximum(x, 0.0) / lam, k))
+
+
+_FITTERS = {
+    "normal": (_fit_normal, _cdf_normal),
+    "uniform": (_fit_uniform, _cdf_uniform),
+    "exponential": (_fit_exponential, _cdf_exponential),
+    "lognormal": (_fit_lognormal, _cdf_lognormal),
+    "cauchy": (_fit_cauchy, _cdf_cauchy),
+    "gamma": (_fit_gamma, _cdf_gamma),
+    "geometric": (_fit_geometric, _cdf_geometric),
+    "logistic": (_fit_logistic, _cdf_logistic),
+    "student_t": (_fit_student_t, _cdf_student_t),
+    "weibull": (_fit_weibull, _cdf_weibull),
+}
+
+
+# ---------------------------------------------------------------------------
+# Eq. 5 error
+# ---------------------------------------------------------------------------
+
+
+def interval_edges(mn: jax.Array, mx: jax.Array, n_bins: int) -> jax.Array:
+    """(B,) min/max -> (B, L+1) equal-width interval edges (Eq. 5)."""
+    frac = jnp.arange(n_bins + 1, dtype=jnp.float32) / float(n_bins)
+    return mn[:, None] + (mx - mn)[:, None] * frac[None, :]
+
+
+def eq5_error(hist: jax.Array, cdf_at_edges: jax.Array, n_obs: int) -> jax.Array:
+    """Eq. 5: sum_k |Freq_k/N - (CDF(e_k) - CDF(e_{k-1}))| per point."""
+    probs = cdf_at_edges[:, 1:] - cdf_at_edges[:, :-1]
+    freq = hist / float(n_obs)
+    return jnp.sum(jnp.abs(freq - probs), axis=1)
+
+
+def fit_one_type(
+    type_name: str,
+    stats: dict,
+    hist: jax.Array,
+    edges: jax.Array,
+    n_obs: int,
+):
+    """Fit one distribution type; returns (error (B,), params (B,3))."""
+    fit_fn, cdf_fn = _FITTERS[type_name]
+    params, supported = fit_fn(stats)
+    cdf = cdf_fn(params, edges)
+    err = eq5_error(hist, cdf, n_obs)
+    err = jnp.where(supported, err, PENALTY_ERROR)
+    return err, params
+
+
+# ---------------------------------------------------------------------------
+# Graph builders (these become the AOT artifacts)
+# ---------------------------------------------------------------------------
+
+
+def _prep(values: jax.Array, n_bins: int, use_pallas: bool):
+    stats = sufficient_stats(values, use_pallas=use_pallas)
+    if use_pallas:
+        hist = histogram(values, stats["min"], stats["max"], n_bins=n_bins)
+    else:
+        hist = kref.histogram_ref(values, stats["min"], stats["max"], n_bins)
+    edges = interval_edges(stats["min"], stats["max"], n_bins)
+    return stats, hist, edges
+
+
+def fit_single(
+    values: jax.Array,
+    type_name: str,
+    n_bins: int = DEFAULT_BINS,
+    use_pallas: bool = True,
+) -> jax.Array:
+    """ML-path artifact body: fit exactly one type. (B,N) -> (B,4).
+
+    Output columns: [error, p0, p1, p2].
+    """
+    _, n = values.shape
+    stats, hist, edges = _prep(values, n_bins, use_pallas)
+    err, params = fit_one_type(type_name, stats, hist, edges, n)
+    return jnp.concatenate([err[:, None], params], axis=1)
+
+
+def fit_all(
+    values: jax.Array,
+    n_types: int = 4,
+    n_bins: int = DEFAULT_BINS,
+    use_pallas: bool = True,
+) -> jax.Array:
+    """Baseline/Grouping artifact body: fit the first ``n_types`` candidate
+    types and keep the minimum-error one (paper Algorithm 3). (B,N) -> (B,5).
+
+    Output columns: [best_type_id, error, p0, p1, p2].
+    """
+    _, n = values.shape
+    stats, hist, edges = _prep(values, n_bins, use_pallas)
+    errs, params = [], []
+    for t in TYPES[:n_types]:
+        e, p = fit_one_type(t, stats, hist, edges, n)
+        errs.append(e)
+        params.append(p)
+    err_mat = jnp.stack(errs, axis=1)              # (B, T)
+    par_mat = jnp.stack(params, axis=1)            # (B, T, 3)
+    best = jnp.argmin(err_mat, axis=1)             # (B,)
+    best_err = jnp.take_along_axis(err_mat, best[:, None], axis=1)[:, 0]
+    best_par = jnp.take_along_axis(par_mat, best[:, None, None], axis=1)[:, 0, :]
+    return jnp.concatenate(
+        [best.astype(jnp.float32)[:, None], best_err[:, None], best_par], axis=1
+    )
+
+
+# Column order of the stats artifact, mirrored by rust/src/runtime/manifest.rs.
+STATS_COLS = [
+    "mean",
+    "std",
+    "min",
+    "max",
+    "skew",
+    "kurt_ex",
+    "meanlog",
+    "stdlog",
+    "q25",
+    "q50",
+    "q75",
+    "pos_frac",
+]
+
+
+def point_stats(values: jax.Array, use_pallas: bool = True) -> jax.Array:
+    """Data-loading artifact body (paper Algorithm 2 pre-processing).
+
+    (B, N) -> (B, 12) with STATS_COLS columns.
+    """
+    s = sufficient_stats(values, use_pallas=use_pallas)
+    return jnp.stack([s[c] for c in STATS_COLS], axis=1)

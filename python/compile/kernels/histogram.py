@@ -1,0 +1,79 @@
+"""L1 Pallas kernel: per-point equal-width histogram (Eq. 5 substrate).
+
+Input  : values (B, N) f32, mn (B, 1) f32, mx (B, 1) f32
+Output : counts (B, L) f32 — L equal-width bins spanning [mn, mx] per point
+         (paper Eq. 5: intervals evenly split between per-point min and max;
+          values landing exactly on max fall in the last bin).
+
+Schedule: grid (B/bB, N/bN). Each block computes bucket indices, expands to
+a one-hot (bB, bN, L) tensor and reduces over bN — on a TPU this reduction
+is expressed as a (bN x L) matmul against a ones vector, i.e. the histogram
+rides the MXU instead of scatter-adds (TPUs have no fast scatter); see
+DESIGN.md §Hardware-Adaptation. Output blocks are revisited along j.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .moments import pick_block
+
+DEFAULT_BINS = 32
+
+
+def _hist_kernel(v_ref, mn_ref, mx_ref, o_ref, *, n_bins: int):
+    j = pl.program_id(1)
+    v = v_ref[...]                       # (bB, bN)
+    mn = mn_ref[...]                     # (bB, 1)
+    mx = mx_ref[...]
+    rng = jnp.maximum(mx - mn, 1e-30)
+    idx = jnp.floor((v - mn) / rng * n_bins)
+    idx = jnp.clip(idx, 0.0, float(n_bins - 1)).astype(jnp.int32)
+    # One-hot + reduce == (bN, L) matmul with a ones vector on the MXU.
+    one_hot = (idx[:, :, None] == jnp.arange(n_bins, dtype=jnp.int32)[None, None, :])
+    counts = jnp.sum(one_hot.astype(jnp.float32), axis=1)  # (bB, L)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = counts
+
+    @pl.when(j > 0)
+    def _accumulate():
+        o_ref[...] += counts
+
+
+@functools.partial(jax.jit, static_argnames=("n_bins", "block_b", "block_n"))
+def histogram(
+    values: jax.Array,
+    mn: jax.Array,
+    mx: jax.Array,
+    n_bins: int = DEFAULT_BINS,
+    block_b: int = 32,
+    block_n: int = 1024,
+) -> jax.Array:
+    """Per-point histogram via the Pallas kernel.
+
+    ``mn``/``mx`` may be (B,) or (B, 1); they are broadcast per point.
+    """
+    b, n = values.shape
+    mn = mn.reshape(b, 1).astype(jnp.float32)
+    mx = mx.reshape(b, 1).astype(jnp.float32)
+    bb = pick_block(b, block_b)
+    bn = pick_block(n, block_n)
+    kernel = functools.partial(_hist_kernel, n_bins=n_bins)
+    return pl.pallas_call(
+        kernel,
+        grid=(b // bb, n // bn),
+        in_specs=[
+            pl.BlockSpec((bb, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bb, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bb, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, n_bins), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n_bins), jnp.float32),
+        interpret=True,  # CPU PJRT; see module docstring
+    )(values, mn, mx)

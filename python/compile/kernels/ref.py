@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the CORE correctness signal: python/tests/test_kernels.py sweeps
+shapes and data regimes with hypothesis and asserts the Pallas kernels
+match these references to float tolerance.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .moments import N_STATS  # noqa: F401  (re-exported for tests)
+
+
+def moments_ref(values: jax.Array) -> jax.Array:
+    """Reference for kernels.moments.moments: (B, N) -> (B, 8)."""
+    v = values.astype(jnp.float32)
+    v2 = v * v
+    pos = v > 0.0
+    lv = jnp.where(pos, jnp.log(jnp.where(pos, v, 1.0)), 0.0)
+    return jnp.stack(
+        [
+            jnp.sum(v, axis=1),
+            jnp.sum(v2, axis=1),
+            jnp.sum(v2 * v, axis=1),
+            jnp.sum(v2 * v2, axis=1),
+            jnp.min(v, axis=1),
+            jnp.max(v, axis=1),
+            jnp.sum(lv, axis=1),
+            jnp.sum(lv * lv, axis=1),
+        ],
+        axis=1,
+    )
+
+
+def histogram_ref(values: jax.Array, mn: jax.Array, mx: jax.Array, n_bins: int) -> jax.Array:
+    """Reference for kernels.histogram.histogram: (B, N) -> (B, L)."""
+    b, _ = values.shape
+    v = values.astype(jnp.float32)
+    mn = mn.reshape(b, 1).astype(jnp.float32)
+    mx = mx.reshape(b, 1).astype(jnp.float32)
+    rng = jnp.maximum(mx - mn, 1e-30)
+    idx = jnp.clip(jnp.floor((v - mn) / rng * n_bins), 0.0, float(n_bins - 1)).astype(jnp.int32)
+    one_hot = idx[:, :, None] == jnp.arange(n_bins, dtype=jnp.int32)[None, None, :]
+    return jnp.sum(one_hot.astype(jnp.float32), axis=1)

@@ -1,0 +1,106 @@
+"""L2 graph catalog: named builders for every AOT artifact.
+
+Each entry maps an artifact name to a single-input jax function over a
+``(batch, obs)`` f32 array. ``aot.py`` lowers each to HLO text; rust's
+``runtime::manifest`` resolves artifacts by the same names.
+
+Artifact naming scheme::
+
+    stats_{B}x{N}                 point statistics (loading / grouping / ML features)
+    fit_single_{type}_{B}x{N}     one-type fit (ML path)
+    fit_all4_{B}x{N}              4-types argmin fit (Baseline / Grouping)
+    fit_all10_{B}x{N}             10-types argmin fit
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from . import distfit
+
+
+@dataclass(frozen=True)
+class GraphSpec:
+    """One AOT artifact: a named jax function plus its input/output shapes."""
+
+    name: str
+    fn: object          # callable (values,) -> array
+    batch: int
+    obs: int
+    out_cols: int
+    kind: str           # "stats" | "fit_single" | "fit_all"
+    type_name: str | None = None   # for fit_single
+    n_types: int | None = None     # for fit_all
+
+    @property
+    def in_shape(self):
+        return (self.batch, self.obs)
+
+    @property
+    def out_shape(self):
+        return (self.batch, self.out_cols)
+
+
+def build_specs(
+    batch: int,
+    obs: int,
+    types: list[str] | None = None,
+    use_pallas: bool = True,
+    n_bins: int = distfit.DEFAULT_BINS,
+) -> list[GraphSpec]:
+    """All artifacts for one (batch, obs) configuration."""
+    types = types if types is not None else distfit.TYPES
+    tag = f"{batch}x{obs}"
+    specs = [
+        GraphSpec(
+            name=f"stats_{tag}",
+            fn=functools.partial(distfit.point_stats, use_pallas=use_pallas),
+            batch=batch,
+            obs=obs,
+            out_cols=len(distfit.STATS_COLS),
+            kind="stats",
+        )
+    ]
+    for t in types:
+        specs.append(
+            GraphSpec(
+                name=f"fit_single_{t}_{tag}",
+                fn=functools.partial(
+                    distfit.fit_single, type_name=t, n_bins=n_bins, use_pallas=use_pallas
+                ),
+                batch=batch,
+                obs=obs,
+                out_cols=4,
+                kind="fit_single",
+                type_name=t,
+            )
+        )
+    for n_types in (4, 10):
+        specs.append(
+            GraphSpec(
+                name=f"fit_all{n_types}_{tag}",
+                fn=functools.partial(
+                    distfit.fit_all, n_types=n_types, n_bins=n_bins, use_pallas=use_pallas
+                ),
+                batch=batch,
+                obs=obs,
+                out_cols=5,
+                kind="fit_all",
+                n_types=n_types,
+            )
+        )
+    return specs
+
+
+def lower_spec(spec: GraphSpec):
+    """jit+lower one artifact graph (single (B,N) f32 input, tuple output)."""
+    arg = jax.ShapeDtypeStruct(spec.in_shape, jnp.float32)
+
+    def wrapped(values):
+        return (spec.fn(values),)   # 1-tuple: rust unwraps with to_tuple1()
+
+    return jax.jit(wrapped).lower(arg)

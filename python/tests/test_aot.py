@@ -1,0 +1,63 @@
+"""AOT path checks: spec catalog, HLO text emission, manifest integrity."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile import aot, distfit, model
+
+
+class TestSpecCatalog:
+    def test_build_specs_counts(self):
+        specs = model.build_specs(8, 50)
+        # 1 stats + 10 singles + 2 fit_all
+        assert len(specs) == 13
+        kinds = [s.kind for s in specs]
+        assert kinds.count("stats") == 1
+        assert kinds.count("fit_single") == 10
+        assert kinds.count("fit_all") == 2
+
+    def test_spec_shapes(self):
+        for s in model.build_specs(8, 50):
+            assert s.in_shape == (8, 50)
+            out = s.fn(jnp.zeros((8, 50), dtype=jnp.float32) + 1.0)
+            assert out.shape == s.out_shape
+
+    def test_names_unique(self):
+        specs = model.build_specs(8, 50) + model.build_specs(4, 20)
+        names = [s.name for s in specs]
+        assert len(names) == len(set(names))
+
+
+class TestLowering:
+    def test_hlo_text_emitted(self):
+        spec = model.build_specs(4, 20)[0]  # stats — cheapest
+        text = aot.to_hlo_text(model.lower_spec(spec))
+        assert "ENTRY" in text
+        assert "f32[4,20]" in text
+
+    def test_build_writes_manifest(self, tmp_path):
+        manifest = aot.build(str(tmp_path), [(4, 20)], verbose=False)
+        with open(tmp_path / "manifest.json") as f:
+            on_disk = json.load(f)
+        assert on_disk == manifest
+        assert on_disk["l_bins"] == distfit.DEFAULT_BINS
+        assert on_disk["types"] == distfit.TYPES
+        assert on_disk["stats_cols"] == distfit.STATS_COLS
+        assert len(on_disk["artifacts"]) == 13
+        for a in on_disk["artifacts"]:
+            path = tmp_path / a["file"]
+            assert path.exists() and path.stat().st_size > 0
+            assert a["batch"] == 4 and a["obs"] == 20
+
+    def test_no_pallas_variant_matches_pallas_numerics(self):
+        rng = np.random.default_rng(0)
+        v = jnp.asarray(rng.normal(2.0, 1.0, (8, 200)), dtype=jnp.float32)
+        a = np.asarray(distfit.fit_all(v, n_types=4, use_pallas=True))
+        b = np.asarray(distfit.fit_all(v, n_types=4, use_pallas=False))
+        np.testing.assert_array_equal(a[:, 0], b[:, 0])
+        np.testing.assert_allclose(a[:, 1:], b[:, 1:], rtol=1e-4, atol=1e-4)

@@ -1,0 +1,194 @@
+"""L2 estimator correctness: parameter recovery + Eq.5 semantics.
+
+Each candidate distribution type is checked on clean synthetic draws of
+itself: the fitted parameters must be close to the generating ones and the
+type must win (or tie within tolerance) the fit_all argmin.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile import distfit
+
+RNG = np.random.default_rng(42)
+N = 2000  # observations per point — enough for stable Eq.5 histograms
+
+
+def _batch(draws):
+    return jnp.asarray(np.stack(draws), dtype=jnp.float32)
+
+
+def _fit(v, type_name):
+    out = np.asarray(distfit.fit_single(v, type_name))
+    return out[:, 0], out[:, 1:]  # err, params
+
+
+class TestParameterRecovery:
+    def test_normal(self):
+        v = _batch([RNG.normal(10.0, 3.0, N) for _ in range(4)])
+        err, p = _fit(v, "normal")
+        np.testing.assert_allclose(p[:, 0], 10.0, atol=0.3)
+        np.testing.assert_allclose(p[:, 1], 3.0, atol=0.3)
+        assert (err < 0.25).all()
+
+    def test_uniform(self):
+        v = _batch([RNG.uniform(2.0, 8.0, N) for _ in range(4)])
+        err, p = _fit(v, "uniform")
+        np.testing.assert_allclose(p[:, 0], 2.0, atol=0.1)
+        np.testing.assert_allclose(p[:, 1], 8.0, atol=0.1)
+        assert (err < 0.25).all()
+
+    def test_exponential(self):
+        v = _batch([RNG.exponential(1.0 / 0.7, N) for _ in range(4)])
+        err, p = _fit(v, "exponential")
+        np.testing.assert_allclose(p[:, 0], 0.7, rtol=0.15)
+        assert (err < 0.25).all()
+
+    def test_lognormal(self):
+        v = _batch([RNG.lognormal(1.0, 0.5, N) for _ in range(4)])
+        err, p = _fit(v, "lognormal")
+        np.testing.assert_allclose(p[:, 0], 1.0, atol=0.1)
+        np.testing.assert_allclose(p[:, 1], 0.5, atol=0.1)
+        assert (err < 0.3).all()
+
+    def test_cauchy(self):
+        v = _batch([RNG.standard_cauchy(N) * 2.0 + 5.0 for _ in range(4)])
+        err, p = _fit(v, "cauchy")
+        np.testing.assert_allclose(p[:, 0], 5.0, atol=0.5)
+        np.testing.assert_allclose(p[:, 1], 2.0, rtol=0.3)
+
+    def test_gamma(self):
+        v = _batch([RNG.gamma(4.0, 2.5, N) for _ in range(4)])
+        err, p = _fit(v, "gamma")
+        np.testing.assert_allclose(p[:, 0], 4.0, rtol=0.25)
+        np.testing.assert_allclose(p[:, 1], 2.5, rtol=0.25)
+        assert (err < 0.3).all()
+
+    def test_geometric(self):
+        v = _batch([RNG.geometric(0.3, N) - 1.0 for _ in range(4)])  # support {0,1,..}
+        err, p = _fit(v, "geometric")
+        np.testing.assert_allclose(p[:, 0], 0.3, rtol=0.15)
+
+    def test_logistic(self):
+        v = _batch([RNG.logistic(3.0, 1.5, N) for _ in range(4)])
+        err, p = _fit(v, "logistic")
+        np.testing.assert_allclose(p[:, 0], 3.0, atol=0.4)
+        np.testing.assert_allclose(p[:, 1], 1.5, rtol=0.25)
+        assert (err < 0.3).all()
+
+    def test_student_t(self):
+        v = _batch([RNG.standard_t(6.0, N) for _ in range(4)])
+        err, p = _fit(v, "student_t")
+        np.testing.assert_allclose(p[:, 0], 0.0, atol=0.3)
+        assert (p[:, 2] > 2.1).all() and (p[:, 2] < 200.0).all()
+        assert (err < 0.3).all()
+
+    def test_weibull(self):
+        v = _batch([2.5 * RNG.weibull(1.8, N) for _ in range(4)])
+        err, p = _fit(v, "weibull")
+        np.testing.assert_allclose(p[:, 0], 1.8, rtol=0.2)
+        np.testing.assert_allclose(p[:, 1], 2.5, rtol=0.2)
+        assert (err < 0.3).all()
+
+
+class TestSupportGuards:
+    def test_positive_only_types_penalized_on_negative_data(self):
+        v = _batch([RNG.normal(-10.0, 1.0, N)])
+        for t in ["exponential", "lognormal", "gamma", "geometric", "weibull"]:
+            err, _ = _fit(v, t)
+            assert err[0] == distfit.PENALTY_ERROR, t
+
+    def test_lognormal_penalized_on_zero(self):
+        x = RNG.lognormal(0.0, 1.0, N)
+        x[0] = 0.0
+        err, _ = _fit(_batch([x]), "lognormal")
+        assert err[0] == distfit.PENALTY_ERROR
+
+    def test_all_errors_within_bounds(self):
+        v = _batch([RNG.normal(0, 1, N), RNG.uniform(-5, 5, N)])
+        for t in distfit.TYPES:
+            err, _ = _fit(v, t)
+            assert (err >= 0.0).all() and (err <= distfit.PENALTY_ERROR).all(), t
+
+
+class TestFitAll:
+    def test_argmin_consistent_with_singles(self):
+        """fit_all's chosen error equals the min over fit_single errors."""
+        v = _batch(
+            [
+                RNG.normal(5, 2, N),
+                RNG.uniform(0, 1, N),
+                RNG.exponential(2.0, N),
+                RNG.lognormal(0.5, 0.8, N),
+            ]
+        )
+        for n_types in (4, 10):
+            fa = np.asarray(distfit.fit_all(v, n_types=n_types))
+            singles = np.stack(
+                [_fit(v, t)[0] for t in distfit.TYPES[:n_types]], axis=1
+            )
+            np.testing.assert_allclose(fa[:, 1], singles.min(axis=1), rtol=1e-5, atol=1e-6)
+            np.testing.assert_array_equal(
+                fa[:, 0].astype(int), singles.argmin(axis=1)
+            )
+
+    def test_recovers_generating_family_4types(self):
+        """On clean draws of the 4 input families, fit_all4 picks the family
+        (or a strictly better-scoring one — must at least beat it rarely)."""
+        draws = {
+            0: RNG.normal(5, 2, N),
+            1: RNG.uniform(0, 1, N),
+            2: RNG.exponential(2.0, N),
+            3: RNG.lognormal(0.5, 0.8, N),
+        }
+        v = _batch([draws[i] for i in range(4)])
+        fa = np.asarray(distfit.fit_all(v, n_types=4))
+        assert (fa[:, 0].astype(int) == np.arange(4)).sum() >= 3
+
+    def test_10types_error_never_above_4types(self):
+        """A superset of candidates can only lower the best error (paper
+        observes smaller E for 10-types)."""
+        v = _batch([RNG.normal(0, 1, N), RNG.standard_t(5, N), RNG.gamma(3, 1, N)])
+        e4 = np.asarray(distfit.fit_all(v, n_types=4))[:, 1]
+        e10 = np.asarray(distfit.fit_all(v, n_types=10))[:, 1]
+        assert (e10 <= e4 + 1e-6).all()
+
+
+class TestEq5:
+    def test_perfect_uniform_histogram_zero_error(self):
+        """If hist mass equals CDF increments exactly, the error is 0."""
+        hist = jnp.full((1, 4), 25.0)
+        cdf = jnp.array([[0.0, 0.25, 0.5, 0.75, 1.0]])
+        err = np.asarray(distfit.eq5_error(hist, cdf, 100))
+        np.testing.assert_allclose(err, 0.0, atol=1e-7)
+
+    def test_worst_case_error_is_two(self):
+        """All observed mass in one bin, all model mass outside [min,max]."""
+        hist = jnp.zeros((1, 4)).at[0, 0].set(100.0)
+        cdf = jnp.zeros((1, 5))  # model puts no mass in any interval
+        err = np.asarray(distfit.eq5_error(hist, cdf, 100))
+        np.testing.assert_allclose(err, 1.0)
+
+    def test_edges_cover_range(self):
+        mn = jnp.array([0.0, -3.0])
+        mx = jnp.array([1.0, 7.0])
+        e = np.asarray(distfit.interval_edges(mn, mx, 8))
+        assert e.shape == (2, 9)
+        np.testing.assert_allclose(e[:, 0], [0.0, -3.0])
+        np.testing.assert_allclose(e[:, -1], [1.0, 7.0])
+        assert (np.diff(e, axis=1) > 0).all()
+
+
+class TestStatsArtifact:
+    def test_columns_and_pallas_parity(self):
+        v = _batch([RNG.normal(3, 1, 500), RNG.gamma(2, 2, 500)])
+        sp = np.asarray(distfit.point_stats(v, use_pallas=True))
+        sr = np.asarray(distfit.point_stats(v, use_pallas=False))
+        assert sp.shape == (2, len(distfit.STATS_COLS))
+        np.testing.assert_allclose(sp, sr, rtol=1e-4, atol=1e-4)
+        cols = {c: i for i, c in enumerate(distfit.STATS_COLS)}
+        np.testing.assert_allclose(sp[0, cols["mean"]], 3.0, atol=0.2)
+        np.testing.assert_allclose(sp[0, cols["std"]], 1.0, atol=0.2)
+        assert sp[1, cols["pos_frac"]] == 1.0

@@ -1,0 +1,131 @@
+"""L1 kernel correctness: Pallas (interpret=True) vs pure-jnp oracle.
+
+Hypothesis sweeps shapes and data regimes; assert_allclose against ref.py
+is the CORE correctness signal for the kernels that end up inside every
+AOT artifact.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.histogram import histogram
+from compile.kernels.moments import N_STATS, moments, pick_block
+
+SHAPES = st.tuples(
+    st.integers(min_value=1, max_value=33),   # B (incl. non-divisible sizes)
+    st.integers(min_value=1, max_value=257),  # N
+)
+
+REGIMES = st.sampled_from(["normal", "positive", "negative", "mixed", "tiny", "huge"])
+
+
+def _make_values(shape, regime, seed):
+    rng = np.random.default_rng(seed)
+    b, n = shape
+    if regime == "normal":
+        v = rng.normal(5.0, 2.0, size=(b, n))
+    elif regime == "positive":
+        v = rng.gamma(2.0, 3.0, size=(b, n)) + 1e-3
+    elif regime == "negative":
+        v = -rng.gamma(2.0, 3.0, size=(b, n)) - 1e-3
+    elif regime == "mixed":
+        v = rng.normal(0.0, 1.0, size=(b, n))
+    elif regime == "tiny":
+        v = rng.normal(0.0, 1e-6, size=(b, n))
+    else:  # huge
+        v = rng.normal(1e5, 1e4, size=(b, n))
+    return jnp.asarray(v, dtype=jnp.float32)
+
+
+class TestMoments:
+    @settings(max_examples=25, deadline=None)
+    @given(shape=SHAPES, regime=REGIMES, seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, shape, regime, seed):
+        v = _make_values(shape, regime, seed)
+        got = np.asarray(moments(v))
+        want = np.asarray(ref.moments_ref(v))
+        assert got.shape == (shape[0], N_STATS)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    def test_block_partition_invariance(self):
+        """The revisited-output reduction must not depend on block shape."""
+        v = _make_values((16, 240), "mixed", 7)
+        base = np.asarray(moments(v, block_b=16, block_n=240))
+        for bb, bn in [(1, 240), (16, 1), (4, 60), (8, 16), (2, 120)]:
+            got = np.asarray(moments(v, block_b=bb, block_n=bn))
+            np.testing.assert_allclose(got, base, rtol=2e-5, atol=2e-5)
+
+    def test_constant_data(self):
+        v = jnp.full((4, 64), 3.5, dtype=jnp.float32)
+        got = np.asarray(moments(v))
+        np.testing.assert_allclose(got[:, 4], 3.5)  # min
+        np.testing.assert_allclose(got[:, 5], 3.5)  # max
+        np.testing.assert_allclose(got[:, 0], 3.5 * 64, rtol=1e-6)
+
+    def test_log_guard_on_nonpositive(self):
+        """Non-positive values must contribute 0 to log sums, not NaN."""
+        v = jnp.array([[-1.0, 0.0, 1.0, jnp.e]], dtype=jnp.float32)
+        got = np.asarray(moments(v))
+        assert np.isfinite(got).all()
+        np.testing.assert_allclose(got[0, 6], 1.0, rtol=1e-5)  # log(e) only
+
+    def test_pick_block(self):
+        assert pick_block(1000, 512) == 500
+        assert pick_block(100, 512) == 100
+        assert pick_block(7, 4) == 1
+        assert pick_block(4000, 512) == 500
+        for n in [1, 2, 13, 100, 1000, 4000]:
+            b = pick_block(n, 512)
+            assert n % b == 0 and b <= max(512, n if n <= 512 else 512)
+
+
+class TestHistogram:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        shape=SHAPES,
+        regime=REGIMES,
+        seed=st.integers(0, 2**31 - 1),
+        n_bins=st.sampled_from([4, 16, 32]),
+    )
+    def test_matches_ref(self, shape, regime, seed, n_bins):
+        v = _make_values(shape, regime, seed)
+        mn, mx = jnp.min(v, axis=1), jnp.max(v, axis=1)
+        got = np.asarray(histogram(v, mn, mx, n_bins=n_bins))
+        want = np.asarray(ref.histogram_ref(v, mn, mx, n_bins))
+        np.testing.assert_allclose(got, want)
+
+    @settings(max_examples=15, deadline=None)
+    @given(shape=SHAPES, regime=REGIMES, seed=st.integers(0, 2**31 - 1))
+    def test_total_mass(self, shape, regime, seed):
+        """Every observation lands in exactly one bin."""
+        v = _make_values(shape, regime, seed)
+        mn, mx = jnp.min(v, axis=1), jnp.max(v, axis=1)
+        got = np.asarray(histogram(v, mn, mx, n_bins=32))
+        np.testing.assert_allclose(got.sum(axis=1), float(shape[1]))
+
+    def test_max_value_in_last_bin(self):
+        v = jnp.array([[0.0, 0.5, 1.0, 1.0]], dtype=jnp.float32)
+        got = np.asarray(histogram(v, jnp.array([0.0]), jnp.array([1.0]), n_bins=4))
+        assert got[0, -1] == 2.0  # both 1.0s clip into the last bin
+        assert got[0, 0] == 1.0
+
+    def test_constant_data_single_bin(self):
+        """min == max must not divide by zero; all mass in bin 0."""
+        v = jnp.full((2, 32), 7.0, dtype=jnp.float32)
+        got = np.asarray(histogram(v, jnp.full(2, 7.0), jnp.full(2, 7.0), n_bins=8))
+        assert np.isfinite(got).all()
+        np.testing.assert_allclose(got[:, 0], 32.0)
+        np.testing.assert_allclose(got[:, 1:], 0.0)
+
+    def test_block_partition_invariance(self):
+        v = _make_values((8, 120), "mixed", 3)
+        mn, mx = jnp.min(v, axis=1), jnp.max(v, axis=1)
+        base = np.asarray(histogram(v, mn, mx, n_bins=16, block_b=8, block_n=120))
+        for bb, bn in [(1, 120), (8, 1), (4, 30), (2, 60)]:
+            got = np.asarray(histogram(v, mn, mx, n_bins=16, block_b=bb, block_n=bn))
+            np.testing.assert_allclose(got, base)

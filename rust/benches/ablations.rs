@@ -1,0 +1,155 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! * `quantum`  — grouping-key quantization sweep (§5.2: exact-equality
+//!   grouping vs clustering similar points "with an acceptable error");
+//! * `bins`     — Eq.5 interval count L (the paper says L is configurable
+//!   but never reports its effect);
+//! * `forest`   — random forest vs the paper's single decision tree for
+//!   the ML method's type prediction;
+//! * `batch`    — PJRT batching policy (points per execute) on the
+//!   runtime hot path.
+
+use std::time::Instant;
+
+use pdfflow::cluster::{ClusterSpec, SimCluster};
+use pdfflow::config::PipelineConfig;
+use pdfflow::coordinator::{Method, Pipeline, TypeSet};
+use pdfflow::cube::CubeDims;
+use pdfflow::datagen::{DatasetSpec, SyntheticDataset};
+use pdfflow::mltree::forest::{ForestParams, RandomForest};
+use pdfflow::mltree::{DecisionTree, Sample, TreeParams};
+use pdfflow::runtime::{ArtifactKind, Engine};
+use pdfflow::stats::{self, DistType};
+use pdfflow::util::prng::Rng;
+
+fn dataset() -> SyntheticDataset {
+    let mut spec = DatasetSpec::set1_analog();
+    spec.dims = CubeDims::new(256, 64, 64);
+    spec.n_sims = 100;
+    SyntheticDataset::generate(&spec, "data/set1-quick").expect("dataset")
+}
+
+fn main() {
+    let engine = Engine::load_default("artifacts").expect("run `make artifacts`");
+    let ds = dataset();
+    let slice = ds.spec.dims.nz * 201 / 501;
+
+    // ---- quantum: grouping-key granularity ---------------------------
+    println!("== ablation: grouping quantum (Grouping, 4-types, slice) ==");
+    println!("{:<12} {:>8} {:>12} {:>10}", "quantum", "groups", "fit(sim)", "E");
+    for quantum in [1e-9, 1e-6, 1e-3, 1.0, 10.0] {
+        let mut cfg = PipelineConfig {
+            batch: 64,
+            window_lines: 25,
+            group_quantum: quantum,
+            ..PipelineConfig::default()
+        };
+        cfg.cache_bytes = 512 << 20;
+        let mut pipe = Pipeline::new(&ds, &engine, SimCluster::new(ClusterSpec::lncc()), cfg);
+        let r = pipe.run_slice(Method::Grouping, slice, TypeSet::Four).unwrap();
+        println!(
+            "{:<12} {:>8} {:>11.2}s {:>10.4}",
+            quantum, r.groups, r.fit_sim_s, r.avg_error
+        );
+    }
+    println!("(coarser keys -> fewer fits but clustered points may share a wrong PDF)");
+
+    // ---- bins: Eq.5 interval count (rust oracle) ---------------------
+    println!("\n== ablation: Eq.5 interval count L (oracle, 2000-obs normal) ==");
+    let mut rng = Rng::new(7);
+    let v: Vec<f32> = (0..2000).map(|_| rng.normal(10.0, 2.0) as f32).collect();
+    println!("{:<8} {:>12} {:>14}", "L", "E(normal)", "E(uniform)");
+    for bins in [4, 8, 16, 32, 64, 128] {
+        let en = stats::fit_single(&v, DistType::Normal, bins).error;
+        let eu = stats::fit_single(&v, DistType::Uniform, bins).error;
+        println!("{:<8} {:>12.4} {:>14.4}", bins, en, eu);
+    }
+    println!("(more intervals -> finer discrepancy but noisier Freq_k; 32 is the default)");
+
+    // ---- forest vs tree ----------------------------------------------
+    println!("\n== ablation: random forest vs single tree (type prediction) ==");
+    let mut rng = Rng::new(11);
+    let train: Vec<Sample> = (0..4000)
+        .map(|i| {
+            let label = i % 4;
+            let (cx, cy) = ((label % 2) as f64 * 3.0, (label / 2) as f64 * 3.0);
+            // Overlapping classes: the regime where ensembles help.
+            Sample {
+                features: vec![cx + rng.std_normal() * 1.2, cy + rng.std_normal() * 1.2],
+                label,
+            }
+        })
+        .collect();
+    let test: Vec<Sample> = (0..2000)
+        .map(|i| {
+            let label = i % 4;
+            let (cx, cy) = ((label % 2) as f64 * 3.0, (label / 2) as f64 * 3.0);
+            Sample {
+                features: vec![cx + rng.std_normal() * 1.2, cy + rng.std_normal() * 1.2],
+                label,
+            }
+        })
+        .collect();
+    let t0 = Instant::now();
+    let tree = DecisionTree::train(&train, TreeParams::default()).unwrap();
+    let tree_train = t0.elapsed().as_secs_f64();
+    println!(
+        "single tree : err {:.4}  train {:.2}s  broadcast {}B",
+        tree.error_rate(&test),
+        tree_train,
+        tree.broadcast_bytes()
+    );
+    for n_trees in [5, 10, 20] {
+        let t0 = Instant::now();
+        let forest = RandomForest::train(
+            &train,
+            ForestParams {
+                n_trees,
+                ..ForestParams::default()
+            },
+            42,
+        )
+        .unwrap();
+        println!(
+            "forest x{:<3}: err {:.4}  train {:.2}s  broadcast {}B",
+            n_trees,
+            forest.error_rate(&test),
+            t0.elapsed().as_secs_f64(),
+            forest.broadcast_bytes()
+        );
+    }
+
+    // ---- batch: PJRT batching policy ----------------------------------
+    println!("\n== ablation: runtime batching (fit_all4, 1536 points x 100 obs) ==");
+    let mut rng = Rng::new(13);
+    let n_points = 1536;
+    let values: Vec<f32> = (0..n_points * 100)
+        .map(|_| rng.gamma(3.0, 2.0) as f32)
+        .collect();
+    let info = engine
+        .manifest
+        .find(ArtifactKind::FitAll, None, Some(4), 100)
+        .unwrap()
+        .clone();
+    engine.warm(&info).unwrap();
+    println!("{:<22} {:>12} {:>14}", "points per run() call", "total", "per point");
+    for chunk in [64, 256, 512, 1536] {
+        let t0 = Instant::now();
+        let mut at = 0;
+        while at < n_points {
+            let take = chunk.min(n_points - at);
+            engine
+                .run(&info, &values[at * 100..(at + take) * 100], take)
+                .unwrap();
+            at += take;
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "{:<22} {:>10.1}ms {:>12.1}us",
+            chunk,
+            dt * 1e3,
+            dt / n_points as f64 * 1e6
+        );
+    }
+    println!("(the executor pads to the 64-row artifact batch; larger call chunks only\n amortize literal/dispatch overhead)");
+}

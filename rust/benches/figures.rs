@@ -1,0 +1,34 @@
+//! Paper-figure bench harness (criterion substitute; harness = false).
+//!
+//! ```text
+//! cargo bench --bench figures                  # all figures, quick scale
+//! cargo bench --bench figures -- fig08         # one figure
+//! cargo bench --bench figures -- all --full    # full-scale datasets
+//! ```
+
+use pdfflow::bench::BenchEnv;
+use pdfflow::util::cli::Args;
+
+fn main() {
+    // cargo passes a `--bench` flag through; ignore it.
+    let argv: Vec<String> = std::env::args()
+        .skip(1)
+        .filter(|a| a != "--bench")
+        .collect();
+    let args = Args::parse(argv, &["full"]).unwrap_or_default();
+    let full = args.flag("full") || std::env::var("PDFFLOW_BENCH_FULL").is_ok();
+    let id = args
+        .subcommand
+        .clone()
+        .unwrap_or_else(|| "all".to_string());
+    let env = BenchEnv::new(
+        &args.opt_or("artifacts", "artifacts"),
+        &args.opt_or("data-dir", "data"),
+        !full,
+    )
+    .expect("run `make artifacts` first");
+    if let Err(e) = env.run(&id) {
+        eprintln!("figure bench failed: {e}");
+        std::process::exit(1);
+    }
+}

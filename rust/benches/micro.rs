@@ -1,0 +1,139 @@
+//! Substrate micro-benchmarks (criterion substitute; harness = false).
+//!
+//! Measures the L3 hot-path building blocks in isolation: PRNG draw
+//! throughput, per-point statistics, Eq.5 fitting oracle, grouping hash,
+//! decision-tree prediction, JSON parsing, RDD aggregation, and PJRT
+//! execute latency per artifact shape. Prints mean/p50/p95 per op.
+
+use std::time::Instant;
+
+use pdfflow::cluster::{ClusterSpec, SimCluster};
+use pdfflow::coordinator::methods::quantize;
+use pdfflow::mltree::{DecisionTree, Sample, TreeParams};
+use pdfflow::rdd::Rdd;
+use pdfflow::runtime::Engine;
+use pdfflow::stats::{self, DistType, PointStats, DEFAULT_BINS};
+use pdfflow::util::json::Json;
+use pdfflow::util::prng::Rng;
+use pdfflow::util::timing::Summary;
+
+/// Run `f` repeatedly for ~`budget_s` seconds after warmup; report per-op stats.
+fn bench<F: FnMut()>(name: &str, ops_per_iter: usize, budget_s: f64, mut f: F) {
+    for _ in 0..3 {
+        f(); // warmup
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while start.elapsed().as_secs_f64() < budget_s || samples.len() < 10 {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64() / ops_per_iter as f64);
+        if samples.len() >= 2000 {
+            break;
+        }
+    }
+    let s = Summary::of(&samples);
+    println!(
+        "{name:<34} {:>10.0} ns/op  p50 {:>10.0}  p95 {:>10.0}  (n={})",
+        s.mean * 1e9,
+        s.p50 * 1e9,
+        s.p95 * 1e9,
+        s.n
+    );
+}
+
+fn main() {
+    println!("== micro benches (ns per operation) ==");
+    let mut rng = Rng::new(42);
+
+    bench("prng::normal", 1000, 0.3, || {
+        let mut acc = 0.0;
+        for _ in 0..1000 {
+            acc += rng.normal(0.0, 1.0);
+        }
+        std::hint::black_box(acc);
+    });
+
+    let obs: Vec<f32> = (0..1000).map(|_| rng.gamma(3.0, 2.0) as f32).collect();
+    bench("stats::PointStats::of (1000 obs)", 1, 0.3, || {
+        std::hint::black_box(PointStats::of(&obs));
+    });
+
+    bench("stats::fit_best 10 types (1000 obs)", 1, 0.5, || {
+        std::hint::black_box(stats::fit_best(&obs, &DistType::ALL, DEFAULT_BINS));
+    });
+
+    bench("methods::quantize", 1000, 0.2, || {
+        let mut acc = 0i64;
+        for i in 0..1000 {
+            acc ^= quantize(1234.5678 + i as f64, 1e-6);
+        }
+        std::hint::black_box(acc);
+    });
+
+    // Decision tree prediction.
+    let samples: Vec<Sample> = (0..2000)
+        .map(|i| Sample {
+            features: vec![(i % 7) as f64 + rng.std_normal() * 0.1, rng.std_normal()],
+            label: i % 7,
+        })
+        .collect();
+    let tree = DecisionTree::train(&samples, TreeParams::default()).unwrap();
+    bench("mltree::predict", 1000, 0.2, || {
+        let mut acc = 0usize;
+        for s in samples.iter().take(1000) {
+            acc ^= tree.predict(&s.features);
+        }
+        std::hint::black_box(acc);
+    });
+
+    // JSON parse of a manifest-sized document.
+    let manifest = std::fs::read_to_string("artifacts/manifest.json").unwrap_or_default();
+    if !manifest.is_empty() {
+        bench("json::parse manifest", 1, 0.3, || {
+            std::hint::black_box(Json::parse(&manifest).unwrap());
+        });
+    }
+
+    // RDD aggregate-by-key over 10k items.
+    bench("rdd::aggregate_by_key 10k items", 1, 0.5, || {
+        let items: Vec<(u32, u32)> = (0..10_000u32).map(|i| (i % 700, i)).collect();
+        let mut cluster = SimCluster::new(ClusterSpec::lncc());
+        let (g, _) = Rdd::from_vec(items, 16).aggregate_by_key(
+            16,
+            &mut cluster,
+            "s",
+            |v| vec![v],
+            |c, v| c.push(v),
+            |c, mut o| c.append(&mut o),
+            |_, c| c.len() as u64 * 4,
+        );
+        std::hint::black_box(g.n_items());
+    });
+
+    // PJRT execute latency per artifact shape (the L3<->L2 boundary).
+    if let Ok(engine) = Engine::load_default("artifacts") {
+        for (name, b, n, kind) in [
+            ("stats 64x100", 64usize, 100usize, "stats"),
+            ("fit_all4 64x100", 64, 100, "fit_all4"),
+            ("fit_all10 64x100", 64, 100, "fit_all10"),
+            ("fit_single_normal 64x100", 64, 100, "fit_single"),
+            ("stats 256x1000", 256, 1000, "stats"),
+            ("fit_all10 256x1000", 256, 1000, "fit_all10"),
+        ] {
+            let values: Vec<f32> = (0..b * n).map(|_| rng.gamma(3.0, 2.0) as f32).collect();
+            let run = |engine: &Engine| match kind {
+                "stats" => engine.run_stats(&values, b, n).unwrap(),
+                "fit_all4" => engine.run_fit_all(&values, b, n, 4).unwrap(),
+                "fit_all10" => engine.run_fit_all(&values, b, n, 10).unwrap(),
+                _ => engine
+                    .run_fit_single(&values, b, n, DistType::Normal)
+                    .unwrap(),
+            };
+            run(&engine); // compile outside measurement
+            bench(&format!("pjrt::{name} (per point)"), b, 0.5, || {
+                std::hint::black_box(run(&engine).n_rows);
+            });
+        }
+    }
+}

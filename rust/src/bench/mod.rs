@@ -1,0 +1,701 @@
+//! Figure drivers: one function per figure of the paper's evaluation
+//! (Figs. 6-20 plus the §6.2/§6.3 in-text decision-tree numbers).
+//!
+//! Shared by the `pdfflow figure <id>` CLI subcommand and the
+//! `cargo bench --bench figures` harness. Each driver generates (or
+//! reuses) the scaled dataset analog, runs the pipeline, and prints
+//! paper-style rows: real wall-clock on this host next to simulated
+//! cluster time (the paper's axis). EXPERIMENTS.md records one run of
+//! each and compares shapes against the paper.
+
+use std::path::PathBuf;
+
+use crate::cluster::{ClusterSpec, SimCluster};
+use crate::config::ExperimentConfig;
+use crate::coordinator::{
+    sampling::{full_slice_features, run_sampling},
+    Method, Pipeline, Sampler, TypeSet,
+};
+use crate::coordinator::mlmodel;
+use crate::cube::CubeDims;
+use crate::datagen::SyntheticDataset;
+use crate::runtime::Engine;
+use crate::storage::{DatasetReader, WindowCache};
+use crate::util::timing::fmt_secs;
+use crate::{PdfflowError, Result};
+
+/// All figure ids, in paper order.
+pub const FIGURES: &[&str] = &[
+    "fig06", "fig07", "fig08", "fig09", "fig10", "fig11", "fig12", "fig13", "fig14",
+    "fig15", "fig16", "fig17", "fig18", "fig19", "fig20", "treestats",
+];
+
+/// Bench environment: engine + dataset root + scale.
+pub struct BenchEnv {
+    pub engine: Engine,
+    pub data_root: PathBuf,
+    /// Quick scale (default for `cargo bench`): ~100x smaller datasets,
+    /// reduced sweeps. Full scale via `--full` / PDFFLOW_BENCH_FULL=1.
+    pub quick: bool,
+}
+
+impl BenchEnv {
+    pub fn new(artifacts_dir: &str, data_root: &str, quick: bool) -> Result<BenchEnv> {
+        Ok(BenchEnv {
+            engine: Engine::load_default(artifacts_dir)?,
+            data_root: PathBuf::from(data_root),
+            quick,
+        })
+    }
+
+    /// Scaled experiment configs (DESIGN.md §3: every figure records the
+    /// scale factor next to the paper's numbers).
+    pub fn config(&self, name: &str) -> Result<ExperimentConfig> {
+        let mut cfg = ExperimentConfig::preset(match name {
+            "set1" | "set2" | "set3" => name,
+            other => return Err(PdfflowError::Config(format!("unknown set {other:?}"))),
+        })?;
+        if self.quick {
+            // Lines keep the paper's 251-point length (256 here) so the
+            // points-per-window : cluster-slot ratio — which drives every
+            // Grouping/ML trade-off — stays in the paper's regime; only
+            // slices, lines and observation counts shrink.
+            match name {
+                "set1" => {
+                    cfg.dataset.dims = CubeDims::new(256, 64, 64);
+                    cfg.dataset.n_sims = 100;
+                    cfg.pipeline.batch = 64;
+                }
+                "set2" => {
+                    cfg.dataset.dims = CubeDims::new(256, 80, 80);
+                    cfg.dataset.n_sims = 100;
+                    cfg.pipeline.batch = 64;
+                }
+                "set3" => {
+                    // 10x set1's observations, like the paper's 10000 vs 1000.
+                    cfg.dataset.dims = CubeDims::new(128, 64, 64);
+                    cfg.dataset.n_sims = 1000;
+                    cfg.pipeline.batch = 256;
+                }
+                _ => unreachable!(),
+            }
+            cfg.slice = cfg.dataset.dims.nz * 201 / 501;
+        }
+        cfg.data_dir = self
+            .data_root
+            .join(format!("{name}{}", if self.quick { "-quick" } else { "" }))
+            .to_string_lossy()
+            .into_owned();
+        Ok(cfg)
+    }
+
+    fn dataset(&self, cfg: &ExperimentConfig) -> Result<SyntheticDataset> {
+        eprintln!(
+            "[bench] dataset {} at {} ({} sims, {}x{}x{})",
+            cfg.name,
+            cfg.data_dir,
+            cfg.dataset.n_sims,
+            cfg.dataset.dims.nx,
+            cfg.dataset.dims.ny,
+            cfg.dataset.dims.nz
+        );
+        SyntheticDataset::generate(&cfg.dataset, &cfg.data_dir)
+    }
+
+    /// Run one figure (or "all").
+    pub fn run(&self, id: &str) -> Result<()> {
+        match id {
+            "fig06" | "fig07" => self.fig06_07(),
+            "fig08" => self.fig08(),
+            "fig09" => self.fig09(),
+            "fig10" | "fig11" => self.fig10_11(),
+            "fig12" => self.fig12(),
+            "fig13" | "fig14" => self.fig13_14(),
+            "fig15" => self.fig15_16_17(Sampler::Random),
+            "fig16" => self.fig15_16_17(Sampler::KMeans),
+            "fig17" => self.fig17(),
+            "fig18" => self.fig18(),
+            "fig19" => self.fig19(),
+            "fig20" => self.fig20(),
+            "treestats" => self.treestats(),
+            "all" => {
+                // Alias ids (fig07/fig11/fig14) share drivers with their
+                // partner figures; run each driver once.
+                for f in FIGURES {
+                    if matches!(*f, "fig07" | "fig11" | "fig14") {
+                        continue;
+                    }
+                    self.run(f)?;
+                }
+                Ok(())
+            }
+            other => Err(PdfflowError::InvalidArg(format!(
+                "unknown figure {other:?}; known: {FIGURES:?} or 'all'"
+            ))),
+        }
+    }
+
+    fn header(&self, id: &str, title: &str) {
+        println!();
+        println!("=== {} — {} [{} scale] ===", id, title, if self.quick { "quick" } else { "full" });
+    }
+
+    /// The paper's small workload: 6 lines (3006 points at paper scale).
+    fn small_workload_lines(&self) -> usize {
+        6
+    }
+
+    // ---------------------------------------------------------------
+    // Fig 6/7: small-workload execution time + error, LNCC, all methods
+    // ---------------------------------------------------------------
+    fn fig06_07(&self) -> Result<()> {
+        let cfg = self.config("set1")?;
+        let ds = self.dataset(&cfg)?;
+        let mut pcfg = cfg.pipeline.clone();
+        pcfg.window_lines = 3; // paper: 3 lines per window, 2 windows
+        let mut pipe = Pipeline::new(&ds, &self.engine, SimCluster::new(ClusterSpec::lncc()), pcfg);
+        pipe.ensure_tree(cfg.train_slice, TypeSet::Ten, 25_000)?;
+
+        self.header("fig06", "PDF computation time, small workload (6 lines), LNCC");
+        println!(
+            "{:<14} {:<8} {:>12} {:>12} {:>9} {:>8} {:>8}",
+            "method", "types", "fit(real)", "fit(sim)", "E", "fits", "groups"
+        );
+        let mut rows = Vec::new();
+        for types in [TypeSet::Four, TypeSet::Ten] {
+            for method in Method::ALL {
+                let r = pipe.run_lines(method, cfg.slice, types, self.small_workload_lines())?;
+                println!(
+                    "{:<14} {:<8} {:>12} {:>12} {:>9.4} {:>8} {:>8}",
+                    method.name(),
+                    types.name(),
+                    fmt_secs(r.fit_real_s),
+                    fmt_secs(r.fit_sim_s),
+                    r.avg_error,
+                    r.fits,
+                    r.groups
+                );
+                rows.push(r);
+            }
+        }
+        // Loading time (cold, same for all methods — paper: 67 s).
+        println!(
+            "loading (first run, cold): real {} sim {}",
+            fmt_secs(rows[0].load_real_s),
+            fmt_secs(rows[0].load_sim_s)
+        );
+        // Headline factors vs Baseline.
+        for types in [TypeSet::Four, TypeSet::Ten] {
+            let base = rows
+                .iter()
+                .find(|r| r.method == Method::Baseline && r.types == types)
+                .unwrap();
+            let best = rows
+                .iter()
+                .filter(|r| r.types == types)
+                .min_by(|a, b| a.fit_sim_s.partial_cmp(&b.fit_sim_s).unwrap())
+                .unwrap();
+            println!(
+                "{}: best {} = {:.1}x faster than baseline (sim)",
+                types.name(),
+                best.method.name(),
+                base.fit_sim_s / best.fit_sim_s.max(1e-9)
+            );
+        }
+
+        self.header("fig07", "average error E, NoML vs WithML");
+        println!("{:<10} {:>12} {:>12}", "types", "NoML(E)", "WithML(E)");
+        for types in [TypeSet::Four, TypeSet::Ten] {
+            let noml = rows
+                .iter()
+                .filter(|r| r.types == types && !r.method.uses_ml())
+                .map(|r| r.avg_error)
+                .fold(0.0, f64::max);
+            let withml = rows
+                .iter()
+                .filter(|r| r.types == types && r.method.uses_ml())
+                .map(|r| r.avg_error)
+                .fold(0.0, f64::max);
+            println!("{:<10} {:>12.4} {:>12.4}", types.name(), noml, withml);
+        }
+        Ok(())
+    }
+
+    // ---------------------------------------------------------------
+    // Fig 8: window-size sweep, Grouping 4-types, 2 windows
+    // ---------------------------------------------------------------
+    fn window_sizes(&self, ny: usize) -> Vec<usize> {
+        let all = [2usize, 4, 8, 12, 16, 25, 32, 45];
+        all.iter().copied().filter(|&w| 2 * w <= ny).collect()
+    }
+
+    fn fig08(&self) -> Result<()> {
+        let cfg = self.config("set1")?;
+        let ds = self.dataset(&cfg)?;
+        self.header("fig08", "avg time per line vs window size (Grouping, 4-types, 2 windows)");
+        println!(
+            "{:<8} {:>14} {:>14} {:>14}",
+            "window", "fit/line(sim)", "fit/line(real)", "load/line(sim)"
+        );
+        for w in self.window_sizes(ds.spec.dims.ny) {
+            let mut pcfg = cfg.pipeline.clone();
+            pcfg.window_lines = w;
+            let mut pipe =
+                Pipeline::new(&ds, &self.engine, SimCluster::new(ClusterSpec::lncc()), pcfg);
+            let lines = 2 * w;
+            let r = pipe.run_lines(Method::Grouping, cfg.slice, TypeSet::Four, lines)?;
+            println!(
+                "{:<8} {:>14} {:>14} {:>14}",
+                w,
+                fmt_secs(r.fit_sim_s / lines as f64),
+                fmt_secs(r.fit_real_s / lines as f64),
+                fmt_secs(r.load_sim_s / lines as f64),
+            );
+        }
+        Ok(())
+    }
+
+    // ---------------------------------------------------------------
+    // Fig 9: window-size sweep for the other methods
+    // ---------------------------------------------------------------
+    fn fig09(&self) -> Result<()> {
+        let cfg = self.config("set1")?;
+        let ds = self.dataset(&cfg)?;
+        let methods = [
+            (Method::Baseline, TypeSet::Four),
+            (Method::Baseline, TypeSet::Ten),
+            (Method::GroupingMl, TypeSet::Four),
+            (Method::GroupingMl, TypeSet::Ten),
+            (Method::ReuseMl, TypeSet::Four),
+            (Method::ReuseMl, TypeSet::Ten),
+        ];
+        self.header("fig09", "avg fit time per line vs window size, other methods (sim)");
+        print!("{:<8}", "window");
+        for (m, t) in &methods {
+            print!(" {:>18}", format!("{}/{}", m.name(), t.n_types()));
+        }
+        println!();
+        for w in self.window_sizes(ds.spec.dims.ny) {
+            let mut pcfg = cfg.pipeline.clone();
+            pcfg.window_lines = w;
+            let mut pipe =
+                Pipeline::new(&ds, &self.engine, SimCluster::new(ClusterSpec::lncc()), pcfg);
+            pipe.ensure_tree(cfg.train_slice, TypeSet::Ten, 25_000)?;
+            print!("{:<8}", w);
+            let lines = 2 * w;
+            for (m, t) in &methods {
+                let r = pipe.run_lines(*m, cfg.slice, *t, lines)?;
+                print!(" {:>18}", fmt_secs(r.fit_sim_s / lines as f64));
+            }
+            println!();
+        }
+        Ok(())
+    }
+
+    // ---------------------------------------------------------------
+    // Fig 10/11: whole Slice-201-analog, LNCC, all methods
+    // ---------------------------------------------------------------
+    fn fig10_11(&self) -> Result<()> {
+        let cfg = self.config("set1")?;
+        let ds = self.dataset(&cfg)?;
+        let mut pcfg = cfg.pipeline.clone();
+        pcfg.window_lines = 25.min(ds.spec.dims.ny); // paper's tuned window
+        let mut pipe = Pipeline::new(&ds, &self.engine, SimCluster::new(ClusterSpec::lncc()), pcfg);
+        pipe.ensure_tree(cfg.train_slice, TypeSet::Ten, 25_000)?;
+        self.header("fig10", "PDF computation time, whole slice, LNCC");
+        println!(
+            "{:<14} {:<8} {:>12} {:>12} {:>9} {:>8}",
+            "method", "types", "fit(real)", "fit(sim)", "E", "fits"
+        );
+        let mut rows = Vec::new();
+        for types in [TypeSet::Four, TypeSet::Ten] {
+            for method in Method::ALL {
+                let r = pipe.run_slice(method, cfg.slice, types)?;
+                println!(
+                    "{:<14} {:<8} {:>12} {:>12} {:>9.4} {:>8}",
+                    method.name(),
+                    types.name(),
+                    fmt_secs(r.fit_real_s),
+                    fmt_secs(r.fit_sim_s),
+                    r.avg_error,
+                    r.fits
+                );
+                rows.push(r);
+            }
+        }
+        println!(
+            "loading (first run, cold): real {} sim {}",
+            fmt_secs(rows[0].load_real_s),
+            fmt_secs(rows[0].load_sim_s)
+        );
+        self.header("fig11", "whole-slice error E");
+        for r in &rows {
+            println!("{:<14} {:<8} E={:.4}", r.method.name(), r.types.name(), r.avg_error);
+        }
+        Ok(())
+    }
+
+    // ---------------------------------------------------------------
+    // Fig 12: data loading vs node count (G5k)
+    // ---------------------------------------------------------------
+    fn node_counts(&self) -> Vec<usize> {
+        vec![10, 20, 30, 40, 50, 60]
+    }
+
+    fn fig12(&self) -> Result<()> {
+        let cfg = self.config("set1")?;
+        let ds = self.dataset(&cfg)?;
+        self.header("fig12", "data loading time vs nodes (G5k, whole slice, cold cache)");
+        println!("{:<8} {:>12} {:>12}", "nodes", "load(sim)", "load(real)");
+        for n in self.node_counts() {
+            let reader = DatasetReader::new(&ds);
+            let cache = WindowCache::new(0); // cold: no caching
+            let mut cluster = SimCluster::new(ClusterSpec::g5k(n));
+            let mut real = 0.0;
+            for w in ds.spec.dims.windows(cfg.slice, cfg.pipeline.window_lines) {
+                let lw = crate::coordinator::loader::load_window(
+                    &reader, &cache, &self.engine, &mut cluster, w,
+                )?;
+                real += lw.real_s;
+            }
+            println!(
+                "{:<8} {:>12} {:>12}",
+                n,
+                fmt_secs(cluster.total()),
+                fmt_secs(real)
+            );
+        }
+        Ok(())
+    }
+
+    // ---------------------------------------------------------------
+    // Fig 13/14: PDF computation vs node count
+    // ---------------------------------------------------------------
+    fn fig13_14(&self) -> Result<()> {
+        let cfg = self.config("set1")?;
+        let ds = self.dataset(&cfg)?;
+        let methods = [
+            Method::Baseline,
+            Method::Grouping,
+            Method::Ml,
+            Method::GroupingMl,
+        ];
+        self.header("fig13", "PDF computation (sim) vs nodes, 10-types, G5k");
+        print!("{:<8}", "nodes");
+        for m in &methods {
+            print!(" {:>14}", m.name());
+        }
+        println!();
+        let mut crossover: Vec<(usize, f64, f64)> = Vec::new();
+        for n in self.node_counts() {
+            let mut pcfg = cfg.pipeline.clone();
+            pcfg.window_lines = 25.min(ds.spec.dims.ny);
+            let mut pipe =
+                Pipeline::new(&ds, &self.engine, SimCluster::new(ClusterSpec::g5k(n)), pcfg);
+            pipe.ensure_tree(cfg.train_slice, TypeSet::Ten, 25_000)?;
+            print!("{:<8}", n);
+            let mut ml_t = 0.0;
+            let mut gml_t = 0.0;
+            for m in &methods {
+                let r = pipe.run_slice(*m, cfg.slice, TypeSet::Ten)?;
+                if *m == Method::Ml {
+                    ml_t = r.fit_sim_s;
+                }
+                if *m == Method::GroupingMl {
+                    gml_t = r.fit_sim_s;
+                }
+                print!(" {:>14}", fmt_secs(r.fit_sim_s));
+            }
+            println!();
+            crossover.push((n, ml_t, gml_t));
+        }
+        self.header("fig14", "focus: ML vs Grouping+ML crossover");
+        for (n, ml, gml) in crossover {
+            println!(
+                "nodes {:<4} ml {:>12} grouping+ml {:>12}  winner: {}",
+                n,
+                fmt_secs(ml),
+                fmt_secs(gml),
+                if ml < gml { "ml" } else { "grouping+ml" }
+            );
+        }
+        Ok(())
+    }
+
+    // ---------------------------------------------------------------
+    // Fig 15/16: sampling time vs rate
+    // ---------------------------------------------------------------
+    fn sampling_rates(&self, sampler: Sampler) -> Vec<f64> {
+        match sampler {
+            Sampler::Random => vec![0.001, 0.01, 0.1, 0.2, 0.5, 1.0],
+            Sampler::KMeans => vec![0.2, 0.4, 0.6, 0.8, 1.0],
+        }
+    }
+
+    fn fig15_16_17(&self, sampler: Sampler) -> Result<()> {
+        let cfg = self.config("set1")?;
+        let ds = self.dataset(&cfg)?;
+        let mut pcfg = cfg.pipeline.clone();
+        pcfg.window_lines = 25.min(ds.spec.dims.ny);
+        let mut pipe = Pipeline::new(&ds, &self.engine, SimCluster::new(ClusterSpec::lncc()), pcfg);
+        pipe.ensure_tree(cfg.train_slice, TypeSet::Four, 25_000)?;
+        let tree = pipe.tree.clone().unwrap();
+        let id = if sampler == Sampler::Random { "fig15" } else { "fig16" };
+        self.header(id, &format!("sampling time vs rate ({})", sampler.name()));
+        println!(
+            "{:<8} {:>10} {:>12} {:>12} {:>14} {:>14}",
+            "rate", "sampled", "load(sim)", "load(real)", "compute(sim)", "compute(real)"
+        );
+        let reader = DatasetReader::new(&ds);
+        let cache = WindowCache::new(512 << 20);
+        for rate in self.sampling_rates(sampler) {
+            let mut cluster = SimCluster::new(ClusterSpec::lncc());
+            let rep = run_sampling(
+                &reader,
+                &cache,
+                &self.engine,
+                &mut cluster,
+                &tree,
+                cfg.slice,
+                rate,
+                sampler,
+                42,
+            )?;
+            println!(
+                "{:<8} {:>10} {:>12} {:>12} {:>14} {:>14}",
+                rate,
+                rep.n_sampled,
+                fmt_secs(rep.load_sim_s),
+                fmt_secs(rep.load_real_s),
+                fmt_secs(rep.compute_sim_s),
+                fmt_secs(rep.compute_real_s),
+            );
+        }
+        Ok(())
+    }
+
+    // ---------------------------------------------------------------
+    // Fig 17: type-percentage distance, sampled vs all points
+    // ---------------------------------------------------------------
+    fn fig17(&self) -> Result<()> {
+        let cfg = self.config("set1")?;
+        let ds = self.dataset(&cfg)?;
+        let mut pcfg = cfg.pipeline.clone();
+        pcfg.window_lines = 25.min(ds.spec.dims.ny);
+        let mut pipe = Pipeline::new(&ds, &self.engine, SimCluster::new(ClusterSpec::lncc()), pcfg);
+        pipe.ensure_tree(cfg.train_slice, TypeSet::Four, 25_000)?;
+        let tree = pipe.tree.clone().unwrap();
+        let reader = DatasetReader::new(&ds);
+        let cache = WindowCache::new(512 << 20);
+        let mut cluster = SimCluster::new(ClusterSpec::lncc());
+        let full = full_slice_features(&reader, &cache, &self.engine, &mut cluster, &tree, cfg.slice)?;
+        self.header("fig17", "Euclidean distance of type percentages vs all points");
+        println!("{:<8} {:>12} {:>12}", "rate", "random", "kmeans");
+        for rate in [0.05, 0.1, 0.2, 0.4, 0.6, 0.8] {
+            let mut d = [0.0f64; 2];
+            for (i, sampler) in [Sampler::Random, Sampler::KMeans].into_iter().enumerate() {
+                let rep = run_sampling(
+                    &reader, &cache, &self.engine, &mut cluster, &tree, cfg.slice, rate, sampler, 42,
+                )?;
+                d[i] = rep.features.type_distance(&full);
+            }
+            println!("{:<8} {:>12.4} {:>12.4}", rate, d[0], d[1]);
+        }
+        Ok(())
+    }
+
+    // ---------------------------------------------------------------
+    // Fig 18: Set2-analog, whole slice, 30/60 nodes
+    // ---------------------------------------------------------------
+    fn fig18(&self) -> Result<()> {
+        let cfg = self.config("set2")?;
+        let ds = self.dataset(&cfg)?;
+        let methods = [
+            Method::Baseline,
+            Method::Grouping,
+            Method::Ml,
+            Method::GroupingMl,
+        ];
+        self.header("fig18", "Set2-analog whole slice (sim) vs methods, 30/60 nodes");
+        println!(
+            "{:<14} {:<8} {:>14} {:>14}",
+            "method", "types", "30 nodes", "60 nodes"
+        );
+        for types in [TypeSet::Four, TypeSet::Ten] {
+            for m in methods {
+                let mut times = Vec::new();
+                for n in [30, 60] {
+                    let mut pcfg = cfg.pipeline.clone();
+                    pcfg.window_lines = 25.min(ds.spec.dims.ny);
+                    let mut pipe = Pipeline::new(
+                        &ds,
+                        &self.engine,
+                        SimCluster::new(ClusterSpec::g5k(n)),
+                        pcfg,
+                    );
+                    pipe.ensure_tree(cfg.train_slice, types, 25_000)?;
+                    let r = pipe.run_slice(m, cfg.slice, types)?;
+                    times.push(r.fit_sim_s);
+                }
+                println!(
+                    "{:<14} {:<8} {:>14} {:>14}",
+                    m.name(),
+                    types.name(),
+                    fmt_secs(times[0]),
+                    fmt_secs(times[1])
+                );
+            }
+        }
+        // Random sampling comparison (paper §6.3.1 text).
+        let reader = DatasetReader::new(&ds);
+        let cache = WindowCache::new(512 << 20);
+        let mut pipe = Pipeline::new(
+            &ds,
+            &self.engine,
+            SimCluster::new(ClusterSpec::g5k(30)),
+            cfg.pipeline.clone(),
+        );
+        pipe.ensure_tree(cfg.train_slice, TypeSet::Four, 25_000)?;
+        let tree = pipe.tree.clone().unwrap();
+        for n in [30usize, 60] {
+            let mut cluster = SimCluster::new(ClusterSpec::g5k(n));
+            let mut total = 0.0;
+            let rates = [0.001, 0.01, 0.1, 1.0];
+            for r in rates {
+                let rep = run_sampling(
+                    &reader, &cache, &self.engine, &mut cluster, &tree, cfg.slice, r,
+                    Sampler::Random, 42,
+                )?;
+                total += rep.compute_sim_s;
+            }
+            println!(
+                "sampling (random) avg PDF-computation time, {n} nodes: {}",
+                fmt_secs(total / rates.len() as f64)
+            );
+        }
+        Ok(())
+    }
+
+    // ---------------------------------------------------------------
+    // Fig 19: Set3-analog small workload — Grouping collapses
+    // ---------------------------------------------------------------
+    fn fig19(&self) -> Result<()> {
+        let cfg = self.config("set3")?;
+        let ds = self.dataset(&cfg)?;
+        let mut pcfg = cfg.pipeline.clone();
+        pcfg.window_lines = 1; // paper: 1 line per window, 2 windows
+        let mut pipe = Pipeline::new(
+            &ds,
+            &self.engine,
+            SimCluster::new(ClusterSpec::g5k(30)),
+            pcfg,
+        );
+        pipe.ensure_tree(cfg.train_slice, TypeSet::Ten, 25_000)?;
+        self.header("fig19", "Set3-analog small workload (2 lines), 30 nodes");
+        println!(
+            "{:<14} {:<8} {:>12} {:>12} {:>9} {:>12}",
+            "method", "types", "fit(real)", "fit(sim)", "E", "shuffleB"
+        );
+        for types in [TypeSet::Four, TypeSet::Ten] {
+            for m in [Method::Baseline, Method::Grouping, Method::Ml] {
+                let r = pipe.run_lines(m, cfg.slice, types, 2)?;
+                println!(
+                    "{:<14} {:<8} {:>12} {:>12} {:>9.4} {:>12}",
+                    m.name(),
+                    types.name(),
+                    fmt_secs(r.fit_real_s),
+                    fmt_secs(r.fit_sim_s),
+                    r.avg_error,
+                    r.shuffle_bytes
+                );
+            }
+        }
+        Ok(())
+    }
+
+    // ---------------------------------------------------------------
+    // Fig 20: Set3-analog whole slice, Baseline vs ML, 30/60 nodes
+    // ---------------------------------------------------------------
+    fn fig20(&self) -> Result<()> {
+        let cfg = self.config("set3")?;
+        let ds = self.dataset(&cfg)?;
+        self.header("fig20", "Set3-analog whole slice, Baseline vs ML (sim)");
+        println!(
+            "{:<14} {:<8} {:>14} {:>14}",
+            "method", "types", "30 nodes", "60 nodes"
+        );
+        for types in [TypeSet::Four, TypeSet::Ten] {
+            for m in [Method::Baseline, Method::Ml] {
+                let mut times = Vec::new();
+                for n in [30, 60] {
+                    let mut pcfg = cfg.pipeline.clone();
+                    // paper: 126-line windows for parallelism; scale to ny
+                    pcfg.window_lines = (ds.spec.dims.ny / 4).max(1);
+                    let mut pipe = Pipeline::new(
+                        &ds,
+                        &self.engine,
+                        SimCluster::new(ClusterSpec::g5k(n)),
+                        pcfg,
+                    );
+                    pipe.ensure_tree(cfg.train_slice, types, 25_000)?;
+                    let r = pipe.run_slice(m, cfg.slice, types)?;
+                    times.push(r.fit_sim_s);
+                }
+                println!(
+                    "{:<14} {:<8} {:>14} {:>14}",
+                    m.name(),
+                    types.name(),
+                    fmt_secs(times[0]),
+                    fmt_secs(times[1])
+                );
+            }
+        }
+        Ok(())
+    }
+
+    // ---------------------------------------------------------------
+    // In-text: decision tree model errors and tuning (paper §6.2/§6.3)
+    // ---------------------------------------------------------------
+    fn treestats(&self) -> Result<()> {
+        self.header("treestats", "decision-tree model errors + tuning (paper §6.2/§6.3 text)");
+        for set in ["set1", "set2", "set3"] {
+            let cfg = self.config(set)?;
+            let ds = self.dataset(&cfg)?;
+            let reader = DatasetReader::new(&ds);
+            let cache = WindowCache::new(512 << 20);
+            let mut cluster = SimCluster::new(ClusterSpec::lncc());
+            for types in [TypeSet::Four, TypeSet::Ten] {
+                let slices = mlmodel::training_slices(
+                    &ds.spec.dims,
+                    cfg.train_slice,
+                    ds.spec.n_value_layers(),
+                );
+                let data = mlmodel::build_training_data(
+                    &reader,
+                    &cache,
+                    &self.engine,
+                    &mut cluster,
+                    &ds.spec.dims,
+                    &slices,
+                    types,
+                    25_000,
+                    cfg.pipeline.window_lines,
+                )?;
+                let (params, tune_err, tune_s) = mlmodel::tune_hypers(&data, 42)?;
+                let model = mlmodel::train_model(&data, params, 43)?;
+                println!(
+                    "{set} {:<8} samples {:>6}  tuned depth={} bins={} ({} tuning, val err {:.4})  model err {:.4}  train {}",
+                    types.name(),
+                    data.samples.len(),
+                    params.max_depth,
+                    params.max_bins,
+                    fmt_secs(tune_s),
+                    tune_err,
+                    model.model_error,
+                    fmt_secs(model.train_real_s)
+                );
+            }
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,252 @@
+//! Typed experiment configuration, loadable from TOML-subset files
+//! (`configs/*.toml`) with programmatic presets matching the paper's
+//! three datasets and two testbeds.
+
+use std::path::Path;
+
+use crate::cluster::ClusterSpec;
+use crate::cube::CubeDims;
+use crate::datagen::DatasetSpec;
+use crate::util::toml::TomlDoc;
+use crate::{PdfflowError, Result};
+
+/// Pipeline knobs (paper §4.2/§4.3).
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    /// Lines per sliding window for PDF computation.
+    pub window_lines: usize,
+    /// Eq. 5 interval count.
+    pub bins: usize,
+    /// Point batch per PJRT execute (must match an artifact batch).
+    pub batch: usize,
+    /// RDD partitions (defaults to cluster slot count at run time).
+    pub partitions: Option<usize>,
+    /// Window-cache budget in bytes (§4.3.1).
+    pub cache_bytes: u64,
+    /// Quantization step for grouping keys on (mean, std) (§5.2: "points
+    /// with exactly the same mean and standard deviation"; f32 results
+    /// need an epsilon grid).
+    pub group_quantum: f64,
+    /// Host threads for loading/compute.
+    pub workers: usize,
+    /// When set, per-slice fit outcomes are persisted here (Algorithm 1
+    /// line 11).
+    pub persist_dir: Option<String>,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            window_lines: 25, // the paper's tuned optimum
+            bins: 32,
+            batch: 256,
+            partitions: None,
+            cache_bytes: 512 << 20,
+            group_quantum: 1e-6,
+            workers: crate::util::pool::default_workers(),
+            persist_dir: None,
+        }
+    }
+}
+
+/// A full experiment: dataset + cluster + pipeline + target slice.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub dataset: DatasetSpec,
+    pub cluster: ClusterSpec,
+    pub pipeline: PipelineConfig,
+    /// Slice under analysis (the paper always uses Slice 201; scaled cubes
+    /// use the proportional slice).
+    pub slice: usize,
+    /// Slice whose previously generated output trains the tree (paper:
+    /// Slice 0).
+    pub train_slice: usize,
+    pub data_dir: String,
+    pub artifacts_dir: String,
+}
+
+impl ExperimentConfig {
+    /// Set1-analog on the LNCC-shaped cluster (the paper's §6.2 setup).
+    pub fn set1() -> ExperimentConfig {
+        let dataset = DatasetSpec::set1_analog();
+        // Paper uses Slice 201 of 501 → proportional slice here.
+        let slice = dataset.dims.nz * 201 / 501;
+        ExperimentConfig {
+            name: "set1".into(),
+            dataset,
+            cluster: ClusterSpec::lncc(),
+            pipeline: PipelineConfig::default(),
+            slice,
+            train_slice: 0,
+            data_dir: "data/set1".into(),
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+
+    /// Set2-analog: bigger cube, same 1000 observations (paper §6.3.1).
+    pub fn set2() -> ExperimentConfig {
+        let mut c = Self::set1();
+        c.name = "set2".into();
+        c.dataset.dims = CubeDims::new(251, 128, 128);
+        c.dataset.seed = 20180516;
+        c.slice = c.dataset.dims.nz * 201 / 501;
+        c.cluster = ClusterSpec::g5k(30);
+        c.data_dir = "data/set2".into();
+        c
+    }
+
+    /// Set3-analog: 4000 observations per point (paper §6.3.2 is 10000;
+    /// scaled 0.4x like the cube volume — the shuffle-volume effect it
+    /// exists to show kicks in at 4x vector size already).
+    pub fn set3() -> ExperimentConfig {
+        let mut c = Self::set1();
+        c.name = "set3".into();
+        c.dataset.dims = CubeDims::new(128, 96, 96);
+        c.dataset.n_sims = 4000;
+        c.dataset.seed = 20180517;
+        c.cluster = ClusterSpec::g5k(30);
+        c.pipeline.batch = 64; // matches the 64x4000 artifacts
+        c.data_dir = "data/set3".into();
+        c
+    }
+
+    /// Tiny config for tests and the quickstart example.
+    pub fn small() -> ExperimentConfig {
+        let dataset = DatasetSpec::tiny();
+        ExperimentConfig {
+            name: "small".into(),
+            dataset,
+            cluster: ClusterSpec::lncc(),
+            pipeline: PipelineConfig {
+                batch: 64,
+                window_lines: 4,
+                ..PipelineConfig::default()
+            },
+            slice: 2,
+            train_slice: 0,
+            data_dir: "data/small".into(),
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+
+    pub fn preset(name: &str) -> Result<ExperimentConfig> {
+        match name {
+            "set1" => Ok(Self::set1()),
+            "set2" => Ok(Self::set2()),
+            "set3" => Ok(Self::set3()),
+            "small" => Ok(Self::small()),
+            other => Err(PdfflowError::Config(format!("unknown preset {other:?}"))),
+        }
+    }
+
+    /// Load from a TOML file; unspecified keys fall back to the preset
+    /// named by the file's `preset` key (default "set1").
+    pub fn from_file(path: impl AsRef<Path>) -> Result<ExperimentConfig> {
+        let text = std::fs::read_to_string(&path)?;
+        let doc = TomlDoc::parse(&text).map_err(PdfflowError::Config)?;
+        let mut cfg = Self::preset(&doc.str_or("preset", "set1"))?;
+        cfg.name = doc.str_or("name", &cfg.name);
+        // Dataset.
+        cfg.dataset.dims = CubeDims::new(
+            doc.usize_or("dataset.nx", cfg.dataset.dims.nx),
+            doc.usize_or("dataset.ny", cfg.dataset.dims.ny),
+            doc.usize_or("dataset.nz", cfg.dataset.dims.nz),
+        );
+        cfg.dataset.n_sims = doc.usize_or("dataset.simulations", cfg.dataset.n_sims);
+        cfg.dataset.group_levels = doc.usize_or("dataset.group_levels", cfg.dataset.group_levels);
+        cfg.dataset.blend_fraction = doc.f64_or("dataset.blend_fraction", cfg.dataset.blend_fraction);
+        cfg.dataset.unique_fraction =
+            doc.f64_or("dataset.unique_fraction", cfg.dataset.unique_fraction);
+        cfg.dataset.seed = doc.i64_or("dataset.seed", cfg.dataset.seed as i64) as u64;
+        // Cluster.
+        match doc.str_or("cluster.kind", "").as_str() {
+            "" => {}
+            "lncc" => cfg.cluster = ClusterSpec::lncc(),
+            "g5k" => cfg.cluster = ClusterSpec::g5k(doc.usize_or("cluster.nodes", 30)),
+            "local" => cfg.cluster = ClusterSpec::local(doc.usize_or("cluster.cores", 4)),
+            other => {
+                return Err(PdfflowError::Config(format!("unknown cluster kind {other:?}")))
+            }
+        }
+        // Pipeline.
+        cfg.pipeline.window_lines = doc.usize_or("pipeline.window_lines", cfg.pipeline.window_lines);
+        cfg.pipeline.batch = doc.usize_or("pipeline.batch", cfg.pipeline.batch);
+        cfg.pipeline.bins = doc.usize_or("pipeline.bins", cfg.pipeline.bins);
+        cfg.pipeline.workers = doc.usize_or("pipeline.workers", cfg.pipeline.workers);
+        cfg.pipeline.group_quantum = doc.f64_or("pipeline.group_quantum", cfg.pipeline.group_quantum);
+        cfg.pipeline.cache_bytes = doc.i64_or("pipeline.cache_bytes", cfg.pipeline.cache_bytes as i64) as u64;
+        if let Some(p) = doc.get("pipeline.partitions").and_then(|v| v.as_i64()) {
+            cfg.pipeline.partitions = Some(p as usize);
+        }
+        if let Some(d) = doc.get("pipeline.persist_dir").and_then(|v| v.as_str()) {
+            cfg.pipeline.persist_dir = Some(d.to_string());
+        }
+        // Paths + slices.
+        cfg.slice = doc.usize_or("slice", cfg.slice);
+        cfg.train_slice = doc.usize_or("train_slice", cfg.train_slice);
+        cfg.data_dir = doc.str_or("data_dir", &cfg.data_dir);
+        cfg.artifacts_dir = doc.str_or("artifacts_dir", &cfg.artifacts_dir);
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_exist() {
+        for p in ["set1", "set2", "set3", "small"] {
+            let c = ExperimentConfig::preset(p).unwrap();
+            assert!(c.slice < c.dataset.dims.nz, "{p}");
+            assert!(c.dataset.n_sims >= 100);
+        }
+        assert!(ExperimentConfig::preset("bogus").is_err());
+    }
+
+    #[test]
+    fn set1_slice_is_proportional_201() {
+        let c = ExperimentConfig::set1();
+        assert_eq!(c.slice, c.dataset.dims.nz * 201 / 501);
+    }
+
+    #[test]
+    fn file_overrides_preset() {
+        let dir = std::env::temp_dir().join(format!("pdfflow-cfg-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("exp.toml");
+        std::fs::write(
+            &path,
+            r#"
+preset = "small"
+name = "custom"
+[dataset]
+simulations = 128
+[cluster]
+kind = "g5k"
+nodes = 20
+[pipeline]
+window_lines = 7
+batch = 64
+"#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_file(&path).unwrap();
+        assert_eq!(c.name, "custom");
+        assert_eq!(c.dataset.n_sims, 128);
+        assert_eq!(c.cluster.nodes, 20);
+        assert_eq!(c.pipeline.window_lines, 7);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn bad_cluster_kind_fails() {
+        let dir = std::env::temp_dir().join(format!("pdfflow-cfg2-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.toml");
+        std::fs::write(&path, "[cluster]\nkind = \"mesos\"\n").unwrap();
+        assert!(ExperimentConfig::from_file(&path).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

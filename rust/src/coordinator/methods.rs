@@ -1,0 +1,467 @@
+//! The paper's PDF-computation methods (Algorithm 1's `Select` +
+//! `ComputePDF&Error` bodies for Baseline / Grouping / Reuse / ML and
+//! the ML combinations).
+//!
+//! All numeric work goes through the AOT artifacts: Baseline and Grouping
+//! run `fit_all{4,10}` (compute every candidate type, argmin — the O(T)
+//! cost of Algorithm 3), the ML paths run exactly one `fit_single_<type>`
+//! per point (Algorithm 4's O(1) cost). The methods differ *only* in
+//! which points reach the executor and over which artifacts — exactly the
+//! paper's design space.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use crate::cluster::SimCluster;
+use crate::coordinator::loader::LoadedWindow;
+use crate::mltree::DecisionTree;
+use crate::rdd::Rdd;
+use crate::runtime::Engine;
+use crate::stats::DistType;
+use crate::{PdfflowError, Result};
+
+/// The paper's methods (§5 / §6 naming).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    Baseline,
+    Grouping,
+    Reuse,
+    /// "ML" / "Baseline + ML" in the paper.
+    Ml,
+    GroupingMl,
+    ReuseMl,
+}
+
+impl Method {
+    pub const ALL: [Method; 6] = [
+        Method::Baseline,
+        Method::Grouping,
+        Method::Reuse,
+        Method::Ml,
+        Method::GroupingMl,
+        Method::ReuseMl,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Method::Baseline => "baseline",
+            Method::Grouping => "grouping",
+            Method::Reuse => "reuse",
+            Method::Ml => "ml",
+            Method::GroupingMl => "grouping+ml",
+            Method::ReuseMl => "reuse+ml",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Method> {
+        Self::ALL.into_iter().find(|m| m.name() == s)
+    }
+
+    pub fn uses_grouping(self) -> bool {
+        matches!(
+            self,
+            Method::Grouping | Method::Reuse | Method::GroupingMl | Method::ReuseMl
+        )
+    }
+
+    pub fn uses_reuse(self) -> bool {
+        matches!(self, Method::Reuse | Method::ReuseMl)
+    }
+
+    pub fn uses_ml(self) -> bool {
+        matches!(self, Method::Ml | Method::GroupingMl | Method::ReuseMl)
+    }
+}
+
+/// Candidate distribution sets (paper §6.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TypeSet {
+    Four,
+    Ten,
+}
+
+impl TypeSet {
+    pub fn n_types(self) -> usize {
+        match self {
+            TypeSet::Four => 4,
+            TypeSet::Ten => 10,
+        }
+    }
+
+    pub fn candidates(self) -> &'static [DistType] {
+        match self {
+            TypeSet::Four => &DistType::FOUR,
+            TypeSet::Ten => &DistType::ALL,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TypeSet::Four => "4-types",
+            TypeSet::Ten => "10-types",
+        }
+    }
+}
+
+/// The fitted PDF of one point (the paper's persisted key-value value).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FitOutcome {
+    pub dist: DistType,
+    pub error: f32,
+    pub params: [f32; 3],
+}
+
+impl FitOutcome {
+    fn from_fit_all_row(row: &[f32]) -> FitOutcome {
+        FitOutcome {
+            dist: DistType::from_id(row[0] as usize).unwrap_or(DistType::Normal),
+            error: row[1],
+            params: [row[2], row[3], row[4]],
+        }
+    }
+
+    fn from_fit_single_row(dist: DistType, row: &[f32]) -> FitOutcome {
+        FitOutcome {
+            dist,
+            error: row[0],
+            params: [row[1], row[2], row[3]],
+        }
+    }
+}
+
+/// Cross-window reuse cache (§5.2.1): quantized (mean, std) → outcome.
+#[derive(Debug, Default)]
+pub struct ReuseCache {
+    map: HashMap<(i64, i64), FitOutcome>,
+    pub lookups: u64,
+    pub hits: u64,
+}
+
+impl ReuseCache {
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+/// Result of fitting one window.
+#[derive(Clone, Debug)]
+pub struct WindowFit {
+    /// One outcome per window point, in point-id order.
+    pub outcomes: Vec<FitOutcome>,
+    pub real_s: f64,
+    pub sim_s: f64,
+    /// Points actually sent to the executor.
+    pub fits: usize,
+    /// Distinct groups (grouping methods; == points otherwise).
+    pub groups: usize,
+    pub reuse_hits: usize,
+    pub shuffle_bytes: u64,
+}
+
+/// Quantize a feature to the grouping grid (§5.2: identical mean/std, up
+/// to an epsilon appropriate for f32-computed statistics).
+pub fn quantize(v: f64, quantum: f64) -> i64 {
+    (v / quantum).round() as i64
+}
+
+/// A group of points sharing a quantized (mean, std) key.
+#[derive(Clone, Debug)]
+pub struct Group {
+    pub key: (i64, i64),
+    /// Representative index (within the window's point order).
+    pub rep: usize,
+    pub members: Vec<usize>,
+}
+
+/// Group the window's points with the Spark `aggregateByKey` analog;
+/// returns groups plus the shuffled-byte count charged to the cluster.
+pub fn group_points(
+    lw: &LoadedWindow,
+    quantum: f64,
+    partitions: usize,
+    cluster: &mut SimCluster,
+) -> (Vec<Group>, u64) {
+    let n = lw.n_points();
+    let obs_row_bytes = (lw.obs.n_obs * 4) as u64;
+    let items: Vec<((i64, i64), usize)> = (0..n)
+        .map(|p| {
+            let (m, s) = lw.mean_std(p);
+            ((quantize(m, quantum), quantize(s, quantum)), p)
+        })
+        .collect();
+    let rdd = Rdd::from_vec(items, partitions.max(1));
+    let (grouped, shuffle_bytes) = rdd.aggregate_by_key(
+        partitions.max(1),
+        cluster,
+        "fit.shuffle",
+        |p| vec![p],
+        |c, p| c.push(p),
+        |c, mut o| c.append(&mut o),
+        // A combiner ships the representative observation vector once
+        // plus a (point id, key) record per member — the payload that
+        // makes Grouping collapse on big vectors (paper Fig. 19).
+        |_k, c| obs_row_bytes + 16 * c.len() as u64,
+    );
+    let mut groups: Vec<Group> = grouped
+        .collect()
+        .into_iter()
+        .map(|(key, mut members)| {
+            members.sort_unstable();
+            Group {
+                key,
+                rep: members[0],
+                members,
+            }
+        })
+        .collect();
+    // Deterministic order (hash maps scramble it).
+    groups.sort_by_key(|g| g.rep);
+    (groups, shuffle_bytes)
+}
+
+/// Gather selected observation rows into a compact point-major matrix.
+fn gather_rows(lw: &LoadedWindow, idx: &[usize]) -> Vec<f32> {
+    let n_obs = lw.obs.n_obs;
+    let mut out = Vec::with_capacity(idx.len() * n_obs);
+    for &p in idx {
+        out.extend_from_slice(lw.obs.point_row(p));
+    }
+    out
+}
+
+/// Simulated fit-stage charge: the paper fits each point in its own Map
+/// task by launching an external R process (§4.2 principle 5), so the
+/// simulated stage runs one task per point, costing the emulated
+/// external-fitter price per candidate type plus this host's real
+/// per-point share of the AOT execution.
+fn charge_fit_stage(
+    cluster: &mut SimCluster,
+    n_points: usize,
+    types_fitted: usize,
+    real_s: f64,
+) -> f64 {
+    if n_points == 0 {
+        return 0.0;
+    }
+    let per_point =
+        cluster.spec.fit_cost_per_point_type * types_fitted as f64 + real_s / n_points as f64;
+    cluster.run_stage("fit.compute", &vec![per_point; n_points])
+}
+
+/// Run `fit_all` on a set of points, returning outcomes + timing, and
+/// charging the simulated stage.
+fn fit_all_points(
+    engine: &Engine,
+    cluster: &mut SimCluster,
+    lw: &LoadedWindow,
+    idx: &[usize],
+    types: TypeSet,
+) -> Result<(Vec<FitOutcome>, f64)> {
+    if idx.is_empty() {
+        return Ok((Vec::new(), 0.0));
+    }
+    let values = gather_rows(lw, idx);
+    let t0 = Instant::now();
+    let out = engine.run_fit_all(&values, idx.len(), lw.obs.n_obs, types.n_types())?;
+    let real = t0.elapsed().as_secs_f64();
+    charge_fit_stage(cluster, idx.len(), types.n_types(), real);
+    let outcomes = (0..idx.len())
+        .map(|i| FitOutcome::from_fit_all_row(out.row(i)))
+        .collect();
+    Ok((outcomes, real))
+}
+
+/// Run single-type fits on points partitioned by the tree's prediction
+/// (Algorithm 4). Returns outcomes aligned with `idx` order.
+fn fit_ml_points(
+    engine: &Engine,
+    cluster: &mut SimCluster,
+    lw: &LoadedWindow,
+    idx: &[usize],
+    types: TypeSet,
+    tree: &DecisionTree,
+) -> Result<(Vec<FitOutcome>, f64)> {
+    if idx.is_empty() {
+        return Ok((Vec::new(), 0.0));
+    }
+    // Predict each point's type from (mean, std); clamp stray labels into
+    // the candidate set (a tree trained on 10-types may emit ids the
+    // 4-types run cannot fit — the paper's setups never mix them, but the
+    // runtime should not crash if a user does).
+    let n_types = types.n_types();
+    let mut by_type: Vec<Vec<usize>> = vec![Vec::new(); 10];
+    let t0 = Instant::now();
+    for (slot, &p) in idx.iter().enumerate() {
+        let (m, s) = lw.mean_std(p);
+        let label = tree.predict(&[m, s]).min(n_types - 1);
+        by_type[label].push(slot);
+    }
+    let mut outcomes = vec![
+        FitOutcome {
+            dist: DistType::Normal,
+            error: f32::NAN,
+            params: [0.0; 3],
+        };
+        idx.len()
+    ];
+    let mut real_total = t0.elapsed().as_secs_f64();
+    for (tid, slots) in by_type.iter().enumerate() {
+        if slots.is_empty() {
+            continue;
+        }
+        let dist = DistType::from_id(tid).unwrap();
+        let point_idx: Vec<usize> = slots.iter().map(|&s| idx[s]).collect();
+        let values = gather_rows(lw, &point_idx);
+        let t1 = Instant::now();
+        let out = engine.run_fit_single(&values, point_idx.len(), lw.obs.n_obs, dist)?;
+        let real = t1.elapsed().as_secs_f64();
+        real_total += real;
+        charge_fit_stage(cluster, point_idx.len(), 1, real);
+        for (i, &slot) in slots.iter().enumerate() {
+            outcomes[slot] = FitOutcome::from_fit_single_row(dist, out.row(i));
+        }
+    }
+    Ok((outcomes, real_total))
+}
+
+/// Fit one loaded window with the chosen method (Algorithm 1 body).
+pub fn fit_window(
+    engine: &Engine,
+    cluster: &mut SimCluster,
+    method: Method,
+    types: TypeSet,
+    lw: &LoadedWindow,
+    tree: Option<&DecisionTree>,
+    reuse: &mut ReuseCache,
+    quantum: f64,
+    partitions: usize,
+) -> Result<WindowFit> {
+    if method.uses_ml() && tree.is_none() {
+        return Err(PdfflowError::InvalidArg(format!(
+            "method {} requires a trained decision tree",
+            method.name()
+        )));
+    }
+    let n = lw.n_points();
+    let wall = Instant::now();
+    let sim_before = cluster.total();
+
+    let (outcomes, fits, groups, reuse_hits, shuffle_bytes) = if !method.uses_grouping() {
+        // Baseline / ML: every point goes to the executor.
+        let idx: Vec<usize> = (0..n).collect();
+        let (outs, _real) = if method.uses_ml() {
+            fit_ml_points(engine, cluster, lw, &idx, types, tree.unwrap())?
+        } else {
+            fit_all_points(engine, cluster, lw, &idx, types)?
+        };
+        (outs, n, n, 0, 0)
+    } else {
+        // Grouping / Reuse (± ML): aggregate, fit representatives only.
+        let (groups, shuffle_bytes) = group_points(lw, quantum, partitions, cluster);
+        let mut rep_outcomes: Vec<Option<FitOutcome>> = vec![None; groups.len()];
+        let mut to_fit: Vec<usize> = Vec::new(); // group indices
+        let mut hits = 0usize;
+        if method.uses_reuse() {
+            for (gi, g) in groups.iter().enumerate() {
+                reuse.lookups += 1;
+                if let Some(hit) = reuse.map.get(&g.key) {
+                    reuse.hits += 1;
+                    hits += 1;
+                    rep_outcomes[gi] = Some(*hit);
+                } else {
+                    to_fit.push(gi);
+                }
+            }
+        } else {
+            to_fit = (0..groups.len()).collect();
+        }
+        let rep_idx: Vec<usize> = to_fit.iter().map(|&gi| groups[gi].rep).collect();
+        let (fitted, _real) = if method.uses_ml() {
+            fit_ml_points(engine, cluster, lw, &rep_idx, types, tree.unwrap())?
+        } else {
+            fit_all_points(engine, cluster, lw, &rep_idx, types)?
+        };
+        let fits = rep_idx.len();
+        for (i, &gi) in to_fit.iter().enumerate() {
+            rep_outcomes[gi] = Some(fitted[i]);
+            if method.uses_reuse() {
+                reuse.map.insert(groups[gi].key, fitted[i]);
+            }
+        }
+        if method.uses_reuse() && !to_fit.is_empty() {
+            // New results are collected at the driver and re-broadcast to
+            // the workers for the next window's lookups (§5.2.1 overhead).
+            cluster.charge_broadcast("fit.reuse", 24 * to_fit.len() as u64);
+        }
+        // Scatter representative outcomes to all group members.
+        let mut outs = vec![
+            FitOutcome {
+                dist: DistType::Normal,
+                error: f32::NAN,
+                params: [0.0; 3],
+            };
+            n
+        ];
+        let n_groups = groups.len();
+        for (gi, g) in groups.into_iter().enumerate() {
+            let o = rep_outcomes[gi].expect("every group resolved");
+            for m in g.members {
+                outs[m] = o;
+            }
+        }
+        (outs, fits, n_groups, hits, shuffle_bytes)
+    };
+
+    debug_assert!(outcomes.iter().all(|o| !o.error.is_nan()));
+    Ok(WindowFit {
+        outcomes,
+        real_s: wall.elapsed().as_secs_f64(),
+        sim_s: cluster.total() - sim_before,
+        fits,
+        groups,
+        reuse_hits,
+        shuffle_bytes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_names_roundtrip() {
+        for m in Method::ALL {
+            assert_eq!(Method::from_name(m.name()), Some(m));
+        }
+        assert_eq!(Method::from_name("nope"), None);
+    }
+
+    #[test]
+    fn method_predicates() {
+        assert!(!Method::Baseline.uses_grouping());
+        assert!(!Method::Baseline.uses_ml());
+        assert!(Method::Grouping.uses_grouping() && !Method::Grouping.uses_ml());
+        assert!(Method::Reuse.uses_reuse() && Method::Reuse.uses_grouping());
+        assert!(Method::Ml.uses_ml() && !Method::Ml.uses_grouping());
+        assert!(Method::GroupingMl.uses_grouping() && Method::GroupingMl.uses_ml());
+        assert!(Method::ReuseMl.uses_reuse() && Method::ReuseMl.uses_ml());
+    }
+
+    #[test]
+    fn typeset_candidates() {
+        assert_eq!(TypeSet::Four.candidates().len(), 4);
+        assert_eq!(TypeSet::Ten.candidates().len(), 10);
+        assert_eq!(TypeSet::Four.n_types(), 4);
+    }
+
+    #[test]
+    fn quantize_groups_nearby_values() {
+        assert_eq!(quantize(1.0000001, 1e-6), quantize(1.0000004, 1e-6));
+        assert_ne!(quantize(1.0, 1e-6), quantize(1.1, 1e-6));
+        assert_eq!(quantize(-3.5, 1e-6), quantize(-3.5, 1e-6));
+    }
+}

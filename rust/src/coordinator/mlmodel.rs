@@ -1,0 +1,140 @@
+//! Decision-tree model generation (paper §5.3.1).
+//!
+//! The paper trains on "previously generated output data": per point the
+//! mean, std and the distribution type chosen by a full fit. We generate
+//! that output the same way the paper did — by running the full
+//! `fit_all` on points of a training slice (Slice 0) — then train the
+//! CART tree on (mean, std) → type and report the wrong-prediction rate
+//! on a held-out test split as the *model error*.
+
+use crate::cluster::SimCluster;
+use crate::coordinator::loader::{self, LoadedWindow};
+use crate::coordinator::methods::TypeSet;
+use crate::cube::CubeDims;
+use crate::mltree::{self, DecisionTree, Sample, TreeParams};
+use crate::runtime::Engine;
+use crate::storage::{DatasetReader, WindowCache};
+use crate::util::prng::Rng;
+use crate::Result;
+
+/// Labeled training data extracted from a slice's full-fit output.
+pub struct TrainingData {
+    pub samples: Vec<Sample>,
+    /// Real seconds spent producing the "previous output" (fit_all runs).
+    pub generation_real_s: f64,
+}
+
+/// Slices whose previously generated output trains the tree. The paper
+/// uses Slice 0 only — valid there because wave propagation mixes all 16
+/// uncertain inputs into every point, so all slices share one
+/// (mean, std) → type correlation. Our synthetic generator keeps layers
+/// disjoint in feature space (each slice sees one layer's Vp range), so
+/// the "previous output" must span the layers: we take `train_slice`
+/// plus one representative slice per value layer (documented deviation,
+/// DESIGN.md §3).
+pub fn training_slices(dims: &CubeDims, train_slice: usize, n_layers: usize) -> Vec<usize> {
+    let mut out = vec![train_slice];
+    let nv = n_layers.max(1);
+    for l in 0..nv {
+        let z = (l * dims.nz + dims.nz / (2 * nv)) / nv;
+        let z = z.min(dims.nz - 1);
+        if !out.contains(&z) {
+            out.push(z);
+        }
+    }
+    out
+}
+
+/// Produce labeled (mean, std) → type samples from up to `max_points`
+/// points spread over `train_slices` (paper: 25000 points of Slice 0).
+#[allow(clippy::too_many_arguments)]
+pub fn build_training_data(
+    reader: &DatasetReader,
+    cache: &WindowCache,
+    engine: &Engine,
+    cluster: &mut SimCluster,
+    dims: &CubeDims,
+    train_slices: &[usize],
+    types: TypeSet,
+    max_points: usize,
+    window_lines: usize,
+) -> Result<TrainingData> {
+    let mut samples = Vec::new();
+    let mut gen_s = 0.0;
+    let per_slice = max_points.div_ceil(train_slices.len().max(1));
+    for &train_slice in train_slices {
+        let mut slice_taken = 0usize;
+        for window in dims.windows(train_slice, window_lines) {
+            if slice_taken >= per_slice || samples.len() >= max_points {
+                break;
+            }
+            let lw: LoadedWindow = loader::load_window(reader, cache, engine, cluster, window)?;
+            let take = (per_slice - slice_taken)
+                .min(max_points - samples.len())
+                .min(lw.n_points());
+            let values = &lw.obs.data[..take * lw.obs.n_obs];
+            let t0 = std::time::Instant::now();
+            let out = engine.run_fit_all(values, take, lw.obs.n_obs, types.n_types())?;
+            gen_s += t0.elapsed().as_secs_f64();
+            for p in 0..take {
+                let (mean, std) = lw.mean_std(p);
+                samples.push(Sample {
+                    features: vec![mean, std],
+                    label: out.row(p)[0] as usize,
+                });
+            }
+            slice_taken += take;
+        }
+    }
+    Ok(TrainingData {
+        samples,
+        generation_real_s: gen_s,
+    })
+}
+
+/// A trained model plus the paper's quality/tuning metadata.
+pub struct TrainedModel {
+    pub tree: DecisionTree,
+    /// Wrong-prediction rate on the held-out test split (§5.3.1).
+    pub model_error: f64,
+    pub params: TreeParams,
+    pub train_real_s: f64,
+    pub n_train: usize,
+    pub n_test: usize,
+}
+
+/// Train with fixed hyper-parameters on a random train/test split
+/// (paper: hypers are tuned once and reused across datasets).
+pub fn train_model(data: &TrainingData, params: TreeParams, seed: u64) -> Result<TrainedModel> {
+    let mut idx: Vec<usize> = (0..data.samples.len()).collect();
+    let mut rng = Rng::new(seed);
+    rng.shuffle(&mut idx);
+    let split = (idx.len() * 8) / 10;
+    let train: Vec<Sample> = idx[..split].iter().map(|&i| data.samples[i].clone()).collect();
+    let test: Vec<Sample> = idx[split..].iter().map(|&i| data.samples[i].clone()).collect();
+    let t0 = std::time::Instant::now();
+    let tree = DecisionTree::train(&train, params)?;
+    let train_real_s = t0.elapsed().as_secs_f64();
+    let model_error = tree.error_rate(&test);
+    Ok(TrainedModel {
+        tree,
+        model_error,
+        params,
+        train_real_s,
+        n_train: train.len(),
+        n_test: test.len(),
+    })
+}
+
+/// The paper's hyper-parameter tuning (§5.3.1): grid over depth × maxBins
+/// on a train/validation split. Returns the chosen params + tuning time.
+pub fn tune_hypers(data: &TrainingData, seed: u64) -> Result<(TreeParams, f64, f64)> {
+    let t0 = std::time::Instant::now();
+    let (params, err) = mltree::tune(
+        &data.samples,
+        &[2, 3, 4, 6, 8, 10, 12],
+        &[4, 8, 16, 32, 64],
+        seed,
+    )?;
+    Ok((params, err, t0.elapsed().as_secs_f64()))
+}

@@ -1,0 +1,21 @@
+//! The coordinator — the paper's contribution, as a Rust L3 layer.
+//!
+//! * [`loader`] — Algorithm 2: sliding-window data loading from NFS with
+//!   per-point statistics (the stats HLO artifact) and window caching;
+//! * [`methods`] — the five PDF-computation methods and combinations:
+//!   Baseline / Grouping / Reuse / ML (± ML), Algorithm 1/3/4 bodies;
+//! * [`pipeline`] — the window driver: load → select → fit → persist →
+//!   aggregate the slice error E, with real + simulated clocks;
+//! * [`sampling`] — Algorithm 5: slice features from sampled points;
+//! * [`mlmodel`] — training the decision tree from "previously generated
+//!   output data" (paper §5.3.1).
+
+pub mod loader;
+pub mod methods;
+pub mod mlmodel;
+pub mod pipeline;
+pub mod sampling;
+
+pub use methods::{FitOutcome, Method, TypeSet};
+pub use pipeline::{Pipeline, SliceReport, WindowReport};
+pub use sampling::{Sampler, SamplingReport};

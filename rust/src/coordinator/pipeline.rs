@@ -1,0 +1,333 @@
+//! Algorithm 1: the sliding-window pipeline driver.
+//!
+//! `Pipeline::run_slice` walks the slice window by window: load
+//! (Algorithm 2) → method-specific select + fit (Algorithms 3/4) →
+//! persist → aggregate the average error E (Eq. 6). Both clocks — real
+//! wall-clock on this host and simulated cluster time — are reported per
+//! phase, which is how the paper's figures separate "data loading" from
+//! "PDF computation".
+
+use crate::cluster::SimCluster;
+use crate::config::PipelineConfig;
+use crate::coordinator::loader;
+use crate::coordinator::methods::{self, FitOutcome, Method, ReuseCache, TypeSet};
+use crate::coordinator::mlmodel;
+use crate::cube::Window;
+use crate::datagen::SyntheticDataset;
+use crate::mltree::DecisionTree;
+use crate::runtime::Engine;
+use crate::storage::{DatasetReader, WindowCache};
+use crate::{PdfflowError, Result};
+
+/// Per-window accounting.
+#[derive(Clone, Debug)]
+pub struct WindowReport {
+    pub window: Window,
+    pub n_points: usize,
+    pub groups: usize,
+    pub fits: usize,
+    pub reuse_hits: usize,
+    pub shuffle_bytes: u64,
+    pub load_real_s: f64,
+    pub load_sim_s: f64,
+    pub fit_real_s: f64,
+    pub fit_sim_s: f64,
+    pub err_sum: f64,
+}
+
+/// Slice-level result (one paper data point).
+#[derive(Clone, Debug)]
+pub struct SliceReport {
+    pub method: Method,
+    pub types: TypeSet,
+    pub slice: usize,
+    pub n_points: usize,
+    pub windows: Vec<WindowReport>,
+    /// Eq. 6: average Eq.5 error over all slice points.
+    pub avg_error: f64,
+    pub load_real_s: f64,
+    pub load_sim_s: f64,
+    pub fit_real_s: f64,
+    pub fit_sim_s: f64,
+    pub fits: usize,
+    pub groups: usize,
+    pub reuse_hits: usize,
+    pub shuffle_bytes: u64,
+}
+
+impl SliceReport {
+    pub fn total_real_s(&self) -> f64 {
+        self.load_real_s + self.fit_real_s
+    }
+
+    pub fn total_sim_s(&self) -> f64 {
+        self.load_sim_s + self.fit_sim_s
+    }
+
+    /// One human-readable summary row (bench drivers print these).
+    pub fn row(&self) -> String {
+        format!(
+            "{:<12} {:<8} load {:>8.2}s/{:>8.2}s  fit {:>8.3}s/{:>8.3}s  E {:.4}  fits {:>6}  groups {:>6}  hits {:>5}  shuffle {:>10}B",
+            self.method.name(),
+            self.types.name(),
+            self.load_real_s,
+            self.load_sim_s,
+            self.fit_real_s,
+            self.fit_sim_s,
+            self.avg_error,
+            self.fits,
+            self.groups,
+            self.reuse_hits,
+            self.shuffle_bytes,
+        )
+    }
+}
+
+/// The pipeline: dataset + engine + simulated cluster + caches + model.
+pub struct Pipeline<'a> {
+    reader: DatasetReader<'a>,
+    engine: &'a Engine,
+    pub cluster: SimCluster,
+    pub cfg: PipelineConfig,
+    cache: WindowCache,
+    reuse: ReuseCache,
+    pub tree: Option<DecisionTree>,
+    pub model_error: Option<f64>,
+}
+
+impl<'a> Pipeline<'a> {
+    pub fn new(
+        dataset: &'a SyntheticDataset,
+        engine: &'a Engine,
+        cluster: SimCluster,
+        cfg: PipelineConfig,
+    ) -> Pipeline<'a> {
+        let cache = WindowCache::new(cfg.cache_bytes);
+        Pipeline {
+            reader: DatasetReader::new(dataset),
+            engine,
+            cluster,
+            cfg,
+            cache,
+            reuse: ReuseCache::default(),
+            tree: None,
+            model_error: None,
+        }
+    }
+
+    pub fn dataset(&self) -> &SyntheticDataset {
+        self.reader.dataset()
+    }
+
+    fn partitions(&self) -> usize {
+        self.cfg
+            .partitions
+            .unwrap_or_else(|| self.cluster.spec.total_slots())
+    }
+
+    /// Train (or re-train) the decision tree from `train_slice`'s full-fit
+    /// output (paper §5.3.1; tree generation is *not* part of the measured
+    /// PDF-computation time). Returns the model error.
+    pub fn ensure_tree(
+        &mut self,
+        train_slice: usize,
+        types: TypeSet,
+        max_points: usize,
+    ) -> Result<f64> {
+        if let Some(e) = self.model_error {
+            if self.tree.is_some() {
+                return Ok(e);
+            }
+        }
+        let dims = self.reader.dataset().spec.dims;
+        // Tree generation runs outside the measured pipeline: use a scratch
+        // cluster so its charges don't pollute the experiment ledger.
+        let mut scratch = SimCluster::new(self.cluster.spec.clone());
+        let slices = mlmodel::training_slices(
+            &dims,
+            train_slice,
+            self.reader.dataset().spec.n_value_layers(),
+        );
+        let data = mlmodel::build_training_data(
+            &self.reader,
+            &self.cache,
+            self.engine,
+            &mut scratch,
+            &dims,
+            &slices,
+            types,
+            max_points,
+            self.cfg.window_lines,
+        )?;
+        let model = mlmodel::train_model(&data, Default::default(), 42)?;
+        self.model_error = Some(model.model_error);
+        self.tree = Some(model.tree);
+        Ok(model.model_error)
+    }
+
+    /// Install an externally trained tree (e.g. loaded from JSON).
+    pub fn set_tree(&mut self, tree: DecisionTree) {
+        self.tree = Some(tree);
+        self.model_error = None;
+    }
+
+    /// Run the full slice (paper's "Execution of One Slice").
+    pub fn run_slice(&mut self, method: Method, slice: usize, types: TypeSet) -> Result<SliceReport> {
+        let dims = self.reader.dataset().spec.dims;
+        self.run_windows(method, types, dims.windows(slice, self.cfg.window_lines), slice)
+    }
+
+    /// Run only the first `lines` lines of a slice (the paper's "small
+    /// workload": 6 lines / 3006 points of Slice 201).
+    pub fn run_lines(
+        &mut self,
+        method: Method,
+        slice: usize,
+        types: TypeSet,
+        lines: usize,
+    ) -> Result<SliceReport> {
+        let dims = self.reader.dataset().spec.dims;
+        let lines = lines.min(dims.ny);
+        let windows: Vec<Window> = dims
+            .windows(slice, self.cfg.window_lines)
+            .into_iter()
+            .filter(|w| w.y0 + w.lines <= lines)
+            .collect();
+        if windows.is_empty() {
+            return Err(PdfflowError::InvalidArg(format!(
+                "lines {lines} smaller than one window ({})",
+                self.cfg.window_lines
+            )));
+        }
+        self.run_windows(method, types, windows, slice)
+    }
+
+    fn run_windows(
+        &mut self,
+        method: Method,
+        types: TypeSet,
+        windows: Vec<Window>,
+        slice: usize,
+    ) -> Result<SliceReport> {
+        if method.uses_ml() && self.tree.is_none() {
+            return Err(PdfflowError::InvalidArg(format!(
+                "method {} needs ensure_tree() first",
+                method.name()
+            )));
+        }
+        // PJRT compilation happens once at warm-up, never inside the
+        // measured stages (Spark analog: executor JVM/code-gen warm-up).
+        self.engine
+            .warm_all_for(self.reader.dataset().spec.n_sims)?;
+        // Reuse results never leak between experiment runs.
+        self.reuse = ReuseCache::default();
+        let partitions = self.partitions();
+        let quantum = self.cfg.group_quantum;
+        let mut reports = Vec::with_capacity(windows.len());
+        let mut persist = self.open_persist(method, types, slice)?;
+        for window in windows {
+            let lw = loader::load_window(
+                &self.reader,
+                &self.cache,
+                self.engine,
+                &mut self.cluster,
+                window,
+            )?;
+            let fit = methods::fit_window(
+                self.engine,
+                &mut self.cluster,
+                method,
+                types,
+                &lw,
+                self.tree.as_ref(),
+                &mut self.reuse,
+                quantum,
+                partitions,
+            )?;
+            if let Some(f) = persist.as_mut() {
+                persist_window(f, &lw.obs.point_ids, &fit.outcomes)?;
+            }
+            let err_sum: f64 = fit.outcomes.iter().map(|o| o.error as f64).sum();
+            reports.push(WindowReport {
+                window,
+                n_points: lw.n_points(),
+                groups: fit.groups,
+                fits: fit.fits,
+                reuse_hits: fit.reuse_hits,
+                shuffle_bytes: fit.shuffle_bytes,
+                load_real_s: lw.real_s,
+                load_sim_s: lw.sim_s,
+                fit_real_s: fit.real_s,
+                fit_sim_s: fit.sim_s,
+                err_sum,
+            });
+        }
+        let n_points: usize = reports.iter().map(|w| w.n_points).sum();
+        let err_total: f64 = reports.iter().map(|w| w.err_sum).sum();
+        Ok(SliceReport {
+            method,
+            types,
+            slice,
+            n_points,
+            avg_error: if n_points > 0 { err_total / n_points as f64 } else { 0.0 },
+            load_real_s: reports.iter().map(|w| w.load_real_s).sum(),
+            load_sim_s: reports.iter().map(|w| w.load_sim_s).sum(),
+            fit_real_s: reports.iter().map(|w| w.fit_real_s).sum(),
+            fit_sim_s: reports.iter().map(|w| w.fit_sim_s).sum(),
+            fits: reports.iter().map(|w| w.fits).sum(),
+            groups: reports.iter().map(|w| w.groups).sum(),
+            reuse_hits: reports.iter().map(|w| w.reuse_hits).sum(),
+            shuffle_bytes: reports.iter().map(|w| w.shuffle_bytes).sum(),
+            windows: reports,
+        })
+    }
+
+    fn open_persist(
+        &self,
+        method: Method,
+        types: TypeSet,
+        slice: usize,
+    ) -> Result<Option<std::io::BufWriter<std::fs::File>>> {
+        let Some(dir) = &self.cfg.persist_dir else {
+            return Ok(None);
+        };
+        std::fs::create_dir_all(dir)?;
+        let path = std::path::Path::new(dir).join(format!(
+            "slice{slice}_{}_{}.pdfout",
+            method.name(),
+            types.n_types()
+        ));
+        Ok(Some(std::io::BufWriter::new(std::fs::File::create(path)?)))
+    }
+
+    /// Window-cache statistics (hits, misses, bytes, entries).
+    pub fn cache_stats(&self) -> (u64, u64, u64, usize) {
+        self.cache.stats()
+    }
+
+    pub fn clear_cache(&self) {
+        self.cache.clear()
+    }
+
+    pub fn reuse_stats(&self) -> (u64, u64, usize) {
+        (self.reuse.lookups, self.reuse.hits, self.reuse.len())
+    }
+}
+
+/// Persist one window's outcomes: binary rows of
+/// (point_id u64, type u32, error f32, p0..p2 f32) — Algorithm 1 line 11.
+fn persist_window(
+    f: &mut impl std::io::Write,
+    ids: &[crate::cube::PointId],
+    outcomes: &[FitOutcome],
+) -> Result<()> {
+    for (id, o) in ids.iter().zip(outcomes) {
+        f.write_all(&id.0.to_le_bytes())?;
+        f.write_all(&(o.dist.id() as u32).to_le_bytes())?;
+        f.write_all(&o.error.to_le_bytes())?;
+        for p in o.params {
+            f.write_all(&p.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,177 @@
+//! Algorithm 5: the Sampling method — slice features from sampled points.
+//!
+//! Random sampling loads only the sampled points (positioned reads per
+//! (point, file)); k-means sampling must first load the *whole* slice's
+//! statistics to cluster on (mean, std) — which is why its loading time
+//! at rate 0.2 already exceeds random sampling at rate 1.0 (paper
+//! Fig. 16). Neither path ever calls the fit artifacts: types come from
+//! the broadcast decision tree (the ~2 s flat "PDF computation" of
+//! Fig. 15).
+
+use std::time::Instant;
+
+use crate::cluster::SimCluster;
+use crate::coordinator::loader;
+use crate::cube::PointId;
+use crate::mltree::DecisionTree;
+use crate::runtime::Engine;
+use crate::sampling::{kmeans_sample, random_sample, SliceFeatures};
+use crate::stats::DistType;
+use crate::storage::{DatasetReader, WindowCache};
+use crate::util::prng::Rng;
+use crate::{PdfflowError, Result};
+
+/// Double-sampling strategy (paper §5.4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Sampler {
+    Random,
+    KMeans,
+}
+
+impl Sampler {
+    pub fn name(self) -> &'static str {
+        match self {
+            Sampler::Random => "random",
+            Sampler::KMeans => "kmeans",
+        }
+    }
+}
+
+/// Result of one sampling run (one Fig. 15/16 data point).
+#[derive(Clone, Debug)]
+pub struct SamplingReport {
+    pub sampler: Sampler,
+    pub rate: f64,
+    pub n_sampled: usize,
+    pub features: SliceFeatures,
+    pub load_real_s: f64,
+    pub load_sim_s: f64,
+    pub compute_real_s: f64,
+    pub compute_sim_s: f64,
+}
+
+/// Run Algorithm 5 over slice `z`.
+#[allow(clippy::too_many_arguments)]
+pub fn run_sampling(
+    reader: &DatasetReader,
+    cache: &WindowCache,
+    engine: &Engine,
+    cluster: &mut SimCluster,
+    tree: &DecisionTree,
+    z: usize,
+    rate: f64,
+    sampler: Sampler,
+    seed: u64,
+) -> Result<SamplingReport> {
+    if !(0.0..=1.0).contains(&rate) {
+        return Err(PdfflowError::InvalidArg(format!("rate {rate} not in [0,1]")));
+    }
+    let dims = reader.dataset().spec.dims;
+    let n_slice = dims.slice_points();
+    let mut rng = Rng::new(seed ^ (z as u64) << 17);
+
+    let (feat_rows, load_real_s, load_sim_s, n_sampled) = match sampler {
+        Sampler::Random => {
+            // Lines 2–14: load only the sampled points.
+            let picks = random_sample(&mut rng, n_slice, rate);
+            let ids: Vec<PointId> = picks
+                .iter()
+                .map(|&i| PointId((z * n_slice + i) as u64))
+                .collect();
+            let t0 = Instant::now();
+            let obs = reader.read_points(&ids)?;
+            let io_real = t0.elapsed().as_secs_f64();
+            let bytes = obs.bytes();
+            let reads = (ids.len() * reader.dataset().spec.n_sims) as u64;
+            let t1 = Instant::now();
+            let stats = engine.run_stats(&obs.data, ids.len(), obs.n_obs)?;
+            let stats_real = t1.elapsed().as_secs_f64();
+            let mut sim = cluster.charge_nfs("sample.nfs", bytes, reads);
+            // Loading stage: one Map task per sampled point, paying the
+            // emulated per-value gather cost plus the real stats share.
+            let per_task = cluster.spec.load_cost_per_value * obs.n_obs as f64
+                + stats_real / ids.len().max(1) as f64;
+            sim += cluster.run_stage("sample.stats", &vec![per_task; ids.len()]);
+            let rows: Vec<[f64; 2]> = (0..ids.len())
+                .map(|p| [stats.row(p)[0] as f64, stats.row(p)[1] as f64])
+                .collect();
+            (rows, io_real + stats_real, sim, ids.len())
+        }
+        Sampler::KMeans => {
+            // k-means needs every point's features first: full slice load.
+            let t0 = Instant::now();
+            let mut all_rows: Vec<[f64; 2]> = Vec::with_capacity(n_slice);
+            let mut sim = 0.0;
+            for w in dims.windows(z, 16) {
+                let lw = loader::load_window(reader, cache, engine, cluster, w)?;
+                sim += lw.sim_s;
+                for p in 0..lw.n_points() {
+                    let (m, s) = lw.mean_std(p);
+                    all_rows.push([m, s]);
+                }
+            }
+            let k_t0 = Instant::now();
+            let picks = kmeans_sample(&mut rng, &all_rows, rate, 10);
+            let kmeans_real = k_t0.elapsed().as_secs_f64();
+            // k-means itself runs as a driver-side iterative job.
+            sim += cluster.run_stage("sample.kmeans", &[kmeans_real]);
+            let rows: Vec<[f64; 2]> = picks.iter().map(|&i| all_rows[i]).collect();
+            let n = rows.len();
+            (rows, t0.elapsed().as_secs_f64(), sim, n)
+        }
+    };
+
+    // Lines 15–26: predict types with the broadcast tree, aggregate the
+    // slice features. No fit artifact runs — this is the whole point.
+    let t1 = Instant::now();
+    let mut means = Vec::with_capacity(feat_rows.len());
+    let mut stds = Vec::with_capacity(feat_rows.len());
+    let mut types = Vec::with_capacity(feat_rows.len());
+    for r in &feat_rows {
+        means.push(r[0]);
+        stds.push(r[1]);
+        types.push(DistType::from_id(tree.predict(r)).unwrap_or(DistType::Normal));
+    }
+    let features = SliceFeatures::from_points(&means, &stds, &types);
+    let compute_real_s = t1.elapsed().as_secs_f64();
+    // Driver collects (mean, std, type) triples from the workers.
+    let mut compute_sim_s = cluster.charge_shuffle("sample.collect", 24 * feat_rows.len() as u64);
+    compute_sim_s += cluster.run_stage("sample.predict", &[compute_real_s]);
+
+    Ok(SamplingReport {
+        sampler,
+        rate,
+        n_sampled,
+        features,
+        load_real_s,
+        load_sim_s,
+        compute_real_s,
+        compute_sim_s,
+    })
+}
+
+/// Reference features of ALL slice points (tree-predicted types), used as
+/// the Fig. 17 ground truth for the type-percentage distance.
+pub fn full_slice_features(
+    reader: &DatasetReader,
+    cache: &WindowCache,
+    engine: &Engine,
+    cluster: &mut SimCluster,
+    tree: &DecisionTree,
+    z: usize,
+) -> Result<SliceFeatures> {
+    let dims = reader.dataset().spec.dims;
+    let mut means = Vec::new();
+    let mut stds = Vec::new();
+    let mut types = Vec::new();
+    for w in dims.windows(z, 16) {
+        let lw = loader::load_window(reader, cache, engine, cluster, w)?;
+        for p in 0..lw.n_points() {
+            let (m, s) = lw.mean_std(p);
+            means.push(m);
+            stds.push(s);
+            types.push(DistType::from_id(tree.predict(&[m, s])).unwrap_or(DistType::Normal));
+        }
+    }
+    Ok(SliceFeatures::from_points(&means, &stds, &types))
+}

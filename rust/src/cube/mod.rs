@@ -1,0 +1,189 @@
+//! Spatial cube geometry (paper §3).
+//!
+//! A cube area has `nz` horizontal slices; each slice has `ny` lines; each
+//! line has `nx` points (the paper's Set1 is 251 × 501 × 501 = nx 251,
+//! ny 501, nz 501). A *window* is a run of consecutive lines inside one
+//! slice (paper §4.2 principle 4: the sliding window unit for loading and
+//! PDF computation).
+
+/// Cube dimensions: points per line, lines per slice, slices.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CubeDims {
+    pub nx: usize,
+    pub ny: usize,
+    pub nz: usize,
+}
+
+impl CubeDims {
+    pub fn new(nx: usize, ny: usize, nz: usize) -> Self {
+        CubeDims { nx, ny, nz }
+    }
+
+    /// Total points in the cube.
+    pub fn n_points(&self) -> usize {
+        self.nx * self.ny * self.nz
+    }
+
+    /// Points in one slice.
+    pub fn slice_points(&self) -> usize {
+        self.nx * self.ny
+    }
+
+    /// Flat point id of (x, y, z) — z-major, then line, then point, which
+    /// is also the on-disk value order in dataset files.
+    pub fn point_id(&self, x: usize, y: usize, z: usize) -> PointId {
+        debug_assert!(x < self.nx && y < self.ny && z < self.nz);
+        PointId(((z * self.ny + y) * self.nx + x) as u64)
+    }
+
+    /// Inverse of [`point_id`].
+    pub fn coords(&self, id: PointId) -> (usize, usize, usize) {
+        let i = id.0 as usize;
+        let x = i % self.nx;
+        let y = (i / self.nx) % self.ny;
+        let z = i / (self.nx * self.ny);
+        (x, y, z)
+    }
+
+    /// Byte offset of a point's value inside one dataset file body.
+    pub fn value_offset(&self, id: PointId) -> u64 {
+        id.0 * 4
+    }
+
+    /// All point ids of `lines` consecutive lines of slice `z` starting at
+    /// line `y0` (a window's points, in id order).
+    pub fn window_points(&self, w: &Window) -> Vec<PointId> {
+        let mut out = Vec::with_capacity(w.lines * self.nx);
+        for y in w.y0..w.y0 + w.lines {
+            for x in 0..self.nx {
+                out.push(self.point_id(x, y, w.z));
+            }
+        }
+        out
+    }
+
+    /// Split slice `z` into consecutive non-overlapping windows of
+    /// `lines_per_window` lines (last window may be shorter). Paper §4.2:
+    /// "any two windows have no intersection".
+    pub fn windows(&self, z: usize, lines_per_window: usize) -> Vec<Window> {
+        assert!(lines_per_window > 0, "window must have at least one line");
+        let mut out = Vec::new();
+        let mut y0 = 0;
+        while y0 < self.ny {
+            let lines = lines_per_window.min(self.ny - y0);
+            out.push(Window { z, y0, lines });
+            y0 += lines;
+        }
+        out
+    }
+}
+
+/// Flat point identifier (the RDD key in the paper's key-value pairs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct PointId(pub u64);
+
+/// A run of consecutive lines inside one slice.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Window {
+    pub z: usize,
+    pub y0: usize,
+    pub lines: usize,
+}
+
+impl Window {
+    pub fn n_points(&self, dims: &CubeDims) -> usize {
+        self.lines * dims.nx
+    }
+
+    /// Contiguous byte range of this window inside one dataset file body.
+    pub fn byte_range(&self, dims: &CubeDims) -> (u64, usize) {
+        let first = dims.point_id(0, self.y0, self.z);
+        (first.0 * 4, self.lines * dims.nx * 4)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> CubeDims {
+        CubeDims::new(251, 501, 501) // paper Set1
+    }
+
+    #[test]
+    fn point_id_roundtrip() {
+        let d = dims();
+        for &(x, y, z) in &[(0, 0, 0), (250, 500, 500), (17, 42, 201), (1, 0, 500)] {
+            let id = d.point_id(x, y, z);
+            assert_eq!(d.coords(id), (x, y, z));
+        }
+    }
+
+    #[test]
+    fn ids_are_disk_order() {
+        let d = CubeDims::new(3, 2, 2);
+        let mut expect = 0u64;
+        for z in 0..2 {
+            for y in 0..2 {
+                for x in 0..3 {
+                    assert_eq!(d.point_id(x, y, z).0, expect);
+                    expect += 1;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn counts() {
+        let d = dims();
+        assert_eq!(d.n_points(), 251 * 501 * 501);
+        assert_eq!(d.slice_points(), 251 * 501);
+    }
+
+    #[test]
+    fn windows_partition_slice() {
+        let d = dims();
+        let ws = d.windows(201, 25);
+        // Non-overlapping, ordered, covering all 501 lines.
+        let mut covered = 0;
+        for (i, w) in ws.iter().enumerate() {
+            assert_eq!(w.z, 201);
+            assert_eq!(w.y0, covered);
+            covered += w.lines;
+            if i + 1 < ws.len() {
+                assert_eq!(w.lines, 25);
+            }
+        }
+        assert_eq!(covered, 501);
+        assert_eq!(ws.len(), 21); // ceil(501/25)
+        assert_eq!(ws.last().unwrap().lines, 1); // 501 = 20*25 + 1
+    }
+
+    #[test]
+    fn windows_exact_division() {
+        let d = CubeDims::new(10, 100, 5);
+        let ws = d.windows(0, 20);
+        assert_eq!(ws.len(), 5);
+        assert!(ws.iter().all(|w| w.lines == 20));
+    }
+
+    #[test]
+    fn window_points_are_contiguous_ids() {
+        let d = CubeDims::new(4, 10, 3);
+        let w = Window { z: 1, y0: 2, lines: 2 };
+        let pts = d.window_points(&w);
+        assert_eq!(pts.len(), 8);
+        for pair in pts.windows(2) {
+            assert_eq!(pair[1].0, pair[0].0 + 1);
+        }
+        let (off, len) = w.byte_range(&d);
+        assert_eq!(off, pts[0].0 * 4);
+        assert_eq!(len, 8 * 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "window must have at least one line")]
+    fn zero_window_panics() {
+        dims().windows(0, 0);
+    }
+}

@@ -1,0 +1,513 @@
+//! Synthetic seismic dataset generator — the HPC4e-benchmark / UQLab
+//! analog (DESIGN.md §3, substitution row 2).
+//!
+//! The paper's data: a 16-layer seismic model; each layer's wave velocity
+//! Vp is uncertain with a distribution family cycling through
+//! {normal, log-normal, exponential, uniform}; each Monte-Carlo simulation
+//! draws the 16 inputs and produces one spatial dataset file; a point's
+//! observation vector is its value across the K simulation files.
+//!
+//! Our generator preserves the properties the paper's methods exploit:
+//!
+//! * **file-per-simulation layout** with z-major point order (NFS gather
+//!   pattern of Algorithm 2);
+//! * **grouping ratio** — points inside a layer share observation vectors
+//!   when they have the same quantized gain level, so a tunable fraction
+//!   of points is redundant (Grouping's win);
+//! * **learnable (mean, std) → type correlation** — pure points keep their
+//!   layer's family under multiplicative gain, and family parameters make
+//!   layers separable in (mean, std) space (ML's win);
+//! * **type diversity inside a slice** — interface points blend adjacent
+//!   layers (the paper's "non-linear relationship" motivating 10-types).
+
+use std::fs::File;
+use std::io::{BufWriter, Write as _};
+use std::path::{Path, PathBuf};
+
+use crate::cube::CubeDims;
+use crate::stats::DistType;
+use crate::util::json::Json;
+use crate::util::prng::Rng;
+use crate::{PdfflowError, Result};
+
+/// How a point derives its value from the layer input draws.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PointKind {
+    /// `v = gain * u_layer` — keeps the layer's distribution family.
+    Pure,
+    /// `v = gain * (alpha*u_layer + (1-alpha)*u_next)` — mixes adjacent
+    /// layers into an out-of-family distribution.
+    Blend,
+    /// Pure plus per-(point, simulation) jitter — a unique observation
+    /// vector that defeats grouping.
+    Unique,
+}
+
+/// One of the model's value layers.
+#[derive(Clone, Debug)]
+pub struct LayerSpec {
+    pub family: DistType,
+    /// Base wave velocity (location scale of the layer's distribution).
+    pub vp: f64,
+    /// Relative uncertainty (spread / vp).
+    pub spread: f64,
+}
+
+impl LayerSpec {
+    /// Draw one Monte-Carlo input value for this layer.
+    pub fn draw(&self, rng: &mut Rng) -> f64 {
+        let s = self.vp * self.spread;
+        match self.family {
+            DistType::Normal => rng.normal(self.vp, s),
+            DistType::Lognormal => {
+                // Parametrize so that E[v] ~ vp and relative sd ~ spread.
+                let sigma2 = (1.0 + self.spread * self.spread).ln();
+                let mu = self.vp.ln() - 0.5 * sigma2;
+                rng.lognormal(mu, sigma2.sqrt())
+            }
+            DistType::Exponential => rng.exponential(1.0 / self.vp),
+            DistType::Uniform => {
+                let half = s * 3f64.sqrt(); // matches std = s
+                rng.uniform(self.vp - half, self.vp + half)
+            }
+            other => panic!("layer family {other:?} not an input family"),
+        }
+    }
+}
+
+/// Full dataset specification (persisted to `dataset.json`).
+#[derive(Clone, Debug)]
+pub struct DatasetSpec {
+    pub dims: CubeDims,
+    pub n_sims: usize,
+    pub n_layers: usize,
+    /// Gain quantization levels per layer: points sharing a level share
+    /// their observation vector (drives the grouping ratio).
+    pub group_levels: usize,
+    /// Fraction of interface (blend) points.
+    pub blend_fraction: f64,
+    /// Fraction of unique-noise points.
+    pub unique_fraction: f64,
+    /// Relative amplitude of the per-(point, sim) jitter on Unique points.
+    pub unique_noise: f64,
+    pub seed: u64,
+}
+
+impl DatasetSpec {
+    /// Set1-analog defaults at laptop scale (see DESIGN.md §3).
+    /// `group_levels`/`unique_fraction` are calibrated so a full slice
+    /// has ~25-30% distinct (mean, std) groups, matching the redundancy
+    /// the paper's Grouping numbers imply (69-92% time reduction).
+    pub fn set1_analog() -> Self {
+        DatasetSpec {
+            dims: CubeDims::new(251, 96, 96),
+            n_sims: 1000,
+            n_layers: 16,
+            group_levels: 32,
+            blend_fraction: 0.15,
+            unique_fraction: 0.15,
+            unique_noise: 0.02,
+            seed: 20180515,
+        }
+    }
+
+    /// Tiny dataset for unit/integration tests (matches 64x100 artifacts).
+    pub fn tiny() -> Self {
+        DatasetSpec {
+            dims: CubeDims::new(16, 12, 8),
+            n_sims: 100,
+            n_layers: 16,
+            group_levels: 16,
+            blend_fraction: 0.15,
+            unique_fraction: 0.25,
+            unique_noise: 0.02,
+            seed: 7,
+        }
+    }
+
+    /// The paper's 16 layers: families cycle Normal, Lognormal,
+    /// Exponential, Uniform ("the distribution type for every four layers").
+    /// Layer 0 is topography (metadata only); layers 1..16 carry values.
+    pub fn layers(&self) -> Vec<LayerSpec> {
+        let families = [
+            DistType::Normal,
+            DistType::Lognormal,
+            DistType::Exponential,
+            DistType::Uniform,
+        ];
+        (0..self.n_layers)
+            .map(|i| LayerSpec {
+                family: families[i % 4],
+                // Vp grows with depth (roughly 1500..5500 m/s) so layers
+                // are separable in (mean, std) space.
+                vp: 1500.0 + 270.0 * i as f64,
+                spread: 0.04 + 0.015 * (i % 5) as f64,
+            })
+            .collect()
+    }
+
+    /// Number of *value* layers (all but the topography layer).
+    pub fn n_value_layers(&self) -> usize {
+        self.n_layers - 1
+    }
+
+    /// Which value layer a slice belongs to.
+    pub fn layer_of_slice(&self, z: usize) -> usize {
+        let nv = self.n_value_layers();
+        (z * nv / self.dims.nz).min(nv - 1)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("nx", Json::Num(self.dims.nx as f64)),
+            ("ny", Json::Num(self.dims.ny as f64)),
+            ("nz", Json::Num(self.dims.nz as f64)),
+            ("n_sims", Json::Num(self.n_sims as f64)),
+            ("n_layers", Json::Num(self.n_layers as f64)),
+            ("group_levels", Json::Num(self.group_levels as f64)),
+            ("blend_fraction", Json::Num(self.blend_fraction)),
+            ("unique_fraction", Json::Num(self.unique_fraction)),
+            ("unique_noise", Json::Num(self.unique_noise)),
+            ("seed", Json::Num(self.seed as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let get = |k: &str| -> Result<f64> {
+            j.get(k)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| PdfflowError::Format(format!("dataset.json missing {k}")))
+        };
+        Ok(DatasetSpec {
+            dims: CubeDims::new(get("nx")? as usize, get("ny")? as usize, get("nz")? as usize),
+            n_sims: get("n_sims")? as usize,
+            n_layers: get("n_layers")? as usize,
+            group_levels: get("group_levels")? as usize,
+            blend_fraction: get("blend_fraction")?,
+            unique_fraction: get("unique_fraction")?,
+            unique_noise: get("unique_noise")?,
+            seed: get("seed")? as u64,
+        })
+    }
+}
+
+/// Deterministic per-point attributes (kind, gain level, blend alpha),
+/// derived by hashing the point's (x, y) and its layer — identical across
+/// simulations, which is what makes observation vectors group.
+#[derive(Clone, Copy, Debug)]
+pub struct PointProfile {
+    pub kind: PointKind,
+    pub layer: usize,
+    pub gain: f64,
+    pub alpha: f64,
+}
+
+fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl DatasetSpec {
+    /// Per-point profile. Depends only on (x, y, layer, seed): every slice
+    /// of a layer has the same planform, like a real stratum.
+    pub fn point_profile(&self, x: usize, y: usize, z: usize) -> PointProfile {
+        let layer = self.layer_of_slice(z);
+        let h = mix64(
+            (x as u64)
+                .wrapping_mul(0x9E3779B97F4A7C15)
+                .wrapping_add((y as u64).wrapping_mul(0xD1B54A32D192ED03))
+                .wrapping_add((layer as u64) << 32)
+                .wrapping_add(self.seed),
+        );
+        let u_kind = (h >> 11) as f64 / (1u64 << 53) as f64;
+        let kind = if u_kind < self.blend_fraction {
+            PointKind::Blend
+        } else if u_kind < self.blend_fraction + self.unique_fraction {
+            PointKind::Unique
+        } else {
+            PointKind::Pure
+        };
+        let level = (mix64(h ^ 0xA5A5) % self.group_levels as u64) as f64;
+        let gain = 0.85 + 0.30 * level / (self.group_levels.max(2) - 1) as f64;
+        // Blend coefficient quantized to 3 levels so blends also group.
+        let alpha = [0.35, 0.5, 0.65][(mix64(h ^ 0x5A5A) % 3) as usize];
+        PointProfile {
+            kind,
+            layer,
+            gain,
+            alpha,
+        }
+    }
+
+    /// Ground-truth input family of a point (meaningful for Pure/Unique
+    /// points; Blend points are out-of-family by construction).
+    pub fn true_family(&self, x: usize, y: usize, z: usize) -> Option<DistType> {
+        let p = self.point_profile(x, y, z);
+        match p.kind {
+            PointKind::Blend => None,
+            _ => Some(self.layers()[p.layer + 1].family),
+        }
+    }
+}
+
+/// File format: 32-byte header then nx*ny*nz little-endian f32 values in
+/// z-major (slice, line, point) order.
+pub const MAGIC: &[u8; 4] = b"PDFC";
+pub const HEADER_LEN: u64 = 32;
+pub const VERSION: u32 = 1;
+
+fn write_header(w: &mut impl std::io::Write, spec: &DatasetSpec, sim: u32) -> Result<()> {
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&(spec.dims.nx as u32).to_le_bytes())?;
+    w.write_all(&(spec.dims.ny as u32).to_le_bytes())?;
+    w.write_all(&(spec.dims.nz as u32).to_le_bytes())?;
+    w.write_all(&sim.to_le_bytes())?;
+    w.write_all(&(spec.n_sims as u32).to_le_bytes())?;
+    w.write_all(&[0u8; 4])?; // padding to 32 bytes
+    Ok(())
+}
+
+/// A generated (or re-opened) dataset on disk.
+#[derive(Clone, Debug)]
+pub struct SyntheticDataset {
+    pub spec: DatasetSpec,
+    pub dir: PathBuf,
+    pub files: Vec<PathBuf>,
+}
+
+impl SyntheticDataset {
+    pub fn file_name(sim: usize) -> String {
+        format!("sim_{sim:05}.pdfc")
+    }
+
+    /// Generate all simulation files under `dir` (skips generation if a
+    /// matching dataset.json already exists — `make artifacts` semantics).
+    pub fn generate(spec: &DatasetSpec, dir: impl AsRef<Path>) -> Result<SyntheticDataset> {
+        let dir = dir.as_ref().to_path_buf();
+        if let Ok(existing) = Self::open(&dir) {
+            if existing.spec.to_json() == spec.to_json() {
+                return Ok(existing);
+            }
+        }
+        std::fs::create_dir_all(&dir)?;
+        let layers = spec.layers();
+        let master = Rng::new(spec.seed);
+        let dims = spec.dims;
+        // Precompute per-point profiles for one slice planform per layer:
+        // profiles depend on (x, y, layer) only.
+        let nv = spec.n_value_layers();
+        let mut profiles: Vec<Option<Vec<PointProfile>>> = vec![None; nv];
+        for z in 0..dims.nz {
+            let layer = spec.layer_of_slice(z);
+            if profiles[layer].is_none() {
+                let mut v = Vec::with_capacity(dims.slice_points());
+                for y in 0..dims.ny {
+                    for x in 0..dims.nx {
+                        v.push(spec.point_profile(x, y, z));
+                    }
+                }
+                profiles[layer] = Some(v);
+            }
+        }
+
+        let mut files = Vec::with_capacity(spec.n_sims);
+        for sim in 0..spec.n_sims {
+            let path = dir.join(Self::file_name(sim));
+            let mut w = BufWriter::with_capacity(1 << 20, File::create(&path)?);
+            write_header(&mut w, spec, sim as u32)?;
+            // Monte-Carlo input draws for this simulation: one per value
+            // layer (UQLab analog) + the next-layer draw used by blends.
+            let mut sim_rng = master.fork(sim as u64);
+            let draws: Vec<f64> = (0..nv).map(|l| layers[l + 1].draw(&mut sim_rng)).collect();
+            let mut jitter_rng = master.fork(0x4000_0000 + sim as u64);
+            let mut buf: Vec<u8> = Vec::with_capacity(dims.slice_points() * 4);
+            for z in 0..dims.nz {
+                let layer = spec.layer_of_slice(z);
+                let next = (layer + 1).min(nv - 1);
+                let (u, u_next) = (draws[layer], draws[next]);
+                buf.clear();
+                for p in profiles[layer].as_ref().expect("layer profile built") {
+                    let base = match p.kind {
+                        PointKind::Pure => p.gain * u,
+                        PointKind::Blend => p.gain * (p.alpha * u + (1.0 - p.alpha) * u_next),
+                        PointKind::Unique => {
+                            p.gain * u * (1.0 + spec.unique_noise * jitter_rng.std_normal())
+                        }
+                    };
+                    buf.extend_from_slice(&(base as f32).to_le_bytes());
+                }
+                w.write_all(&buf)?;
+            }
+            w.flush()?;
+            files.push(path);
+        }
+        let ds = SyntheticDataset {
+            spec: spec.clone(),
+            dir: dir.clone(),
+            files,
+        };
+        std::fs::write(dir.join("dataset.json"), ds.spec.to_json().to_string())?;
+        Ok(ds)
+    }
+
+    /// Open an existing dataset directory.
+    pub fn open(dir: impl AsRef<Path>) -> Result<SyntheticDataset> {
+        let dir = dir.as_ref().to_path_buf();
+        let meta = std::fs::read_to_string(dir.join("dataset.json"))?;
+        let spec = DatasetSpec::from_json(
+            &Json::parse(&meta).map_err(PdfflowError::Format)?,
+        )?;
+        let files: Vec<PathBuf> = (0..spec.n_sims)
+            .map(|k| dir.join(Self::file_name(k)))
+            .collect();
+        for f in &files {
+            if !f.exists() {
+                return Err(PdfflowError::Format(format!("missing {}", f.display())));
+            }
+        }
+        Ok(SyntheticDataset { spec, dir, files })
+    }
+
+    /// Total size on disk (all simulation files).
+    pub fn total_bytes(&self) -> u64 {
+        self.spec.n_sims as u64 * (HEADER_LEN + self.spec.dims.n_points() as u64 * 4)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("pdfflow-datagen-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn generate_and_reopen() {
+        let spec = DatasetSpec::tiny();
+        let dir = tmpdir("gen");
+        let ds = SyntheticDataset::generate(&spec, &dir).unwrap();
+        assert_eq!(ds.files.len(), spec.n_sims);
+        let size = std::fs::metadata(&ds.files[0]).unwrap().len();
+        assert_eq!(size, HEADER_LEN + spec.dims.n_points() as u64 * 4);
+        let re = SyntheticDataset::open(&dir).unwrap();
+        assert_eq!(re.spec.dims, spec.dims);
+        assert_eq!(re.files.len(), spec.n_sims);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let spec = DatasetSpec::tiny();
+        let (d1, d2) = (tmpdir("det1"), tmpdir("det2"));
+        SyntheticDataset::generate(&spec, &d1).unwrap();
+        SyntheticDataset::generate(&spec, &d2).unwrap();
+        let a = std::fs::read(d1.join(SyntheticDataset::file_name(3))).unwrap();
+        let b = std::fs::read(d2.join(SyntheticDataset::file_name(3))).unwrap();
+        assert_eq!(a, b);
+        std::fs::remove_dir_all(&d1).unwrap();
+        std::fs::remove_dir_all(&d2).unwrap();
+    }
+
+    #[test]
+    fn regenerate_is_noop_when_spec_matches() {
+        let spec = DatasetSpec::tiny();
+        let dir = tmpdir("noop");
+        SyntheticDataset::generate(&spec, &dir).unwrap();
+        let mtime = std::fs::metadata(dir.join(SyntheticDataset::file_name(0)))
+            .unwrap()
+            .modified()
+            .unwrap();
+        SyntheticDataset::generate(&spec, &dir).unwrap();
+        let mtime2 = std::fs::metadata(dir.join(SyntheticDataset::file_name(0)))
+            .unwrap()
+            .modified()
+            .unwrap();
+        assert_eq!(mtime, mtime2);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn layer_mapping_covers_all_layers() {
+        let spec = DatasetSpec::tiny();
+        let mut seen = std::collections::BTreeSet::new();
+        for z in 0..spec.dims.nz {
+            let l = spec.layer_of_slice(z);
+            assert!(l < spec.n_value_layers());
+            seen.insert(l);
+        }
+        assert!(seen.len() >= spec.dims.nz.min(spec.n_value_layers()) / 2);
+        assert_eq!(*seen.iter().next().unwrap(), 0);
+    }
+
+    #[test]
+    fn profiles_constant_across_sims_vary_across_points() {
+        let spec = DatasetSpec::tiny();
+        let p1 = spec.point_profile(3, 5, 2);
+        let p2 = spec.point_profile(3, 5, 2);
+        assert_eq!(p1.gain, p2.gain);
+        let kinds: std::collections::BTreeSet<_> = (0..spec.dims.ny)
+            .flat_map(|y| (0..spec.dims.nx).map(move |x| (x, y)))
+            .map(|(x, y)| format!("{:?}", spec.point_profile(x, y, 0).kind))
+            .collect();
+        assert!(kinds.len() >= 2, "expected kind diversity, got {kinds:?}");
+    }
+
+    #[test]
+    fn kind_fractions_roughly_match_spec() {
+        let spec = DatasetSpec::set1_analog();
+        let n = spec.dims.slice_points() as f64;
+        let mut blend = 0.0;
+        let mut unique = 0.0;
+        for y in 0..spec.dims.ny {
+            for x in 0..spec.dims.nx {
+                match spec.point_profile(x, y, 0).kind {
+                    PointKind::Blend => blend += 1.0,
+                    PointKind::Unique => unique += 1.0,
+                    PointKind::Pure => {}
+                }
+            }
+        }
+        assert!((blend / n - spec.blend_fraction).abs() < 0.03);
+        assert!((unique / n - spec.unique_fraction).abs() < 0.03);
+    }
+
+    #[test]
+    fn layer_draw_families_have_expected_support() {
+        let spec = DatasetSpec::tiny();
+        let layers = spec.layers();
+        let mut rng = Rng::new(1);
+        for l in &layers {
+            for _ in 0..200 {
+                let v = l.draw(&mut rng);
+                match l.family {
+                    DistType::Exponential | DistType::Lognormal => assert!(v >= 0.0),
+                    _ => {}
+                }
+                assert!(v.is_finite());
+            }
+        }
+    }
+
+    #[test]
+    fn true_family_follows_layer_cycle() {
+        let spec = DatasetSpec::tiny();
+        // Find a pure point on slice 0 (layer 0 -> layers()[1] family).
+        for y in 0..spec.dims.ny {
+            for x in 0..spec.dims.nx {
+                if spec.point_profile(x, y, 0).kind == PointKind::Pure {
+                    assert_eq!(
+                        spec.true_family(x, y, 0),
+                        Some(spec.layers()[1].family)
+                    );
+                    return;
+                }
+            }
+        }
+        panic!("no pure point found");
+    }
+}

@@ -1,0 +1,70 @@
+//! # pdfflow
+//!
+//! Parallel computation of Probability Density Functions (PDFs) on big
+//! spatial data — a Rust + JAX + Pallas reproduction of *Liu, Lemus,
+//! Pacitti, Porto, Valduriez: "Parallel Computation of PDFs on Big Spatial
+//! Data Using Spark"* (CS.DC 2018).
+//!
+//! The crate is the paper's **Layer-3 coordinator**: it owns the dataset
+//! generator (HPC4e seismic-benchmark analog), the NFS-style storage
+//! reader, a simulated shared-nothing Spark-like cluster, a mini-RDD
+//! dataflow layer, the decision-tree (MLlib analog), the sampling
+//! machinery, and the five PDF-computation methods of the paper
+//! (Baseline / Grouping / Reuse / ML / Sampling plus combinations).
+//!
+//! The numeric hot path — distribution fitting plus the Eq. 5 error for up
+//! to ten candidate types — is **not** written in Rust: it is a set of JAX
+//! graphs (with Pallas kernels at the innermost level) AOT-lowered to HLO
+//! text by `python/compile/aot.py` and executed through the PJRT CPU
+//! client by [`runtime`]. Python never runs on the request path.
+
+pub mod bench;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod cube;
+pub mod datagen;
+pub mod mltree;
+pub mod rdd;
+pub mod runtime;
+pub mod sampling;
+pub mod stats;
+pub mod storage;
+pub mod util;
+
+/// Convenience re-exports for examples and binaries.
+pub mod prelude {
+    pub use crate::cluster::{ClusterSpec, SimCluster};
+    pub use crate::config::ExperimentConfig;
+    pub use crate::coordinator::{Method, Pipeline, SliceReport, TypeSet};
+    pub use crate::cube::{CubeDims, PointId, Window};
+    pub use crate::datagen::SyntheticDataset;
+    pub use crate::mltree::DecisionTree;
+    pub use crate::runtime::Engine;
+    pub use crate::stats::DistType;
+}
+
+/// Typed error for module boundaries; binaries wrap it in `anyhow`.
+#[derive(Debug, thiserror::Error)]
+pub enum PdfflowError {
+    #[error("i/o error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("artifact error: {0}")]
+    Artifact(String),
+    #[error("xla/pjrt error: {0}")]
+    Xla(String),
+    #[error("config error: {0}")]
+    Config(String),
+    #[error("data format error: {0}")]
+    Format(String),
+    #[error("invalid argument: {0}")]
+    InvalidArg(String),
+}
+
+impl From<xla::Error> for PdfflowError {
+    fn from(e: xla::Error) -> Self {
+        PdfflowError::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, PdfflowError>;

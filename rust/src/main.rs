@@ -1,0 +1,383 @@
+//! pdfflow CLI — the leader entrypoint.
+//!
+//! ```text
+//! pdfflow generate  --preset set1 [--data-dir DIR]         generate a dataset
+//! pdfflow run       --preset set1 --method grouping+ml --types 10
+//!                   [--slice Z] [--lines N] [--window W] [--nodes N|--cluster lncc]
+//! pdfflow sample    --preset set1 --rate 0.1 [--sampler random|kmeans]
+//! pdfflow features  --preset set1 [--slice Z]              full-slice features
+//! pdfflow train-tree --preset set1 --types 4 [--tune] [--out tree.json]
+//! pdfflow tune-window --preset set1 [--sizes 2,4,8,16,25]  window-size sweep
+//! pdfflow qoi       --preset set1 [--lines N]             per-point QOI summary (paper §1)
+//! pdfflow figure    <fig06..fig20|treestats|all> [--full]  paper figures
+//! pdfflow artifacts-check                                   compile every artifact
+//! ```
+//!
+//! `--config FILE` loads a TOML experiment config instead of `--preset`.
+
+use anyhow::{anyhow, Context, Result};
+
+use pdfflow::bench::BenchEnv;
+use pdfflow::cluster::{ClusterSpec, SimCluster};
+use pdfflow::config::ExperimentConfig;
+use pdfflow::coordinator::sampling::{full_slice_features, run_sampling};
+use pdfflow::coordinator::{mlmodel, Method, Pipeline, Sampler, TypeSet};
+use pdfflow::datagen::SyntheticDataset;
+use pdfflow::runtime::Engine;
+use pdfflow::storage::{DatasetReader, WindowCache};
+use pdfflow::util::cli::Args;
+use pdfflow::util::timing::{fmt_bytes, fmt_secs};
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1), &["tune", "full", "verbose"]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn load_config(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = if let Some(path) = args.opt("config") {
+        ExperimentConfig::from_file(path).context("loading --config")?
+    } else {
+        ExperimentConfig::preset(&args.opt_or("preset", "small"))?
+    };
+    if let Some(d) = args.opt("data-dir") {
+        cfg.data_dir = d.to_string();
+    }
+    if let Some(a) = args.opt("artifacts") {
+        cfg.artifacts_dir = a.to_string();
+    }
+    cfg.slice = args.usize_or("slice", cfg.slice).map_err(|e| anyhow!(e))?;
+    cfg.pipeline.window_lines = args
+        .usize_or("window", cfg.pipeline.window_lines)
+        .map_err(|e| anyhow!(e))?;
+    match args.opt("cluster") {
+        Some("lncc") => cfg.cluster = ClusterSpec::lncc(),
+        Some("local") => cfg.cluster = ClusterSpec::local(4),
+        Some("g5k") | None => {
+            if let Some(n) = args.opt("nodes") {
+                cfg.cluster = ClusterSpec::g5k(n.parse().context("--nodes")?);
+            }
+        }
+        Some(other) => return Err(anyhow!("unknown --cluster {other:?}")),
+    }
+    Ok(cfg)
+}
+
+fn types_of(args: &Args) -> Result<TypeSet> {
+    match args.opt_or("types", "4").as_str() {
+        "4" => Ok(TypeSet::Four),
+        "10" => Ok(TypeSet::Ten),
+        other => Err(anyhow!("--types must be 4 or 10, got {other:?}")),
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("generate") => cmd_generate(args),
+        Some("run") => cmd_run(args),
+        Some("sample") => cmd_sample(args),
+        Some("features") => cmd_features(args),
+        Some("train-tree") => cmd_train_tree(args),
+        Some("tune-window") => cmd_tune_window(args),
+        Some("qoi") => cmd_qoi(args),
+        Some("figure") => cmd_figure(args),
+        Some("artifacts-check") => cmd_artifacts_check(args),
+        Some(other) => Err(anyhow!("unknown subcommand {other:?} (see --help in README)")),
+        None => {
+            println!("pdfflow — parallel computation of PDFs on big spatial data");
+            println!("subcommands: generate run sample features train-tree tune-window qoi figure artifacts-check");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let t0 = std::time::Instant::now();
+    let ds = SyntheticDataset::generate(&cfg.dataset, &cfg.data_dir)?;
+    println!(
+        "dataset {} at {}: {} files, {} ({} points x {} observations) in {}",
+        cfg.name,
+        cfg.data_dir,
+        ds.files.len(),
+        fmt_bytes(ds.total_bytes()),
+        ds.spec.dims.n_points(),
+        ds.spec.n_sims,
+        fmt_secs(t0.elapsed().as_secs_f64()),
+    );
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let method = Method::from_name(&args.opt_or("method", "baseline"))
+        .ok_or_else(|| anyhow!("unknown --method (one of: baseline grouping reuse ml grouping+ml reuse+ml)"))?;
+    let types = types_of(args)?;
+    let ds = SyntheticDataset::generate(&cfg.dataset, &cfg.data_dir)?;
+    let engine = Engine::load_default(&cfg.artifacts_dir)?;
+    let mut pipe = Pipeline::new(&ds, &engine, SimCluster::new(cfg.cluster.clone()), cfg.pipeline.clone());
+    if method.uses_ml() {
+        let err = pipe.ensure_tree(cfg.train_slice, types, 25_000)?;
+        println!("decision tree trained on slice {} (model error {err:.4})", cfg.train_slice);
+    }
+    let lines = args.usize_or("lines", 0).map_err(|e| anyhow!(e))?;
+    let r = if lines > 0 {
+        pipe.run_lines(method, cfg.slice, types, lines)?
+    } else {
+        pipe.run_slice(method, cfg.slice, types)?
+    };
+    println!("{}", r.row());
+    println!(
+        "slice {} ({} points, {} windows) on {} ({} nodes x {} cores)",
+        r.slice,
+        r.n_points,
+        r.windows.len(),
+        cfg.cluster.name,
+        cfg.cluster.nodes,
+        cfg.cluster.cores_per_node
+    );
+    if args.flag("verbose") {
+        for (k, v) in pipe.cluster.breakdown() {
+            println!("  sim {k:<14} {}", fmt_secs(v));
+        }
+    }
+    Ok(())
+}
+
+fn cmd_sample(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let rate = args.f64_or("rate", 0.1).map_err(|e| anyhow!(e))?;
+    let sampler = match args.opt_or("sampler", "random").as_str() {
+        "random" => Sampler::Random,
+        "kmeans" => Sampler::KMeans,
+        other => return Err(anyhow!("unknown --sampler {other:?}")),
+    };
+    let ds = SyntheticDataset::generate(&cfg.dataset, &cfg.data_dir)?;
+    let engine = Engine::load_default(&cfg.artifacts_dir)?;
+    let mut pipe = Pipeline::new(&ds, &engine, SimCluster::new(cfg.cluster.clone()), cfg.pipeline.clone());
+    pipe.ensure_tree(cfg.train_slice, TypeSet::Four, 25_000)?;
+    let tree = pipe.tree.clone().unwrap();
+    let reader = DatasetReader::new(&ds);
+    let cache = WindowCache::new(cfg.pipeline.cache_bytes);
+    let mut cluster = SimCluster::new(cfg.cluster.clone());
+    let rep = run_sampling(
+        &reader, &cache, &engine, &mut cluster, &tree, cfg.slice, rate, sampler, 42,
+    )?;
+    println!(
+        "sampling {} rate {}: {} points, load {} (sim {}), compute {} (sim {})",
+        sampler.name(),
+        rate,
+        rep.n_sampled,
+        fmt_secs(rep.load_real_s),
+        fmt_secs(rep.load_sim_s),
+        fmt_secs(rep.compute_real_s),
+        fmt_secs(rep.compute_sim_s),
+    );
+    print_features(&rep.features);
+    Ok(())
+}
+
+fn print_features(f: &pdfflow::sampling::SliceFeatures) {
+    println!("avg mean {:.3}  avg std {:.3}  ({} points)", f.avg_mean, f.avg_std, f.n_points);
+    for (i, pct) in f.type_percentages.iter().enumerate() {
+        if *pct > 0.0 {
+            println!(
+                "  {:<12} {:>6.2}%",
+                pdfflow::stats::DistType::from_id(i).unwrap().name(),
+                pct * 100.0
+            );
+        }
+    }
+}
+
+fn cmd_features(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let ds = SyntheticDataset::generate(&cfg.dataset, &cfg.data_dir)?;
+    let engine = Engine::load_default(&cfg.artifacts_dir)?;
+    let mut pipe = Pipeline::new(&ds, &engine, SimCluster::new(cfg.cluster.clone()), cfg.pipeline.clone());
+    pipe.ensure_tree(cfg.train_slice, TypeSet::Four, 25_000)?;
+    let tree = pipe.tree.clone().unwrap();
+    let reader = DatasetReader::new(&ds);
+    let cache = WindowCache::new(cfg.pipeline.cache_bytes);
+    let mut cluster = SimCluster::new(cfg.cluster.clone());
+    let f = full_slice_features(&reader, &cache, &engine, &mut cluster, &tree, cfg.slice)?;
+    println!("slice {} features:", cfg.slice);
+    print_features(&f);
+    Ok(())
+}
+
+fn cmd_train_tree(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let types = types_of(args)?;
+    let ds = SyntheticDataset::generate(&cfg.dataset, &cfg.data_dir)?;
+    let engine = Engine::load_default(&cfg.artifacts_dir)?;
+    let reader = DatasetReader::new(&ds);
+    let cache = WindowCache::new(cfg.pipeline.cache_bytes);
+    let mut cluster = SimCluster::new(cfg.cluster.clone());
+    let slices = mlmodel::training_slices(&ds.spec.dims, cfg.train_slice, ds.spec.n_value_layers());
+    let data = mlmodel::build_training_data(
+        &reader,
+        &cache,
+        &engine,
+        &mut cluster,
+        &ds.spec.dims,
+        &slices,
+        types,
+        25_000,
+        cfg.pipeline.window_lines,
+    )?;
+    println!(
+        "training data: {} samples from slice {} ({} generating the previous output)",
+        data.samples.len(),
+        cfg.train_slice,
+        fmt_secs(data.generation_real_s)
+    );
+    let params = if args.flag("tune") {
+        let (params, err, secs) = mlmodel::tune_hypers(&data, 42)?;
+        println!(
+            "tuned: depth={} maxBins={} (validation error {err:.4}, {})",
+            params.max_depth,
+            params.max_bins,
+            fmt_secs(secs)
+        );
+        params
+    } else {
+        Default::default()
+    };
+    let model = mlmodel::train_model(&data, params, 43)?;
+    println!(
+        "model error {:.4} (train {} / test {}, {} nodes, depth {}, trained in {})",
+        model.model_error,
+        model.n_train,
+        model.n_test,
+        model.tree.n_nodes(),
+        model.tree.depth(),
+        fmt_secs(model.train_real_s)
+    );
+    if let Some(path) = args.opt("out") {
+        std::fs::write(path, model.tree.to_json().to_string())?;
+        println!("tree written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_tune_window(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let ds = SyntheticDataset::generate(&cfg.dataset, &cfg.data_dir)?;
+    let engine = Engine::load_default(&cfg.artifacts_dir)?;
+    let sizes: Vec<usize> = args
+        .list_or("sizes", &["2", "4", "8", "16", "25"])
+        .iter()
+        .map(|s| s.parse().context("--sizes"))
+        .collect::<Result<_>>()?;
+    println!("{:<8} {:>16} {:>16}", "window", "fit/line(sim)", "fit/line(real)");
+    let mut best = (0usize, f64::INFINITY);
+    for w in sizes {
+        if 2 * w > ds.spec.dims.ny {
+            continue;
+        }
+        let mut pcfg = cfg.pipeline.clone();
+        pcfg.window_lines = w;
+        let mut pipe = Pipeline::new(&ds, &engine, SimCluster::new(cfg.cluster.clone()), pcfg);
+        let r = pipe.run_lines(Method::Grouping, cfg.slice, TypeSet::Four, 2 * w)?;
+        let per_line = r.fit_sim_s / (2 * w) as f64;
+        println!(
+            "{:<8} {:>16} {:>16}",
+            w,
+            fmt_secs(per_line),
+            fmt_secs(r.fit_real_s / (2 * w) as f64)
+        );
+        if per_line < best.1 {
+            best = (w, per_line);
+        }
+    }
+    println!("optimal window: {} lines ({} per line)", best.0, fmt_secs(best.1));
+    Ok(())
+}
+
+/// The paper's §1 deliverable: fit the best PDF per point, extract the
+/// maximum-possibility QOI value and the uncertainty summary.
+fn cmd_qoi(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let types = types_of(args)?;
+    let ds = SyntheticDataset::generate(&cfg.dataset, &cfg.data_dir)?;
+    let engine = Engine::load_default(&cfg.artifacts_dir)?;
+    let mut pipe = Pipeline::new(&ds, &engine, SimCluster::new(cfg.cluster.clone()), cfg.pipeline.clone());
+    pipe.ensure_tree(cfg.train_slice, types, 25_000)?;
+    let lines = args.usize_or("lines", 2).map_err(|e| anyhow!(e))?;
+    let r = pipe.run_lines(pdfflow::coordinator::Method::GroupingMl, cfg.slice, types, lines)?;
+    println!(
+        "slice {} ({} points, E={:.4}) — QOI summary of the first points:",
+        cfg.slice, r.n_points, r.avg_error
+    );
+    println!(
+        "{:<8} {:<12} {:>12} {:>12} {:>10}",
+        "point", "type", "qoi", "peak pdf", "fit err"
+    );
+    // Recompute the first window to pair outcomes with ids (run_lines
+    // aggregates; here we show the per-point view the paper motivates).
+    let w = r.windows[0].window;
+    let reader = DatasetReader::new(&ds);
+    let cache = WindowCache::new(cfg.pipeline.cache_bytes);
+    let mut cluster = SimCluster::new(cfg.cluster.clone());
+    let lw = pdfflow::coordinator::loader::load_window(&reader, &cache, &engine, &mut cluster, w)?;
+    let show = lw.n_points().min(12);
+    let out = engine.run_fit_all(
+        &lw.obs.data[..show * lw.obs.n_obs],
+        show,
+        lw.obs.n_obs,
+        types.n_types(),
+    )?;
+    for p in 0..out.n_rows {
+        let row = out.row(p);
+        let fit = pdfflow::stats::FitResult {
+            dist: pdfflow::stats::DistType::from_id(row[0] as usize).unwrap(),
+            params: [row[2] as f64, row[3] as f64, row[4] as f64],
+            error: row[1] as f64,
+        };
+        let q = pdfflow::stats::density::qoi(&fit);
+        println!(
+            "{:<8} {:<12} {:>12.2} {:>12.5} {:>10.4}",
+            lw.obs.point_ids[p].0, q.dist.name(), q.value, q.peak_density, q.fit_error
+        );
+    }
+    Ok(())
+}
+
+fn cmd_figure(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .ok_or_else(|| anyhow!("usage: pdfflow figure <fig06..fig20|treestats|all> [--full]"))?;
+    let full = args.flag("full") || std::env::var("PDFFLOW_BENCH_FULL").is_ok();
+    let env = BenchEnv::new(
+        &args.opt_or("artifacts", "artifacts"),
+        &args.opt_or("data-dir", "data"),
+        !full,
+    )?;
+    env.run(id)?;
+    Ok(())
+}
+
+fn cmd_artifacts_check(args: &Args) -> Result<()> {
+    let engine = Engine::load_default(args.opt_or("artifacts", "artifacts"))?;
+    println!("platform: {}", engine.platform());
+    let mut n = 0;
+    for info in engine.manifest.artifacts.clone() {
+        let t0 = std::time::Instant::now();
+        engine.warm(&info)?;
+        println!("  {:<40} compiled in {}", info.name, fmt_secs(t0.elapsed().as_secs_f64()));
+        n += 1;
+    }
+    println!("{n} artifacts compile cleanly");
+    Ok(())
+}

@@ -1,0 +1,486 @@
+//! CART decision tree — the Spark-MLlib analog (paper §5.3).
+//!
+//! The paper trains a decision tree on previously generated output (per
+//! point: mean, std → distribution type) and broadcasts it to the workers
+//! so the ML method fits only the predicted type. We implement the same
+//! model class MLlib uses: binary CART with gini impurity, quantile-based
+//! candidate thresholds capped at `max_bins` per feature (MLlib's
+//! `maxBins`), depth cap (`maxDepth`), and the paper's hyper-parameter
+//! tuning loop on a train/validation split (§5.3.1).
+
+pub mod forest;
+
+use crate::util::json::Json;
+use crate::util::prng::Rng;
+use crate::{PdfflowError, Result};
+
+/// Hyper-parameters (the paper tunes `depth` and `maxBins`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TreeParams {
+    pub max_depth: usize,
+    pub max_bins: usize,
+    /// Minimum samples to keep splitting (MLlib minInstancesPerNode).
+    pub min_leaf: usize,
+}
+
+impl Default for TreeParams {
+    fn default() -> Self {
+        TreeParams {
+            max_depth: 8,
+            max_bins: 32,
+            min_leaf: 4,
+        }
+    }
+}
+
+/// One labeled training example: feature vector → class id.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub features: Vec<f64>,
+    pub label: usize,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+enum Node {
+    Leaf {
+        class: usize,
+    },
+    Split {
+        feature: usize,
+        threshold: f64,
+        left: usize,
+        right: usize,
+    },
+}
+
+/// A trained decision tree.
+#[derive(Clone, Debug)]
+pub struct DecisionTree {
+    nodes: Vec<Node>,
+    pub n_features: usize,
+    pub n_classes: usize,
+    pub params: TreeParams,
+}
+
+fn gini(counts: &[usize], total: usize) -> f64 {
+    if total == 0 {
+        return 0.0;
+    }
+    let t = total as f64;
+    1.0 - counts
+        .iter()
+        .map(|&c| {
+            let p = c as f64 / t;
+            p * p
+        })
+        .sum::<f64>()
+}
+
+fn majority(counts: &[usize]) -> usize {
+    counts
+        .iter()
+        .enumerate()
+        .max_by_key(|(_, &c)| c)
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+impl DecisionTree {
+    /// Train on `samples` (all feature vectors must share a length).
+    pub fn train(samples: &[Sample], params: TreeParams) -> Result<DecisionTree> {
+        if samples.is_empty() {
+            return Err(PdfflowError::InvalidArg("empty training set".into()));
+        }
+        let n_features = samples[0].features.len();
+        if samples.iter().any(|s| s.features.len() != n_features) {
+            return Err(PdfflowError::InvalidArg("ragged feature vectors".into()));
+        }
+        let n_classes = samples.iter().map(|s| s.label).max().unwrap_or(0) + 1;
+        let mut tree = DecisionTree {
+            nodes: Vec::new(),
+            n_features,
+            n_classes,
+            params,
+        };
+        let idx: Vec<usize> = (0..samples.len()).collect();
+        tree.build(samples, idx, 0);
+        Ok(tree)
+    }
+
+    fn build(&mut self, samples: &[Sample], idx: Vec<usize>, depth: usize) -> usize {
+        let mut counts = vec![0usize; self.n_classes];
+        for &i in &idx {
+            counts[samples[i].label] += 1;
+        }
+        let node_impurity = gini(&counts, idx.len());
+        let make_leaf = depth >= self.params.max_depth
+            || idx.len() < self.params.min_leaf * 2
+            || node_impurity == 0.0;
+        if !make_leaf {
+            if let Some((feature, threshold)) = self.best_split(samples, &idx, node_impurity) {
+                let (l, r): (Vec<usize>, Vec<usize>) = idx
+                    .iter()
+                    .partition(|&&i| samples[i].features[feature] <= threshold);
+                if !l.is_empty() && !r.is_empty() {
+                    let slot = self.nodes.len();
+                    self.nodes.push(Node::Leaf { class: 0 }); // placeholder
+                    let left = self.build(samples, l, depth + 1);
+                    let right = self.build(samples, r, depth + 1);
+                    self.nodes[slot] = Node::Split {
+                        feature,
+                        threshold,
+                        left,
+                        right,
+                    };
+                    return slot;
+                }
+            }
+        }
+        let slot = self.nodes.len();
+        self.nodes.push(Node::Leaf {
+            class: majority(&counts),
+        });
+        slot
+    }
+
+    /// Best (feature, threshold) by gini gain over `max_bins` quantile
+    /// candidate thresholds per feature (MLlib binning).
+    fn best_split(
+        &self,
+        samples: &[Sample],
+        idx: &[usize],
+        node_impurity: f64,
+    ) -> Option<(usize, f64)> {
+        let n = idx.len();
+        let mut best: Option<(f64, usize, f64)> = None; // (gain, feature, thr)
+        for f in 0..self.n_features {
+            let mut vals: Vec<f64> = idx.iter().map(|&i| samples[i].features[f]).collect();
+            vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            vals.dedup();
+            if vals.len() < 2 {
+                continue;
+            }
+            let bins = self.params.max_bins.min(vals.len() - 1).max(1);
+            for b in 1..=bins {
+                let pos = b * (vals.len() - 1) / (bins + 1).max(1);
+                let pos = pos.min(vals.len() - 2);
+                let thr = 0.5 * (vals[pos] + vals[pos + 1]);
+                let mut lc = vec![0usize; self.n_classes];
+                let mut rc = vec![0usize; self.n_classes];
+                let (mut ln, mut rn) = (0usize, 0usize);
+                for &i in idx {
+                    if samples[i].features[f] <= thr {
+                        lc[samples[i].label] += 1;
+                        ln += 1;
+                    } else {
+                        rc[samples[i].label] += 1;
+                        rn += 1;
+                    }
+                }
+                if ln == 0 || rn == 0 {
+                    continue;
+                }
+                let gain = node_impurity
+                    - (ln as f64 / n as f64) * gini(&lc, ln)
+                    - (rn as f64 / n as f64) * gini(&rc, rn);
+                if best.map_or(true, |(g, _, _)| gain > g) {
+                    best = Some((gain, f, thr));
+                }
+            }
+        }
+        best.filter(|(g, _, _)| *g > 1e-12).map(|(_, f, t)| (f, t))
+    }
+
+    /// Predict the class of one feature vector.
+    pub fn predict(&self, features: &[f64]) -> usize {
+        let mut at = 0usize;
+        loop {
+            match &self.nodes[at] {
+                Node::Leaf { class } => return *class,
+                Node::Split {
+                    feature,
+                    threshold,
+                    left,
+                    right,
+                } => {
+                    at = if features[*feature] <= *threshold {
+                        *left
+                    } else {
+                        *right
+                    };
+                }
+            }
+        }
+    }
+
+    /// Wrong-prediction rate on a labeled set (the paper's "model error").
+    pub fn error_rate(&self, samples: &[Sample]) -> f64 {
+        if samples.is_empty() {
+            return 0.0;
+        }
+        let wrong = samples
+            .iter()
+            .filter(|s| self.predict(&s.features) != s.label)
+            .count();
+        wrong as f64 / samples.len() as f64
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn depth(&self) -> usize {
+        fn d(nodes: &[Node], at: usize) -> usize {
+            match &nodes[at] {
+                Node::Leaf { .. } => 0,
+                Node::Split { left, right, .. } => 1 + d(nodes, *left).max(d(nodes, *right)),
+            }
+        }
+        if self.nodes.is_empty() {
+            0
+        } else {
+            d(&self.nodes, 0)
+        }
+    }
+
+    /// Serialized size in bytes (for broadcast cost accounting).
+    pub fn broadcast_bytes(&self) -> u64 {
+        (self.nodes.len() * 32) as u64
+    }
+
+    pub fn to_json(&self) -> Json {
+        let nodes: Vec<Json> = self
+            .nodes
+            .iter()
+            .map(|n| match n {
+                Node::Leaf { class } => Json::obj(vec![("class", Json::Num(*class as f64))]),
+                Node::Split {
+                    feature,
+                    threshold,
+                    left,
+                    right,
+                } => Json::obj(vec![
+                    ("feature", Json::Num(*feature as f64)),
+                    ("threshold", Json::Num(*threshold)),
+                    ("left", Json::Num(*left as f64)),
+                    ("right", Json::Num(*right as f64)),
+                ]),
+            })
+            .collect();
+        Json::obj(vec![
+            ("n_features", Json::Num(self.n_features as f64)),
+            ("n_classes", Json::Num(self.n_classes as f64)),
+            ("max_depth", Json::Num(self.params.max_depth as f64)),
+            ("max_bins", Json::Num(self.params.max_bins as f64)),
+            ("min_leaf", Json::Num(self.params.min_leaf as f64)),
+            ("nodes", Json::Arr(nodes)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<DecisionTree> {
+        let num = |j: &Json, k: &str| -> Result<f64> {
+            j.get(k)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| PdfflowError::Format(format!("tree json missing {k}")))
+        };
+        let nodes_json = j
+            .get("nodes")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| PdfflowError::Format("tree json missing nodes".into()))?;
+        let mut nodes = Vec::with_capacity(nodes_json.len());
+        for nj in nodes_json {
+            if let Some(c) = nj.get("class") {
+                nodes.push(Node::Leaf {
+                    class: c.as_usize().unwrap_or(0),
+                });
+            } else {
+                nodes.push(Node::Split {
+                    feature: num(nj, "feature")? as usize,
+                    threshold: num(nj, "threshold")?,
+                    left: num(nj, "left")? as usize,
+                    right: num(nj, "right")? as usize,
+                });
+            }
+        }
+        Ok(DecisionTree {
+            nodes,
+            n_features: num(j, "n_features")? as usize,
+            n_classes: num(j, "n_classes")? as usize,
+            params: TreeParams {
+                max_depth: num(j, "max_depth")? as usize,
+                max_bins: num(j, "max_bins")? as usize,
+                min_leaf: num(j, "min_leaf")? as usize,
+            },
+        })
+    }
+}
+
+/// Hyper-parameter tuning (paper §5.3.1): random train/validation split,
+/// grid over (depth, maxBins), pick the smallest values whose validation
+/// error stops improving. Returns (params, validation error).
+pub fn tune(
+    samples: &[Sample],
+    depths: &[usize],
+    bins: &[usize],
+    seed: u64,
+) -> Result<(TreeParams, f64)> {
+    let mut idx: Vec<usize> = (0..samples.len()).collect();
+    let mut rng = Rng::new(seed);
+    rng.shuffle(&mut idx);
+    let split = (samples.len() * 7) / 10;
+    let train: Vec<Sample> = idx[..split].iter().map(|&i| samples[i].clone()).collect();
+    let valid: Vec<Sample> = idx[split..].iter().map(|&i| samples[i].clone()).collect();
+    let mut best: Option<(TreeParams, f64)> = None;
+    for &d in depths {
+        for &b in bins {
+            let params = TreeParams {
+                max_depth: d,
+                max_bins: b,
+                ..TreeParams::default()
+            };
+            let tree = DecisionTree::train(&train, params)?;
+            let err = tree.error_rate(&valid);
+            // Strict improvement required: prefers the smallest (d, b) at
+            // equal error, per the paper's choice rule.
+            if best.map_or(true, |(_, e)| err < e - 1e-9) {
+                best = Some((params, err));
+            }
+        }
+    }
+    best.ok_or_else(|| PdfflowError::InvalidArg("empty tuning grid".into()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Two well-separated classes in (mean, std) space.
+    fn blobs(n: usize, seed: u64) -> Vec<Sample> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|i| {
+                let label = i % 2;
+                let (cx, cy) = if label == 0 { (1.0, 1.0) } else { (5.0, 3.0) };
+                Sample {
+                    features: vec![rng.normal(cx, 0.3), rng.normal(cy, 0.3)],
+                    label,
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn separable_classes_are_learned() {
+        let data = blobs(400, 1);
+        let tree = DecisionTree::train(&data, TreeParams::default()).unwrap();
+        assert!(tree.error_rate(&data) < 0.02);
+        assert!(tree.depth() >= 1);
+    }
+
+    #[test]
+    fn generalizes_to_held_out() {
+        let tree = DecisionTree::train(&blobs(400, 2), TreeParams::default()).unwrap();
+        let test = blobs(200, 3);
+        assert!(tree.error_rate(&test) < 0.05);
+    }
+
+    #[test]
+    fn pure_training_set_yields_single_leaf() {
+        let data: Vec<Sample> = (0..50)
+            .map(|i| Sample {
+                features: vec![i as f64, 0.0],
+                label: 2,
+            })
+            .collect();
+        let tree = DecisionTree::train(&data, TreeParams::default()).unwrap();
+        assert_eq!(tree.n_nodes(), 1);
+        assert_eq!(tree.predict(&[17.0, 0.0]), 2);
+        assert_eq!(tree.error_rate(&data), 0.0);
+    }
+
+    #[test]
+    fn depth_cap_is_respected() {
+        let data = blobs(400, 4);
+        for cap in [1, 2, 3] {
+            let tree = DecisionTree::train(
+                &data,
+                TreeParams {
+                    max_depth: cap,
+                    ..TreeParams::default()
+                },
+            )
+            .unwrap();
+            assert!(tree.depth() <= cap, "depth {} > cap {cap}", tree.depth());
+        }
+    }
+
+    #[test]
+    fn four_class_problem() {
+        let mut rng = Rng::new(5);
+        let centers = [(0.0, 0.0), (4.0, 0.0), (0.0, 4.0), (4.0, 4.0)];
+        let data: Vec<Sample> = (0..800)
+            .map(|i| {
+                let label = i % 4;
+                let (cx, cy) = centers[label];
+                Sample {
+                    features: vec![rng.normal(cx, 0.4), rng.normal(cy, 0.4)],
+                    label,
+                }
+            })
+            .collect();
+        let tree = DecisionTree::train(&data, TreeParams::default()).unwrap();
+        assert!(tree.error_rate(&data) < 0.03);
+        assert_eq!(tree.n_classes, 4);
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(DecisionTree::train(&[], TreeParams::default()).is_err());
+        let ragged = vec![
+            Sample {
+                features: vec![1.0],
+                label: 0,
+            },
+            Sample {
+                features: vec![1.0, 2.0],
+                label: 1,
+            },
+        ];
+        assert!(DecisionTree::train(&ragged, TreeParams::default()).is_err());
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_predictions() {
+        let data = blobs(300, 6);
+        let tree = DecisionTree::train(&data, TreeParams::default()).unwrap();
+        let json = tree.to_json().to_string();
+        let back = DecisionTree::from_json(&Json::parse(&json).unwrap()).unwrap();
+        for s in &data {
+            assert_eq!(tree.predict(&s.features), back.predict(&s.features));
+        }
+        assert_eq!(back.n_classes, tree.n_classes);
+    }
+
+    #[test]
+    fn tuning_picks_a_working_config() {
+        let data = blobs(500, 7);
+        let (params, err) = tune(&data, &[1, 2, 4, 8], &[4, 16, 32], 42).unwrap();
+        assert!(err < 0.1, "tuned err {err}");
+        assert!(params.max_depth >= 1);
+    }
+
+    #[test]
+    fn max_bins_one_still_trains() {
+        let data = blobs(100, 8);
+        let tree = DecisionTree::train(
+            &data,
+            TreeParams {
+                max_bins: 1,
+                ..TreeParams::default()
+            },
+        )
+        .unwrap();
+        // Single candidate threshold per feature still separates blobs.
+        assert!(tree.error_rate(&data) < 0.2);
+    }
+}

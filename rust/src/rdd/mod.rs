@@ -1,0 +1,264 @@
+//! Mini-RDD: partitioned in-memory collections with the Spark operations
+//! the paper's pipeline uses (Map, aggregateByKey, Cache → here: owned
+//! partitions, broadcast) and shuffle-byte accounting wired into the
+//! simulated cluster.
+//!
+//! This is deliberately *not* a lazy DAG engine — the paper's pipeline is
+//! a straight line (load → group → fit → persist), so eager partitioned
+//! collections keep the dataflow vocabulary without Spark's machinery.
+
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::Arc;
+
+use crate::cluster::SimCluster;
+
+/// A partitioned collection. Partition `i` is conceptually resident on
+/// node `i % nodes`.
+#[derive(Clone, Debug)]
+pub struct Rdd<T> {
+    pub partitions: Vec<Vec<T>>,
+}
+
+impl<T> Rdd<T> {
+    /// Evenly distribute items over `n_partitions` (paper: "the
+    /// identifications of points are stored in an RDD, which is evenly
+    /// distributed on multiple cluster nodes").
+    pub fn from_vec(items: Vec<T>, n_partitions: usize) -> Rdd<T> {
+        let n_partitions = n_partitions.max(1);
+        let n = items.len();
+        let base = n / n_partitions;
+        let extra = n % n_partitions;
+        let mut partitions = Vec::with_capacity(n_partitions);
+        let mut it = items.into_iter();
+        for p in 0..n_partitions {
+            let take = base + usize::from(p < extra);
+            partitions.push(it.by_ref().take(take).collect());
+        }
+        Rdd { partitions }
+    }
+
+    pub fn n_partitions(&self) -> usize {
+        self.partitions.len()
+    }
+
+    pub fn n_items(&self) -> usize {
+        self.partitions.iter().map(|p| p.len()).sum()
+    }
+
+    /// Spark `map` (no shuffle).
+    pub fn map<U>(self, f: impl Fn(T) -> U) -> Rdd<U> {
+        Rdd {
+            partitions: self
+                .partitions
+                .into_iter()
+                .map(|p| p.into_iter().map(&f).collect())
+                .collect(),
+        }
+    }
+
+    /// Spark `mapPartitions` (no shuffle).
+    pub fn map_partitions<U>(self, f: impl Fn(Vec<T>) -> Vec<U>) -> Rdd<U> {
+        Rdd {
+            partitions: self.partitions.into_iter().map(f).collect(),
+        }
+    }
+
+    /// Spark `collect` action.
+    pub fn collect(self) -> Vec<T> {
+        self.partitions.into_iter().flatten().collect()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &T> {
+        self.partitions.iter().flatten()
+    }
+}
+
+fn key_partition<K: Hash>(k: &K, n: usize) -> usize {
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    k.hash(&mut h);
+    (h.finish() % n as u64) as usize
+}
+
+impl<K: Hash + Eq + Clone, V> Rdd<(K, V)> {
+    /// Spark `aggregateByKey` with map-side combine.
+    ///
+    /// * `create` makes a combiner from the first value of a key;
+    /// * `merge_value` folds another value into a combiner (map side);
+    /// * `merge_combiners` folds combiners from different partitions
+    ///   (reduce side, after the shuffle);
+    /// * `combiner_bytes` sizes a combiner for shuffle accounting — only
+    ///   combiners that change partition are charged to the cluster.
+    pub fn aggregate_by_key<C>(
+        self,
+        n_partitions: usize,
+        cluster: &mut SimCluster,
+        account: &str,
+        create: impl Fn(V) -> C,
+        merge_value: impl Fn(&mut C, V),
+        merge_combiners: impl Fn(&mut C, C),
+        combiner_bytes: impl Fn(&K, &C) -> u64,
+    ) -> (Rdd<(K, C)>, u64) {
+        let n_out = n_partitions.max(1);
+        // Map-side combine within each source partition.
+        let mut shuffled_bytes = 0u64;
+        let mut targets: Vec<HashMap<K, C>> = (0..n_out).map(|_| HashMap::new()).collect();
+        for (src_idx, part) in self.partitions.into_iter().enumerate() {
+            let mut local: HashMap<K, C> = HashMap::new();
+            for (k, v) in part {
+                match local.get_mut(&k) {
+                    Some(c) => merge_value(c, v),
+                    None => {
+                        local.insert(k, create(v));
+                    }
+                }
+            }
+            // Shuffle: each combiner travels to its hash partition.
+            for (k, c) in local {
+                let dst = key_partition(&k, n_out);
+                if dst != src_idx % n_out {
+                    shuffled_bytes += combiner_bytes(&k, &c);
+                }
+                match targets[dst].get_mut(&k) {
+                    Some(existing) => merge_combiners(existing, c),
+                    None => {
+                        targets[dst].insert(k, c);
+                    }
+                }
+            }
+        }
+        cluster.charge_shuffle(account, shuffled_bytes);
+        let rdd = Rdd {
+            partitions: targets
+                .into_iter()
+                .map(|m| m.into_iter().collect())
+                .collect(),
+        };
+        (rdd, shuffled_bytes)
+    }
+}
+
+/// Spark broadcast variable: one read-only copy per node (the paper
+/// broadcasts the decision-tree model, §5.3.1).
+#[derive(Clone, Debug)]
+pub struct Broadcast<T> {
+    value: Arc<T>,
+}
+
+impl<T> Broadcast<T> {
+    pub fn new(cluster: &mut SimCluster, account: &str, value: T, bytes: u64) -> Broadcast<T> {
+        cluster.charge_broadcast(account, bytes);
+        Broadcast {
+            value: Arc::new(value),
+        }
+    }
+
+    pub fn get(&self) -> &T {
+        &self.value
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+
+    #[test]
+    fn from_vec_distributes_evenly() {
+        let r = Rdd::from_vec((0..10).collect::<Vec<_>>(), 3);
+        let sizes: Vec<usize> = r.partitions.iter().map(|p| p.len()).collect();
+        assert_eq!(sizes, vec![4, 3, 3]);
+        assert_eq!(r.n_items(), 10);
+    }
+
+    #[test]
+    fn from_vec_more_partitions_than_items() {
+        let r = Rdd::from_vec(vec![1, 2], 5);
+        assert_eq!(r.n_partitions(), 5);
+        assert_eq!(r.n_items(), 2);
+    }
+
+    #[test]
+    fn map_preserves_partitioning() {
+        let r = Rdd::from_vec((0..10).collect::<Vec<_>>(), 3).map(|x| x * 2);
+        assert_eq!(r.n_partitions(), 3);
+        assert_eq!(r.collect(), (0..10).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn aggregate_by_key_groups_all_values() {
+        let items: Vec<(u32, u32)> = (0..100).map(|i| (i % 7, i)).collect();
+        let r = Rdd::from_vec(items, 4);
+        let mut cluster = SimCluster::new(ClusterSpec::lncc());
+        let (grouped, bytes) = r.aggregate_by_key(
+            4,
+            &mut cluster,
+            "shuffle",
+            |v| vec![v],
+            |c, v| c.push(v),
+            |c, mut o| c.append(&mut o),
+            |_k, c| (c.len() * 4) as u64,
+        );
+        let mut all: Vec<(u32, Vec<u32>)> = grouped.collect();
+        all.sort();
+        assert_eq!(all.len(), 7);
+        let total: usize = all.iter().map(|(_, v)| v.len()).sum();
+        assert_eq!(total, 100);
+        for (k, vs) in &all {
+            assert!(vs.iter().all(|v| v % 7 == *k));
+        }
+        assert!(bytes > 0);
+        assert!(cluster.account("shuffle") > 0.0);
+    }
+
+    #[test]
+    fn aggregate_by_key_same_key_lands_in_one_partition() {
+        let items: Vec<(u8, u8)> = (0..50).map(|i| (i % 5, i)).collect();
+        let mut cluster = SimCluster::new(ClusterSpec::lncc());
+        let (grouped, _) = Rdd::from_vec(items, 8).aggregate_by_key(
+            8,
+            &mut cluster,
+            "s",
+            |v| vec![v],
+            |c, v| c.push(v),
+            |c, mut o| c.append(&mut o),
+            |_, _| 1,
+        );
+        // No key may appear in two partitions.
+        let mut seen = std::collections::HashSet::new();
+        for part in &grouped.partitions {
+            let keys: std::collections::HashSet<u8> = part.iter().map(|(k, _)| *k).collect();
+            for k in keys {
+                assert!(seen.insert(k), "key {k} in two partitions");
+            }
+        }
+    }
+
+    #[test]
+    fn map_side_combine_reduces_shuffle() {
+        // All values share one key: combine collapses each partition to a
+        // single combiner before the shuffle.
+        let items: Vec<(u8, u64)> = (0..1000).map(|i| (0u8, i)).collect();
+        let mut cluster = SimCluster::new(ClusterSpec::lncc());
+        let (_, bytes) = Rdd::from_vec(items, 4).aggregate_by_key(
+            4,
+            &mut cluster,
+            "s",
+            |_v| 1u64,          // combiner = count
+            |c, _v| *c += 1,
+            |c, o| *c += o,
+            |_k, _c| 8,
+        );
+        // At most 4 combiners cross partitions (one per source partition),
+        // not 1000 values.
+        assert!(bytes <= 4 * 8, "bytes={bytes}");
+    }
+
+    #[test]
+    fn broadcast_provides_value_and_charges() {
+        let mut cluster = SimCluster::new(ClusterSpec::g5k(16));
+        let b = Broadcast::new(&mut cluster, "bcast", vec![1, 2, 3], 12);
+        assert_eq!(b.get(), &vec![1, 2, 3]);
+        assert!(cluster.account("bcast") > 0.0);
+    }
+}

@@ -1,0 +1,208 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime (names, shapes, kinds, type order, Eq.5 bin count).
+
+use std::path::{Path, PathBuf};
+
+use crate::stats::DistType;
+use crate::util::json::Json;
+use crate::{PdfflowError, Result};
+
+/// Kinds of AOT graphs (mirrors `model.GraphSpec.kind`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// `(B,N) -> (B,12)` point statistics.
+    Stats,
+    /// `(B,N) -> (B,4)` one-type fit: [err, p0, p1, p2].
+    FitSingle,
+    /// `(B,N) -> (B,5)` argmin fit: [type_id, err, p0, p1, p2].
+    FitAll,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Result<ArtifactKind> {
+        match s {
+            "stats" => Ok(ArtifactKind::Stats),
+            "fit_single" => Ok(ArtifactKind::FitSingle),
+            "fit_all" => Ok(ArtifactKind::FitAll),
+            other => Err(PdfflowError::Artifact(format!("unknown kind {other:?}"))),
+        }
+    }
+}
+
+/// One AOT-compiled graph on disk.
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: String,
+    pub kind: ArtifactKind,
+    /// Distribution type for FitSingle artifacts.
+    pub dist: Option<DistType>,
+    /// Candidate-set size for FitAll artifacts (4 or 10).
+    pub n_types: Option<usize>,
+    pub batch: usize,
+    pub obs: usize,
+    pub out_cols: usize,
+}
+
+/// Parsed `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub l_bins: usize,
+    pub penalty_error: f64,
+    pub stats_cols: Vec<String>,
+    pub artifacts: Vec<ArtifactInfo>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json")).map_err(|e| {
+            PdfflowError::Artifact(format!(
+                "cannot read {}/manifest.json (run `make artifacts`): {e}",
+                dir.display()
+            ))
+        })?;
+        let j = Json::parse(&text).map_err(PdfflowError::Artifact)?;
+        let arr = j
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| PdfflowError::Artifact("manifest missing artifacts".into()))?;
+        let mut artifacts = Vec::with_capacity(arr.len());
+        for a in arr {
+            let s = |k: &str| -> Result<String> {
+                a.get(k)
+                    .and_then(|v| v.as_str())
+                    .map(|s| s.to_string())
+                    .ok_or_else(|| PdfflowError::Artifact(format!("artifact missing {k}")))
+            };
+            let n = |k: &str| -> Result<usize> {
+                a.get(k)
+                    .and_then(|v| v.as_usize())
+                    .ok_or_else(|| PdfflowError::Artifact(format!("artifact missing {k}")))
+            };
+            let dist = match a.get("type") {
+                Some(Json::Str(name)) => Some(DistType::from_name(name).ok_or_else(|| {
+                    PdfflowError::Artifact(format!("unknown distribution {name:?}"))
+                })?),
+                _ => None,
+            };
+            let n_types = a.get("n_types").and_then(|v| v.as_usize());
+            artifacts.push(ArtifactInfo {
+                name: s("name")?,
+                file: s("file")?,
+                kind: ArtifactKind::parse(&s("kind")?)?,
+                dist,
+                n_types,
+                batch: n("batch")?,
+                obs: n("obs")?,
+                out_cols: n("out_cols")?,
+            });
+        }
+        // Validate the type order matches rust's canonical DistType order.
+        if let Some(types) = j.get("types").and_then(|t| t.as_arr()) {
+            for (i, t) in types.iter().enumerate() {
+                let name = t.as_str().unwrap_or("");
+                match DistType::from_id(i) {
+                    Some(d) if d.name() == name => {}
+                    _ => {
+                        return Err(PdfflowError::Artifact(format!(
+                            "type order mismatch at {i}: manifest {name:?}"
+                        )))
+                    }
+                }
+            }
+        }
+        Ok(Manifest {
+            dir,
+            l_bins: j.get("l_bins").and_then(|v| v.as_usize()).unwrap_or(32),
+            penalty_error: j
+                .get("penalty_error")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(2.0),
+            stats_cols: j
+                .get("stats_cols")
+                .and_then(|v| v.as_arr())
+                .map(|a| {
+                    a.iter()
+                        .filter_map(|s| s.as_str().map(|x| x.to_string()))
+                        .collect()
+                })
+                .unwrap_or_default(),
+            artifacts,
+        })
+    }
+
+    /// Artifacts of a kind for an observation count, any batch size.
+    pub fn find(
+        &self,
+        kind: ArtifactKind,
+        dist: Option<DistType>,
+        n_types: Option<usize>,
+        obs: usize,
+    ) -> Option<&ArtifactInfo> {
+        self.artifacts
+            .iter()
+            .filter(|a| {
+                a.kind == kind && a.obs == obs && a.dist == dist && a.n_types == n_types
+            })
+            .max_by_key(|a| a.batch)
+    }
+
+    /// Column index in the stats artifact output.
+    pub fn stats_col(&self, name: &str) -> Option<usize> {
+        self.stats_cols.iter().position(|c| c == name)
+    }
+
+    /// Observation counts covered by the artifact set.
+    pub fn obs_variants(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.artifacts.iter().map(|a| a.obs).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    pub fn path_of(&self, a: &ArtifactInfo) -> PathBuf {
+        self.dir.join(&a.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let m = Manifest::load(artifacts_dir()).expect("run `make artifacts` first");
+        assert_eq!(m.l_bins, 32);
+        assert!(m.artifacts.len() >= 13);
+        assert_eq!(m.stats_col("mean"), Some(0));
+        assert_eq!(m.stats_col("std"), Some(1));
+        assert!(m.obs_variants().contains(&100));
+    }
+
+    #[test]
+    fn find_resolves_each_kind() {
+        let m = Manifest::load(artifacts_dir()).unwrap();
+        let stats = m.find(ArtifactKind::Stats, None, None, 100).unwrap();
+        assert_eq!(stats.out_cols, 12);
+        let single = m
+            .find(ArtifactKind::FitSingle, Some(DistType::Gamma), None, 100)
+            .unwrap();
+        assert_eq!(single.out_cols, 4);
+        let all4 = m.find(ArtifactKind::FitAll, None, Some(4), 100).unwrap();
+        assert_eq!(all4.out_cols, 5);
+        assert!(m.find(ArtifactKind::FitAll, None, Some(7), 100).is_none());
+        assert!(m.find(ArtifactKind::Stats, None, None, 12345).is_none());
+    }
+
+    #[test]
+    fn missing_dir_is_actionable_error() {
+        let err = Manifest::load("/nonexistent-dir").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,250 @@
+//! Sampling method substrate (paper §5.4, Algorithm 5).
+//!
+//! Two ways to pick the "double sampled" points whose features stand in
+//! for the whole slice: plain random sampling and k-means clustering on
+//! (mean, std) with the nearest-to-centroid point per cluster. The slice
+//! features (avg mean, avg std, distribution-type percentages) and the
+//! Fig. 17 Euclidean distance metric live here too.
+
+use crate::stats::DistType;
+use crate::util::prng::Rng;
+
+/// Random sample of `rate * n` point indices (paper's chosen default).
+pub fn random_sample(rng: &mut Rng, n: usize, rate: f64) -> Vec<usize> {
+    let k = ((n as f64 * rate).round() as usize).clamp(1, n);
+    let mut idx = rng.sample_indices(n, k);
+    idx.sort_unstable();
+    idx
+}
+
+/// Lloyd k-means on feature rows; returns the index of the point nearest
+/// to each centroid (the paper's alternative "double sampling"). `k` is
+/// `rate * n` like random sampling.
+pub fn kmeans_sample(
+    rng: &mut Rng,
+    features: &[[f64; 2]],
+    rate: f64,
+    max_iters: usize,
+) -> Vec<usize> {
+    let n = features.len();
+    let k = ((n as f64 * rate).round() as usize).clamp(1, n);
+    if k >= n {
+        return (0..n).collect();
+    }
+    // k-means++ style seeding (first uniform, rest distance-weighted —
+    // simplified to uniform distinct seeds; fine for sampling purposes).
+    let seeds = rng.sample_indices(n, k);
+    let mut centroids: Vec<[f64; 2]> = seeds.iter().map(|&i| features[i]).collect();
+    let mut assign = vec![0usize; n];
+    for _ in 0..max_iters {
+        let mut moved = false;
+        for (i, f) in features.iter().enumerate() {
+            let best = nearest(&centroids, f);
+            if assign[i] != best {
+                assign[i] = best;
+                moved = true;
+            }
+        }
+        let mut sums = vec![[0.0f64; 2]; k];
+        let mut counts = vec![0usize; k];
+        for (i, f) in features.iter().enumerate() {
+            let c = assign[i];
+            sums[c][0] += f[0];
+            sums[c][1] += f[1];
+            counts[c] += 1;
+        }
+        for c in 0..k {
+            if counts[c] > 0 {
+                centroids[c] = [sums[c][0] / counts[c] as f64, sums[c][1] / counts[c] as f64];
+            }
+        }
+        if !moved {
+            break;
+        }
+    }
+    // Nearest point to each non-empty centroid.
+    let mut out: Vec<usize> = Vec::with_capacity(k);
+    for c in 0..k {
+        let mut best: Option<(f64, usize)> = None;
+        for (i, f) in features.iter().enumerate() {
+            if assign[i] != c {
+                continue;
+            }
+            let d = dist2(f, &centroids[c]);
+            if best.map_or(true, |(bd, _)| d < bd) {
+                best = Some((d, i));
+            }
+        }
+        if let Some((_, i)) = best {
+            out.push(i);
+        }
+    }
+    out.sort_unstable();
+    out.dedup();
+    out
+}
+
+fn dist2(a: &[f64; 2], b: &[f64; 2]) -> f64 {
+    let dx = a[0] - b[0];
+    let dy = a[1] - b[1];
+    dx * dx + dy * dy
+}
+
+fn nearest(centroids: &[[f64; 2]], f: &[f64; 2]) -> usize {
+    let mut best = 0;
+    let mut bd = f64::INFINITY;
+    for (c, cen) in centroids.iter().enumerate() {
+        let d = dist2(f, cen);
+        if d < bd {
+            bd = d;
+            best = c;
+        }
+    }
+    best
+}
+
+/// Slice features (paper §3): average mean, average std, percentage of
+/// points per distribution type.
+#[derive(Clone, Debug, Default)]
+pub struct SliceFeatures {
+    pub avg_mean: f64,
+    pub avg_std: f64,
+    pub type_percentages: [f64; 10],
+    pub n_points: usize,
+}
+
+impl SliceFeatures {
+    pub fn from_points(means: &[f64], stds: &[f64], types: &[DistType]) -> SliceFeatures {
+        let n = means.len();
+        assert_eq!(n, stds.len());
+        assert_eq!(n, types.len());
+        if n == 0 {
+            return SliceFeatures::default();
+        }
+        let mut pct = [0.0f64; 10];
+        for t in types {
+            pct[t.id()] += 1.0;
+        }
+        for p in pct.iter_mut() {
+            *p /= n as f64;
+        }
+        SliceFeatures {
+            avg_mean: means.iter().sum::<f64>() / n as f64,
+            avg_std: stds.iter().sum::<f64>() / n as f64,
+            type_percentages: pct,
+            n_points: n,
+        }
+    }
+
+    /// Fig. 17 metric: Euclidean distance between two type-percentage
+    /// vectors.
+    pub fn type_distance(&self, other: &SliceFeatures) -> f64 {
+        self.type_percentages
+            .iter()
+            .zip(other.type_percentages.iter())
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_sample_rate_and_bounds() {
+        let mut rng = Rng::new(1);
+        let s = random_sample(&mut rng, 1000, 0.1);
+        assert_eq!(s.len(), 100);
+        assert!(s.windows(2).all(|w| w[0] < w[1])); // sorted distinct
+        assert!(s.iter().all(|&i| i < 1000));
+    }
+
+    #[test]
+    fn random_sample_extreme_rates() {
+        let mut rng = Rng::new(2);
+        assert_eq!(random_sample(&mut rng, 50, 1.0).len(), 50);
+        assert_eq!(random_sample(&mut rng, 50, 0.0).len(), 1); // clamped min
+        assert_eq!(random_sample(&mut rng, 50, 2.0).len(), 50); // clamped max
+    }
+
+    #[test]
+    fn kmeans_centroid_points_cover_clusters() {
+        // Two tight blobs: sampled points must hit both.
+        let mut rng = Rng::new(3);
+        let mut features: Vec<[f64; 2]> = Vec::new();
+        for i in 0..200 {
+            let (cx, cy) = if i % 2 == 0 { (0.0, 0.0) } else { (10.0, 10.0) };
+            features.push([cx + rng.f64() * 0.1, cy + rng.f64() * 0.1]);
+        }
+        let picks = kmeans_sample(&mut rng, &features, 0.02, 20); // k = 4
+        assert!(!picks.is_empty() && picks.len() <= 4);
+        let has_low = picks.iter().any(|&i| features[i][0] < 1.0);
+        let has_high = picks.iter().any(|&i| features[i][0] > 9.0);
+        assert!(has_low && has_high, "picks {picks:?}");
+    }
+
+    #[test]
+    fn kmeans_rate_one_returns_everything() {
+        let mut rng = Rng::new(4);
+        let features = vec![[0.0, 0.0], [1.0, 1.0], [2.0, 2.0]];
+        let picks = kmeans_sample(&mut rng, &features, 1.0, 5);
+        assert_eq!(picks, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn kmeans_picks_are_valid_distinct_indices() {
+        let mut rng = Rng::new(5);
+        let features: Vec<[f64; 2]> = (0..300)
+            .map(|_| [rng.f64() * 5.0, rng.f64() * 5.0])
+            .collect();
+        let picks = kmeans_sample(&mut rng, &features, 0.1, 15);
+        let mut u = picks.clone();
+        u.dedup();
+        assert_eq!(u.len(), picks.len());
+        assert!(picks.iter().all(|&i| i < 300));
+        assert!(picks.len() <= 30);
+    }
+
+    #[test]
+    fn slice_features_percentages_sum_to_one() {
+        let means = vec![1.0, 2.0, 3.0, 4.0];
+        let stds = vec![0.1, 0.2, 0.3, 0.4];
+        let types = vec![
+            DistType::Normal,
+            DistType::Normal,
+            DistType::Uniform,
+            DistType::Weibull,
+        ];
+        let f = SliceFeatures::from_points(&means, &stds, &types);
+        assert!((f.avg_mean - 2.5).abs() < 1e-12);
+        assert!((f.avg_std - 0.25).abs() < 1e-12);
+        assert!((f.type_percentages.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!((f.type_percentages[DistType::Normal.id()] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn type_distance_zero_for_identical() {
+        let means = vec![1.0; 10];
+        let stds = vec![1.0; 10];
+        let types = vec![DistType::Gamma; 10];
+        let a = SliceFeatures::from_points(&means, &stds, &types);
+        let b = SliceFeatures::from_points(&means, &stds, &types);
+        assert_eq!(a.type_distance(&b), 0.0);
+    }
+
+    #[test]
+    fn type_distance_max_for_disjoint() {
+        let a = SliceFeatures::from_points(&[1.0], &[1.0], &[DistType::Normal]);
+        let b = SliceFeatures::from_points(&[1.0], &[1.0], &[DistType::Uniform]);
+        assert!((a.type_distance(&b) - 2f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_slice_features() {
+        let f = SliceFeatures::from_points(&[], &[], &[]);
+        assert_eq!(f.n_points, 0);
+        assert_eq!(f.avg_mean, 0.0);
+    }
+}

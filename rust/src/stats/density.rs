@@ -1,0 +1,249 @@
+//! PDF evaluation, modes and QOI extraction (paper §1).
+//!
+//! The paper's motivation for fitting PDFs at all: "once we have the PDF
+//! of a point, we can calculate the QOI value that has the highest
+//! possibility, with which we can compute the imprecision of each spatial
+//! data set". This module evaluates the fitted densities, extracts the
+//! mode (the maximum-likelihood QOI — e.g. 0 for an exponential PDF, the
+//! mean for a normal one, exactly the §1 discussion) and produces the
+//! per-point uncertainty summary the downstream geophysicist consumes.
+
+use crate::stats::special::gammaln;
+use crate::stats::{DistType, FitResult};
+
+const EPS: f64 = 1e-300;
+
+/// Probability density of a fitted type at x. Mirrors the CDFs in
+/// `stats::cdf` (same parametrization).
+pub fn pdf(t: DistType, p: &[f64; 3], x: f64) -> f64 {
+    match t {
+        DistType::Normal => {
+            let z = (x - p[0]) / p[1];
+            (-0.5 * z * z).exp() / (p[1] * (2.0 * std::f64::consts::PI).sqrt())
+        }
+        DistType::Uniform => {
+            if x >= p[0] && x <= p[1] {
+                1.0 / (p[1] - p[0]).max(EPS)
+            } else {
+                0.0
+            }
+        }
+        DistType::Exponential => {
+            if x < 0.0 {
+                0.0
+            } else {
+                p[0] * (-p[0] * x).exp()
+            }
+        }
+        DistType::Lognormal => {
+            if x <= 0.0 {
+                0.0
+            } else {
+                let z = (x.ln() - p[0]) / p[1];
+                (-0.5 * z * z).exp()
+                    / (x * p[1] * (2.0 * std::f64::consts::PI).sqrt())
+            }
+        }
+        DistType::Cauchy => {
+            let z = (x - p[0]) / p[1];
+            1.0 / (std::f64::consts::PI * p[1] * (1.0 + z * z))
+        }
+        DistType::Gamma => {
+            if x < 0.0 {
+                return 0.0;
+            }
+            let (k, theta) = (p[0], p[1]);
+            let lx = x.max(EPS);
+            ((k - 1.0) * lx.ln() - lx / theta - k * theta.ln() - gammaln(k)).exp()
+        }
+        DistType::Geometric => {
+            // Probability mass at floor(x) spread over the unit interval.
+            if x < 0.0 {
+                0.0
+            } else {
+                let prob = p[0].clamp(EPS, 1.0 - EPS);
+                let k = x.floor();
+                prob * (k * (1.0 - prob).ln()).exp()
+            }
+        }
+        DistType::Logistic => {
+            let z = (x - p[0]) / p[1];
+            let e = (-z).exp();
+            e / (p[1] * (1.0 + e) * (1.0 + e))
+        }
+        DistType::StudentT => {
+            let (loc, scale, nu) = (p[0], p[1], p[2]);
+            let z = (x - loc) / scale;
+            let ln_c = gammaln((nu + 1.0) / 2.0)
+                - gammaln(nu / 2.0)
+                - 0.5 * (nu * std::f64::consts::PI).ln()
+                - scale.ln();
+            (ln_c - (nu + 1.0) / 2.0 * (1.0 + z * z / nu).ln()).exp()
+        }
+        DistType::Weibull => {
+            if x < 0.0 {
+                return 0.0;
+            }
+            let (k, lam) = (p[0], p[1]);
+            let z = (x.max(EPS) / lam).powf(k);
+            (k / lam) * (x.max(EPS) / lam).powf(k - 1.0) * (-z).exp()
+        }
+    }
+}
+
+/// Mode of a fitted PDF — the paper's maximum-possibility QOI value
+/// (§1: "we should take the value zero as the QOI value" for an
+/// exponential PDF). Closed-form for every candidate type.
+pub fn mode(t: DistType, p: &[f64; 3]) -> f64 {
+    match t {
+        DistType::Normal | DistType::Cauchy | DistType::Logistic => p[0],
+        DistType::StudentT => p[0],
+        DistType::Uniform => 0.5 * (p[0] + p[1]), // any interior point; midpoint
+        DistType::Exponential => 0.0,
+        DistType::Geometric => 0.0,
+        DistType::Lognormal => (p[0] - p[1] * p[1]).exp(),
+        DistType::Gamma => {
+            let (k, theta) = (p[0], p[1]);
+            if k >= 1.0 {
+                (k - 1.0) * theta
+            } else {
+                0.0
+            }
+        }
+        DistType::Weibull => {
+            let (k, lam) = (p[0], p[1]);
+            if k > 1.0 {
+                lam * ((k - 1.0) / k).powf(1.0 / k)
+            } else {
+                0.0
+            }
+        }
+    }
+}
+
+/// Per-point uncertainty summary (the paper's §1 deliverable).
+#[derive(Clone, Copy, Debug)]
+pub struct Qoi {
+    pub dist: DistType,
+    /// Maximum-possibility value (PDF mode).
+    pub value: f64,
+    /// Density at the mode (peakedness; higher = more certain).
+    pub peak_density: f64,
+    /// Eq.5 fit error — how much to trust the PDF itself.
+    pub fit_error: f64,
+}
+
+/// Extract the QOI from a fit result.
+pub fn qoi(fit: &FitResult) -> Qoi {
+    let value = mode(fit.dist, &fit.params);
+    Qoi {
+        dist: fit.dist,
+        value,
+        peak_density: pdf(fit.dist, &fit.params, value),
+        fit_error: fit.error,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::{cdf, fit_params, fit_single, PointStats, DEFAULT_BINS};
+    use crate::util::prng::Rng;
+
+    fn params_for(t: DistType, data: &[f32]) -> [f64; 3] {
+        let s = PointStats::of(data);
+        fit_params(t, &s).0
+    }
+
+    #[test]
+    fn pdf_integrates_to_cdf_increments() {
+        // Trapezoid integral of pdf over [a, b] must match CDF(b)-CDF(a)
+        // for every continuous type.
+        let mut rng = Rng::new(1);
+        let data: Vec<f32> = (0..4000).map(|_| rng.gamma(3.0, 2.0) as f32).collect();
+        for &t in &DistType::ALL {
+            if t == DistType::Geometric {
+                continue; // discrete: density is a PMF spread, skip
+            }
+            let p = params_for(t, &data);
+            let (a, b) = (1.0f64, 9.0f64);
+            let n = 4000;
+            let mut integral = 0.0;
+            for i in 0..n {
+                let x0 = a + (b - a) * i as f64 / n as f64;
+                let x1 = a + (b - a) * (i + 1) as f64 / n as f64;
+                integral += 0.5 * (pdf(t, &p, x0) + pdf(t, &p, x1)) * (x1 - x0);
+            }
+            let want = cdf(t, &p, b) - cdf(t, &p, a);
+            assert!(
+                (integral - want).abs() < 5e-3,
+                "{t:?}: integral {integral} vs cdf diff {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn modes_are_argmax_of_pdf() {
+        let mut rng = Rng::new(2);
+        let data: Vec<f32> = (0..4000).map(|_| rng.gamma(4.0, 1.5) as f32).collect();
+        for &t in &DistType::ALL {
+            if matches!(t, DistType::Uniform | DistType::Geometric) {
+                continue; // flat / discrete
+            }
+            let p = params_for(t, &data);
+            let m = mode(t, &p);
+            let pm = pdf(t, &p, m);
+            // Sample the density widely; nothing may beat the mode by more
+            // than float slack.
+            for i in 0..200 {
+                let x = m - 10.0 + 0.1 * i as f64;
+                assert!(
+                    pdf(t, &p, x) <= pm + 1e-9,
+                    "{t:?}: pdf({x}) = {} > pdf(mode {m}) = {pm}",
+                    pdf(t, &p, x)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn exponential_qoi_is_zero() {
+        // The paper's §1 example: exponential data's most likely value is 0.
+        let mut rng = Rng::new(3);
+        let data: Vec<f32> = (0..2000).map(|_| rng.exponential(0.5) as f32).collect();
+        let fit = fit_single(&data, DistType::Exponential, DEFAULT_BINS);
+        let q = qoi(&fit);
+        assert_eq!(q.value, 0.0);
+        assert!(q.peak_density > 0.0);
+    }
+
+    #[test]
+    fn normal_qoi_is_mean() {
+        let mut rng = Rng::new(4);
+        let data: Vec<f32> = (0..2000).map(|_| rng.normal(7.0, 1.0) as f32).collect();
+        let fit = fit_single(&data, DistType::Normal, DEFAULT_BINS);
+        let q = qoi(&fit);
+        assert!((q.value - 7.0).abs() < 0.2, "mode {}", q.value);
+    }
+
+    #[test]
+    fn lognormal_mode_below_mean() {
+        let mut rng = Rng::new(5);
+        let data: Vec<f32> = (0..4000).map(|_| rng.lognormal(1.0, 0.6) as f32).collect();
+        let fit = fit_single(&data, DistType::Lognormal, DEFAULT_BINS);
+        let q = qoi(&fit);
+        let mean = PointStats::of(&data).mean;
+        assert!(q.value < mean, "mode {} !< mean {mean}", q.value);
+        assert!(q.value > 0.0);
+    }
+
+    #[test]
+    fn peak_density_reflects_certainty() {
+        let mut rng = Rng::new(6);
+        let tight: Vec<f32> = (0..2000).map(|_| rng.normal(5.0, 0.5) as f32).collect();
+        let wide: Vec<f32> = (0..2000).map(|_| rng.normal(5.0, 5.0) as f32).collect();
+        let qt = qoi(&fit_single(&tight, DistType::Normal, DEFAULT_BINS));
+        let qw = qoi(&fit_single(&wide, DistType::Normal, DEFAULT_BINS));
+        assert!(qt.peak_density > 5.0 * qw.peak_density);
+    }
+}

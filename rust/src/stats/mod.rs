@@ -1,0 +1,484 @@
+//! Pure-rust statistics oracle: moments, histograms, the ten candidate
+//! distribution fitters and the Eq. 5 error.
+//!
+//! This module mirrors `python/compile/distfit.py` exactly (same
+//! estimators, same guards, same penalty). It serves three purposes:
+//!
+//! 1. **cross-check** — integration tests compare the PJRT-executed HLO
+//!    artifacts against this implementation;
+//! 2. **R-program substitute** — the paper calls an external R process to
+//!    fit PDFs; the in-process oracle is our CPU fallback and is used by
+//!    the benches' "external program" ablation;
+//! 3. **feature extraction** — sampling and the decision tree consume the
+//!    same `PointStats` this module computes.
+
+pub mod density;
+pub mod special;
+
+use special::{betainc, erf, gammainc_p, gammaln};
+
+/// Canonical type order — MUST match `distfit.TYPES` (the type id is the
+/// decision-tree label and the `fit_all` output code).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum DistType {
+    Normal = 0,
+    Uniform = 1,
+    Exponential = 2,
+    Lognormal = 3,
+    Cauchy = 4,
+    Gamma = 5,
+    Geometric = 6,
+    Logistic = 7,
+    StudentT = 8,
+    Weibull = 9,
+}
+
+impl DistType {
+    pub const ALL: [DistType; 10] = [
+        DistType::Normal,
+        DistType::Uniform,
+        DistType::Exponential,
+        DistType::Lognormal,
+        DistType::Cauchy,
+        DistType::Gamma,
+        DistType::Geometric,
+        DistType::Logistic,
+        DistType::StudentT,
+        DistType::Weibull,
+    ];
+
+    /// The paper's 4-types candidate set (input-parameter families).
+    pub const FOUR: [DistType; 4] = [
+        DistType::Normal,
+        DistType::Uniform,
+        DistType::Exponential,
+        DistType::Lognormal,
+    ];
+
+    pub fn from_id(id: usize) -> Option<DistType> {
+        Self::ALL.get(id).copied()
+    }
+
+    pub fn id(self) -> usize {
+        self as usize
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DistType::Normal => "normal",
+            DistType::Uniform => "uniform",
+            DistType::Exponential => "exponential",
+            DistType::Lognormal => "lognormal",
+            DistType::Cauchy => "cauchy",
+            DistType::Gamma => "gamma",
+            DistType::Geometric => "geometric",
+            DistType::Logistic => "logistic",
+            DistType::StudentT => "student_t",
+            DistType::Weibull => "weibull",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<DistType> {
+        Self::ALL.iter().copied().find(|t| t.name() == name)
+    }
+}
+
+/// Maximum possible Eq. 5 error; also the unsupported-type penalty.
+pub const PENALTY_ERROR: f64 = 2.0;
+/// Eq. 5 interval count (matches `distfit.DEFAULT_BINS`).
+pub const DEFAULT_BINS: usize = 32;
+
+const EPS: f64 = 1e-12;
+
+/// Per-point statistics (the paper's "features": Algorithm 2 computes
+/// mean/std at load time; the rest feed the estimators).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PointStats {
+    pub mean: f64,
+    pub std: f64,
+    pub var: f64,
+    pub min: f64,
+    pub max: f64,
+    pub skew: f64,
+    pub kurt_ex: f64,
+    pub meanlog: f64,
+    pub stdlog: f64,
+    pub q25: f64,
+    pub q50: f64,
+    pub q75: f64,
+    pub pos_frac: f64,
+}
+
+impl PointStats {
+    /// Compute from one observation vector.
+    pub fn of(v: &[f32]) -> PointStats {
+        let n = v.len();
+        assert!(n >= 2, "need at least 2 observations");
+        let nf = n as f64;
+        let (mut s1, mut s2, mut s3, mut s4) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+        let (mut mn, mut mx) = (f64::INFINITY, f64::NEG_INFINITY);
+        let (mut sl, mut sl2) = (0.0f64, 0.0f64);
+        let mut npos = 0usize;
+        for &x in v {
+            let x = x as f64;
+            let x2 = x * x;
+            s1 += x;
+            s2 += x2;
+            s3 += x2 * x;
+            s4 += x2 * x2;
+            mn = mn.min(x);
+            mx = mx.max(x);
+            if x > 0.0 {
+                let lx = x.ln();
+                sl += lx;
+                sl2 += lx * lx;
+                npos += 1;
+            }
+        }
+        let m1 = s1 / nf;
+        let m2 = (s2 / nf - m1 * m1).max(0.0);
+        let m3 = s3 / nf - 3.0 * m1 * s2 / nf + 2.0 * m1.powi(3);
+        let m4 = s4 / nf - 4.0 * m1 * s3 / nf + 6.0 * m1 * m1 * s2 / nf - 3.0 * m1.powi(4);
+        let var = m2 * nf / (nf - 1.0);
+        let m2s = m2.max(EPS);
+        let meanlog = sl / nf;
+        let stdlog = (sl2 / nf - meanlog * meanlog).max(0.0).sqrt();
+        // Quantiles via the same strided-subsample estimator the AOT
+        // graphs use (distfit.QUANTILE_SUBSAMPLE = 256): observations are
+        // i.i.d. across simulations, so the stride is a uniform subsample.
+        let stride = n.div_ceil(256);
+        let mut sorted: Vec<f32> = v.iter().copied().step_by(stride).collect();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let m = sorted.len();
+        let pct = |q: f64| -> f64 {
+            let pos = q * (m - 1) as f64;
+            let lo = pos.floor() as usize;
+            let hi = pos.ceil() as usize;
+            let frac = pos - lo as f64;
+            sorted[lo] as f64 * (1.0 - frac) + sorted[hi] as f64 * frac
+        };
+        PointStats {
+            mean: m1,
+            std: var.sqrt(),
+            var,
+            min: mn,
+            max: mx,
+            skew: m3 / m2s.powf(1.5),
+            kurt_ex: m4 / (m2s * m2s) - 3.0,
+            meanlog,
+            stdlog,
+            q25: pct(0.25),
+            q50: pct(0.50),
+            q75: pct(0.75),
+            pos_frac: npos as f64 / nf,
+        }
+    }
+}
+
+/// A fitted PDF: type, parameters, Eq. 5 error.
+#[derive(Clone, Copy, Debug)]
+pub struct FitResult {
+    pub dist: DistType,
+    pub params: [f64; 3],
+    pub error: f64,
+}
+
+/// Equal-width histogram between min and max (Eq. 5's Freq_k).
+pub fn histogram(v: &[f32], mn: f64, mx: f64, bins: usize) -> Vec<f64> {
+    let mut h = vec![0.0; bins];
+    let rng = (mx - mn).max(1e-30);
+    for &x in v {
+        let idx = (((x as f64 - mn) / rng) * bins as f64).floor();
+        let idx = (idx.max(0.0) as usize).min(bins - 1);
+        h[idx] += 1.0;
+    }
+    h
+}
+
+/// Fit one type: (params, supported). Mirrors `distfit._FITTERS`.
+pub fn fit_params(t: DistType, s: &PointStats) -> ([f64; 3], bool) {
+    match t {
+        DistType::Normal => ([s.mean, s.std.max(EPS), 0.0], true),
+        DistType::Uniform => ([s.min, s.max, 0.0], true),
+        DistType::Exponential => ([1.0 / s.mean.max(EPS), 0.0, 0.0], s.min >= 0.0),
+        DistType::Lognormal => ([s.meanlog, s.stdlog.max(EPS), 0.0], s.min > 0.0),
+        DistType::Cauchy => ([s.q50, ((s.q75 - s.q25) * 0.5).max(EPS), 0.0], true),
+        DistType::Gamma => {
+            let var = s.var.max(EPS);
+            let mean = s.mean.max(EPS);
+            let k = (mean * mean / var).clamp(1e-3, 1e6);
+            ([k, (var / mean).max(EPS), 0.0], s.min >= 0.0 && s.mean > 0.0)
+        }
+        DistType::Geometric => ([1.0 / (1.0 + s.mean).max(1.0 + EPS), 0.0, 0.0], s.min >= 0.0),
+        DistType::Logistic => (
+            [s.mean, (s.std * 3f64.sqrt() / std::f64::consts::PI).max(EPS), 0.0],
+            true,
+        ),
+        DistType::StudentT => {
+            let nu = (4.0 + 6.0 / s.kurt_ex.max(0.03)).clamp(2.1, 200.0);
+            let scale = (s.var * (nu - 2.0) / nu).max(EPS).sqrt();
+            ([s.mean, scale, nu], true)
+        }
+        DistType::Weibull => {
+            let mean = s.mean.max(EPS);
+            let cv = s.std.max(EPS) / mean;
+            let k = cv.powf(-1.086).clamp(0.05, 50.0);
+            let lam = mean / (gammaln(1.0 + 1.0 / k)).exp();
+            ([k, lam.max(EPS), 0.0], s.min >= 0.0)
+        }
+    }
+}
+
+/// CDF of a fitted type at x. Mirrors the python `_cdf_*` functions.
+pub fn cdf(t: DistType, p: &[f64; 3], x: f64) -> f64 {
+    match t {
+        DistType::Normal => 0.5 * (1.0 + erf((x - p[0]) / (p[1] * 2f64.sqrt() + EPS))),
+        DistType::Uniform => ((x - p[0]) / (p[1] - p[0]).max(EPS)).clamp(0.0, 1.0),
+        DistType::Exponential => {
+            if x < 0.0 {
+                0.0
+            } else {
+                1.0 - (-p[0] * x).exp()
+            }
+        }
+        DistType::Lognormal => {
+            if x <= 0.0 {
+                0.0
+            } else {
+                0.5 * (1.0 + erf((x.max(EPS).ln() - p[0]) / (p[1] * 2f64.sqrt() + EPS)))
+            }
+        }
+        DistType::Cauchy => ((x - p[0]) / p[1]).atan() / std::f64::consts::PI + 0.5,
+        DistType::Gamma => gammainc_p(p[0], x.max(0.0) / p[1]),
+        DistType::Geometric => {
+            if x < 0.0 {
+                0.0
+            } else {
+                let prob = p[0].clamp(EPS, 1.0 - EPS);
+                1.0 - ((x.max(-1.0).floor() + 1.0) * (1.0 - prob).ln()).exp()
+            }
+        }
+        DistType::Logistic => 1.0 / (1.0 + (-(x - p[0]) / p[1]).exp()),
+        DistType::StudentT => {
+            let z = (x - p[0]) / p[1];
+            let nu = p[2];
+            let w = nu / (nu + z * z);
+            let tail = 0.5 * betainc(nu * 0.5, 0.5, w);
+            if z < 0.0 {
+                tail
+            } else {
+                1.0 - tail
+            }
+        }
+        DistType::Weibull => 1.0 - (-(x.max(0.0) / p[1]).powf(p[0])).exp(),
+    }
+}
+
+/// Eq. 5: histogram-vs-CDF discrepancy over `bins` equal intervals.
+pub fn eq5_error(t: DistType, p: &[f64; 3], hist: &[f64], mn: f64, mx: f64, n_obs: usize) -> f64 {
+    let bins = hist.len();
+    let mut err = 0.0;
+    let mut prev = cdf(t, p, mn);
+    for (k, h) in hist.iter().enumerate() {
+        let edge = mn + (mx - mn) * (k + 1) as f64 / bins as f64;
+        let cur = cdf(t, p, edge);
+        err += (h / n_obs as f64 - (cur - prev)).abs();
+        prev = cur;
+    }
+    err
+}
+
+/// Fit one type on an observation vector (Algorithm 3 body for one type).
+pub fn fit_single(v: &[f32], t: DistType, bins: usize) -> FitResult {
+    let s = PointStats::of(v);
+    fit_single_with_stats(v, &s, t, bins)
+}
+
+/// Same but with precomputed stats (avoids recomputing shared moments).
+pub fn fit_single_with_stats(v: &[f32], s: &PointStats, t: DistType, bins: usize) -> FitResult {
+    let (params, supported) = fit_params(t, s);
+    if !supported {
+        return FitResult {
+            dist: t,
+            params,
+            error: PENALTY_ERROR,
+        };
+    }
+    let hist = histogram(v, s.min, s.max, bins);
+    FitResult {
+        dist: t,
+        params,
+        error: eq5_error(t, &params, &hist, s.min, s.max, v.len()),
+    }
+}
+
+/// Algorithm 3: fit every candidate type, keep the minimum-error PDF.
+pub fn fit_best(v: &[f32], candidates: &[DistType], bins: usize) -> FitResult {
+    let s = PointStats::of(v);
+    let hist = histogram(v, s.min, s.max, bins);
+    let mut best: Option<FitResult> = None;
+    for &t in candidates {
+        let (params, supported) = fit_params(t, &s);
+        let error = if supported {
+            eq5_error(t, &params, &hist, s.min, s.max, v.len())
+        } else {
+            PENALTY_ERROR
+        };
+        let r = FitResult {
+            dist: t,
+            params,
+            error,
+        };
+        if best.map_or(true, |b| r.error < b.error) {
+            best = Some(r);
+        }
+    }
+    best.expect("non-empty candidate set")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn draws(f: impl Fn(&mut Rng) -> f64, n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| f(&mut rng) as f32).collect()
+    }
+
+    #[test]
+    fn point_stats_basics() {
+        let v: Vec<f32> = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        let s = PointStats::of(&v);
+        assert!((s.mean - 3.0).abs() < 1e-6);
+        assert!((s.std - 1.5811388).abs() < 1e-5);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.q50 - 3.0).abs() < 1e-6);
+        assert_eq!(s.pos_frac, 1.0);
+    }
+
+    #[test]
+    fn histogram_total_and_edges() {
+        let v: Vec<f32> = vec![0.0, 0.1, 0.5, 0.99, 1.0];
+        let h = histogram(&v, 0.0, 1.0, 4);
+        assert_eq!(h.iter().sum::<f64>(), 5.0);
+        assert_eq!(h[3], 2.0); // 0.99 and the max fall into the last bin
+    }
+
+    #[test]
+    fn normal_fit_recovers_params() {
+        let v = draws(|r| r.normal(10.0, 3.0), 4000, 1);
+        let f = fit_single(&v, DistType::Normal, DEFAULT_BINS);
+        assert!((f.params[0] - 10.0).abs() < 0.2, "{:?}", f.params);
+        assert!((f.params[1] - 3.0).abs() < 0.2);
+        assert!(f.error < 0.2, "error {}", f.error);
+    }
+
+    #[test]
+    fn each_family_wins_its_own_data_10types() {
+        // On clean big samples, the generating family should win (or tie
+        // against a nesting family) in fit_best over all 10 types.
+        let cases: Vec<(DistType, Vec<f32>)> = vec![
+            (DistType::Uniform, draws(|r| r.uniform(2.0, 8.0), 4000, 2)),
+            (DistType::Exponential, draws(|r| r.exponential(0.5), 4000, 3)),
+            (DistType::Lognormal, draws(|r| r.lognormal(1.0, 0.6), 4000, 4)),
+            (DistType::Gamma, draws(|r| r.gamma(3.0, 2.0), 4000, 6)),
+        ];
+        for (want, v) in cases {
+            let best = fit_best(&v, &DistType::ALL, DEFAULT_BINS);
+            let own = fit_single(&v, want, DEFAULT_BINS);
+            // The winner must not beat the true family by much.
+            assert!(
+                own.error <= best.error + 0.05,
+                "{want:?}: own {} vs best {:?} {}",
+                own.error,
+                best.dist,
+                best.error
+            );
+        }
+    }
+
+    #[test]
+    fn fit_best_is_min_over_singles() {
+        let v = draws(|r| r.gamma(2.0, 1.5), 2000, 7);
+        let best = fit_best(&v, &DistType::ALL, DEFAULT_BINS);
+        for &t in &DistType::ALL {
+            let f = fit_single(&v, t, DEFAULT_BINS);
+            assert!(best.error <= f.error + 1e-12, "{t:?}");
+        }
+    }
+
+    #[test]
+    fn support_guards_penalize() {
+        let v = draws(|r| r.normal(-50.0, 1.0), 500, 8);
+        for t in [
+            DistType::Exponential,
+            DistType::Lognormal,
+            DistType::Gamma,
+            DistType::Geometric,
+            DistType::Weibull,
+        ] {
+            assert_eq!(fit_single(&v, t, DEFAULT_BINS).error, PENALTY_ERROR, "{t:?}");
+        }
+        // But normal/logistic/cauchy/student/uniform still fit.
+        assert!(fit_single(&v, DistType::Normal, DEFAULT_BINS).error < 0.5);
+    }
+
+    #[test]
+    fn errors_bounded() {
+        let v = draws(|r| r.std_normal(), 300, 9);
+        for &t in &DistType::ALL {
+            let e = fit_single(&v, t, DEFAULT_BINS).error;
+            assert!((0.0..=PENALTY_ERROR).contains(&e), "{t:?} -> {e}");
+        }
+    }
+
+    #[test]
+    fn cdfs_are_monotone_and_bounded() {
+        let v = draws(|r| r.gamma(2.0, 2.0), 1000, 10);
+        let s = PointStats::of(&v);
+        for &t in &DistType::ALL {
+            let (p, ok) = fit_params(t, &s);
+            if !ok {
+                continue;
+            }
+            let mut prev = -1e-9;
+            for i in 0..=50 {
+                let x = s.min + (s.max - s.min) * i as f64 / 50.0;
+                let c = cdf(t, &p, x);
+                assert!((0.0..=1.0 + 1e-9).contains(&c), "{t:?} cdf({x})={c}");
+                assert!(c >= prev - 1e-9, "{t:?} not monotone at {x}");
+                prev = c;
+            }
+        }
+    }
+
+    #[test]
+    fn ten_types_never_worse_than_four() {
+        let v = draws(|r| r.student_t(5.0), 2000, 11);
+        let e4 = fit_best(&v, &DistType::FOUR, DEFAULT_BINS).error;
+        let e10 = fit_best(&v, &DistType::ALL, DEFAULT_BINS).error;
+        assert!(e10 <= e4 + 1e-12);
+    }
+
+    #[test]
+    fn type_ids_match_canonical_order() {
+        assert_eq!(DistType::Normal.id(), 0);
+        assert_eq!(DistType::Weibull.id(), 9);
+        for (i, t) in DistType::ALL.iter().enumerate() {
+            assert_eq!(t.id(), i);
+            assert_eq!(DistType::from_id(i), Some(*t));
+            assert_eq!(DistType::from_name(t.name()), Some(*t));
+        }
+        assert_eq!(DistType::from_id(10), None);
+        assert_eq!(DistType::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn geometric_on_integer_data() {
+        let v = draws(|r| r.geometric(0.4), 3000, 12);
+        let f = fit_single(&v, DistType::Geometric, DEFAULT_BINS);
+        assert!((f.params[0] - 0.4).abs() < 0.05, "{:?}", f.params);
+    }
+}

@@ -1,0 +1,186 @@
+//! In-memory window cache (paper §4.3.1 data caching).
+//!
+//! The paper caches instruction data and intermediate data in memory (RDD
+//! `Cache` + a tmpfs for external-program output) and never caches the
+//! big input data. Our analog: loaded windows (the intermediate
+//! observation matrices) are cached up to a byte budget with LRU
+//! eviction; dataset files themselves are always streamed from "NFS".
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::cube::Window;
+use crate::storage::ObsMatrix;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+struct Key {
+    z: usize,
+    y0: usize,
+    lines: usize,
+}
+
+impl From<&Window> for Key {
+    fn from(w: &Window) -> Key {
+        Key {
+            z: w.z,
+            y0: w.y0,
+            lines: w.lines,
+        }
+    }
+}
+
+/// LRU cache of loaded windows with a byte budget.
+pub struct WindowCache {
+    inner: Mutex<Inner>,
+    capacity_bytes: u64,
+}
+
+struct Inner {
+    map: HashMap<Key, (u64, Arc<ObsMatrix>)>, // key -> (stamp, matrix)
+    clock: u64,
+    bytes: u64,
+    hits: u64,
+    misses: u64,
+}
+
+impl WindowCache {
+    pub fn new(capacity_bytes: u64) -> Self {
+        WindowCache {
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                clock: 0,
+                bytes: 0,
+                hits: 0,
+                misses: 0,
+            }),
+            capacity_bytes,
+        }
+    }
+
+    pub fn get(&self, w: &Window) -> Option<Arc<ObsMatrix>> {
+        let mut g = self.inner.lock().unwrap();
+        g.clock += 1;
+        let clock = g.clock;
+        let found = g.map.get_mut(&Key::from(w)).map(|(stamp, m)| {
+            *stamp = clock;
+            Arc::clone(m)
+        });
+        match found {
+            Some(m) => {
+                g.hits += 1;
+                Some(m)
+            }
+            None => {
+                g.misses += 1;
+                None
+            }
+        }
+    }
+
+    pub fn put(&self, w: &Window, m: Arc<ObsMatrix>) {
+        let bytes = m.bytes();
+        if bytes > self.capacity_bytes {
+            return; // too big to cache — streamed like input data
+        }
+        let mut g = self.inner.lock().unwrap();
+        g.clock += 1;
+        let clock = g.clock;
+        if let Some((_, old)) = g.map.insert(Key::from(w), (clock, m)) {
+            g.bytes -= old.bytes();
+        }
+        g.bytes += bytes;
+        // Evict least-recently-used until under budget.
+        while g.bytes > self.capacity_bytes {
+            let victim = g
+                .map
+                .iter()
+                .min_by_key(|(_, (stamp, _))| *stamp)
+                .map(|(k, _)| *k)
+                .expect("over budget implies non-empty");
+            let (_, evicted) = g.map.remove(&victim).unwrap();
+            g.bytes -= evicted.bytes();
+        }
+    }
+
+    /// (hits, misses, resident bytes, entries)
+    pub fn stats(&self) -> (u64, u64, u64, usize) {
+        let g = self.inner.lock().unwrap();
+        (g.hits, g.misses, g.bytes, g.map.len())
+    }
+
+    pub fn clear(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.map.clear();
+        g.bytes = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cube::PointId;
+
+    fn matrix(n_points: usize, n_obs: usize) -> Arc<ObsMatrix> {
+        Arc::new(ObsMatrix {
+            point_ids: (0..n_points as u64).map(PointId).collect(),
+            n_obs,
+            data: vec![1.0; n_points * n_obs],
+        })
+    }
+
+    fn win(y0: usize) -> Window {
+        Window { z: 0, y0, lines: 1 }
+    }
+
+    #[test]
+    fn hit_after_put() {
+        let c = WindowCache::new(1 << 20);
+        assert!(c.get(&win(0)).is_none());
+        c.put(&win(0), matrix(10, 10));
+        assert!(c.get(&win(0)).is_some());
+        let (hits, misses, bytes, n) = c.stats();
+        assert_eq!((hits, misses, n), (1, 1, 1));
+        assert_eq!(bytes, 400);
+    }
+
+    #[test]
+    fn lru_eviction_under_budget() {
+        // Each matrix is 400 bytes; budget fits two.
+        let c = WindowCache::new(900);
+        c.put(&win(0), matrix(10, 10));
+        c.put(&win(1), matrix(10, 10));
+        assert!(c.get(&win(0)).is_some()); // touch 0 so 1 is LRU
+        c.put(&win(2), matrix(10, 10));    // evicts 1
+        assert!(c.get(&win(1)).is_none());
+        assert!(c.get(&win(0)).is_some());
+        assert!(c.get(&win(2)).is_some());
+    }
+
+    #[test]
+    fn oversized_entries_are_not_cached() {
+        let c = WindowCache::new(100);
+        c.put(&win(0), matrix(100, 100));
+        assert!(c.get(&win(0)).is_none());
+        let (_, _, bytes, n) = c.stats();
+        assert_eq!((bytes, n), (0, 0));
+    }
+
+    #[test]
+    fn replace_same_key_updates_bytes() {
+        let c = WindowCache::new(10_000);
+        c.put(&win(0), matrix(10, 10));
+        c.put(&win(0), matrix(20, 10));
+        let (_, _, bytes, n) = c.stats();
+        assert_eq!(n, 1);
+        assert_eq!(bytes, 800);
+    }
+
+    #[test]
+    fn clear_empties() {
+        let c = WindowCache::new(10_000);
+        c.put(&win(0), matrix(10, 10));
+        c.clear();
+        let (_, _, bytes, n) = c.stats();
+        assert_eq!((bytes, n), (0, 0));
+    }
+}

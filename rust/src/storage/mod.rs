@@ -1,0 +1,288 @@
+//! Dataset storage: the NFS-gather reader and the window cache.
+//!
+//! The paper keeps input data on an NFS server outside the Spark cluster
+//! (§4.1) and loads, per point, its value from each of the K simulation
+//! files (Algorithm 2, via an external Java program doing positioned
+//! reads). We reproduce the same access pattern with `pread`-style
+//! positioned reads: one contiguous range per (window, file), transposed
+//! into per-point observation vectors. Bytes and read counts are metered
+//! so the simulated cluster can charge NFS time (DESIGN.md §3).
+
+pub mod cache;
+
+use std::fs::File;
+use std::io::{Read, Seek, SeekFrom};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::cube::{PointId, Window};
+use crate::datagen::{SyntheticDataset, HEADER_LEN, MAGIC};
+use crate::{PdfflowError, Result};
+
+pub use cache::WindowCache;
+
+/// Observation vectors for a set of points: row-major (point, simulation).
+#[derive(Clone, Debug)]
+pub struct ObsMatrix {
+    pub point_ids: Vec<PointId>,
+    pub n_obs: usize,
+    /// `data[p * n_obs + k]` = value of point `p` in simulation `k`.
+    pub data: Vec<f32>,
+}
+
+impl ObsMatrix {
+    pub fn n_points(&self) -> usize {
+        self.point_ids.len()
+    }
+
+    pub fn point_row(&self, p: usize) -> &[f32] {
+        &self.data[p * self.n_obs..(p + 1) * self.n_obs]
+    }
+
+    /// Size of the observation payload in bytes (shuffle accounting).
+    pub fn bytes(&self) -> u64 {
+        (self.data.len() * 4) as u64
+    }
+}
+
+/// I/O meters accumulated by a reader (feed the NFS cost model).
+#[derive(Debug, Default)]
+pub struct IoMeter {
+    pub bytes_read: AtomicU64,
+    pub read_calls: AtomicU64,
+    pub files_touched: AtomicU64,
+}
+
+impl IoMeter {
+    pub fn snapshot(&self) -> (u64, u64, u64) {
+        (
+            self.bytes_read.load(Ordering::Relaxed),
+            self.read_calls.load(Ordering::Relaxed),
+            self.files_touched.load(Ordering::Relaxed),
+        )
+    }
+
+    pub fn reset(&self) {
+        self.bytes_read.store(0, Ordering::Relaxed);
+        self.read_calls.store(0, Ordering::Relaxed);
+        self.files_touched.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Reader over a dataset's simulation files.
+pub struct DatasetReader<'a> {
+    ds: &'a SyntheticDataset,
+    pub meter: IoMeter,
+}
+
+impl<'a> DatasetReader<'a> {
+    pub fn new(ds: &'a SyntheticDataset) -> Self {
+        DatasetReader {
+            ds,
+            meter: IoMeter::default(),
+        }
+    }
+
+    pub fn dataset(&self) -> &SyntheticDataset {
+        self.ds
+    }
+
+    /// Validate one file's header (format guard; paper's loader would
+    /// fail on mismatched cubes).
+    pub fn check_header(&self, sim: usize) -> Result<()> {
+        let mut f = File::open(&self.ds.files[sim])?;
+        let mut hdr = [0u8; HEADER_LEN as usize];
+        f.read_exact(&mut hdr)?;
+        if &hdr[0..4] != MAGIC {
+            return Err(PdfflowError::Format(format!(
+                "{}: bad magic",
+                self.ds.files[sim].display()
+            )));
+        }
+        let rd = |o: usize| u32::from_le_bytes(hdr[o..o + 4].try_into().unwrap()) as usize;
+        let (nx, ny, nz) = (rd(8), rd(12), rd(16));
+        let d = self.ds.spec.dims;
+        if (nx, ny, nz) != (d.nx, d.ny, d.nz) {
+            return Err(PdfflowError::Format(format!(
+                "{}: dims {nx}x{ny}x{nz} != spec {}x{}x{}",
+                self.ds.files[sim].display(),
+                d.nx,
+                d.ny,
+                d.nz
+            )));
+        }
+        Ok(())
+    }
+
+    /// Load the observation vectors of every point in a window: one
+    /// contiguous positioned read per simulation file, transposed to
+    /// point-major order (Algorithm 2's data loading).
+    pub fn read_window(&self, w: &Window) -> Result<ObsMatrix> {
+        let dims = self.ds.spec.dims;
+        let n_obs = self.ds.spec.n_sims;
+        let point_ids = dims.window_points(w);
+        let n_pts = point_ids.len();
+        let (off, len) = w.byte_range(&dims);
+        let mut data = vec![0f32; n_pts * n_obs];
+        let mut buf = vec![0u8; len];
+        for (k, path) in self.ds.files.iter().enumerate() {
+            let mut f = File::open(path)?;
+            f.seek(SeekFrom::Start(HEADER_LEN + off))?;
+            f.read_exact(&mut buf)?;
+            self.meter.bytes_read.fetch_add(len as u64, Ordering::Relaxed);
+            self.meter.read_calls.fetch_add(1, Ordering::Relaxed);
+            self.meter.files_touched.fetch_add(1, Ordering::Relaxed);
+            for p in 0..n_pts {
+                let b = [buf[p * 4], buf[p * 4 + 1], buf[p * 4 + 2], buf[p * 4 + 3]];
+                data[p * n_obs + k] = f32::from_le_bytes(b);
+            }
+        }
+        Ok(ObsMatrix {
+            point_ids,
+            n_obs,
+            data,
+        })
+    }
+
+    /// Load observation vectors for an arbitrary point set (the Sampling
+    /// method's access pattern: one positioned read per (point, file)).
+    pub fn read_points(&self, ids: &[PointId]) -> Result<ObsMatrix> {
+        let n_obs = self.ds.spec.n_sims;
+        let n_pts = ids.len();
+        let mut data = vec![0f32; n_pts * n_obs];
+        let mut b4 = [0u8; 4];
+        for (k, path) in self.ds.files.iter().enumerate() {
+            let mut f = File::open(path)?;
+            self.meter.files_touched.fetch_add(1, Ordering::Relaxed);
+            for (p, id) in ids.iter().enumerate() {
+                f.seek(SeekFrom::Start(HEADER_LEN + id.0 * 4))?;
+                f.read_exact(&mut b4)?;
+                self.meter.bytes_read.fetch_add(4, Ordering::Relaxed);
+                self.meter.read_calls.fetch_add(1, Ordering::Relaxed);
+                data[p * n_obs + k] = f32::from_le_bytes(b4);
+            }
+        }
+        Ok(ObsMatrix {
+            point_ids: ids.to_vec(),
+            n_obs,
+            data,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cube::CubeDims;
+    use crate::datagen::DatasetSpec;
+
+    fn dataset(tag: &str) -> (SyntheticDataset, std::path::PathBuf) {
+        let dir = std::env::temp_dir().join(format!("pdfflow-storage-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let ds = SyntheticDataset::generate(&DatasetSpec::tiny(), &dir).unwrap();
+        (ds, dir)
+    }
+
+    #[test]
+    fn header_check_passes() {
+        let (ds, dir) = dataset("hdr");
+        let r = DatasetReader::new(&ds);
+        r.check_header(0).unwrap();
+        r.check_header(ds.spec.n_sims - 1).unwrap();
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn header_check_rejects_corruption() {
+        let (ds, dir) = dataset("corrupt");
+        let path = &ds.files[0];
+        let mut bytes = std::fs::read(path).unwrap();
+        bytes[0] = b'X';
+        std::fs::write(path, &bytes).unwrap();
+        let r = DatasetReader::new(&ds);
+        assert!(r.check_header(0).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn window_read_matches_point_read() {
+        let (ds, dir) = dataset("match");
+        let r = DatasetReader::new(&ds);
+        let w = Window { z: 2, y0: 1, lines: 2 };
+        let wm = r.read_window(&w).unwrap();
+        let pm = r.read_points(&wm.point_ids).unwrap();
+        assert_eq!(wm.data, pm.data);
+        assert_eq!(wm.n_obs, ds.spec.n_sims);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn observation_vectors_group_as_designed() {
+        // Pure points with the same gain level inside one slice must have
+        // IDENTICAL observation vectors (the property Grouping exploits).
+        let (ds, dir) = dataset("group");
+        let r = DatasetReader::new(&ds);
+        let dims = ds.spec.dims;
+        let w = Window { z: 0, y0: 0, lines: dims.ny };
+        let m = r.read_window(&w).unwrap();
+        use std::collections::HashMap;
+        let mut by_vec: HashMap<Vec<u32>, usize> = HashMap::new();
+        for p in 0..m.n_points() {
+            let key: Vec<u32> = m.point_row(p).iter().map(|v| v.to_bits()).collect();
+            *by_vec.entry(key).or_default() += 1;
+        }
+        let n_groups = by_vec.len();
+        let n_points = m.n_points();
+        assert!(
+            n_groups < n_points,
+            "expected grouping: {n_groups} groups of {n_points} points"
+        );
+        // Unique-noise fraction (~25%) should keep groups well below 60%.
+        assert!((n_groups as f64) < 0.6 * n_points as f64, "{n_groups}/{n_points}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn meter_counts_bytes() {
+        let (ds, dir) = dataset("meter");
+        let r = DatasetReader::new(&ds);
+        let w = Window { z: 0, y0: 0, lines: 1 };
+        let m = r.read_window(&w).unwrap();
+        let (bytes, calls, files) = r.meter.snapshot();
+        assert_eq!(bytes, (m.n_points() * 4 * ds.spec.n_sims) as u64);
+        assert_eq!(calls, ds.spec.n_sims as u64);
+        assert_eq!(files, ds.spec.n_sims as u64);
+        r.meter.reset();
+        assert_eq!(r.meter.snapshot(), (0, 0, 0));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn values_are_finite_and_positive_scaled() {
+        let (ds, dir) = dataset("vals");
+        let r = DatasetReader::new(&ds);
+        let w = Window { z: 4, y0: 0, lines: 3 };
+        let m = r.read_window(&w).unwrap();
+        assert!(m.data.iter().all(|v| v.is_finite()));
+        // Seismic velocities are positive for these layer families.
+        let frac_pos = m.data.iter().filter(|&&v| v > 0.0).count() as f64 / m.data.len() as f64;
+        assert!(frac_pos > 0.95, "frac_pos={frac_pos}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn read_points_arbitrary_order() {
+        let (ds, dir) = dataset("order");
+        let r = DatasetReader::new(&ds);
+        let dims = ds.spec.dims;
+        let ids = vec![
+            dims.point_id(5, 3, 1),
+            dims.point_id(0, 0, 0),
+            dims.point_id(dims.nx - 1, dims.ny - 1, dims.nz - 1),
+        ];
+        let m = r.read_points(&ids).unwrap();
+        assert_eq!(m.n_points(), 3);
+        assert_eq!(m.point_ids, ids);
+        assert!(m.data.iter().all(|v| v.is_finite()));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

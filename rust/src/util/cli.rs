@@ -1,0 +1,136 @@
+//! Tiny CLI argument parser (offline `clap` substitute).
+//!
+//! Model: `prog <subcommand> [--flag] [--opt value] [positional...]`.
+//! Options may be given as `--opt value` or `--opt=value`.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (excluding argv[0]). `known_flags` lists boolean
+    /// switches (they consume no value); everything else starting with
+    /// `--` is treated as an option expecting a value.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I, known_flags: &[&str]) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&name) {
+                    out.flags.push(name.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| format!("option --{name} expects a value"))?;
+                    out.options.insert(name.to_string(), v);
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| format!("--{name} {v:?}: {e}")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| format!("--{name} {v:?}: {e}")),
+        }
+    }
+
+    /// Comma-separated list option, e.g. `--nodes 10,20,30`.
+    pub fn list_or(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.opt(name) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn subcommand_options_flags() {
+        let a = Args::parse(
+            argv("run --method grouping --window 25 --verbose slice201"),
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.opt("method"), Some("grouping"));
+        assert_eq!(a.usize_or("window", 0).unwrap(), 25);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["slice201"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = Args::parse(argv("x --rate=0.25"), &[]).unwrap();
+        assert!((a.f64_or("rate", 0.0).unwrap() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(argv("x --opt"), &[]).is_err());
+    }
+
+    #[test]
+    fn list_option() {
+        let a = Args::parse(argv("x --nodes 10,20,30"), &[]).unwrap();
+        assert_eq!(a.list_or("nodes", &[]), vec!["10", "20", "30"]);
+        assert_eq!(a.list_or("absent", &["1"]), vec!["1"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(argv(""), &[]).unwrap();
+        assert!(a.subcommand.is_none());
+        assert_eq!(a.usize_or("w", 5).unwrap(), 5);
+        assert!(!a.flag("anything"));
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = Args::parse(argv("x --n abc"), &[]).unwrap();
+        assert!(a.usize_or("n", 0).is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! In-tree substrates for crates unavailable in this offline image
+//! (tokio / clap / criterion / serde / rand): a PRNG with distribution
+//! samplers, JSON and TOML-subset codecs, a CLI argument parser, a scoped
+//! thread pool, timing/statistics helpers, and a mini property-testing
+//! harness. See DESIGN.md §Substrates.
+
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod prng;
+pub mod testkit;
+pub mod timing;
+pub mod toml;

@@ -1,0 +1,110 @@
+//! Scoped thread pool for parallel map (offline `tokio`/`rayon` substitute).
+//!
+//! The coordinator's host-level parallelism (loading windows, running
+//! batches) goes through `parallel_map`; simulated-cluster parallelism is
+//! handled separately by [`crate::cluster`] (it *models* many nodes, the
+//! host only has the cores it has).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of worker threads to use by default (host parallelism).
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Apply `f` to every item, using up to `workers` threads, preserving
+/// input order in the output. Panics in workers propagate.
+pub fn parallel_map<T, R, F>(items: Vec<T>, workers: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.max(1).min(n);
+    if workers == 1 {
+        return items.into_iter().map(f).collect();
+    }
+
+    // Work-stealing by index over a shared Vec<Option<T>>.
+    let slots: Vec<Mutex<Option<T>>> = items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let cursor = AtomicUsize::new(0);
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let item = slots[i].lock().unwrap().take().expect("slot taken twice");
+                let r = f(item);
+                *results[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("missing result"))
+        .collect()
+}
+
+/// Run `f` over index range [0, n) in parallel, collecting results in order.
+pub fn parallel_for<R, F>(n: usize, workers: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    parallel_map((0..n).collect(), workers, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn preserves_order() {
+        let out = parallel_map((0..100).collect::<Vec<_>>(), 4, |i| i * 2);
+        assert_eq!(out, (0..100).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn runs_every_item_exactly_once() {
+        let counter = AtomicU64::new(0);
+        let out = parallel_for(1000, 8, |i| {
+            counter.fetch_add(1, Ordering::Relaxed);
+            i
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 1000);
+        assert_eq!(out.len(), 1000);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let out: Vec<u32> = parallel_map(Vec::<u32>::new(), 4, |x| x);
+        assert!(out.is_empty());
+        assert_eq!(parallel_map(vec![7], 4, |x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn single_worker_is_serial() {
+        let out = parallel_for(10, 1, |i| i);
+        assert_eq!(out, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn non_copy_items() {
+        let items: Vec<String> = (0..20).map(|i| format!("s{i}")).collect();
+        let out = parallel_map(items, 3, |s| s.len());
+        assert_eq!(out.len(), 20);
+    }
+}

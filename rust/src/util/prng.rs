@@ -1,0 +1,332 @@
+//! Deterministic PRNG + distribution samplers (offline `rand` substitute).
+//!
+//! Xoshiro256++ seeded via SplitMix64, with samplers for every
+//! distribution family the paper's data generator and tests need. All
+//! samplers are reproducible given the seed, which the experiment harness
+//! relies on (EXPERIMENTS.md records seeds next to every figure).
+
+/// Xoshiro256++ — fast, high-quality, 2^256-1 period.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Seed via SplitMix64 so that nearby seeds give independent streams.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut next = || {
+            sm = sm.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        Rng {
+            s: [next(), next(), next(), next()],
+        }
+    }
+
+    /// Derive an independent stream (for per-point / per-simulation rngs).
+    pub fn fork(&self, stream: u64) -> Self {
+        // Mix the current state with the stream id through SplitMix64.
+        Rng::new(
+            self.s[0]
+                .wrapping_mul(0x9E3779B97F4A7C15)
+                .wrapping_add(stream.wrapping_mul(0xD1B54A32D192ED03)),
+        )
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [0, 1) as f32.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Lemire's multiply-shift rejection-free approximation is fine here.
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Standard normal via Box–Muller (polar rejection-free variant).
+    pub fn std_normal(&mut self) -> f64 {
+        // Marsaglia polar method with loop (expected < 1.3 iterations).
+        loop {
+            let u = 2.0 * self.f64() - 1.0;
+            let v = 2.0 * self.f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                return u * (-2.0 * s.ln() / s).sqrt();
+            }
+        }
+    }
+
+    pub fn normal(&mut self, mu: f64, sigma: f64) -> f64 {
+        mu + sigma * self.std_normal()
+    }
+
+    pub fn lognormal(&mut self, mulog: f64, sigmalog: f64) -> f64 {
+        self.normal(mulog, sigmalog).exp()
+    }
+
+    /// Exponential with rate lambda (mean 1/lambda).
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        -(1.0 - self.f64()).ln() / lambda
+    }
+
+    /// Gamma(shape k, scale theta) via Marsaglia–Tsang (k >= 1 squeeze,
+    /// boost for k < 1).
+    pub fn gamma(&mut self, k: f64, theta: f64) -> f64 {
+        if k < 1.0 {
+            let u = self.f64().max(1e-300);
+            return self.gamma(k + 1.0, theta) * u.powf(1.0 / k);
+        }
+        let d = k - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.std_normal();
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = self.f64();
+            if u < 1.0 - 0.0331 * x.powi(4)
+                || u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln())
+            {
+                return d * v * theta;
+            }
+        }
+    }
+
+    pub fn weibull(&mut self, shape: f64, scale: f64) -> f64 {
+        scale * (-(1.0 - self.f64()).ln()).powf(1.0 / shape)
+    }
+
+    pub fn cauchy(&mut self, loc: f64, scale: f64) -> f64 {
+        loc + scale * (std::f64::consts::PI * (self.f64() - 0.5)).tan()
+    }
+
+    pub fn logistic(&mut self, loc: f64, scale: f64) -> f64 {
+        let u = self.f64().clamp(1e-12, 1.0 - 1e-12);
+        loc + scale * (u / (1.0 - u)).ln()
+    }
+
+    /// Student's t with nu degrees of freedom (ratio of normal / chi).
+    pub fn student_t(&mut self, nu: f64) -> f64 {
+        let z = self.std_normal();
+        let g = self.gamma(nu / 2.0, 2.0); // chi^2_nu
+        z / (g / nu).sqrt()
+    }
+
+    /// Geometric on {0, 1, 2, ...} with success probability p.
+    pub fn geometric(&mut self, p: f64) -> f64 {
+        let u = self.f64().max(1e-300);
+        (u.ln() / (1.0 - p).ln()).floor()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from [0, n) (partial Fisher–Yates).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let k = k.min(n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn moments(xs: &[f64]) -> (f64, f64) {
+        let n = xs.len() as f64;
+        let m = xs.iter().sum::<f64>() / n;
+        let v = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (n - 1.0);
+        (m, v.sqrt())
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn forked_streams_differ() {
+        let root = Rng::new(1);
+        let mut a = root.fork(0);
+        let mut b = root.fork(1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn uniform_range_and_mean() {
+        let mut r = Rng::new(3);
+        let xs: Vec<f64> = (0..20000).map(|_| r.uniform(2.0, 8.0)).collect();
+        assert!(xs.iter().all(|&x| (2.0..8.0).contains(&x)));
+        let (m, _) = moments(&xs);
+        assert!((m - 5.0).abs() < 0.05, "mean {m}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(4);
+        let xs: Vec<f64> = (0..40000).map(|_| r.normal(10.0, 3.0)).collect();
+        let (m, s) = moments(&xs);
+        assert!((m - 10.0).abs() < 0.06, "mean {m}");
+        assert!((s - 3.0).abs() < 0.06, "std {s}");
+    }
+
+    #[test]
+    fn exponential_moments() {
+        let mut r = Rng::new(5);
+        let xs: Vec<f64> = (0..40000).map(|_| r.exponential(0.5)).collect();
+        let (m, s) = moments(&xs);
+        assert!((m - 2.0).abs() < 0.06, "mean {m}");
+        assert!((s - 2.0).abs() < 0.1, "std {s}");
+        assert!(xs.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn gamma_moments() {
+        let mut r = Rng::new(6);
+        let (k, th) = (4.0, 2.5);
+        let xs: Vec<f64> = (0..40000).map(|_| r.gamma(k, th)).collect();
+        let (m, s) = moments(&xs);
+        assert!((m - k * th).abs() < 0.2, "mean {m}");
+        assert!((s - (k).sqrt() * th).abs() < 0.2, "std {s}");
+    }
+
+    #[test]
+    fn gamma_small_shape() {
+        let mut r = Rng::new(7);
+        let xs: Vec<f64> = (0..40000).map(|_| r.gamma(0.5, 1.0)).collect();
+        let (m, _) = moments(&xs);
+        assert!((m - 0.5).abs() < 0.03, "mean {m}");
+        assert!(xs.iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn weibull_moments() {
+        let mut r = Rng::new(8);
+        // k=2, lambda=1: mean = Gamma(1.5) = sqrt(pi)/2
+        let xs: Vec<f64> = (0..40000).map(|_| r.weibull(2.0, 1.0)).collect();
+        let (m, _) = moments(&xs);
+        assert!((m - 0.8862).abs() < 0.01, "mean {m}");
+    }
+
+    #[test]
+    fn lognormal_log_moments() {
+        let mut r = Rng::new(9);
+        let xs: Vec<f64> = (0..40000).map(|_| r.lognormal(1.0, 0.5).ln()).collect();
+        let (m, s) = moments(&xs);
+        assert!((m - 1.0).abs() < 0.02);
+        assert!((s - 0.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn student_t_symmetric() {
+        let mut r = Rng::new(10);
+        let xs: Vec<f64> = (0..40000).map(|_| r.student_t(8.0)).collect();
+        let (m, _) = moments(&xs);
+        assert!(m.abs() < 0.05, "mean {m}");
+    }
+
+    #[test]
+    fn geometric_support_and_mean() {
+        let mut r = Rng::new(11);
+        let xs: Vec<f64> = (0..40000).map(|_| r.geometric(0.3)).collect();
+        assert!(xs.iter().all(|&x| x >= 0.0 && x.fract() == 0.0));
+        let (m, _) = moments(&xs);
+        assert!((m - 0.7 / 0.3).abs() < 0.1, "mean {m}"); // (1-p)/p
+    }
+
+    #[test]
+    fn logistic_moments() {
+        let mut r = Rng::new(12);
+        let xs: Vec<f64> = (0..40000).map(|_| r.logistic(3.0, 1.5)).collect();
+        let (m, s) = moments(&xs);
+        assert!((m - 3.0).abs() < 0.1);
+        let expect = 1.5 * std::f64::consts::PI / 3f64.sqrt();
+        assert!((s - expect).abs() < 0.1, "std {s} want {expect}");
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut r = Rng::new(13);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let i = r.below(10);
+            seen[i] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut r = Rng::new(14);
+        let idx = r.sample_indices(100, 30);
+        assert_eq!(idx.len(), 30);
+        let mut sorted = idx.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 30);
+        assert!(sorted.iter().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(15);
+        let mut xs: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,104 @@
+//! Mini property-testing harness (offline `proptest` substitute).
+//!
+//! `check(name, cases, |rng| ...)` runs a property over `cases` random
+//! inputs derived from a deterministic master seed (overridable via the
+//! `PDFFLOW_TEST_SEED` env var). On failure it reports the failing case
+//! seed so the case can be replayed exactly:
+//!
+//! ```text
+//! property 'grouping_partitions' failed at case 17 (seed 0x12ab..): <msg>
+//! ```
+
+use crate::util::prng::Rng;
+
+/// Outcome of a single property case; use `fail!`-style early returns.
+pub type CaseResult = Result<(), String>;
+
+/// Run `prop` over `cases` deterministic pseudo-random cases.
+/// Panics (test failure) on the first failing case, reporting its seed.
+pub fn check<F>(name: &str, cases: usize, prop: F)
+where
+    F: Fn(&mut Rng) -> CaseResult,
+{
+    let master = master_seed();
+    for case in 0..cases {
+        let seed = master
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x}): {msg}\n\
+                 replay: PDFFLOW_TEST_SEED={master} (master)"
+            );
+        }
+    }
+}
+
+fn master_seed() -> u64 {
+    std::env::var("PDFFLOW_TEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+/// Assert helper returning CaseResult instead of panicking, so `check`
+/// can attach the case seed.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !$cond {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let count = std::cell::Cell::new(0usize);
+        check("trivial", 10, |_rng| {
+            count.set(count.get() + 1);
+            Ok(())
+        });
+        assert_eq!(count.get(), 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always_fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check("always_fails", 3, |_rng| Err("boom".into()));
+    }
+
+    #[test]
+    fn deterministic_inputs() {
+        let record = |out: &std::cell::RefCell<Vec<u64>>| {
+            check("record", 5, |rng| {
+                out.borrow_mut().push(rng.next_u64());
+                Ok(())
+            });
+        };
+        let first = std::cell::RefCell::new(Vec::new());
+        let second = std::cell::RefCell::new(Vec::new());
+        record(&first);
+        record(&second);
+        assert_eq!(first.into_inner(), second.into_inner());
+    }
+
+    #[test]
+    fn prop_assert_macro() {
+        check("macro", 4, |rng| {
+            let x = rng.below(100);
+            prop_assert!(x < 100, "x={x} out of range");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,285 @@
+//! TOML-subset parser for experiment configs (offline `toml` substitute).
+//!
+//! Supports: `[section]` and `[section.sub]` headers, `key = value` with
+//! string / integer / float / bool / homogeneous-array values, `#`
+//! comments. Keys are exposed as flat `section.key` paths. This covers
+//! everything `configs/*.toml` uses; unknown syntax is a hard error so
+//! config typos fail loudly.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed TOML document: flat `section.key` -> value map.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    map: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc, String> {
+        let mut map = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unterminated section", lineno + 1))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(format!("line {}: empty section name", lineno + 1));
+                }
+                section = name.to_string();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(format!("line {}: empty key", lineno + 1));
+            }
+            let value = parse_value(line[eq + 1..].trim())
+                .map_err(|e| format!("line {}: {}", lineno + 1, e))?;
+            let path = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            if map.insert(path.clone(), value).is_some() {
+                return Err(format!("line {}: duplicate key {path}", lineno + 1));
+            }
+        }
+        Ok(TomlDoc { map })
+    }
+
+    pub fn get(&self, path: &str) -> Option<&TomlValue> {
+        self.map.get(path)
+    }
+
+    pub fn str_or(&self, path: &str, default: &str) -> String {
+        self.get(path)
+            .and_then(|v| v.as_str())
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn i64_or(&self, path: &str, default: i64) -> i64 {
+        self.get(path).and_then(|v| v.as_i64()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, path: &str, default: usize) -> usize {
+        self.i64_or(path, default as i64) as usize
+    }
+
+    pub fn f64_or(&self, path: &str, default: f64) -> f64 {
+        self.get(path).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, path: &str, default: bool) -> bool {
+        self.get(path).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(|s| s.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside a quoted string does not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| format!("unterminated string: {s}"))?;
+        return Ok(TomlValue::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| format!("unterminated array: {s}"))?
+            .trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Arr(vec![]));
+        }
+        let items = split_top_level(inner)?;
+        return Ok(TomlValue::Arr(
+            items
+                .into_iter()
+                .map(|it| parse_value(it.trim()))
+                .collect::<Result<_, _>>()?,
+        ));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+        if let Ok(i) = s.replace('_', "").parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    if let Ok(f) = s.replace('_', "").parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value: {s:?}"))
+}
+
+fn split_top_level(s: &str) -> Result<Vec<&str>, String> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.checked_sub(1).ok_or("unbalanced ]")?,
+            ',' if !in_str && depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"
+# experiment config
+name = "set1"            # inline comment
+[dataset]
+cube = [64, 96, 96]
+simulations = 1000
+noise = 0.05
+grouped = true
+path = "/tmp/data # not a comment"
+[cluster.lncc]
+nodes = 6
+cores = 32
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let d = TomlDoc::parse(DOC).unwrap();
+        assert_eq!(d.str_or("name", ""), "set1");
+        assert_eq!(d.i64_or("dataset.simulations", 0), 1000);
+        assert_eq!(d.f64_or("dataset.noise", 0.0), 0.05);
+        assert!(d.bool_or("dataset.grouped", false));
+        assert_eq!(d.i64_or("cluster.lncc.nodes", 0), 6);
+        assert_eq!(d.i64_or("cluster.lncc.cores", 0), 32);
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let d = TomlDoc::parse(DOC).unwrap();
+        assert_eq!(d.str_or("dataset.path", ""), "/tmp/data # not a comment");
+    }
+
+    #[test]
+    fn arrays() {
+        let d = TomlDoc::parse(DOC).unwrap();
+        let arr = match d.get("dataset.cube").unwrap() {
+            TomlValue::Arr(a) => a.clone(),
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(
+            arr,
+            vec![TomlValue::Int(64), TomlValue::Int(96), TomlValue::Int(96)]
+        );
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let d = TomlDoc::parse("m = [[1,2],[3,4]]").unwrap();
+        match d.get("m").unwrap() {
+            TomlValue::Arr(rows) => assert_eq!(rows.len(), 2),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let d = TomlDoc::parse("").unwrap();
+        assert_eq!(d.usize_or("missing.key", 7), 7);
+    }
+
+    #[test]
+    fn errors_are_loud() {
+        assert!(TomlDoc::parse("[unterminated").is_err());
+        assert!(TomlDoc::parse("novalue =").is_err());
+        assert!(TomlDoc::parse("a = 1\na = 2").is_err());
+        assert!(TomlDoc::parse("junk line").is_err());
+        assert!(TomlDoc::parse("s = \"unterminated").is_err());
+    }
+
+    #[test]
+    fn negative_and_underscored_numbers() {
+        let d = TomlDoc::parse("a = -42\nb = 1_000_000\nc = -2.5e-3").unwrap();
+        assert_eq!(d.i64_or("a", 0), -42);
+        assert_eq!(d.i64_or("b", 0), 1_000_000);
+        assert!((d.f64_or("c", 0.0) + 0.0025).abs() < 1e-12);
+    }
+}

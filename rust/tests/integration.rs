@@ -1,0 +1,186 @@
+//! Integration tests: runtime (PJRT) against the real AOT artifacts, and
+//! cross-checks of the HLO graphs vs the pure-rust stats oracle.
+//!
+//! Requires `make artifacts` (manifest + *.hlo.txt under artifacts/).
+
+use pdfflow::runtime::{ArtifactKind, Engine};
+use pdfflow::stats::{self, DistType, PointStats, DEFAULT_BINS};
+use pdfflow::util::prng::Rng;
+
+fn engine() -> Engine {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Engine::load_default(dir).expect("run `make artifacts` first")
+}
+
+/// Observation batch: `n` points of `obs` draws each, mixed families.
+fn mixed_batch(n: usize, obs: usize, seed: u64) -> (Vec<f32>, Vec<DistType>) {
+    let mut rng = Rng::new(seed);
+    let mut values = Vec::with_capacity(n * obs);
+    let mut families = Vec::with_capacity(n);
+    for i in 0..n {
+        let fam = DistType::FOUR[i % 4];
+        families.push(fam);
+        for _ in 0..obs {
+            let v = match fam {
+                DistType::Normal => rng.normal(10.0, 2.0),
+                DistType::Uniform => rng.uniform(3.0, 9.0),
+                DistType::Exponential => rng.exponential(0.25),
+                DistType::Lognormal => rng.lognormal(1.5, 0.4),
+                _ => unreachable!(),
+            };
+            values.push(v as f32);
+        }
+    }
+    (values, families)
+}
+
+#[test]
+fn engine_loads_and_reports_platform() {
+    let e = engine();
+    assert_eq!(e.platform(), "cpu");
+    assert!(e.manifest.artifacts.len() >= 13);
+}
+
+#[test]
+fn stats_artifact_matches_rust_oracle() {
+    let e = engine();
+    let (values, _) = mixed_batch(32, 100, 1);
+    let out = e.run_stats(&values, 32, 100).unwrap();
+    assert_eq!((out.n_rows, out.n_cols), (32, 12));
+    let mean_col = e.manifest.stats_col("mean").unwrap();
+    let std_col = e.manifest.stats_col("std").unwrap();
+    let min_col = e.manifest.stats_col("min").unwrap();
+    let max_col = e.manifest.stats_col("max").unwrap();
+    for p in 0..32 {
+        let s = PointStats::of(&values[p * 100..(p + 1) * 100]);
+        let row = out.row(p);
+        assert!(
+            (row[mean_col] as f64 - s.mean).abs() < 1e-2 * s.mean.abs().max(1.0),
+            "point {p}: hlo mean {} vs oracle {}",
+            row[mean_col],
+            s.mean
+        );
+        assert!((row[std_col] as f64 - s.std).abs() < 1e-2 * s.std.abs().max(1e-3));
+        assert!((row[min_col] as f64 - s.min).abs() < 1e-4 * s.min.abs().max(1.0));
+        assert!((row[max_col] as f64 - s.max).abs() < 1e-4 * s.max.abs().max(1.0));
+    }
+}
+
+#[test]
+fn fit_all4_recovers_generating_families() {
+    let e = engine();
+    let (values, families) = mixed_batch(64, 100, 2);
+    let out = e.run_fit_all(&values, 64, 100, 4).unwrap();
+    assert_eq!(out.n_cols, 5);
+    let mut correct = 0;
+    for p in 0..64 {
+        let row = out.row(p);
+        let picked = DistType::from_id(row[0] as usize).unwrap();
+        let err = row[1] as f64;
+        assert!((0.0..=2.0).contains(&err), "err {err}");
+        if picked == families[p] {
+            correct += 1;
+        }
+    }
+    // With 100 observations some confusion is expected; the bulk must
+    // still land on the generating family.
+    assert!(correct >= 40, "only {correct}/64 recovered");
+}
+
+#[test]
+fn fit_all_matches_rust_oracle_argmin() {
+    let e = engine();
+    let (values, _) = mixed_batch(16, 100, 3);
+    let out = e.run_fit_all(&values, 16, 100, 10).unwrap();
+    for p in 0..16 {
+        let row = out.row(p);
+        let oracle = stats::fit_best(
+            &values[p * 100..(p + 1) * 100],
+            &DistType::ALL,
+            DEFAULT_BINS,
+        );
+        // Errors are computed in f32 vs f64; allow small slack, and allow
+        // a different winner only when errors are nearly tied.
+        let hlo_err = row[1] as f64;
+        assert!(
+            (hlo_err - oracle.error).abs() < 0.02
+                || DistType::from_id(row[0] as usize) == Some(oracle.dist),
+            "point {p}: hlo ({}, {:.4}) vs oracle ({:?}, {:.4})",
+            row[0],
+            hlo_err,
+            oracle.dist,
+            oracle.error
+        );
+    }
+}
+
+#[test]
+fn fit_single_matches_rust_oracle_per_type() {
+    let e = engine();
+    let (values, _) = mixed_batch(8, 100, 4);
+    for &t in &DistType::ALL {
+        let out = e.run_fit_single(&values, 8, 100, t).unwrap();
+        assert_eq!(out.n_cols, 4);
+        for p in 0..8 {
+            let row = out.row(p);
+            let oracle =
+                stats::fit_single(&values[p * 100..(p + 1) * 100], t, DEFAULT_BINS);
+            assert!(
+                (row[0] as f64 - oracle.error).abs() < 0.02,
+                "{t:?} point {p}: hlo err {} vs oracle {}",
+                row[0],
+                oracle.error
+            );
+        }
+    }
+}
+
+#[test]
+fn partial_batch_padding_is_discarded() {
+    let e = engine();
+    // 70 points with a 64-batch artifact: 2 executes, 58 padded rows.
+    let (values, _) = mixed_batch(70, 100, 5);
+    let out = e.run_fit_all(&values, 70, 100, 4).unwrap();
+    assert_eq!(out.n_rows, 70);
+    let m = e.metrics();
+    assert_eq!(m.rows_processed, 70);
+    assert_eq!(m.rows_padded, 58);
+    assert_eq!(m.executions, 2);
+    // Same points in a different batching give identical results.
+    let single = e.run_fit_all(&values[..100 * 64], 64, 100, 4).unwrap();
+    assert_eq!(&out.data[..64 * 5], &single.data[..]);
+}
+
+#[test]
+fn run_rejects_shape_mismatch() {
+    let e = engine();
+    let values = vec![1.0f32; 100];
+    assert!(e.run_stats(&values, 2, 100).is_err());
+    assert!(e.run_stats(&values, 1, 99).is_err());
+}
+
+#[test]
+fn obs_4000_variant_works() {
+    let e = engine();
+    let mut rng = Rng::new(6);
+    let values: Vec<f32> = (0..2 * 4000).map(|_| rng.normal(5.0, 1.0) as f32).collect();
+    let out = e.run_fit_all(&values, 2, 4000, 4).unwrap();
+    assert_eq!(out.n_rows, 2);
+    for p in 0..2 {
+        assert_eq!(out.row(p)[0] as usize, DistType::Normal.id());
+        assert!(out.row(p)[1] < 0.1, "err {}", out.row(p)[1]);
+    }
+}
+
+#[test]
+fn manifest_find_honors_kind_filters() {
+    let e = engine();
+    assert!(e
+        .manifest
+        .find(ArtifactKind::FitSingle, Some(DistType::Cauchy), None, 1000)
+        .is_some());
+    assert!(e
+        .manifest
+        .find(ArtifactKind::FitSingle, Some(DistType::Cauchy), Some(4), 1000)
+        .is_none());
+}

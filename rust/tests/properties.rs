@@ -1,0 +1,314 @@
+//! Property-based tests (via util::testkit, the offline proptest
+//! substitute) over the coordinator's invariants: routing, grouping,
+//! window coverage, codecs, cluster accounting, tree behaviour.
+
+use pdfflow::cluster::{ClusterSpec, SimCluster};
+use pdfflow::cube::CubeDims;
+use pdfflow::mltree::{DecisionTree, Sample, TreeParams};
+use pdfflow::prop_assert;
+use pdfflow::rdd::Rdd;
+use pdfflow::sampling::{random_sample, SliceFeatures};
+use pdfflow::stats::{self, DistType, PointStats, DEFAULT_BINS, PENALTY_ERROR};
+use pdfflow::util::json::Json;
+use pdfflow::util::prng::Rng;
+use pdfflow::util::testkit::check;
+use pdfflow::util::toml::TomlDoc;
+
+fn random_dims(rng: &mut Rng) -> CubeDims {
+    CubeDims::new(
+        1 + rng.below(40),
+        1 + rng.below(40),
+        1 + rng.below(20),
+    )
+}
+
+#[test]
+fn prop_windows_partition_every_slice_point_exactly_once() {
+    check("window_partition", 50, |rng| {
+        let dims = random_dims(rng);
+        let z = rng.below(dims.nz);
+        let w = 1 + rng.below(dims.ny + 3); // may exceed ny
+        let windows = dims.windows(z, w);
+        let mut seen = std::collections::HashSet::new();
+        for win in &windows {
+            for p in dims.window_points(win) {
+                prop_assert!(seen.insert(p), "point {p:?} covered twice");
+            }
+        }
+        prop_assert!(
+            seen.len() == dims.slice_points(),
+            "covered {} of {} points",
+            seen.len(),
+            dims.slice_points()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_point_id_roundtrip() {
+    check("point_id_roundtrip", 100, |rng| {
+        let dims = random_dims(rng);
+        let (x, y, z) = (rng.below(dims.nx), rng.below(dims.ny), rng.below(dims.nz));
+        let id = dims.point_id(x, y, z);
+        prop_assert!(dims.coords(id) == (x, y, z), "roundtrip failed at {x},{y},{z}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rdd_aggregate_by_key_is_a_partition_of_inputs() {
+    check("aggregate_partition", 40, |rng| {
+        let n = 1 + rng.below(500);
+        let n_keys = 1 + rng.below(20);
+        let parts = 1 + rng.below(8);
+        let items: Vec<(u64, u64)> = (0..n)
+            .map(|i| (rng.below(n_keys) as u64, i as u64))
+            .collect();
+        let mut expected: Vec<u64> = items.iter().map(|(_, v)| *v).collect();
+        expected.sort_unstable();
+        let mut cluster = SimCluster::new(ClusterSpec::lncc());
+        let (grouped, _) = Rdd::from_vec(items, parts).aggregate_by_key(
+            parts,
+            &mut cluster,
+            "s",
+            |v| vec![v],
+            |c, v| c.push(v),
+            |c, mut o| c.append(&mut o),
+            |_, c| c.len() as u64,
+        );
+        let mut got: Vec<u64> = grouped
+            .collect()
+            .into_iter()
+            .flat_map(|(_, vs)| vs)
+            .collect();
+        got.sort_unstable();
+        prop_assert!(got == expected, "values lost or duplicated by shuffle");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_eq5_error_bounded_for_every_type() {
+    check("eq5_bounds", 30, |rng| {
+        let n = 50 + rng.below(500);
+        let shift = rng.uniform(-10.0, 10.0);
+        let scale = rng.uniform(0.1, 100.0);
+        let v: Vec<f32> = (0..n)
+            .map(|_| (shift + scale * rng.std_normal()) as f32)
+            .collect();
+        for &t in &DistType::ALL {
+            let f = stats::fit_single(&v, t, DEFAULT_BINS);
+            prop_assert!(
+                (0.0..=PENALTY_ERROR).contains(&f.error),
+                "{t:?} error {} out of bounds",
+                f.error
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fit_best_never_worse_than_any_candidate() {
+    check("fit_best_min", 25, |rng| {
+        let n = 100 + rng.below(400);
+        let v: Vec<f32> = (0..n).map(|_| rng.gamma(2.0, 3.0) as f32).collect();
+        let best = stats::fit_best(&v, &DistType::ALL, DEFAULT_BINS);
+        for &t in &DistType::ALL {
+            let f = stats::fit_single(&v, t, DEFAULT_BINS);
+            prop_assert!(
+                best.error <= f.error + 1e-12,
+                "best {:?} {} beaten by {t:?} {}",
+                best.dist,
+                best.error,
+                f.error
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_scaling_preserves_normal_uniform_fit_quality() {
+    // Multiplicative gains (the generator's grouping mechanism) must not
+    // change which family fits: normal stays normal under scaling.
+    check("scale_invariance", 20, |rng| {
+        let n = 800;
+        let base: Vec<f64> = (0..n).map(|_| rng.normal(10.0, 1.5)).collect();
+        let gain = rng.uniform(0.5, 2.0);
+        let v: Vec<f32> = base.iter().map(|x| (x * gain) as f32).collect();
+        let f = stats::fit_single(&v, DistType::Normal, DEFAULT_BINS);
+        prop_assert!(f.error < 0.35, "scaled normal fit error {}", f.error);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_point_stats_shift_and_scale() {
+    check("stats_affine", 40, |rng| {
+        let n = 100 + rng.below(200);
+        let v: Vec<f32> = (0..n).map(|_| rng.std_normal() as f32).collect();
+        let scale = rng.uniform(0.5, 10.0);
+        let shift = rng.uniform(-5.0, 5.0);
+        let w: Vec<f32> = v.iter().map(|x| (*x as f64 * scale + shift) as f32).collect();
+        let sv = PointStats::of(&v);
+        let sw = PointStats::of(&w);
+        prop_assert!(
+            (sw.mean - (sv.mean * scale + shift)).abs() < 1e-3 * (1.0 + sw.mean.abs()),
+            "mean affine"
+        );
+        prop_assert!(
+            (sw.std - sv.std * scale).abs() < 1e-3 * (1.0 + sw.std.abs()),
+            "std scale"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_histogram_mass_conserved() {
+    check("histogram_mass", 40, |rng| {
+        let n = 1 + rng.below(1000);
+        let bins = 1 + rng.below(64);
+        let v: Vec<f32> = (0..n).map(|_| rng.cauchy(0.0, 2.0) as f32).collect();
+        let s = PointStats::of(&(if v.len() >= 2 { v.clone() } else { vec![v[0], v[0]] }));
+        let h = stats::histogram(&v, s.min, s.max, bins);
+        let total: f64 = h.iter().sum();
+        prop_assert!(total == v.len() as f64, "mass {total} != {}", v.len());
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_random_sample_sorted_distinct_in_range() {
+    check("random_sample", 50, |rng| {
+        let n = 1 + rng.below(5000);
+        let rate = rng.f64();
+        let s = random_sample(rng, n, rate);
+        prop_assert!(!s.is_empty() && s.len() <= n);
+        prop_assert!(s.windows(2).all(|w| w[0] < w[1]), "not sorted-distinct");
+        prop_assert!(*s.last().unwrap() < n, "index out of range");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_slice_features_percentages_sum_to_one() {
+    check("features_sum", 30, |rng| {
+        let n = 1 + rng.below(300);
+        let means: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+        let stds: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+        let types: Vec<DistType> = (0..n)
+            .map(|_| DistType::from_id(rng.below(10)).unwrap())
+            .collect();
+        let f = SliceFeatures::from_points(&means, &stds, &types);
+        let sum: f64 = f.type_percentages.iter().sum();
+        prop_assert!((sum - 1.0).abs() < 1e-9, "percentages sum {sum}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tree_json_roundtrip_predictions() {
+    check("tree_roundtrip", 10, |rng| {
+        let n = 50 + rng.below(200);
+        let samples: Vec<Sample> = (0..n)
+            .map(|_| {
+                let label = rng.below(4);
+                Sample {
+                    features: vec![
+                        label as f64 * 3.0 + rng.std_normal() * 0.3,
+                        rng.std_normal(),
+                    ],
+                    label,
+                }
+            })
+            .collect();
+        let tree = DecisionTree::train(&samples, TreeParams::default())
+            .map_err(|e| e.to_string())?;
+        let back = DecisionTree::from_json(
+            &Json::parse(&tree.to_json().to_string()).map_err(|e| e.to_string())?,
+        )
+        .map_err(|e| e.to_string())?;
+        for s in &samples {
+            prop_assert!(
+                tree.predict(&s.features) == back.predict(&s.features),
+                "roundtrip prediction diverged"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_arbitrary_values() {
+    check("json_roundtrip", 60, |rng| {
+        fn gen(rng: &mut Rng, depth: usize) -> Json {
+            match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+                0 => Json::Null,
+                1 => Json::Bool(rng.f64() < 0.5),
+                2 => Json::Num((rng.f64() * 2000.0 - 1000.0).round()),
+                3 => Json::Str(format!("s{}\n\"x\"", rng.below(1000))),
+                4 => Json::Arr((0..rng.below(5)).map(|_| gen(rng, depth - 1)).collect()),
+                _ => Json::Obj(
+                    (0..rng.below(5))
+                        .map(|i| (format!("k{i}"), gen(rng, depth - 1)))
+                        .collect(),
+                ),
+            }
+        }
+        let j = gen(rng, 3);
+        let round = Json::parse(&j.to_string()).map_err(|e| e.to_string())?;
+        prop_assert!(round == j, "json roundtrip mismatch");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_toml_numbers_roundtrip() {
+    check("toml_numbers", 50, |rng| {
+        let i = rng.next_u64() as i64 / 1000;
+        let f = rng.uniform(-1e6, 1e6);
+        let doc = format!("a = {i}\nb = {f:.6}\n");
+        let d = TomlDoc::parse(&doc).map_err(|e| e)?;
+        prop_assert!(d.i64_or("a", i64::MIN) == i, "int roundtrip");
+        prop_assert!((d.f64_or("b", f64::NAN) - f).abs() < 1e-3, "float roundtrip");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cluster_stage_bounds() {
+    // Makespan is bounded below by the longest task and the average load,
+    // and above by serial execution.
+    check("stage_bounds", 40, |rng| {
+        let spec = ClusterSpec::g5k(1 + rng.below(64));
+        let slots = spec.total_slots() as f64;
+        let overhead = spec.task_overhead;
+        let n = 1 + rng.below(300);
+        let costs: Vec<f64> = (0..n).map(|_| rng.f64() * 0.1).collect();
+        let mut c = SimCluster::new(spec);
+        let t = c.run_stage("s", &costs);
+        let with_oh: Vec<f64> = costs.iter().map(|x| x + overhead).collect();
+        let serial: f64 = with_oh.iter().sum();
+        let longest = with_oh.iter().cloned().fold(0.0, f64::max);
+        prop_assert!(t <= serial + 1e-9, "makespan above serial");
+        prop_assert!(t >= longest - 1e-9, "makespan below longest task");
+        prop_assert!(t >= serial / slots - 1e-9, "makespan below average load");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_shuffle_monotone_in_bytes() {
+    check("shuffle_monotone", 30, |rng| {
+        let nodes = 2 + rng.below(63);
+        let a = rng.below(1 << 28) as u64;
+        let b = a + rng.below(1 << 28) as u64;
+        let ta = SimCluster::new(ClusterSpec::g5k(nodes)).charge_shuffle("s", a);
+        let tb = SimCluster::new(ClusterSpec::g5k(nodes)).charge_shuffle("s", b);
+        prop_assert!(tb >= ta - 1e-12, "shuffle not monotone: {a}B->{ta}s {b}B->{tb}s");
+        Ok(())
+    });
+}
