@@ -22,14 +22,16 @@ fn main() -> Result<()> {
         data.spec.dims.nx
     );
 
-    // 3. Load the AOT-compiled fitting artifacts (built by `make artifacts`).
-    let engine = Engine::load_default(&cfg.artifacts_dir)?;
-    println!("PJRT platform: {}", engine.platform());
+    // 3. Build the compute backend: native by default (no artifacts
+    //    needed); set PDFFLOW_BACKEND=xla on an xla-feature build to use
+    //    the AOT-compiled PJRT engine instead.
+    let backend = cfg.make_backend()?;
+    println!("compute backend: {}", backend.name());
 
     // 4. Run Baseline, then Grouping+ML, on the configured slice.
     let mut pipeline = Pipeline::new(
         &data,
-        &engine,
+        backend.as_ref(),
         SimCluster::new(cfg.cluster.clone()),
         cfg.pipeline.clone(),
     );

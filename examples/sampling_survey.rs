@@ -24,10 +24,10 @@ fn main() -> Result<()> {
     cfg.data_dir = "data/example-seismic".into();
 
     let data = SyntheticDataset::generate(&cfg.dataset, &cfg.data_dir)?;
-    let engine = Engine::load_default(&cfg.artifacts_dir)?;
+    let backend = cfg.make_backend()?;
     let mut pipeline = Pipeline::new(
         &data,
-        &engine,
+        backend.as_ref(),
         SimCluster::new(cfg.cluster.clone()),
         cfg.pipeline.clone(),
     );
@@ -37,7 +37,7 @@ fn main() -> Result<()> {
     let reader = DatasetReader::new(&data);
     let cache = WindowCache::new(512 << 20);
     let mut cluster = SimCluster::new(cfg.cluster.clone());
-    let full = full_slice_features(&reader, &cache, &engine, &mut cluster, &tree, cfg.slice)?;
+    let full = full_slice_features(&reader, &cache, backend.as_ref(), &mut cluster, &tree, cfg.slice)?;
 
     for sampler in [Sampler::Random, Sampler::KMeans] {
         println!(
@@ -54,7 +54,7 @@ fn main() -> Result<()> {
         };
         for &rate in rates {
             let rep = run_sampling(
-                &reader, &cache, &engine, &mut cluster, &tree, cfg.slice, rate, sampler, 42,
+                &reader, &cache, backend.as_ref(), &mut cluster, &tree, cfg.slice, rate, sampler, 42,
             )?;
             println!(
                 "{:<8} {:>9} {:>12} {:>13} {:>10.4}",

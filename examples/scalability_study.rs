@@ -22,7 +22,7 @@ fn main() -> Result<()> {
     cfg.data_dir = "data/example-seismic".into(); // shared with seismic_slice
 
     let data = SyntheticDataset::generate(&cfg.dataset, &cfg.data_dir)?;
-    let engine = Engine::load_default(&cfg.artifacts_dir)?;
+    let backend = cfg.make_backend()?;
 
     // Fig 12 analog: loading time vs nodes (cold cache each time).
     println!("{:<8} {:>14}", "nodes", "loading(sim)");
@@ -31,7 +31,7 @@ fn main() -> Result<()> {
         let cache = WindowCache::new(0);
         let mut cluster = SimCluster::new(ClusterSpec::g5k(nodes));
         for w in data.spec.dims.windows(cfg.slice, cfg.pipeline.window_lines) {
-            load_window(&reader, &cache, &engine, &mut cluster, w)?;
+            load_window(&reader, &cache, backend.as_ref(), &mut cluster, w)?;
         }
         println!("{:<8} {:>14}", nodes, fmt_secs(cluster.total()));
     }
@@ -51,7 +51,7 @@ fn main() -> Result<()> {
     for nodes in [10, 20, 30, 40, 50, 60] {
         let mut pipeline = Pipeline::new(
             &data,
-            &engine,
+            backend.as_ref(),
             SimCluster::new(ClusterSpec::g5k(nodes)),
             cfg.pipeline.clone(),
         );

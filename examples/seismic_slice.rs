@@ -43,10 +43,10 @@ fn main() -> Result<()> {
         fmt_secs(sw.secs())
     );
 
-    let engine = Engine::load_default(&cfg.artifacts_dir)?;
+    let backend = cfg.make_backend()?;
     let mut pipeline = Pipeline::new(
         &data,
-        &engine,
+        backend.as_ref(),
         SimCluster::new(cfg.cluster.clone()),
         cfg.pipeline.clone(),
     );
@@ -106,7 +106,7 @@ fn main() -> Result<()> {
     let cache = WindowCache::new(512 << 20);
     let mut cluster = SimCluster::new(cfg.cluster.clone());
     let rep = run_sampling(
-        &reader, &cache, &engine, &mut cluster, &tree, cfg.slice, 0.1, Sampler::Random, 42,
+        &reader, &cache, backend.as_ref(), &mut cluster, &tree, cfg.slice, 0.1, Sampler::Random, 42,
     )?;
     println!(
         "\nsampling (rate 0.1): {} points, load {} compute {} — slice features:",

@@ -6,8 +6,10 @@
 //!   but never reports its effect);
 //! * `forest`   — random forest vs the paper's single decision tree for
 //!   the ML method's type prediction;
-//! * `batch`    — PJRT batching policy (points per execute) on the
-//!   runtime hot path.
+//! * `batch`    — backend batching policy (points per execute call) on
+//!   the runtime hot path.
+//!
+//! Runs on the backend selected by `PDFFLOW_BACKEND` (default native).
 
 use std::time::Instant;
 
@@ -18,7 +20,7 @@ use pdfflow::cube::CubeDims;
 use pdfflow::datagen::{DatasetSpec, SyntheticDataset};
 use pdfflow::mltree::forest::{ForestParams, RandomForest};
 use pdfflow::mltree::{DecisionTree, Sample, TreeParams};
-use pdfflow::runtime::{ArtifactKind, Engine};
+use pdfflow::runtime::{make_backend, BackendKind, BackendOptions};
 use pdfflow::stats::{self, DistType};
 use pdfflow::util::prng::Rng;
 
@@ -30,7 +32,10 @@ fn dataset() -> SyntheticDataset {
 }
 
 fn main() {
-    let engine = Engine::load_default("artifacts").expect("run `make artifacts`");
+    let kind = BackendKind::resolve(None).expect("PDFFLOW_BACKEND");
+    let backend = make_backend(kind, "artifacts", &BackendOptions::default())
+        .expect("backend construction");
+    println!("backend: {}", backend.name());
     let ds = dataset();
     let slice = ds.spec.dims.nz * 201 / 501;
 
@@ -45,7 +50,7 @@ fn main() {
             ..PipelineConfig::default()
         };
         cfg.cache_bytes = 512 << 20;
-        let mut pipe = Pipeline::new(&ds, &engine, SimCluster::new(ClusterSpec::lncc()), cfg);
+        let mut pipe = Pipeline::new(&ds, backend.as_ref(), SimCluster::new(ClusterSpec::lncc()), cfg);
         let r = pipe.run_slice(Method::Grouping, slice, TypeSet::Four).unwrap();
         println!(
             "{:<12} {:>8} {:>11.2}s {:>10.4}",
@@ -119,27 +124,23 @@ fn main() {
         );
     }
 
-    // ---- batch: PJRT batching policy ----------------------------------
+    // ---- batch: backend batching policy -------------------------------
     println!("\n== ablation: runtime batching (fit_all4, 1536 points x 100 obs) ==");
     let mut rng = Rng::new(13);
     let n_points = 1536;
     let values: Vec<f32> = (0..n_points * 100)
         .map(|_| rng.gamma(3.0, 2.0) as f32)
         .collect();
-    let info = engine
-        .manifest
-        .find(ArtifactKind::FitAll, None, Some(4), 100)
-        .unwrap()
-        .clone();
-    engine.warm(&info).unwrap();
-    println!("{:<22} {:>12} {:>14}", "points per run() call", "total", "per point");
+    backend.warm_all_for(100).unwrap();
+    backend.run_fit_all(&values[..100 * 64], 64, 100, 4).unwrap(); // warm-up
+    println!("{:<22} {:>12} {:>14}", "points per call", "total", "per point");
     for chunk in [64, 256, 512, 1536] {
         let t0 = Instant::now();
         let mut at = 0;
         while at < n_points {
             let take = chunk.min(n_points - at);
-            engine
-                .run(&info, &values[at * 100..(at + take) * 100], take)
+            backend
+                .run_fit_all(&values[at * 100..(at + take) * 100], take, 100, 4)
                 .unwrap();
             at += take;
         }
@@ -151,5 +152,5 @@ fn main() {
             dt / n_points as f64 * 1e6
         );
     }
-    println!("(the executor pads to the 64-row artifact batch; larger call chunks only\n amortize literal/dispatch overhead)");
+    println!("(XLA pads to the fixed artifact batch, native splits into thread chunks;\n larger call chunks amortize dispatch overhead either way)");
 }

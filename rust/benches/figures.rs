@@ -1,12 +1,14 @@
 //! Paper-figure bench harness (criterion substitute; harness = false).
 //!
 //! ```text
-//! cargo bench --bench figures                  # all figures, quick scale
-//! cargo bench --bench figures -- fig08         # one figure
-//! cargo bench --bench figures -- all --full    # full-scale datasets
+//! cargo bench --bench figures                        # all figures, quick scale
+//! cargo bench --bench figures -- fig08               # one figure
+//! cargo bench --bench figures -- all --full          # full-scale datasets
+//! cargo bench --bench figures -- fig08 --backend xla # PJRT (xla builds)
 //! ```
 
 use pdfflow::bench::BenchEnv;
+use pdfflow::runtime::BackendKind;
 use pdfflow::util::cli::Args;
 
 fn main() {
@@ -21,12 +23,14 @@ fn main() {
         .subcommand
         .clone()
         .unwrap_or_else(|| "all".to_string());
+    let kind = BackendKind::resolve(args.opt("backend")).expect("--backend / PDFFLOW_BACKEND");
     let env = BenchEnv::new(
+        kind,
         &args.opt_or("artifacts", "artifacts"),
         &args.opt_or("data-dir", "data"),
         !full,
     )
-    .expect("run `make artifacts` first");
+    .expect("backend construction (xla needs `make artifacts`)");
     if let Err(e) = env.run(&id) {
         eprintln!("figure bench failed: {e}");
         std::process::exit(1);

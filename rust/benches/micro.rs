@@ -2,8 +2,9 @@
 //!
 //! Measures the L3 hot-path building blocks in isolation: PRNG draw
 //! throughput, per-point statistics, Eq.5 fitting oracle, grouping hash,
-//! decision-tree prediction, JSON parsing, RDD aggregation, and PJRT
-//! execute latency per artifact shape. Prints mean/p50/p95 per op.
+//! decision-tree prediction, JSON parsing, RDD aggregation, and backend
+//! execute latency per batch shape (native always; PJRT with the `xla`
+//! feature + artifacts). Prints mean/p50/p95 per op.
 
 use std::time::Instant;
 
@@ -11,7 +12,7 @@ use pdfflow::cluster::{ClusterSpec, SimCluster};
 use pdfflow::coordinator::methods::quantize;
 use pdfflow::mltree::{DecisionTree, Sample, TreeParams};
 use pdfflow::rdd::Rdd;
-use pdfflow::runtime::Engine;
+use pdfflow::runtime::{Backend, NativeBackend};
 use pdfflow::stats::{self, DistType, PointStats, DEFAULT_BINS};
 use pdfflow::util::json::Json;
 use pdfflow::util::prng::Rng;
@@ -111,28 +112,41 @@ fn main() {
         std::hint::black_box(g.n_items());
     });
 
-    // PJRT execute latency per artifact shape (the L3<->L2 boundary).
-    if let Ok(engine) = Engine::load_default("artifacts") {
-        for (name, b, n, kind) in [
-            ("stats 64x100", 64usize, 100usize, "stats"),
-            ("fit_all4 64x100", 64, 100, "fit_all4"),
-            ("fit_all10 64x100", 64, 100, "fit_all10"),
-            ("fit_single_normal 64x100", 64, 100, "fit_single"),
-            ("stats 256x1000", 256, 1000, "stats"),
-            ("fit_all10 256x1000", 256, 1000, "fit_all10"),
-        ] {
-            let values: Vec<f32> = (0..b * n).map(|_| rng.gamma(3.0, 2.0) as f32).collect();
-            let run = |engine: &Engine| match kind {
-                "stats" => engine.run_stats(&values, b, n).unwrap(),
-                "fit_all4" => engine.run_fit_all(&values, b, n, 4).unwrap(),
-                "fit_all10" => engine.run_fit_all(&values, b, n, 10).unwrap(),
-                _ => engine
+    // Backend execute latency per batch shape (the L3<->L2 boundary).
+    // Native always runs; the PJRT engine joins when built with the xla
+    // feature and artifacts exist — the per-shape rows are the
+    // apples-to-apples native-vs-XLA comparison.
+    let shapes = [
+        ("stats 64x100", 64usize, 100usize, "stats"),
+        ("fit_all4 64x100", 64, 100, "fit_all4"),
+        ("fit_all10 64x100", 64, 100, "fit_all10"),
+        ("fit_single_normal 64x100", 64, 100, "fit_single"),
+        ("stats 256x1000", 256, 1000, "stats"),
+        ("fit_all10 256x1000", 256, 1000, "fit_all10"),
+    ];
+    #[cfg_attr(not(feature = "xla"), allow(unused_mut))]
+    let mut backends: Vec<(&str, Box<dyn Backend>)> =
+        vec![("native", Box::new(NativeBackend::new()))];
+    #[cfg(feature = "xla")]
+    if let Ok(engine) = pdfflow::runtime::Engine::load_default("artifacts") {
+        backends.push(("pjrt", Box::new(engine)));
+    }
+    // Shapes outer, backends inner: every backend measures the SAME
+    // draws for a given shape, keeping the comparison apples-to-apples.
+    for (name, b, n, kind) in shapes {
+        let values: Vec<f32> = (0..b * n).map(|_| rng.gamma(3.0, 2.0) as f32).collect();
+        for (label, backend) in &backends {
+            let run = |backend: &dyn Backend| match kind {
+                "stats" => backend.run_stats(&values, b, n).unwrap(),
+                "fit_all4" => backend.run_fit_all(&values, b, n, 4).unwrap(),
+                "fit_all10" => backend.run_fit_all(&values, b, n, 10).unwrap(),
+                _ => backend
                     .run_fit_single(&values, b, n, DistType::Normal)
                     .unwrap(),
             };
-            run(&engine); // compile outside measurement
-            bench(&format!("pjrt::{name} (per point)"), b, 0.5, || {
-                std::hint::black_box(run(&engine).n_rows);
+            run(backend.as_ref()); // warm-up / compile outside measurement
+            bench(&format!("{label}::{name} (per point)"), b, 0.5, || {
+                std::hint::black_box(run(backend.as_ref()).n_rows);
             });
         }
     }

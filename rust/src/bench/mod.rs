@@ -19,7 +19,7 @@ use crate::coordinator::{
 use crate::coordinator::mlmodel;
 use crate::cube::CubeDims;
 use crate::datagen::SyntheticDataset;
-use crate::runtime::Engine;
+use crate::runtime::{make_backend, Backend, BackendKind, BackendOptions};
 use crate::storage::{DatasetReader, WindowCache};
 use crate::util::timing::fmt_secs;
 use crate::{PdfflowError, Result};
@@ -30,9 +30,9 @@ pub const FIGURES: &[&str] = &[
     "fig15", "fig16", "fig17", "fig18", "fig19", "fig20", "treestats",
 ];
 
-/// Bench environment: engine + dataset root + scale.
+/// Bench environment: compute backend + dataset root + scale.
 pub struct BenchEnv {
-    pub engine: Engine,
+    pub backend: Box<dyn Backend>,
     pub data_root: PathBuf,
     /// Quick scale (default for `cargo bench`): ~100x smaller datasets,
     /// reduced sweeps. Full scale via `--full` / PDFFLOW_BENCH_FULL=1.
@@ -40,9 +40,17 @@ pub struct BenchEnv {
 }
 
 impl BenchEnv {
-    pub fn new(artifacts_dir: &str, data_root: &str, quick: bool) -> Result<BenchEnv> {
+    /// Build a bench environment on the given backend — the harness's
+    /// apples-to-apples native-vs-XLA comparison point: run the same
+    /// figure once per backend and diff the real-time columns.
+    pub fn new(
+        kind: BackendKind,
+        artifacts_dir: &str,
+        data_root: &str,
+        quick: bool,
+    ) -> Result<BenchEnv> {
         Ok(BenchEnv {
-            engine: Engine::load_default(artifacts_dir)?,
+            backend: make_backend(kind, artifacts_dir, &BackendOptions::default())?,
             data_root: PathBuf::from(data_root),
             quick,
         })
@@ -137,7 +145,13 @@ impl BenchEnv {
 
     fn header(&self, id: &str, title: &str) {
         println!();
-        println!("=== {} — {} [{} scale] ===", id, title, if self.quick { "quick" } else { "full" });
+        println!(
+            "=== {} — {} [{} scale, {} backend] ===",
+            id,
+            title,
+            if self.quick { "quick" } else { "full" },
+            self.backend.name()
+        );
     }
 
     /// The paper's small workload: 6 lines (3006 points at paper scale).
@@ -153,7 +167,7 @@ impl BenchEnv {
         let ds = self.dataset(&cfg)?;
         let mut pcfg = cfg.pipeline.clone();
         pcfg.window_lines = 3; // paper: 3 lines per window, 2 windows
-        let mut pipe = Pipeline::new(&ds, &self.engine, SimCluster::new(ClusterSpec::lncc()), pcfg);
+        let mut pipe = Pipeline::new(&ds, self.backend.as_ref(), SimCluster::new(ClusterSpec::lncc()), pcfg);
         pipe.ensure_tree(cfg.train_slice, TypeSet::Ten, 25_000)?;
 
         self.header("fig06", "PDF computation time, small workload (6 lines), LNCC");
@@ -241,7 +255,7 @@ impl BenchEnv {
             let mut pcfg = cfg.pipeline.clone();
             pcfg.window_lines = w;
             let mut pipe =
-                Pipeline::new(&ds, &self.engine, SimCluster::new(ClusterSpec::lncc()), pcfg);
+                Pipeline::new(&ds, self.backend.as_ref(), SimCluster::new(ClusterSpec::lncc()), pcfg);
             let lines = 2 * w;
             let r = pipe.run_lines(Method::Grouping, cfg.slice, TypeSet::Four, lines)?;
             println!(
@@ -279,7 +293,7 @@ impl BenchEnv {
             let mut pcfg = cfg.pipeline.clone();
             pcfg.window_lines = w;
             let mut pipe =
-                Pipeline::new(&ds, &self.engine, SimCluster::new(ClusterSpec::lncc()), pcfg);
+                Pipeline::new(&ds, self.backend.as_ref(), SimCluster::new(ClusterSpec::lncc()), pcfg);
             pipe.ensure_tree(cfg.train_slice, TypeSet::Ten, 25_000)?;
             print!("{:<8}", w);
             let lines = 2 * w;
@@ -300,7 +314,7 @@ impl BenchEnv {
         let ds = self.dataset(&cfg)?;
         let mut pcfg = cfg.pipeline.clone();
         pcfg.window_lines = 25.min(ds.spec.dims.ny); // paper's tuned window
-        let mut pipe = Pipeline::new(&ds, &self.engine, SimCluster::new(ClusterSpec::lncc()), pcfg);
+        let mut pipe = Pipeline::new(&ds, self.backend.as_ref(), SimCluster::new(ClusterSpec::lncc()), pcfg);
         pipe.ensure_tree(cfg.train_slice, TypeSet::Ten, 25_000)?;
         self.header("fig10", "PDF computation time, whole slice, LNCC");
         println!(
@@ -354,7 +368,7 @@ impl BenchEnv {
             let mut real = 0.0;
             for w in ds.spec.dims.windows(cfg.slice, cfg.pipeline.window_lines) {
                 let lw = crate::coordinator::loader::load_window(
-                    &reader, &cache, &self.engine, &mut cluster, w,
+                    &reader, &cache, self.backend.as_ref(), &mut cluster, w,
                 )?;
                 real += lw.real_s;
             }
@@ -391,7 +405,7 @@ impl BenchEnv {
             let mut pcfg = cfg.pipeline.clone();
             pcfg.window_lines = 25.min(ds.spec.dims.ny);
             let mut pipe =
-                Pipeline::new(&ds, &self.engine, SimCluster::new(ClusterSpec::g5k(n)), pcfg);
+                Pipeline::new(&ds, self.backend.as_ref(), SimCluster::new(ClusterSpec::g5k(n)), pcfg);
             pipe.ensure_tree(cfg.train_slice, TypeSet::Ten, 25_000)?;
             print!("{:<8}", n);
             let mut ml_t = 0.0;
@@ -437,7 +451,7 @@ impl BenchEnv {
         let ds = self.dataset(&cfg)?;
         let mut pcfg = cfg.pipeline.clone();
         pcfg.window_lines = 25.min(ds.spec.dims.ny);
-        let mut pipe = Pipeline::new(&ds, &self.engine, SimCluster::new(ClusterSpec::lncc()), pcfg);
+        let mut pipe = Pipeline::new(&ds, self.backend.as_ref(), SimCluster::new(ClusterSpec::lncc()), pcfg);
         pipe.ensure_tree(cfg.train_slice, TypeSet::Four, 25_000)?;
         let tree = pipe.tree.clone().unwrap();
         let id = if sampler == Sampler::Random { "fig15" } else { "fig16" };
@@ -453,7 +467,7 @@ impl BenchEnv {
             let rep = run_sampling(
                 &reader,
                 &cache,
-                &self.engine,
+                self.backend.as_ref(),
                 &mut cluster,
                 &tree,
                 cfg.slice,
@@ -482,20 +496,20 @@ impl BenchEnv {
         let ds = self.dataset(&cfg)?;
         let mut pcfg = cfg.pipeline.clone();
         pcfg.window_lines = 25.min(ds.spec.dims.ny);
-        let mut pipe = Pipeline::new(&ds, &self.engine, SimCluster::new(ClusterSpec::lncc()), pcfg);
+        let mut pipe = Pipeline::new(&ds, self.backend.as_ref(), SimCluster::new(ClusterSpec::lncc()), pcfg);
         pipe.ensure_tree(cfg.train_slice, TypeSet::Four, 25_000)?;
         let tree = pipe.tree.clone().unwrap();
         let reader = DatasetReader::new(&ds);
         let cache = WindowCache::new(512 << 20);
         let mut cluster = SimCluster::new(ClusterSpec::lncc());
-        let full = full_slice_features(&reader, &cache, &self.engine, &mut cluster, &tree, cfg.slice)?;
+        let full = full_slice_features(&reader, &cache, self.backend.as_ref(), &mut cluster, &tree, cfg.slice)?;
         self.header("fig17", "Euclidean distance of type percentages vs all points");
         println!("{:<8} {:>12} {:>12}", "rate", "random", "kmeans");
         for rate in [0.05, 0.1, 0.2, 0.4, 0.6, 0.8] {
             let mut d = [0.0f64; 2];
             for (i, sampler) in [Sampler::Random, Sampler::KMeans].into_iter().enumerate() {
                 let rep = run_sampling(
-                    &reader, &cache, &self.engine, &mut cluster, &tree, cfg.slice, rate, sampler, 42,
+                    &reader, &cache, self.backend.as_ref(), &mut cluster, &tree, cfg.slice, rate, sampler, 42,
                 )?;
                 d[i] = rep.features.type_distance(&full);
             }
@@ -529,7 +543,7 @@ impl BenchEnv {
                     pcfg.window_lines = 25.min(ds.spec.dims.ny);
                     let mut pipe = Pipeline::new(
                         &ds,
-                        &self.engine,
+                        self.backend.as_ref(),
                         SimCluster::new(ClusterSpec::g5k(n)),
                         pcfg,
                     );
@@ -551,7 +565,7 @@ impl BenchEnv {
         let cache = WindowCache::new(512 << 20);
         let mut pipe = Pipeline::new(
             &ds,
-            &self.engine,
+            self.backend.as_ref(),
             SimCluster::new(ClusterSpec::g5k(30)),
             cfg.pipeline.clone(),
         );
@@ -563,7 +577,7 @@ impl BenchEnv {
             let rates = [0.001, 0.01, 0.1, 1.0];
             for r in rates {
                 let rep = run_sampling(
-                    &reader, &cache, &self.engine, &mut cluster, &tree, cfg.slice, r,
+                    &reader, &cache, self.backend.as_ref(), &mut cluster, &tree, cfg.slice, r,
                     Sampler::Random, 42,
                 )?;
                 total += rep.compute_sim_s;
@@ -586,7 +600,7 @@ impl BenchEnv {
         pcfg.window_lines = 1; // paper: 1 line per window, 2 windows
         let mut pipe = Pipeline::new(
             &ds,
-            &self.engine,
+            self.backend.as_ref(),
             SimCluster::new(ClusterSpec::g5k(30)),
             pcfg,
         );
@@ -633,7 +647,7 @@ impl BenchEnv {
                     pcfg.window_lines = (ds.spec.dims.ny / 4).max(1);
                     let mut pipe = Pipeline::new(
                         &ds,
-                        &self.engine,
+                        self.backend.as_ref(),
                         SimCluster::new(ClusterSpec::g5k(n)),
                         pcfg,
                     );
@@ -673,7 +687,7 @@ impl BenchEnv {
                 let data = mlmodel::build_training_data(
                     &reader,
                     &cache,
-                    &self.engine,
+                    self.backend.as_ref(),
                     &mut cluster,
                     &ds.spec.dims,
                     &slices,

@@ -7,6 +7,7 @@ use std::path::Path;
 use crate::cluster::ClusterSpec;
 use crate::cube::CubeDims;
 use crate::datagen::DatasetSpec;
+use crate::runtime::{self, Backend, BackendKind, BackendOptions};
 use crate::util::toml::TomlDoc;
 use crate::{PdfflowError, Result};
 
@@ -64,6 +65,16 @@ pub struct ExperimentConfig {
     pub train_slice: usize,
     pub data_dir: String,
     pub artifacts_dir: String,
+    /// Compute backend. Precedence: `--backend` CLI flag > `backend`
+    /// config key > `PDFFLOW_BACKEND` env > native.
+    pub backend: BackendKind,
+}
+
+/// Backend default for programmatic constructors: the `PDFFLOW_BACKEND`
+/// env override when readable, else native. (`preset`/`from_file`
+/// additionally turn an unparseable env value into a hard error.)
+fn default_backend() -> BackendKind {
+    BackendKind::from_env().ok().flatten().unwrap_or(BackendKind::Native)
 }
 
 impl ExperimentConfig {
@@ -81,6 +92,7 @@ impl ExperimentConfig {
             train_slice: 0,
             data_dir: "data/set1".into(),
             artifacts_dir: "artifacts".into(),
+            backend: default_backend(),
         }
     }
 
@@ -127,17 +139,37 @@ impl ExperimentConfig {
             train_slice: 0,
             data_dir: "data/small".into(),
             artifacts_dir: "artifacts".into(),
+            backend: default_backend(),
         }
     }
 
     pub fn preset(name: &str) -> Result<ExperimentConfig> {
-        match name {
-            "set1" => Ok(Self::set1()),
-            "set2" => Ok(Self::set2()),
-            "set3" => Ok(Self::set3()),
-            "small" => Ok(Self::small()),
-            other => Err(PdfflowError::Config(format!("unknown preset {other:?}"))),
+        let mut cfg = match name {
+            "set1" => Self::set1(),
+            "set2" => Self::set2(),
+            "set3" => Self::set3(),
+            "small" => Self::small(),
+            other => return Err(PdfflowError::Config(format!("unknown preset {other:?}"))),
+        };
+        // Surface an unparseable PDFFLOW_BACKEND as an error here (the
+        // constructors above silently fall back to native).
+        if let Some(k) = BackendKind::from_env()? {
+            cfg.backend = k;
         }
+        Ok(cfg)
+    }
+
+    /// Build the configured compute backend (see [`runtime::make_backend`]).
+    pub fn make_backend(&self) -> Result<Box<dyn Backend>> {
+        runtime::make_backend(
+            self.backend,
+            &self.artifacts_dir,
+            &BackendOptions {
+                batch: self.pipeline.batch,
+                workers: self.pipeline.workers,
+                bins: self.pipeline.bins,
+            },
+        )
     }
 
     /// Load from a TOML file; unspecified keys fall back to the preset
@@ -182,11 +214,19 @@ impl ExperimentConfig {
         if let Some(d) = doc.get("pipeline.persist_dir").and_then(|v| v.as_str()) {
             cfg.pipeline.persist_dir = Some(d.to_string());
         }
-        // Paths + slices.
+        // Paths + slices + backend.
         cfg.slice = doc.usize_or("slice", cfg.slice);
         cfg.train_slice = doc.usize_or("train_slice", cfg.train_slice);
         cfg.data_dir = doc.str_or("data_dir", &cfg.data_dir);
         cfg.artifacts_dir = doc.str_or("artifacts_dir", &cfg.artifacts_dir);
+        match doc.str_or("backend", "").as_str() {
+            "" => {}
+            s => {
+                cfg.backend = BackendKind::from_name(s).ok_or_else(|| {
+                    PdfflowError::Config(format!("unknown backend {s:?} (native|xla)"))
+                })?
+            }
+        }
         Ok(cfg)
     }
 }
@@ -238,6 +278,30 @@ batch = 64
         assert_eq!(c.cluster.nodes, 20);
         assert_eq!(c.pipeline.window_lines, 7);
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn backend_key_parses_and_validates() {
+        let dir = std::env::temp_dir().join(format!("pdfflow-cfg3-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("backend.toml");
+        std::fs::write(&path, "preset = \"small\"\nbackend = \"xla\"\n").unwrap();
+        let c = ExperimentConfig::from_file(&path).unwrap();
+        assert_eq!(c.backend, BackendKind::Xla);
+        std::fs::write(&path, "backend = \"spark\"\n").unwrap();
+        assert!(ExperimentConfig::from_file(&path).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn default_backend_builds() {
+        // Presets default to the native backend (unless PDFFLOW_BACKEND
+        // overrides), which must construct without any artifacts.
+        let c = ExperimentConfig::small();
+        if c.backend == BackendKind::Native {
+            let b = c.make_backend().unwrap();
+            assert_eq!(b.name(), "native");
+        }
     }
 
     #[test]

@@ -2,9 +2,9 @@
 //!
 //! For each point of the window, gather its K observation values from the
 //! K simulation files on "NFS" (one contiguous positioned read per file),
-//! then compute the per-point statistics (mean, std, …) via the stats HLO
-//! artifact — the paper computes mean/std inside the loading Map. Loaded
-//! windows are cached (§4.3.1); both real wall-clock and simulated
+//! then compute the per-point statistics (mean, std, …) via the backend's
+//! stats kernel — the paper computes mean/std inside the loading Map.
+//! Loaded windows are cached (§4.3.1); both real wall-clock and simulated
 //! cluster time are recorded.
 
 use std::sync::Arc;
@@ -12,7 +12,7 @@ use std::time::Instant;
 
 use crate::cluster::SimCluster;
 use crate::cube::{PointId, Window};
-use crate::runtime::{Engine, OutMatrix};
+use crate::runtime::{Backend, OutMatrix};
 use crate::storage::{DatasetReader, ObsMatrix, WindowCache};
 use crate::Result;
 
@@ -20,7 +20,7 @@ use crate::Result;
 pub struct LoadedWindow {
     pub window: Window,
     pub obs: Arc<ObsMatrix>,
-    /// Stats artifact output: (n_points, 12) — see `distfit.STATS_COLS`.
+    /// Stats kernel output: (n_points, 12) — see `distfit.STATS_COLS`.
     pub stats: OutMatrix,
     /// Real wall-clock spent loading (I/O + transpose + stats), seconds.
     pub real_s: f64,
@@ -50,7 +50,7 @@ impl LoadedWindow {
 pub fn load_window(
     reader: &DatasetReader,
     cache: &WindowCache,
-    engine: &Engine,
+    backend: &dyn Backend,
     cluster: &mut SimCluster,
     window: Window,
 ) -> Result<LoadedWindow> {
@@ -73,14 +73,15 @@ pub fn load_window(
         sim_s += cluster.charge_nfs("load.nfs", bytes, reads);
     }
 
-    // Per-point statistics via the stats artifact. The simulated loading
-    // stage runs one Map task per point (the paper's Algorithm 2): each
-    // task pays the emulated per-value gather cost (external Java program
-    // doing positioned reads) plus this host's real per-point share of
-    // the stats execution. Cache hits skip the gather cost.
+    // Per-point statistics via the backend's stats kernel. The simulated
+    // loading stage runs one Map task per point (the paper's Algorithm
+    // 2): each task pays the emulated per-value gather cost (external
+    // Java program doing positioned reads) plus this host's real
+    // per-point share of the stats execution. Cache hits skip the gather
+    // cost.
     let t1 = Instant::now();
     let n = obs.n_points();
-    let stats = engine.run_stats(&obs.data, n, obs.n_obs)?;
+    let stats = backend.run_stats(&obs.data, n, obs.n_obs)?;
     let stats_real = t1.elapsed().as_secs_f64();
     let gather = if cache_hit {
         0.0
@@ -105,26 +106,26 @@ mod tests {
     use super::*;
     use crate::cluster::ClusterSpec;
     use crate::datagen::{DatasetSpec, SyntheticDataset};
+    use crate::runtime::NativeBackend;
     use crate::stats::PointStats;
 
-    fn setup(tag: &str) -> (SyntheticDataset, std::path::PathBuf, Engine) {
+    fn setup(tag: &str) -> (SyntheticDataset, std::path::PathBuf, NativeBackend) {
         let dir =
             std::env::temp_dir().join(format!("pdfflow-loader-{tag}-{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&dir);
         let ds = SyntheticDataset::generate(&DatasetSpec::tiny(), &dir).unwrap();
-        let art = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        let engine = Engine::load_default(art).unwrap();
-        (ds, dir, engine)
+        let backend = NativeBackend::with_options(2, 64, 32);
+        (ds, dir, backend)
     }
 
     #[test]
     fn loads_window_with_stats_matching_oracle() {
-        let (ds, dir, engine) = setup("basic");
+        let (ds, dir, backend) = setup("basic");
         let reader = DatasetReader::new(&ds);
         let cache = WindowCache::new(64 << 20);
         let mut cluster = SimCluster::new(ClusterSpec::lncc());
         let w = Window { z: 2, y0: 0, lines: 2 };
-        let lw = load_window(&reader, &cache, &engine, &mut cluster, w).unwrap();
+        let lw = load_window(&reader, &cache, &backend, &mut cluster, w).unwrap();
         assert_eq!(lw.n_points(), 2 * ds.spec.dims.nx);
         assert!(!lw.cache_hit);
         assert!(lw.real_s > 0.0 && lw.sim_s > 0.0);
@@ -138,14 +139,14 @@ mod tests {
 
     #[test]
     fn second_load_hits_cache_and_skips_nfs() {
-        let (ds, dir, engine) = setup("cache");
+        let (ds, dir, backend) = setup("cache");
         let reader = DatasetReader::new(&ds);
         let cache = WindowCache::new(64 << 20);
         let mut cluster = SimCluster::new(ClusterSpec::lncc());
         let w = Window { z: 1, y0: 2, lines: 2 };
-        load_window(&reader, &cache, &engine, &mut cluster, w).unwrap();
+        load_window(&reader, &cache, &backend, &mut cluster, w).unwrap();
         let nfs_after_first = cluster.account("load.nfs");
-        let lw2 = load_window(&reader, &cache, &engine, &mut cluster, w).unwrap();
+        let lw2 = load_window(&reader, &cache, &backend, &mut cluster, w).unwrap();
         assert!(lw2.cache_hit);
         assert_eq!(cluster.account("load.nfs"), nfs_after_first);
         std::fs::remove_dir_all(&dir).unwrap();

@@ -2,12 +2,12 @@
 //! `ComputePDF&Error` bodies for Baseline / Grouping / Reuse / ML and
 //! the ML combinations).
 //!
-//! All numeric work goes through the AOT artifacts: Baseline and Grouping
-//! run `fit_all{4,10}` (compute every candidate type, argmin — the O(T)
-//! cost of Algorithm 3), the ML paths run exactly one `fit_single_<type>`
-//! per point (Algorithm 4's O(1) cost). The methods differ *only* in
-//! which points reach the executor and over which artifacts — exactly the
-//! paper's design space.
+//! All numeric work goes through the backend's batched kernels: Baseline
+//! and Grouping run `run_fit_all` (compute every candidate type, argmin —
+//! the O(T) cost of Algorithm 3), the ML paths run exactly one
+//! `run_fit_single` per point (Algorithm 4's O(1) cost). The methods
+//! differ *only* in which points reach the executor and over which
+//! kernels — exactly the paper's design space.
 
 use std::collections::HashMap;
 use std::time::Instant;
@@ -16,7 +16,7 @@ use crate::cluster::SimCluster;
 use crate::coordinator::loader::LoadedWindow;
 use crate::mltree::DecisionTree;
 use crate::rdd::Rdd;
-use crate::runtime::Engine;
+use crate::runtime::Backend;
 use crate::stats::DistType;
 use crate::{PdfflowError, Result};
 
@@ -255,7 +255,7 @@ fn charge_fit_stage(
 /// Run `fit_all` on a set of points, returning outcomes + timing, and
 /// charging the simulated stage.
 fn fit_all_points(
-    engine: &Engine,
+    backend: &dyn Backend,
     cluster: &mut SimCluster,
     lw: &LoadedWindow,
     idx: &[usize],
@@ -266,7 +266,7 @@ fn fit_all_points(
     }
     let values = gather_rows(lw, idx);
     let t0 = Instant::now();
-    let out = engine.run_fit_all(&values, idx.len(), lw.obs.n_obs, types.n_types())?;
+    let out = backend.run_fit_all(&values, idx.len(), lw.obs.n_obs, types.n_types())?;
     let real = t0.elapsed().as_secs_f64();
     charge_fit_stage(cluster, idx.len(), types.n_types(), real);
     let outcomes = (0..idx.len())
@@ -278,7 +278,7 @@ fn fit_all_points(
 /// Run single-type fits on points partitioned by the tree's prediction
 /// (Algorithm 4). Returns outcomes aligned with `idx` order.
 fn fit_ml_points(
-    engine: &Engine,
+    backend: &dyn Backend,
     cluster: &mut SimCluster,
     lw: &LoadedWindow,
     idx: &[usize],
@@ -317,7 +317,7 @@ fn fit_ml_points(
         let point_idx: Vec<usize> = slots.iter().map(|&s| idx[s]).collect();
         let values = gather_rows(lw, &point_idx);
         let t1 = Instant::now();
-        let out = engine.run_fit_single(&values, point_idx.len(), lw.obs.n_obs, dist)?;
+        let out = backend.run_fit_single(&values, point_idx.len(), lw.obs.n_obs, dist)?;
         let real = t1.elapsed().as_secs_f64();
         real_total += real;
         charge_fit_stage(cluster, point_idx.len(), 1, real);
@@ -330,7 +330,7 @@ fn fit_ml_points(
 
 /// Fit one loaded window with the chosen method (Algorithm 1 body).
 pub fn fit_window(
-    engine: &Engine,
+    backend: &dyn Backend,
     cluster: &mut SimCluster,
     method: Method,
     types: TypeSet,
@@ -354,9 +354,9 @@ pub fn fit_window(
         // Baseline / ML: every point goes to the executor.
         let idx: Vec<usize> = (0..n).collect();
         let (outs, _real) = if method.uses_ml() {
-            fit_ml_points(engine, cluster, lw, &idx, types, tree.unwrap())?
+            fit_ml_points(backend, cluster, lw, &idx, types, tree.unwrap())?
         } else {
-            fit_all_points(engine, cluster, lw, &idx, types)?
+            fit_all_points(backend, cluster, lw, &idx, types)?
         };
         (outs, n, n, 0, 0)
     } else {
@@ -381,9 +381,9 @@ pub fn fit_window(
         }
         let rep_idx: Vec<usize> = to_fit.iter().map(|&gi| groups[gi].rep).collect();
         let (fitted, _real) = if method.uses_ml() {
-            fit_ml_points(engine, cluster, lw, &rep_idx, types, tree.unwrap())?
+            fit_ml_points(backend, cluster, lw, &rep_idx, types, tree.unwrap())?
         } else {
-            fit_all_points(engine, cluster, lw, &rep_idx, types)?
+            fit_all_points(backend, cluster, lw, &rep_idx, types)?
         };
         let fits = rep_idx.len();
         for (i, &gi) in to_fit.iter().enumerate() {

@@ -12,7 +12,7 @@ use crate::coordinator::loader::{self, LoadedWindow};
 use crate::coordinator::methods::TypeSet;
 use crate::cube::CubeDims;
 use crate::mltree::{self, DecisionTree, Sample, TreeParams};
-use crate::runtime::Engine;
+use crate::runtime::Backend;
 use crate::storage::{DatasetReader, WindowCache};
 use crate::util::prng::Rng;
 use crate::Result;
@@ -51,7 +51,7 @@ pub fn training_slices(dims: &CubeDims, train_slice: usize, n_layers: usize) -> 
 pub fn build_training_data(
     reader: &DatasetReader,
     cache: &WindowCache,
-    engine: &Engine,
+    backend: &dyn Backend,
     cluster: &mut SimCluster,
     dims: &CubeDims,
     train_slices: &[usize],
@@ -68,13 +68,13 @@ pub fn build_training_data(
             if slice_taken >= per_slice || samples.len() >= max_points {
                 break;
             }
-            let lw: LoadedWindow = loader::load_window(reader, cache, engine, cluster, window)?;
+            let lw: LoadedWindow = loader::load_window(reader, cache, backend, cluster, window)?;
             let take = (per_slice - slice_taken)
                 .min(max_points - samples.len())
                 .min(lw.n_points());
             let values = &lw.obs.data[..take * lw.obs.n_obs];
             let t0 = std::time::Instant::now();
-            let out = engine.run_fit_all(values, take, lw.obs.n_obs, types.n_types())?;
+            let out = backend.run_fit_all(values, take, lw.obs.n_obs, types.n_types())?;
             gen_s += t0.elapsed().as_secs_f64();
             for p in 0..take {
                 let (mean, std) = lw.mean_std(p);

@@ -15,7 +15,7 @@ use crate::coordinator::mlmodel;
 use crate::cube::Window;
 use crate::datagen::SyntheticDataset;
 use crate::mltree::DecisionTree;
-use crate::runtime::Engine;
+use crate::runtime::Backend;
 use crate::storage::{DatasetReader, WindowCache};
 use crate::{PdfflowError, Result};
 
@@ -83,10 +83,10 @@ impl SliceReport {
     }
 }
 
-/// The pipeline: dataset + engine + simulated cluster + caches + model.
+/// The pipeline: dataset + backend + simulated cluster + caches + model.
 pub struct Pipeline<'a> {
     reader: DatasetReader<'a>,
-    engine: &'a Engine,
+    backend: &'a dyn Backend,
     pub cluster: SimCluster,
     pub cfg: PipelineConfig,
     cache: WindowCache,
@@ -98,14 +98,14 @@ pub struct Pipeline<'a> {
 impl<'a> Pipeline<'a> {
     pub fn new(
         dataset: &'a SyntheticDataset,
-        engine: &'a Engine,
+        backend: &'a dyn Backend,
         cluster: SimCluster,
         cfg: PipelineConfig,
     ) -> Pipeline<'a> {
         let cache = WindowCache::new(cfg.cache_bytes);
         Pipeline {
             reader: DatasetReader::new(dataset),
-            engine,
+            backend,
             cluster,
             cfg,
             cache,
@@ -113,6 +113,11 @@ impl<'a> Pipeline<'a> {
             tree: None,
             model_error: None,
         }
+    }
+
+    /// The compute backend this pipeline fits with.
+    pub fn backend(&self) -> &dyn Backend {
+        self.backend
     }
 
     pub fn dataset(&self) -> &SyntheticDataset {
@@ -151,7 +156,7 @@ impl<'a> Pipeline<'a> {
         let data = mlmodel::build_training_data(
             &self.reader,
             &self.cache,
-            self.engine,
+            self.backend,
             &mut scratch,
             &dims,
             &slices,
@@ -215,9 +220,10 @@ impl<'a> Pipeline<'a> {
                 method.name()
             )));
         }
-        // PJRT compilation happens once at warm-up, never inside the
-        // measured stages (Spark analog: executor JVM/code-gen warm-up).
-        self.engine
+        // Backend warm-up (PJRT compilation for XLA, no-op for native)
+        // happens once here, never inside the measured stages (Spark
+        // analog: executor JVM/code-gen warm-up).
+        self.backend
             .warm_all_for(self.reader.dataset().spec.n_sims)?;
         // Reuse results never leak between experiment runs.
         self.reuse = ReuseCache::default();
@@ -229,12 +235,12 @@ impl<'a> Pipeline<'a> {
             let lw = loader::load_window(
                 &self.reader,
                 &self.cache,
-                self.engine,
+                self.backend,
                 &mut self.cluster,
                 window,
             )?;
             let fit = methods::fit_window(
-                self.engine,
+                self.backend,
                 &mut self.cluster,
                 method,
                 types,

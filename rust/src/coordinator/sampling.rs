@@ -14,7 +14,7 @@ use crate::cluster::SimCluster;
 use crate::coordinator::loader;
 use crate::cube::PointId;
 use crate::mltree::DecisionTree;
-use crate::runtime::Engine;
+use crate::runtime::Backend;
 use crate::sampling::{kmeans_sample, random_sample, SliceFeatures};
 use crate::stats::DistType;
 use crate::storage::{DatasetReader, WindowCache};
@@ -55,7 +55,7 @@ pub struct SamplingReport {
 pub fn run_sampling(
     reader: &DatasetReader,
     cache: &WindowCache,
-    engine: &Engine,
+    backend: &dyn Backend,
     cluster: &mut SimCluster,
     tree: &DecisionTree,
     z: usize,
@@ -84,7 +84,7 @@ pub fn run_sampling(
             let bytes = obs.bytes();
             let reads = (ids.len() * reader.dataset().spec.n_sims) as u64;
             let t1 = Instant::now();
-            let stats = engine.run_stats(&obs.data, ids.len(), obs.n_obs)?;
+            let stats = backend.run_stats(&obs.data, ids.len(), obs.n_obs)?;
             let stats_real = t1.elapsed().as_secs_f64();
             let mut sim = cluster.charge_nfs("sample.nfs", bytes, reads);
             // Loading stage: one Map task per sampled point, paying the
@@ -103,7 +103,7 @@ pub fn run_sampling(
             let mut all_rows: Vec<[f64; 2]> = Vec::with_capacity(n_slice);
             let mut sim = 0.0;
             for w in dims.windows(z, 16) {
-                let lw = loader::load_window(reader, cache, engine, cluster, w)?;
+                let lw = loader::load_window(reader, cache, backend, cluster, w)?;
                 sim += lw.sim_s;
                 for p in 0..lw.n_points() {
                     let (m, s) = lw.mean_std(p);
@@ -155,7 +155,7 @@ pub fn run_sampling(
 pub fn full_slice_features(
     reader: &DatasetReader,
     cache: &WindowCache,
-    engine: &Engine,
+    backend: &dyn Backend,
     cluster: &mut SimCluster,
     tree: &DecisionTree,
     z: usize,
@@ -165,7 +165,7 @@ pub fn full_slice_features(
     let mut stds = Vec::new();
     let mut types = Vec::new();
     for w in dims.windows(z, 16) {
-        let lw = loader::load_window(reader, cache, engine, cluster, w)?;
+        let lw = loader::load_window(reader, cache, backend, cluster, w)?;
         for p in 0..lw.n_points() {
             let (m, s) = lw.mean_std(p);
             means.push(m);

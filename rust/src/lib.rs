@@ -12,11 +12,22 @@
 //! machinery, and the five PDF-computation methods of the paper
 //! (Baseline / Grouping / Reuse / ML / Sampling plus combinations).
 //!
-//! The numeric hot path — distribution fitting plus the Eq. 5 error for up
-//! to ten candidate types — is **not** written in Rust: it is a set of JAX
-//! graphs (with Pallas kernels at the innermost level) AOT-lowered to HLO
-//! text by `python/compile/aot.py` and executed through the PJRT CPU
-//! client by [`runtime`]. Python never runs on the request path.
+//! The numeric hot path — distribution fitting plus the Eq. 5 error for
+//! up to ten candidate types — runs through a pluggable
+//! [`runtime::Backend`]:
+//!
+//! * [`runtime::NativeBackend`] (**default**) evaluates the pure-Rust
+//!   kernels in [`stats`] over thread-parallel point batches. No AOT
+//!   artifacts, no Python, no XLA toolchain — the pipeline, benches and
+//!   the whole test tier run on any machine.
+//! * `runtime::Engine` (behind the **`xla`** cargo feature) executes JAX
+//!   graphs (with Pallas kernels at the innermost level) AOT-lowered to
+//!   HLO text by `python/compile/aot.py` through the PJRT CPU client.
+//!   Python never runs on the request path.
+//!
+//! Backends are selected via the `backend` config key, the `--backend`
+//! CLI flag, or the `PDFFLOW_BACKEND` environment variable; see
+//! `rust/README.md` for the full backend matrix.
 
 pub mod bench;
 pub mod cluster;
@@ -40,7 +51,11 @@ pub mod prelude {
     pub use crate::cube::{CubeDims, PointId, Window};
     pub use crate::datagen::SyntheticDataset;
     pub use crate::mltree::DecisionTree;
+    #[cfg(feature = "xla")]
     pub use crate::runtime::Engine;
+    pub use crate::runtime::{
+        make_backend, Backend, BackendKind, BackendOptions, NativeBackend,
+    };
     pub use crate::stats::DistType;
 }
 
@@ -61,6 +76,7 @@ pub enum PdfflowError {
     InvalidArg(String),
 }
 
+#[cfg(feature = "xla")]
 impl From<xla::Error> for PdfflowError {
     fn from(e: xla::Error) -> Self {
         PdfflowError::Xla(e.to_string())

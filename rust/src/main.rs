@@ -4,6 +4,7 @@
 //! pdfflow generate  --preset set1 [--data-dir DIR]         generate a dataset
 //! pdfflow run       --preset set1 --method grouping+ml --types 10
 //!                   [--slice Z] [--lines N] [--window W] [--nodes N|--cluster lncc]
+//!                   [--backend native|xla]
 //! pdfflow sample    --preset set1 --rate 0.1 [--sampler random|kmeans]
 //! pdfflow features  --preset set1 [--slice Z]              full-slice features
 //! pdfflow train-tree --preset set1 --types 4 [--tune] [--out tree.json]
@@ -14,6 +15,9 @@
 //! ```
 //!
 //! `--config FILE` loads a TOML experiment config instead of `--preset`.
+//! Every subcommand except `artifacts-check` (PJRT-only by nature)
+//! accepts `--backend native|xla` (default native, or the
+//! `PDFFLOW_BACKEND` environment variable).
 
 use anyhow::{anyhow, Context, Result};
 
@@ -23,7 +27,7 @@ use pdfflow::config::ExperimentConfig;
 use pdfflow::coordinator::sampling::{full_slice_features, run_sampling};
 use pdfflow::coordinator::{mlmodel, Method, Pipeline, Sampler, TypeSet};
 use pdfflow::datagen::SyntheticDataset;
-use pdfflow::runtime::Engine;
+use pdfflow::runtime::BackendKind;
 use pdfflow::storage::{DatasetReader, WindowCache};
 use pdfflow::util::cli::Args;
 use pdfflow::util::timing::{fmt_bytes, fmt_secs};
@@ -68,7 +72,16 @@ fn load_config(args: &Args) -> Result<ExperimentConfig> {
         }
         Some(other) => return Err(anyhow!("unknown --cluster {other:?}")),
     }
+    if let Some(b) = args.opt("backend") {
+        cfg.backend = BackendKind::resolve(Some(b))?;
+    }
     Ok(cfg)
+}
+
+/// Backend for subcommands that run outside an ExperimentConfig
+/// (figures): --backend flag > PDFFLOW_BACKEND > native.
+fn backend_kind_of(args: &Args) -> Result<BackendKind> {
+    Ok(BackendKind::resolve(args.opt("backend"))?)
 }
 
 fn types_of(args: &Args) -> Result<TypeSet> {
@@ -122,8 +135,8 @@ fn cmd_run(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow!("unknown --method (one of: baseline grouping reuse ml grouping+ml reuse+ml)"))?;
     let types = types_of(args)?;
     let ds = SyntheticDataset::generate(&cfg.dataset, &cfg.data_dir)?;
-    let engine = Engine::load_default(&cfg.artifacts_dir)?;
-    let mut pipe = Pipeline::new(&ds, &engine, SimCluster::new(cfg.cluster.clone()), cfg.pipeline.clone());
+    let backend = cfg.make_backend()?;
+    let mut pipe = Pipeline::new(&ds, backend.as_ref(), SimCluster::new(cfg.cluster.clone()), cfg.pipeline.clone());
     if method.uses_ml() {
         let err = pipe.ensure_tree(cfg.train_slice, types, 25_000)?;
         println!("decision tree trained on slice {} (model error {err:.4})", cfg.train_slice);
@@ -136,13 +149,14 @@ fn cmd_run(args: &Args) -> Result<()> {
     };
     println!("{}", r.row());
     println!(
-        "slice {} ({} points, {} windows) on {} ({} nodes x {} cores)",
+        "slice {} ({} points, {} windows) on {} ({} nodes x {} cores), {} backend",
         r.slice,
         r.n_points,
         r.windows.len(),
         cfg.cluster.name,
         cfg.cluster.nodes,
-        cfg.cluster.cores_per_node
+        cfg.cluster.cores_per_node,
+        backend.name()
     );
     if args.flag("verbose") {
         for (k, v) in pipe.cluster.breakdown() {
@@ -161,15 +175,15 @@ fn cmd_sample(args: &Args) -> Result<()> {
         other => return Err(anyhow!("unknown --sampler {other:?}")),
     };
     let ds = SyntheticDataset::generate(&cfg.dataset, &cfg.data_dir)?;
-    let engine = Engine::load_default(&cfg.artifacts_dir)?;
-    let mut pipe = Pipeline::new(&ds, &engine, SimCluster::new(cfg.cluster.clone()), cfg.pipeline.clone());
+    let backend = cfg.make_backend()?;
+    let mut pipe = Pipeline::new(&ds, backend.as_ref(), SimCluster::new(cfg.cluster.clone()), cfg.pipeline.clone());
     pipe.ensure_tree(cfg.train_slice, TypeSet::Four, 25_000)?;
     let tree = pipe.tree.clone().unwrap();
     let reader = DatasetReader::new(&ds);
     let cache = WindowCache::new(cfg.pipeline.cache_bytes);
     let mut cluster = SimCluster::new(cfg.cluster.clone());
     let rep = run_sampling(
-        &reader, &cache, &engine, &mut cluster, &tree, cfg.slice, rate, sampler, 42,
+        &reader, &cache, backend.as_ref(), &mut cluster, &tree, cfg.slice, rate, sampler, 42,
     )?;
     println!(
         "sampling {} rate {}: {} points, load {} (sim {}), compute {} (sim {})",
@@ -201,14 +215,14 @@ fn print_features(f: &pdfflow::sampling::SliceFeatures) {
 fn cmd_features(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let ds = SyntheticDataset::generate(&cfg.dataset, &cfg.data_dir)?;
-    let engine = Engine::load_default(&cfg.artifacts_dir)?;
-    let mut pipe = Pipeline::new(&ds, &engine, SimCluster::new(cfg.cluster.clone()), cfg.pipeline.clone());
+    let backend = cfg.make_backend()?;
+    let mut pipe = Pipeline::new(&ds, backend.as_ref(), SimCluster::new(cfg.cluster.clone()), cfg.pipeline.clone());
     pipe.ensure_tree(cfg.train_slice, TypeSet::Four, 25_000)?;
     let tree = pipe.tree.clone().unwrap();
     let reader = DatasetReader::new(&ds);
     let cache = WindowCache::new(cfg.pipeline.cache_bytes);
     let mut cluster = SimCluster::new(cfg.cluster.clone());
-    let f = full_slice_features(&reader, &cache, &engine, &mut cluster, &tree, cfg.slice)?;
+    let f = full_slice_features(&reader, &cache, backend.as_ref(), &mut cluster, &tree, cfg.slice)?;
     println!("slice {} features:", cfg.slice);
     print_features(&f);
     Ok(())
@@ -218,7 +232,7 @@ fn cmd_train_tree(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let types = types_of(args)?;
     let ds = SyntheticDataset::generate(&cfg.dataset, &cfg.data_dir)?;
-    let engine = Engine::load_default(&cfg.artifacts_dir)?;
+    let backend = cfg.make_backend()?;
     let reader = DatasetReader::new(&ds);
     let cache = WindowCache::new(cfg.pipeline.cache_bytes);
     let mut cluster = SimCluster::new(cfg.cluster.clone());
@@ -226,7 +240,7 @@ fn cmd_train_tree(args: &Args) -> Result<()> {
     let data = mlmodel::build_training_data(
         &reader,
         &cache,
-        &engine,
+        backend.as_ref(),
         &mut cluster,
         &ds.spec.dims,
         &slices,
@@ -272,7 +286,7 @@ fn cmd_train_tree(args: &Args) -> Result<()> {
 fn cmd_tune_window(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let ds = SyntheticDataset::generate(&cfg.dataset, &cfg.data_dir)?;
-    let engine = Engine::load_default(&cfg.artifacts_dir)?;
+    let backend = cfg.make_backend()?;
     let sizes: Vec<usize> = args
         .list_or("sizes", &["2", "4", "8", "16", "25"])
         .iter()
@@ -286,7 +300,7 @@ fn cmd_tune_window(args: &Args) -> Result<()> {
         }
         let mut pcfg = cfg.pipeline.clone();
         pcfg.window_lines = w;
-        let mut pipe = Pipeline::new(&ds, &engine, SimCluster::new(cfg.cluster.clone()), pcfg);
+        let mut pipe = Pipeline::new(&ds, backend.as_ref(), SimCluster::new(cfg.cluster.clone()), pcfg);
         let r = pipe.run_lines(Method::Grouping, cfg.slice, TypeSet::Four, 2 * w)?;
         let per_line = r.fit_sim_s / (2 * w) as f64;
         println!(
@@ -309,8 +323,8 @@ fn cmd_qoi(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let types = types_of(args)?;
     let ds = SyntheticDataset::generate(&cfg.dataset, &cfg.data_dir)?;
-    let engine = Engine::load_default(&cfg.artifacts_dir)?;
-    let mut pipe = Pipeline::new(&ds, &engine, SimCluster::new(cfg.cluster.clone()), cfg.pipeline.clone());
+    let backend = cfg.make_backend()?;
+    let mut pipe = Pipeline::new(&ds, backend.as_ref(), SimCluster::new(cfg.cluster.clone()), cfg.pipeline.clone());
     pipe.ensure_tree(cfg.train_slice, types, 25_000)?;
     let lines = args.usize_or("lines", 2).map_err(|e| anyhow!(e))?;
     let r = pipe.run_lines(pdfflow::coordinator::Method::GroupingMl, cfg.slice, types, lines)?;
@@ -328,9 +342,9 @@ fn cmd_qoi(args: &Args) -> Result<()> {
     let reader = DatasetReader::new(&ds);
     let cache = WindowCache::new(cfg.pipeline.cache_bytes);
     let mut cluster = SimCluster::new(cfg.cluster.clone());
-    let lw = pdfflow::coordinator::loader::load_window(&reader, &cache, &engine, &mut cluster, w)?;
+    let lw = pdfflow::coordinator::loader::load_window(&reader, &cache, backend.as_ref(), &mut cluster, w)?;
     let show = lw.n_points().min(12);
-    let out = engine.run_fit_all(
+    let out = backend.run_fit_all(
         &lw.obs.data[..show * lw.obs.n_obs],
         show,
         lw.obs.n_obs,
@@ -360,6 +374,7 @@ fn cmd_figure(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow!("usage: pdfflow figure <fig06..fig20|treestats|all> [--full]"))?;
     let full = args.flag("full") || std::env::var("PDFFLOW_BENCH_FULL").is_ok();
     let env = BenchEnv::new(
+        backend_kind_of(args)?,
         &args.opt_or("artifacts", "artifacts"),
         &args.opt_or("data-dir", "data"),
         !full,
@@ -368,8 +383,9 @@ fn cmd_figure(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "xla")]
 fn cmd_artifacts_check(args: &Args) -> Result<()> {
-    let engine = Engine::load_default(args.opt_or("artifacts", "artifacts"))?;
+    let engine = pdfflow::runtime::Engine::load_default(args.opt_or("artifacts", "artifacts"))?;
     println!("platform: {}", engine.platform());
     let mut n = 0;
     for info in engine.manifest.artifacts.clone() {
@@ -380,4 +396,12 @@ fn cmd_artifacts_check(args: &Args) -> Result<()> {
     }
     println!("{n} artifacts compile cleanly");
     Ok(())
+}
+
+#[cfg(not(feature = "xla"))]
+fn cmd_artifacts_check(_args: &Args) -> Result<()> {
+    Err(anyhow!(
+        "artifacts-check needs the PJRT engine; rebuild with `cargo build --features xla` \
+         after `make artifacts` (see rust/README.md)"
+    ))
 }

@@ -1,27 +1,51 @@
-//! PJRT execution engine: loads the HLO-text artifacts produced by
-//! `python/compile/aot.py`, compiles them once on the PJRT CPU client,
-//! and executes point batches from the coordinator's hot path.
+//! Pluggable compute backends for the numeric hot path.
 //!
-//! Interchange is HLO **text** (`HloModuleProto::from_text_file`): jax
-//! >= 0.5 serialized protos carry 64-bit instruction ids that this XLA
-//! build rejects; the text parser reassigns ids (see aot.py docstring and
-//! /opt/xla-example/README.md).
+//! The coordinator talks to the fitting kernels through the [`Backend`]
+//! trait — batched execution of the three graph shapes the paper's hot
+//! path needs (per-point statistics, argmin fit over a candidate set,
+//! single-type fit), all returning the row-major [`OutMatrix`] contract:
+//!
+//! | call             | output row                          | cols |
+//! |------------------|-------------------------------------|------|
+//! | `run_stats`      | `STATS_COLS` (mean, std, …)         | 12   |
+//! | `run_fit_all`    | `[type_id, err, p0, p1, p2]`        | 5    |
+//! | `run_fit_single` | `[err, p0, p1, p2]`                 | 4    |
+//!
+//! Two implementations exist:
+//!
+//! * [`NativeBackend`] (default, always available) — evaluates the
+//!   pure-Rust oracle in [`crate::stats`] over thread-parallel point
+//!   batches with reusable per-batch scratch buffers. No artifacts, no
+//!   Python, no XLA toolchain: `cargo test` runs on any machine.
+//! * `Engine` (behind the `xla` cargo feature) — the PJRT engine that
+//!   compiles and executes the HLO-text artifacts produced by
+//!   `python/compile/aot.py` (JAX graphs with Pallas kernels). See
+//!   `rust/README.md` for how to enable it.
+//!
+//! Backend selection: `BackendKind::from_name` ("native" / "xla"),
+//! the `PDFFLOW_BACKEND` environment variable, the `backend` config
+//! key, or the `--backend` CLI flag.
 
 pub mod manifest;
-
-use std::collections::HashMap;
-use std::path::Path;
-use std::sync::Mutex;
-use std::time::Instant;
+pub mod native;
+#[cfg(feature = "xla")]
+pub mod xla_engine;
 
 pub use manifest::{ArtifactInfo, ArtifactKind, Manifest};
+pub use native::NativeBackend;
+#[cfg(feature = "xla")]
+pub use xla_engine::Engine;
 
 use crate::stats::DistType;
 use crate::{PdfflowError, Result};
 
-/// Cumulative execution metrics (per engine).
+/// Cumulative execution metrics (per backend instance).
+///
+/// `rows_padded` and `compile_seconds` are only non-zero for backends
+/// that pad fixed-shape batches / compile executables (the XLA engine);
+/// the native backend reports them as 0.
 #[derive(Clone, Copy, Debug, Default)]
-pub struct EngineMetrics {
+pub struct BackendMetrics {
     pub executions: u64,
     pub rows_processed: u64,
     pub rows_padded: u64,
@@ -29,17 +53,8 @@ pub struct EngineMetrics {
     pub compile_seconds: f64,
 }
 
-/// The runtime engine: one compiled executable per artifact, compiled
-/// lazily on first use and cached for the process lifetime.
-pub struct Engine {
-    client: xla::PjRtClient,
-    pub manifest: Manifest,
-    executables: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
-    metrics: Mutex<EngineMetrics>,
-}
-
-/// Result of running a fit artifact over `n` points: row-major
-/// `(n, out_cols)` f32 matrix.
+/// Result of one batched run over `n` points: row-major
+/// `(n_rows, n_cols)` f32 matrix.
 #[derive(Clone, Debug)]
 pub struct OutMatrix {
     pub n_rows: usize,
@@ -57,185 +72,199 @@ impl OutMatrix {
     }
 }
 
-impl Engine {
-    /// Create the PJRT CPU client and load the manifest under `dir`.
-    pub fn load_default(dir: impl AsRef<Path>) -> Result<Engine> {
-        let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Engine {
-            client,
-            manifest,
-            executables: Mutex::new(HashMap::new()),
-            metrics: Mutex::new(EngineMetrics::default()),
-        })
-    }
+/// A batched fitting-kernel executor (the L3 ↔ L2 boundary).
+///
+/// `values` is always point-major: `n_points * obs` f32 observations.
+/// Implementations must produce identical row layouts so every caller
+/// (pipeline, benches, tests) is backend-generic.
+pub trait Backend {
+    /// Short stable identifier ("native", "xla") for logs and reports.
+    fn name(&self) -> &'static str;
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
+    /// Per-point statistics: `(n_points, 12)` in `STATS_COLS` order
+    /// (mean, std, min, max, skew, kurt_ex, meanlog, stdlog, q25, q50,
+    /// q75, pos_frac).
+    fn run_stats(&self, values: &[f32], n_points: usize, obs: usize) -> Result<OutMatrix>;
 
-    /// Compile (or fetch cached) the executable for an artifact.
-    fn executable(&self, info: &ArtifactInfo) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.executables.lock().unwrap().get(&info.name) {
-            return Ok(e.clone());
-        }
-        let t0 = Instant::now();
-        let path = self.manifest.path_of(info);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str()
-                .ok_or_else(|| PdfflowError::Artifact("non-utf8 path".into()))?,
-        )?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = std::sync::Arc::new(self.client.compile(&comp)?);
-        self.metrics.lock().unwrap().compile_seconds += t0.elapsed().as_secs_f64();
-        self.executables
-            .lock()
-            .unwrap()
-            .insert(info.name.clone(), exe.clone());
-        Ok(exe)
-    }
-
-    /// Pre-compile an artifact (startup warm-up, keeps compile time out of
-    /// measured stages).
-    pub fn warm(&self, info: &ArtifactInfo) -> Result<()> {
-        self.executable(info).map(|_| ())
-    }
-
-    /// Pre-compile every artifact for one observation count (what a run
-    /// over a dataset with `obs` simulations may touch). Keeps PJRT
-    /// compilation out of the measured pipeline stages, like Spark's
-    /// executor warm-up.
-    pub fn warm_all_for(&self, obs: usize) -> Result<()> {
-        let infos: Vec<ArtifactInfo> = self
-            .manifest
-            .artifacts
-            .iter()
-            .filter(|a| a.obs == obs)
-            .cloned()
-            .collect();
-        for info in infos {
-            self.warm(&info)?;
-        }
-        Ok(())
-    }
-
-    /// Execute an artifact over `n_points` observation vectors laid out
-    /// point-major in `values` (`n_points * info.obs` floats). Points are
-    /// chunked into batches of `info.batch`; the final partial batch is
-    /// padded with copies of its last row (padding rows are discarded).
-    pub fn run(&self, info: &ArtifactInfo, values: &[f32], n_points: usize) -> Result<OutMatrix> {
-        if values.len() != n_points * info.obs {
-            return Err(PdfflowError::InvalidArg(format!(
-                "values len {} != {} points x {} obs",
-                values.len(),
-                n_points,
-                info.obs
-            )));
-        }
-        let exe = self.executable(info)?;
-        let b = info.batch;
-        let mut out = Vec::with_capacity(n_points * info.out_cols);
-        let mut padded_rows = 0u64;
-        let mut batch_buf = vec![0f32; b * info.obs];
-        let t0 = Instant::now();
-        let mut at = 0usize;
-        while at < n_points {
-            let take = b.min(n_points - at);
-            let src = &values[at * info.obs..(at + take) * info.obs];
-            let literal = if take == b {
-                xla::Literal::vec1(src)
-            } else {
-                // Pad with the last real row (guard-safe values).
-                batch_buf[..src.len()].copy_from_slice(src);
-                let last = &src[(take - 1) * info.obs..take * info.obs].to_vec();
-                for p in take..b {
-                    batch_buf[p * info.obs..(p + 1) * info.obs].copy_from_slice(last);
-                }
-                padded_rows += (b - take) as u64;
-                xla::Literal::vec1(&batch_buf)
-            }
-            .reshape(&[b as i64, info.obs as i64])?;
-            let result = exe.execute::<xla::Literal>(&[literal])?[0][0].to_literal_sync()?;
-            let tuple = result.to_tuple1()?;
-            let rows: Vec<f32> = tuple.to_vec::<f32>()?;
-            if rows.len() != b * info.out_cols {
-                return Err(PdfflowError::Artifact(format!(
-                    "{}: expected {} outputs, got {}",
-                    info.name,
-                    b * info.out_cols,
-                    rows.len()
-                )));
-            }
-            out.extend_from_slice(&rows[..take * info.out_cols]);
-            at += take;
-        }
-        let dt = t0.elapsed().as_secs_f64();
-        let mut m = self.metrics.lock().unwrap();
-        m.executions += n_points.div_ceil(b) as u64;
-        m.rows_processed += n_points as u64;
-        m.rows_padded += padded_rows;
-        m.exec_seconds += dt;
-        Ok(OutMatrix {
-            n_rows: n_points,
-            n_cols: info.out_cols,
-            data: out,
-        })
-    }
-
-    /// Convenience: resolve + run the stats artifact for `obs`.
-    pub fn run_stats(&self, values: &[f32], n_points: usize, obs: usize) -> Result<OutMatrix> {
-        let info = self
-            .manifest
-            .find(ArtifactKind::Stats, None, None, obs)
-            .ok_or_else(|| PdfflowError::Artifact(format!("no stats artifact for obs={obs}")))?
-            .clone();
-        self.run(&info, values, n_points)
-    }
-
-    /// Convenience: resolve + run a fit_all artifact.
-    pub fn run_fit_all(
+    /// Algorithm 3: fit the first `n_types` candidate types per point,
+    /// keep the argmin — `(n_points, 5)` rows `[type_id, err, p0, p1, p2]`.
+    fn run_fit_all(
         &self,
         values: &[f32],
         n_points: usize,
         obs: usize,
         n_types: usize,
-    ) -> Result<OutMatrix> {
-        let info = self
-            .manifest
-            .find(ArtifactKind::FitAll, None, Some(n_types), obs)
-            .ok_or_else(|| {
-                PdfflowError::Artifact(format!("no fit_all{n_types} artifact for obs={obs}"))
-            })?
-            .clone();
-        self.run(&info, values, n_points)
-    }
+    ) -> Result<OutMatrix>;
 
-    /// Convenience: resolve + run a single-type fit artifact.
-    pub fn run_fit_single(
+    /// Algorithm 4 body: fit exactly one type per point —
+    /// `(n_points, 4)` rows `[err, p0, p1, p2]`.
+    fn run_fit_single(
         &self,
         values: &[f32],
         n_points: usize,
         obs: usize,
         dist: DistType,
-    ) -> Result<OutMatrix> {
-        let info = self
-            .manifest
-            .find(ArtifactKind::FitSingle, Some(dist), None, obs)
-            .ok_or_else(|| {
-                PdfflowError::Artifact(format!(
-                    "no fit_single {} artifact for obs={obs}",
-                    dist.name()
+    ) -> Result<OutMatrix>;
+
+    /// Pre-compile / pre-warm everything a run over `obs`-observation
+    /// points may touch, keeping one-time costs out of measured stages
+    /// (Spark analog: executor warm-up). No-op for backends that have
+    /// nothing to compile.
+    fn warm_all_for(&self, obs: usize) -> Result<()> {
+        let _ = obs;
+        Ok(())
+    }
+
+    fn metrics(&self) -> BackendMetrics;
+
+    fn reset_metrics(&self);
+}
+
+/// Which backend implementation to construct.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-Rust batched oracle (default; runs anywhere).
+    Native,
+    /// PJRT/XLA engine over AOT HLO artifacts (`--features xla`).
+    Xla,
+}
+
+impl BackendKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Xla => "xla",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<BackendKind> {
+        match s {
+            "native" => Some(BackendKind::Native),
+            "xla" => Some(BackendKind::Xla),
+            _ => None,
+        }
+    }
+
+    /// The `PDFFLOW_BACKEND` environment override, if set. An unset
+    /// variable is `Ok(None)`; a set-but-unparseable one is an error.
+    pub fn from_env() -> Result<Option<BackendKind>> {
+        match std::env::var("PDFFLOW_BACKEND") {
+            Ok(s) => Self::from_name(s.trim()).map(Some).ok_or_else(|| {
+                PdfflowError::Config(format!(
+                    "PDFFLOW_BACKEND={s:?} is not a backend (expected native|xla)"
                 ))
-            })?
-            .clone();
-        self.run(&info, values, n_points)
+            }),
+            Err(_) => Ok(None),
+        }
     }
 
-    pub fn metrics(&self) -> EngineMetrics {
-        *self.metrics.lock().unwrap()
+    /// The one resolution rule every entry point shares: an explicit
+    /// value (CLI flag / API arg) wins and must parse; otherwise the
+    /// `PDFFLOW_BACKEND` env applies (and must parse if set); otherwise
+    /// native.
+    pub fn resolve(explicit: Option<&str>) -> Result<BackendKind> {
+        match explicit {
+            Some(s) => Self::from_name(s).ok_or_else(|| {
+                PdfflowError::Config(format!("unknown backend {s:?} (expected native|xla)"))
+            }),
+            None => Ok(Self::from_env()?.unwrap_or(BackendKind::Native)),
+        }
+    }
+}
+
+/// Construction knobs shared by every backend.
+#[derive(Clone, Debug)]
+pub struct BackendOptions {
+    /// Points per execution batch (must match an artifact batch for XLA).
+    pub batch: usize,
+    /// Host worker threads for the native backend's batch parallelism.
+    pub workers: usize,
+    /// Eq. 5 interval count for the native backend (XLA bakes its own).
+    pub bins: usize,
+}
+
+impl Default for BackendOptions {
+    fn default() -> Self {
+        BackendOptions {
+            batch: 256,
+            workers: crate::util::pool::default_workers(),
+            bins: crate::stats::DEFAULT_BINS,
+        }
+    }
+}
+
+/// Build a backend. `artifacts_dir` is only consulted by the XLA engine;
+/// asking for [`BackendKind::Xla`] in a build without the `xla` feature
+/// is a configuration error, not a crash.
+pub fn make_backend(
+    kind: BackendKind,
+    artifacts_dir: &str,
+    opts: &BackendOptions,
+) -> Result<Box<dyn Backend>> {
+    match kind {
+        BackendKind::Native => Ok(Box::new(NativeBackend::with_options(
+            opts.workers,
+            opts.batch,
+            opts.bins,
+        ))),
+        #[cfg(feature = "xla")]
+        BackendKind::Xla => Ok(Box::new(Engine::load_default(artifacts_dir)?)),
+        #[cfg(not(feature = "xla"))]
+        BackendKind::Xla => Err(PdfflowError::Config(format!(
+            "backend 'xla' requested (artifacts at {artifacts_dir:?}) but this build has no \
+             XLA support; enable the commented-out `xla` dependency in rust/Cargo.toml (and \
+             set the feature to `xla = [\"dep:xla\"]`), run `make artifacts`, then rebuild \
+             with `cargo build --features xla` — full walkthrough in rust/README.md"
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_kind_names_roundtrip() {
+        for k in [BackendKind::Native, BackendKind::Xla] {
+            assert_eq!(BackendKind::from_name(k.name()), Some(k));
+        }
+        assert_eq!(BackendKind::from_name("spark"), None);
     }
 
-    pub fn reset_metrics(&self) {
-        *self.metrics.lock().unwrap() = EngineMetrics::default();
+    #[test]
+    fn out_matrix_rows_and_cols() {
+        let m = OutMatrix {
+            n_rows: 2,
+            n_cols: 3,
+            data: vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0],
+        };
+        assert_eq!(m.row(1), &[3.0, 4.0, 5.0]);
+        let col1: Vec<f32> = m.col(1).collect();
+        assert_eq!(col1, vec![1.0, 4.0]);
+    }
+
+    #[test]
+    fn resolve_explicit_wins_and_validates() {
+        assert_eq!(
+            BackendKind::resolve(Some("native")).unwrap(),
+            BackendKind::Native
+        );
+        assert_eq!(BackendKind::resolve(Some("xla")).unwrap(), BackendKind::Xla);
+        assert!(BackendKind::resolve(Some("spark")).is_err());
+    }
+
+    #[test]
+    fn make_backend_native_always_works() {
+        let b = make_backend(BackendKind::Native, "does-not-matter", &BackendOptions::default())
+            .unwrap();
+        assert_eq!(b.name(), "native");
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn make_backend_xla_is_actionable_error_without_feature() {
+        let err = make_backend(BackendKind::Xla, "artifacts", &BackendOptions::default())
+            .unwrap_err();
+        assert!(err.to_string().contains("xla"));
     }
 }

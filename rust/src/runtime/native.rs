@@ -1,0 +1,288 @@
+//! The native compute backend: the pure-Rust statistics oracle from
+//! [`crate::stats`], evaluated in thread-parallel point batches.
+//!
+//! Points are split into `batch`-sized chunks; chunks run on the scoped
+//! thread pool ([`crate::util::pool`], the offline rayon substitute) and
+//! each chunk reuses one scratch buffer set (Eq. 5 histogram + quantile
+//! subsample) across all of its points, so the inner loop performs no
+//! per-point allocation. Unlike the XLA engine there is no fixed batch
+//! shape to pad to: the final partial chunk simply runs shorter, and
+//! results are bitwise independent of the batch size.
+//!
+//! This backend is the default: it needs no AOT artifacts, no Python and
+//! no XLA toolchain, which is what lets the whole test tier run on any
+//! machine. The XLA engine (behind the `xla` feature) is the measured
+//! accelerator the benches compare against.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::stats::{self, DistType, PointStats};
+use crate::util::pool;
+use crate::{PdfflowError, Result};
+
+use super::{Backend, BackendMetrics, OutMatrix};
+
+/// Per-chunk scratch: one Eq. 5 histogram and one quantile subsample
+/// buffer, reused across every point of the chunk.
+struct Scratch {
+    hist: Vec<f64>,
+    quant: Vec<f32>,
+}
+
+impl Scratch {
+    fn new(bins: usize) -> Scratch {
+        Scratch {
+            hist: vec![0.0; bins],
+            quant: Vec::new(),
+        }
+    }
+}
+
+/// Pure-Rust batched backend (see module docs).
+pub struct NativeBackend {
+    workers: usize,
+    batch: usize,
+    bins: usize,
+    metrics: Mutex<BackendMetrics>,
+}
+
+impl NativeBackend {
+    /// Default configuration: all host cores, 256-point batches, the
+    /// canonical 32 Eq. 5 intervals.
+    pub fn new() -> NativeBackend {
+        Self::with_options(pool::default_workers(), 256, stats::DEFAULT_BINS)
+    }
+
+    pub fn with_options(workers: usize, batch: usize, bins: usize) -> NativeBackend {
+        NativeBackend {
+            workers: workers.max(1),
+            batch: batch.max(1),
+            bins: bins.max(1),
+            metrics: Mutex::new(BackendMetrics::default()),
+        }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn bins(&self) -> usize {
+        self.bins
+    }
+
+    /// Shared batched driver: validate the shape, fan chunks out over the
+    /// pool, run `kernel` once per point into its output row, stitch the
+    /// chunk outputs back together in point order.
+    fn run_batched<F>(
+        &self,
+        values: &[f32],
+        n_points: usize,
+        obs: usize,
+        out_cols: usize,
+        kernel: F,
+    ) -> Result<OutMatrix>
+    where
+        F: Fn(&[f32], &mut Scratch, &mut [f32]) + Sync,
+    {
+        if values.len() != n_points * obs {
+            return Err(PdfflowError::InvalidArg(format!(
+                "values len {} != {} points x {} obs",
+                values.len(),
+                n_points,
+                obs
+            )));
+        }
+        if n_points > 0 && obs < 2 {
+            return Err(PdfflowError::InvalidArg(format!(
+                "need at least 2 observations per point, got {obs}"
+            )));
+        }
+        let t0 = Instant::now();
+        let n_chunks = n_points.div_ceil(self.batch);
+        let chunks: Vec<Vec<f32>> = pool::parallel_for(n_chunks, self.workers, |c| {
+            let lo = c * self.batch;
+            let hi = ((c + 1) * self.batch).min(n_points);
+            let mut out = vec![0f32; (hi - lo) * out_cols];
+            let mut scratch = Scratch::new(self.bins);
+            for (i, p) in (lo..hi).enumerate() {
+                kernel(
+                    &values[p * obs..(p + 1) * obs],
+                    &mut scratch,
+                    &mut out[i * out_cols..(i + 1) * out_cols],
+                );
+            }
+            out
+        });
+        let mut data = Vec::with_capacity(n_points * out_cols);
+        for c in &chunks {
+            data.extend_from_slice(c);
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let mut m = self.metrics.lock().unwrap();
+        m.executions += n_chunks as u64;
+        m.rows_processed += n_points as u64;
+        m.exec_seconds += dt;
+        Ok(OutMatrix {
+            n_rows: n_points,
+            n_cols: out_cols,
+            data,
+        })
+    }
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Canonical type order as a `static` (an associated const sliced by a
+/// runtime index would not promote to `'static`).
+static ALL_TYPES: [DistType; 10] = DistType::ALL;
+
+/// First `n` candidate types in canonical order (4 → the paper's
+/// input-parameter families, 10 → the full set).
+fn candidate_set(n_types: usize) -> Result<&'static [DistType]> {
+    if n_types == 0 || n_types > ALL_TYPES.len() {
+        return Err(PdfflowError::InvalidArg(format!(
+            "n_types {n_types} not in 1..={}",
+            ALL_TYPES.len()
+        )));
+    }
+    Ok(&ALL_TYPES[..n_types])
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn run_stats(&self, values: &[f32], n_points: usize, obs: usize) -> Result<OutMatrix> {
+        self.run_batched(values, n_points, obs, 12, |v, scratch, out| {
+            let s = PointStats::of_with_scratch(v, &mut scratch.quant);
+            // STATS_COLS order — the manifest contract.
+            out[0] = s.mean as f32;
+            out[1] = s.std as f32;
+            out[2] = s.min as f32;
+            out[3] = s.max as f32;
+            out[4] = s.skew as f32;
+            out[5] = s.kurt_ex as f32;
+            out[6] = s.meanlog as f32;
+            out[7] = s.stdlog as f32;
+            out[8] = s.q25 as f32;
+            out[9] = s.q50 as f32;
+            out[10] = s.q75 as f32;
+            out[11] = s.pos_frac as f32;
+        })
+    }
+
+    fn run_fit_all(
+        &self,
+        values: &[f32],
+        n_points: usize,
+        obs: usize,
+        n_types: usize,
+    ) -> Result<OutMatrix> {
+        let candidates = candidate_set(n_types)?;
+        self.run_batched(values, n_points, obs, 5, |v, scratch, out| {
+            let s = PointStats::of_with_scratch(v, &mut scratch.quant);
+            stats::histogram_into(v, s.min, s.max, &mut scratch.hist);
+            let best = stats::fit_best_with_hist(&s, &scratch.hist, v.len(), candidates);
+            out[0] = best.dist.id() as f32;
+            out[1] = best.error as f32;
+            out[2] = best.params[0] as f32;
+            out[3] = best.params[1] as f32;
+            out[4] = best.params[2] as f32;
+        })
+    }
+
+    fn run_fit_single(
+        &self,
+        values: &[f32],
+        n_points: usize,
+        obs: usize,
+        dist: DistType,
+    ) -> Result<OutMatrix> {
+        self.run_batched(values, n_points, obs, 4, |v, scratch, out| {
+            let s = PointStats::of_with_scratch(v, &mut scratch.quant);
+            let f = stats::fit_single_with_hist(v, &s, dist, &mut scratch.hist);
+            out[0] = f.error as f32;
+            out[1] = f.params[0] as f32;
+            out[2] = f.params[1] as f32;
+            out[3] = f.params[2] as f32;
+        })
+    }
+
+    fn metrics(&self) -> BackendMetrics {
+        *self.metrics.lock().unwrap()
+    }
+
+    fn reset_metrics(&self) {
+        *self.metrics.lock().unwrap() = BackendMetrics::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn gamma_batch(n: usize, obs: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n * obs).map(|_| rng.gamma(3.0, 2.0) as f32).collect()
+    }
+
+    #[test]
+    fn shapes_and_metrics() {
+        let b = NativeBackend::with_options(2, 8, 32);
+        let values = gamma_batch(20, 50, 1);
+        let stats = b.run_stats(&values, 20, 50).unwrap();
+        assert_eq!((stats.n_rows, stats.n_cols), (20, 12));
+        let all = b.run_fit_all(&values, 20, 50, 10).unwrap();
+        assert_eq!((all.n_rows, all.n_cols), (20, 5));
+        let single = b.run_fit_single(&values, 20, 50, DistType::Gamma).unwrap();
+        assert_eq!((single.n_rows, single.n_cols), (20, 4));
+        let m = b.metrics();
+        // 20 points in batches of 8 → 3 executions per call, 3 calls.
+        assert_eq!(m.executions, 9);
+        assert_eq!(m.rows_processed, 60);
+        assert_eq!(m.rows_padded, 0);
+        b.reset_metrics();
+        assert_eq!(b.metrics().rows_processed, 0);
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        let b = NativeBackend::with_options(1, 8, 32);
+        let values = vec![1.0f32; 100];
+        assert!(b.run_stats(&values, 2, 100).is_err());
+        assert!(b.run_stats(&values, 1, 99).is_err());
+        assert!(b.run_fit_all(&values, 1, 100, 0).is_err());
+        assert!(b.run_fit_all(&values, 1, 100, 11).is_err());
+        assert!(b.run_stats(&[1.0], 1, 1).is_err(), "needs 2+ observations");
+    }
+
+    #[test]
+    fn empty_batch_is_empty_matrix() {
+        let b = NativeBackend::with_options(2, 8, 32);
+        let out = b.run_fit_all(&[], 0, 100, 4).unwrap();
+        assert_eq!((out.n_rows, out.n_cols), (0, 5));
+        assert!(out.data.is_empty());
+        assert_eq!(b.metrics().executions, 0);
+    }
+
+    #[test]
+    fn results_independent_of_batch_and_workers() {
+        let values = gamma_batch(70, 40, 2);
+        let reference = NativeBackend::with_options(1, 1024, 32)
+            .run_fit_all(&values, 70, 40, 10)
+            .unwrap();
+        for (workers, batch) in [(1, 1), (4, 7), (8, 64), (3, 70)] {
+            let out = NativeBackend::with_options(workers, batch, 32)
+                .run_fit_all(&values, 70, 40, 10)
+                .unwrap();
+            assert_eq!(out.data, reference.data, "workers={workers} batch={batch}");
+        }
+    }
+}

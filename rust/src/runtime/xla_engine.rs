@@ -1,0 +1,224 @@
+//! PJRT execution engine (the `xla` feature): loads the HLO-text
+//! artifacts produced by `python/compile/aot.py`, compiles them once on
+//! the PJRT CPU client, and executes point batches from the
+//! coordinator's hot path.
+//!
+//! Interchange is HLO **text** (`HloModuleProto::from_text_file`): jax
+//! >= 0.5 serialized protos carry 64-bit instruction ids that this XLA
+//! build rejects; the text parser reassigns ids (see aot.py docstring and
+//! /opt/xla-example/README.md).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::stats::DistType;
+use crate::{PdfflowError, Result};
+
+use super::manifest::{ArtifactInfo, ArtifactKind, Manifest};
+use super::{Backend, BackendMetrics, OutMatrix};
+
+/// The runtime engine: one compiled executable per artifact, compiled
+/// lazily on first use and cached for the process lifetime.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    executables: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    metrics: Mutex<BackendMetrics>,
+}
+
+impl Engine {
+    /// Create the PJRT CPU client and load the manifest under `dir`.
+    pub fn load_default(dir: impl AsRef<Path>) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine {
+            client,
+            manifest,
+            executables: Mutex::new(HashMap::new()),
+            metrics: Mutex::new(BackendMetrics::default()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) the executable for an artifact.
+    fn executable(&self, info: &ArtifactInfo) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.executables.lock().unwrap().get(&info.name) {
+            return Ok(e.clone());
+        }
+        let t0 = Instant::now();
+        let path = self.manifest.path_of(info);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| PdfflowError::Artifact("non-utf8 path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(self.client.compile(&comp)?);
+        self.metrics.lock().unwrap().compile_seconds += t0.elapsed().as_secs_f64();
+        self.executables
+            .lock()
+            .unwrap()
+            .insert(info.name.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile an artifact (startup warm-up, keeps compile time out of
+    /// measured stages).
+    pub fn warm(&self, info: &ArtifactInfo) -> Result<()> {
+        self.executable(info).map(|_| ())
+    }
+
+    /// Execute an artifact over `n_points` observation vectors laid out
+    /// point-major in `values` (`n_points * info.obs` floats). Points are
+    /// chunked into batches of `info.batch`; the final partial batch is
+    /// padded with copies of its last row (padding rows are discarded).
+    pub fn run(&self, info: &ArtifactInfo, values: &[f32], n_points: usize) -> Result<OutMatrix> {
+        if values.len() != n_points * info.obs {
+            return Err(PdfflowError::InvalidArg(format!(
+                "values len {} != {} points x {} obs",
+                values.len(),
+                n_points,
+                info.obs
+            )));
+        }
+        let exe = self.executable(info)?;
+        let b = info.batch;
+        let mut out = Vec::with_capacity(n_points * info.out_cols);
+        let mut padded_rows = 0u64;
+        let mut batch_buf = vec![0f32; b * info.obs];
+        let t0 = Instant::now();
+        let mut at = 0usize;
+        while at < n_points {
+            let take = b.min(n_points - at);
+            let src = &values[at * info.obs..(at + take) * info.obs];
+            let literal = if take == b {
+                xla::Literal::vec1(src)
+            } else {
+                // Pad with the last real row (guard-safe values).
+                batch_buf[..src.len()].copy_from_slice(src);
+                let last = &src[(take - 1) * info.obs..take * info.obs].to_vec();
+                for p in take..b {
+                    batch_buf[p * info.obs..(p + 1) * info.obs].copy_from_slice(last);
+                }
+                padded_rows += (b - take) as u64;
+                xla::Literal::vec1(&batch_buf)
+            }
+            .reshape(&[b as i64, info.obs as i64])?;
+            let result = exe.execute::<xla::Literal>(&[literal])?[0][0].to_literal_sync()?;
+            let tuple = result.to_tuple1()?;
+            let rows: Vec<f32> = tuple.to_vec::<f32>()?;
+            if rows.len() != b * info.out_cols {
+                return Err(PdfflowError::Artifact(format!(
+                    "{}: expected {} outputs, got {}",
+                    info.name,
+                    b * info.out_cols,
+                    rows.len()
+                )));
+            }
+            out.extend_from_slice(&rows[..take * info.out_cols]);
+            at += take;
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let mut m = self.metrics.lock().unwrap();
+        m.executions += n_points.div_ceil(b) as u64;
+        m.rows_processed += n_points as u64;
+        m.rows_padded += padded_rows;
+        m.exec_seconds += dt;
+        Ok(OutMatrix {
+            n_rows: n_points,
+            n_cols: info.out_cols,
+            data: out,
+        })
+    }
+
+    fn stats_info(&self, obs: usize) -> Result<ArtifactInfo> {
+        self.manifest
+            .find(ArtifactKind::Stats, None, None, obs)
+            .cloned()
+            .ok_or_else(|| PdfflowError::Artifact(format!("no stats artifact for obs={obs}")))
+    }
+
+    fn fit_all_info(&self, obs: usize, n_types: usize) -> Result<ArtifactInfo> {
+        self.manifest
+            .find(ArtifactKind::FitAll, None, Some(n_types), obs)
+            .cloned()
+            .ok_or_else(|| {
+                PdfflowError::Artifact(format!("no fit_all{n_types} artifact for obs={obs}"))
+            })
+    }
+
+    fn fit_single_info(&self, obs: usize, dist: DistType) -> Result<ArtifactInfo> {
+        self.manifest
+            .find(ArtifactKind::FitSingle, Some(dist), None, obs)
+            .cloned()
+            .ok_or_else(|| {
+                PdfflowError::Artifact(format!(
+                    "no fit_single {} artifact for obs={obs}",
+                    dist.name()
+                ))
+            })
+    }
+}
+
+impl Backend for Engine {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn run_stats(&self, values: &[f32], n_points: usize, obs: usize) -> Result<OutMatrix> {
+        let info = self.stats_info(obs)?;
+        self.run(&info, values, n_points)
+    }
+
+    fn run_fit_all(
+        &self,
+        values: &[f32],
+        n_points: usize,
+        obs: usize,
+        n_types: usize,
+    ) -> Result<OutMatrix> {
+        let info = self.fit_all_info(obs, n_types)?;
+        self.run(&info, values, n_points)
+    }
+
+    fn run_fit_single(
+        &self,
+        values: &[f32],
+        n_points: usize,
+        obs: usize,
+        dist: DistType,
+    ) -> Result<OutMatrix> {
+        let info = self.fit_single_info(obs, dist)?;
+        self.run(&info, values, n_points)
+    }
+
+    /// Pre-compile every artifact for one observation count (what a run
+    /// over a dataset with `obs` simulations may touch). Keeps PJRT
+    /// compilation out of the measured pipeline stages, like Spark's
+    /// executor warm-up.
+    fn warm_all_for(&self, obs: usize) -> Result<()> {
+        let infos: Vec<ArtifactInfo> = self
+            .manifest
+            .artifacts
+            .iter()
+            .filter(|a| a.obs == obs)
+            .cloned()
+            .collect();
+        for info in infos {
+            self.warm(&info)?;
+        }
+        Ok(())
+    }
+
+    fn metrics(&self) -> BackendMetrics {
+        *self.metrics.lock().unwrap()
+    }
+
+    fn reset_metrics(&self) {
+        *self.metrics.lock().unwrap() = BackendMetrics::default();
+    }
+}

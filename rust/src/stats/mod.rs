@@ -112,6 +112,13 @@ pub struct PointStats {
 impl PointStats {
     /// Compute from one observation vector.
     pub fn of(v: &[f32]) -> PointStats {
+        Self::of_with_scratch(v, &mut Vec::new())
+    }
+
+    /// Same, reusing `scratch` for the quantile subsample so batched
+    /// callers (the native backend's inner loop) allocate nothing per
+    /// point.
+    pub fn of_with_scratch(v: &[f32], scratch: &mut Vec<f32>) -> PointStats {
         let n = v.len();
         assert!(n >= 2, "need at least 2 observations");
         let nf = n as f64;
@@ -147,7 +154,9 @@ impl PointStats {
         // graphs use (distfit.QUANTILE_SUBSAMPLE = 256): observations are
         // i.i.d. across simulations, so the stride is a uniform subsample.
         let stride = n.div_ceil(256);
-        let mut sorted: Vec<f32> = v.iter().copied().step_by(stride).collect();
+        scratch.clear();
+        scratch.extend(v.iter().copied().step_by(stride));
+        let sorted = &mut scratch[..];
         sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let m = sorted.len();
         let pct = |q: f64| -> f64 {
@@ -186,13 +195,21 @@ pub struct FitResult {
 /// Equal-width histogram between min and max (Eq. 5's Freq_k).
 pub fn histogram(v: &[f32], mn: f64, mx: f64, bins: usize) -> Vec<f64> {
     let mut h = vec![0.0; bins];
+    histogram_into(v, mn, mx, &mut h);
+    h
+}
+
+/// [`histogram`] into a caller-owned buffer (`out.len()` bins), so the
+/// batched backends can reuse one buffer across a whole point batch.
+pub fn histogram_into(v: &[f32], mn: f64, mx: f64, out: &mut [f64]) {
+    let bins = out.len();
+    out.fill(0.0);
     let rng = (mx - mn).max(1e-30);
     for &x in v {
         let idx = (((x as f64 - mn) / rng) * bins as f64).floor();
         let idx = (idx.max(0.0) as usize).min(bins - 1);
-        h[idx] += 1.0;
+        out[idx] += 1.0;
     }
-    h
 }
 
 /// Fit one type: (params, supported). Mirrors `distfit._FITTERS`.
@@ -296,19 +313,30 @@ pub fn fit_single(v: &[f32], t: DistType, bins: usize) -> FitResult {
 
 /// Same but with precomputed stats (avoids recomputing shared moments).
 pub fn fit_single_with_stats(v: &[f32], s: &PointStats, t: DistType, bins: usize) -> FitResult {
+    let mut hist = vec![0.0; bins];
+    fit_single_with_hist(v, s, t, &mut hist)
+}
+
+/// Single-type fit body with caller-owned stats + histogram buffer (the
+/// batched backend's no-allocation path). `hist` is filled — only when
+/// the type's support guard passes — with `hist.len()` Eq. 5 intervals.
+pub fn fit_single_with_hist(
+    v: &[f32],
+    s: &PointStats,
+    t: DistType,
+    hist: &mut [f64],
+) -> FitResult {
     let (params, supported) = fit_params(t, s);
-    if !supported {
-        return FitResult {
-            dist: t,
-            params,
-            error: PENALTY_ERROR,
-        };
-    }
-    let hist = histogram(v, s.min, s.max, bins);
+    let error = if supported {
+        histogram_into(v, s.min, s.max, hist);
+        eq5_error(t, &params, hist, s.min, s.max, v.len())
+    } else {
+        PENALTY_ERROR
+    };
     FitResult {
         dist: t,
         params,
-        error: eq5_error(t, &params, &hist, s.min, s.max, v.len()),
+        error,
     }
 }
 
@@ -316,11 +344,24 @@ pub fn fit_single_with_stats(v: &[f32], s: &PointStats, t: DistType, bins: usize
 pub fn fit_best(v: &[f32], candidates: &[DistType], bins: usize) -> FitResult {
     let s = PointStats::of(v);
     let hist = histogram(v, s.min, s.max, bins);
+    fit_best_with_hist(&s, &hist, v.len(), candidates)
+}
+
+/// Algorithm 3 argmin body over precomputed stats + histogram — THE
+/// definition of the fit semantics (support guard → penalty, Eq. 5
+/// otherwise, first minimum wins). Every backend funnels through this
+/// so the 1e-5 parity contract cannot drift.
+pub fn fit_best_with_hist(
+    s: &PointStats,
+    hist: &[f64],
+    n_obs: usize,
+    candidates: &[DistType],
+) -> FitResult {
     let mut best: Option<FitResult> = None;
     for &t in candidates {
-        let (params, supported) = fit_params(t, &s);
+        let (params, supported) = fit_params(t, s);
         let error = if supported {
-            eq5_error(t, &params, &hist, s.min, s.max, v.len())
+            eq5_error(t, &params, hist, s.min, s.max, n_obs)
         } else {
             PENALTY_ERROR
         };

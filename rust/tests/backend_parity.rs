@@ -1,0 +1,212 @@
+//! Backend parity: the batched [`NativeBackend`] must reproduce the
+//! scalar oracle in `pdfflow::stats` — same statistics, same per-type
+//! fits, same Algorithm 3 argmin — within 1e-5, for every `DistType`,
+//! across every batching edge case (0 points, 1 point, exactly one
+//! batch, partial final batch).
+//!
+//! With `--features xla` (and `make artifacts`), the same harness also
+//! checks the PJRT engine against the native backend.
+
+use pdfflow::runtime::{Backend, NativeBackend};
+use pdfflow::stats::{self, DistType, PointStats, DEFAULT_BINS};
+use pdfflow::util::prng::Rng;
+
+const TOL: f64 = 1e-5;
+
+/// Seeded draws from each candidate family (guard-safe: every family's
+/// own data is inside its support).
+fn family_batch(fam: DistType, n: usize, obs: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let mut values = Vec::with_capacity(n * obs);
+    for _ in 0..n * obs {
+        let v = match fam {
+            DistType::Normal => rng.normal(10.0, 2.0),
+            DistType::Uniform => rng.uniform(3.0, 9.0),
+            DistType::Exponential => rng.exponential(0.25),
+            DistType::Lognormal => rng.lognormal(1.5, 0.4),
+            DistType::Cauchy => rng.cauchy(0.0, 2.0),
+            DistType::Gamma => rng.gamma(3.0, 2.0),
+            DistType::Geometric => rng.geometric(0.4),
+            DistType::Logistic => rng.logistic(5.0, 1.5),
+            DistType::StudentT => rng.student_t(5.0),
+            DistType::Weibull => rng.weibull(2.0, 1.0),
+        };
+        values.push(v as f32);
+    }
+    values
+}
+
+fn backend_with_batch(batch: usize) -> NativeBackend {
+    NativeBackend::with_options(4, batch, DEFAULT_BINS)
+}
+
+/// Relative-ish closeness: absolute for small magnitudes.
+fn close(a: f64, b: f64, tol: f64) -> bool {
+    (a - b).abs() <= tol * a.abs().max(b.abs()).max(1.0)
+}
+
+#[test]
+fn fit_single_matches_oracle_for_every_dist_type() {
+    let obs = 200;
+    let n = 24;
+    let b = backend_with_batch(16); // forces a partial final batch
+    for (i, &data_fam) in DistType::ALL.iter().enumerate() {
+        let values = family_batch(data_fam, n, obs, 100 + i as u64);
+        for &fit_t in &DistType::ALL {
+            let out = b.run_fit_single(&values, n, obs, fit_t).unwrap();
+            for p in 0..n {
+                let v = &values[p * obs..(p + 1) * obs];
+                let oracle = stats::fit_single(v, fit_t, DEFAULT_BINS);
+                let row = out.row(p);
+                assert!(
+                    close(row[0] as f64, oracle.error, TOL),
+                    "data {data_fam:?} fit {fit_t:?} point {p}: err {} vs oracle {}",
+                    row[0],
+                    oracle.error
+                );
+                for (c, op) in oracle.params.iter().enumerate() {
+                    assert!(
+                        close(row[1 + c] as f64, *op, TOL),
+                        "data {data_fam:?} fit {fit_t:?} point {p} param {c}: {} vs {}",
+                        row[1 + c],
+                        op
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fit_all_matches_oracle_argmin_for_both_type_sets() {
+    let obs = 300;
+    let n = 20;
+    let b = backend_with_batch(8);
+    for (i, &fam) in DistType::ALL.iter().enumerate() {
+        let values = family_batch(fam, n, obs, 200 + i as u64);
+        for n_types in [4usize, 10] {
+            let out = b.run_fit_all(&values, n, obs, n_types).unwrap();
+            for p in 0..n {
+                let v = &values[p * obs..(p + 1) * obs];
+                let oracle = stats::fit_best(v, &DistType::ALL[..n_types], DEFAULT_BINS);
+                let row = out.row(p);
+                assert_eq!(
+                    row[0] as usize,
+                    oracle.dist.id(),
+                    "data {fam:?} n_types {n_types} point {p}: winner"
+                );
+                assert!(
+                    close(row[1] as f64, oracle.error, TOL),
+                    "data {fam:?} n_types {n_types} point {p}: err {} vs {}",
+                    row[1],
+                    oracle.error
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn stats_match_oracle_for_every_dist_type() {
+    let obs = 500;
+    let n = 6;
+    let b = backend_with_batch(64);
+    for (i, &fam) in DistType::ALL.iter().enumerate() {
+        let values = family_batch(fam, n, obs, 300 + i as u64);
+        let out = b.run_stats(&values, n, obs).unwrap();
+        for p in 0..n {
+            let s = PointStats::of(&values[p * obs..(p + 1) * obs]);
+            let expect = [
+                s.mean, s.std, s.min, s.max, s.skew, s.kurt_ex, s.meanlog, s.stdlog,
+                s.q25, s.q50, s.q75, s.pos_frac,
+            ];
+            let row = out.row(p);
+            for (c, e) in expect.iter().enumerate() {
+                assert!(
+                    close(row[c] as f64, *e, TOL),
+                    "data {fam:?} point {p} col {c}: {} vs oracle {}",
+                    row[c],
+                    e
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn batching_edge_cases_keep_results_and_shapes() {
+    let obs = 100;
+    let batch = 16;
+    let b = backend_with_batch(batch);
+    // Reference computed with a batch big enough to hold everything.
+    let big = backend_with_batch(1 << 20);
+    for n_points in [0usize, 1, batch, batch + 5, 3 * batch, 3 * batch + 1] {
+        let values = family_batch(DistType::Gamma, n_points, obs, 400 + n_points as u64);
+        for n_types in [4usize, 10] {
+            let out = b.run_fit_all(&values, n_points, obs, n_types).unwrap();
+            assert_eq!((out.n_rows, out.n_cols), (n_points, 5), "n={n_points}");
+            assert_eq!(out.data.len(), n_points * 5);
+            let reference = big.run_fit_all(&values, n_points, obs, n_types).unwrap();
+            assert_eq!(out.data, reference.data, "n={n_points} t={n_types}");
+        }
+        let st = b.run_stats(&values, n_points, obs).unwrap();
+        assert_eq!((st.n_rows, st.n_cols), (n_points, 12), "n={n_points}");
+    }
+    // Execution accounting: ceil-div chunks, every row exactly once.
+    b.reset_metrics();
+    let values = family_batch(DistType::Normal, batch + 5, obs, 7);
+    b.run_fit_all(&values, batch + 5, obs, 4).unwrap();
+    let m = b.metrics();
+    assert_eq!(m.executions, 2);
+    assert_eq!(m.rows_processed, (batch + 5) as u64);
+}
+
+#[test]
+fn unsupported_types_get_penalty_error() {
+    // Negative data: exponential/lognormal/gamma/geometric/weibull guards
+    // must fire identically in the batched path and the oracle.
+    let obs = 150;
+    let n = 10;
+    let mut rng = Rng::new(9);
+    let values: Vec<f32> = (0..n * obs).map(|_| rng.normal(-50.0, 1.0) as f32).collect();
+    let b = backend_with_batch(4);
+    for t in [
+        DistType::Exponential,
+        DistType::Lognormal,
+        DistType::Gamma,
+        DistType::Geometric,
+        DistType::Weibull,
+    ] {
+        let out = b.run_fit_single(&values, n, obs, t).unwrap();
+        for p in 0..n {
+            assert_eq!(out.row(p)[0] as f64, stats::PENALTY_ERROR, "{t:?} point {p}");
+        }
+    }
+}
+
+#[cfg(feature = "xla")]
+mod xla_parity {
+    use super::*;
+
+    fn xla_backend() -> Box<dyn Backend> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Box::new(pdfflow::runtime::Engine::load_default(dir).expect("run `make artifacts` first"))
+    }
+
+    #[test]
+    fn xla_tracks_native_within_f32_slack() {
+        let e = xla_backend();
+        let nb = backend_with_batch(64);
+        let values = family_batch(DistType::Gamma, 32, 100, 11);
+        let a = e.run_fit_all(&values, 32, 100, 10).unwrap();
+        let b = nb.run_fit_all(&values, 32, 100, 10).unwrap();
+        for p in 0..32 {
+            let (ra, rb) = (a.row(p), b.row(p));
+            // f32 HLO vs f64 oracle: same winner, or near-tied errors.
+            assert!(
+                ra[0] == rb[0] || (ra[1] as f64 - rb[1] as f64).abs() < 0.02,
+                "point {p}: xla {ra:?} vs native {rb:?}"
+            );
+        }
+    }
+}

@@ -1,15 +1,23 @@
-//! Integration tests: runtime (PJRT) against the real AOT artifacts, and
-//! cross-checks of the HLO graphs vs the pure-rust stats oracle.
-//!
-//! Requires `make artifacts` (manifest + *.hlo.txt under artifacts/).
+//! Integration tests: the default compute backend against the pure-rust
+//! stats oracle, plus (under `--features xla`, after `make artifacts`)
+//! the same checks against the PJRT engine and the real AOT artifacts.
 
-use pdfflow::runtime::{ArtifactKind, Engine};
+use pdfflow::runtime::{Backend, NativeBackend};
 use pdfflow::stats::{self, DistType, PointStats, DEFAULT_BINS};
 use pdfflow::util::prng::Rng;
 
-fn engine() -> Engine {
+/// Backend under test. Native by default — it must work on a machine
+/// with no HLO artifacts and no XLA toolchain. The batch of 64 mirrors
+/// the smallest artifact batch so chunking paths are exercised.
+fn backend() -> Box<dyn Backend> {
+    Box::new(NativeBackend::with_options(4, 64, DEFAULT_BINS))
+}
+
+/// The PJRT engine over the real artifacts (xla builds only).
+#[cfg(feature = "xla")]
+fn xla_backend() -> Box<dyn Backend> {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    Engine::load_default(dir).expect("run `make artifacts` first")
+    Box::new(pdfflow::runtime::Engine::load_default(dir).expect("run `make artifacts` first"))
 }
 
 /// Observation batch: `n` points of `obs` draws each, mixed families.
@@ -35,42 +43,40 @@ fn mixed_batch(n: usize, obs: usize, seed: u64) -> (Vec<f32>, Vec<DistType>) {
 }
 
 #[test]
-fn engine_loads_and_reports_platform() {
-    let e = engine();
-    assert_eq!(e.platform(), "cpu");
-    assert!(e.manifest.artifacts.len() >= 13);
+fn backend_reports_name_and_runs_without_artifacts() {
+    let b = backend();
+    assert_eq!(b.name(), "native");
+    let (values, _) = mixed_batch(4, 100, 0);
+    assert_eq!(b.run_stats(&values, 4, 100).unwrap().n_rows, 4);
 }
 
 #[test]
-fn stats_artifact_matches_rust_oracle() {
-    let e = engine();
+fn stats_kernel_matches_rust_oracle() {
+    let b = backend();
     let (values, _) = mixed_batch(32, 100, 1);
-    let out = e.run_stats(&values, 32, 100).unwrap();
+    let out = b.run_stats(&values, 32, 100).unwrap();
     assert_eq!((out.n_rows, out.n_cols), (32, 12));
-    let mean_col = e.manifest.stats_col("mean").unwrap();
-    let std_col = e.manifest.stats_col("std").unwrap();
-    let min_col = e.manifest.stats_col("min").unwrap();
-    let max_col = e.manifest.stats_col("max").unwrap();
+    // STATS_COLS order: mean=0, std=1, min=2, max=3.
     for p in 0..32 {
         let s = PointStats::of(&values[p * 100..(p + 1) * 100]);
         let row = out.row(p);
         assert!(
-            (row[mean_col] as f64 - s.mean).abs() < 1e-2 * s.mean.abs().max(1.0),
-            "point {p}: hlo mean {} vs oracle {}",
-            row[mean_col],
+            (row[0] as f64 - s.mean).abs() < 1e-2 * s.mean.abs().max(1.0),
+            "point {p}: backend mean {} vs oracle {}",
+            row[0],
             s.mean
         );
-        assert!((row[std_col] as f64 - s.std).abs() < 1e-2 * s.std.abs().max(1e-3));
-        assert!((row[min_col] as f64 - s.min).abs() < 1e-4 * s.min.abs().max(1.0));
-        assert!((row[max_col] as f64 - s.max).abs() < 1e-4 * s.max.abs().max(1.0));
+        assert!((row[1] as f64 - s.std).abs() < 1e-2 * s.std.abs().max(1e-3));
+        assert!((row[2] as f64 - s.min).abs() < 1e-4 * s.min.abs().max(1.0));
+        assert!((row[3] as f64 - s.max).abs() < 1e-4 * s.max.abs().max(1.0));
     }
 }
 
 #[test]
 fn fit_all4_recovers_generating_families() {
-    let e = engine();
+    let b = backend();
     let (values, families) = mixed_batch(64, 100, 2);
-    let out = e.run_fit_all(&values, 64, 100, 4).unwrap();
+    let out = b.run_fit_all(&values, 64, 100, 4).unwrap();
     assert_eq!(out.n_cols, 5);
     let mut correct = 0;
     for p in 0..64 {
@@ -89,9 +95,9 @@ fn fit_all4_recovers_generating_families() {
 
 #[test]
 fn fit_all_matches_rust_oracle_argmin() {
-    let e = engine();
+    let b = backend();
     let (values, _) = mixed_batch(16, 100, 3);
-    let out = e.run_fit_all(&values, 16, 100, 10).unwrap();
+    let out = b.run_fit_all(&values, 16, 100, 10).unwrap();
     for p in 0..16 {
         let row = out.row(p);
         let oracle = stats::fit_best(
@@ -101,13 +107,13 @@ fn fit_all_matches_rust_oracle_argmin() {
         );
         // Errors are computed in f32 vs f64; allow small slack, and allow
         // a different winner only when errors are nearly tied.
-        let hlo_err = row[1] as f64;
+        let got_err = row[1] as f64;
         assert!(
-            (hlo_err - oracle.error).abs() < 0.02
+            (got_err - oracle.error).abs() < 0.02
                 || DistType::from_id(row[0] as usize) == Some(oracle.dist),
-            "point {p}: hlo ({}, {:.4}) vs oracle ({:?}, {:.4})",
+            "point {p}: backend ({}, {:.4}) vs oracle ({:?}, {:.4})",
             row[0],
-            hlo_err,
+            got_err,
             oracle.dist,
             oracle.error
         );
@@ -116,10 +122,10 @@ fn fit_all_matches_rust_oracle_argmin() {
 
 #[test]
 fn fit_single_matches_rust_oracle_per_type() {
-    let e = engine();
+    let b = backend();
     let (values, _) = mixed_batch(8, 100, 4);
     for &t in &DistType::ALL {
-        let out = e.run_fit_single(&values, 8, 100, t).unwrap();
+        let out = b.run_fit_single(&values, 8, 100, t).unwrap();
         assert_eq!(out.n_cols, 4);
         for p in 0..8 {
             let row = out.row(p);
@@ -127,7 +133,7 @@ fn fit_single_matches_rust_oracle_per_type() {
                 stats::fit_single(&values[p * 100..(p + 1) * 100], t, DEFAULT_BINS);
             assert!(
                 (row[0] as f64 - oracle.error).abs() < 0.02,
-                "{t:?} point {p}: hlo err {} vs oracle {}",
+                "{t:?} point {p}: backend err {} vs oracle {}",
                 row[0],
                 oracle.error
             );
@@ -136,35 +142,34 @@ fn fit_single_matches_rust_oracle_per_type() {
 }
 
 #[test]
-fn partial_batch_padding_is_discarded() {
-    let e = engine();
-    // 70 points with a 64-batch artifact: 2 executes, 58 padded rows.
+fn partial_batch_is_processed_exactly() {
+    let b = backend();
+    // 70 points with a 64-point batch: 2 executions, no lost/extra rows.
     let (values, _) = mixed_batch(70, 100, 5);
-    let out = e.run_fit_all(&values, 70, 100, 4).unwrap();
+    let out = b.run_fit_all(&values, 70, 100, 4).unwrap();
     assert_eq!(out.n_rows, 70);
-    let m = e.metrics();
+    let m = b.metrics();
     assert_eq!(m.rows_processed, 70);
-    assert_eq!(m.rows_padded, 58);
     assert_eq!(m.executions, 2);
     // Same points in a different batching give identical results.
-    let single = e.run_fit_all(&values[..100 * 64], 64, 100, 4).unwrap();
+    let single = b.run_fit_all(&values[..100 * 64], 64, 100, 4).unwrap();
     assert_eq!(&out.data[..64 * 5], &single.data[..]);
 }
 
 #[test]
 fn run_rejects_shape_mismatch() {
-    let e = engine();
+    let b = backend();
     let values = vec![1.0f32; 100];
-    assert!(e.run_stats(&values, 2, 100).is_err());
-    assert!(e.run_stats(&values, 1, 99).is_err());
+    assert!(b.run_stats(&values, 2, 100).is_err());
+    assert!(b.run_stats(&values, 1, 99).is_err());
 }
 
 #[test]
 fn obs_4000_variant_works() {
-    let e = engine();
+    let b = backend();
     let mut rng = Rng::new(6);
     let values: Vec<f32> = (0..2 * 4000).map(|_| rng.normal(5.0, 1.0) as f32).collect();
-    let out = e.run_fit_all(&values, 2, 4000, 4).unwrap();
+    let out = b.run_fit_all(&values, 2, 4000, 4).unwrap();
     assert_eq!(out.n_rows, 2);
     for p in 0..2 {
         assert_eq!(out.row(p)[0] as usize, DistType::Normal.id());
@@ -172,15 +177,57 @@ fn obs_4000_variant_works() {
     }
 }
 
-#[test]
-fn manifest_find_honors_kind_filters() {
-    let e = engine();
-    assert!(e
-        .manifest
-        .find(ArtifactKind::FitSingle, Some(DistType::Cauchy), None, 1000)
-        .is_some());
-    assert!(e
-        .manifest
-        .find(ArtifactKind::FitSingle, Some(DistType::Cauchy), Some(4), 1000)
-        .is_none());
+// ------------------------------------------------------------------
+// XLA-only: the PJRT engine against the real artifacts.
+// ------------------------------------------------------------------
+
+#[cfg(feature = "xla")]
+mod xla {
+    use super::*;
+    use pdfflow::runtime::ArtifactKind;
+
+    #[test]
+    fn engine_loads_and_reports_platform() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let e = pdfflow::runtime::Engine::load_default(dir).expect("run `make artifacts` first");
+        assert_eq!(e.platform(), "cpu");
+        assert!(e.manifest.artifacts.len() >= 13);
+        assert!(e
+            .manifest
+            .find(ArtifactKind::FitSingle, Some(DistType::Cauchy), None, 1000)
+            .is_some());
+        assert!(e
+            .manifest
+            .find(ArtifactKind::FitSingle, Some(DistType::Cauchy), Some(4), 1000)
+            .is_none());
+    }
+
+    #[test]
+    fn xla_padding_rows_are_discarded() {
+        let e = xla_backend();
+        let (values, _) = mixed_batch(70, 100, 5);
+        let out = e.run_fit_all(&values, 70, 100, 4).unwrap();
+        assert_eq!(out.n_rows, 70);
+        let m = e.metrics();
+        assert_eq!(m.rows_processed, 70);
+        assert_eq!(m.rows_padded, 58);
+        assert_eq!(m.executions, 2);
+    }
+
+    #[test]
+    fn xla_agrees_with_native_backend() {
+        let e = xla_backend();
+        let n = backend();
+        let (values, _) = mixed_batch(16, 100, 7);
+        let a = e.run_fit_all(&values, 16, 100, 10).unwrap();
+        let b = n.run_fit_all(&values, 16, 100, 10).unwrap();
+        for p in 0..16 {
+            let (ra, rb) = (a.row(p), b.row(p));
+            assert!(
+                (ra[1] as f64 - rb[1] as f64).abs() < 0.02
+                    || ra[0] == rb[0],
+                "point {p}: xla {ra:?} vs native {rb:?}"
+            );
+        }
+    }
 }

@@ -1,7 +1,11 @@
 //! End-to-end pipeline tests on a generated tiny dataset: every method ×
-//! type set runs through datagen → NFS reader → stats artifact → method
-//! coordinator → fit artifacts → Eq.6 error, and the paper's qualitative
+//! type set runs through datagen → NFS reader → stats kernel → method
+//! coordinator → fit kernels → Eq.6 error, and the paper's qualitative
 //! relationships are asserted.
+//!
+//! Runs on the native backend by default (no artifacts needed); build
+//! with `--features xla` + `make artifacts` and set `PDFFLOW_BACKEND=xla`
+//! to drive the same suite through the PJRT engine.
 
 use std::sync::OnceLock;
 
@@ -9,14 +13,29 @@ use pdfflow::cluster::{ClusterSpec, SimCluster};
 use pdfflow::config::PipelineConfig;
 use pdfflow::coordinator::{Method, Pipeline, Sampler, TypeSet};
 use pdfflow::datagen::{DatasetSpec, SyntheticDataset};
-use pdfflow::runtime::Engine;
+use pdfflow::runtime::{make_backend, Backend, BackendKind, BackendOptions};
 
-/// One engine per test: the PJRT client is Rc-based (not Sync), so a
-/// process-wide shared engine would be unsound under the parallel test
-/// harness.
-fn engine() -> Engine {
+/// One backend per test (the PJRT client is Rc-based — not Sync — so a
+/// process-wide shared backend would be unsound under the parallel test
+/// harness). Native unless the build has the xla feature AND the
+/// environment asks for it; on xla builds a malformed PDFFLOW_BACKEND
+/// fails loudly rather than silently falling back to native.
+fn backend() -> Box<dyn Backend> {
+    let kind = if cfg!(feature = "xla") {
+        BackendKind::resolve(None).expect("PDFFLOW_BACKEND")
+    } else {
+        BackendKind::Native
+    };
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    Engine::load_default(dir).expect("run `make artifacts` first")
+    make_backend(
+        kind,
+        dir.to_str().unwrap(),
+        &BackendOptions {
+            batch: 64,
+            ..BackendOptions::default()
+        },
+    )
+    .expect("backend construction")
 }
 
 fn dataset() -> &'static SyntheticDataset {
@@ -27,19 +46,19 @@ fn dataset() -> &'static SyntheticDataset {
     })
 }
 
-fn pipeline(engine: &Engine) -> Pipeline<'_> {
+fn pipeline(backend: &dyn Backend) -> Pipeline<'_> {
     let cfg = PipelineConfig {
         batch: 64,
         window_lines: 4,
         ..PipelineConfig::default()
     };
-    Pipeline::new(dataset(), engine, SimCluster::new(ClusterSpec::lncc()), cfg)
+    Pipeline::new(dataset(), backend, SimCluster::new(ClusterSpec::lncc()), cfg)
 }
 
 #[test]
 fn every_method_runs_and_covers_all_points() {
-    let engine = engine();
-    let mut p = pipeline(&engine);
+    let backend = backend();
+    let mut p = pipeline(backend.as_ref());
     p.ensure_tree(0, TypeSet::Four, 500).unwrap();
     let dims = dataset().spec.dims;
     for method in Method::ALL {
@@ -59,8 +78,8 @@ fn every_method_runs_and_covers_all_points() {
 
 #[test]
 fn grouping_reduces_fits_without_extra_error() {
-    let engine = engine();
-    let mut p = pipeline(&engine);
+    let backend = backend();
+    let mut p = pipeline(backend.as_ref());
     let base = p.run_slice(Method::Baseline, 2, TypeSet::Four).unwrap();
     let grp = p.run_slice(Method::Grouping, 2, TypeSet::Four).unwrap();
     // Grouping must fit strictly fewer points (the dataset is built with
@@ -83,8 +102,8 @@ fn grouping_reduces_fits_without_extra_error() {
 
 #[test]
 fn reuse_hits_across_windows() {
-    let engine = engine();
-    let mut p = pipeline(&engine);
+    let backend = backend();
+    let mut p = pipeline(backend.as_ref());
     let r = p.run_slice(Method::Reuse, 2, TypeSet::Four).unwrap();
     // Layers repeat the same (mean, std) groups in every window, so
     // later windows must hit the cross-window cache.
@@ -98,8 +117,8 @@ fn reuse_hits_across_windows() {
 
 #[test]
 fn ml_reduces_work_with_bounded_extra_error() {
-    let engine = engine();
-    let mut p = pipeline(&engine);
+    let backend = backend();
+    let mut p = pipeline(backend.as_ref());
     let model_err = p.ensure_tree(0, TypeSet::Ten, 500).unwrap();
     assert!(model_err < 0.5, "model error {model_err}");
     let base = p.run_slice(Method::Baseline, 2, TypeSet::Ten).unwrap();
@@ -123,8 +142,8 @@ fn ml_reduces_work_with_bounded_extra_error() {
 
 #[test]
 fn ten_types_cost_more_but_err_not_worse() {
-    let engine = engine();
-    let mut p = pipeline(&engine);
+    let backend = backend();
+    let mut p = pipeline(backend.as_ref());
     let four = p.run_slice(Method::Baseline, 2, TypeSet::Four).unwrap();
     let ten = p.run_slice(Method::Baseline, 2, TypeSet::Ten).unwrap();
     assert!(ten.avg_error <= four.avg_error + 1e-6);
@@ -133,8 +152,8 @@ fn ten_types_cost_more_but_err_not_worse() {
 
 #[test]
 fn run_lines_small_workload() {
-    let engine = engine();
-    let mut p = pipeline(&engine);
+    let backend = backend();
+    let mut p = pipeline(backend.as_ref());
     let r = p.run_lines(Method::Baseline, 2, TypeSet::Four, 8).unwrap();
     let dims = dataset().spec.dims;
     assert_eq!(r.n_points, 8 * dims.nx);
@@ -143,8 +162,8 @@ fn run_lines_small_workload() {
 
 #[test]
 fn ml_methods_fail_fast_without_tree() {
-    let engine = engine();
-    let mut p = pipeline(&engine);
+    let backend = backend();
+    let mut p = pipeline(backend.as_ref());
     assert!(p.run_slice(Method::Ml, 2, TypeSet::Four).is_err());
     assert!(p.run_slice(Method::GroupingMl, 2, TypeSet::Four).is_err());
 }
@@ -159,8 +178,8 @@ fn persistence_writes_one_record_per_point() {
         ..PipelineConfig::default()
     };
     cfg.persist_dir = Some(out.to_str().unwrap().to_string());
-    let engine = engine();
-    let mut p = Pipeline::new(dataset(), &engine, SimCluster::new(ClusterSpec::lncc()), cfg);
+    let backend = backend();
+    let mut p = Pipeline::new(dataset(), backend.as_ref(), SimCluster::new(ClusterSpec::lncc()), cfg);
     let r = p.run_slice(Method::Baseline, 1, TypeSet::Four).unwrap();
     let path = out.join("slice1_baseline_4.pdfout");
     let bytes = std::fs::metadata(&path).unwrap().len();
@@ -170,8 +189,8 @@ fn persistence_writes_one_record_per_point() {
 
 #[test]
 fn sampling_is_cheaper_than_fitting_and_close_in_features() {
-    let engine = engine();
-    let mut p = pipeline(&engine);
+    let backend = backend();
+    let mut p = pipeline(backend.as_ref());
     p.ensure_tree(0, TypeSet::Four, 500).unwrap();
     let tree = p.tree.clone().unwrap();
     let ds = dataset();
@@ -179,14 +198,14 @@ fn sampling_is_cheaper_than_fitting_and_close_in_features() {
     let cache = pdfflow::storage::WindowCache::new(64 << 20);
     let mut cluster = SimCluster::new(ClusterSpec::lncc());
     let full = pdfflow::coordinator::sampling::full_slice_features(
-        &reader, &cache, &engine, &mut cluster, &tree, 2,
+        &reader, &cache, backend.as_ref(), &mut cluster, &tree, 2,
     )
     .unwrap();
     for rate in [0.1, 0.5] {
         let rep = pdfflow::coordinator::sampling::run_sampling(
             &reader,
             &cache,
-            &engine,
+            backend.as_ref(),
             &mut cluster,
             &tree,
             2,
@@ -205,7 +224,7 @@ fn sampling_is_cheaper_than_fitting_and_close_in_features() {
     }
     // k-means path also works and returns <= k points.
     let rep = pdfflow::coordinator::sampling::run_sampling(
-        &reader, &cache, &engine, &mut cluster, &tree, 2, 0.1, Sampler::KMeans, 7,
+        &reader, &cache, backend.as_ref(), &mut cluster, &tree, 2, 0.1, Sampler::KMeans, 7,
     )
     .unwrap();
     assert!(rep.n_sampled <= (ds.spec.dims.slice_points() as f64 * 0.1).round() as usize);
@@ -214,15 +233,15 @@ fn sampling_is_cheaper_than_fitting_and_close_in_features() {
 
 #[test]
 fn simulated_time_scales_down_with_more_nodes() {
-    let engine = engine();
+    let backend = backend();
     let ds = dataset();
     let cfg = PipelineConfig {
         batch: 64,
         window_lines: 4,
         ..PipelineConfig::default()
     };
-    let mut p10 = Pipeline::new(ds, &engine, SimCluster::new(ClusterSpec::g5k(10)), cfg.clone());
-    let mut p60 = Pipeline::new(ds, &engine, SimCluster::new(ClusterSpec::g5k(60)), cfg);
+    let mut p10 = Pipeline::new(ds, backend.as_ref(), SimCluster::new(ClusterSpec::g5k(10)), cfg.clone());
+    let mut p60 = Pipeline::new(ds, backend.as_ref(), SimCluster::new(ClusterSpec::g5k(60)), cfg);
     let r10 = p10.run_slice(Method::Baseline, 2, TypeSet::Ten).unwrap();
     let r60 = p60.run_slice(Method::Baseline, 2, TypeSet::Ten).unwrap();
     assert!(
@@ -231,4 +250,69 @@ fn simulated_time_scales_down_with_more_nodes() {
         r60.fit_sim_s,
         r10.fit_sim_s
     );
+}
+
+#[test]
+fn every_method_typeset_reports_internally_consistent() {
+    // Satellite invariant suite: every Method × TypeSet covers all slice
+    // points, and the SliceReport's phase times / fit counts are the
+    // exact aggregates of its per-window reports.
+    let backend = backend();
+    let mut p = pipeline(backend.as_ref());
+    p.ensure_tree(0, TypeSet::Ten, 500).unwrap();
+    let dims = dataset().spec.dims;
+    for types in [TypeSet::Four, TypeSet::Ten] {
+        for method in Method::ALL {
+            let r = p.run_slice(method, 2, types).unwrap();
+            let tag = format!("{}/{}", method.name(), types.name());
+            assert_eq!(r.n_points, dims.slice_points(), "{tag}: point coverage");
+            let win_points: usize = r.windows.iter().map(|w| w.n_points).sum();
+            assert_eq!(win_points, r.n_points, "{tag}: window point sum");
+            let win_fits: usize = r.windows.iter().map(|w| w.fits).sum();
+            assert_eq!(win_fits, r.fits, "{tag}: fit sum");
+            let win_groups: usize = r.windows.iter().map(|w| w.groups).sum();
+            assert_eq!(win_groups, r.groups, "{tag}: group sum");
+            let win_hits: usize = r.windows.iter().map(|w| w.reuse_hits).sum();
+            assert_eq!(win_hits, r.reuse_hits, "{tag}: reuse-hit sum");
+            let win_shuffle: u64 = r.windows.iter().map(|w| w.shuffle_bytes).sum();
+            assert_eq!(win_shuffle, r.shuffle_bytes, "{tag}: shuffle sum");
+            for (phase, total, per_window) in [
+                ("load_real", r.load_real_s, r.windows.iter().map(|w| w.load_real_s).sum::<f64>()),
+                ("load_sim", r.load_sim_s, r.windows.iter().map(|w| w.load_sim_s).sum::<f64>()),
+                ("fit_real", r.fit_real_s, r.windows.iter().map(|w| w.fit_real_s).sum::<f64>()),
+                ("fit_sim", r.fit_sim_s, r.windows.iter().map(|w| w.fit_sim_s).sum::<f64>()),
+            ] {
+                assert!(total >= 0.0, "{tag}: negative {phase}");
+                assert!(
+                    (total - per_window).abs() < 1e-9 * total.abs().max(1.0),
+                    "{tag}: {phase} total {total} != window sum {per_window}"
+                );
+            }
+            assert!(
+                (r.total_real_s() - (r.load_real_s + r.fit_real_s)).abs() < 1e-12,
+                "{tag}: total_real_s"
+            );
+            // Fit economics: never more fits than points; grouping never
+            // more groups than points; reuse hits only for reuse methods.
+            assert!(r.fits <= r.n_points, "{tag}: fits {} > points", r.fits);
+            assert!(r.groups <= r.n_points, "{tag}: groups {} > points", r.groups);
+            if method.uses_grouping() {
+                assert!(r.groups > 0, "{tag}: no groups");
+                if method.uses_reuse() {
+                    assert_eq!(r.fits + r.reuse_hits, r.groups, "{tag}: fits+hits");
+                } else {
+                    assert_eq!(r.fits, r.groups, "{tag}: fits==groups");
+                }
+            } else {
+                assert_eq!(r.fits, r.n_points, "{tag}: baseline fits all");
+                assert_eq!(r.reuse_hits, 0, "{tag}: no reuse hits");
+            }
+            // Eq. 6 is the mean of per-window error sums.
+            let err_total: f64 = r.windows.iter().map(|w| w.err_sum).sum();
+            assert!(
+                (r.avg_error - err_total / r.n_points as f64).abs() < 1e-12,
+                "{tag}: Eq.6 aggregate"
+            );
+        }
+    }
 }
