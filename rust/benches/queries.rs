@@ -1,0 +1,157 @@
+//! Query-throughput harness for the pdfstore serving layer (criterion
+//! substitute; harness = false).
+//!
+//! Builds a store by running the pipeline's persist phase over two
+//! slices, then measures queries/sec against the `QueryEngine` under
+//! 1..N threads, cold cache (cleared before each pass) vs warm cache
+//! (second pass over the same keys), plus region-summary and
+//! quantile-surface analytics throughput. This is the north-star
+//! workload: many concurrent readers asking for served PDFs.
+
+use std::time::Instant;
+
+use pdfflow::cluster::{ClusterSpec, SimCluster};
+use pdfflow::config::PipelineConfig;
+use pdfflow::coordinator::{Method, Pipeline, TypeSet};
+use pdfflow::cube::{CubeDims, PointId};
+use pdfflow::datagen::{DatasetSpec, SyntheticDataset};
+use pdfflow::pdfstore::{QueryEngine, QueryOptions, RegionQuery};
+use pdfflow::runtime::{make_backend, BackendKind, BackendOptions};
+use pdfflow::util::pool;
+use pdfflow::util::prng::Rng;
+use pdfflow::util::timing::fmt_bytes;
+
+const SLICES: [usize; 2] = [2, 3];
+
+fn main() {
+    let root = std::env::temp_dir().join(format!("pdfflow-querybench-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let store_dir = root.join("store");
+
+    // A mid-size cube: 64 x 48 lines x 6 slices, 100 observations.
+    let mut spec = DatasetSpec::tiny();
+    spec.dims = CubeDims::new(64, 48, 6);
+    spec.seed = 20180599;
+    let ds = SyntheticDataset::generate(&spec, root.join("data")).expect("dataset");
+    let backend = make_backend(
+        BackendKind::Native,
+        "artifacts",
+        &BackendOptions { batch: 64, ..BackendOptions::default() },
+    )
+    .expect("backend");
+    let mut cfg = PipelineConfig { batch: 64, window_lines: 8, ..PipelineConfig::default() };
+    cfg.store_dir = Some(store_dir.to_string_lossy().into_owned());
+    let mut pipe = Pipeline::new(
+        &ds,
+        backend.as_ref(),
+        SimCluster::new(ClusterSpec::lncc()),
+        cfg,
+    );
+    let t0 = Instant::now();
+    for z in SLICES {
+        pipe.run_slice(Method::Baseline, z, TypeSet::Four).expect("persist slice");
+    }
+    println!(
+        "== query benches: store of {} points x {} slices built in {:.2}s ==",
+        spec.dims.slice_points(),
+        SLICES.len(),
+        t0.elapsed().as_secs_f64()
+    );
+
+    let engine = QueryEngine::open(
+        &store_dir,
+        QueryOptions { cache_bytes: 32 << 20, ..QueryOptions::default() },
+    )
+    .expect("open store");
+    println!(
+        "store: {} records, {} on disk",
+        engine.store().n_records(),
+        fmt_bytes(engine.store().total_bytes())
+    );
+
+    // Deterministic random point workload across both slices.
+    let mut rng = Rng::new(7);
+    let slice_pts = spec.dims.slice_points() as u64;
+    let n_queries = 20_000usize;
+    let ids: Vec<PointId> = (0..n_queries)
+        .map(|_| {
+            let z = SLICES[rng.below(SLICES.len())] as u64;
+            PointId(z * slice_pts + rng.below(slice_pts as usize) as u64)
+        })
+        .collect();
+
+    println!(
+        "\n{:<10} {:>14} {:>14}  ({} point queries)",
+        "threads", "cold q/s", "warm q/s", n_queries
+    );
+    let max_threads = pool::default_workers().max(4);
+    for threads in [1usize, 2, 4, 8] {
+        if threads > max_threads {
+            break;
+        }
+        let run = |label_cold: bool| -> f64 {
+            if label_cold {
+                engine.clear_cache();
+            }
+            let t = Instant::now();
+            let chunk = ids.len().div_ceil(threads);
+            let chunks: Vec<Vec<PointId>> = ids.chunks(chunk).map(|c| c.to_vec()).collect();
+            let results = pool::parallel_map(chunks, threads, |chunk| {
+                let mut acc = 0u64;
+                for id in chunk {
+                    acc ^= engine.point_by_id(id).expect("point").point.0;
+                }
+                acc
+            });
+            std::hint::black_box(results);
+            n_queries as f64 / t.elapsed().as_secs_f64()
+        };
+        let cold = run(true);
+        let warm = run(false);
+        println!("{threads:<10} {cold:>14.0} {warm:>14.0}");
+    }
+    let m = engine.meters();
+    println!(
+        "cache meters: {} hits / {} misses / {} evictions, {} resident",
+        m.hits,
+        m.misses,
+        m.evictions,
+        fmt_bytes(m.bytes)
+    );
+
+    // Analytical throughput: region summaries and quantile surfaces over
+    // random sub-rectangles of one slice.
+    let mut regions = Vec::new();
+    for _ in 0..200 {
+        let x0 = rng.below(spec.dims.nx / 2);
+        let y0 = rng.below(spec.dims.ny / 2);
+        regions.push(RegionQuery {
+            z: SLICES[rng.below(SLICES.len())],
+            x0,
+            x1: x0 + spec.dims.nx / 2 - 1,
+            y0,
+            y1: y0 + spec.dims.ny / 2 - 1,
+        });
+    }
+    let t = Instant::now();
+    let mut pts = 0usize;
+    for q in &regions {
+        pts += engine.region_summary(q).expect("summary").n_points;
+    }
+    let dt = t.elapsed().as_secs_f64();
+    println!(
+        "\nregion_summary: {:.0} regions/s ({:.2}M points/s scanned)",
+        regions.len() as f64 / dt,
+        pts as f64 / dt / 1e6
+    );
+    let t = Instant::now();
+    let mut acc = 0.0;
+    for q in regions.iter().take(20) {
+        acc += engine.region_quantile_mean(q, 0.5).expect("quantile");
+    }
+    let dt = t.elapsed().as_secs_f64();
+    std::hint::black_box(acc);
+    println!("region_quantile_mean(P50): {:.1} regions/s", 20.0 / dt);
+
+    let _ = std::fs::remove_dir_all(&root);
+}

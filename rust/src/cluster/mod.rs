@@ -201,6 +201,16 @@ impl SimCluster {
         self.charge(account, t)
     }
 
+    /// Simulated time to persist `bytes` of fitted-PDF output in `writes`
+    /// append batches back to the shared store (Algorithm 1 line 11). The
+    /// paper writes results to the same NFS-side storage the inputs came
+    /// from, so the persist path is charged with the same server model as
+    /// [`Self::charge_nfs`]: aggregate-bandwidth volume term plus
+    /// per-append latency amortized over concurrent writer streams.
+    pub fn charge_persist(&mut self, account: &str, bytes: u64, writes: u64) -> f64 {
+        self.charge_nfs(account, bytes, writes)
+    }
+
     /// Simulated time to broadcast `bytes` to every node (tree broadcast).
     pub fn charge_broadcast(&mut self, account: &str, bytes: u64) -> f64 {
         let rounds = (self.spec.nodes as f64).log2().ceil().max(0.0);
@@ -294,6 +304,19 @@ mod tests {
         let t_small = c.charge_nfs("a", 1 << 20, 100);
         let t_big = c.charge_nfs("b", 1 << 30, 100_000);
         assert!(t_big > t_small * 100.0);
+    }
+
+    #[test]
+    fn persist_time_scales_with_bytes_like_nfs() {
+        let mut c = SimCluster::new(ClusterSpec::lncc());
+        let t_small = c.charge_persist("p1", 1 << 20, 10);
+        let t_big = c.charge_persist("p2", 1 << 30, 10);
+        assert!(t_big > t_small * 100.0, "{t_big} vs {t_small}");
+        assert!(c.account("p1") > 0.0 && c.account("p2") > 0.0);
+        // Same server model as reads: identical bytes/reads cost the same.
+        let mut c2 = SimCluster::new(ClusterSpec::lncc());
+        let read = c2.charge_nfs("r", 1 << 20, 10);
+        assert!((read - t_small).abs() < 1e-15);
     }
 
     #[test]

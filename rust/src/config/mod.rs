@@ -31,8 +31,14 @@ pub struct PipelineConfig {
     /// Host threads for loading/compute.
     pub workers: usize,
     /// When set, per-slice fit outcomes are persisted here (Algorithm 1
-    /// line 11).
+    /// line 11) as legacy flat `.pdfout` files.
     pub persist_dir: Option<String>,
+    /// When set, fit outcomes stream into an indexed, queryable
+    /// [`crate::pdfstore`] store at this directory (footer-indexed
+    /// segments + checksummed manifest).
+    pub store_dir: Option<String>,
+    /// Segment block-cache budget for the store's `QueryEngine`, bytes.
+    pub query_cache_bytes: u64,
 }
 
 impl Default for PipelineConfig {
@@ -46,6 +52,8 @@ impl Default for PipelineConfig {
             group_quantum: 1e-6,
             workers: crate::util::pool::default_workers(),
             persist_dir: None,
+            store_dir: None,
+            query_cache_bytes: 64 << 20,
         }
     }
 }
@@ -214,6 +222,11 @@ impl ExperimentConfig {
         if let Some(d) = doc.get("pipeline.persist_dir").and_then(|v| v.as_str()) {
             cfg.pipeline.persist_dir = Some(d.to_string());
         }
+        if let Some(d) = doc.get("pipeline.store_dir").and_then(|v| v.as_str()) {
+            cfg.pipeline.store_dir = Some(d.to_string());
+        }
+        cfg.pipeline.query_cache_bytes =
+            doc.i64_or("pipeline.query_cache_bytes", cfg.pipeline.query_cache_bytes as i64) as u64;
         // Paths + slices + backend.
         cfg.slice = doc.usize_or("slice", cfg.slice);
         cfg.train_slice = doc.usize_or("train_slice", cfg.train_slice);
@@ -277,6 +290,26 @@ batch = 64
         assert_eq!(c.dataset.n_sims, 128);
         assert_eq!(c.cluster.nodes, 20);
         assert_eq!(c.pipeline.window_lines, 7);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn store_keys_parse() {
+        let dir = std::env::temp_dir().join(format!("pdfflow-cfg4-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("store.toml");
+        std::fs::write(
+            &path,
+            "preset = \"small\"\n[pipeline]\nstore_dir = \"out/store\"\nquery_cache_bytes = 1048576\n",
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_file(&path).unwrap();
+        assert_eq!(c.pipeline.store_dir.as_deref(), Some("out/store"));
+        assert_eq!(c.pipeline.query_cache_bytes, 1 << 20);
+        // Defaults: no store, 64 MiB query cache.
+        let d = ExperimentConfig::small();
+        assert!(d.pipeline.store_dir.is_none());
+        assert_eq!(d.pipeline.query_cache_bytes, 64 << 20);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

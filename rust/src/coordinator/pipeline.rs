@@ -6,6 +6,12 @@
 //! wall-clock on this host and simulated cluster time — are reported per
 //! phase, which is how the paper's figures separate "data loading" from
 //! "PDF computation".
+//!
+//! Persistence has two sinks: the legacy flat `.pdfout` file
+//! (`persist_dir`) and the indexed, queryable [`crate::pdfstore`] store
+//! (`store_dir`) that `pdfflow query` serves from. Persisted bytes are
+//! charged to the simulated cluster like any other data path
+//! (`persist.nfs` account) and reported per window/slice.
 
 use crate::cluster::SimCluster;
 use crate::config::PipelineConfig;
@@ -15,8 +21,9 @@ use crate::coordinator::mlmodel;
 use crate::cube::Window;
 use crate::datagen::SyntheticDataset;
 use crate::mltree::DecisionTree;
+use crate::pdfstore::{SegmentWriter, StoreWriter, REC_LEN};
 use crate::runtime::Backend;
-use crate::storage::{DatasetReader, WindowCache};
+use crate::storage::{CacheStats, DatasetReader, WindowCache};
 use crate::{PdfflowError, Result};
 
 /// Per-window accounting.
@@ -28,6 +35,12 @@ pub struct WindowReport {
     pub fits: usize,
     pub reuse_hits: usize,
     pub shuffle_bytes: u64,
+    /// True when the observation matrix came from the window cache.
+    pub cache_hit: bool,
+    /// Bytes persisted for this window (all sinks).
+    pub persist_bytes: u64,
+    /// Simulated cluster time charged for persisting those bytes.
+    pub persist_sim_s: f64,
     pub load_real_s: f64,
     pub load_sim_s: f64,
     pub fit_real_s: f64,
@@ -53,6 +66,13 @@ pub struct SliceReport {
     pub groups: usize,
     pub reuse_hits: usize,
     pub shuffle_bytes: u64,
+    /// Windows served from the window cache vs loaded from "NFS".
+    pub cache_hits: usize,
+    pub cache_misses: usize,
+    /// Bytes persisted over the whole slice (all sinks).
+    pub persist_bytes: u64,
+    /// Simulated cluster time charged for persisting.
+    pub persist_sim_s: f64,
 }
 
 impl SliceReport {
@@ -61,13 +81,13 @@ impl SliceReport {
     }
 
     pub fn total_sim_s(&self) -> f64 {
-        self.load_sim_s + self.fit_sim_s
+        self.load_sim_s + self.fit_sim_s + self.persist_sim_s
     }
 
     /// One human-readable summary row (bench drivers print these).
     pub fn row(&self) -> String {
         format!(
-            "{:<12} {:<8} load {:>8.2}s/{:>8.2}s  fit {:>8.3}s/{:>8.3}s  E {:.4}  fits {:>6}  groups {:>6}  hits {:>5}  shuffle {:>10}B",
+            "{:<12} {:<8} load {:>8.2}s/{:>8.2}s  fit {:>8.3}s/{:>8.3}s  E {:.4}  fits {:>6}  groups {:>6}  hits {:>5}  shuffle {:>10}B  wcache {}/{}  persist {}B",
             self.method.name(),
             self.types.name(),
             self.load_real_s,
@@ -79,6 +99,9 @@ impl SliceReport {
             self.groups,
             self.reuse_hits,
             self.shuffle_bytes,
+            self.cache_hits,
+            self.cache_misses,
+            self.persist_bytes,
         )
     }
 }
@@ -91,6 +114,8 @@ pub struct Pipeline<'a> {
     pub cfg: PipelineConfig,
     cache: WindowCache,
     reuse: ReuseCache,
+    /// Lazily opened pdfstore writer (when `cfg.store_dir` is set).
+    store: Option<StoreWriter>,
     pub tree: Option<DecisionTree>,
     pub model_error: Option<f64>,
 }
@@ -110,6 +135,7 @@ impl<'a> Pipeline<'a> {
             cfg,
             cache,
             reuse: ReuseCache::default(),
+            store: None,
             tree: None,
             model_error: None,
         }
@@ -231,6 +257,7 @@ impl<'a> Pipeline<'a> {
         let quantum = self.cfg.group_quantum;
         let mut reports = Vec::with_capacity(windows.len());
         let mut persist = self.open_persist(method, types, slice)?;
+        let mut segment = self.open_store_segment(method, types, slice)?;
         for window in windows {
             let lw = loader::load_window(
                 &self.reader,
@@ -250,9 +277,22 @@ impl<'a> Pipeline<'a> {
                 quantum,
                 partitions,
             )?;
+            let mut persist_bytes = 0u64;
             if let Some(f) = persist.as_mut() {
-                persist_window(f, &lw.obs.point_ids, &fit.outcomes)?;
+                persist_bytes += persist_window(f, &lw.obs.point_ids, &fit.outcomes)?;
             }
+            if let Some(sw) = segment.as_mut() {
+                persist_bytes += sw.append_window(&window, &lw.obs.point_ids, &fit.outcomes)?;
+            }
+            // Persisted output travels back to the shared store: charge it
+            // like any other data path (one append batch per sink).
+            let persist_sim_s = if persist_bytes > 0 {
+                let sinks = persist.is_some() as u64 + segment.is_some() as u64;
+                self.cluster
+                    .charge_persist("persist.nfs", persist_bytes, sinks)
+            } else {
+                0.0
+            };
             let err_sum: f64 = fit.outcomes.iter().map(|o| o.error as f64).sum();
             reports.push(WindowReport {
                 window,
@@ -261,12 +301,22 @@ impl<'a> Pipeline<'a> {
                 fits: fit.fits,
                 reuse_hits: fit.reuse_hits,
                 shuffle_bytes: fit.shuffle_bytes,
+                cache_hit: lw.cache_hit,
+                persist_bytes,
+                persist_sim_s,
                 load_real_s: lw.real_s,
                 load_sim_s: lw.sim_s,
                 fit_real_s: fit.real_s,
                 fit_sim_s: fit.sim_s,
                 err_sum,
             });
+        }
+        if let Some(sw) = segment {
+            let meta = sw.finish()?;
+            self.store
+                .as_mut()
+                .expect("segment implies store writer")
+                .add_segment(meta)?;
         }
         let n_points: usize = reports.iter().map(|w| w.n_points).sum();
         let err_total: f64 = reports.iter().map(|w| w.err_sum).sum();
@@ -284,6 +334,10 @@ impl<'a> Pipeline<'a> {
             groups: reports.iter().map(|w| w.groups).sum(),
             reuse_hits: reports.iter().map(|w| w.reuse_hits).sum(),
             shuffle_bytes: reports.iter().map(|w| w.shuffle_bytes).sum(),
+            cache_hits: reports.iter().filter(|w| w.cache_hit).count(),
+            cache_misses: reports.iter().filter(|w| !w.cache_hit).count(),
+            persist_bytes: reports.iter().map(|w| w.persist_bytes).sum(),
+            persist_sim_s: reports.iter().map(|w| w.persist_sim_s).sum(),
             windows: reports,
         })
     }
@@ -306,8 +360,36 @@ impl<'a> Pipeline<'a> {
         Ok(Some(std::io::BufWriter::new(std::fs::File::create(path)?)))
     }
 
-    /// Window-cache statistics (hits, misses, bytes, entries).
-    pub fn cache_stats(&self) -> (u64, u64, u64, usize) {
+    /// Open a pdfstore segment for this run when `cfg.store_dir` is set,
+    /// lazily attaching the store writer on first use.
+    fn open_store_segment(
+        &mut self,
+        method: Method,
+        types: TypeSet,
+        slice: usize,
+    ) -> Result<Option<SegmentWriter>> {
+        let Some(dir) = self.cfg.store_dir.clone() else {
+            return Ok(None);
+        };
+        if self.store.is_none() {
+            let spec = &self.reader.dataset().spec;
+            self.store = Some(StoreWriter::create(&dir, spec.dims, spec.n_sims)?);
+        }
+        let store = self.store.as_ref().expect("just created");
+        Ok(Some(store.open_segment(
+            slice,
+            method.name(),
+            types.n_types(),
+        )?))
+    }
+
+    /// The attached pdfstore writer, if this pipeline persists to one.
+    pub fn store(&self) -> Option<&StoreWriter> {
+        self.store.as_ref()
+    }
+
+    /// Window-cache statistics (hits/misses/evictions/bytes/entries).
+    pub fn cache_stats(&self) -> CacheStats {
         self.cache.stats()
     }
 
@@ -320,13 +402,21 @@ impl<'a> Pipeline<'a> {
     }
 }
 
-/// Persist one window's outcomes: binary rows of
+/// Persist one window's outcomes as legacy flat rows of
 /// (point_id u64, type u32, error f32, p0..p2 f32) — Algorithm 1 line 11.
+/// Bit-identical to the pdfstore record encoding; returns bytes written.
 fn persist_window(
     f: &mut impl std::io::Write,
     ids: &[crate::cube::PointId],
     outcomes: &[FitOutcome],
-) -> Result<()> {
+) -> Result<u64> {
+    if ids.len() != outcomes.len() {
+        return Err(PdfflowError::InvalidArg(format!(
+            "persist: {} ids vs {} outcomes",
+            ids.len(),
+            outcomes.len()
+        )));
+    }
     for (id, o) in ids.iter().zip(outcomes) {
         f.write_all(&id.0.to_le_bytes())?;
         f.write_all(&(o.dist.id() as u32).to_le_bytes())?;
@@ -335,5 +425,5 @@ fn persist_window(
             f.write_all(&p.to_le_bytes())?;
         }
     }
-    Ok(())
+    Ok((ids.len() * REC_LEN) as u64)
 }

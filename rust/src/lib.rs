@@ -28,6 +28,15 @@
 //! Backends are selected via the `backend` config key, the `--backend`
 //! CLI flag, or the `PDFFLOW_BACKEND` environment variable; see
 //! `rust/README.md` for the full backend matrix.
+//!
+//! Downstream of the pipeline, the [`pdfstore`] subsystem persists every
+//! fitted PDF into a partitioned, checksummed on-disk store (per-slice
+//! segment files with footer window indexes + a self-describing
+//! manifest) and serves point lookups, rectangular region scans and
+//! analytical density/CDF/quantile queries through a sharded-LRU-cached
+//! [`pdfstore::QueryEngine`] — the layer that turns the batch
+//! reproduction into a servable system (`store` / `query` CLI
+//! subcommands, `cargo bench --bench queries` for throughput).
 
 pub mod bench;
 pub mod cluster;
@@ -36,6 +45,7 @@ pub mod coordinator;
 pub mod cube;
 pub mod datagen;
 pub mod mltree;
+pub mod pdfstore;
 pub mod rdd;
 pub mod runtime;
 pub mod sampling;
@@ -51,6 +61,7 @@ pub mod prelude {
     pub use crate::cube::{CubeDims, PointId, Window};
     pub use crate::datagen::SyntheticDataset;
     pub use crate::mltree::DecisionTree;
+    pub use crate::pdfstore::{PdfStore, QueryEngine, QueryOptions, RegionQuery};
     #[cfg(feature = "xla")]
     pub use crate::runtime::Engine;
     pub use crate::runtime::{

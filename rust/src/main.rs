@@ -12,6 +12,10 @@
 //! pdfflow qoi       --preset set1 [--lines N]             per-point QOI summary (paper §1)
 //! pdfflow figure    <fig06..fig20|treestats|all> [--full]  paper figures
 //! pdfflow artifacts-check                                   compile every artifact
+//! pdfflow store     --preset set1 --store-dir DIR --method grouping --types 4
+//!                   [--slice Z] [--lines N]                persist fitted PDFs to a pdfstore
+//! pdfflow query     --store-dir DIR [--point x,y,z] [--region z[,y0,y1[,x0,x1]]]
+//!                   [--quantile Q] [--threads N] [--cache-mb MB] [--verify]
 //! ```
 //!
 //! `--config FILE` loads a TOML experiment config instead of `--preset`.
@@ -27,13 +31,14 @@ use pdfflow::config::ExperimentConfig;
 use pdfflow::coordinator::sampling::{full_slice_features, run_sampling};
 use pdfflow::coordinator::{mlmodel, Method, Pipeline, Sampler, TypeSet};
 use pdfflow::datagen::SyntheticDataset;
+use pdfflow::pdfstore::{PdfStore, QueryEngine, QueryOptions, RegionQuery};
 use pdfflow::runtime::BackendKind;
 use pdfflow::storage::{DatasetReader, WindowCache};
 use pdfflow::util::cli::Args;
 use pdfflow::util::timing::{fmt_bytes, fmt_secs};
 
 fn main() {
-    let args = match Args::parse(std::env::args().skip(1), &["tune", "full", "verbose"]) {
+    let args = match Args::parse(std::env::args().skip(1), &["tune", "full", "verbose", "verify"]) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("argument error: {e}");
@@ -103,10 +108,12 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("qoi") => cmd_qoi(args),
         Some("figure") => cmd_figure(args),
         Some("artifacts-check") => cmd_artifacts_check(args),
+        Some("store") => cmd_store(args),
+        Some("query") => cmd_query(args),
         Some(other) => Err(anyhow!("unknown subcommand {other:?} (see --help in README)")),
         None => {
             println!("pdfflow — parallel computation of PDFs on big spatial data");
-            println!("subcommands: generate run sample features train-tree tune-window qoi figure artifacts-check");
+            println!("subcommands: generate run sample features train-tree tune-window qoi figure artifacts-check store query");
             Ok(())
         }
     }
@@ -363,6 +370,200 @@ fn cmd_qoi(args: &Args) -> Result<()> {
             lw.obs.point_ids[p].0, q.dist.name(), q.value, q.peak_density, q.fit_error
         );
     }
+    Ok(())
+}
+
+/// Run the pipeline with the pdfstore persist sink and report the
+/// resulting store (Algorithm 1's persist phase, made queryable).
+fn cmd_store(args: &Args) -> Result<()> {
+    let mut cfg = load_config(args)?;
+    let store_dir = args
+        .opt("store-dir")
+        .map(|s| s.to_string())
+        .or_else(|| cfg.pipeline.store_dir.clone())
+        .ok_or_else(|| anyhow!("store needs --store-dir DIR (or pipeline.store_dir in --config)"))?;
+    cfg.pipeline.store_dir = Some(store_dir.clone());
+    let method = Method::from_name(&args.opt_or("method", "baseline"))
+        .ok_or_else(|| anyhow!("unknown --method (one of: baseline grouping reuse ml grouping+ml reuse+ml)"))?;
+    let types = types_of(args)?;
+    let ds = SyntheticDataset::generate(&cfg.dataset, &cfg.data_dir)?;
+    let backend = cfg.make_backend()?;
+    let mut pipe = Pipeline::new(&ds, backend.as_ref(), SimCluster::new(cfg.cluster.clone()), cfg.pipeline.clone());
+    if method.uses_ml() {
+        let err = pipe.ensure_tree(cfg.train_slice, types, 25_000)?;
+        println!("decision tree trained on slice {} (model error {err:.4})", cfg.train_slice);
+    }
+    let lines = args.usize_or("lines", 0).map_err(|e| anyhow!(e))?;
+    let r = if lines > 0 {
+        pipe.run_lines(method, cfg.slice, types, lines)?
+    } else {
+        pipe.run_slice(method, cfg.slice, types)?
+    };
+    println!("{}", r.row());
+    println!(
+        "persist: {} in {} windows, sim {}",
+        fmt_bytes(r.persist_bytes),
+        r.windows.len(),
+        fmt_secs(r.persist_sim_s)
+    );
+    let store = PdfStore::open(&store_dir)?;
+    println!(
+        "store {}: {} segment(s), {} records, {} on disk (manifest verified)",
+        store_dir,
+        store.n_segments(),
+        store.n_records(),
+        fmt_bytes(store.total_bytes()),
+    );
+    Ok(())
+}
+
+/// Parse "x,y,z" into a coordinate triple.
+fn parse_point(s: &str) -> Result<(usize, usize, usize)> {
+    let parts: Vec<usize> = s
+        .split(',')
+        .map(|p| p.trim().parse().context("--point"))
+        .collect::<Result<_>>()?;
+    if parts.len() != 3 {
+        return Err(anyhow!("--point expects x,y,z, got {s:?}"));
+    }
+    Ok((parts[0], parts[1], parts[2]))
+}
+
+/// Parse "z", "z,y0,y1" or "z,y0,y1,x0,x1" into a region (inclusive
+/// bounds; omitted axes span the whole slice).
+fn parse_region(s: &str, dims: &pdfflow::cube::CubeDims) -> Result<RegionQuery> {
+    let parts: Vec<usize> = s
+        .split(',')
+        .map(|p| p.trim().parse().context("--region"))
+        .collect::<Result<_>>()?;
+    let mut q = match parts.len() {
+        1 | 3 | 5 => RegionQuery::slice(dims, parts[0]),
+        _ => return Err(anyhow!("--region expects z[,y0,y1[,x0,x1]], got {s:?}")),
+    };
+    if parts.len() >= 3 {
+        q.y0 = parts[1];
+        q.y1 = parts[2];
+    }
+    if parts.len() == 5 {
+        q.x0 = parts[3];
+        q.x1 = parts[4];
+    }
+    Ok(q)
+}
+
+/// Serve point / region / analytical queries from an existing store.
+fn cmd_query(args: &Args) -> Result<()> {
+    let store_dir = args
+        .opt("store-dir")
+        .ok_or_else(|| anyhow!("query needs --store-dir DIR"))?;
+    // Cache budget precedence: --cache-mb flag > pipeline.query_cache_bytes
+    // from --config > 64 MiB default.
+    let cache_bytes = if let Some(mb) = args.opt("cache-mb") {
+        mb.parse::<u64>().context("--cache-mb")? << 20
+    } else if let Some(path) = args.opt("config") {
+        ExperimentConfig::from_file(path)
+            .context("loading --config")?
+            .pipeline
+            .query_cache_bytes
+    } else {
+        64 << 20
+    };
+    let threads = args
+        .usize_or("threads", pdfflow::util::pool::default_workers())
+        .map_err(|e| anyhow!(e))?;
+    let quantile: Option<f64> = match args.opt("quantile") {
+        Some(qs) => Some(qs.parse().context("--quantile")?),
+        None => None,
+    };
+    let engine = QueryEngine::open(
+        store_dir,
+        QueryOptions {
+            cache_bytes,
+            workers: threads,
+            ..QueryOptions::default()
+        },
+    )?;
+    let dims = engine.dims();
+    println!(
+        "store {}: {}x{}x{} cube, {} observations, {} segment(s), {} records, {}",
+        store_dir,
+        dims.nx,
+        dims.ny,
+        dims.nz,
+        engine.store().manifest.n_obs,
+        engine.store().n_segments(),
+        engine.store().n_records(),
+        fmt_bytes(engine.store().total_bytes()),
+    );
+    if args.flag("verify") {
+        engine.store().verify()?;
+        println!("all segment checksums verified");
+    }
+    if let Some(p) = args.opt("point") {
+        let (x, y, z) = parse_point(p)?;
+        let rec = engine.point(x, y, z)?;
+        let q = pdfflow::stats::density::qoi(&rec.fit());
+        println!(
+            "point ({x},{y},{z}) id {}: {} params [{:.5}, {:.5}, {:.5}]  fit err {:.4}",
+            rec.point.0,
+            rec.dist.name(),
+            rec.params[0],
+            rec.params[1],
+            rec.params[2],
+            rec.error,
+        );
+        println!(
+            "  qoi {:.4} (peak density {:.5})  q25 {:.4}  q50 {:.4}  q75 {:.4}",
+            q.value,
+            q.peak_density,
+            engine.quantile_of(&rec, 0.25),
+            engine.quantile_of(&rec, 0.50),
+            engine.quantile_of(&rec, 0.75),
+        );
+        if let Some(p) = quantile {
+            println!("  P{:.0} {:.4}", p * 100.0, engine.quantile_of(&rec, p));
+        }
+    }
+    if let Some(r) = args.opt("region") {
+        let q = parse_region(r, &dims)?;
+        let t0 = std::time::Instant::now();
+        let s = engine.region_summary(&q)?;
+        println!(
+            "region z={} y[{},{}] x[{},{}]: {} points, avg E {:.4}, max E {:.4} ({})",
+            q.z,
+            q.y0,
+            q.y1,
+            q.x0,
+            q.x1,
+            s.n_points,
+            s.avg_error,
+            s.max_error,
+            fmt_secs(t0.elapsed().as_secs_f64()),
+        );
+        for (i, &n) in s.type_counts.iter().enumerate() {
+            if n > 0 {
+                println!(
+                    "  {:<12} {:>8} ({:>6.2}%)",
+                    pdfflow::stats::DistType::from_id(i).unwrap().name(),
+                    n,
+                    100.0 * n as f64 / s.n_points.max(1) as f64
+                );
+            }
+        }
+        if let Some(p) = quantile {
+            let mean_q = engine.region_quantile_mean(&q, p)?;
+            println!("  mean P{:.0} over region: {:.4}", p * 100.0, mean_q);
+        }
+    }
+    let m = engine.meters();
+    println!(
+        "cache: {} hits / {} misses / {} evictions, {} resident in {} blocks",
+        m.hits,
+        m.misses,
+        m.evictions,
+        fmt_bytes(m.bytes),
+        m.entries
+    );
     Ok(())
 }
 

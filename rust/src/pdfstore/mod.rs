@@ -1,0 +1,506 @@
+//! pdfstore: the persisted fitted-PDF store and its query engine.
+//!
+//! The paper's pipeline ends with "persist the PDFs of all points"
+//! (Algorithm 1 line 11) — this subsystem is what makes that output
+//! *servable*. The write path streams each slice's fit outcomes into a
+//! per-slice **segment file** of fixed-width records in window order,
+//! with a footer index (window → byte range) so any point or region is
+//! reachable with one positioned read; a **checksummed manifest**
+//! (JSON, FNV-64 self-checksum) makes the store self-describing, so a
+//! cold process reopens it with no data rescan — the same
+//! partition-local independence the Random Sample Partition data model
+//! argues for (Salloum et al., arXiv 1712.04146). The read path
+//! ([`QueryEngine`]) serves point lookups, rectangular region scans and
+//! analytical queries (density / CDF / quantile via [`crate::stats`])
+//! through a sharded LRU block cache, fanned out over
+//! [`crate::util::pool`] threads.
+//!
+//! On-disk layout of a store directory:
+//!
+//! ```text
+//! store/
+//!   MANIFEST.json                 checksummed manifest (see StoreManifest)
+//!   slice201_baseline_4.seg       one segment per persisted slice run
+//!   ...
+//! ```
+//!
+//! Segment file layout (all integers little-endian):
+//!
+//! ```text
+//! [magic "PDFS"][version u32]                      8-byte header
+//! [record x n]                                     28-byte records, window order
+//! [footer: per window y0 u64, lines u64,
+//!          offset u64, n_records u64]              32 bytes per window
+//! [footer_off u64][n_windows u64]
+//! [checksum u64][magic "SFTR"]                     trailer
+//! ```
+//!
+//! The trailer checksum is FNV-64 over every byte before the checksum
+//! field, so corruption anywhere in the payload or index is detectable
+//! ([`PdfStore::verify`]); truncation is caught at open time against the
+//! manifest's byte count.
+
+pub mod query;
+pub mod segment;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::cube::{CubeDims, PointId};
+use crate::stats::{DistType, FitResult};
+use crate::util::json::Json;
+use crate::{PdfflowError, Result};
+
+pub use query::{CacheMeters, QueryEngine, QueryOptions, RegionQuery, RegionSummary};
+pub use segment::{SegmentMeta, SegmentReader, SegmentWriter, WindowEntry};
+
+/// Fixed record width: point id u64 + type u32 + error f32 + 3 param f32.
+pub const REC_LEN: usize = 28;
+/// Manifest file name inside a store directory.
+pub const MANIFEST_NAME: &str = "MANIFEST.json";
+/// Manifest/segment format version.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Streaming FNV-1a 64-bit checksum (offline crc substitute; the store
+/// needs tamper/corruption detection, not cryptographic strength).
+#[derive(Clone, Copy, Debug)]
+pub struct Fnv64(u64);
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv64 {
+    pub fn new() -> Fnv64 {
+        Fnv64(0xcbf29ce484222325)
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        let mut h = self.0;
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        self.0 = h;
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// One-shot FNV-64 of a byte slice.
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h = Fnv64::new();
+    h.update(bytes);
+    h.finish()
+}
+
+/// One persisted fitted PDF: the paper's per-point key-value output.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PdfRecord {
+    pub point: PointId,
+    pub dist: DistType,
+    pub error: f32,
+    pub params: [f32; 3],
+}
+
+impl PdfRecord {
+    /// Encode into the fixed 28-byte wire form (identical to the legacy
+    /// flat `.pdfout` row, so both persist paths stay bit-compatible).
+    pub fn encode(&self, out: &mut [u8; REC_LEN]) {
+        out[0..8].copy_from_slice(&self.point.0.to_le_bytes());
+        out[8..12].copy_from_slice(&(self.dist.id() as u32).to_le_bytes());
+        out[12..16].copy_from_slice(&self.error.to_le_bytes());
+        for (i, p) in self.params.iter().enumerate() {
+            out[16 + 4 * i..20 + 4 * i].copy_from_slice(&p.to_le_bytes());
+        }
+    }
+
+    /// Decode one record from the first `REC_LEN` bytes of `b`.
+    pub fn decode(b: &[u8]) -> Result<PdfRecord> {
+        if b.len() < REC_LEN {
+            return Err(PdfflowError::Format(format!(
+                "pdf record needs {REC_LEN} bytes, got {}",
+                b.len()
+            )));
+        }
+        let u32_at = |o: usize| u32::from_le_bytes(b[o..o + 4].try_into().unwrap());
+        let f32_at = |o: usize| f32::from_le_bytes(b[o..o + 4].try_into().unwrap());
+        let type_id = u32_at(8) as usize;
+        let dist = DistType::from_id(type_id).ok_or_else(|| {
+            PdfflowError::Format(format!("pdf record: unknown type id {type_id}"))
+        })?;
+        Ok(PdfRecord {
+            point: PointId(u64::from_le_bytes(b[0..8].try_into().unwrap())),
+            dist,
+            error: f32_at(12),
+            params: [f32_at(16), f32_at(20), f32_at(24)],
+        })
+    }
+
+    /// View as a [`FitResult`] for the `stats`/`density` evaluators.
+    pub fn fit(&self) -> FitResult {
+        FitResult {
+            dist: self.dist,
+            params: [
+                self.params[0] as f64,
+                self.params[1] as f64,
+                self.params[2] as f64,
+            ],
+            error: self.error as f64,
+        }
+    }
+}
+
+/// Self-describing store metadata: cube geometry plus one entry per
+/// segment. Serialized as `{"body": {...}, "checksum": "<fnv64 hex>"}`
+/// where the checksum covers the serialized body byte-for-byte.
+#[derive(Clone, Debug)]
+pub struct StoreManifest {
+    pub dims: CubeDims,
+    pub n_obs: usize,
+    pub segments: Vec<SegmentMeta>,
+}
+
+impl StoreManifest {
+    fn body_json(&self) -> Json {
+        let segs: Vec<Json> = self
+            .segments
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("file", Json::Str(s.file.clone())),
+                    ("slice", Json::Num(s.slice as f64)),
+                    ("method", Json::Str(s.method.clone())),
+                    ("types", Json::Num(s.types as f64)),
+                    ("windows", Json::Num(s.n_windows as f64)),
+                    ("records", Json::Num(s.n_records as f64)),
+                    ("bytes", Json::Num(s.bytes as f64)),
+                    ("checksum", Json::Str(format!("{:016x}", s.checksum))),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("version", Json::Num(FORMAT_VERSION as f64)),
+            (
+                "dims",
+                Json::Arr(vec![
+                    Json::Num(self.dims.nx as f64),
+                    Json::Num(self.dims.ny as f64),
+                    Json::Num(self.dims.nz as f64),
+                ]),
+            ),
+            ("n_obs", Json::Num(self.n_obs as f64)),
+            ("segments", Json::Arr(segs)),
+        ])
+    }
+
+    /// Write atomically (temp file + rename) with a self-checksum.
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        let body = self.body_json();
+        let body_text = body.to_string();
+        let sum = fnv64(body_text.as_bytes());
+        let doc = Json::obj(vec![
+            ("body", body),
+            ("checksum", Json::Str(format!("{sum:016x}"))),
+        ]);
+        let tmp = dir.join(format!("{MANIFEST_NAME}.tmp"));
+        std::fs::write(&tmp, doc.to_string())?;
+        std::fs::rename(&tmp, dir.join(MANIFEST_NAME))?;
+        Ok(())
+    }
+
+    /// Load and verify the self-checksum; any mismatch is a hard error —
+    /// a store with a broken manifest must not serve queries.
+    pub fn load(dir: &Path) -> Result<StoreManifest> {
+        let path = dir.join(MANIFEST_NAME);
+        let text = std::fs::read_to_string(&path)?;
+        let doc = Json::parse(&text)
+            .map_err(|e| PdfflowError::Format(format!("{}: {e}", path.display())))?;
+        let bad = |what: &str| PdfflowError::Format(format!("{}: {what}", path.display()));
+        let body = doc.get("body").ok_or_else(|| bad("missing body"))?;
+        let want = doc
+            .get("checksum")
+            .and_then(|c| c.as_str())
+            .and_then(parse_hex64)
+            .ok_or_else(|| bad("missing checksum"))?;
+        let got = fnv64(body.to_string().as_bytes());
+        if got != want {
+            return Err(bad(&format!(
+                "manifest checksum mismatch (stored {want:016x}, computed {got:016x})"
+            )));
+        }
+        let version = body
+            .get("version")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| bad("missing version"))?;
+        if version != FORMAT_VERSION as usize {
+            return Err(bad(&format!("unsupported store version {version}")));
+        }
+        let dims_arr = body
+            .get("dims")
+            .and_then(|d| d.as_arr())
+            .ok_or_else(|| bad("missing dims"))?;
+        if dims_arr.len() != 3 {
+            return Err(bad("dims must have 3 entries"));
+        }
+        let dim = |i: usize| dims_arr[i].as_usize().ok_or_else(|| bad("bad dims entry"));
+        let dims = CubeDims::new(dim(0)?, dim(1)?, dim(2)?);
+        let n_obs = body
+            .get("n_obs")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| bad("missing n_obs"))?;
+        let mut segments = Vec::new();
+        for s in body
+            .get("segments")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| bad("missing segments"))?
+        {
+            let field = |k: &str| s.get(k).and_then(|v| v.as_usize());
+            segments.push(SegmentMeta {
+                file: s
+                    .get("file")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| bad("segment missing file"))?
+                    .to_string(),
+                slice: field("slice").ok_or_else(|| bad("segment missing slice"))?,
+                method: s
+                    .get("method")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| bad("segment missing method"))?
+                    .to_string(),
+                types: field("types").ok_or_else(|| bad("segment missing types"))?,
+                n_windows: field("windows").ok_or_else(|| bad("segment missing windows"))?,
+                n_records: field("records").ok_or_else(|| bad("segment missing records"))?
+                    as u64,
+                bytes: field("bytes").ok_or_else(|| bad("segment missing bytes"))? as u64,
+                checksum: s
+                    .get("checksum")
+                    .and_then(|v| v.as_str())
+                    .and_then(parse_hex64)
+                    .ok_or_else(|| bad("segment missing checksum"))?,
+            });
+        }
+        Ok(StoreManifest {
+            dims,
+            n_obs,
+            segments,
+        })
+    }
+}
+
+fn parse_hex64(s: &str) -> Option<u64> {
+    u64::from_str_radix(s, 16).ok()
+}
+
+/// Write side of a store: the pipeline's persist sink. Segments are
+/// opened per slice run; the manifest is rewritten (atomically) after
+/// each finished segment, so the store on disk is always openable.
+pub struct StoreWriter {
+    dir: PathBuf,
+    manifest: StoreManifest,
+}
+
+impl StoreWriter {
+    /// Create the store directory (or attach to an existing one, checking
+    /// that its geometry matches).
+    pub fn create(dir: impl AsRef<Path>, dims: CubeDims, n_obs: usize) -> Result<StoreWriter> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)?;
+        let manifest = if dir.join(MANIFEST_NAME).exists() {
+            let m = StoreManifest::load(&dir)?;
+            if m.dims != dims || m.n_obs != n_obs {
+                return Err(PdfflowError::InvalidArg(format!(
+                    "store at {} holds a {}x{}x{} cube with {} observations; \
+                     refusing to mix in {}x{}x{} with {}",
+                    dir.display(),
+                    m.dims.nx,
+                    m.dims.ny,
+                    m.dims.nz,
+                    m.n_obs,
+                    dims.nx,
+                    dims.ny,
+                    dims.nz,
+                    n_obs
+                )));
+            }
+            m
+        } else {
+            let m = StoreManifest {
+                dims,
+                n_obs,
+                segments: Vec::new(),
+            };
+            m.save(&dir)?;
+            m
+        };
+        Ok(StoreWriter { dir, manifest })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn manifest(&self) -> &StoreManifest {
+        &self.manifest
+    }
+
+    /// Open a segment writer for one slice run.
+    pub fn open_segment(&self, slice: usize, method: &str, types: usize) -> Result<SegmentWriter> {
+        SegmentWriter::create(&self.dir, slice, method, types)
+    }
+
+    /// Register a finished segment and persist the manifest. A segment
+    /// with the same file name (same slice/method/types rerun) replaces
+    /// its previous entry. Segments stay in completion order, which is
+    /// what gives slice resolution its last-writer-wins semantics.
+    pub fn add_segment(&mut self, meta: SegmentMeta) -> Result<()> {
+        self.manifest.segments.retain(|s| s.file != meta.file);
+        self.manifest.segments.push(meta);
+        self.manifest.save(&self.dir)
+    }
+}
+
+/// Read side: manifest + one open reader per segment. Opening validates
+/// lengths, magics and the footer index — no payload rescan.
+pub struct PdfStore {
+    pub dir: PathBuf,
+    pub manifest: StoreManifest,
+    segments: Vec<SegmentReader>,
+    /// slice → index into `segments`; a slice persisted twice (different
+    /// method/types) resolves to the most recently completed segment
+    /// (manifest entries are kept in completion order).
+    by_slice: HashMap<usize, usize>,
+}
+
+impl PdfStore {
+    pub fn open(dir: impl AsRef<Path>) -> Result<PdfStore> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = StoreManifest::load(&dir)?;
+        let mut segments = Vec::with_capacity(manifest.segments.len());
+        let mut by_slice = HashMap::new();
+        for (i, meta) in manifest.segments.iter().enumerate() {
+            let reader = SegmentReader::open(&dir, meta)?;
+            by_slice.insert(meta.slice, i);
+            segments.push(reader);
+        }
+        Ok(PdfStore {
+            dir,
+            manifest,
+            segments,
+            by_slice,
+        })
+    }
+
+    pub fn n_segments(&self) -> usize {
+        self.segments.len()
+    }
+
+    pub fn n_records(&self) -> u64 {
+        self.manifest.segments.iter().map(|s| s.n_records).sum()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.manifest.segments.iter().map(|s| s.bytes).sum()
+    }
+
+    pub fn segment(&self, idx: usize) -> &SegmentReader {
+        &self.segments[idx]
+    }
+
+    /// Segment serving slice `z`, if persisted.
+    pub fn segment_for_slice(&self, z: usize) -> Option<(usize, &SegmentReader)> {
+        self.by_slice.get(&z).map(|&i| (i, &self.segments[i]))
+    }
+
+    /// Full-payload checksum verification of every segment (reads all
+    /// bytes; open() itself stays index-only).
+    pub fn verify(&self) -> Result<()> {
+        for seg in &self.segments {
+            seg.verify()?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_codec_roundtrip_exact_width() {
+        let rec = PdfRecord {
+            point: PointId(123_456_789_012),
+            dist: DistType::Weibull,
+            error: 0.125,
+            params: [1.5, -2.25, 0.0],
+        };
+        let mut buf = [0u8; REC_LEN];
+        rec.encode(&mut buf);
+        let back = PdfRecord::decode(&buf).unwrap();
+        assert_eq!(back, rec);
+    }
+
+    #[test]
+    fn record_decode_rejects_bad_type_and_short_buffer() {
+        let mut buf = [0u8; REC_LEN];
+        PdfRecord {
+            point: PointId(1),
+            dist: DistType::Normal,
+            error: 0.0,
+            params: [0.0; 3],
+        }
+        .encode(&mut buf);
+        buf[8] = 42; // type id out of range
+        assert!(PdfRecord::decode(&buf).is_err());
+        assert!(PdfRecord::decode(&buf[..REC_LEN - 1]).is_err());
+    }
+
+    #[test]
+    fn fnv64_is_stable_and_sensitive() {
+        let a = fnv64(b"pdfstore");
+        assert_eq!(a, fnv64(b"pdfstore"));
+        assert_ne!(a, fnv64(b"pdfstorf"));
+        let mut streaming = Fnv64::new();
+        streaming.update(b"pdf");
+        streaming.update(b"store");
+        assert_eq!(streaming.finish(), a);
+    }
+
+    #[test]
+    fn manifest_roundtrip_and_tamper_detection() {
+        let dir = std::env::temp_dir().join(format!("pdfflow-manifest-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let m = StoreManifest {
+            dims: CubeDims::new(16, 12, 8),
+            n_obs: 100,
+            segments: vec![SegmentMeta {
+                file: "slice1_baseline_4.seg".into(),
+                slice: 1,
+                method: "baseline".into(),
+                types: 4,
+                n_windows: 3,
+                n_records: 192,
+                bytes: 5412,
+                checksum: 0xdead_beef_cafe_f00d,
+            }],
+        };
+        m.save(&dir).unwrap();
+        let back = StoreManifest::load(&dir).unwrap();
+        assert_eq!(back.dims, m.dims);
+        assert_eq!(back.n_obs, 100);
+        assert_eq!(back.segments, m.segments);
+        // Tamper with one digit inside the body: checksum must catch it.
+        let path = dir.join(MANIFEST_NAME);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let tampered = text.replacen("\"slice\":1", "\"slice\":2", 1);
+        assert_ne!(text, tampered);
+        std::fs::write(&path, tampered).unwrap();
+        assert!(StoreManifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,559 @@
+//! The store's read path: point / region / analytical queries behind a
+//! sharded LRU block cache.
+//!
+//! The cache unit is one decoded window block (the segment's natural
+//! read granularity), sharded by key hash so concurrent query threads
+//! rarely contend on the same mutex — query throughput under threads is
+//! a first-class benchmark (`cargo bench --bench queries`). Hit / miss /
+//! eviction meters are atomic and cheap enough to stay always-on, the
+//! same observability contract as [`crate::storage::WindowCache`].
+
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::cube::{CubeDims, PointId};
+use crate::pdfstore::{PdfRecord, PdfStore, REC_LEN};
+use crate::stats::{self, density, PENALTY_ERROR};
+use crate::util::pool;
+use crate::{PdfflowError, Result};
+
+/// Block cache key: (segment index, window index).
+type BlockKey = (u32, u32);
+
+/// Aggregated cache observability counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheMeters {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub bytes: u64,
+    pub entries: usize,
+}
+
+struct Shard {
+    map: HashMap<BlockKey, (u64, Arc<Vec<PdfRecord>>)>, // key -> (stamp, block)
+    clock: u64,
+    bytes: u64,
+}
+
+/// Sharded LRU over decoded window blocks with a global byte budget
+/// split evenly across shards.
+pub struct ShardedLru {
+    shards: Vec<Mutex<Shard>>,
+    shard_budget: u64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+fn block_bytes(block: &[PdfRecord]) -> u64 {
+    (block.len() * REC_LEN) as u64
+}
+
+impl ShardedLru {
+    pub fn new(capacity_bytes: u64, n_shards: usize) -> ShardedLru {
+        let n = n_shards.max(1);
+        ShardedLru {
+            shards: (0..n)
+                .map(|_| {
+                    Mutex::new(Shard {
+                        map: HashMap::new(),
+                        clock: 0,
+                        bytes: 0,
+                    })
+                })
+                .collect(),
+            shard_budget: capacity_bytes / n as u64,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    fn shard_of(&self, key: &BlockKey) -> usize {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        key.hash(&mut h);
+        (h.finish() % self.shards.len() as u64) as usize
+    }
+
+    pub fn get(&self, key: &BlockKey) -> Option<Arc<Vec<PdfRecord>>> {
+        let mut g = self.shards[self.shard_of(key)].lock().unwrap();
+        g.clock += 1;
+        let clock = g.clock;
+        let found = g.map.get_mut(key).map(|(stamp, block)| {
+            *stamp = clock;
+            Arc::clone(block)
+        });
+        match found {
+            Some(block) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(block)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    pub fn put(&self, key: BlockKey, block: Arc<Vec<PdfRecord>>) {
+        let bytes = block_bytes(&block);
+        if bytes > self.shard_budget {
+            return; // bigger than one shard's budget — streamed, not cached
+        }
+        let mut g = self.shards[self.shard_of(&key)].lock().unwrap();
+        g.clock += 1;
+        let clock = g.clock;
+        if let Some((_, old)) = g.map.insert(key, (clock, block)) {
+            g.bytes -= block_bytes(&old);
+        }
+        g.bytes += bytes;
+        while g.bytes > self.shard_budget {
+            let victim = g
+                .map
+                .iter()
+                .min_by_key(|(_, (stamp, _))| *stamp)
+                .map(|(k, _)| *k)
+                .expect("over budget implies non-empty");
+            let (_, evicted) = g.map.remove(&victim).unwrap();
+            g.bytes -= block_bytes(&evicted);
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn meters(&self) -> CacheMeters {
+        let mut m = CacheMeters {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            ..CacheMeters::default()
+        };
+        for s in &self.shards {
+            let g = s.lock().unwrap();
+            m.bytes += g.bytes;
+            m.entries += g.map.len();
+        }
+        m
+    }
+
+    pub fn clear(&self) {
+        for s in &self.shards {
+            let mut g = s.lock().unwrap();
+            g.map.clear();
+            g.bytes = 0;
+        }
+    }
+}
+
+/// Inclusive rectangular region of one slice.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RegionQuery {
+    pub z: usize,
+    pub x0: usize,
+    pub x1: usize,
+    pub y0: usize,
+    pub y1: usize,
+}
+
+impl RegionQuery {
+    /// Whole slice `z` of a cube.
+    pub fn slice(dims: &CubeDims, z: usize) -> RegionQuery {
+        RegionQuery {
+            z,
+            x0: 0,
+            x1: dims.nx.saturating_sub(1),
+            y0: 0,
+            y1: dims.ny.saturating_sub(1),
+        }
+    }
+
+    pub fn n_points(&self) -> usize {
+        if self.x1 < self.x0 || self.y1 < self.y0 {
+            return 0;
+        }
+        (self.x1 - self.x0 + 1) * (self.y1 - self.y0 + 1)
+    }
+}
+
+/// Error-histogram bins in a [`RegionSummary`] (over [0, PENALTY_ERROR]).
+pub const ERROR_HIST_BINS: usize = 8;
+
+/// Aggregate answer for an analytical region query.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RegionSummary {
+    pub n_points: usize,
+    pub avg_error: f64,
+    pub max_error: f64,
+    /// Count per `DistType` id (the paper's type-percentage vector).
+    pub type_counts: [u64; 10],
+    /// Equal-width histogram of Eq.5 errors over [0, PENALTY_ERROR].
+    pub error_hist: [u64; ERROR_HIST_BINS],
+}
+
+impl RegionSummary {
+    fn empty() -> RegionSummary {
+        RegionSummary {
+            n_points: 0,
+            avg_error: 0.0,
+            max_error: 0.0,
+            type_counts: [0; 10],
+            error_hist: [0; ERROR_HIST_BINS],
+        }
+    }
+}
+
+/// Engine construction knobs (config key `pipeline.query_cache_bytes`,
+/// CLI `--cache-mb` / `--threads`).
+#[derive(Clone, Copy, Debug)]
+pub struct QueryOptions {
+    /// Block-cache budget, bytes.
+    pub cache_bytes: u64,
+    /// Cache shard count (contention knob, not capacity).
+    pub shards: usize,
+    /// Host threads for fanned-out queries.
+    pub workers: usize,
+}
+
+impl Default for QueryOptions {
+    fn default() -> Self {
+        QueryOptions {
+            cache_bytes: 64 << 20,
+            shards: 8,
+            workers: pool::default_workers(),
+        }
+    }
+}
+
+/// The serving layer: point lookups, region scans and analytical
+/// queries over an open [`PdfStore`]. All methods take `&self`, so one
+/// engine is shared across query threads.
+pub struct QueryEngine {
+    store: PdfStore,
+    cache: ShardedLru,
+    workers: usize,
+}
+
+impl QueryEngine {
+    pub fn new(store: PdfStore, opts: QueryOptions) -> QueryEngine {
+        QueryEngine {
+            store,
+            cache: ShardedLru::new(opts.cache_bytes, opts.shards),
+            workers: opts.workers.max(1),
+        }
+    }
+
+    pub fn open(dir: impl AsRef<Path>, opts: QueryOptions) -> Result<QueryEngine> {
+        Ok(QueryEngine::new(PdfStore::open(dir)?, opts))
+    }
+
+    pub fn store(&self) -> &PdfStore {
+        &self.store
+    }
+
+    pub fn dims(&self) -> CubeDims {
+        self.store.manifest.dims
+    }
+
+    pub fn meters(&self) -> CacheMeters {
+        self.cache.meters()
+    }
+
+    pub fn clear_cache(&self) {
+        self.cache.clear()
+    }
+
+    /// Fetch (through the cache) one window block.
+    fn block(&self, seg_idx: usize, win_idx: usize) -> Result<Arc<Vec<PdfRecord>>> {
+        let key = (seg_idx as u32, win_idx as u32);
+        if let Some(b) = self.cache.get(&key) {
+            return Ok(b);
+        }
+        let block = Arc::new(self.store.segment(seg_idx).read_window(win_idx)?);
+        self.cache.put(key, Arc::clone(&block));
+        Ok(block)
+    }
+
+    /// Point lookup by coordinates.
+    pub fn point(&self, x: usize, y: usize, z: usize) -> Result<PdfRecord> {
+        let dims = self.dims();
+        if x >= dims.nx || y >= dims.ny || z >= dims.nz {
+            return Err(PdfflowError::InvalidArg(format!(
+                "point ({x},{y},{z}) outside {}x{}x{} cube",
+                dims.nx, dims.ny, dims.nz
+            )));
+        }
+        let (seg_idx, seg) = self.store.segment_for_slice(z).ok_or_else(|| {
+            PdfflowError::InvalidArg(format!("slice {z} is not persisted in this store"))
+        })?;
+        let win_idx = seg.find_window(y).ok_or_else(|| {
+            PdfflowError::Format(format!("slice {z} segment has no window covering line {y}"))
+        })?;
+        let entry = seg.entries[win_idx];
+        let block = self.block(seg_idx, win_idx)?;
+        // Window order == point-id order: the offset is pure arithmetic.
+        let idx = (y - entry.y0 as usize) * dims.nx + x;
+        let rec = block.get(idx).copied().ok_or_else(|| {
+            PdfflowError::Format(format!(
+                "window block of slice {z} line {y} holds {} records, wanted index {idx}",
+                block.len()
+            ))
+        })?;
+        if rec.point != dims.point_id(x, y, z) {
+            return Err(PdfflowError::Format(format!(
+                "store row mismatch: expected point {:?}, found {:?}",
+                dims.point_id(x, y, z),
+                rec.point
+            )));
+        }
+        Ok(rec)
+    }
+
+    /// Point lookup by flat id.
+    pub fn point_by_id(&self, id: PointId) -> Result<PdfRecord> {
+        let (x, y, z) = self.dims().coords(id);
+        self.point(x, y, z)
+    }
+
+    /// Batched point lookups, fanned out over the engine's worker
+    /// threads; output order matches input order.
+    pub fn points(&self, ids: &[PointId]) -> Result<Vec<PdfRecord>> {
+        let chunk = ids.len().div_ceil(self.workers.max(1)).max(1);
+        let chunks: Vec<&[PointId]> = ids.chunks(chunk).collect();
+        let results = pool::parallel_map(chunks, self.workers, |chunk| {
+            chunk
+                .iter()
+                .map(|&id| self.point_by_id(id))
+                .collect::<Result<Vec<PdfRecord>>>()
+        });
+        let mut out = Vec::with_capacity(ids.len());
+        for r in results {
+            out.extend(r?);
+        }
+        Ok(out)
+    }
+
+    /// Windows of slice `z`'s segment overlapping line range [y0, y1].
+    fn region_windows(&self, q: &RegionQuery) -> Result<(usize, Vec<usize>)> {
+        let (seg_idx, seg) = self.store.segment_for_slice(q.z).ok_or_else(|| {
+            PdfflowError::InvalidArg(format!("slice {} is not persisted in this store", q.z))
+        })?;
+        let wins: Vec<usize> = seg
+            .entries
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| {
+                let (lo, hi) = (e.y0 as usize, (e.y0 + e.lines) as usize);
+                hi > q.y0 && lo <= q.y1
+            })
+            .map(|(i, _)| i)
+            .collect();
+        Ok((seg_idx, wins))
+    }
+
+    /// Rectangular region scan: all records with x0≤x≤x1, y0≤y≤y1 on
+    /// slice z, in point-id order. Window blocks are fetched in parallel.
+    pub fn region(&self, q: &RegionQuery) -> Result<Vec<PdfRecord>> {
+        let dims = self.dims();
+        let (seg_idx, wins) = self.region_windows(q)?;
+        let q = *q;
+        let parts = pool::parallel_map(wins, self.workers, |win_idx| -> Result<Vec<PdfRecord>> {
+            let block = self.block(seg_idx, win_idx)?;
+            Ok(block
+                .iter()
+                .filter(|rec| {
+                    let (x, y, _) = dims.coords(rec.point);
+                    x >= q.x0 && x <= q.x1 && y >= q.y0 && y <= q.y1
+                })
+                .copied()
+                .collect())
+        });
+        let mut out = Vec::new();
+        for p in parts {
+            out.extend(p?);
+        }
+        Ok(out)
+    }
+
+    /// Analytical region query: error statistics + type/error histograms.
+    /// Per-window partials are computed in parallel and merged in window
+    /// order, so the result is identical at any thread count.
+    pub fn region_summary(&self, q: &RegionQuery) -> Result<RegionSummary> {
+        let dims = self.dims();
+        let (seg_idx, wins) = self.region_windows(q)?;
+        let q = *q;
+        struct Partial {
+            n: usize,
+            err_sum: f64,
+            err_max: f64,
+            types: [u64; 10],
+            hist: [u64; ERROR_HIST_BINS],
+        }
+        let parts = pool::parallel_map(wins, self.workers, |win_idx| -> Result<Partial> {
+            let block = self.block(seg_idx, win_idx)?;
+            let mut p = Partial {
+                n: 0,
+                err_sum: 0.0,
+                err_max: 0.0,
+                types: [0; 10],
+                hist: [0; ERROR_HIST_BINS],
+            };
+            for rec in block.iter() {
+                let (x, y, _) = dims.coords(rec.point);
+                if x < q.x0 || x > q.x1 || y < q.y0 || y > q.y1 {
+                    continue;
+                }
+                p.n += 1;
+                let e = rec.error as f64;
+                p.err_sum += e;
+                p.err_max = p.err_max.max(e);
+                p.types[rec.dist.id()] += 1;
+                let bin = ((e / PENALTY_ERROR) * ERROR_HIST_BINS as f64).floor();
+                p.hist[(bin.max(0.0) as usize).min(ERROR_HIST_BINS - 1)] += 1;
+            }
+            Ok(p)
+        });
+        let mut s = RegionSummary::empty();
+        let mut err_sum = 0.0;
+        for p in parts {
+            let p = p?;
+            s.n_points += p.n;
+            err_sum += p.err_sum;
+            s.max_error = s.max_error.max(p.err_max);
+            for i in 0..10 {
+                s.type_counts[i] += p.types[i];
+            }
+            for i in 0..ERROR_HIST_BINS {
+                s.error_hist[i] += p.hist[i];
+            }
+        }
+        if s.n_points > 0 {
+            s.avg_error = err_sum / s.n_points as f64;
+        }
+        Ok(s)
+    }
+
+    /// Density of a stored PDF at `x` (the paper's §1 deliverable shape).
+    pub fn density_at(&self, rec: &PdfRecord, x: f64) -> f64 {
+        let fit = rec.fit();
+        density::pdf(fit.dist, &fit.params, x)
+    }
+
+    /// CDF of a stored PDF at `x`.
+    pub fn cdf_at(&self, rec: &PdfRecord, x: f64) -> f64 {
+        let fit = rec.fit();
+        stats::cdf(fit.dist, &fit.params, x)
+    }
+
+    /// Quantile `p` of a stored PDF (inverse CDF via `stats`).
+    pub fn quantile_of(&self, rec: &PdfRecord, p: f64) -> f64 {
+        let fit = rec.fit();
+        density::quantile(fit.dist, &fit.params, p)
+    }
+
+    /// Mean of the per-point quantile-`p` values over a region — e.g.
+    /// "the median velocity surface of this block". Parallel per window,
+    /// merged in window order (thread-count invariant).
+    pub fn region_quantile_mean(&self, q: &RegionQuery, p: f64) -> Result<f64> {
+        let dims = self.dims();
+        let (seg_idx, wins) = self.region_windows(q)?;
+        let q = *q;
+        let parts = pool::parallel_map(wins, self.workers, |win_idx| -> Result<(usize, f64)> {
+            let block = self.block(seg_idx, win_idx)?;
+            let mut n = 0usize;
+            let mut sum = 0.0f64;
+            for rec in block.iter() {
+                let (x, y, _) = dims.coords(rec.point);
+                if x < q.x0 || x > q.x1 || y < q.y0 || y > q.y1 {
+                    continue;
+                }
+                let fit = rec.fit();
+                sum += density::quantile(fit.dist, &fit.params, p);
+                n += 1;
+            }
+            Ok((n, sum))
+        });
+        let mut n = 0usize;
+        let mut sum = 0.0f64;
+        for part in parts {
+            let (pn, ps) = part?;
+            n += pn;
+            sum += ps;
+        }
+        if n == 0 {
+            return Err(PdfflowError::InvalidArg("empty region".into()));
+        }
+        Ok(sum / n as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::DistType;
+
+    fn rec(i: u64) -> PdfRecord {
+        PdfRecord {
+            point: PointId(i),
+            dist: DistType::Normal,
+            error: 0.1,
+            params: [0.0, 1.0, 0.0],
+        }
+    }
+
+    fn block_of(n: usize) -> Arc<Vec<PdfRecord>> {
+        Arc::new((0..n as u64).map(rec).collect())
+    }
+
+    #[test]
+    fn sharded_lru_hit_miss_eviction_meters() {
+        // One shard so eviction order is easy to reason about; each
+        // 10-record block is 280 bytes, budget fits two.
+        let c = ShardedLru::new(600, 1);
+        assert!(c.get(&(0, 0)).is_none());
+        c.put((0, 0), block_of(10));
+        c.put((0, 1), block_of(10));
+        assert!(c.get(&(0, 0)).is_some()); // refresh 0 → 1 is LRU
+        c.put((0, 2), block_of(10)); // evicts (0,1)
+        assert!(c.get(&(0, 1)).is_none());
+        assert!(c.get(&(0, 2)).is_some());
+        let m = c.meters();
+        assert_eq!(m.evictions, 1);
+        assert_eq!(m.hits, 2);
+        assert_eq!(m.misses, 2);
+        assert_eq!(m.entries, 2);
+        assert_eq!(m.bytes, 2 * 280);
+    }
+
+    #[test]
+    fn oversized_blocks_are_not_cached() {
+        let c = ShardedLru::new(100, 4); // 25 bytes per shard
+        c.put((0, 0), block_of(10));
+        assert!(c.get(&(0, 0)).is_none());
+        assert_eq!(c.meters().entries, 0);
+    }
+
+    #[test]
+    fn clear_keeps_counters_but_drops_blocks() {
+        let c = ShardedLru::new(1 << 20, 4);
+        c.put((0, 0), block_of(5));
+        assert!(c.get(&(0, 0)).is_some());
+        c.clear();
+        assert!(c.get(&(0, 0)).is_none());
+        let m = c.meters();
+        assert_eq!((m.bytes, m.entries), (0, 0));
+        assert_eq!(m.hits, 1);
+        assert_eq!(m.misses, 1);
+    }
+
+    #[test]
+    fn region_query_counts() {
+        let q = RegionQuery { z: 0, x0: 2, x1: 4, y0: 1, y1: 2 };
+        assert_eq!(q.n_points(), 6);
+        let dims = CubeDims::new(8, 5, 3);
+        let full = RegionQuery::slice(&dims, 2);
+        assert_eq!(full.n_points(), 40);
+    }
+}

@@ -1,0 +1,453 @@
+//! Segment files: fixed-width record payload + footer window index.
+//!
+//! One segment holds one slice run's fitted PDFs in window order (window
+//! order == point-id order inside a window, so a point lookup is pure
+//! arithmetic once its window entry is known). The writer streams — it
+//! never buffers more than one window — and maintains a running FNV-64
+//! over everything written; `finish()` appends the footer index and the
+//! checksummed trailer. The reader opens from the trailer alone (seek to
+//! end, read index), which is what lets a store reopen cold with no
+//! payload rescan.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::os::unix::fs::FileExt;
+use std::path::Path;
+
+use crate::coordinator::methods::FitOutcome;
+use crate::cube::{PointId, Window};
+use crate::pdfstore::{Fnv64, PdfRecord, FORMAT_VERSION, REC_LEN};
+use crate::{PdfflowError, Result};
+
+/// Segment header magic.
+pub const SEG_MAGIC: &[u8; 4] = b"PDFS";
+/// Trailer magic (end of file).
+pub const TRAILER_MAGIC: &[u8; 4] = b"SFTR";
+/// Header bytes: magic + version.
+pub const HEADER_LEN: u64 = 8;
+/// Footer bytes per window entry.
+pub const ENTRY_LEN: u64 = 32;
+/// Trailer bytes: footer_off + n_windows + checksum + magic.
+pub const TRAILER_LEN: u64 = 28;
+
+/// One window's byte range inside a segment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WindowEntry {
+    pub y0: u64,
+    pub lines: u64,
+    /// Absolute byte offset of the window's first record.
+    pub offset: u64,
+    pub n_records: u64,
+}
+
+impl WindowEntry {
+    fn encode(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.y0.to_le_bytes());
+        out.extend_from_slice(&self.lines.to_le_bytes());
+        out.extend_from_slice(&self.offset.to_le_bytes());
+        out.extend_from_slice(&self.n_records.to_le_bytes());
+    }
+
+    fn decode(b: &[u8]) -> WindowEntry {
+        let u64_at = |o: usize| u64::from_le_bytes(b[o..o + 8].try_into().unwrap());
+        WindowEntry {
+            y0: u64_at(0),
+            lines: u64_at(8),
+            offset: u64_at(16),
+            n_records: u64_at(24),
+        }
+    }
+}
+
+/// Manifest entry describing one finished segment.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SegmentMeta {
+    /// File name inside the store directory.
+    pub file: String,
+    pub slice: usize,
+    pub method: String,
+    /// Candidate-type count of the producing run.
+    pub types: usize,
+    pub n_windows: usize,
+    pub n_records: u64,
+    /// Total file length in bytes (truncation guard).
+    pub bytes: u64,
+    /// FNV-64 over every byte before the trailer's checksum field.
+    pub checksum: u64,
+}
+
+/// Streaming writer for one segment. Records stream into a `.tmp` file
+/// that is renamed over the final name only in `finish()`, so a crashed
+/// or abandoned run never clobbers a manifest-registered segment — the
+/// store on disk stays openable throughout a rerun.
+pub struct SegmentWriter {
+    f: BufWriter<File>,
+    tmp_path: std::path::PathBuf,
+    final_path: std::path::PathBuf,
+    file_name: String,
+    slice: usize,
+    method: String,
+    types: usize,
+    entries: Vec<WindowEntry>,
+    hash: Fnv64,
+    /// Bytes written so far (everything the checksum covers).
+    offset: u64,
+    n_records: u64,
+}
+
+impl SegmentWriter {
+    pub fn create(dir: &Path, slice: usize, method: &str, types: usize) -> Result<SegmentWriter> {
+        let file_name = format!("slice{slice}_{method}_{types}.seg");
+        let final_path = dir.join(&file_name);
+        let tmp_path = dir.join(format!("{file_name}.tmp"));
+        let mut w = SegmentWriter {
+            f: BufWriter::new(File::create(&tmp_path)?),
+            tmp_path,
+            final_path,
+            file_name,
+            slice,
+            method: method.to_string(),
+            types,
+            entries: Vec::new(),
+            hash: Fnv64::new(),
+            offset: 0,
+            n_records: 0,
+        };
+        w.write(SEG_MAGIC)?;
+        w.write(&FORMAT_VERSION.to_le_bytes())?;
+        Ok(w)
+    }
+
+    fn write(&mut self, bytes: &[u8]) -> Result<()> {
+        self.f.write_all(bytes)?;
+        self.hash.update(bytes);
+        self.offset += bytes.len() as u64;
+        Ok(())
+    }
+
+    /// Append one window's outcomes (the pipeline's persist phase calls
+    /// this once per window, in slice order). Returns the bytes written.
+    pub fn append_window(
+        &mut self,
+        window: &Window,
+        ids: &[PointId],
+        outcomes: &[FitOutcome],
+    ) -> Result<u64> {
+        if window.z != self.slice {
+            return Err(PdfflowError::InvalidArg(format!(
+                "segment holds slice {}, got window of slice {}",
+                self.slice, window.z
+            )));
+        }
+        if ids.len() != outcomes.len() {
+            return Err(PdfflowError::InvalidArg(format!(
+                "{} ids vs {} outcomes",
+                ids.len(),
+                outcomes.len()
+            )));
+        }
+        if let Some(last) = self.entries.last() {
+            if (window.y0 as u64) < last.y0 + last.lines {
+                return Err(PdfflowError::InvalidArg(format!(
+                    "windows must be appended in line order: y0 {} after y0 {} (+{} lines)",
+                    window.y0, last.y0, last.lines
+                )));
+            }
+        }
+        let start = self.offset;
+        let mut buf = [0u8; REC_LEN];
+        for (id, o) in ids.iter().zip(outcomes) {
+            PdfRecord {
+                point: *id,
+                dist: o.dist,
+                error: o.error,
+                params: o.params,
+            }
+            .encode(&mut buf);
+            self.write(&buf)?;
+        }
+        self.entries.push(WindowEntry {
+            y0: window.y0 as u64,
+            lines: window.lines as u64,
+            offset: start,
+            n_records: ids.len() as u64,
+        });
+        self.n_records += ids.len() as u64;
+        Ok(self.offset - start)
+    }
+
+    /// Write the footer index + checksummed trailer and close the file.
+    pub fn finish(mut self) -> Result<SegmentMeta> {
+        let footer_off = self.offset;
+        let mut footer = Vec::with_capacity(self.entries.len() * ENTRY_LEN as usize + 16);
+        for e in &self.entries {
+            e.encode(&mut footer);
+        }
+        footer.extend_from_slice(&footer_off.to_le_bytes());
+        footer.extend_from_slice(&(self.entries.len() as u64).to_le_bytes());
+        self.write(&footer)?;
+        // Checksum covers everything written so far; the checksum field
+        // and trailer magic themselves are excluded.
+        let checksum = self.hash.finish();
+        self.f.write_all(&checksum.to_le_bytes())?;
+        self.f.write_all(TRAILER_MAGIC)?;
+        self.f.flush()?;
+        drop(self.f);
+        std::fs::rename(&self.tmp_path, &self.final_path)?;
+        Ok(SegmentMeta {
+            file: self.file_name,
+            slice: self.slice,
+            method: self.method,
+            types: self.types,
+            n_windows: self.entries.len(),
+            n_records: self.n_records,
+            bytes: self.offset + 12,
+            checksum,
+        })
+    }
+}
+
+/// Open segment: shared file handle (positioned reads, thread-safe) plus
+/// the decoded window index.
+pub struct SegmentReader {
+    file: File,
+    pub meta: SegmentMeta,
+    pub entries: Vec<WindowEntry>,
+}
+
+impl SegmentReader {
+    /// Open and validate against the manifest entry: file length, header
+    /// and trailer magics, stored checksum, and footer-index geometry.
+    /// Reads header + footer only — never the record payload.
+    pub fn open(dir: &Path, meta: &SegmentMeta) -> Result<SegmentReader> {
+        let path = dir.join(&meta.file);
+        let file = File::open(&path)?;
+        let len = file.metadata()?.len();
+        let bad = |what: String| PdfflowError::Format(format!("{}: {what}", path.display()));
+        if len != meta.bytes {
+            return Err(bad(format!(
+                "length {len} != manifest {} (truncated or appended?)",
+                meta.bytes
+            )));
+        }
+        if len < HEADER_LEN + TRAILER_LEN {
+            return Err(bad(format!("too short ({len} bytes)")));
+        }
+        let mut hdr = [0u8; 8];
+        file.read_exact_at(&mut hdr, 0)?;
+        if &hdr[0..4] != SEG_MAGIC {
+            return Err(bad("bad header magic".into()));
+        }
+        let version = u32::from_le_bytes(hdr[4..8].try_into().unwrap());
+        if version != FORMAT_VERSION {
+            return Err(bad(format!("unsupported segment version {version}")));
+        }
+        let mut trailer = [0u8; TRAILER_LEN as usize];
+        file.read_exact_at(&mut trailer, len - TRAILER_LEN)?;
+        if &trailer[24..28] != TRAILER_MAGIC {
+            return Err(bad("bad trailer magic".into()));
+        }
+        let footer_off = u64::from_le_bytes(trailer[0..8].try_into().unwrap());
+        let n_windows = u64::from_le_bytes(trailer[8..16].try_into().unwrap());
+        let checksum = u64::from_le_bytes(trailer[16..24].try_into().unwrap());
+        if checksum != meta.checksum {
+            return Err(bad(format!(
+                "trailer checksum {checksum:016x} != manifest {:016x}",
+                meta.checksum
+            )));
+        }
+        // All trailer/footer fields are untrusted: checked arithmetic so
+        // corrupt values surface as Format errors, never overflow.
+        let expect_len = n_windows
+            .checked_mul(ENTRY_LEN)
+            .and_then(|v| v.checked_add(footer_off))
+            .and_then(|v| v.checked_add(TRAILER_LEN));
+        if footer_off < HEADER_LEN || expect_len != Some(len) {
+            return Err(bad(format!(
+                "inconsistent footer: offset {footer_off}, {n_windows} windows, length {len}"
+            )));
+        }
+        let mut fb = vec![0u8; (n_windows * ENTRY_LEN) as usize];
+        file.read_exact_at(&mut fb, footer_off)?;
+        let mut entries = Vec::with_capacity(n_windows as usize);
+        let mut expect_next_y0 = 0u64;
+        for chunk in fb.chunks_exact(ENTRY_LEN as usize) {
+            let e = WindowEntry::decode(chunk);
+            let end = e
+                .n_records
+                .checked_mul(REC_LEN as u64)
+                .and_then(|v| v.checked_add(e.offset));
+            if e.offset < HEADER_LEN
+                || !matches!(end, Some(end) if end <= footer_off)
+                || e.y0 < expect_next_y0
+            {
+                return Err(bad(format!(
+                    "corrupt window entry (y0 {}, offset {}, {} records)",
+                    e.y0, e.offset, e.n_records
+                )));
+            }
+            expect_next_y0 = e.y0.saturating_add(e.lines);
+            entries.push(e);
+        }
+        Ok(SegmentReader {
+            file,
+            meta: meta.clone(),
+            entries,
+        })
+    }
+
+    /// Index of the window covering line `y`, if any.
+    pub fn find_window(&self, y: usize) -> Option<usize> {
+        let y = y as u64;
+        // Entries are sorted by y0 and non-overlapping.
+        let idx = self.entries.partition_point(|e| e.y0 <= y);
+        if idx == 0 {
+            return None;
+        }
+        let e = &self.entries[idx - 1];
+        (y < e.y0 + e.lines).then_some(idx - 1)
+    }
+
+    /// Read and decode one window's records (one positioned read).
+    pub fn read_window(&self, idx: usize) -> Result<Vec<PdfRecord>> {
+        let e = &self.entries[idx];
+        let mut buf = vec![0u8; (e.n_records as usize) * REC_LEN];
+        self.file.read_exact_at(&mut buf, e.offset)?;
+        let mut out = Vec::with_capacity(e.n_records as usize);
+        for chunk in buf.chunks_exact(REC_LEN) {
+            out.push(PdfRecord::decode(chunk)?);
+        }
+        Ok(out)
+    }
+
+    /// Full-payload FNV-64 verification against the manifest checksum
+    /// (streams the whole file; the expensive counterpart of `open`).
+    pub fn verify(&self) -> Result<()> {
+        let len = self.meta.bytes;
+        let covered = len - 12; // checksum field + trailer magic excluded
+        let mut hash = Fnv64::new();
+        let mut buf = vec![0u8; 1 << 16];
+        let mut off = 0u64;
+        while off < covered {
+            let take = buf.len().min((covered - off) as usize);
+            self.file.read_exact_at(&mut buf[..take], off)?;
+            hash.update(&buf[..take]);
+            off += take as u64;
+        }
+        let got = hash.finish();
+        if got != self.meta.checksum {
+            return Err(PdfflowError::Format(format!(
+                "{}: payload checksum {got:016x} != manifest {:016x} (corrupt segment)",
+                self.meta.file, self.meta.checksum
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::DistType;
+    use std::path::PathBuf;
+
+    fn outcomes(n: usize, seed: u32) -> Vec<FitOutcome> {
+        (0..n)
+            .map(|i| FitOutcome {
+                dist: DistType::from_id((i + seed as usize) % 10).unwrap(),
+                error: 0.01 * (i as f32 + seed as f32),
+                params: [i as f32, -(i as f32), 0.5],
+            })
+            .collect()
+    }
+
+    fn ids(start: u64, n: usize) -> Vec<PointId> {
+        (0..n as u64).map(|i| PointId(start + i)).collect()
+    }
+
+    fn tmp(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("pdfflow-seg-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn write_then_read_windows_back() {
+        let dir = tmp("rw");
+        let mut w = SegmentWriter::create(&dir, 3, "baseline", 4).unwrap();
+        let w0 = Window { z: 3, y0: 0, lines: 2 };
+        let w1 = Window { z: 3, y0: 2, lines: 1 };
+        let o0 = outcomes(8, 0);
+        let o1 = outcomes(4, 5);
+        w.append_window(&w0, &ids(100, 8), &o0).unwrap();
+        w.append_window(&w1, &ids(200, 4), &o1).unwrap();
+        let meta = w.finish().unwrap();
+        assert_eq!(meta.n_windows, 2);
+        assert_eq!(meta.n_records, 12);
+        assert_eq!(
+            meta.bytes,
+            HEADER_LEN + 12 * REC_LEN as u64 + 2 * ENTRY_LEN + TRAILER_LEN
+        );
+
+        let r = SegmentReader::open(&dir, &meta).unwrap();
+        r.verify().unwrap();
+        assert_eq!(r.entries.len(), 2);
+        assert_eq!(r.find_window(0), Some(0));
+        assert_eq!(r.find_window(1), Some(0));
+        assert_eq!(r.find_window(2), Some(1));
+        assert_eq!(r.find_window(3), None);
+        let back = r.read_window(1).unwrap();
+        assert_eq!(back.len(), 4);
+        assert_eq!(back[0].point, PointId(200));
+        assert_eq!(back[3].error, o1[3].error);
+        assert_eq!(back[2].params, o1[2].params);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn rejects_out_of_order_windows_and_wrong_slice() {
+        let dir = tmp("order");
+        let mut w = SegmentWriter::create(&dir, 1, "baseline", 4).unwrap();
+        w.append_window(&Window { z: 1, y0: 2, lines: 2 }, &ids(0, 4), &outcomes(4, 0))
+            .unwrap();
+        assert!(w
+            .append_window(&Window { z: 1, y0: 1, lines: 1 }, &ids(0, 2), &outcomes(2, 0))
+            .is_err());
+        assert!(w
+            .append_window(&Window { z: 2, y0: 4, lines: 1 }, &ids(0, 2), &outcomes(2, 0))
+            .is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn truncation_is_rejected_at_open() {
+        let dir = tmp("trunc");
+        let mut w = SegmentWriter::create(&dir, 0, "baseline", 4).unwrap();
+        w.append_window(&Window { z: 0, y0: 0, lines: 1 }, &ids(0, 6), &outcomes(6, 1))
+            .unwrap();
+        let meta = w.finish().unwrap();
+        let path = dir.join(&meta.file);
+        let f = std::fs::OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len(meta.bytes - 10).unwrap();
+        drop(f);
+        assert!(SegmentReader::open(&dir, &meta).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn payload_corruption_is_caught_by_verify() {
+        let dir = tmp("corrupt");
+        let mut w = SegmentWriter::create(&dir, 0, "baseline", 4).unwrap();
+        w.append_window(&Window { z: 0, y0: 0, lines: 1 }, &ids(0, 6), &outcomes(6, 2))
+            .unwrap();
+        let meta = w.finish().unwrap();
+        let path = dir.join(&meta.file);
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[20] ^= 0xFF; // flip a payload byte, length unchanged
+        std::fs::write(&path, &bytes).unwrap();
+        let r = SegmentReader::open(&dir, &meta).unwrap(); // index still sane
+        assert!(r.verify().is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -38,6 +38,21 @@ impl<T> Rdd<T> {
         Rdd { partitions }
     }
 
+    /// Spark `coalesce`: shrink to at most `n_partitions` partitions
+    /// (no shuffle is charged — in-memory merge). Edge cases follow
+    /// `from_vec`: `n_partitions == 0` is clamped to 1, and a target at
+    /// or above the current partition count is a no-op. Unlike Spark's
+    /// adjacent-merge, the in-memory rebuild re-balances exactly
+    /// (partition sizes differ by at most one) while preserving item
+    /// order.
+    pub fn coalesce(self, n_partitions: usize) -> Rdd<T> {
+        let n = n_partitions.max(1);
+        if n >= self.partitions.len() {
+            return self;
+        }
+        Self::from_vec(self.collect(), n)
+    }
+
     pub fn n_partitions(&self) -> usize {
         self.partitions.len()
     }
@@ -176,6 +191,30 @@ mod tests {
         let r = Rdd::from_vec(vec![1, 2], 5);
         assert_eq!(r.n_partitions(), 5);
         assert_eq!(r.n_items(), 2);
+    }
+
+    #[test]
+    fn coalesce_shrinks_rebalances_and_preserves_order() {
+        let r = Rdd::from_vec((0..10).collect::<Vec<_>>(), 5).coalesce(2);
+        assert_eq!(r.n_partitions(), 2);
+        let sizes: Vec<usize> = r.partitions.iter().map(|p| p.len()).collect();
+        assert_eq!(sizes, vec![5, 5]);
+        assert_eq!(r.collect(), (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn coalesce_edge_cases() {
+        // Target above current count: no-op.
+        let r = Rdd::from_vec((0..4).collect::<Vec<_>>(), 2).coalesce(9);
+        assert_eq!(r.n_partitions(), 2);
+        // Zero target clamps to one partition.
+        let r = Rdd::from_vec((0..4).collect::<Vec<_>>(), 4).coalesce(0);
+        assert_eq!(r.n_partitions(), 1);
+        assert_eq!(r.collect(), (0..4).collect::<Vec<_>>());
+        // Empty RDD coalesces without panicking.
+        let r = Rdd::from_vec(Vec::<u8>::new(), 6).coalesce(2);
+        assert_eq!(r.n_partitions(), 2);
+        assert_eq!(r.n_items(), 0);
     }
 
     #[test]

@@ -121,6 +121,51 @@ pub fn mode(t: DistType, p: &[f64; 3]) -> f64 {
     }
 }
 
+/// Quantile (inverse CDF) of a fitted type: the value x with
+/// `cdf(t, p, x) = q`. Used by the store's analytical queries ("give me
+/// the median / P90 velocity of this region"). Solved by bracketed
+/// bisection on the monotone CDF — closed forms exist for some families
+/// but one numeric path keeps every type consistent with `stats::cdf`.
+/// For the discrete Geometric family this converges to the CDF jump
+/// point containing q.
+pub fn quantile(t: DistType, p: &[f64; 3], q: f64) -> f64 {
+    let q = q.clamp(1e-12, 1.0 - 1e-12);
+    let center = mode(t, p);
+    // A positive length scale for the initial bracket, per family.
+    let scale = match t {
+        DistType::Uniform => (p[1] - p[0]).abs(),
+        DistType::Exponential | DistType::Geometric => 1.0 / p[0].abs().max(1e-12),
+        DistType::Gamma => (p[0] * p[1]).abs(),
+        DistType::Weibull => p[1].abs(),
+        DistType::Lognormal => (p[0].exp() * p[1].max(0.1)).abs(),
+        _ => p[1].abs(),
+    }
+    .max(1e-12);
+    let (mut lo, mut hi) = (center, center);
+    let mut step = scale;
+    while crate::stats::cdf(t, p, lo) > q && step < 1e18 {
+        lo -= step;
+        step *= 2.0;
+    }
+    step = scale;
+    while crate::stats::cdf(t, p, hi) < q && step < 1e18 {
+        hi += step;
+        step *= 2.0;
+    }
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        if mid <= lo || mid >= hi {
+            break; // float resolution reached
+        }
+        if crate::stats::cdf(t, p, mid) < q {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
 /// Per-point uncertainty summary (the paper's §1 deliverable).
 #[derive(Clone, Copy, Debug)]
 pub struct Qoi {
@@ -235,6 +280,52 @@ mod tests {
         let mean = PointStats::of(&data).mean;
         assert!(q.value < mean, "mode {} !< mean {mean}", q.value);
         assert!(q.value > 0.0);
+    }
+
+    #[test]
+    fn quantile_inverts_cdf_for_every_continuous_type() {
+        let mut rng = Rng::new(11);
+        let data: Vec<f32> = (0..4000).map(|_| rng.gamma(3.0, 2.0) as f32).collect();
+        let s = PointStats::of(&data);
+        for &t in &DistType::ALL {
+            if t == DistType::Geometric {
+                continue; // discrete: CDF jumps, inverse is a step edge
+            }
+            let (p, ok) = fit_params(t, &s);
+            if !ok {
+                continue;
+            }
+            for q in [0.05, 0.25, 0.5, 0.75, 0.95] {
+                let x = quantile(t, &p, q);
+                let back = cdf(t, &p, x);
+                assert!(
+                    (back - q).abs() < 1e-6,
+                    "{t:?}: cdf(quantile({q})) = {back}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn quantile_known_values() {
+        // Standard normal: median 0, P84 ≈ +1σ.
+        let p = [0.0, 1.0, 0.0];
+        assert!(quantile(DistType::Normal, &p, 0.5).abs() < 1e-9);
+        assert!((quantile(DistType::Normal, &p, 0.8413447) - 1.0).abs() < 1e-4);
+        // Uniform [2, 8]: P25 = 3.5.
+        let u = [2.0, 8.0, 0.0];
+        assert!((quantile(DistType::Uniform, &u, 0.25) - 3.5).abs() < 1e-9);
+        // Exponential λ=0.5: median = ln(2)/λ.
+        let e = [0.5, 0.0, 0.0];
+        assert!((quantile(DistType::Exponential, &e, 0.5) - 2.0 * 2f64.ln()).abs() < 1e-9);
+        // Quantiles are monotone in q.
+        let g = [3.0, 2.0, 0.0];
+        let (a, b, c) = (
+            quantile(DistType::Gamma, &g, 0.1),
+            quantile(DistType::Gamma, &g, 0.5),
+            quantile(DistType::Gamma, &g, 0.9),
+        );
+        assert!(a < b && b < c, "{a} {b} {c}");
     }
 
     #[test]

@@ -29,6 +29,19 @@ impl From<&Window> for Key {
     }
 }
 
+/// Observability counters of a [`WindowCache`] — surfaced per run in
+/// `SliceReport` rows so cache effectiveness is visible in every report.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// Resident bytes.
+    pub bytes: u64,
+    /// Resident entries.
+    pub entries: usize,
+}
+
 /// LRU cache of loaded windows with a byte budget.
 pub struct WindowCache {
     inner: Mutex<Inner>,
@@ -41,6 +54,7 @@ struct Inner {
     bytes: u64,
     hits: u64,
     misses: u64,
+    evictions: u64,
 }
 
 impl WindowCache {
@@ -52,6 +66,7 @@ impl WindowCache {
                 bytes: 0,
                 hits: 0,
                 misses: 0,
+                evictions: 0,
             }),
             capacity_bytes,
         }
@@ -99,13 +114,19 @@ impl WindowCache {
                 .expect("over budget implies non-empty");
             let (_, evicted) = g.map.remove(&victim).unwrap();
             g.bytes -= evicted.bytes();
+            g.evictions += 1;
         }
     }
 
-    /// (hits, misses, resident bytes, entries)
-    pub fn stats(&self) -> (u64, u64, u64, usize) {
+    pub fn stats(&self) -> CacheStats {
         let g = self.inner.lock().unwrap();
-        (g.hits, g.misses, g.bytes, g.map.len())
+        CacheStats {
+            hits: g.hits,
+            misses: g.misses,
+            evictions: g.evictions,
+            bytes: g.bytes,
+            entries: g.map.len(),
+        }
     }
 
     pub fn clear(&self) {
@@ -138,9 +159,9 @@ mod tests {
         assert!(c.get(&win(0)).is_none());
         c.put(&win(0), matrix(10, 10));
         assert!(c.get(&win(0)).is_some());
-        let (hits, misses, bytes, n) = c.stats();
-        assert_eq!((hits, misses, n), (1, 1, 1));
-        assert_eq!(bytes, 400);
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+        assert_eq!(s.bytes, 400);
     }
 
     #[test]
@@ -157,12 +178,34 @@ mod tests {
     }
 
     #[test]
+    fn eviction_counter_tracks_lru_evictions() {
+        // Budget fits two 400-byte matrices; the third and fourth insert
+        // must each evict exactly the least-recently-used entry.
+        let c = WindowCache::new(900);
+        c.put(&win(0), matrix(10, 10));
+        c.put(&win(1), matrix(10, 10));
+        assert_eq!(c.stats().evictions, 0);
+        c.put(&win(2), matrix(10, 10)); // evicts 0 (oldest stamp)
+        let s = c.stats();
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.entries, 2);
+        assert!(c.get(&win(0)).is_none());
+        c.put(&win(3), matrix(10, 10)); // evicts 1
+        assert_eq!(c.stats().evictions, 2);
+        assert!(c.get(&win(1)).is_none());
+        assert!(c.get(&win(2)).is_some() && c.get(&win(3)).is_some());
+        // Re-inserting an existing key within budget evicts nothing.
+        c.put(&win(3), matrix(10, 10));
+        assert_eq!(c.stats().evictions, 2);
+    }
+
+    #[test]
     fn oversized_entries_are_not_cached() {
         let c = WindowCache::new(100);
         c.put(&win(0), matrix(100, 100));
         assert!(c.get(&win(0)).is_none());
-        let (_, _, bytes, n) = c.stats();
-        assert_eq!((bytes, n), (0, 0));
+        let s = c.stats();
+        assert_eq!((s.bytes, s.entries), (0, 0));
     }
 
     #[test]
@@ -170,9 +213,9 @@ mod tests {
         let c = WindowCache::new(10_000);
         c.put(&win(0), matrix(10, 10));
         c.put(&win(0), matrix(20, 10));
-        let (_, _, bytes, n) = c.stats();
-        assert_eq!(n, 1);
-        assert_eq!(bytes, 800);
+        let s = c.stats();
+        assert_eq!(s.entries, 1);
+        assert_eq!(s.bytes, 800);
     }
 
     #[test]
@@ -180,7 +223,7 @@ mod tests {
         let c = WindowCache::new(10_000);
         c.put(&win(0), matrix(10, 10));
         c.clear();
-        let (_, _, bytes, n) = c.stats();
-        assert_eq!((bytes, n), (0, 0));
+        let s = c.stats();
+        assert_eq!((s.bytes, s.entries), (0, 0));
     }
 }

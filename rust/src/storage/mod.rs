@@ -18,7 +18,7 @@ use crate::cube::{PointId, Window};
 use crate::datagen::{SyntheticDataset, HEADER_LEN, MAGIC};
 use crate::{PdfflowError, Result};
 
-pub use cache::WindowCache;
+pub use cache::{CacheStats, WindowCache};
 
 /// Observation vectors for a set of points: row-major (point, simulation).
 #[derive(Clone, Debug)]

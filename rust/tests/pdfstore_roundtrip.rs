@@ -1,0 +1,205 @@
+//! End-to-end pdfstore tests: a pipeline run persists a slice, a fresh
+//! process-equivalent reopen (manifest alone, no rescan) serves point /
+//! region / quantile queries, and concurrent reads are bit-identical to
+//! single-threaded ones. Also covers the corruption surface: truncated
+//! segments, flipped payload bytes and tampered manifests must all be
+//! rejected rather than served.
+
+use std::path::PathBuf;
+
+use pdfflow::cluster::{ClusterSpec, SimCluster};
+use pdfflow::config::PipelineConfig;
+use pdfflow::coordinator::{Method, Pipeline, TypeSet};
+use pdfflow::cube::PointId;
+use pdfflow::datagen::{DatasetSpec, SyntheticDataset};
+use pdfflow::pdfstore::{
+    PdfStore, QueryEngine, QueryOptions, RegionQuery, MANIFEST_NAME, REC_LEN,
+};
+use pdfflow::runtime::{make_backend, Backend, BackendKind, BackendOptions};
+use pdfflow::util::pool;
+
+const SLICE: usize = 1;
+
+fn backend() -> Box<dyn Backend> {
+    make_backend(
+        BackendKind::Native,
+        "artifacts",
+        &BackendOptions {
+            batch: 64,
+            ..BackendOptions::default()
+        },
+    )
+    .expect("native backend")
+}
+
+/// Generate a tiny dataset and persist SLICE through both sinks.
+/// Returns (root dir, store dir, legacy .pdfout path, persisted points).
+fn build_store(tag: &str) -> (PathBuf, PathBuf, PathBuf, usize) {
+    let root = std::env::temp_dir().join(format!(
+        "pdfflow-storetest-{tag}-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&root);
+    let ds = SyntheticDataset::generate(&DatasetSpec::tiny(), root.join("data")).unwrap();
+    let store_dir = root.join("store");
+    let legacy_dir = root.join("legacy");
+    let mut cfg = PipelineConfig {
+        batch: 64,
+        window_lines: 4,
+        ..PipelineConfig::default()
+    };
+    cfg.store_dir = Some(store_dir.to_string_lossy().into_owned());
+    cfg.persist_dir = Some(legacy_dir.to_string_lossy().into_owned());
+    let backend = backend();
+    let mut pipe = Pipeline::new(
+        &ds,
+        backend.as_ref(),
+        SimCluster::new(ClusterSpec::lncc()),
+        cfg,
+    );
+    let r = pipe.run_slice(Method::Baseline, SLICE, TypeSet::Four).unwrap();
+    // Both sinks write one 28-byte record per point; the cluster was
+    // charged for the persisted bytes.
+    assert_eq!(r.persist_bytes, 2 * (r.n_points * REC_LEN) as u64);
+    assert!(r.persist_sim_s > 0.0);
+    assert!(pipe.cluster.account("persist.nfs") > 0.0);
+    assert_eq!(r.cache_hits + r.cache_misses, r.windows.len());
+    let legacy = legacy_dir.join(format!("slice{SLICE}_baseline_4.pdfout"));
+    (root, store_dir, legacy, r.n_points)
+}
+
+#[test]
+fn reopen_cold_and_query_bit_identical_to_legacy_persist() {
+    let (root, store_dir, legacy, n_points) = build_store("roundtrip");
+    // Cold reopen: manifest + footers only, then full checksum pass.
+    let store = PdfStore::open(&store_dir).unwrap();
+    assert_eq!(store.n_segments(), 1);
+    assert_eq!(store.n_records(), n_points as u64);
+    store.verify().unwrap();
+
+    let engine = QueryEngine::new(store, QueryOptions::default());
+    let legacy_bytes = std::fs::read(&legacy).unwrap();
+    assert_eq!(legacy_bytes.len(), n_points * REC_LEN);
+    // Every point: the stored record must re-encode to the exact bytes
+    // the legacy persist path wrote (bit-identical params).
+    for row in legacy_bytes.chunks_exact(REC_LEN) {
+        let id = PointId(u64::from_le_bytes(row[0..8].try_into().unwrap()));
+        let rec = engine.point_by_id(id).unwrap();
+        let mut buf = [0u8; REC_LEN];
+        rec.encode(&mut buf);
+        assert_eq!(&buf[..], row, "point {id:?} not bit-identical");
+    }
+    // Region scan over the whole slice covers every record once.
+    let dims = engine.dims();
+    let full = engine.region(&RegionQuery::slice(&dims, SLICE)).unwrap();
+    assert_eq!(full.len(), n_points);
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn concurrent_queries_match_single_threaded() {
+    let (root, store_dir, _, n_points) = build_store("concurrent");
+    let serial = QueryEngine::open(
+        &store_dir,
+        QueryOptions {
+            workers: 1,
+            ..QueryOptions::default()
+        },
+    )
+    .unwrap();
+    let parallel = QueryEngine::open(
+        &store_dir,
+        QueryOptions {
+            workers: 4,
+            // Tiny budget so concurrent reads also exercise eviction.
+            cache_bytes: 4 * 4 * 16 * REC_LEN as u64,
+            shards: 2,
+            ..QueryOptions::default()
+        },
+    )
+    .unwrap();
+    let dims = serial.dims();
+    let ids: Vec<PointId> = (0..n_points as u64)
+        .map(|i| PointId(dims.slice_points() as u64 * SLICE as u64 + i))
+        .collect();
+
+    // Point queries: batched 4-thread reads == sequential reads.
+    let seq: Vec<_> = ids.iter().map(|&id| serial.point_by_id(id).unwrap()).collect();
+    let par = parallel.points(&ids).unwrap();
+    assert_eq!(par, seq);
+    // Raw 4-way fan-out through the pool hits the same records.
+    let fanned = pool::parallel_map(ids.clone(), 4, |id| parallel.point_by_id(id).unwrap());
+    assert_eq!(fanned, seq);
+
+    // Region + quantile analytics: identical at any thread count.
+    let q = RegionQuery {
+        z: SLICE,
+        x0: 1,
+        x1: dims.nx - 2,
+        y0: 1,
+        y1: dims.ny - 2,
+    };
+    let s1 = serial.region_summary(&q).unwrap();
+    let s4 = parallel.region_summary(&q).unwrap();
+    assert_eq!(s1, s4);
+    assert_eq!(s1.n_points, q.n_points());
+    assert_eq!(s1.type_counts.iter().sum::<u64>(), q.n_points() as u64);
+    let m1 = serial.region_quantile_mean(&q, 0.5).unwrap();
+    let m4 = parallel.region_quantile_mean(&q, 0.5).unwrap();
+    assert_eq!(m1.to_bits(), m4.to_bits(), "{m1} vs {m4}");
+
+    // Concurrent mixed workload on one shared engine stays identical.
+    let mixed = pool::parallel_map((0..8).collect::<Vec<usize>>(), 4, |i| {
+        if i % 2 == 0 {
+            parallel.region_summary(&q).unwrap().avg_error
+        } else {
+            parallel.region_quantile_mean(&q, 0.5).unwrap()
+        }
+    });
+    for (i, v) in mixed.iter().enumerate() {
+        let want = if i % 2 == 0 { s1.avg_error } else { m1 };
+        assert_eq!(v.to_bits(), want.to_bits());
+    }
+    let meters = parallel.meters();
+    assert!(meters.hits + meters.misses > 0);
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn truncated_segment_is_rejected_at_open() {
+    let (root, store_dir, _, _) = build_store("trunc");
+    let manifest = PdfStore::open(&store_dir).unwrap();
+    let seg_file = store_dir.join(&manifest.manifest.segments[0].file);
+    drop(manifest);
+    let len = std::fs::metadata(&seg_file).unwrap().len();
+    let f = std::fs::OpenOptions::new().write(true).open(&seg_file).unwrap();
+    f.set_len(len - 13).unwrap();
+    drop(f);
+    assert!(PdfStore::open(&store_dir).is_err(), "truncated segment served");
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn corrupt_payload_fails_verify_and_tampered_manifest_fails_open() {
+    let (root, store_dir, _, _) = build_store("corrupt");
+    let store = PdfStore::open(&store_dir).unwrap();
+    let seg_file = store_dir.join(&store.manifest.segments[0].file);
+    drop(store);
+    // Flip one payload byte (length unchanged): open still succeeds off
+    // the index, but the full checksum pass must fail.
+    let mut bytes = std::fs::read(&seg_file).unwrap();
+    bytes[40] ^= 0x01;
+    std::fs::write(&seg_file, &bytes).unwrap();
+    let store = PdfStore::open(&store_dir).unwrap();
+    assert!(store.verify().is_err(), "corrupt payload passed verify");
+    drop(store);
+    // Tampered manifest body (DatasetSpec::tiny has 100 observations;
+    // claim 101): the self-checksum must reject it.
+    let mpath = store_dir.join(MANIFEST_NAME);
+    let text = std::fs::read_to_string(&mpath).unwrap();
+    let tampered = text.replacen("\"n_obs\":100", "\"n_obs\":101", 1);
+    assert_ne!(text, tampered);
+    std::fs::write(&mpath, tampered).unwrap();
+    assert!(PdfStore::open(&store_dir).is_err(), "tampered manifest accepted");
+    std::fs::remove_dir_all(&root).unwrap();
+}

@@ -312,3 +312,75 @@ fn prop_shuffle_monotone_in_bytes() {
         Ok(())
     });
 }
+
+#[test]
+fn prop_rdd_from_vec_balances_all_edge_cases() {
+    // Satellite invariants: 0 items, n_partitions == 0, and
+    // n_partitions > items must all yield max(1, requested) partitions
+    // whose sizes differ by at most one, preserving item order.
+    check("rdd_balance", 120, |rng| {
+        let n = rng.below(200); // includes 0 items
+        let parts = rng.below(12); // includes 0 partitions
+        let items: Vec<u32> = (0..n as u32).collect();
+        let r = Rdd::from_vec(items.clone(), parts);
+        prop_assert!(
+            r.n_partitions() == parts.max(1),
+            "{} partitions for request {parts}",
+            r.n_partitions()
+        );
+        let sizes: Vec<usize> = r.partitions.iter().map(|p| p.len()).collect();
+        let mn = sizes.iter().copied().min().unwrap();
+        let mx = sizes.iter().copied().max().unwrap();
+        prop_assert!(mx - mn <= 1, "unbalanced: {sizes:?} for {n} items");
+        prop_assert!(r.collect() == items, "order not preserved");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rdd_coalesce_preserves_items_and_balance() {
+    check("rdd_coalesce", 120, |rng| {
+        let n = rng.below(150);
+        let parts = 1 + rng.below(10);
+        let target = rng.below(14); // may be 0 or above current count
+        let items: Vec<u32> = (0..n as u32).map(|i| i.wrapping_mul(2654435761)).collect();
+        let r = Rdd::from_vec(items.clone(), parts).coalesce(target);
+        let want = parts.min(target.max(1));
+        prop_assert!(
+            r.n_partitions() == want,
+            "{} partitions, wanted {want} (from {parts}, target {target})"
+        );
+        let sizes: Vec<usize> = r.partitions.iter().map(|p| p.len()).collect();
+        let mn = sizes.iter().copied().min().unwrap();
+        let mx = sizes.iter().copied().max().unwrap();
+        prop_assert!(mx - mn <= 1, "unbalanced after coalesce: {sizes:?}");
+        prop_assert!(r.collect() == items, "coalesce reordered items");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pdf_record_codec_roundtrips_bit_exact() {
+    use pdfflow::cube::PointId;
+    use pdfflow::pdfstore::{PdfRecord, REC_LEN};
+    check("pdf_record_codec", 200, |rng| {
+        let rec = PdfRecord {
+            point: PointId(rng.next_u64() >> 1),
+            dist: DistType::from_id(rng.below(10)).unwrap(),
+            error: rng.uniform(0.0, 2.0) as f32,
+            params: [
+                rng.uniform(-1e6, 1e6) as f32,
+                rng.uniform(-1e6, 1e6) as f32,
+                rng.uniform(-1e6, 1e6) as f32,
+            ],
+        };
+        let mut buf = [0u8; REC_LEN];
+        rec.encode(&mut buf);
+        let back = PdfRecord::decode(&buf).map_err(|e| e.to_string())?;
+        prop_assert!(back == rec, "decode({rec:?}) = {back:?}");
+        let mut buf2 = [0u8; REC_LEN];
+        back.encode(&mut buf2);
+        prop_assert!(buf == buf2, "re-encode not bit-identical");
+        Ok(())
+    });
+}
