@@ -36,8 +36,8 @@ fn main() -> Result<()> {
 
     let reader = DatasetReader::new(&data);
     let cache = WindowCache::new(512 << 20);
-    let mut cluster = SimCluster::new(cfg.cluster.clone());
-    let full = full_slice_features(&reader, &cache, backend.as_ref(), &mut cluster, &tree, cfg.slice)?;
+    let cluster = SimCluster::new(cfg.cluster.clone());
+    let full = full_slice_features(&reader, &cache, backend.as_ref(), &cluster, &tree, cfg.slice)?;
 
     for sampler in [Sampler::Random, Sampler::KMeans] {
         println!(
@@ -54,7 +54,7 @@ fn main() -> Result<()> {
         };
         for &rate in rates {
             let rep = run_sampling(
-                &reader, &cache, backend.as_ref(), &mut cluster, &tree, cfg.slice, rate, sampler, 42,
+                &reader, &cache, backend.as_ref(), &cluster, &tree, cfg.slice, rate, sampler, 42,
             )?;
             println!(
                 "{:<8} {:>9} {:>12} {:>13} {:>10.4}",

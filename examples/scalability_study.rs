@@ -29,9 +29,9 @@ fn main() -> Result<()> {
     for nodes in [10, 20, 30, 40, 50, 60] {
         let reader = DatasetReader::new(&data);
         let cache = WindowCache::new(0);
-        let mut cluster = SimCluster::new(ClusterSpec::g5k(nodes));
+        let cluster = SimCluster::new(ClusterSpec::g5k(nodes));
         for w in data.spec.dims.windows(cfg.slice, cfg.pipeline.window_lines) {
-            load_window(&reader, &cache, backend.as_ref(), &mut cluster, w)?;
+            load_window(&reader, &cache, backend.as_ref(), &cluster, w)?;
         }
         println!("{:<8} {:>14}", nodes, fmt_secs(cluster.total()));
     }

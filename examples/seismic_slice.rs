@@ -104,9 +104,9 @@ fn main() -> Result<()> {
     let tree = pipeline.tree.clone().unwrap();
     let reader = DatasetReader::new(&data);
     let cache = WindowCache::new(512 << 20);
-    let mut cluster = SimCluster::new(cfg.cluster.clone());
+    let cluster = SimCluster::new(cfg.cluster.clone());
     let rep = run_sampling(
-        &reader, &cache, backend.as_ref(), &mut cluster, &tree, cfg.slice, 0.1, Sampler::Random, 42,
+        &reader, &cache, backend.as_ref(), &cluster, &tree, cfg.slice, 0.1, Sampler::Random, 42,
     )?;
     println!(
         "\nsampling (rate 0.1): {} points, load {} compute {} — slice features:",

@@ -96,20 +96,22 @@ fn main() {
         });
     }
 
-    // RDD aggregate-by-key over 10k items.
+    // RDD aggregate-by-key over 10k items (driver executor, 4 tasks wide).
+    let exec = pdfflow::executor::Executor::new(4);
     bench("rdd::aggregate_by_key 10k items", 1, 0.5, || {
         let items: Vec<(u32, u32)> = (0..10_000u32).map(|i| (i % 700, i)).collect();
-        let mut cluster = SimCluster::new(ClusterSpec::lncc());
+        let cluster = SimCluster::new(ClusterSpec::lncc());
         let (g, _) = Rdd::from_vec(items, 16).aggregate_by_key(
             16,
-            &mut cluster,
+            &exec,
+            &cluster,
             "s",
             |v| vec![v],
             |c, v| c.push(v),
             |c, mut o| c.append(&mut o),
             |_, c| c.len() as u64 * 4,
         );
-        std::hint::black_box(g.n_items());
+        std::hint::black_box(g.count(&exec));
     });
 
     // Backend execute latency per batch shape (the L3<->L2 boundary).

@@ -1,0 +1,144 @@
+//! Window-pipeline scaling harness (criterion substitute; harness =
+//! false): windows/second of a whole-slice run at 1/2/4/8 executor
+//! threads, on one backend worker so the speedup isolates the *driver*
+//! scheduling layer (the executor refactor's contribution) from the
+//! backend's inner batch parallelism.
+//!
+//! ```text
+//! cargo bench --bench pipeline             # table on stdout
+//! cargo bench --bench pipeline -- --json   # also write BENCH_pipeline.json
+//! ```
+//!
+//! The JSON report (also triggered by PDFFLOW_BENCH_JSON=1) is the
+//! machine-readable record CI or EXPERIMENTS.md can track: per thread
+//! count, windows/s and speedup vs 1 thread, plus the invariance
+//! fingerprint (avg_error bits, fits) proving the runs were identical.
+
+use std::time::Instant;
+
+use pdfflow::cluster::{ClusterSpec, SimCluster};
+use pdfflow::config::PipelineConfig;
+use pdfflow::coordinator::{Method, Pipeline, SliceReport, TypeSet};
+use pdfflow::cube::CubeDims;
+use pdfflow::datagen::{DatasetSpec, SyntheticDataset};
+use pdfflow::runtime::{make_backend, BackendKind, BackendOptions};
+use pdfflow::util::json::Json;
+
+const SLICE: usize = 2;
+const THREADS: [usize; 4] = [1, 2, 4, 8];
+
+fn run_once(ds: &SyntheticDataset, threads: usize) -> (SliceReport, f64) {
+    // One backend worker: the only parallelism in play is window-level.
+    let backend = make_backend(
+        BackendKind::Native,
+        "artifacts",
+        &BackendOptions {
+            batch: 64,
+            workers: 1,
+            ..BackendOptions::default()
+        },
+    )
+    .expect("backend");
+    let cfg = PipelineConfig {
+        batch: 64,
+        window_lines: 4,
+        executor_threads: threads,
+        // Cold loads every run: cache off so each window pays real I/O.
+        cache_bytes: 0,
+        ..PipelineConfig::default()
+    };
+    let mut pipe = Pipeline::new(
+        ds,
+        backend.as_ref(),
+        SimCluster::new(ClusterSpec::lncc()),
+        cfg,
+    );
+    let t0 = Instant::now();
+    let report = pipe
+        .run_slice(Method::Baseline, SLICE, TypeSet::Four)
+        .expect("slice run");
+    let secs = t0.elapsed().as_secs_f64();
+    (report, secs)
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let want_json = argv.iter().any(|a| a == "--json")
+        || std::env::var("PDFFLOW_BENCH_JSON").is_ok();
+
+    let root = std::env::temp_dir().join(format!("pdfflow-pipebench-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    // Enough windows (16) and observations to keep every thread fed.
+    let mut spec = DatasetSpec::tiny();
+    spec.dims = CubeDims::new(96, 64, 4);
+    spec.n_sims = 400;
+    spec.seed = 20180601;
+    let ds = SyntheticDataset::generate(&spec, root.join("data")).expect("dataset");
+    let n_windows = spec.dims.ny.div_ceil(4);
+    println!(
+        "== pipeline scaling bench: {} windows of {} points, {} observations ==",
+        n_windows,
+        4 * spec.dims.nx,
+        spec.n_sims
+    );
+    println!(
+        "{:<10} {:>10} {:>12} {:>10}",
+        "threads", "secs", "windows/s", "speedup"
+    );
+
+    // Warm-up run (page cache, allocator) outside measurement.
+    let _ = run_once(&ds, 1);
+
+    let mut rows = Vec::new();
+    let mut base_wps = 0.0;
+    let mut fingerprint: Option<(u64, usize)> = None;
+    for threads in THREADS {
+        let (report, secs) = run_once(&ds, threads);
+        let wps = n_windows as f64 / secs;
+        if threads == 1 {
+            base_wps = wps;
+        }
+        let speedup = wps / base_wps.max(1e-12);
+        println!("{threads:<10} {secs:>10.3} {wps:>12.1} {speedup:>9.2}x");
+        // Scaling must never change results: same error bits, same fits.
+        let fp = (report.avg_error.to_bits(), report.fits);
+        match fingerprint {
+            None => fingerprint = Some(fp),
+            Some(base) => assert_eq!(fp, base, "results diverged at {threads} threads"),
+        }
+        rows.push((threads, secs, wps, speedup));
+    }
+    println!("(reports identical across all thread counts)");
+
+    if want_json {
+        let entries: Vec<Json> = rows
+            .iter()
+            .map(|(threads, secs, wps, speedup)| {
+                Json::obj(vec![
+                    ("threads", Json::Num(*threads as f64)),
+                    ("secs", Json::Num(*secs)),
+                    ("windows_per_s", Json::Num(*wps)),
+                    ("speedup_vs_1", Json::Num(*speedup)),
+                ])
+            })
+            .collect();
+        let (err_bits, fits) = fingerprint.expect("at least one run");
+        let doc = Json::obj(vec![
+            ("bench", Json::Str("pipeline".into())),
+            ("windows", Json::Num(n_windows as f64)),
+            ("observations", Json::Num(spec.n_sims as f64)),
+            ("rows", Json::Arr(entries)),
+            (
+                "fingerprint",
+                Json::obj(vec![
+                    ("avg_error_bits", Json::Str(format!("{err_bits:016x}"))),
+                    ("fits", Json::Num(fits as f64)),
+                ]),
+            ),
+        ]);
+        std::fs::write("BENCH_pipeline.json", doc.to_string()).expect("write BENCH_pipeline.json");
+        println!("wrote BENCH_pipeline.json");
+    }
+
+    let _ = std::fs::remove_dir_all(&root);
+}

@@ -364,11 +364,11 @@ impl BenchEnv {
         for n in self.node_counts() {
             let reader = DatasetReader::new(&ds);
             let cache = WindowCache::new(0); // cold: no caching
-            let mut cluster = SimCluster::new(ClusterSpec::g5k(n));
+            let cluster = SimCluster::new(ClusterSpec::g5k(n));
             let mut real = 0.0;
             for w in ds.spec.dims.windows(cfg.slice, cfg.pipeline.window_lines) {
                 let lw = crate::coordinator::loader::load_window(
-                    &reader, &cache, self.backend.as_ref(), &mut cluster, w,
+                    &reader, &cache, self.backend.as_ref(), &cluster, w,
                 )?;
                 real += lw.real_s;
             }
@@ -463,12 +463,12 @@ impl BenchEnv {
         let reader = DatasetReader::new(&ds);
         let cache = WindowCache::new(512 << 20);
         for rate in self.sampling_rates(sampler) {
-            let mut cluster = SimCluster::new(ClusterSpec::lncc());
+            let cluster = SimCluster::new(ClusterSpec::lncc());
             let rep = run_sampling(
                 &reader,
                 &cache,
                 self.backend.as_ref(),
-                &mut cluster,
+                &cluster,
                 &tree,
                 cfg.slice,
                 rate,
@@ -501,15 +501,15 @@ impl BenchEnv {
         let tree = pipe.tree.clone().unwrap();
         let reader = DatasetReader::new(&ds);
         let cache = WindowCache::new(512 << 20);
-        let mut cluster = SimCluster::new(ClusterSpec::lncc());
-        let full = full_slice_features(&reader, &cache, self.backend.as_ref(), &mut cluster, &tree, cfg.slice)?;
+        let cluster = SimCluster::new(ClusterSpec::lncc());
+        let full = full_slice_features(&reader, &cache, self.backend.as_ref(), &cluster, &tree, cfg.slice)?;
         self.header("fig17", "Euclidean distance of type percentages vs all points");
         println!("{:<8} {:>12} {:>12}", "rate", "random", "kmeans");
         for rate in [0.05, 0.1, 0.2, 0.4, 0.6, 0.8] {
             let mut d = [0.0f64; 2];
             for (i, sampler) in [Sampler::Random, Sampler::KMeans].into_iter().enumerate() {
                 let rep = run_sampling(
-                    &reader, &cache, self.backend.as_ref(), &mut cluster, &tree, cfg.slice, rate, sampler, 42,
+                    &reader, &cache, self.backend.as_ref(), &cluster, &tree, cfg.slice, rate, sampler, 42,
                 )?;
                 d[i] = rep.features.type_distance(&full);
             }
@@ -572,12 +572,12 @@ impl BenchEnv {
         pipe.ensure_tree(cfg.train_slice, TypeSet::Four, 25_000)?;
         let tree = pipe.tree.clone().unwrap();
         for n in [30usize, 60] {
-            let mut cluster = SimCluster::new(ClusterSpec::g5k(n));
+            let cluster = SimCluster::new(ClusterSpec::g5k(n));
             let mut total = 0.0;
             let rates = [0.001, 0.01, 0.1, 1.0];
             for r in rates {
                 let rep = run_sampling(
-                    &reader, &cache, self.backend.as_ref(), &mut cluster, &tree, cfg.slice, r,
+                    &reader, &cache, self.backend.as_ref(), &cluster, &tree, cfg.slice, r,
                     Sampler::Random, 42,
                 )?;
                 total += rep.compute_sim_s;
@@ -677,7 +677,7 @@ impl BenchEnv {
             let ds = self.dataset(&cfg)?;
             let reader = DatasetReader::new(&ds);
             let cache = WindowCache::new(512 << 20);
-            let mut cluster = SimCluster::new(ClusterSpec::lncc());
+            let cluster = SimCluster::new(ClusterSpec::lncc());
             for types in [TypeSet::Four, TypeSet::Ten] {
                 let slices = mlmodel::training_slices(
                     &ds.spec.dims,
@@ -688,7 +688,7 @@ impl BenchEnv {
                     &reader,
                     &cache,
                     self.backend.as_ref(),
-                    &mut cluster,
+                    &cluster,
                     &ds.spec.dims,
                     &slices,
                     types,

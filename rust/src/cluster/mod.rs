@@ -17,9 +17,14 @@
 //!   bottleneck at high node counts or big observation vectors).
 //!
 //! Every charge is recorded in a named ledger so reports can show the
-//! simulated-time breakdown next to real wall-clock.
+//! simulated-time breakdown next to real wall-clock. The ledger is
+//! internally synchronized (a mutexed map behind `&self` methods), so
+//! one `SimCluster` can be shared by every parallel task of a stage —
+//! loader, methods, RDD shuffles and persist sinks all charge the same
+//! session without threading `&mut` through the call graph.
 
 use std::collections::BTreeMap;
+use std::sync::Mutex;
 
 /// Static description of a cluster (paper §6.1 testbeds).
 #[derive(Clone, Debug)]
@@ -124,30 +129,59 @@ impl ClusterSpec {
     }
 }
 
-/// A cluster simulation session: spec + simulated-time ledger.
-#[derive(Clone, Debug)]
+/// A cluster simulation session: spec + simulated-time ledger. The
+/// ledger is an internally synchronized accounts map: every charge
+/// method takes `&self`, so a shared `&SimCluster` serves concurrent
+/// tasks (accounts are commutative sums).
+#[derive(Debug)]
 pub struct SimCluster {
     pub spec: ClusterSpec,
-    ledger: BTreeMap<String, f64>,
+    ledger: Mutex<BTreeMap<String, f64>>,
+}
+
+impl Clone for SimCluster {
+    fn clone(&self) -> SimCluster {
+        SimCluster {
+            spec: self.spec.clone(),
+            ledger: Mutex::new(self.ledger.lock().unwrap().clone()),
+        }
+    }
 }
 
 impl SimCluster {
     pub fn new(spec: ClusterSpec) -> SimCluster {
         SimCluster {
             spec,
-            ledger: BTreeMap::new(),
+            ledger: Mutex::new(BTreeMap::new()),
         }
     }
 
-    fn charge(&mut self, account: &str, seconds: f64) -> f64 {
-        *self.ledger.entry(account.to_string()).or_insert(0.0) += seconds;
+    fn charge(&self, account: &str, seconds: f64) -> f64 {
+        *self
+            .ledger
+            .lock()
+            .unwrap()
+            .entry(account.to_string())
+            .or_insert(0.0) += seconds;
         seconds
+    }
+
+    /// Fold another session's ledger into this one (account-wise sums).
+    /// The window pipeline charges each window against a private scratch
+    /// cluster and merges the scratches in window order, which keeps the
+    /// shared ledger identical at any executor thread count.
+    pub fn merge(&self, other: &SimCluster) {
+        let other = other.ledger.lock().unwrap().clone();
+        let mut g = self.ledger.lock().unwrap();
+        for (k, v) in other {
+            *g.entry(k).or_insert(0.0) += v;
+        }
     }
 
     /// Simulated makespan of running `task_costs` (seconds each, as
     /// measured on this machine per task) on the cluster: LPT greedy onto
     /// `nodes*cores` slots plus per-task overhead. Returns stage seconds.
-    pub fn run_stage(&mut self, account: &str, task_costs: &[f64]) -> f64 {
+    pub fn run_stage(&self, account: &str, task_costs: &[f64]) -> f64 {
         if task_costs.is_empty() {
             return 0.0;
         }
@@ -174,7 +208,7 @@ impl SimCluster {
 
     /// Simulated time to read `bytes` in `reads` positioned reads from the
     /// NFS server with all cluster slots streaming concurrently.
-    pub fn charge_nfs(&mut self, account: &str, bytes: u64, reads: u64) -> f64 {
+    pub fn charge_nfs(&self, account: &str, bytes: u64, reads: u64) -> f64 {
         let streams = self.spec.total_slots().max(1) as f64;
         let t = bytes as f64 / self.spec.nfs_bandwidth
             + (reads as f64 / streams) * self.spec.nfs_latency;
@@ -183,7 +217,7 @@ impl SimCluster {
 
     /// Simulated time to shuffle `bytes` across the cluster (aggregate-
     /// bandwidth volume term + per-node coordination term).
-    pub fn charge_shuffle(&mut self, account: &str, bytes: u64) -> f64 {
+    pub fn charge_shuffle(&self, account: &str, bytes: u64) -> f64 {
         let n = self.spec.nodes as f64;
         if self.spec.nodes <= 1 {
             return self.charge(account, 0.0);
@@ -207,12 +241,12 @@ impl SimCluster {
     /// from, so the persist path is charged with the same server model as
     /// [`Self::charge_nfs`]: aggregate-bandwidth volume term plus
     /// per-append latency amortized over concurrent writer streams.
-    pub fn charge_persist(&mut self, account: &str, bytes: u64, writes: u64) -> f64 {
+    pub fn charge_persist(&self, account: &str, bytes: u64, writes: u64) -> f64 {
         self.charge_nfs(account, bytes, writes)
     }
 
     /// Simulated time to broadcast `bytes` to every node (tree broadcast).
-    pub fn charge_broadcast(&mut self, account: &str, bytes: u64) -> f64 {
+    pub fn charge_broadcast(&self, account: &str, bytes: u64) -> f64 {
         let rounds = (self.spec.nodes as f64).log2().ceil().max(0.0);
         let t = rounds * (bytes as f64 / self.spec.link_bandwidth + 1e-3);
         self.charge(account, t)
@@ -220,21 +254,26 @@ impl SimCluster {
 
     /// Simulated seconds accumulated on one account.
     pub fn account(&self, account: &str) -> f64 {
-        self.ledger.get(account).copied().unwrap_or(0.0)
+        self.ledger.lock().unwrap().get(account).copied().unwrap_or(0.0)
     }
 
     /// Total simulated seconds across accounts.
     pub fn total(&self) -> f64 {
-        self.ledger.values().sum()
+        self.ledger.lock().unwrap().values().sum()
     }
 
     /// (account, seconds) pairs, sorted by account name.
     pub fn breakdown(&self) -> Vec<(String, f64)> {
-        self.ledger.iter().map(|(k, v)| (k.clone(), *v)).collect()
+        self.ledger
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), *v))
+            .collect()
     }
 
-    pub fn reset(&mut self) {
-        self.ledger.clear();
+    pub fn reset(&self) {
+        self.ledger.lock().unwrap().clear();
     }
 }
 
@@ -244,14 +283,14 @@ mod tests {
 
     #[test]
     fn lpt_parallelizes_perfectly_divisible_load() {
-        let mut c = SimCluster::new(ClusterSpec::local(4));
+        let c = SimCluster::new(ClusterSpec::local(4));
         let t = c.run_stage("compute", &[1.0; 8]);
         assert!((t - 2.0).abs() < 1e-9, "{t}");
     }
 
     #[test]
     fn lpt_single_big_task_dominates() {
-        let mut c = SimCluster::new(ClusterSpec::local(4));
+        let c = SimCluster::new(ClusterSpec::local(4));
         let t = c.run_stage("compute", &[10.0, 0.1, 0.1, 0.1]);
         assert!((t - 10.0).abs() < 1e-9);
     }
@@ -260,7 +299,7 @@ mod tests {
     fn task_overhead_is_charged() {
         let mut spec = ClusterSpec::local(1);
         spec.task_overhead = 0.5;
-        let mut c = SimCluster::new(spec);
+        let c = SimCluster::new(spec);
         let t = c.run_stage("compute", &[1.0, 1.0]);
         assert!((t - 3.0).abs() < 1e-9);
     }
@@ -286,7 +325,7 @@ mod tests {
     #[test]
     fn shuffle_volume_term_matters_for_big_payloads() {
         // Same node count, 10x the bytes ⇒ strictly more time (Set3 case).
-        let mut c = SimCluster::new(ClusterSpec::g5k(30));
+        let c = SimCluster::new(ClusterSpec::g5k(30));
         let t1 = c.charge_shuffle("s1", 1 << 30);
         let t10 = c.charge_shuffle("s2", 10 * (1 << 30) as u64);
         assert!(t10 > t1 * 3.0);
@@ -294,13 +333,13 @@ mod tests {
 
     #[test]
     fn single_node_shuffle_is_free() {
-        let mut c = SimCluster::new(ClusterSpec::local(8));
+        let c = SimCluster::new(ClusterSpec::local(8));
         assert_eq!(c.charge_shuffle("s", 1 << 30), 0.0);
     }
 
     #[test]
     fn nfs_time_scales_with_bytes_and_reads() {
-        let mut c = SimCluster::new(ClusterSpec::lncc());
+        let c = SimCluster::new(ClusterSpec::lncc());
         let t_small = c.charge_nfs("a", 1 << 20, 100);
         let t_big = c.charge_nfs("b", 1 << 30, 100_000);
         assert!(t_big > t_small * 100.0);
@@ -308,20 +347,20 @@ mod tests {
 
     #[test]
     fn persist_time_scales_with_bytes_like_nfs() {
-        let mut c = SimCluster::new(ClusterSpec::lncc());
+        let c = SimCluster::new(ClusterSpec::lncc());
         let t_small = c.charge_persist("p1", 1 << 20, 10);
         let t_big = c.charge_persist("p2", 1 << 30, 10);
         assert!(t_big > t_small * 100.0, "{t_big} vs {t_small}");
         assert!(c.account("p1") > 0.0 && c.account("p2") > 0.0);
         // Same server model as reads: identical bytes/reads cost the same.
-        let mut c2 = SimCluster::new(ClusterSpec::lncc());
+        let c2 = SimCluster::new(ClusterSpec::lncc());
         let read = c2.charge_nfs("r", 1 << 20, 10);
         assert!((read - t_small).abs() < 1e-15);
     }
 
     #[test]
     fn ledger_accumulates_and_resets() {
-        let mut c = SimCluster::new(ClusterSpec::lncc());
+        let c = SimCluster::new(ClusterSpec::lncc());
         c.run_stage("compute", &[1.0]);
         c.charge_nfs("load", 1 << 20, 10);
         assert!(c.account("compute") > 0.0);
@@ -330,6 +369,37 @@ mod tests {
         assert_eq!(c.breakdown().len(), 2);
         c.reset();
         assert_eq!(c.total(), 0.0);
+    }
+
+    #[test]
+    fn merge_folds_accounts_additively() {
+        let a = SimCluster::new(ClusterSpec::local(2));
+        let b = SimCluster::new(ClusterSpec::local(2));
+        a.run_stage("compute", &[1.0]);
+        b.run_stage("compute", &[2.0]);
+        b.charge_nfs("load", 1 << 20, 4);
+        a.merge(&b);
+        assert!((a.account("compute") - 3.0).abs() < 1e-12);
+        assert_eq!(a.account("load"), b.account("load"));
+        // b is untouched by the merge.
+        assert!((b.account("compute") - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shared_reference_charges_from_many_threads() {
+        let c = SimCluster::new(ClusterSpec::local(4));
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                scope.spawn(|| {
+                    for _ in 0..100 {
+                        c.charge_nfs("load", 1 << 10, 1);
+                    }
+                });
+            }
+        });
+        // 800 identical charges, each a pure function of (bytes, reads).
+        let one = SimCluster::new(ClusterSpec::local(4)).charge_nfs("load", 1 << 10, 1);
+        assert!((c.account("load") - 800.0 * one).abs() < 1e-9);
     }
 
     #[test]

@@ -30,6 +30,16 @@ pub struct PipelineConfig {
     pub group_quantum: f64,
     /// Host threads for loading/compute.
     pub workers: usize,
+    /// Driver executor width: how many windows (and RDD partition tasks)
+    /// may be in flight at once. Results are thread-count invariant —
+    /// this knob only trades wall-clock for cores. It composes
+    /// *multiplicatively* with `workers` (the backend's inner batch
+    /// pool): in-flight windows each run backend fits, so on a fully
+    /// loaded host lower one knob when raising the other (the scaling
+    /// bench pins `workers = 1`). Precedence: `--executor-threads` CLI
+    /// flag > `pipeline.executor_threads` config key >
+    /// `PDFFLOW_EXECUTOR_THREADS` env > all host cores.
+    pub executor_threads: usize,
     /// When set, per-slice fit outcomes are persisted here (Algorithm 1
     /// line 11) as legacy flat `.pdfout` files.
     pub persist_dir: Option<String>,
@@ -51,6 +61,7 @@ impl Default for PipelineConfig {
             cache_bytes: 512 << 20,
             group_quantum: 1e-6,
             workers: crate::util::pool::default_workers(),
+            executor_threads: crate::executor::default_threads(),
             persist_dir: None,
             store_dir: None,
             query_cache_bytes: 64 << 20,
@@ -214,6 +225,9 @@ impl ExperimentConfig {
         cfg.pipeline.batch = doc.usize_or("pipeline.batch", cfg.pipeline.batch);
         cfg.pipeline.bins = doc.usize_or("pipeline.bins", cfg.pipeline.bins);
         cfg.pipeline.workers = doc.usize_or("pipeline.workers", cfg.pipeline.workers);
+        cfg.pipeline.executor_threads = doc
+            .usize_or("pipeline.executor_threads", cfg.pipeline.executor_threads)
+            .max(1);
         cfg.pipeline.group_quantum = doc.f64_or("pipeline.group_quantum", cfg.pipeline.group_quantum);
         cfg.pipeline.cache_bytes = doc.i64_or("pipeline.cache_bytes", cfg.pipeline.cache_bytes as i64) as u64;
         if let Some(p) = doc.get("pipeline.partitions").and_then(|v| v.as_i64()) {
@@ -310,6 +324,31 @@ batch = 64
         let d = ExperimentConfig::small();
         assert!(d.pipeline.store_dir.is_none());
         assert_eq!(d.pipeline.query_cache_bytes, 64 << 20);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn executor_threads_key_parses_and_defaults() {
+        let dir = std::env::temp_dir().join(format!("pdfflow-cfg5-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("exec.toml");
+        std::fs::write(
+            &path,
+            "preset = \"small\"\n[pipeline]\nexecutor_threads = 3\n",
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_file(&path).unwrap();
+        assert_eq!(c.pipeline.executor_threads, 3);
+        // A zero in the file clamps to 1 (a stage always makes progress).
+        std::fs::write(
+            &path,
+            "preset = \"small\"\n[pipeline]\nexecutor_threads = 0\n",
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_file(&path).unwrap();
+        assert_eq!(c.pipeline.executor_threads, 1);
+        // Default: at least one thread, no env assumption.
+        assert!(ExperimentConfig::small().pipeline.executor_threads >= 1);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

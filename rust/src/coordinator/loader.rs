@@ -46,12 +46,15 @@ impl LoadedWindow {
     }
 }
 
-/// Load one window (Algorithm 2), consulting the cache first.
+/// Load one window (Algorithm 2), consulting the cache first. Takes the
+/// cluster by shared reference — the ledger is internally synchronized,
+/// so concurrent window tasks can all charge the same session (the
+/// pipeline passes a per-window scratch to keep `sim_s` attributable).
 pub fn load_window(
     reader: &DatasetReader,
     cache: &WindowCache,
     backend: &dyn Backend,
-    cluster: &mut SimCluster,
+    cluster: &SimCluster,
     window: Window,
 ) -> Result<LoadedWindow> {
     let t0 = Instant::now();
@@ -123,9 +126,9 @@ mod tests {
         let (ds, dir, backend) = setup("basic");
         let reader = DatasetReader::new(&ds);
         let cache = WindowCache::new(64 << 20);
-        let mut cluster = SimCluster::new(ClusterSpec::lncc());
+        let cluster = SimCluster::new(ClusterSpec::lncc());
         let w = Window { z: 2, y0: 0, lines: 2 };
-        let lw = load_window(&reader, &cache, &backend, &mut cluster, w).unwrap();
+        let lw = load_window(&reader, &cache, &backend, &cluster, w).unwrap();
         assert_eq!(lw.n_points(), 2 * ds.spec.dims.nx);
         assert!(!lw.cache_hit);
         assert!(lw.real_s > 0.0 && lw.sim_s > 0.0);
@@ -142,11 +145,11 @@ mod tests {
         let (ds, dir, backend) = setup("cache");
         let reader = DatasetReader::new(&ds);
         let cache = WindowCache::new(64 << 20);
-        let mut cluster = SimCluster::new(ClusterSpec::lncc());
+        let cluster = SimCluster::new(ClusterSpec::lncc());
         let w = Window { z: 1, y0: 2, lines: 2 };
-        load_window(&reader, &cache, &backend, &mut cluster, w).unwrap();
+        load_window(&reader, &cache, &backend, &cluster, w).unwrap();
         let nfs_after_first = cluster.account("load.nfs");
-        let lw2 = load_window(&reader, &cache, &backend, &mut cluster, w).unwrap();
+        let lw2 = load_window(&reader, &cache, &backend, &cluster, w).unwrap();
         assert!(lw2.cache_hit);
         assert_eq!(cluster.account("load.nfs"), nfs_after_first);
         std::fs::remove_dir_all(&dir).unwrap();

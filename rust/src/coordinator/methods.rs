@@ -10,10 +10,13 @@
 //! kernels — exactly the paper's design space.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::cluster::SimCluster;
 use crate::coordinator::loader::LoadedWindow;
+use crate::executor::Executor;
 use crate::mltree::DecisionTree;
 use crate::rdd::Rdd;
 use crate::runtime::Backend;
@@ -130,20 +133,46 @@ impl FitOutcome {
 }
 
 /// Cross-window reuse cache (§5.2.1): quantized (mean, std) → outcome.
+/// Internally synchronized (mutexed map + atomic meters) so a shared
+/// `&ReuseCache` can cross window-task boundaries; the *pipeline* still
+/// serializes reuse-method fits in window order, because whether window
+/// N+1 hits depends on window N having fitted first.
 #[derive(Debug, Default)]
 pub struct ReuseCache {
-    map: HashMap<(i64, i64), FitOutcome>,
-    pub lookups: u64,
-    pub hits: u64,
+    map: Mutex<HashMap<(i64, i64), FitOutcome>>,
+    lookups: AtomicU64,
+    hits: AtomicU64,
 }
 
 impl ReuseCache {
     pub fn len(&self) -> usize {
-        self.map.len()
+        self.map.lock().unwrap().len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.map.is_empty()
+        self.map.lock().unwrap().is_empty()
+    }
+
+    /// Metered lookup (counts the lookup, and the hit when found).
+    pub fn lookup(&self, key: &(i64, i64)) -> Option<FitOutcome> {
+        self.lookups.fetch_add(1, Ordering::Relaxed);
+        let hit = self.map.lock().unwrap().get(key).copied();
+        if hit.is_some() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    pub fn insert(&self, key: (i64, i64), outcome: FitOutcome) {
+        self.map.lock().unwrap().insert(key, outcome);
+    }
+
+    pub fn lookups(&self) -> u64 {
+        self.lookups.load(Ordering::Relaxed)
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
     }
 }
 
@@ -177,13 +206,15 @@ pub struct Group {
     pub members: Vec<usize>,
 }
 
-/// Group the window's points with the Spark `aggregateByKey` analog;
-/// returns groups plus the shuffled-byte count charged to the cluster.
+/// Group the window's points with the Spark `aggregateByKey` analog
+/// (partition tasks submitted to `exec`); returns groups plus the
+/// shuffled-byte count charged to the cluster.
 pub fn group_points(
     lw: &LoadedWindow,
     quantum: f64,
     partitions: usize,
-    cluster: &mut SimCluster,
+    exec: &Executor,
+    cluster: &SimCluster,
 ) -> (Vec<Group>, u64) {
     let n = lw.n_points();
     let obs_row_bytes = (lw.obs.n_obs * 4) as u64;
@@ -196,6 +227,7 @@ pub fn group_points(
     let rdd = Rdd::from_vec(items, partitions.max(1));
     let (grouped, shuffle_bytes) = rdd.aggregate_by_key(
         partitions.max(1),
+        exec,
         cluster,
         "fit.shuffle",
         |p| vec![p],
@@ -207,7 +239,7 @@ pub fn group_points(
         |_k, c| obs_row_bytes + 16 * c.len() as u64,
     );
     let mut groups: Vec<Group> = grouped
-        .collect()
+        .collect(exec)
         .into_iter()
         .map(|(key, mut members)| {
             members.sort_unstable();
@@ -239,7 +271,7 @@ fn gather_rows(lw: &LoadedWindow, idx: &[usize]) -> Vec<f32> {
 /// external-fitter price per candidate type plus this host's real
 /// per-point share of the AOT execution.
 fn charge_fit_stage(
-    cluster: &mut SimCluster,
+    cluster: &SimCluster,
     n_points: usize,
     types_fitted: usize,
     real_s: f64,
@@ -256,7 +288,7 @@ fn charge_fit_stage(
 /// charging the simulated stage.
 fn fit_all_points(
     backend: &dyn Backend,
-    cluster: &mut SimCluster,
+    cluster: &SimCluster,
     lw: &LoadedWindow,
     idx: &[usize],
     types: TypeSet,
@@ -279,7 +311,7 @@ fn fit_all_points(
 /// (Algorithm 4). Returns outcomes aligned with `idx` order.
 fn fit_ml_points(
     backend: &dyn Backend,
-    cluster: &mut SimCluster,
+    cluster: &SimCluster,
     lw: &LoadedWindow,
     idx: &[usize],
     types: TypeSet,
@@ -329,14 +361,21 @@ fn fit_ml_points(
 }
 
 /// Fit one loaded window with the chosen method (Algorithm 1 body).
+///
+/// `cluster` should be this window's *scratch* session when windows run
+/// concurrently: `sim_s` is derived from the ledger delta, so sharing a
+/// ledger across in-flight windows would cross-charge them. The pipeline
+/// merges scratches in window order afterwards.
+#[allow(clippy::too_many_arguments)]
 pub fn fit_window(
     backend: &dyn Backend,
-    cluster: &mut SimCluster,
+    cluster: &SimCluster,
+    exec: &Executor,
     method: Method,
     types: TypeSet,
     lw: &LoadedWindow,
     tree: Option<&DecisionTree>,
-    reuse: &mut ReuseCache,
+    reuse: &ReuseCache,
     quantum: f64,
     partitions: usize,
 ) -> Result<WindowFit> {
@@ -361,17 +400,15 @@ pub fn fit_window(
         (outs, n, n, 0, 0)
     } else {
         // Grouping / Reuse (± ML): aggregate, fit representatives only.
-        let (groups, shuffle_bytes) = group_points(lw, quantum, partitions, cluster);
+        let (groups, shuffle_bytes) = group_points(lw, quantum, partitions, exec, cluster);
         let mut rep_outcomes: Vec<Option<FitOutcome>> = vec![None; groups.len()];
         let mut to_fit: Vec<usize> = Vec::new(); // group indices
         let mut hits = 0usize;
         if method.uses_reuse() {
             for (gi, g) in groups.iter().enumerate() {
-                reuse.lookups += 1;
-                if let Some(hit) = reuse.map.get(&g.key) {
-                    reuse.hits += 1;
+                if let Some(hit) = reuse.lookup(&g.key) {
                     hits += 1;
-                    rep_outcomes[gi] = Some(*hit);
+                    rep_outcomes[gi] = Some(hit);
                 } else {
                     to_fit.push(gi);
                 }
@@ -389,7 +426,7 @@ pub fn fit_window(
         for (i, &gi) in to_fit.iter().enumerate() {
             rep_outcomes[gi] = Some(fitted[i]);
             if method.uses_reuse() {
-                reuse.map.insert(groups[gi].key, fitted[i]);
+                reuse.insert(groups[gi].key, fitted[i]);
             }
         }
         if method.uses_reuse() && !to_fit.is_empty() {

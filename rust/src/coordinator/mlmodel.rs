@@ -52,7 +52,7 @@ pub fn build_training_data(
     reader: &DatasetReader,
     cache: &WindowCache,
     backend: &dyn Backend,
-    cluster: &mut SimCluster,
+    cluster: &SimCluster,
     dims: &CubeDims,
     train_slices: &[usize],
     types: TypeSet,

@@ -4,8 +4,10 @@
 //!   per-point statistics (the stats HLO artifact) and window caching;
 //! * [`methods`] — the five PDF-computation methods and combinations:
 //!   Baseline / Grouping / Reuse / ML (± ML), Algorithm 1/3/4 bodies;
-//! * [`pipeline`] — the window driver: load → select → fit → persist →
-//!   aggregate the slice error E, with real + simulated clocks;
+//! * [`pipeline`] — the window driver: windows pipelined through the
+//!   staged [`crate::executor`] (load → select → fit as parallel tasks,
+//!   persist through the sequenced sink) → aggregate the slice error E,
+//!   with real + simulated clocks;
 //! * [`sampling`] — Algorithm 5: slice features from sampled points;
 //! * [`mlmodel`] — training the decision tree from "previously generated
 //!   output data" (paper §5.3.1).

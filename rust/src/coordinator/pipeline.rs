@@ -1,27 +1,40 @@
 //! Algorithm 1: the sliding-window pipeline driver.
 //!
-//! `Pipeline::run_slice` walks the slice window by window: load
-//! (Algorithm 2) → method-specific select + fit (Algorithms 3/4) →
-//! persist → aggregate the average error E (Eq. 6). Both clocks — real
-//! wall-clock on this host and simulated cluster time — are reported per
-//! phase, which is how the paper's figures separate "data loading" from
-//! "PDF computation".
+//! `Pipeline::run_slice` pipelines the slice's windows through the
+//! staged [`crate::executor`]: each window is one task (load, Algorithm
+//! 2, then — for non-reuse methods — method-specific select + fit,
+//! Algorithms 3/4), up to `executor_threads` windows in flight at once.
+//! Results flow through the executor's *sequenced sink*, so persist
+//! (Algorithm 1 line 11) always appends windows in slice order, and
+//! every result-derived value — outcomes, errors, fit/group/shuffle
+//! counts, persisted bytes, byte-derived sim accounts (nfs / shuffle /
+//! persist) — is identical at any thread count. (The `*_sim_s` stage
+//! columns fed by *measured* wall-clock, like `fit.compute`, vary run
+//! to run the way any timing does.) Reuse-method fits stay in the
+//! ordered sink (window N+1's cache hits depend on window N having
+//! fitted), so only their loads overlap. Every window charges a
+//! private scratch [`SimCluster`] merged in window order — both clocks —
+//! real wall-clock on this host and simulated cluster time — stay
+//! attributable per phase, which is how the paper's figures separate
+//! "data loading" from "PDF computation".
 //!
 //! Persistence has two sinks: the legacy flat `.pdfout` file
 //! (`persist_dir`) and the indexed, queryable [`crate::pdfstore`] store
-//! (`store_dir`) that `pdfflow query` serves from. Persisted bytes are
-//! charged to the simulated cluster like any other data path
-//! (`persist.nfs` account) and reported per window/slice.
+//! (`store_dir`) that `pdfflow query` serves from — both write through
+//! the [`crate::pdfstore::PdfRecord`] codec, so their bytes cannot
+//! drift. Persisted bytes are charged to the simulated cluster like any
+//! other data path (`persist.nfs` account) and reported per window/slice.
 
 use crate::cluster::SimCluster;
 use crate::config::PipelineConfig;
-use crate::coordinator::loader;
-use crate::coordinator::methods::{self, FitOutcome, Method, ReuseCache, TypeSet};
+use crate::coordinator::loader::{self, LoadedWindow};
+use crate::coordinator::methods::{self, FitOutcome, Method, ReuseCache, TypeSet, WindowFit};
 use crate::coordinator::mlmodel;
 use crate::cube::Window;
 use crate::datagen::SyntheticDataset;
+use crate::executor::Executor;
 use crate::mltree::DecisionTree;
-use crate::pdfstore::{SegmentWriter, StoreWriter, REC_LEN};
+use crate::pdfstore::{PdfRecord, SegmentWriter, StoreWriter, REC_LEN};
 use crate::runtime::Backend;
 use crate::storage::{CacheStats, DatasetReader, WindowCache};
 use crate::{PdfflowError, Result};
@@ -173,7 +186,7 @@ impl<'a> Pipeline<'a> {
         let dims = self.reader.dataset().spec.dims;
         // Tree generation runs outside the measured pipeline: use a scratch
         // cluster so its charges don't pollute the experiment ledger.
-        let mut scratch = SimCluster::new(self.cluster.spec.clone());
+        let scratch = SimCluster::new(self.cluster.spec.clone());
         let slices = mlmodel::training_slices(
             &dims,
             train_slice,
@@ -183,7 +196,7 @@ impl<'a> Pipeline<'a> {
             &self.reader,
             &self.cache,
             self.backend,
-            &mut scratch,
+            &scratch,
             &dims,
             &slices,
             types,
@@ -255,62 +268,123 @@ impl<'a> Pipeline<'a> {
         self.reuse = ReuseCache::default();
         let partitions = self.partitions();
         let quantum = self.cfg.group_quantum;
-        let mut reports = Vec::with_capacity(windows.len());
         let mut persist = self.open_persist(method, types, slice)?;
         let mut segment = self.open_store_segment(method, types, slice)?;
-        for window in windows {
-            let lw = loader::load_window(
-                &self.reader,
-                &self.cache,
-                self.backend,
-                &mut self.cluster,
-                window,
-            )?;
-            let fit = methods::fit_window(
-                self.backend,
-                &mut self.cluster,
-                method,
-                types,
-                &lw,
-                self.tree.as_ref(),
-                &mut self.reuse,
-                quantum,
-                partitions,
-            )?;
-            let mut persist_bytes = 0u64;
-            if let Some(f) = persist.as_mut() {
-                persist_bytes += persist_window(f, &lw.obs.point_ids, &fit.outcomes)?;
-            }
-            if let Some(sw) = segment.as_mut() {
-                persist_bytes += sw.append_window(&window, &lw.obs.point_ids, &fit.outcomes)?;
-            }
-            // Persisted output travels back to the shared store: charge it
-            // like any other data path (one append batch per sink).
-            let persist_sim_s = if persist_bytes > 0 {
-                let sinks = persist.is_some() as u64 + segment.is_some() as u64;
-                self.cluster
-                    .charge_persist("persist.nfs", persist_bytes, sinks)
-            } else {
-                0.0
-            };
-            let err_sum: f64 = fit.outcomes.iter().map(|o| o.error as f64).sum();
-            reports.push(WindowReport {
-                window,
-                n_points: lw.n_points(),
-                groups: fit.groups,
-                fits: fit.fits,
-                reuse_hits: fit.reuse_hits,
-                shuffle_bytes: fit.shuffle_bytes,
-                cache_hit: lw.cache_hit,
-                persist_bytes,
-                persist_sim_s,
-                load_real_s: lw.real_s,
-                load_sim_s: lw.sim_s,
-                fit_real_s: fit.real_s,
-                fit_sim_s: fit.sim_s,
-                err_sum,
-            });
+        let mut reports: Vec<WindowReport> = Vec::with_capacity(windows.len());
+
+        // Stage split: worker tasks share the pipeline's read side, the
+        // sequenced sink owns the write side (ordered persist, report
+        // vector, shared-ledger merge).
+        let exec = Executor::new(self.cfg.executor_threads);
+        let exec_ref = &exec;
+        let reader = &self.reader;
+        let cache = &self.cache;
+        let backend = self.backend;
+        let tree = self.tree.as_ref();
+        let reuse = &self.reuse;
+        let cluster = &self.cluster;
+        let spec = cluster.spec.clone();
+        // Reuse-method fits must see windows in order (window N seeds
+        // window N+1's cache); other methods fit inside the parallel task.
+        let fit_in_task = !method.uses_reuse();
+
+        /// One window's parallel-stage output, en route to the sink.
+        struct Staged {
+            window: Window,
+            lw: LoadedWindow,
+            fit: Option<WindowFit>,
+            /// Private ledger: everything this window charged.
+            scratch: SimCluster,
         }
+
+        exec.run_sequenced(
+            windows,
+            |window| -> Result<Staged> {
+                let scratch = SimCluster::new(spec.clone());
+                let lw = loader::load_window(reader, cache, backend, &scratch, window)?;
+                let fit = if fit_in_task {
+                    // Window-level parallelism already fills the executor
+                    // budget, so the nested RDD stages run sequentially.
+                    // The backend's own pool (`cfg.workers`) still
+                    // composes multiplicatively with in-flight windows —
+                    // lower one knob when raising the other on a loaded
+                    // host (the scaling bench pins workers = 1).
+                    Some(methods::fit_window(
+                        backend,
+                        &scratch,
+                        &Executor::sequential(),
+                        method,
+                        types,
+                        &lw,
+                        tree,
+                        reuse,
+                        quantum,
+                        partitions,
+                    )?)
+                } else {
+                    None
+                };
+                Ok(Staged {
+                    window,
+                    lw,
+                    fit,
+                    scratch,
+                })
+            },
+            |_idx, staged| {
+                let Staged {
+                    window,
+                    lw,
+                    fit,
+                    scratch,
+                } = staged;
+                let fit = match fit {
+                    Some(fit) => fit,
+                    None => methods::fit_window(
+                        backend, &scratch, exec_ref, method, types, &lw, tree, reuse,
+                        quantum, partitions,
+                    )?,
+                };
+                let mut persist_bytes = 0u64;
+                if let Some(f) = persist.as_mut() {
+                    persist_bytes += persist_window(f, &lw.obs.point_ids, &fit.outcomes)?;
+                }
+                if let Some(sw) = segment.as_mut() {
+                    persist_bytes +=
+                        sw.append_window(&window, &lw.obs.point_ids, &fit.outcomes)?;
+                }
+                // Persisted output travels back to the shared store: charge
+                // it like any other data path (one append batch per sink).
+                let persist_sim_s = if persist_bytes > 0 {
+                    let sinks = persist.is_some() as u64 + segment.is_some() as u64;
+                    scratch.charge_persist("persist.nfs", persist_bytes, sinks)
+                } else {
+                    0.0
+                };
+                // Window-order merge: byte-derived ledger accounts end up
+                // identical at any executor thread count (time-derived
+                // stage accounts vary with measured wall-clock, as ever).
+                cluster.merge(&scratch);
+                let err_sum: f64 = fit.outcomes.iter().map(|o| o.error as f64).sum();
+                reports.push(WindowReport {
+                    window,
+                    n_points: lw.n_points(),
+                    groups: fit.groups,
+                    fits: fit.fits,
+                    reuse_hits: fit.reuse_hits,
+                    shuffle_bytes: fit.shuffle_bytes,
+                    cache_hit: lw.cache_hit,
+                    persist_bytes,
+                    persist_sim_s,
+                    load_real_s: lw.real_s,
+                    load_sim_s: lw.sim_s,
+                    fit_real_s: fit.real_s,
+                    fit_sim_s: fit.sim_s,
+                    err_sum,
+                });
+                Ok(())
+            },
+        )?;
         if let Some(sw) = segment {
             let meta = sw.finish()?;
             self.store
@@ -398,13 +472,14 @@ impl<'a> Pipeline<'a> {
     }
 
     pub fn reuse_stats(&self) -> (u64, u64, usize) {
-        (self.reuse.lookups, self.reuse.hits, self.reuse.len())
+        (self.reuse.lookups(), self.reuse.hits(), self.reuse.len())
     }
 }
 
-/// Persist one window's outcomes as legacy flat rows of
-/// (point_id u64, type u32, error f32, p0..p2 f32) — Algorithm 1 line 11.
-/// Bit-identical to the pdfstore record encoding; returns bytes written.
+/// Persist one window's outcomes as legacy flat rows — Algorithm 1 line
+/// 11. Rows go through the [`PdfRecord`] codec (the same 28-byte wire
+/// form the pdfstore segments use), so the two persist sinks cannot
+/// drift; returns bytes written.
 fn persist_window(
     f: &mut impl std::io::Write,
     ids: &[crate::cube::PointId],
@@ -417,13 +492,16 @@ fn persist_window(
             outcomes.len()
         )));
     }
+    let mut buf = [0u8; REC_LEN];
     for (id, o) in ids.iter().zip(outcomes) {
-        f.write_all(&id.0.to_le_bytes())?;
-        f.write_all(&(o.dist.id() as u32).to_le_bytes())?;
-        f.write_all(&o.error.to_le_bytes())?;
-        for p in o.params {
-            f.write_all(&p.to_le_bytes())?;
+        PdfRecord {
+            point: *id,
+            dist: o.dist,
+            error: o.error,
+            params: o.params,
         }
+        .encode(&mut buf);
+        f.write_all(&buf)?;
     }
     Ok((ids.len() * REC_LEN) as u64)
 }

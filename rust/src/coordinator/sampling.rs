@@ -56,7 +56,7 @@ pub fn run_sampling(
     reader: &DatasetReader,
     cache: &WindowCache,
     backend: &dyn Backend,
-    cluster: &mut SimCluster,
+    cluster: &SimCluster,
     tree: &DecisionTree,
     z: usize,
     rate: f64,
@@ -156,7 +156,7 @@ pub fn full_slice_features(
     reader: &DatasetReader,
     cache: &WindowCache,
     backend: &dyn Backend,
-    cluster: &mut SimCluster,
+    cluster: &SimCluster,
     tree: &DecisionTree,
     z: usize,
 ) -> Result<SliceFeatures> {

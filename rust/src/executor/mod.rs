@@ -1,0 +1,462 @@
+//! Staged task executor: the driver-side scheduler that turns partition
+//! and window work into parallel tasks (the Spark-scheduler analog of
+//! the paper's §4.2 "parallel execution" principle).
+//!
+//! The executor runs a *stage*: a vector of independent tasks claimed
+//! from a shared work queue by up to `threads` workers (work-stealing by
+//! atomic cursor, like the partition task sets the Ripley's-K and
+//! random-forest Spark systems schedule per stage). Two contracts make
+//! the rest of the system simple:
+//!
+//! * **Deterministic task → result ordering.** Results are always
+//!   delivered in task-index order, never completion order, so every
+//!   caller observes the same output at any thread count.
+//! * **Fail-fast stages.** A panicking task fails the whole stage (the
+//!   panic propagates to the caller after all workers drain); a task
+//!   returning `Err` cancels the remaining queue and the stage reports
+//!   the error of the smallest failing task index.
+//!
+//! [`Executor::run_sequenced`] is the pipelined variant: workers compute
+//! tasks concurrently while the calling thread consumes results through
+//! a *sequenced sink* — a reorder buffer that invokes the consumer
+//! strictly in task order. This is how the window pipeline overlaps
+//! loading/fitting of window *i+1* with persisting window *i* while the
+//! segment writer still sees windows in slice order.
+//!
+//! Workers are scoped threads spawned per stage: tasks may borrow from
+//! the caller's stack (dataset readers, backends, caches), and an
+//! `Executor` is just a thread-count policy — cheap to create, cheap to
+//! share (`&Executor` is `Sync`).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Condvar, Mutex};
+
+use crate::Result;
+
+/// Default executor width: the `PDFFLOW_EXECUTOR_THREADS` environment
+/// override when set to a positive integer, else all host cores.
+pub fn default_threads() -> usize {
+    std::env::var("PDFFLOW_EXECUTOR_THREADS")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(crate::util::pool::default_workers)
+}
+
+/// A stage executor with a fixed worker-thread budget.
+#[derive(Clone, Copy, Debug)]
+pub struct Executor {
+    threads: usize,
+}
+
+impl Default for Executor {
+    fn default() -> Self {
+        Executor::new(default_threads())
+    }
+}
+
+impl Executor {
+    /// An executor running at most `threads` concurrent tasks (clamped
+    /// to at least 1).
+    pub fn new(threads: usize) -> Executor {
+        Executor {
+            threads: threads.max(1),
+        }
+    }
+
+    /// A single-threaded executor (tasks run inline, in order).
+    pub fn sequential() -> Executor {
+        Executor::new(1)
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run one stage of infallible tasks; returns results in task order.
+    /// A panic in any task propagates to the caller once every worker
+    /// has drained (the stage fails as a unit). Scheduling delegates to
+    /// the shared work-queue kernel in [`crate::util::pool`] — one
+    /// claim-by-cursor implementation serves both the executor and the
+    /// pool's direct users.
+    pub fn run<T, R, F>(&self, tasks: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(T) -> R + Sync,
+    {
+        crate::util::pool::parallel_map(tasks, self.threads, f)
+    }
+
+    /// Run one stage of fallible tasks. On success returns all results
+    /// in task order; on failure returns the error of the *smallest*
+    /// failing task index (deterministic at any thread count) after
+    /// cancelling the unclaimed remainder of the queue.
+    pub fn try_run<T, R, F>(&self, tasks: Vec<T>, f: F) -> Result<Vec<R>>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(T) -> Result<R> + Sync,
+    {
+        let mut out = Vec::with_capacity(tasks.len());
+        self.run_sequenced(tasks, f, |_, r| {
+            out.push(r);
+            Ok(())
+        })?;
+        Ok(out)
+    }
+
+    /// The pipelined stage: `worker` runs on up to `threads` tasks
+    /// concurrently while `consumer` receives each result **in task
+    /// order** on the calling thread (a reorder buffer sequences
+    /// out-of-order completions). The consumer may therefore hold
+    /// `&mut` state — ordered sinks, accumulators, ledgers — without any
+    /// synchronization, and the overall effect is identical at any
+    /// thread count.
+    ///
+    /// Backpressure: a worker does not *start* task `i` until
+    /// `i < consumed + threads`, so at most `threads` results (plus the
+    /// one each worker is computing) ever wait in the reorder buffer —
+    /// memory stays O(threads), not O(tasks), even when the consumer is
+    /// the slow side.
+    ///
+    /// A task or consumer error cancels the unclaimed queue; the stage
+    /// returns the error seen at the smallest task index (results past
+    /// it are discarded, their side effects never consumed).
+    pub fn run_sequenced<T, R, F, C>(
+        &self,
+        tasks: Vec<T>,
+        worker: F,
+        mut consumer: C,
+    ) -> Result<()>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(T) -> Result<R> + Sync,
+        C: FnMut(usize, R) -> Result<()>,
+    {
+        let n = tasks.len();
+        if n == 0 {
+            return Ok(());
+        }
+        let workers = self.threads.min(n);
+        if workers == 1 {
+            for (i, t) in tasks.into_iter().enumerate() {
+                consumer(i, worker(t)?)?;
+            }
+            return Ok(());
+        }
+        let slots: Vec<Mutex<Option<T>>> =
+            tasks.into_iter().map(|t| Mutex::new(Some(t))).collect();
+        let cursor = AtomicUsize::new(0);
+        let cancelled = AtomicBool::new(false);
+        // Admission gate: consumed-watermark + condvar. Workers wait
+        // until their task index is within `watermark + workers`.
+        let gate: (Mutex<usize>, Condvar) = (Mutex::new(0), Condvar::new());
+        let (tx, rx) = mpsc::channel::<(usize, Result<R>)>();
+        let mut outcome: Result<()> = Ok(());
+
+        /// Unwinding out of a worker (or out of the sink) must wake
+        /// gate-waiting peers and cancel the stage, or they would wait
+        /// for a watermark that will never advance and `scope`'s join
+        /// would hang forever.
+        struct PanicRelease<'a> {
+            cancelled: &'a AtomicBool,
+            gate: &'a (Mutex<usize>, Condvar),
+            armed: bool,
+        }
+        impl Drop for PanicRelease<'_> {
+            fn drop(&mut self) {
+                if self.armed {
+                    self.cancelled.store(true, Ordering::Relaxed);
+                    let _unused = self.gate.0.lock().unwrap();
+                    self.gate.1.notify_all();
+                }
+            }
+        }
+
+        std::thread::scope(|scope| {
+            let slots = &slots;
+            let cursor = &cursor;
+            let cancelled = &cancelled;
+            let gate = &gate;
+            let worker = &worker;
+            for _ in 0..workers {
+                let tx = tx.clone();
+                scope.spawn(move || loop {
+                    if cancelled.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    // Backpressure: wait for admission. The task at the
+                    // watermark itself is always admitted (workers > 0),
+                    // so the sink can always make progress.
+                    {
+                        let (lock, cv) = gate;
+                        let mut consumed = lock.lock().unwrap();
+                        while i >= *consumed + workers && !cancelled.load(Ordering::Relaxed) {
+                            consumed = cv.wait(consumed).unwrap();
+                        }
+                    }
+                    if cancelled.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let t = slots[i].lock().unwrap().take().expect("task claimed twice");
+                    let mut release = PanicRelease {
+                        cancelled,
+                        gate,
+                        armed: true,
+                    };
+                    let r = worker(t);
+                    release.armed = false;
+                    if tx.send((i, r)).is_err() {
+                        break; // stage cancelled, receiver gone
+                    }
+                });
+            }
+            drop(tx);
+
+            // However the sink ends — completion, a consumer error, or
+            // a consumer *panic* — the stage must be cancelled and the
+            // admission-waiters woken, or scope's join would hang on
+            // parked workers. The armed guard covers all three paths.
+            let _sink_release = PanicRelease {
+                cancelled,
+                gate,
+                armed: true,
+            };
+
+            // Sequenced sink: buffer out-of-order completions, deliver
+            // strictly in task order, publish the watermark after each
+            // delivery so waiting workers are admitted.
+            let mut pending: BTreeMap<usize, Result<R>> = BTreeMap::new();
+            let mut next = 0usize;
+            'sink: while next < n {
+                // Channel disconnect before all results arrived means a
+                // worker panicked; fall through and let scope propagate.
+                let Ok((i, r)) = rx.recv() else { break 'sink };
+                pending.insert(i, r);
+                while let Some(r) = pending.remove(&next) {
+                    let step = r.and_then(|v| consumer(next, v));
+                    match step {
+                        Ok(()) => {
+                            next += 1;
+                            let (lock, cv) = &gate;
+                            *lock.lock().unwrap() = next;
+                            cv.notify_all();
+                        }
+                        Err(e) => {
+                            outcome = Err(e);
+                            break 'sink;
+                        }
+                    }
+                }
+            }
+            // Drop the receiver so in-flight sends fail fast; the sink
+            // guard then cancels + notifies, and scope joins the workers
+            // (re-raising any panic).
+            drop(rx);
+        });
+        outcome
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::PdfflowError;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn run_preserves_task_order() {
+        let exec = Executor::new(4);
+        let out = exec.run((0..100).collect::<Vec<_>>(), |i| i * 3);
+        assert_eq!(out, (0..100).map(|i| i * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_task_set_is_a_noop() {
+        let exec = Executor::new(8);
+        let out: Vec<u32> = exec.run(Vec::new(), |x: u32| x);
+        assert!(out.is_empty());
+        assert!(exec.try_run(Vec::<u8>::new(), |x| Ok(x)).unwrap().is_empty());
+        exec.run_sequenced(Vec::<u8>::new(), |x| Ok(x), |_, _| {
+            panic!("consumer must not run")
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn more_tasks_than_threads_runs_every_task_once() {
+        let exec = Executor::new(3);
+        let counter = AtomicU64::new(0);
+        let out = exec.run((0..500).collect::<Vec<_>>(), |i| {
+            counter.fetch_add(1, Ordering::Relaxed);
+            i
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 500);
+        assert_eq!(out.len(), 500);
+    }
+
+    #[test]
+    fn panic_in_one_task_fails_the_stage() {
+        for threads in [1usize, 4] {
+            let exec = Executor::new(threads);
+            let r = catch_unwind(AssertUnwindSafe(|| {
+                exec.run((0..32).collect::<Vec<_>>(), |i| {
+                    if i == 17 {
+                        panic!("task 17 exploded");
+                    }
+                    i
+                })
+            }));
+            assert!(r.is_err(), "threads={threads}: stage must fail");
+        }
+    }
+
+    #[test]
+    fn panic_fails_a_sequenced_stage_too() {
+        let exec = Executor::new(4);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            exec.run_sequenced(
+                (0..32).collect::<Vec<_>>(),
+                |i| {
+                    if i == 5 {
+                        panic!("worker down");
+                    }
+                    Ok(i)
+                },
+                |_, _| Ok(()),
+            )
+        }));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn panic_in_the_consumer_fails_the_stage_without_hanging() {
+        // Workers parked at the admission gate must be woken when the
+        // sink unwinds, or scope's join would deadlock.
+        let exec = Executor::new(4);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            exec.run_sequenced(
+                (0..64).collect::<Vec<_>>(),
+                |i| Ok(i),
+                |idx, _| {
+                    if idx == 1 {
+                        panic!("sink down");
+                    }
+                    Ok(())
+                },
+            )
+        }));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn backpressure_bounds_in_flight_results() {
+        use std::sync::atomic::AtomicUsize;
+        let threads = 3usize;
+        let exec = Executor::new(threads);
+        let started = AtomicUsize::new(0);
+        exec.run_sequenced(
+            (0..100).collect::<Vec<_>>(),
+            |i| {
+                started.fetch_add(1, Ordering::SeqCst);
+                Ok(i)
+            },
+            |idx, _| {
+                // Consumer is the slow side; the admission gate caps how
+                // far workers run ahead of the consumed watermark.
+                std::thread::sleep(std::time::Duration::from_micros(200));
+                let s = started.load(Ordering::SeqCst);
+                assert!(
+                    s <= idx + threads,
+                    "at idx {idx}: {s} tasks started, cap {}",
+                    idx + threads
+                );
+                Ok(())
+            },
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn try_run_reports_smallest_failing_index() {
+        for threads in [1usize, 2, 8] {
+            let exec = Executor::new(threads);
+            let err = exec
+                .try_run((0..64).collect::<Vec<_>>(), |i| {
+                    if i % 10 == 7 {
+                        Err(PdfflowError::InvalidArg(format!("task {i}")))
+                    } else {
+                        Ok(i)
+                    }
+                })
+                .unwrap_err();
+            assert!(
+                err.to_string().contains("task 7"),
+                "threads={threads}: got {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn sequenced_consumer_sees_results_in_task_order() {
+        for threads in [1usize, 2, 8] {
+            let exec = Executor::new(threads);
+            let mut seen = Vec::new();
+            exec.run_sequenced(
+                (0..50).collect::<Vec<_>>(),
+                |i| {
+                    // Uneven task durations scramble completion order.
+                    if i % 7 == 0 {
+                        std::thread::sleep(std::time::Duration::from_millis(2));
+                    }
+                    Ok(i * 2)
+                },
+                |idx, v| {
+                    assert_eq!(v, idx * 2);
+                    seen.push(idx);
+                    Ok(())
+                },
+            )
+            .unwrap();
+            assert_eq!(seen, (0..50).collect::<Vec<_>>(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn sequenced_consumer_error_stops_consumption() {
+        let exec = Executor::new(4);
+        let mut consumed = 0usize;
+        let err = exec
+            .run_sequenced(
+                (0..40).collect::<Vec<_>>(),
+                |i| Ok(i),
+                |idx, _| {
+                    if idx == 3 {
+                        return Err(PdfflowError::InvalidArg("sink full".into()));
+                    }
+                    consumed += 1;
+                    Ok(())
+                },
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("sink full"));
+        assert_eq!(consumed, 3, "exactly tasks 0..3 consumed");
+    }
+
+    #[test]
+    fn tasks_may_borrow_caller_state() {
+        let data: Vec<u64> = (0..256).collect();
+        let exec = Executor::new(4);
+        let out = exec.run((0..data.len()).collect::<Vec<_>>(), |i| data[i] + 1);
+        assert_eq!(out.len(), 256);
+        assert_eq!(out[255], 256);
+    }
+}

@@ -7,10 +7,14 @@
 //!
 //! The crate is the paper's **Layer-3 coordinator**: it owns the dataset
 //! generator (HPC4e seismic-benchmark analog), the NFS-style storage
-//! reader, a simulated shared-nothing Spark-like cluster, a mini-RDD
-//! dataflow layer, the decision-tree (MLlib analog), the sampling
-//! machinery, and the five PDF-computation methods of the paper
-//! (Baseline / Grouping / Reuse / ML / Sampling plus combinations).
+//! reader, a simulated shared-nothing Spark-like cluster, a staged task
+//! [`executor`] driving a lazy mini-[`rdd`] dataflow layer, the
+//! decision-tree (MLlib analog), the sampling machinery, and the five
+//! PDF-computation methods of the paper (Baseline / Grouping / Reuse /
+//! ML / Sampling plus combinations). The pipeline runs windows as
+//! parallel executor tasks (configurable via `executor_threads`) with a
+//! sequenced persist sink, so reports and persisted bytes are identical
+//! at any thread count.
 //!
 //! The numeric hot path — distribution fitting plus the Eq. 5 error for
 //! up to ten candidate types — runs through a pluggable
@@ -44,6 +48,7 @@ pub mod config;
 pub mod coordinator;
 pub mod cube;
 pub mod datagen;
+pub mod executor;
 pub mod mltree;
 pub mod pdfstore;
 pub mod rdd;
@@ -60,6 +65,7 @@ pub mod prelude {
     pub use crate::coordinator::{Method, Pipeline, SliceReport, TypeSet};
     pub use crate::cube::{CubeDims, PointId, Window};
     pub use crate::datagen::SyntheticDataset;
+    pub use crate::executor::Executor;
     pub use crate::mltree::DecisionTree;
     pub use crate::pdfstore::{PdfStore, QueryEngine, QueryOptions, RegionQuery};
     #[cfg(feature = "xla")]

@@ -4,7 +4,7 @@
 //! pdfflow generate  --preset set1 [--data-dir DIR]         generate a dataset
 //! pdfflow run       --preset set1 --method grouping+ml --types 10
 //!                   [--slice Z] [--lines N] [--window W] [--nodes N|--cluster lncc]
-//!                   [--backend native|xla]
+//!                   [--backend native|xla] [--executor-threads N]
 //! pdfflow sample    --preset set1 --rate 0.1 [--sampler random|kmeans]
 //! pdfflow features  --preset set1 [--slice Z]              full-slice features
 //! pdfflow train-tree --preset set1 --types 4 [--tune] [--out tree.json]
@@ -67,6 +67,10 @@ fn load_config(args: &Args) -> Result<ExperimentConfig> {
     cfg.pipeline.window_lines = args
         .usize_or("window", cfg.pipeline.window_lines)
         .map_err(|e| anyhow!(e))?;
+    cfg.pipeline.executor_threads = args
+        .usize_or("executor-threads", cfg.pipeline.executor_threads)
+        .map_err(|e| anyhow!(e))?
+        .max(1);
     match args.opt("cluster") {
         Some("lncc") => cfg.cluster = ClusterSpec::lncc(),
         Some("local") => cfg.cluster = ClusterSpec::local(4),
@@ -188,9 +192,9 @@ fn cmd_sample(args: &Args) -> Result<()> {
     let tree = pipe.tree.clone().unwrap();
     let reader = DatasetReader::new(&ds);
     let cache = WindowCache::new(cfg.pipeline.cache_bytes);
-    let mut cluster = SimCluster::new(cfg.cluster.clone());
+    let cluster = SimCluster::new(cfg.cluster.clone());
     let rep = run_sampling(
-        &reader, &cache, backend.as_ref(), &mut cluster, &tree, cfg.slice, rate, sampler, 42,
+        &reader, &cache, backend.as_ref(), &cluster, &tree, cfg.slice, rate, sampler, 42,
     )?;
     println!(
         "sampling {} rate {}: {} points, load {} (sim {}), compute {} (sim {})",
@@ -228,8 +232,8 @@ fn cmd_features(args: &Args) -> Result<()> {
     let tree = pipe.tree.clone().unwrap();
     let reader = DatasetReader::new(&ds);
     let cache = WindowCache::new(cfg.pipeline.cache_bytes);
-    let mut cluster = SimCluster::new(cfg.cluster.clone());
-    let f = full_slice_features(&reader, &cache, backend.as_ref(), &mut cluster, &tree, cfg.slice)?;
+    let cluster = SimCluster::new(cfg.cluster.clone());
+    let f = full_slice_features(&reader, &cache, backend.as_ref(), &cluster, &tree, cfg.slice)?;
     println!("slice {} features:", cfg.slice);
     print_features(&f);
     Ok(())
@@ -242,13 +246,13 @@ fn cmd_train_tree(args: &Args) -> Result<()> {
     let backend = cfg.make_backend()?;
     let reader = DatasetReader::new(&ds);
     let cache = WindowCache::new(cfg.pipeline.cache_bytes);
-    let mut cluster = SimCluster::new(cfg.cluster.clone());
+    let cluster = SimCluster::new(cfg.cluster.clone());
     let slices = mlmodel::training_slices(&ds.spec.dims, cfg.train_slice, ds.spec.n_value_layers());
     let data = mlmodel::build_training_data(
         &reader,
         &cache,
         backend.as_ref(),
-        &mut cluster,
+        &cluster,
         &ds.spec.dims,
         &slices,
         types,
@@ -348,8 +352,8 @@ fn cmd_qoi(args: &Args) -> Result<()> {
     let w = r.windows[0].window;
     let reader = DatasetReader::new(&ds);
     let cache = WindowCache::new(cfg.pipeline.cache_bytes);
-    let mut cluster = SimCluster::new(cfg.cluster.clone());
-    let lw = pdfflow::coordinator::loader::load_window(&reader, &cache, backend.as_ref(), &mut cluster, w)?;
+    let cluster = SimCluster::new(cfg.cluster.clone());
+    let lw = pdfflow::coordinator::loader::load_window(&reader, &cache, backend.as_ref(), &cluster, w)?;
     let show = lw.n_points().min(12);
     let out = backend.run_fit_all(
         &lw.obs.data[..show * lw.obs.n_obs],

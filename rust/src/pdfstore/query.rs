@@ -6,17 +6,17 @@
 //! rarely contend on the same mutex — query throughput under threads is
 //! a first-class benchmark (`cargo bench --bench queries`). Hit / miss /
 //! eviction meters are atomic and cheap enough to stay always-on, the
-//! same observability contract as [`crate::storage::WindowCache`].
+//! same observability contract as [`crate::storage::WindowCache`] —
+//! both fronts share the generic [`crate::util::lru::ShardedStampLru`]
+//! core.
 
-use std::collections::HashMap;
-use std::hash::{Hash, Hasher};
 use std::path::Path;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use crate::cube::{CubeDims, PointId};
 use crate::pdfstore::{PdfRecord, PdfStore, REC_LEN};
 use crate::stats::{self, density, PENALTY_ERROR};
+use crate::util::lru::ShardedStampLru;
 use crate::util::pool;
 use crate::{PdfflowError, Result};
 
@@ -33,118 +33,43 @@ pub struct CacheMeters {
     pub entries: usize,
 }
 
-struct Shard {
-    map: HashMap<BlockKey, (u64, Arc<Vec<PdfRecord>>)>, // key -> (stamp, block)
-    clock: u64,
-    bytes: u64,
-}
-
 /// Sharded LRU over decoded window blocks with a global byte budget
-/// split evenly across shards.
+/// split evenly across shards (a front over the generic
+/// [`ShardedStampLru`] core, weighed by encoded record bytes).
 pub struct ShardedLru {
-    shards: Vec<Mutex<Shard>>,
-    shard_budget: u64,
-    hits: AtomicU64,
-    misses: AtomicU64,
-    evictions: AtomicU64,
-}
-
-fn block_bytes(block: &[PdfRecord]) -> u64 {
-    (block.len() * REC_LEN) as u64
+    lru: ShardedStampLru<BlockKey, Arc<Vec<PdfRecord>>>,
 }
 
 impl ShardedLru {
     pub fn new(capacity_bytes: u64, n_shards: usize) -> ShardedLru {
-        let n = n_shards.max(1);
         ShardedLru {
-            shards: (0..n)
-                .map(|_| {
-                    Mutex::new(Shard {
-                        map: HashMap::new(),
-                        clock: 0,
-                        bytes: 0,
-                    })
-                })
-                .collect(),
-            shard_budget: capacity_bytes / n as u64,
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
-            evictions: AtomicU64::new(0),
+            lru: ShardedStampLru::new(capacity_bytes, n_shards, |b: &Arc<Vec<PdfRecord>>| {
+                (b.len() * REC_LEN) as u64
+            }),
         }
-    }
-
-    fn shard_of(&self, key: &BlockKey) -> usize {
-        let mut h = std::collections::hash_map::DefaultHasher::new();
-        key.hash(&mut h);
-        (h.finish() % self.shards.len() as u64) as usize
     }
 
     pub fn get(&self, key: &BlockKey) -> Option<Arc<Vec<PdfRecord>>> {
-        let mut g = self.shards[self.shard_of(key)].lock().unwrap();
-        g.clock += 1;
-        let clock = g.clock;
-        let found = g.map.get_mut(key).map(|(stamp, block)| {
-            *stamp = clock;
-            Arc::clone(block)
-        });
-        match found {
-            Some(block) => {
-                self.hits.fetch_add(1, Ordering::Relaxed);
-                Some(block)
-            }
-            None => {
-                self.misses.fetch_add(1, Ordering::Relaxed);
-                None
-            }
-        }
+        self.lru.get(key)
     }
 
     pub fn put(&self, key: BlockKey, block: Arc<Vec<PdfRecord>>) {
-        let bytes = block_bytes(&block);
-        if bytes > self.shard_budget {
-            return; // bigger than one shard's budget — streamed, not cached
-        }
-        let mut g = self.shards[self.shard_of(&key)].lock().unwrap();
-        g.clock += 1;
-        let clock = g.clock;
-        if let Some((_, old)) = g.map.insert(key, (clock, block)) {
-            g.bytes -= block_bytes(&old);
-        }
-        g.bytes += bytes;
-        while g.bytes > self.shard_budget {
-            let victim = g
-                .map
-                .iter()
-                .min_by_key(|(_, (stamp, _))| *stamp)
-                .map(|(k, _)| *k)
-                .expect("over budget implies non-empty");
-            let (_, evicted) = g.map.remove(&victim).unwrap();
-            g.bytes -= block_bytes(&evicted);
-            self.evictions.fetch_add(1, Ordering::Relaxed);
-        }
+        self.lru.put(key, block)
     }
 
     pub fn meters(&self) -> CacheMeters {
-        let mut m = CacheMeters {
-            hits: self.hits.load(Ordering::Relaxed),
-            misses: self.misses.load(Ordering::Relaxed),
-            evictions: self.evictions.load(Ordering::Relaxed),
-            ..CacheMeters::default()
-        };
-        for s in &self.shards {
-            let g = s.lock().unwrap();
-            m.bytes += g.bytes;
-            m.entries += g.map.len();
+        let s = self.lru.stats();
+        CacheMeters {
+            hits: s.hits,
+            misses: s.misses,
+            evictions: s.evictions,
+            bytes: s.bytes,
+            entries: s.entries,
         }
-        m
     }
 
     pub fn clear(&self) {
-        for s in &self.shards {
-            let mut g = s.lock().unwrap();
-            g.map.clear();
-            g.bytes = 0;
-        }
+        self.lru.clear()
     }
 }
 

@@ -1,26 +1,38 @@
-//! Mini-RDD: partitioned in-memory collections with the Spark operations
-//! the paper's pipeline uses (Map, aggregateByKey, Cache → here: owned
-//! partitions, broadcast) and shuffle-byte accounting wired into the
-//! simulated cluster.
+//! Mini-RDD: lazily evaluated partitioned collections with the Spark
+//! operations the paper's pipeline uses (map, aggregateByKey, coalesce,
+//! broadcast) and shuffle-byte accounting wired into the simulated
+//! cluster.
 //!
-//! This is deliberately *not* a lazy DAG engine — the paper's pipeline is
-//! a straight line (load → group → fit → persist), so eager partitioned
-//! collections keep the dataflow vocabulary without Spark's machinery.
+//! Transformations (`map`, `map_partitions`, `coalesce`) build a small
+//! plan: each partition is a deferred thunk, and every narrow op wraps
+//! the thunk of its parent partition — narrow stages fuse into one pass
+//! per partition, exactly like Spark pipelining inside a stage. Nothing
+//! runs until an **action** (`collect`, `count`, `aggregate_by_key`)
+//! submits one task per partition to a driver [`Executor`]; results come
+//! back in deterministic partition order at any thread count. Wide
+//! operations (`aggregate_by_key`) run as two stages — a parallel
+//! map-side combine that routes combiners to hash partitions, then a
+//! parallel reduce that merges each target's inbox in source-partition
+//! order — with the crossing bytes charged to the [`SimCluster`].
 
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
 use std::sync::Arc;
 
 use crate::cluster::SimCluster;
+use crate::executor::Executor;
 
-/// A partitioned collection. Partition `i` is conceptually resident on
-/// node `i % nodes`.
-#[derive(Clone, Debug)]
+/// A deferred partition: evaluates to the partition's items when its
+/// task runs.
+type PartitionFn<T> = Box<dyn FnOnce() -> Vec<T> + Send>;
+
+/// A lazily evaluated partitioned collection. Partition `i` is
+/// conceptually resident on node `i % nodes`.
 pub struct Rdd<T> {
-    pub partitions: Vec<Vec<T>>,
+    parts: Vec<PartitionFn<T>>,
 }
 
-impl<T> Rdd<T> {
+impl<T: Send + 'static> Rdd<T> {
     /// Evenly distribute items over `n_partitions` (paper: "the
     /// identifications of points are stored in an RDD, which is evenly
     /// distributed on multiple cluster nodes").
@@ -35,57 +47,105 @@ impl<T> Rdd<T> {
             let take = base + usize::from(p < extra);
             partitions.push(it.by_ref().take(take).collect());
         }
-        Rdd { partitions }
+        Self::from_partitions(partitions)
     }
 
-    /// Spark `coalesce`: shrink to at most `n_partitions` partitions
-    /// (no shuffle is charged — in-memory merge). Edge cases follow
-    /// `from_vec`: `n_partitions == 0` is clamped to 1, and a target at
-    /// or above the current partition count is a no-op. Unlike Spark's
-    /// adjacent-merge, the in-memory rebuild re-balances exactly
-    /// (partition sizes differ by at most one) while preserving item
-    /// order.
-    pub fn coalesce(self, n_partitions: usize) -> Rdd<T> {
-        let n = n_partitions.max(1);
-        if n >= self.partitions.len() {
-            return self;
-        }
-        Self::from_vec(self.collect(), n)
-    }
-
-    pub fn n_partitions(&self) -> usize {
-        self.partitions.len()
-    }
-
-    pub fn n_items(&self) -> usize {
-        self.partitions.iter().map(|p| p.len()).sum()
-    }
-
-    /// Spark `map` (no shuffle).
-    pub fn map<U>(self, f: impl Fn(T) -> U) -> Rdd<U> {
+    /// Wrap already-materialized partitions (a shuffle output).
+    pub fn from_partitions(partitions: Vec<Vec<T>>) -> Rdd<T> {
         Rdd {
-            partitions: self
-                .partitions
+            parts: partitions
                 .into_iter()
-                .map(|p| p.into_iter().map(&f).collect())
+                .map(|p| Box::new(move || p) as PartitionFn<T>)
                 .collect(),
         }
     }
 
-    /// Spark `mapPartitions` (no shuffle).
-    pub fn map_partitions<U>(self, f: impl Fn(Vec<T>) -> Vec<U>) -> Rdd<U> {
+    pub fn n_partitions(&self) -> usize {
+        self.parts.len()
+    }
+
+    /// Spark `map` (narrow: fuses into the partition task, no shuffle).
+    pub fn map<U, F>(self, f: F) -> Rdd<U>
+    where
+        U: Send + 'static,
+        F: Fn(T) -> U + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
         Rdd {
-            partitions: self.partitions.into_iter().map(f).collect(),
+            parts: self
+                .parts
+                .into_iter()
+                .map(|p| {
+                    let f = Arc::clone(&f);
+                    Box::new(move || p().into_iter().map(|t| (*f)(t)).collect())
+                        as PartitionFn<U>
+                })
+                .collect(),
         }
     }
 
-    /// Spark `collect` action.
-    pub fn collect(self) -> Vec<T> {
-        self.partitions.into_iter().flatten().collect()
+    /// Spark `mapPartitions` (narrow, no shuffle).
+    pub fn map_partitions<U, F>(self, f: F) -> Rdd<U>
+    where
+        U: Send + 'static,
+        F: Fn(Vec<T>) -> Vec<U> + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        Rdd {
+            parts: self
+                .parts
+                .into_iter()
+                .map(|p| {
+                    let f = Arc::clone(&f);
+                    Box::new(move || (*f)(p())) as PartitionFn<U>
+                })
+                .collect(),
+        }
     }
 
-    pub fn iter(&self) -> impl Iterator<Item = &T> {
-        self.partitions.iter().flatten()
+    /// Spark `coalesce`: shrink to at most `n_partitions` partitions by
+    /// merging contiguous runs of source partitions (no shuffle, item
+    /// order preserved — Spark's adjacent-merge semantics). A target at
+    /// or above the current count is a no-op; `0` clamps to 1.
+    pub fn coalesce(self, n_partitions: usize) -> Rdd<T> {
+        let n_out = n_partitions.max(1);
+        let n_in = self.parts.len();
+        if n_out >= n_in {
+            return self;
+        }
+        let base = n_in / n_out;
+        let extra = n_in % n_out;
+        let mut it = self.parts.into_iter();
+        let mut merged = Vec::with_capacity(n_out);
+        for g in 0..n_out {
+            let take = base + usize::from(g < extra);
+            let group: Vec<PartitionFn<T>> = it.by_ref().take(take).collect();
+            merged.push(Box::new(move || {
+                let mut out = Vec::new();
+                for p in group {
+                    out.extend(p());
+                }
+                out
+            }) as PartitionFn<T>);
+        }
+        Rdd { parts: merged }
+    }
+
+    /// Spark `collect` action: evaluate every partition as an executor
+    /// task, concatenate in partition order.
+    pub fn collect(self, exec: &Executor) -> Vec<T> {
+        self.collect_partitions(exec).into_iter().flatten().collect()
+    }
+
+    /// Evaluate and return the partitions themselves (tests and shuffle
+    /// consumers that care about placement).
+    pub fn collect_partitions(self, exec: &Executor) -> Vec<Vec<T>> {
+        exec.run(self.parts, |p| p())
+    }
+
+    /// Spark `count` action.
+    pub fn count(self, exec: &Executor) -> usize {
+        exec.run(self.parts, |p| p().len()).into_iter().sum()
     }
 }
 
@@ -95,8 +155,8 @@ fn key_partition<K: Hash>(k: &K, n: usize) -> usize {
     (h.finish() % n as u64) as usize
 }
 
-impl<K: Hash + Eq + Clone, V> Rdd<(K, V)> {
-    /// Spark `aggregateByKey` with map-side combine.
+impl<K: Hash + Eq + Send + 'static, V: Send + 'static> Rdd<(K, V)> {
+    /// Spark `aggregateByKey` with map-side combine — the wide action.
     ///
     /// * `create` makes a combiner from the first value of a key;
     /// * `merge_value` folds another value into a combiner (map side);
@@ -104,23 +164,31 @@ impl<K: Hash + Eq + Clone, V> Rdd<(K, V)> {
     ///   (reduce side, after the shuffle);
     /// * `combiner_bytes` sizes a combiner for shuffle accounting — only
     ///   combiners that change partition are charged to the cluster.
-    pub fn aggregate_by_key<C>(
+    ///
+    /// Stage 1 runs one task per source partition (combine + route);
+    /// stage 2 runs one task per target partition, merging its inbox in
+    /// source-partition order — so the result and the charged bytes are
+    /// identical at any executor thread count.
+    #[allow(clippy::too_many_arguments)]
+    pub fn aggregate_by_key<C: Send + 'static>(
         self,
         n_partitions: usize,
-        cluster: &mut SimCluster,
+        exec: &Executor,
+        cluster: &SimCluster,
         account: &str,
-        create: impl Fn(V) -> C,
-        merge_value: impl Fn(&mut C, V),
-        merge_combiners: impl Fn(&mut C, C),
-        combiner_bytes: impl Fn(&K, &C) -> u64,
+        create: impl Fn(V) -> C + Sync,
+        merge_value: impl Fn(&mut C, V) + Sync,
+        merge_combiners: impl Fn(&mut C, C) + Sync,
+        combiner_bytes: impl Fn(&K, &C) -> u64 + Sync,
     ) -> (Rdd<(K, C)>, u64) {
         let n_out = n_partitions.max(1);
-        // Map-side combine within each source partition.
-        let mut shuffled_bytes = 0u64;
-        let mut targets: Vec<HashMap<K, C>> = (0..n_out).map(|_| HashMap::new()).collect();
-        for (src_idx, part) in self.partitions.into_iter().enumerate() {
+        // Stage 1 (map side): combine within each source partition, then
+        // route each combiner to its hash partition.
+        let tasks: Vec<(usize, PartitionFn<(K, V)>)> =
+            self.parts.into_iter().enumerate().collect();
+        let routed: Vec<(Vec<Vec<(K, C)>>, u64)> = exec.run(tasks, |(src_idx, part)| {
             let mut local: HashMap<K, C> = HashMap::new();
-            for (k, v) in part {
+            for (k, v) in part() {
                 match local.get_mut(&k) {
                     Some(c) => merge_value(c, v),
                     None => {
@@ -128,28 +196,42 @@ impl<K: Hash + Eq + Clone, V> Rdd<(K, V)> {
                     }
                 }
             }
-            // Shuffle: each combiner travels to its hash partition.
+            let mut outgoing: Vec<Vec<(K, C)>> = (0..n_out).map(|_| Vec::new()).collect();
+            let mut bytes = 0u64;
             for (k, c) in local {
                 let dst = key_partition(&k, n_out);
                 if dst != src_idx % n_out {
-                    shuffled_bytes += combiner_bytes(&k, &c);
+                    bytes += combiner_bytes(&k, &c);
                 }
-                match targets[dst].get_mut(&k) {
-                    Some(existing) => merge_combiners(existing, c),
-                    None => {
-                        targets[dst].insert(k, c);
-                    }
-                }
+                outgoing[dst].push((k, c));
+            }
+            (outgoing, bytes)
+        });
+        // Exchange: concatenate each target's inbox in source order (the
+        // deterministic merge order for non-commutative combiners).
+        let mut shuffled_bytes = 0u64;
+        let mut inboxes: Vec<Vec<(K, C)>> = (0..n_out).map(|_| Vec::new()).collect();
+        for (outgoing, bytes) in routed {
+            shuffled_bytes += bytes;
+            for (dst, batch) in outgoing.into_iter().enumerate() {
+                inboxes[dst].extend(batch);
             }
         }
         cluster.charge_shuffle(account, shuffled_bytes);
-        let rdd = Rdd {
-            partitions: targets
-                .into_iter()
-                .map(|m| m.into_iter().collect())
-                .collect(),
-        };
-        (rdd, shuffled_bytes)
+        // Stage 2 (reduce side): merge combiners per target partition.
+        let targets: Vec<Vec<(K, C)>> = exec.run(inboxes, |inbox| {
+            let mut m: HashMap<K, C> = HashMap::new();
+            for (k, c) in inbox {
+                match m.get_mut(&k) {
+                    Some(existing) => merge_combiners(existing, c),
+                    None => {
+                        m.insert(k, c);
+                    }
+                }
+            }
+            m.into_iter().collect()
+        });
+        (Rdd::from_partitions(targets), shuffled_bytes)
     }
 }
 
@@ -161,7 +243,7 @@ pub struct Broadcast<T> {
 }
 
 impl<T> Broadcast<T> {
-    pub fn new(cluster: &mut SimCluster, account: &str, value: T, bytes: u64) -> Broadcast<T> {
+    pub fn new(cluster: &SimCluster, account: &str, value: T, bytes: u64) -> Broadcast<T> {
         cluster.charge_broadcast(account, bytes);
         Broadcast {
             value: Arc::new(value),
@@ -178,28 +260,37 @@ mod tests {
     use super::*;
     use crate::cluster::ClusterSpec;
 
+    fn exec() -> Executor {
+        Executor::new(4)
+    }
+
     #[test]
     fn from_vec_distributes_evenly() {
         let r = Rdd::from_vec((0..10).collect::<Vec<_>>(), 3);
-        let sizes: Vec<usize> = r.partitions.iter().map(|p| p.len()).collect();
+        assert_eq!(r.n_partitions(), 3);
+        let parts = r.collect_partitions(&exec());
+        let sizes: Vec<usize> = parts.iter().map(|p| p.len()).collect();
         assert_eq!(sizes, vec![4, 3, 3]);
-        assert_eq!(r.n_items(), 10);
+        assert_eq!(parts.into_iter().flatten().count(), 10);
     }
 
     #[test]
     fn from_vec_more_partitions_than_items() {
         let r = Rdd::from_vec(vec![1, 2], 5);
         assert_eq!(r.n_partitions(), 5);
-        assert_eq!(r.n_items(), 2);
+        assert_eq!(r.count(&exec()), 2);
     }
 
     #[test]
-    fn coalesce_shrinks_rebalances_and_preserves_order() {
+    fn coalesce_merges_adjacent_and_preserves_order() {
         let r = Rdd::from_vec((0..10).collect::<Vec<_>>(), 5).coalesce(2);
         assert_eq!(r.n_partitions(), 2);
-        let sizes: Vec<usize> = r.partitions.iter().map(|p| p.len()).collect();
-        assert_eq!(sizes, vec![5, 5]);
-        assert_eq!(r.collect(), (0..10).collect::<Vec<_>>());
+        let parts = r.collect_partitions(&exec());
+        // 5 source partitions of 2 items merge as contiguous runs [3, 2].
+        let sizes: Vec<usize> = parts.iter().map(|p| p.len()).collect();
+        assert_eq!(sizes, vec![6, 4]);
+        let flat: Vec<i32> = parts.into_iter().flatten().collect();
+        assert_eq!(flat, (0..10).collect::<Vec<_>>());
     }
 
     #[test]
@@ -210,35 +301,58 @@ mod tests {
         // Zero target clamps to one partition.
         let r = Rdd::from_vec((0..4).collect::<Vec<_>>(), 4).coalesce(0);
         assert_eq!(r.n_partitions(), 1);
-        assert_eq!(r.collect(), (0..4).collect::<Vec<_>>());
+        assert_eq!(r.collect(&exec()), (0..4).collect::<Vec<_>>());
         // Empty RDD coalesces without panicking.
         let r = Rdd::from_vec(Vec::<u8>::new(), 6).coalesce(2);
         assert_eq!(r.n_partitions(), 2);
-        assert_eq!(r.n_items(), 0);
+        assert_eq!(r.count(&exec()), 0);
     }
 
     #[test]
-    fn map_preserves_partitioning() {
-        let r = Rdd::from_vec((0..10).collect::<Vec<_>>(), 3).map(|x| x * 2);
+    fn map_is_lazy_and_preserves_partitioning() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static CALLS: AtomicUsize = AtomicUsize::new(0);
+        let r = Rdd::from_vec((0..10).collect::<Vec<_>>(), 3).map(|x| {
+            CALLS.fetch_add(1, Ordering::Relaxed);
+            x * 2
+        });
+        // Plan built, nothing evaluated yet.
+        assert_eq!(CALLS.load(Ordering::Relaxed), 0);
         assert_eq!(r.n_partitions(), 3);
-        assert_eq!(r.collect(), (0..10).map(|x| x * 2).collect::<Vec<_>>());
+        assert_eq!(r.collect(&exec()), (0..10).map(|x| x * 2).collect::<Vec<_>>());
+        assert_eq!(CALLS.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn narrow_stages_fuse_per_partition() {
+        // map → map_partitions → coalesce chains stay one thunk deep per
+        // output partition and evaluate in one pass at the action.
+        let r = Rdd::from_vec((0..100u32).collect::<Vec<_>>(), 8)
+            .map(|x| x + 1)
+            .map_partitions(|p| p.into_iter().filter(|x| x % 2 == 0).collect())
+            .coalesce(3);
+        assert_eq!(r.n_partitions(), 3);
+        let got = r.collect(&exec());
+        let want: Vec<u32> = (1..=100).filter(|x| x % 2 == 0).collect();
+        assert_eq!(got, want);
     }
 
     #[test]
     fn aggregate_by_key_groups_all_values() {
         let items: Vec<(u32, u32)> = (0..100).map(|i| (i % 7, i)).collect();
         let r = Rdd::from_vec(items, 4);
-        let mut cluster = SimCluster::new(ClusterSpec::lncc());
+        let cluster = SimCluster::new(ClusterSpec::lncc());
         let (grouped, bytes) = r.aggregate_by_key(
             4,
-            &mut cluster,
+            &exec(),
+            &cluster,
             "shuffle",
             |v| vec![v],
             |c, v| c.push(v),
             |c, mut o| c.append(&mut o),
             |_k, c| (c.len() * 4) as u64,
         );
-        let mut all: Vec<(u32, Vec<u32>)> = grouped.collect();
+        let mut all: Vec<(u32, Vec<u32>)> = grouped.collect(&exec());
         all.sort();
         assert_eq!(all.len(), 7);
         let total: usize = all.iter().map(|(_, v)| v.len()).sum();
@@ -253,10 +367,11 @@ mod tests {
     #[test]
     fn aggregate_by_key_same_key_lands_in_one_partition() {
         let items: Vec<(u8, u8)> = (0..50).map(|i| (i % 5, i)).collect();
-        let mut cluster = SimCluster::new(ClusterSpec::lncc());
+        let cluster = SimCluster::new(ClusterSpec::lncc());
         let (grouped, _) = Rdd::from_vec(items, 8).aggregate_by_key(
             8,
-            &mut cluster,
+            &exec(),
+            &cluster,
             "s",
             |v| vec![v],
             |c, v| c.push(v),
@@ -265,7 +380,7 @@ mod tests {
         );
         // No key may appear in two partitions.
         let mut seen = std::collections::HashSet::new();
-        for part in &grouped.partitions {
+        for part in grouped.collect_partitions(&exec()) {
             let keys: std::collections::HashSet<u8> = part.iter().map(|(k, _)| *k).collect();
             for k in keys {
                 assert!(seen.insert(k), "key {k} in two partitions");
@@ -278,12 +393,13 @@ mod tests {
         // All values share one key: combine collapses each partition to a
         // single combiner before the shuffle.
         let items: Vec<(u8, u64)> = (0..1000).map(|i| (0u8, i)).collect();
-        let mut cluster = SimCluster::new(ClusterSpec::lncc());
+        let cluster = SimCluster::new(ClusterSpec::lncc());
         let (_, bytes) = Rdd::from_vec(items, 4).aggregate_by_key(
             4,
-            &mut cluster,
+            &exec(),
+            &cluster,
             "s",
-            |_v| 1u64,          // combiner = count
+            |_v| 1u64, // combiner = count
             |c, _v| *c += 1,
             |c, o| *c += o,
             |_k, _c| 8,
@@ -294,9 +410,35 @@ mod tests {
     }
 
     #[test]
+    fn aggregate_by_key_invariant_across_thread_counts() {
+        let items: Vec<(u32, u64)> = (0..400).map(|i| (i % 13, i as u64)).collect();
+        let run = |threads: usize| {
+            let exec = Executor::new(threads);
+            let cluster = SimCluster::new(ClusterSpec::lncc());
+            let (grouped, bytes) = Rdd::from_vec(items.clone(), 6).aggregate_by_key(
+                6,
+                &exec,
+                &cluster,
+                "s",
+                |v| vec![v],
+                |c, v| c.push(v),
+                |c, mut o| c.append(&mut o),
+                |_, c| 8 * c.len() as u64,
+            );
+            let mut all: Vec<(u32, Vec<u64>)> = grouped.collect(&exec);
+            all.sort();
+            (all, bytes, cluster.account("s").to_bits())
+        };
+        let base = run(1);
+        for threads in [2usize, 8] {
+            assert_eq!(run(threads), base, "threads={threads}");
+        }
+    }
+
+    #[test]
     fn broadcast_provides_value_and_charges() {
-        let mut cluster = SimCluster::new(ClusterSpec::g5k(16));
-        let b = Broadcast::new(&mut cluster, "bcast", vec![1, 2, 3], 12);
+        let cluster = SimCluster::new(ClusterSpec::g5k(16));
+        let b = Broadcast::new(&cluster, "bcast", vec![1, 2, 3], 12);
         assert_eq!(b.get(), &vec![1, 2, 3]);
         assert!(cluster.account("bcast") > 0.0);
     }

@@ -77,7 +77,12 @@ impl OutMatrix {
 /// `values` is always point-major: `n_points * obs` f32 observations.
 /// Implementations must produce identical row layouts so every caller
 /// (pipeline, benches, tests) is backend-generic.
-pub trait Backend {
+///
+/// Backends are `Send + Sync`: the window pipeline shares one backend
+/// across concurrent executor tasks. A backend wrapping a non-`Sync`
+/// client (the PJRT engine's Rc-based buffers) must serialize access
+/// internally (e.g. a mutexed client handle).
+pub trait Backend: Send + Sync {
     /// Short stable identifier ("native", "xla") for logs and reports.
     fn name(&self) -> &'static str;
 

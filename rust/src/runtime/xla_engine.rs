@@ -7,6 +7,21 @@
 //! >= 0.5 serialized protos carry 64-bit instruction ids that this XLA
 //! build rejects; the text parser reassigns ids (see aot.py docstring and
 //! /opt/xla-example/README.md).
+//!
+//! NOTE: [`super::Backend`] is now `Send + Sync` (the window pipeline
+//! shares the backend across executor threads). The PJRT client's
+//! buffers are Rc-based, so re-enabling this engine requires a
+//! synchronization wrapper (one mutexed client, or a client per worker)
+//! before the `impl Backend for Engine` below satisfies the bound. The
+//! `compile_error!` below states this up front instead of letting the
+//! build die on a wall of E0277 auto-trait errors.
+
+compile_error!(
+    "the `xla` feature needs porting: `runtime::Backend` is now `Send + Sync` (the window \
+     pipeline shares one backend across executor threads), but `Engine` wraps the Rc-based \
+     PJRT client. Serialize access (e.g. a mutexed client, or one client per worker), remove \
+     this compile_error!, and re-enable the `xla` dependency in rust/Cargo.toml."
+);
 
 use std::collections::HashMap;
 use std::path::Path;

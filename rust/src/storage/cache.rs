@@ -5,12 +5,18 @@
 //! big input data. Our analog: loaded windows (the intermediate
 //! observation matrices) are cached up to a byte budget with LRU
 //! eviction; dataset files themselves are always streamed from "NFS".
+//!
+//! The cache is a single-shard front over the generic
+//! [`crate::util::lru::ShardedStampLru`] core (shared with the
+//! pdfstore's query block cache): one shard keeps exact global LRU
+//! order, which the window access pattern (few, large, reused entries)
+//! wants more than shard parallelism.
 
-use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use crate::cube::Window;
 use crate::storage::ObsMatrix;
+use crate::util::lru::ShardedStampLru;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 struct Key {
@@ -42,97 +48,40 @@ pub struct CacheStats {
     pub entries: usize,
 }
 
-/// LRU cache of loaded windows with a byte budget.
+/// LRU cache of loaded windows with a byte budget. All methods take
+/// `&self`; one cache serves every parallel window task.
 pub struct WindowCache {
-    inner: Mutex<Inner>,
-    capacity_bytes: u64,
-}
-
-struct Inner {
-    map: HashMap<Key, (u64, Arc<ObsMatrix>)>, // key -> (stamp, matrix)
-    clock: u64,
-    bytes: u64,
-    hits: u64,
-    misses: u64,
-    evictions: u64,
+    lru: ShardedStampLru<Key, Arc<ObsMatrix>>,
 }
 
 impl WindowCache {
     pub fn new(capacity_bytes: u64) -> Self {
         WindowCache {
-            inner: Mutex::new(Inner {
-                map: HashMap::new(),
-                clock: 0,
-                bytes: 0,
-                hits: 0,
-                misses: 0,
-                evictions: 0,
-            }),
-            capacity_bytes,
+            lru: ShardedStampLru::new(capacity_bytes, 1, |m: &Arc<ObsMatrix>| m.bytes()),
         }
     }
 
     pub fn get(&self, w: &Window) -> Option<Arc<ObsMatrix>> {
-        let mut g = self.inner.lock().unwrap();
-        g.clock += 1;
-        let clock = g.clock;
-        let found = g.map.get_mut(&Key::from(w)).map(|(stamp, m)| {
-            *stamp = clock;
-            Arc::clone(m)
-        });
-        match found {
-            Some(m) => {
-                g.hits += 1;
-                Some(m)
-            }
-            None => {
-                g.misses += 1;
-                None
-            }
-        }
+        self.lru.get(&Key::from(w))
     }
 
     pub fn put(&self, w: &Window, m: Arc<ObsMatrix>) {
-        let bytes = m.bytes();
-        if bytes > self.capacity_bytes {
-            return; // too big to cache — streamed like input data
-        }
-        let mut g = self.inner.lock().unwrap();
-        g.clock += 1;
-        let clock = g.clock;
-        if let Some((_, old)) = g.map.insert(Key::from(w), (clock, m)) {
-            g.bytes -= old.bytes();
-        }
-        g.bytes += bytes;
-        // Evict least-recently-used until under budget.
-        while g.bytes > self.capacity_bytes {
-            let victim = g
-                .map
-                .iter()
-                .min_by_key(|(_, (stamp, _))| *stamp)
-                .map(|(k, _)| *k)
-                .expect("over budget implies non-empty");
-            let (_, evicted) = g.map.remove(&victim).unwrap();
-            g.bytes -= evicted.bytes();
-            g.evictions += 1;
-        }
+        self.lru.put(Key::from(w), m)
     }
 
     pub fn stats(&self) -> CacheStats {
-        let g = self.inner.lock().unwrap();
+        let s = self.lru.stats();
         CacheStats {
-            hits: g.hits,
-            misses: g.misses,
-            evictions: g.evictions,
-            bytes: g.bytes,
-            entries: g.map.len(),
+            hits: s.hits,
+            misses: s.misses,
+            evictions: s.evictions,
+            bytes: s.bytes,
+            entries: s.entries,
         }
     }
 
     pub fn clear(&self) {
-        let mut g = self.inner.lock().unwrap();
-        g.map.clear();
-        g.bytes = 0;
+        self.lru.clear()
     }
 }
 

@@ -1,0 +1,218 @@
+//! Generic sharded stamp-LRU: the one cache core behind both
+//! [`crate::storage::WindowCache`] (loaded observation windows) and
+//! [`crate::pdfstore::query::ShardedLru`] (decoded segment blocks).
+//!
+//! Entries carry a monotonically increasing access stamp per shard;
+//! eviction removes the minimum stamp until the shard is back under its
+//! budget (capacity is split evenly across shards). Shard count is a
+//! contention knob, not a capacity one: one shard gives exact global
+//! LRU, many shards let concurrent readers hit disjoint mutexes. Hit /
+//! miss / eviction meters are atomic and always-on — the shared
+//! observability contract both wrappers re-export.
+
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Aggregated observability counters of a sharded LRU.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LruStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// Resident bytes (sum over shards).
+    pub bytes: u64,
+    /// Resident entries (sum over shards).
+    pub entries: usize,
+}
+
+struct Shard<K, V> {
+    map: HashMap<K, (u64, V)>, // key -> (stamp, value)
+    clock: u64,
+    bytes: u64,
+}
+
+/// Sharded LRU with a global byte budget split evenly across shards.
+/// Values are returned by clone — store `Arc`s for large payloads.
+pub struct ShardedStampLru<K, V> {
+    shards: Vec<Mutex<Shard<K, V>>>,
+    shard_budget: u64,
+    /// Sizes a value for budget accounting (a plain `fn`, so both cache
+    /// fronts can supply capture-free weighers).
+    weigh: fn(&V) -> u64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl<K: Hash + Eq + Clone, V: Clone> ShardedStampLru<K, V> {
+    pub fn new(capacity_bytes: u64, n_shards: usize, weigh: fn(&V) -> u64) -> Self {
+        let n = n_shards.max(1);
+        ShardedStampLru {
+            shards: (0..n)
+                .map(|_| {
+                    Mutex::new(Shard {
+                        map: HashMap::new(),
+                        clock: 0,
+                        bytes: 0,
+                    })
+                })
+                .collect(),
+            shard_budget: capacity_bytes / n as u64,
+            weigh,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    fn shard_of(&self, key: &K) -> usize {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        key.hash(&mut h);
+        (h.finish() % self.shards.len() as u64) as usize
+    }
+
+    /// Look up and refresh the access stamp; meters the hit or miss.
+    pub fn get(&self, key: &K) -> Option<V> {
+        let mut g = self.shards[self.shard_of(key)].lock().unwrap();
+        g.clock += 1;
+        let clock = g.clock;
+        let found = g.map.get_mut(key).map(|(stamp, v)| {
+            *stamp = clock;
+            v.clone()
+        });
+        match found {
+            Some(v) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(v)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert (or replace), then evict least-recently-used entries until
+    /// the shard is back under budget. Values bigger than one shard's
+    /// budget are not cached at all (streamed, like input data).
+    pub fn put(&self, key: K, value: V) {
+        let bytes = (self.weigh)(&value);
+        if bytes > self.shard_budget {
+            return;
+        }
+        let mut g = self.shards[self.shard_of(&key)].lock().unwrap();
+        g.clock += 1;
+        let clock = g.clock;
+        if let Some((_, old)) = g.map.insert(key, (clock, value)) {
+            g.bytes -= (self.weigh)(&old);
+        }
+        g.bytes += bytes;
+        while g.bytes > self.shard_budget {
+            let victim = g
+                .map
+                .iter()
+                .min_by_key(|(_, (stamp, _))| *stamp)
+                .map(|(k, _)| k.clone())
+                .expect("over budget implies non-empty");
+            let (_, evicted) = g.map.remove(&victim).unwrap();
+            g.bytes -= (self.weigh)(&evicted);
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn stats(&self) -> LruStats {
+        let mut s = LruStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            ..LruStats::default()
+        };
+        for shard in &self.shards {
+            let g = shard.lock().unwrap();
+            s.bytes += g.bytes;
+            s.entries += g.map.len();
+        }
+        s
+    }
+
+    /// Drop every entry; the hit/miss/eviction meters survive (they
+    /// describe the session, not the current residency).
+    pub fn clear(&self) {
+        for shard in &self.shards {
+            let mut g = shard.lock().unwrap();
+            g.map.clear();
+            g.bytes = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn blob(n: usize) -> Arc<Vec<u8>> {
+        Arc::new(vec![0u8; n])
+    }
+
+    fn weigh(v: &Arc<Vec<u8>>) -> u64 {
+        v.len() as u64
+    }
+
+    #[test]
+    fn single_shard_is_exact_global_lru() {
+        let c: ShardedStampLru<u32, Arc<Vec<u8>>> = ShardedStampLru::new(250, 1, weigh);
+        c.put(0, blob(100));
+        c.put(1, blob(100));
+        assert!(c.get(&0).is_some()); // refresh 0 → 1 becomes LRU
+        c.put(2, blob(100)); // evicts 1
+        assert!(c.get(&1).is_none());
+        assert!(c.get(&0).is_some() && c.get(&2).is_some());
+        let s = c.stats();
+        assert_eq!(s.evictions, 1);
+        assert_eq!((s.bytes, s.entries), (200, 2));
+    }
+
+    #[test]
+    fn oversized_values_are_not_cached() {
+        let c: ShardedStampLru<u32, Arc<Vec<u8>>> = ShardedStampLru::new(100, 4, weigh); // 25/shard
+        c.put(7, blob(30));
+        assert!(c.get(&7).is_none());
+        assert_eq!(c.stats().entries, 0);
+    }
+
+    #[test]
+    fn replace_same_key_updates_bytes() {
+        let c: ShardedStampLru<u32, Arc<Vec<u8>>> = ShardedStampLru::new(10_000, 2, weigh);
+        c.put(1, blob(100));
+        c.put(1, blob(300));
+        let s = c.stats();
+        assert_eq!((s.bytes, s.entries), (300, 1));
+    }
+
+    #[test]
+    fn clear_keeps_meters() {
+        let c: ShardedStampLru<u32, Arc<Vec<u8>>> = ShardedStampLru::new(10_000, 4, weigh);
+        c.put(1, blob(10));
+        assert!(c.get(&1).is_some());
+        assert!(c.get(&2).is_none());
+        c.clear();
+        let s = c.stats();
+        assert_eq!((s.bytes, s.entries), (0, 0));
+        assert_eq!((s.hits, s.misses), (1, 1));
+    }
+
+    #[test]
+    fn shards_partition_the_key_space() {
+        let c: ShardedStampLru<u64, Arc<Vec<u8>>> = ShardedStampLru::new(64 << 10, 8, weigh);
+        for k in 0..256u64 {
+            c.put(k, blob(16));
+        }
+        for k in 0..256u64 {
+            assert!(c.get(&k).is_some(), "key {k} lost without budget pressure");
+        }
+        assert_eq!(c.stats().entries, 256);
+    }
+}

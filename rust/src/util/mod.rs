@@ -6,6 +6,7 @@
 
 pub mod cli;
 pub mod json;
+pub mod lru;
 pub mod pool;
 pub mod prng;
 pub mod testkit;

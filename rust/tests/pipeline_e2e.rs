@@ -196,9 +196,9 @@ fn sampling_is_cheaper_than_fitting_and_close_in_features() {
     let ds = dataset();
     let reader = pdfflow::storage::DatasetReader::new(ds);
     let cache = pdfflow::storage::WindowCache::new(64 << 20);
-    let mut cluster = SimCluster::new(ClusterSpec::lncc());
+    let cluster = SimCluster::new(ClusterSpec::lncc());
     let full = pdfflow::coordinator::sampling::full_slice_features(
-        &reader, &cache, backend.as_ref(), &mut cluster, &tree, 2,
+        &reader, &cache, backend.as_ref(), &cluster, &tree, 2,
     )
     .unwrap();
     for rate in [0.1, 0.5] {
@@ -206,7 +206,7 @@ fn sampling_is_cheaper_than_fitting_and_close_in_features() {
             &reader,
             &cache,
             backend.as_ref(),
-            &mut cluster,
+            &cluster,
             &tree,
             2,
             rate,
@@ -224,7 +224,7 @@ fn sampling_is_cheaper_than_fitting_and_close_in_features() {
     }
     // k-means path also works and returns <= k points.
     let rep = pdfflow::coordinator::sampling::run_sampling(
-        &reader, &cache, backend.as_ref(), &mut cluster, &tree, 2, 0.1, Sampler::KMeans, 7,
+        &reader, &cache, backend.as_ref(), &cluster, &tree, 2, 0.1, Sampler::KMeans, 7,
     )
     .unwrap();
     assert!(rep.n_sampled <= (ds.spec.dims.slice_points() as f64 * 0.1).round() as usize);

@@ -1,0 +1,169 @@
+//! Thread-count invariance of the staged window pipeline: the same
+//! slice run at 1, 2 and 8 executor threads must produce identical
+//! `SliceReport` aggregates and **bit-identical** persisted segment
+//! bytes. This is the acceptance contract of the executor refactor —
+//! parallelism may only change wall-clock, never results.
+
+use pdfflow::cluster::{ClusterSpec, SimCluster};
+use pdfflow::config::PipelineConfig;
+use pdfflow::coordinator::{Method, Pipeline, SliceReport, TypeSet};
+use pdfflow::datagen::{DatasetSpec, SyntheticDataset};
+use pdfflow::runtime::{make_backend, Backend, BackendKind, BackendOptions};
+
+const THREADS: [usize; 3] = [1, 2, 8];
+
+fn backend() -> Box<dyn Backend> {
+    make_backend(
+        BackendKind::Native,
+        "artifacts",
+        &BackendOptions {
+            batch: 64,
+            ..BackendOptions::default()
+        },
+    )
+    .expect("native backend")
+}
+
+fn dataset(root: &std::path::Path) -> SyntheticDataset {
+    SyntheticDataset::generate(&DatasetSpec::tiny(), root.join("data")).expect("dataset")
+}
+
+/// The deterministic face of a report: everything that must not depend
+/// on the executor width (times are measurements and may differ).
+fn fingerprint(r: &SliceReport) -> (u64, usize, usize, usize, usize, u64, u64, usize, usize) {
+    (
+        r.avg_error.to_bits(),
+        r.n_points,
+        r.fits,
+        r.groups,
+        r.reuse_hits,
+        r.shuffle_bytes,
+        r.persist_bytes,
+        r.cache_hits,
+        r.cache_misses,
+    )
+}
+
+fn run_at(
+    ds: &SyntheticDataset,
+    method: Method,
+    store_dir: &std::path::Path,
+    threads: usize,
+) -> (SliceReport, Vec<u8>) {
+    let backend = backend();
+    let cfg = PipelineConfig {
+        batch: 64,
+        window_lines: 4,
+        executor_threads: threads,
+        store_dir: Some(store_dir.to_string_lossy().into_owned()),
+        ..PipelineConfig::default()
+    };
+    let mut pipe = Pipeline::new(ds, backend.as_ref(), SimCluster::new(ClusterSpec::lncc()), cfg);
+    if method.uses_ml() {
+        pipe.ensure_tree(0, TypeSet::Four, 500).expect("tree");
+    }
+    let report = pipe.run_slice(method, 2, TypeSet::Four).expect("slice run");
+    let seg = store_dir.join(format!("slice2_{}_4.seg", method.name()));
+    let bytes = std::fs::read(&seg).expect("segment bytes");
+    (report, bytes)
+}
+
+fn assert_invariant(method: Method, tag: &str) {
+    let root = std::env::temp_dir().join(format!(
+        "pdfflow-invariance-{tag}-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&root);
+    let ds = dataset(&root);
+    let mut runs = Vec::new();
+    for threads in THREADS {
+        let store = root.join(format!("store-{threads}"));
+        runs.push((threads, run_at(&ds, method, &store, threads)));
+    }
+    let (_, (base_report, base_bytes)) = &runs[0];
+    for (threads, (report, bytes)) in &runs[1..] {
+        assert_eq!(
+            fingerprint(report),
+            fingerprint(base_report),
+            "{tag}: report aggregates diverge at {threads} threads"
+        );
+        assert_eq!(
+            report.windows.len(),
+            base_report.windows.len(),
+            "{tag}: window count at {threads} threads"
+        );
+        assert!(
+            bytes == base_bytes,
+            "{tag}: persisted segment bytes diverge at {threads} threads \
+             ({} vs {} bytes)",
+            bytes.len(),
+            base_bytes.len()
+        );
+    }
+    // The decomposed per-window reports must agree too (same windows, in
+    // slice order, with identical deterministic columns).
+    for (threads, (report, _)) in &runs[1..] {
+        for (w1, w0) in report.windows.iter().zip(&base_report.windows) {
+            assert_eq!(w1.window.y0, w0.window.y0, "{tag}: window order @{threads}");
+            assert_eq!(w1.fits, w0.fits, "{tag}: per-window fits @{threads}");
+            assert_eq!(
+                w1.err_sum.to_bits(),
+                w0.err_sum.to_bits(),
+                "{tag}: per-window error @{threads}"
+            );
+        }
+    }
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn baseline_is_thread_count_invariant() {
+    assert_invariant(Method::Baseline, "baseline");
+}
+
+#[test]
+fn grouping_is_thread_count_invariant() {
+    assert_invariant(Method::Grouping, "grouping");
+}
+
+#[test]
+fn reuse_is_thread_count_invariant() {
+    // Reuse threads state across windows: the pipeline must sequence its
+    // fits even when loads run wide.
+    assert_invariant(Method::Reuse, "reuse");
+}
+
+#[test]
+fn grouping_ml_is_thread_count_invariant() {
+    assert_invariant(Method::GroupingMl, "gml");
+}
+
+#[test]
+fn simulated_ledger_is_thread_count_invariant() {
+    // The shared SimCluster ledger is merged in window order, so even
+    // the *simulated* persist/shuffle accounts (pure functions of bytes,
+    // not wall-clock) are identical across widths.
+    let root = std::env::temp_dir().join(format!("pdfflow-invariance-ledger-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let ds = dataset(&root);
+    let mut persists = Vec::new();
+    for threads in THREADS {
+        let backend = backend();
+        let cfg = PipelineConfig {
+            batch: 64,
+            window_lines: 4,
+            executor_threads: threads,
+            store_dir: Some(root.join(format!("s{threads}")).to_string_lossy().into_owned()),
+            ..PipelineConfig::default()
+        };
+        let mut pipe =
+            Pipeline::new(&ds, backend.as_ref(), SimCluster::new(ClusterSpec::lncc()), cfg);
+        pipe.run_slice(Method::Grouping, 2, TypeSet::Four).unwrap();
+        persists.push(pipe.cluster.account("persist.nfs").to_bits());
+    }
+    assert!(
+        persists.iter().all(|&p| p == persists[0]),
+        "persist.nfs diverges across thread counts: {persists:?}"
+    );
+    std::fs::remove_dir_all(&root).unwrap();
+}
