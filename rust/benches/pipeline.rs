@@ -9,13 +9,17 @@
 //! cargo bench --bench pipeline -- --json   # also write BENCH_pipeline.json
 //! ```
 //!
-//! The JSON report (also triggered by PDFFLOW_BENCH_JSON=1) is the
-//! machine-readable record CI or EXPERIMENTS.md can track: per thread
-//! count, windows/s and speedup vs 1 thread, plus the invariance
-//! fingerprint (avg_error bits, fits) proving the runs were identical.
+//! The JSON report (also triggered by PDFFLOW_BENCH_JSON=1) lands at
+//! the **repo root** in the shared cross-bench schema
+//! `{bench, config, rows: [{threads, throughput}]}` — the
+//! machine-readable perf trajectory CI and EXPERIMENTS.md track — plus
+//! the invariance fingerprint (avg_error bits, fits) proving the runs
+//! were identical. `PDFFLOW_BENCH_SMOKE=1` shrinks the dataset to a CI
+//! smoke profile (recorded in `config.profile`).
 
 use std::time::Instant;
 
+use pdfflow::bench::{write_bench_json, BenchRow};
 use pdfflow::cluster::{ClusterSpec, SimCluster};
 use pdfflow::config::PipelineConfig;
 use pdfflow::coordinator::{Method, Pipeline, SliceReport, TypeSet};
@@ -65,13 +69,19 @@ fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let want_json = argv.iter().any(|a| a == "--json")
         || std::env::var("PDFFLOW_BENCH_JSON").is_ok();
+    let smoke = std::env::var("PDFFLOW_BENCH_SMOKE").is_ok();
 
     let root = std::env::temp_dir().join(format!("pdfflow-pipebench-{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&root);
-    // Enough windows (16) and observations to keep every thread fed.
+    // Enough windows and observations to keep every thread fed; the
+    // smoke profile trades fidelity for CI wall-clock.
     let mut spec = DatasetSpec::tiny();
-    spec.dims = CubeDims::new(96, 64, 4);
-    spec.n_sims = 400;
+    spec.dims = if smoke {
+        CubeDims::new(48, 16, 4)
+    } else {
+        CubeDims::new(96, 64, 4)
+    };
+    spec.n_sims = if smoke { 120 } else { 400 };
     spec.seed = 20180601;
     let ds = SyntheticDataset::generate(&spec, root.join("data")).expect("dataset");
     let n_windows = spec.dims.ny.div_ceil(4);
@@ -86,7 +96,7 @@ fn main() {
         "threads", "secs", "windows/s", "speedup"
     );
 
-    // Warm-up run (page cache, allocator) outside measurement.
+    // Warm-up run (page cache, allocator, host pool) outside measurement.
     let _ = run_once(&ds, 1);
 
     let mut rows = Vec::new();
@@ -111,33 +121,39 @@ fn main() {
     println!("(reports identical across all thread counts)");
 
     if want_json {
-        let entries: Vec<Json> = rows
+        let bench_rows: Vec<BenchRow> = rows
             .iter()
-            .map(|(threads, secs, wps, speedup)| {
-                Json::obj(vec![
-                    ("threads", Json::Num(*threads as f64)),
+            .map(|(threads, secs, wps, speedup)| BenchRow {
+                threads: *threads,
+                throughput: *wps,
+                extra: vec![
                     ("secs", Json::Num(*secs)),
-                    ("windows_per_s", Json::Num(*wps)),
                     ("speedup_vs_1", Json::Num(*speedup)),
-                ])
+                ],
             })
             .collect();
         let (err_bits, fits) = fingerprint.expect("at least one run");
-        let doc = Json::obj(vec![
-            ("bench", Json::Str("pipeline".into())),
-            ("windows", Json::Num(n_windows as f64)),
-            ("observations", Json::Num(spec.n_sims as f64)),
-            ("rows", Json::Arr(entries)),
-            (
+        let path = write_bench_json(
+            "pipeline",
+            vec![
+                ("profile", Json::Str(String::from(if smoke { "smoke" } else { "full" }))),
+                ("unit", Json::Str("windows_per_s".into())),
+                ("windows", Json::Num(n_windows as f64)),
+                ("observations", Json::Num(spec.n_sims as f64)),
+                ("backend_workers", Json::Num(1.0)),
+                ("window_lines", Json::Num(4.0)),
+            ],
+            bench_rows,
+            vec![(
                 "fingerprint",
                 Json::obj(vec![
                     ("avg_error_bits", Json::Str(format!("{err_bits:016x}"))),
                     ("fits", Json::Num(fits as f64)),
                 ]),
-            ),
-        ]);
-        std::fs::write("BENCH_pipeline.json", doc.to_string()).expect("write BENCH_pipeline.json");
-        println!("wrote BENCH_pipeline.json");
+            )],
+        )
+        .expect("write BENCH_pipeline.json");
+        println!("wrote {}", path.display());
     }
 
     let _ = std::fs::remove_dir_all(&root);

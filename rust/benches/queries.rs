@@ -7,30 +7,48 @@
 //! (second pass over the same keys), plus region-summary and
 //! quantile-surface analytics throughput. This is the north-star
 //! workload: many concurrent readers asking for served PDFs.
+//!
+//! `--json` (or PDFFLOW_BENCH_JSON=1) writes `BENCH_queries.json` at
+//! the repo root in the shared cross-bench schema
+//! `{bench, config, rows: [{threads, throughput}]}` (throughput =
+//! warm-cache queries/s; the cold rate rides along per row).
+//! `PDFFLOW_BENCH_SMOKE=1` shrinks the workload to a CI smoke profile.
 
 use std::time::Instant;
 
+use pdfflow::bench::{write_bench_json, BenchRow};
 use pdfflow::cluster::{ClusterSpec, SimCluster};
 use pdfflow::config::PipelineConfig;
 use pdfflow::coordinator::{Method, Pipeline, TypeSet};
 use pdfflow::cube::{CubeDims, PointId};
 use pdfflow::datagen::{DatasetSpec, SyntheticDataset};
+use pdfflow::executor::Executor;
 use pdfflow::pdfstore::{QueryEngine, QueryOptions, RegionQuery};
-use pdfflow::runtime::{make_backend, BackendKind, BackendOptions};
-use pdfflow::util::pool;
+use pdfflow::runtime::{hostpool, make_backend, BackendKind, BackendOptions};
+use pdfflow::util::json::Json;
 use pdfflow::util::prng::Rng;
 use pdfflow::util::timing::fmt_bytes;
 
 const SLICES: [usize; 2] = [2, 3];
 
 fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let want_json = argv.iter().any(|a| a == "--json")
+        || std::env::var("PDFFLOW_BENCH_JSON").is_ok();
+    let smoke = std::env::var("PDFFLOW_BENCH_SMOKE").is_ok();
+
     let root = std::env::temp_dir().join(format!("pdfflow-querybench-{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&root);
     let store_dir = root.join("store");
 
-    // A mid-size cube: 64 x 48 lines x 6 slices, 100 observations.
+    // A mid-size cube: 64 x 48 lines x 6 slices, 100 observations
+    // (smoke: 32 x 16 x 6).
     let mut spec = DatasetSpec::tiny();
-    spec.dims = CubeDims::new(64, 48, 6);
+    spec.dims = if smoke {
+        CubeDims::new(32, 16, 6)
+    } else {
+        CubeDims::new(64, 48, 6)
+    };
     spec.seed = 20180599;
     let ds = SyntheticDataset::generate(&spec, root.join("data")).expect("dataset");
     let backend = make_backend(
@@ -72,7 +90,7 @@ fn main() {
     // Deterministic random point workload across both slices.
     let mut rng = Rng::new(7);
     let slice_pts = spec.dims.slice_points() as u64;
-    let n_queries = 20_000usize;
+    let n_queries = if smoke { 4_000usize } else { 20_000usize };
     let ids: Vec<PointId> = (0..n_queries)
         .map(|_| {
             let z = SLICES[rng.below(SLICES.len())] as u64;
@@ -84,7 +102,8 @@ fn main() {
         "\n{:<10} {:>14} {:>14}  ({} point queries)",
         "threads", "cold q/s", "warm q/s", n_queries
     );
-    let max_threads = pool::default_workers().max(4);
+    let max_threads = hostpool::default_budget().max(4);
+    let mut rows: Vec<BenchRow> = Vec::new();
     for threads in [1usize, 2, 4, 8] {
         if threads > max_threads {
             break;
@@ -96,7 +115,8 @@ fn main() {
             let t = Instant::now();
             let chunk = ids.len().div_ceil(threads);
             let chunks: Vec<Vec<PointId>> = ids.chunks(chunk).map(|c| c.to_vec()).collect();
-            let results = pool::parallel_map(chunks, threads, |chunk| {
+            let exec = Executor::new(threads);
+            let results = exec.run(chunks, |chunk| {
                 let mut acc = 0u64;
                 for id in chunk {
                     acc ^= engine.point_by_id(id).expect("point").point.0;
@@ -109,6 +129,11 @@ fn main() {
         let cold = run(true);
         let warm = run(false);
         println!("{threads:<10} {cold:>14.0} {warm:>14.0}");
+        rows.push(BenchRow {
+            threads,
+            throughput: warm,
+            extra: vec![("cold_qps", Json::Num(cold))],
+        });
     }
     let m = engine.meters();
     println!(
@@ -139,9 +164,10 @@ fn main() {
         pts += engine.region_summary(q).expect("summary").n_points;
     }
     let dt = t.elapsed().as_secs_f64();
+    let regions_per_s = regions.len() as f64 / dt;
     println!(
         "\nregion_summary: {:.0} regions/s ({:.2}M points/s scanned)",
-        regions.len() as f64 / dt,
+        regions_per_s,
         pts as f64 / dt / 1e6
     );
     let t = Instant::now();
@@ -152,6 +178,23 @@ fn main() {
     let dt = t.elapsed().as_secs_f64();
     std::hint::black_box(acc);
     println!("region_quantile_mean(P50): {:.1} regions/s", 20.0 / dt);
+
+    if want_json {
+        let path = write_bench_json(
+            "queries",
+            vec![
+                ("profile", Json::Str(String::from(if smoke { "smoke" } else { "full" }))),
+                ("unit", Json::Str("warm_queries_per_s".into())),
+                ("n_queries", Json::Num(n_queries as f64)),
+                ("records", Json::Num(engine.store().n_records() as f64)),
+                ("cache_mb", Json::Num(32.0)),
+            ],
+            rows,
+            vec![("region_summary_per_s", Json::Num(regions_per_s))],
+        )
+        .expect("write BENCH_queries.json");
+        println!("wrote {}", path.display());
+    }
 
     let _ = std::fs::remove_dir_all(&root);
 }

@@ -30,6 +30,58 @@ pub const FIGURES: &[&str] = &[
     "fig15", "fig16", "fig17", "fig18", "fig19", "fig20", "treestats",
 ];
 
+/// One scaling row of a `BENCH_*.json` record: a thread count and its
+/// throughput (windows/s, queries/s, …), plus free-form extra columns.
+pub struct BenchRow {
+    pub threads: usize,
+    pub throughput: f64,
+    pub extra: Vec<(&'static str, crate::util::json::Json)>,
+}
+
+/// Repo-root path of a bench trajectory record: `BENCH_<name>.json`
+/// next to ROADMAP.md, whatever directory cargo runs from.
+pub fn bench_json_path(name: &str) -> PathBuf {
+    let manifest = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    manifest
+        .parent()
+        .unwrap_or(manifest)
+        .join(format!("BENCH_{name}.json"))
+}
+
+/// Write a bench record in the shared cross-bench schema
+/// `{bench, config, rows: [{threads, throughput, ...}], ...extra}` to
+/// the repo root (see [`bench_json_path`]); returns the path written.
+/// Both bench binaries and the tier-1 smoke tests emit through here, so
+/// the perf trajectory files cannot drift apart in shape.
+pub fn write_bench_json(
+    name: &str,
+    config: Vec<(&str, crate::util::json::Json)>,
+    rows: Vec<BenchRow>,
+    extra: Vec<(&str, crate::util::json::Json)>,
+) -> Result<PathBuf> {
+    use crate::util::json::Json;
+    let rows: Vec<Json> = rows
+        .into_iter()
+        .map(|r| {
+            let mut pairs = vec![
+                ("threads", Json::Num(r.threads as f64)),
+                ("throughput", Json::Num(r.throughput)),
+            ];
+            pairs.extend(r.extra);
+            Json::obj(pairs)
+        })
+        .collect();
+    let mut pairs = vec![
+        ("bench", Json::Str(name.to_string())),
+        ("config", Json::obj(config)),
+        ("rows", Json::Arr(rows)),
+    ];
+    pairs.extend(extra);
+    let path = bench_json_path(name);
+    std::fs::write(&path, Json::obj(pairs).to_string())?;
+    Ok(path)
+}
+
 /// Bench environment: compute backend + dataset root + scale.
 pub struct BenchEnv {
     pub backend: Box<dyn Backend>,

@@ -28,16 +28,24 @@ pub struct PipelineConfig {
     /// with exactly the same mean and standard deviation"; f32 results
     /// need an epsilon grid).
     pub group_quantum: f64,
-    /// Host threads for loading/compute.
+    /// **The single host thread budget**: total size of the shared
+    /// [`crate::runtime::hostpool`] every layer (executor stages,
+    /// backend chunk fan-out, query fan-out) draws from. `None` leaves
+    /// the pool at its default (`PDFFLOW_THREADS` env > all host
+    /// cores). Applied at startup via `hostpool::configure`; the pool
+    /// is process-wide, so the first configured value wins. Precedence:
+    /// `--host-threads` CLI flag > `pipeline.host_threads` config key >
+    /// `PDFFLOW_THREADS` env > cores.
+    pub host_threads: Option<usize>,
+    /// Width cap on the backend's chunk fan-out within the shared
+    /// budget (not a thread count — nothing spawns per call anymore).
     pub workers: usize,
     /// Driver executor width: how many windows (and RDD partition tasks)
     /// may be in flight at once. Results are thread-count invariant —
-    /// this knob only trades wall-clock for cores. It composes
-    /// *multiplicatively* with `workers` (the backend's inner batch
-    /// pool): in-flight windows each run backend fits, so on a fully
-    /// loaded host lower one knob when raising the other (the scaling
-    /// bench pins `workers = 1`). Precedence: `--executor-threads` CLI
-    /// flag > `pipeline.executor_threads` config key >
+    /// this knob only trades wall-clock for cores. Like `workers` it is
+    /// a width cap on the one shared pool budget: raising both can no
+    /// longer oversubscribe the host. Precedence: `--executor-threads`
+    /// CLI flag > `pipeline.executor_threads` config key >
     /// `PDFFLOW_EXECUTOR_THREADS` env > all host cores.
     pub executor_threads: usize,
     /// When set, per-slice fit outcomes are persisted here (Algorithm 1
@@ -60,7 +68,8 @@ impl Default for PipelineConfig {
             partitions: None,
             cache_bytes: 512 << 20,
             group_quantum: 1e-6,
-            workers: crate::util::pool::default_workers(),
+            host_threads: None,
+            workers: runtime::hostpool::default_budget(),
             executor_threads: crate::executor::default_threads(),
             persist_dir: None,
             store_dir: None,
@@ -228,6 +237,9 @@ impl ExperimentConfig {
         cfg.pipeline.executor_threads = doc
             .usize_or("pipeline.executor_threads", cfg.pipeline.executor_threads)
             .max(1);
+        if let Some(n) = doc.get("pipeline.host_threads").and_then(|v| v.as_i64()) {
+            cfg.pipeline.host_threads = Some((n.max(1)) as usize);
+        }
         cfg.pipeline.group_quantum = doc.f64_or("pipeline.group_quantum", cfg.pipeline.group_quantum);
         cfg.pipeline.cache_bytes = doc.i64_or("pipeline.cache_bytes", cfg.pipeline.cache_bytes as i64) as u64;
         if let Some(p) = doc.get("pipeline.partitions").and_then(|v| v.as_i64()) {
@@ -349,6 +361,30 @@ batch = 64
         assert_eq!(c.pipeline.executor_threads, 1);
         // Default: at least one thread, no env assumption.
         assert!(ExperimentConfig::small().pipeline.executor_threads >= 1);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn host_threads_key_parses_and_defaults_to_none() {
+        let dir = std::env::temp_dir().join(format!("pdfflow-cfg6-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("host.toml");
+        std::fs::write(
+            &path,
+            "preset = \"small\"\n[pipeline]\nhost_threads = 6\n",
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_file(&path).unwrap();
+        assert_eq!(c.pipeline.host_threads, Some(6));
+        assert_eq!(ExperimentConfig::small().pipeline.host_threads, None);
+        // Zero clamps to 1 (the pool always has the caller slot).
+        std::fs::write(
+            &path,
+            "preset = \"small\"\n[pipeline]\nhost_threads = 0\n",
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_file(&path).unwrap();
+        assert_eq!(c.pipeline.host_threads, Some(1));
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -3,51 +3,75 @@
 //! the paper's §4.2 "parallel execution" principle).
 //!
 //! The executor runs a *stage*: a vector of independent tasks claimed
-//! from a shared work queue by up to `threads` workers (work-stealing by
-//! atomic cursor, like the partition task sets the Ripley's-K and
-//! random-forest Spark systems schedule per stage). Two contracts make
-//! the rest of the system simple:
+//! from a shared work queue by up to `threads` concurrent claim loops
+//! (work-stealing by atomic cursor, like the partition task sets the
+//! Ripley's-K and random-forest Spark systems schedule per stage). Two
+//! contracts make the rest of the system simple:
 //!
 //! * **Deterministic task → result ordering.** Results are always
 //!   delivered in task-index order, never completion order, so every
 //!   caller observes the same output at any thread count.
 //! * **Fail-fast stages.** A panicking task fails the whole stage (the
-//!   panic propagates to the caller after all workers drain); a task
+//!   panic propagates to the caller after the stage quiesces); a task
 //!   returning `Err` cancels the remaining queue and the stage reports
 //!   the error of the smallest failing task index.
 //!
-//! [`Executor::run_sequenced`] is the pipelined variant: workers compute
-//! tasks concurrently while the calling thread consumes results through
-//! a *sequenced sink* — a reorder buffer that invokes the consumer
-//! strictly in task order. This is how the window pipeline overlaps
-//! loading/fitting of window *i+1* with persisting window *i* while the
-//! segment writer still sees windows in slice order.
+//! Since the host-pool refactor the executor owns **no threads**: every
+//! stage draws from the process-wide [`HostPool`] budget, and `threads`
+//! is a *width cap* on how many pool slots the stage may use. Plain
+//! stages ([`Executor::run`], [`Executor::try_run`]) are help-first —
+//! the calling thread claims tasks alongside the pool workers — so
+//! nested stages (an RDD action inside a window task, a backend call
+//! inside either) compose without oversubscribing or deadlocking: the
+//! total number of live compute threads never exceeds the one budget.
 //!
-//! Workers are scoped threads spawned per stage: tasks may borrow from
-//! the caller's stack (dataset readers, backends, caches), and an
-//! `Executor` is just a thread-count policy — cheap to create, cheap to
-//! share (`&Executor` is `Sync`).
+//! [`Executor::run_sequenced`] is the pipelined variant: pool workers
+//! compute tasks concurrently while the calling thread consumes results
+//! through a *sequenced sink* — a reorder buffer that invokes the
+//! consumer strictly in task order. This is how the window pipeline
+//! overlaps loading/fitting of window *i+1* with persisting window *i*
+//! while the segment writer still sees windows in slice order.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{mpsc, Condvar, Mutex};
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::Instant;
 
+use crate::runtime::hostpool::{self, HostPool, PanicPayload};
 use crate::Result;
 
 /// Default executor width: the `PDFFLOW_EXECUTOR_THREADS` environment
-/// override when set to a positive integer, else all host cores.
+/// override when set to a positive integer, else the full host budget.
 pub fn default_threads() -> usize {
     std::env::var("PDFFLOW_EXECUTOR_THREADS")
         .ok()
         .and_then(|s| s.trim().parse::<usize>().ok())
         .filter(|&n| n > 0)
-        .unwrap_or_else(crate::util::pool::default_workers)
+        .unwrap_or_else(hostpool::default_budget)
 }
 
-/// A stage executor with a fixed worker-thread budget.
-#[derive(Clone, Copy, Debug)]
+/// Per-stage observability: what one executor stage actually did.
+/// Deterministic fields (`tasks`) are thread-count invariant; the
+/// others are measurements and vary run to run like any timing.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StageMetrics {
+    /// Tasks executed by the stage.
+    pub tasks: u64,
+    /// Summed wall-clock seconds spent inside task bodies.
+    pub busy_s: f64,
+    /// Maximum tasks observed running concurrently.
+    pub peak_in_flight: usize,
+    /// Deepest reorder buffer (results completed but not yet consumed
+    /// in task order) a sequenced stage ever held.
+    pub peak_pending: usize,
+}
+
+/// A stage executor with a width cap on the shared host-pool budget.
+#[derive(Clone, Debug)]
 pub struct Executor {
     threads: usize,
+    pool: Arc<HostPool>,
 }
 
 impl Default for Executor {
@@ -58,10 +82,16 @@ impl Default for Executor {
 
 impl Executor {
     /// An executor running at most `threads` concurrent tasks (clamped
-    /// to at least 1).
+    /// to at least 1) on the global [`HostPool`].
     pub fn new(threads: usize) -> Executor {
+        Executor::on_pool(threads, Arc::clone(HostPool::global()))
+    }
+
+    /// An executor on an explicit pool (tests pin budgets this way).
+    pub fn on_pool(threads: usize, pool: Arc<HostPool>) -> Executor {
         Executor {
             threads: threads.max(1),
+            pool,
         }
     }
 
@@ -74,40 +104,67 @@ impl Executor {
         self.threads
     }
 
+    /// The pool this executor draws its budget from.
+    pub fn pool(&self) -> &Arc<HostPool> {
+        &self.pool
+    }
+
     /// Run one stage of infallible tasks; returns results in task order.
-    /// A panic in any task propagates to the caller once every worker
-    /// has drained (the stage fails as a unit). Scheduling delegates to
-    /// the shared work-queue kernel in [`crate::util::pool`] — one
-    /// claim-by-cursor implementation serves both the executor and the
-    /// pool's direct users.
+    /// A panic in any task propagates to the caller once the stage has
+    /// quiesced (the stage fails as a unit). Help-first on the shared
+    /// pool: safe to call from anywhere, including inside other stages.
     pub fn run<T, R, F>(&self, tasks: Vec<T>, f: F) -> Vec<R>
     where
         T: Send,
         R: Send,
         F: Fn(T) -> R + Sync,
     {
-        crate::util::pool::parallel_map(tasks, self.threads, f)
+        self.pool.parallel_map(tasks, self.threads, f)
     }
 
     /// Run one stage of fallible tasks. On success returns all results
     /// in task order; on failure returns the error of the *smallest*
-    /// failing task index (deterministic at any thread count) after
-    /// cancelling the unclaimed remainder of the queue.
+    /// failing task index (deterministic at any thread count — claims
+    /// happen in cursor order, so every task below the first failure
+    /// has run) after cancelling the unclaimed remainder of the queue.
     pub fn try_run<T, R, F>(&self, tasks: Vec<T>, f: F) -> Result<Vec<R>>
     where
         T: Send,
         R: Send,
         F: Fn(T) -> Result<R> + Sync,
     {
-        let mut out = Vec::with_capacity(tasks.len());
-        self.run_sequenced(tasks, f, |_, r| {
-            out.push(r);
-            Ok(())
-        })?;
+        // Cancellation watermark: the smallest failing index seen so
+        // far. A task is skipped only when its index is *above* the
+        // watermark, so every task below the final smallest failure is
+        // guaranteed to have run — which is what makes the reported
+        // error deterministic at any width.
+        let first_err = AtomicUsize::new(usize::MAX);
+        let indexed: Vec<(usize, T)> = tasks.into_iter().enumerate().collect();
+        let results = self.pool.parallel_map(indexed, self.threads, |(i, t)| {
+            if i > first_err.load(Ordering::Relaxed) {
+                return None;
+            }
+            let r = f(t);
+            if r.is_err() {
+                first_err.fetch_min(i, Ordering::Relaxed);
+            }
+            Some(r)
+        });
+        let mut out = Vec::with_capacity(results.len());
+        for r in results {
+            match r {
+                Some(Ok(v)) => out.push(v),
+                Some(Err(e)) => return Err(e),
+                // Unreachable before the first error: a skip at index i
+                // needs a recorded failure below i, and the scan returns
+                // at that failure first.
+                None => unreachable!("skipped task precedes the failure that cancelled it"),
+            }
+        }
         Ok(out)
     }
 
-    /// The pipelined stage: `worker` runs on up to `threads` tasks
+    /// The pipelined stage: `worker` runs on up to `threads` pool slots
     /// concurrently while `consumer` receives each result **in task
     /// order** on the calling thread (a reorder buffer sequences
     /// out-of-order completions). The consumer may therefore hold
@@ -123,12 +180,28 @@ impl Executor {
     ///
     /// A task or consumer error cancels the unclaimed queue; the stage
     /// returns the error seen at the smallest task index (results past
-    /// it are discarded, their side effects never consumed).
-    pub fn run_sequenced<T, R, F, C>(
+    /// it are discarded, their side effects never consumed). Called on
+    /// a pool worker (or on a workerless pool) the stage runs inline —
+    /// the sink must never park a budgeted thread.
+    pub fn run_sequenced<T, R, F, C>(&self, tasks: Vec<T>, worker: F, consumer: C) -> Result<()>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(T) -> Result<R> + Sync,
+        C: FnMut(usize, R) -> Result<()>,
+    {
+        let mut metrics = StageMetrics::default();
+        self.run_sequenced_metered(tasks, worker, consumer, &mut metrics)
+    }
+
+    /// [`run_sequenced`] that also fills per-stage [`StageMetrics`]
+    /// (surfaced by verbose slice reports).
+    pub fn run_sequenced_metered<T, R, F, C>(
         &self,
         tasks: Vec<T>,
         worker: F,
         mut consumer: C,
+        metrics: &mut StageMetrics,
     ) -> Result<()>
     where
         T: Send,
@@ -141,126 +214,162 @@ impl Executor {
             return Ok(());
         }
         let workers = self.threads.min(n);
-        if workers == 1 {
+        if workers == 1 || self.pool.spawned_threads() == 0 || hostpool::on_pool_worker() {
             for (i, t) in tasks.into_iter().enumerate() {
-                consumer(i, worker(t)?)?;
+                let t0 = Instant::now();
+                let r = worker(t)?;
+                metrics.tasks += 1;
+                metrics.busy_s += t0.elapsed().as_secs_f64();
+                metrics.peak_in_flight = metrics.peak_in_flight.max(1);
+                consumer(i, r)?;
             }
             return Ok(());
         }
-        let slots: Vec<Mutex<Option<T>>> =
-            tasks.into_iter().map(|t| Mutex::new(Some(t))).collect();
+
+        let slots: Vec<Mutex<Option<T>>> = tasks.into_iter().map(|t| Mutex::new(Some(t))).collect();
         let cursor = AtomicUsize::new(0);
         let cancelled = AtomicBool::new(false);
         // Admission gate: consumed-watermark + condvar. Workers wait
         // until their task index is within `watermark + workers`.
         let gate: (Mutex<usize>, Condvar) = (Mutex::new(0), Condvar::new());
-        let (tx, rx) = mpsc::channel::<(usize, Result<R>)>();
-        let mut outcome: Result<()> = Ok(());
+        let busy_nanos = AtomicU64::new(0);
+        let in_flight = AtomicUsize::new(0);
+        let peak_in_flight = AtomicUsize::new(0);
 
-        /// Unwinding out of a worker (or out of the sink) must wake
-        /// gate-waiting peers and cancel the stage, or they would wait
-        /// for a watermark that will never advance and `scope`'s join
-        /// would hang forever.
-        struct PanicRelease<'a> {
+        enum Msg<R> {
+            Done(Result<R>),
+            Panicked(PanicPayload),
+        }
+        let (tx, rx) = mpsc::channel::<(usize, Msg<R>)>();
+        // One sender shared by every claim loop (mpsc senders are not
+        // Sync, so sends serialize through a mutex — cheap next to the
+        // task bodies).
+        let tx = Mutex::new(tx);
+
+        let worker = &worker;
+        let work = |_k: usize| {
+            loop {
+                if cancelled.load(Ordering::Relaxed) {
+                    break;
+                }
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                // Backpressure: wait for admission. The task at the
+                // watermark itself is always admitted, so the sink can
+                // always make progress.
+                {
+                    let (lock, cv) = &gate;
+                    let mut consumed = lock.lock().unwrap();
+                    while i >= *consumed + workers && !cancelled.load(Ordering::Relaxed) {
+                        consumed = cv.wait(consumed).unwrap();
+                    }
+                }
+                if cancelled.load(Ordering::Relaxed) {
+                    break;
+                }
+                let t = slots[i].lock().unwrap().take().expect("task claimed twice");
+                let live = in_flight.fetch_add(1, Ordering::Relaxed) + 1;
+                peak_in_flight.fetch_max(live, Ordering::Relaxed);
+                let t0 = Instant::now();
+                let outcome = catch_unwind(AssertUnwindSafe(|| worker(t)));
+                busy_nanos.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                in_flight.fetch_sub(1, Ordering::Relaxed);
+                match outcome {
+                    Ok(r) => {
+                        if tx.lock().unwrap().send((i, Msg::Done(r))).is_err() {
+                            break; // stage cancelled, receiver gone
+                        }
+                    }
+                    Err(p) => {
+                        // Fail the stage: wake gate-parked peers, hand
+                        // the payload to the sink for re-raise.
+                        cancelled.store(true, Ordering::Relaxed);
+                        {
+                            let _g = gate.0.lock().unwrap();
+                            gate.1.notify_all();
+                        }
+                        let _ = tx.lock().unwrap().send((i, Msg::Panicked(p)));
+                        break;
+                    }
+                }
+            }
+        };
+
+        let handle = self.pool.scope_tickets(workers, workers, &work);
+
+        // However the sink ends — completion, a consumer error, or a
+        // consumer *panic* — the stage must be cancelled and the
+        // admission-waiters woken, or the join below would hang on
+        // parked claim loops. Declared after `handle` so it fires first
+        // on unwind.
+        struct CancelOnDrop<'a> {
             cancelled: &'a AtomicBool,
             gate: &'a (Mutex<usize>, Condvar),
-            armed: bool,
         }
-        impl Drop for PanicRelease<'_> {
+        impl Drop for CancelOnDrop<'_> {
             fn drop(&mut self) {
-                if self.armed {
-                    self.cancelled.store(true, Ordering::Relaxed);
-                    let _unused = self.gate.0.lock().unwrap();
-                    self.gate.1.notify_all();
+                self.cancelled.store(true, Ordering::Relaxed);
+                let _g = self.gate.0.lock().unwrap();
+                self.gate.1.notify_all();
+            }
+        }
+        let cancel = CancelOnDrop {
+            cancelled: &cancelled,
+            gate: &gate,
+        };
+
+        // Sequenced sink: buffer out-of-order completions, deliver
+        // strictly in task order, publish the watermark after each
+        // delivery so waiting claim loops are admitted.
+        let mut outcome: Result<()> = Ok(());
+        let mut panicked: Option<PanicPayload> = None;
+        let mut pending: BTreeMap<usize, Result<R>> = BTreeMap::new();
+        let mut peak_pending = 0usize;
+        let mut consumed_n = 0u64;
+        let mut next = 0usize;
+        'sink: while next < n {
+            // Disconnect is impossible (the sender outlives the sink);
+            // break defensively rather than unwrap.
+            let Ok((i, msg)) = rx.recv() else { break 'sink };
+            let r = match msg {
+                Msg::Done(r) => r,
+                Msg::Panicked(p) => {
+                    panicked = Some(p);
+                    break 'sink;
+                }
+            };
+            pending.insert(i, r);
+            peak_pending = peak_pending.max(pending.len());
+            while let Some(r) = pending.remove(&next) {
+                match r.and_then(|v| consumer(next, v)) {
+                    Ok(()) => {
+                        consumed_n += 1;
+                        next += 1;
+                        let (lock, cv) = &gate;
+                        *lock.lock().unwrap() = next;
+                        cv.notify_all();
+                    }
+                    Err(e) => {
+                        outcome = Err(e);
+                        break 'sink;
+                    }
                 }
             }
         }
-
-        std::thread::scope(|scope| {
-            let slots = &slots;
-            let cursor = &cursor;
-            let cancelled = &cancelled;
-            let gate = &gate;
-            let worker = &worker;
-            for _ in 0..workers {
-                let tx = tx.clone();
-                scope.spawn(move || loop {
-                    if cancelled.load(Ordering::Relaxed) {
-                        break;
-                    }
-                    let i = cursor.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
-                    }
-                    // Backpressure: wait for admission. The task at the
-                    // watermark itself is always admitted (workers > 0),
-                    // so the sink can always make progress.
-                    {
-                        let (lock, cv) = gate;
-                        let mut consumed = lock.lock().unwrap();
-                        while i >= *consumed + workers && !cancelled.load(Ordering::Relaxed) {
-                            consumed = cv.wait(consumed).unwrap();
-                        }
-                    }
-                    if cancelled.load(Ordering::Relaxed) {
-                        break;
-                    }
-                    let t = slots[i].lock().unwrap().take().expect("task claimed twice");
-                    let mut release = PanicRelease {
-                        cancelled,
-                        gate,
-                        armed: true,
-                    };
-                    let r = worker(t);
-                    release.armed = false;
-                    if tx.send((i, r)).is_err() {
-                        break; // stage cancelled, receiver gone
-                    }
-                });
-            }
-            drop(tx);
-
-            // However the sink ends — completion, a consumer error, or
-            // a consumer *panic* — the stage must be cancelled and the
-            // admission-waiters woken, or scope's join would hang on
-            // parked workers. The armed guard covers all three paths.
-            let _sink_release = PanicRelease {
-                cancelled,
-                gate,
-                armed: true,
-            };
-
-            // Sequenced sink: buffer out-of-order completions, deliver
-            // strictly in task order, publish the watermark after each
-            // delivery so waiting workers are admitted.
-            let mut pending: BTreeMap<usize, Result<R>> = BTreeMap::new();
-            let mut next = 0usize;
-            'sink: while next < n {
-                // Channel disconnect before all results arrived means a
-                // worker panicked; fall through and let scope propagate.
-                let Ok((i, r)) = rx.recv() else { break 'sink };
-                pending.insert(i, r);
-                while let Some(r) = pending.remove(&next) {
-                    let step = r.and_then(|v| consumer(next, v));
-                    match step {
-                        Ok(()) => {
-                            next += 1;
-                            let (lock, cv) = &gate;
-                            *lock.lock().unwrap() = next;
-                            cv.notify_all();
-                        }
-                        Err(e) => {
-                            outcome = Err(e);
-                            break 'sink;
-                        }
-                    }
-                }
-            }
-            // Drop the receiver so in-flight sends fail fast; the sink
-            // guard then cancels + notifies, and scope joins the workers
-            // (re-raising any panic).
-            drop(rx);
-        });
+        drop(cancel); // wake parked claim loops
+        drop(rx); // in-flight sends fail fast
+        handle.join(); // revoke queued tickets, wait for claimed ones
+        metrics.tasks += consumed_n;
+        metrics.busy_s += busy_nanos.load(Ordering::Relaxed) as f64 / 1e9;
+        metrics.peak_in_flight = metrics
+            .peak_in_flight
+            .max(peak_in_flight.load(Ordering::Relaxed));
+        metrics.peak_pending = metrics.peak_pending.max(peak_pending);
+        if let Some(p) = panicked {
+            resume_unwind(p);
+        }
         outcome
     }
 }
@@ -269,8 +378,7 @@ impl Executor {
 mod tests {
     use super::*;
     use crate::PdfflowError;
-    use std::panic::{catch_unwind, AssertUnwindSafe};
-    use std::sync::atomic::AtomicU64;
+    use std::panic::catch_unwind;
 
     #[test]
     fn run_preserves_task_order() {
@@ -339,8 +447,8 @@ mod tests {
 
     #[test]
     fn panic_in_the_consumer_fails_the_stage_without_hanging() {
-        // Workers parked at the admission gate must be woken when the
-        // sink unwinds, or scope's join would deadlock.
+        // Claim loops parked at the admission gate must be woken when
+        // the sink unwinds, or the stage join would deadlock.
         let exec = Executor::new(4);
         let r = catch_unwind(AssertUnwindSafe(|| {
             exec.run_sequenced(
@@ -359,7 +467,6 @@ mod tests {
 
     #[test]
     fn backpressure_bounds_in_flight_results() {
-        use std::sync::atomic::AtomicUsize;
         let threads = 3usize;
         let exec = Executor::new(threads);
         let started = AtomicUsize::new(0);
@@ -458,5 +565,64 @@ mod tests {
         let out = exec.run((0..data.len()).collect::<Vec<_>>(), |i| data[i] + 1);
         assert_eq!(out.len(), 256);
         assert_eq!(out[255], 256);
+    }
+
+    #[test]
+    fn stage_metrics_count_tasks_and_pending() {
+        let exec = Executor::new(4);
+        let mut m = StageMetrics::default();
+        exec.run_sequenced_metered(
+            (0..30).collect::<Vec<_>>(),
+            |i| Ok(i),
+            |_, _| Ok(()),
+            &mut m,
+        )
+        .unwrap();
+        assert_eq!(m.tasks, 30);
+        assert!(m.peak_in_flight >= 1);
+        assert!(m.busy_s >= 0.0);
+    }
+
+    #[test]
+    fn sequenced_stage_runs_inline_on_a_pool_worker() {
+        // A sequenced stage launched from inside a pool task must not
+        // park the budgeted worker on a sink loop; it runs inline and
+        // still honors ordering.
+        let exec = Executor::new(4);
+        let out = exec.run(vec![0u8; 3], |_| {
+            let inner = Executor::new(4);
+            let mut seen = Vec::new();
+            inner
+                .run_sequenced(
+                    (0..10).collect::<Vec<_>>(),
+                    |i| Ok(i),
+                    |idx, v| {
+                        assert_eq!(idx, v);
+                        seen.push(v);
+                        Ok(())
+                    },
+                )
+                .unwrap();
+            seen.len()
+        });
+        assert_eq!(out, vec![10, 10, 10]);
+    }
+
+    #[test]
+    fn nested_try_run_inside_run_makes_progress() {
+        // Help-first claim loops mean fallible nested stages complete
+        // even when every pool worker is occupied by the outer stage.
+        let exec = Executor::new(8);
+        let out = exec
+            .try_run((0..12u64).collect::<Vec<_>>(), |i| {
+                let inner = Executor::new(4);
+                let sums = inner.try_run((0..40u64).collect::<Vec<_>>(), |j| Ok(i * 1000 + j))?;
+                Ok(sums.iter().sum::<u64>())
+            })
+            .unwrap();
+        let expect: Vec<u64> = (0..12u64)
+            .map(|i| (0..40u64).map(|j| i * 1000 + j).sum())
+            .collect();
+        assert_eq!(out, expect);
     }
 }

@@ -14,7 +14,10 @@
 //! ML / Sampling plus combinations). The pipeline runs windows as
 //! parallel executor tasks (configurable via `executor_threads`) with a
 //! sequenced persist sink, so reports and persisted bytes are identical
-//! at any thread count.
+//! at any thread count. Every parallel layer — executor stages, the
+//! native backend's chunk fan-out, the query engine — draws from one
+//! process-wide thread budget ([`runtime::hostpool`]), so width knobs
+//! compose without oversubscribing the host.
 //!
 //! The numeric hot path — distribution fitting plus the Eq. 5 error for
 //! up to ten candidate types — runs through a pluggable
@@ -71,7 +74,7 @@ pub mod prelude {
     #[cfg(feature = "xla")]
     pub use crate::runtime::Engine;
     pub use crate::runtime::{
-        make_backend, Backend, BackendKind, BackendOptions, NativeBackend,
+        make_backend, Backend, BackendKind, BackendOptions, HostPool, NativeBackend,
     };
     pub use crate::stats::DistType;
 }

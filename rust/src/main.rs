@@ -4,7 +4,7 @@
 //! pdfflow generate  --preset set1 [--data-dir DIR]         generate a dataset
 //! pdfflow run       --preset set1 --method grouping+ml --types 10
 //!                   [--slice Z] [--lines N] [--window W] [--nodes N|--cluster lncc]
-//!                   [--backend native|xla] [--executor-threads N]
+//!                   [--backend native|xla] [--executor-threads N] [--host-threads N]
 //! pdfflow sample    --preset set1 --rate 0.1 [--sampler random|kmeans]
 //! pdfflow features  --preset set1 [--slice Z]              full-slice features
 //! pdfflow train-tree --preset set1 --types 4 [--tune] [--out tree.json]
@@ -15,7 +15,7 @@
 //! pdfflow store     --preset set1 --store-dir DIR --method grouping --types 4
 //!                   [--slice Z] [--lines N]                persist fitted PDFs to a pdfstore
 //! pdfflow query     --store-dir DIR [--point x,y,z] [--region z[,y0,y1[,x0,x1]]]
-//!                   [--quantile Q] [--threads N] [--cache-mb MB] [--verify]
+//!                   [--quantile Q] [--threads N] [--host-threads N] [--cache-mb MB] [--verify]
 //! ```
 //!
 //! `--config FILE` loads a TOML experiment config instead of `--preset`.
@@ -71,6 +71,17 @@ fn load_config(args: &Args) -> Result<ExperimentConfig> {
         .usize_or("executor-threads", cfg.pipeline.executor_threads)
         .map_err(|e| anyhow!(e))?
         .max(1);
+    if let Some(t) = args.opt("host-threads") {
+        cfg.pipeline.host_threads = Some(t.parse::<usize>().context("--host-threads")?.max(1));
+    }
+    // The single thread-budget knob: size the shared host pool before
+    // anything (backend construction, executor stages) first uses it.
+    if let Some(n) = cfg.pipeline.host_threads {
+        let got = pdfflow::runtime::hostpool::configure(n);
+        if got != n {
+            eprintln!("note: host pool already sized at {got} threads (requested {n})");
+        }
+    }
     match args.opt("cluster") {
         Some("lncc") => cfg.cluster = ClusterSpec::lncc(),
         Some("local") => cfg.cluster = ClusterSpec::local(4),
@@ -148,15 +159,24 @@ fn cmd_run(args: &Args) -> Result<()> {
     let ds = SyntheticDataset::generate(&cfg.dataset, &cfg.data_dir)?;
     let backend = cfg.make_backend()?;
     let mut pipe = Pipeline::new(&ds, backend.as_ref(), SimCluster::new(cfg.cluster.clone()), cfg.pipeline.clone());
-    if method.uses_ml() {
-        let err = pipe.ensure_tree(cfg.train_slice, types, 25_000)?;
-        println!("decision tree trained on slice {} (model error {err:.4})", cfg.train_slice);
-    }
     let lines = args.usize_or("lines", 0).map_err(|e| anyhow!(e))?;
     let r = if lines > 0 {
+        if method.uses_ml() {
+            let err = pipe.ensure_tree(cfg.train_slice, types, 25_000)?;
+            println!("decision tree trained on slice {} (model error {err:.4})", cfg.train_slice);
+        }
         pipe.run_lines(method, cfg.slice, types, lines)?
     } else {
-        pipe.run_slice(method, cfg.slice, types)?
+        // Full-slice runs overlap any needed tree training with the
+        // first-window cache warm-up on the shared host pool.
+        let r = pipe.run_slice_overlapped(method, cfg.slice, types, cfg.train_slice, 25_000)?;
+        if let Some(err) = pipe.model_error {
+            println!(
+                "decision tree trained on slice {} (model error {err:.4}, overlapped with first-window loads)",
+                cfg.train_slice
+            );
+        }
+        r
     };
     println!("{}", r.row());
     println!(
@@ -173,6 +193,24 @@ fn cmd_run(args: &Args) -> Result<()> {
         for (k, v) in pipe.cluster.breakdown() {
             println!("  sim {k:<14} {}", fmt_secs(v));
         }
+        let e = r.exec;
+        println!(
+            "  stage window: {} tasks, busy {}, peak in-flight {}, peak reorder {}",
+            e.tasks,
+            fmt_secs(e.busy_s),
+            e.peak_in_flight,
+            e.peak_pending
+        );
+        let p = pdfflow::runtime::HostPool::global().metrics();
+        println!(
+            "  host pool: budget {} ({} workers), {} tickets, busy {}, peak busy {}, peak queue {}",
+            p.budget,
+            p.workers,
+            p.tickets_run,
+            fmt_secs(p.busy_seconds),
+            p.peak_busy,
+            p.peak_queue_depth
+        );
     }
     Ok(())
 }
@@ -460,20 +498,33 @@ fn cmd_query(args: &Args) -> Result<()> {
     let store_dir = args
         .opt("store-dir")
         .ok_or_else(|| anyhow!("query needs --store-dir DIR"))?;
+    let file_cfg = match args.opt("config") {
+        Some(path) => Some(ExperimentConfig::from_file(path).context("loading --config")?),
+        None => None,
+    };
+    // The single budget knob applies to the query fan-out too:
+    // --host-threads > pipeline.host_threads (--config) > env > cores.
+    let host_threads = match args.opt("host-threads") {
+        Some(t) => Some(t.parse::<usize>().context("--host-threads")?.max(1)),
+        None => file_cfg.as_ref().and_then(|c| c.pipeline.host_threads),
+    };
+    if let Some(n) = host_threads {
+        let got = pdfflow::runtime::hostpool::configure(n);
+        if got != n {
+            eprintln!("note: host pool already sized at {got} threads (requested {n})");
+        }
+    }
     // Cache budget precedence: --cache-mb flag > pipeline.query_cache_bytes
     // from --config > 64 MiB default.
     let cache_bytes = if let Some(mb) = args.opt("cache-mb") {
         mb.parse::<u64>().context("--cache-mb")? << 20
-    } else if let Some(path) = args.opt("config") {
-        ExperimentConfig::from_file(path)
-            .context("loading --config")?
-            .pipeline
-            .query_cache_bytes
+    } else if let Some(cfg) = &file_cfg {
+        cfg.pipeline.query_cache_bytes
     } else {
         64 << 20
     };
     let threads = args
-        .usize_or("threads", pdfflow::util::pool::default_workers())
+        .usize_or("threads", pdfflow::runtime::hostpool::default_budget())
         .map_err(|e| anyhow!(e))?;
     let quantile: Option<f64> = match args.opt("quantile") {
         Some(qs) => Some(qs.parse().context("--quantile")?),

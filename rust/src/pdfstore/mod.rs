@@ -12,8 +12,8 @@
 //! argues for (Salloum et al., arXiv 1712.04146). The read path
 //! ([`QueryEngine`]) serves point lookups, rectangular region scans and
 //! analytical queries (density / CDF / quantile via [`crate::stats`])
-//! through a sharded LRU block cache, fanned out over
-//! [`crate::util::pool`] threads.
+//! through a sharded LRU block cache, fanned out as executor stages on
+//! the shared [`crate::runtime::hostpool`] budget.
 //!
 //! On-disk layout of a store directory:
 //!

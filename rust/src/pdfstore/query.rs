@@ -14,10 +14,11 @@ use std::path::Path;
 use std::sync::Arc;
 
 use crate::cube::{CubeDims, PointId};
+use crate::executor::Executor;
 use crate::pdfstore::{PdfRecord, PdfStore, REC_LEN};
+use crate::runtime::hostpool;
 use crate::stats::{self, density, PENALTY_ERROR};
 use crate::util::lru::ShardedStampLru;
-use crate::util::pool;
 use crate::{PdfflowError, Result};
 
 /// Block cache key: (segment index, window index).
@@ -138,7 +139,8 @@ pub struct QueryOptions {
     pub cache_bytes: u64,
     /// Cache shard count (contention knob, not capacity).
     pub shards: usize,
-    /// Host threads for fanned-out queries.
+    /// Width cap for fanned-out queries: how many slots of the shared
+    /// host-pool budget one query may draw (not a thread count).
     pub workers: usize,
 }
 
@@ -147,7 +149,7 @@ impl Default for QueryOptions {
         QueryOptions {
             cache_bytes: 64 << 20,
             shards: 8,
-            workers: pool::default_workers(),
+            workers: hostpool::default_budget(),
         }
     }
 }
@@ -158,7 +160,9 @@ impl Default for QueryOptions {
 pub struct QueryEngine {
     store: PdfStore,
     cache: ShardedLru,
-    workers: usize,
+    /// Fan-out stage executor on the shared host pool (the ROADMAP
+    /// follow-up that replaced the old per-call scoped `util::pool`).
+    exec: Executor,
 }
 
 impl QueryEngine {
@@ -166,7 +170,7 @@ impl QueryEngine {
         QueryEngine {
             store,
             cache: ShardedLru::new(opts.cache_bytes, opts.shards),
-            workers: opts.workers.max(1),
+            exec: Executor::new(opts.workers.max(1)),
         }
     }
 
@@ -245,17 +249,17 @@ impl QueryEngine {
     /// Batched point lookups, fanned out over the engine's worker
     /// threads; output order matches input order.
     pub fn points(&self, ids: &[PointId]) -> Result<Vec<PdfRecord>> {
-        let chunk = ids.len().div_ceil(self.workers.max(1)).max(1);
+        let chunk = ids.len().div_ceil(self.exec.threads()).max(1);
         let chunks: Vec<&[PointId]> = ids.chunks(chunk).collect();
-        let results = pool::parallel_map(chunks, self.workers, |chunk| {
+        let results = self.exec.try_run(chunks, |chunk| {
             chunk
                 .iter()
                 .map(|&id| self.point_by_id(id))
                 .collect::<Result<Vec<PdfRecord>>>()
-        });
+        })?;
         let mut out = Vec::with_capacity(ids.len());
         for r in results {
-            out.extend(r?);
+            out.extend(r);
         }
         Ok(out)
     }
@@ -284,7 +288,7 @@ impl QueryEngine {
         let dims = self.dims();
         let (seg_idx, wins) = self.region_windows(q)?;
         let q = *q;
-        let parts = pool::parallel_map(wins, self.workers, |win_idx| -> Result<Vec<PdfRecord>> {
+        let parts = self.exec.try_run(wins, |win_idx| -> Result<Vec<PdfRecord>> {
             let block = self.block(seg_idx, win_idx)?;
             Ok(block
                 .iter()
@@ -294,10 +298,10 @@ impl QueryEngine {
                 })
                 .copied()
                 .collect())
-        });
+        })?;
         let mut out = Vec::new();
         for p in parts {
-            out.extend(p?);
+            out.extend(p);
         }
         Ok(out)
     }
@@ -316,7 +320,7 @@ impl QueryEngine {
             types: [u64; 10],
             hist: [u64; ERROR_HIST_BINS],
         }
-        let parts = pool::parallel_map(wins, self.workers, |win_idx| -> Result<Partial> {
+        let parts = self.exec.try_run(wins, |win_idx| -> Result<Partial> {
             let block = self.block(seg_idx, win_idx)?;
             let mut p = Partial {
                 n: 0,
@@ -339,11 +343,10 @@ impl QueryEngine {
                 p.hist[(bin.max(0.0) as usize).min(ERROR_HIST_BINS - 1)] += 1;
             }
             Ok(p)
-        });
+        })?;
         let mut s = RegionSummary::empty();
         let mut err_sum = 0.0;
         for p in parts {
-            let p = p?;
             s.n_points += p.n;
             err_sum += p.err_sum;
             s.max_error = s.max_error.max(p.err_max);
@@ -385,7 +388,7 @@ impl QueryEngine {
         let dims = self.dims();
         let (seg_idx, wins) = self.region_windows(q)?;
         let q = *q;
-        let parts = pool::parallel_map(wins, self.workers, |win_idx| -> Result<(usize, f64)> {
+        let parts = self.exec.try_run(wins, |win_idx| -> Result<(usize, f64)> {
             let block = self.block(seg_idx, win_idx)?;
             let mut n = 0usize;
             let mut sum = 0.0f64;
@@ -399,11 +402,10 @@ impl QueryEngine {
                 n += 1;
             }
             Ok((n, sum))
-        });
+        })?;
         let mut n = 0usize;
         let mut sum = 0.0f64;
-        for part in parts {
-            let (pn, ps) = part?;
+        for (pn, ps) in parts {
             n += pn;
             sum += ps;
         }

@@ -1,0 +1,581 @@
+//! The shared host thread pool: **one process-wide compute budget** for
+//! every parallel layer of the coordinator.
+//!
+//! Before this module, each layer owned its own threads: the executor
+//! spawned scoped workers per stage, the native backend spawned scoped
+//! workers per *batched call* (once per chunk fan-out, per window), and
+//! the query engine spawned its own on top. The `executor_threads` and
+//! backend `workers` knobs therefore composed *multiplicatively* — on an
+//! N-core host the defaults could put `N x N` runnable threads on the
+//! scheduler. The [`HostPool`] ends that: a fixed budget of persistent
+//! workers serves every layer, and the per-layer knobs become *width
+//! caps* (how much of the shared budget a stage may draw), not thread
+//! counts.
+//!
+//! ## Design
+//!
+//! A pool with budget `B` spawns `B - 1` persistent worker threads; the
+//! calling thread supplies the remaining slot by **helping** drain its
+//! own batch (help-first scheduling). Work is submitted as *tickets*: a
+//! ticket is a type-erased claim loop over a [`ScopeCtx`] that lives on
+//! the submitting caller's stack (or in its [`ScopeHandle`]). Workers
+//! pop tickets from a shared queue; each ticket claims item indices
+//! from the batch's atomic cursor until the batch is exhausted. Because
+//! the caller *also* claims items, a batch always makes progress even
+//! when every pool worker is busy elsewhere — nested fan-out (a backend
+//! call inside an executor task) can never deadlock, it just runs on
+//! the threads it can get, bounded by the one global budget.
+//!
+//! Safety of the lifetime erasure rests on one invariant, enforced by
+//! [`ScopeHandle`]: the scope owner does not return until every ticket
+//! it enqueued has either been **revoked** (removed from the queue
+//! before any worker claimed it) or has **finished running**. A ticket
+//! that a worker has already popped is never revoked — the owner waits
+//! for it — so the context pointer inside a running ticket is always
+//! live.
+//!
+//! Panics inside batch items are caught at the claim loop (persistent
+//! workers must survive them), recorded in the scope, and re-raised on
+//! the owner's thread by [`ScopeHandle::join`] — the same fail-fast
+//! stage semantics the scoped-thread implementation had.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Instant;
+
+/// A caught panic payload, re-raised on the scope owner's thread.
+pub type PanicPayload = Box<dyn std::any::Any + Send>;
+
+/// The default host budget: the `PDFFLOW_THREADS` environment override
+/// when set to a positive integer, else all host cores.
+pub fn default_budget() -> usize {
+    std::env::var("PDFFLOW_THREADS")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        })
+}
+
+/// Budget requested via [`configure`] before the global pool was built.
+static REQUESTED_BUDGET: AtomicUsize = AtomicUsize::new(0);
+
+/// Request a global-pool budget (CLI `--host-threads`, config
+/// `pipeline.host_threads`). Effective only before the global pool's
+/// first use; returns the budget actually in force, so callers can
+/// report when a live pool kept its original size.
+pub fn configure(budget: usize) -> usize {
+    REQUESTED_BUDGET.store(budget.max(1), Ordering::Relaxed);
+    HostPool::global().budget()
+}
+
+thread_local! {
+    static ON_POOL_WORKER: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// True on a pool worker thread. Blocking coordination stages (the
+/// executor's sequenced sink) check this and fall back to inline
+/// execution rather than parking a budgeted worker on a sink loop.
+pub fn on_pool_worker() -> bool {
+    ON_POOL_WORKER.with(|c| c.get())
+}
+
+/// Aggregate pool observability counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolMetrics {
+    /// Total compute budget (workers + the helping caller slot).
+    pub budget: usize,
+    /// Persistent worker threads spawned (== budget - 1).
+    pub workers: usize,
+    /// Workers currently executing a ticket.
+    pub busy: usize,
+    /// Maximum concurrently-busy workers ever observed.
+    pub peak_busy: usize,
+    /// Tickets executed by pool workers (caller helping is not a ticket).
+    pub tickets_run: u64,
+    /// Wall-clock seconds pool workers spent inside tickets.
+    pub busy_seconds: f64,
+    /// Deepest ticket queue ever observed.
+    pub peak_queue_depth: usize,
+}
+
+/// A type-erased pointer to a live [`ScopeCtx`] plus its monomorphized
+/// entry point. See the module docs for the liveness invariant.
+struct Ticket {
+    ctx: *const (),
+    run: unsafe fn(*const ()),
+}
+
+// Safety: the pointee is a `ScopeCtx<F>` with `F: Sync`, kept alive by
+// its owning `ScopeHandle` until this ticket finishes or is revoked.
+unsafe impl Send for Ticket {}
+
+struct TicketLedger {
+    enqueued: usize,
+    finished: usize,
+}
+
+/// Shared state of one scoped batch: the work closure, the item claim
+/// cursor, and the ticket ledger the owner joins on.
+struct ScopeCtx<F> {
+    f: *const F,
+    n: usize,
+    cursor: AtomicUsize,
+    cancelled: AtomicBool,
+    tickets: Mutex<TicketLedger>,
+    tickets_cv: Condvar,
+    panic: Mutex<Option<PanicPayload>>,
+}
+
+// Safety: every field except `f` is Sync; `f` points at an
+// `F: Fn(usize) + Sync` owned by the scope owner, which outlives every
+// ticket (ScopeHandle revokes or joins them before releasing the
+// borrow).
+unsafe impl<F: Sync> Sync for ScopeCtx<F> {}
+
+impl<F: Fn(usize) + Sync> ScopeCtx<F> {
+    /// The claim loop: run items until the cursor is exhausted or the
+    /// batch is cancelled by a panic. Runs on the owner (helping) and on
+    /// pool workers (via tickets).
+    fn drain(&self) {
+        // Safety: see the module-level liveness invariant.
+        let f = unsafe { &*self.f };
+        loop {
+            if self.cancelled.load(Ordering::Relaxed) {
+                break;
+            }
+            let i = self.cursor.fetch_add(1, Ordering::Relaxed);
+            if i >= self.n {
+                break;
+            }
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i)));
+            if let Err(p) = r {
+                // First panic wins; remaining items are cancelled and
+                // the payload re-raises at the owner's join.
+                self.cancelled.store(true, Ordering::Relaxed);
+                let mut slot = self.panic.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(p);
+                }
+            }
+        }
+    }
+
+    fn finish_ticket(&self) {
+        let mut t = self.tickets.lock().unwrap();
+        t.finished += 1;
+        self.tickets_cv.notify_all();
+    }
+}
+
+/// Monomorphized ticket entry point.
+unsafe fn run_ticket<F: Fn(usize) + Sync>(ctx: *const ()) {
+    let ctx = &*(ctx as *const ScopeCtx<F>);
+    ctx.drain();
+    ctx.finish_ticket();
+}
+
+/// Joins a scoped batch: revokes still-queued tickets and waits for
+/// claimed ones, keeping the borrowed work closure alive meanwhile.
+///
+/// Crate-private on purpose: the safety of the lifetime erasure relies
+/// on this handle's `Drop`/`join` actually running before the borrowed
+/// closure goes away. A leaked handle (`std::mem::forget`) would leave
+/// tickets holding a dangling context pointer, so the open-scope form
+/// must not cross the crate boundary — external callers get the
+/// closed, always-joined [`HostPool::scope_run`] / `parallel_map`.
+pub(crate) struct ScopeHandle<'scope, F: Fn(usize) + Sync> {
+    pool: &'scope HostPool,
+    ctx: Box<ScopeCtx<F>>,
+    joined: bool,
+    _borrow: std::marker::PhantomData<&'scope F>,
+}
+
+impl<F: Fn(usize) + Sync> ScopeHandle<'_, F> {
+    /// Run the claim loop on the calling thread (help-first: the caller
+    /// is the budget slot the pool did not spawn).
+    pub(crate) fn help(&self) {
+        self.ctx.drain();
+    }
+
+    /// Revoke still-queued tickets, wait for claimed ones. Idempotent.
+    fn finish(&mut self) {
+        if self.joined {
+            return;
+        }
+        self.joined = true;
+        let ptr = &*self.ctx as *const ScopeCtx<F> as *const ();
+        let removed = {
+            let mut q = self.pool.queue.lock().unwrap();
+            let before = q.len();
+            q.retain(|t| t.ctx != ptr);
+            before - q.len()
+        };
+        let mut t = self.ctx.tickets.lock().unwrap();
+        t.finished += removed;
+        while t.finished < t.enqueued {
+            t = self.ctx.tickets_cv.wait(t).unwrap();
+        }
+    }
+
+    /// Finish the scope and re-raise any panic captured from an item.
+    pub(crate) fn join(mut self) {
+        self.finish();
+        let p = self.ctx.panic.lock().unwrap().take();
+        if let Some(p) = p {
+            std::panic::resume_unwind(p);
+        }
+    }
+}
+
+impl<F: Fn(usize) + Sync> Drop for ScopeHandle<'_, F> {
+    fn drop(&mut self) {
+        self.finish();
+    }
+}
+
+/// The persistent work-stealing host pool (see module docs).
+pub struct HostPool {
+    budget: usize,
+    spawned: usize,
+    queue: Mutex<VecDeque<Ticket>>,
+    work_cv: Condvar,
+    shutdown: AtomicBool,
+    busy: AtomicUsize,
+    peak_busy: AtomicUsize,
+    tickets_run: AtomicU64,
+    busy_nanos: AtomicU64,
+    peak_queue: AtomicUsize,
+}
+
+impl std::fmt::Debug for HostPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("HostPool")
+            .field("budget", &self.budget)
+            .field("workers", &self.spawned)
+            .finish()
+    }
+}
+
+fn worker_loop(pool: Arc<HostPool>) {
+    ON_POOL_WORKER.with(|c| c.set(true));
+    loop {
+        let ticket = {
+            let mut q = pool.queue.lock().unwrap();
+            loop {
+                if let Some(t) = q.pop_front() {
+                    break t;
+                }
+                if pool.shutdown.load(Ordering::Relaxed) {
+                    return;
+                }
+                q = pool.work_cv.wait(q).unwrap();
+            }
+        };
+        let busy = pool.busy.fetch_add(1, Ordering::Relaxed) + 1;
+        pool.peak_busy.fetch_max(busy, Ordering::Relaxed);
+        let t0 = Instant::now();
+        // Safety: the owning scope is still joined on this ticket
+        // (revocation removes only *queued* tickets), so ctx is alive.
+        unsafe { (ticket.run)(ticket.ctx) };
+        pool.tickets_run.fetch_add(1, Ordering::Relaxed);
+        pool.busy_nanos
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        pool.busy.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+impl HostPool {
+    /// A pool with `budget` total compute threads: `budget - 1`
+    /// persistent workers are spawned eagerly, and the calling thread
+    /// supplies the last slot by helping drain its own batches. Custom
+    /// pools are for tests and embedders; production code shares
+    /// [`HostPool::global`].
+    pub fn new(budget: usize) -> Arc<HostPool> {
+        let budget = budget.max(1);
+        let workers = budget - 1;
+        let pool = Arc::new(HostPool {
+            budget,
+            spawned: workers,
+            queue: Mutex::new(VecDeque::new()),
+            work_cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            busy: AtomicUsize::new(0),
+            peak_busy: AtomicUsize::new(0),
+            tickets_run: AtomicU64::new(0),
+            busy_nanos: AtomicU64::new(0),
+            peak_queue: AtomicUsize::new(0),
+        });
+        for k in 0..workers {
+            let p = Arc::clone(&pool);
+            std::thread::Builder::new()
+                .name(format!("pdfflow-host-{k}"))
+                .spawn(move || worker_loop(p))
+                .expect("spawn host pool worker");
+        }
+        pool
+    }
+
+    /// The process-wide pool every layer shares. Built on first use with
+    /// the [`configure`]d budget, else [`default_budget`]; lives for the
+    /// process.
+    pub fn global() -> &'static Arc<HostPool> {
+        static GLOBAL: OnceLock<Arc<HostPool>> = OnceLock::new();
+        GLOBAL.get_or_init(|| {
+            let requested = REQUESTED_BUDGET.load(Ordering::Relaxed);
+            let budget = if requested > 0 {
+                requested
+            } else {
+                default_budget()
+            };
+            HostPool::new(budget)
+        })
+    }
+
+    /// Total compute budget (persistent workers + the caller slot).
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Persistent worker threads owned by this pool — the thread census
+    /// the no-oversubscription contract pins: always `budget - 1`, so
+    /// workers plus one helping caller never exceed the budget.
+    pub fn spawned_threads(&self) -> usize {
+        self.spawned
+    }
+
+    fn max_workers(&self) -> usize {
+        self.spawned
+    }
+
+    pub fn metrics(&self) -> PoolMetrics {
+        PoolMetrics {
+            budget: self.budget,
+            workers: self.spawned,
+            busy: self.busy.load(Ordering::Relaxed),
+            peak_busy: self.peak_busy.load(Ordering::Relaxed),
+            tickets_run: self.tickets_run.load(Ordering::Relaxed),
+            busy_seconds: self.busy_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+            peak_queue_depth: self.peak_queue.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Stop the persistent workers once the queue drains (test pools
+    /// only; the global pool lives for the process). Scoped batches
+    /// still complete afterwards — the owner's helping thread drains
+    /// them — just without extra parallelism.
+    pub fn stop(&self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        let _guard = self.queue.lock().unwrap();
+        self.work_cv.notify_all();
+    }
+
+    /// Enqueue up to `tickets` claim loops over item indices `0..n` of
+    /// `work`. The returned handle's `join` (or drop) revokes unclaimed
+    /// tickets and blocks until claimed ones finish, so `work` and
+    /// everything it borrows stay valid for the tickets' whole
+    /// lifetime. Crate-private: see [`ScopeHandle`] — leaking the
+    /// handle from safe external code would dangle the erased borrow.
+    pub(crate) fn scope_tickets<'s, F>(
+        &'s self,
+        n: usize,
+        tickets: usize,
+        work: &'s F,
+    ) -> ScopeHandle<'s, F>
+    where
+        F: Fn(usize) + Sync,
+    {
+        let tickets = tickets.min(self.max_workers()).min(n);
+        let ctx = Box::new(ScopeCtx {
+            f: work as *const F,
+            n,
+            cursor: AtomicUsize::new(0),
+            cancelled: AtomicBool::new(false),
+            tickets: Mutex::new(TicketLedger {
+                enqueued: tickets,
+                finished: 0,
+            }),
+            tickets_cv: Condvar::new(),
+            panic: Mutex::new(None),
+        });
+        if tickets > 0 {
+            let ptr = &*ctx as *const ScopeCtx<F> as *const ();
+            let mut q = self.queue.lock().unwrap();
+            for _ in 0..tickets {
+                q.push_back(Ticket {
+                    ctx: ptr,
+                    run: run_ticket::<F>,
+                });
+            }
+            let depth = q.len();
+            drop(q);
+            self.peak_queue.fetch_max(depth, Ordering::Relaxed);
+            self.work_cv.notify_all();
+        }
+        ScopeHandle {
+            pool: self,
+            ctx,
+            joined: false,
+            _borrow: std::marker::PhantomData,
+        }
+    }
+
+    /// Help-first parallel for over `0..n`: the caller claims items
+    /// alongside up to `width - 1` pool workers, so the batch always
+    /// progresses even on a saturated (or zero-worker) pool, and total
+    /// live threads never exceed the pool budget. Panics in items are
+    /// re-raised here after the batch quiesces.
+    pub fn scope_run<F>(&self, n: usize, width: usize, f: &F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        let width = width.max(1).min(n);
+        let handle = self.scope_tickets(n, width - 1, f);
+        handle.help();
+        handle.join();
+    }
+
+    /// Order-preserving parallel map drawing at most `width` slots from
+    /// the shared budget (the caller's slot included). Panics propagate.
+    pub fn parallel_map<T, R, F>(&self, items: Vec<T>, width: usize, f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(T) -> R + Sync,
+    {
+        let n = items.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let width = width.max(1).min(n);
+        if width == 1 || self.max_workers() == 0 {
+            return items.into_iter().map(f).collect();
+        }
+        let slots: Vec<Mutex<Option<T>>> = items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+        let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        let run = |i: usize| {
+            let item = slots[i].lock().unwrap().take().expect("item claimed twice");
+            let r = f(item);
+            *results[i].lock().unwrap() = Some(r);
+        };
+        self.scope_run(n, width, &run);
+        results
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("missing result"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    #[test]
+    fn parallel_map_preserves_order_and_runs_once() {
+        let pool = HostPool::new(4);
+        let counter = AtomicU64::new(0);
+        let out = pool.parallel_map((0..500).collect::<Vec<_>>(), 4, |i| {
+            counter.fetch_add(1, Ordering::Relaxed);
+            i * 2
+        });
+        assert_eq!(out, (0..500).map(|i| i * 2).collect::<Vec<_>>());
+        assert_eq!(counter.load(Ordering::Relaxed), 500);
+        pool.stop();
+    }
+
+    #[test]
+    fn census_is_budget_minus_one() {
+        for budget in [1usize, 2, 5] {
+            let pool = HostPool::new(budget);
+            assert_eq!(pool.budget(), budget);
+            assert_eq!(pool.spawned_threads(), budget - 1);
+            // Workers + the helping caller never exceed the budget.
+            assert!(pool.spawned_threads() < pool.budget().max(2));
+            pool.stop();
+        }
+    }
+
+    #[test]
+    fn zero_worker_pool_runs_serially() {
+        let pool = HostPool::new(1);
+        let out = pool.parallel_map((0..64).collect::<Vec<_>>(), 8, |i| i + 1);
+        assert_eq!(out.len(), 64);
+        assert_eq!(out[63], 64);
+        pool.stop();
+    }
+
+    #[test]
+    fn panics_propagate_and_cancel_the_batch() {
+        let pool = HostPool::new(3);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.parallel_map((0..64).collect::<Vec<_>>(), 3, |i| {
+                if i == 11 {
+                    panic!("item 11 exploded");
+                }
+                i
+            })
+        }));
+        assert!(r.is_err());
+        // The pool survives the panic and keeps serving.
+        let out = pool.parallel_map(vec![1u32, 2, 3], 3, |x| x * 10);
+        assert_eq!(out, vec![10, 20, 30]);
+        pool.stop();
+    }
+
+    #[test]
+    fn nested_batches_share_the_budget_without_deadlock() {
+        let pool = HostPool::new(3);
+        let out = pool.parallel_map((0..8u64).collect::<Vec<_>>(), 3, |i| {
+            // Nested fan-out from inside a batch item: help-first
+            // guarantees progress even when every worker is busy.
+            let inner = pool.parallel_map((0..50u64).collect::<Vec<_>>(), 3, move |j| i * 100 + j);
+            inner.iter().sum::<u64>()
+        });
+        let expect: Vec<u64> = (0..8u64).map(|i| (0..50u64).map(|j| i * 100 + j).sum()).collect();
+        assert_eq!(out, expect);
+        assert!(pool.metrics().peak_busy <= pool.spawned_threads());
+        pool.stop();
+    }
+
+    #[test]
+    fn stopped_pool_still_completes_batches_via_helping() {
+        let pool = HostPool::new(4);
+        pool.stop();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let out = pool.parallel_map((0..40).collect::<Vec<_>>(), 4, |i| i);
+        assert_eq!(out.len(), 40);
+    }
+
+    #[test]
+    fn scope_tickets_revokes_unclaimed_work() {
+        // Zero-worker pool: tickets would never be claimed; the handle
+        // must revoke them and the caller must drain everything.
+        let pool = HostPool::new(1);
+        let hits = AtomicU64::new(0);
+        let work = |_i: usize| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        };
+        let handle = pool.scope_tickets(10, 4, &work);
+        handle.help();
+        handle.join();
+        assert_eq!(hits.load(Ordering::Relaxed), 10);
+        pool.stop();
+    }
+
+    #[test]
+    fn global_pool_exists_and_is_bounded() {
+        let pool = HostPool::global();
+        assert!(pool.budget() >= 1);
+        assert_eq!(pool.spawned_threads(), pool.budget() - 1);
+        let out = pool.parallel_map(vec![1, 2, 3, 4], 4, |x| x + 1);
+        assert_eq!(out, vec![2, 3, 4, 5]);
+    }
+}

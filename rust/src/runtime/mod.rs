@@ -26,11 +26,13 @@
 //! the `PDFFLOW_BACKEND` environment variable, the `backend` config
 //! key, or the `--backend` CLI flag.
 
+pub mod hostpool;
 pub mod manifest;
 pub mod native;
 #[cfg(feature = "xla")]
 pub mod xla_engine;
 
+pub use hostpool::{HostPool, PoolMetrics};
 pub use manifest::{ArtifactInfo, ArtifactKind, Manifest};
 pub use native::NativeBackend;
 #[cfg(feature = "xla")]
@@ -182,7 +184,9 @@ impl BackendKind {
 pub struct BackendOptions {
     /// Points per execution batch (must match an artifact batch for XLA).
     pub batch: usize,
-    /// Host worker threads for the native backend's batch parallelism.
+    /// Width cap on the native backend's chunk fan-out: how many slots
+    /// of the shared [`HostPool`] budget one batched call may draw. Not
+    /// a thread count — all parallelism comes from the one global pool.
     pub workers: usize,
     /// Eq. 5 interval count for the native backend (XLA bakes its own).
     pub bins: usize,
@@ -192,7 +196,7 @@ impl Default for BackendOptions {
     fn default() -> Self {
         BackendOptions {
             batch: 256,
-            workers: crate::util::pool::default_workers(),
+            workers: hostpool::default_budget(),
             bins: crate::stats::DEFAULT_BINS,
         }
     }

@@ -1,40 +1,51 @@
 //! The native compute backend: the pure-Rust statistics oracle from
 //! [`crate::stats`], evaluated in thread-parallel point batches.
 //!
-//! Points are split into `batch`-sized chunks; chunks run on the scoped
-//! thread pool ([`crate::util::pool`], the offline rayon substitute) and
-//! each chunk reuses one scratch buffer set (Eq. 5 histogram + quantile
-//! subsample) across all of its points, so the inner loop performs no
-//! per-point allocation. Unlike the XLA engine there is no fixed batch
-//! shape to pad to: the final partial chunk simply runs shorter, and
-//! results are bitwise independent of the batch size.
+//! Points are split into `batch`-sized chunks; each chunk is one task
+//! on the shared [`HostPool`] — the same global thread budget the
+//! executor and query engine draw from, so a backend call nested inside
+//! an executor window task adds **zero** threads (no more
+//! `executor_threads x workers` multiplication; `workers` is only a
+//! width cap on how much of the budget one call may use). Kernels write
+//! straight into disjoint row slices of the one preallocated output
+//! buffer, so there is no per-chunk collect-then-copy, and each chunk
+//! reuses one scratch set (pre-converted f64 observations, quantile
+//! subsample, Eq. 5 histogram + interval edges) across all of its
+//! points — a single f32→f64 conversion pass per point and no per-point
+//! allocation. Results are bitwise independent of the batch size, the
+//! worker width and the pool budget.
 //!
 //! This backend is the default: it needs no AOT artifacts, no Python and
 //! no XLA toolchain, which is what lets the whole test tier run on any
 //! machine. The XLA engine (behind the `xla` feature) is the measured
 //! accelerator the benches compare against.
 
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::stats::{self, DistType, PointStats};
-use crate::util::pool;
 use crate::{PdfflowError, Result};
 
+use super::hostpool::HostPool;
 use super::{Backend, BackendMetrics, OutMatrix};
 
-/// Per-chunk scratch: one Eq. 5 histogram and one quantile subsample
-/// buffer, reused across every point of the chunk.
+/// Per-chunk scratch, reused across every point of the chunk: the
+/// f64-converted observation vector, the quantile subsample, and the
+/// Eq. 5 histogram + interval edges.
 struct Scratch {
+    vals: Vec<f64>,
+    quant: Vec<f64>,
     hist: Vec<f64>,
-    quant: Vec<f32>,
+    edges: Vec<f64>,
 }
 
 impl Scratch {
     fn new(bins: usize) -> Scratch {
         Scratch {
-            hist: vec![0.0; bins],
+            vals: Vec::new(),
             quant: Vec::new(),
+            hist: vec![0.0; bins],
+            edges: vec![0.0; bins],
         }
     }
 }
@@ -44,21 +55,35 @@ pub struct NativeBackend {
     workers: usize,
     batch: usize,
     bins: usize,
+    pool: Arc<HostPool>,
     metrics: Mutex<BackendMetrics>,
 }
 
 impl NativeBackend {
-    /// Default configuration: all host cores, 256-point batches, the
-    /// canonical 32 Eq. 5 intervals.
+    /// Default configuration: full shared-pool width, 256-point batches,
+    /// the canonical 32 Eq. 5 intervals.
     pub fn new() -> NativeBackend {
-        Self::with_options(pool::default_workers(), 256, stats::DEFAULT_BINS)
+        Self::with_options(super::hostpool::default_budget(), 256, stats::DEFAULT_BINS)
     }
 
+    /// Backend on the global [`HostPool`]; `workers` caps how many pool
+    /// slots one batched call may draw, it spawns nothing.
     pub fn with_options(workers: usize, batch: usize, bins: usize) -> NativeBackend {
+        Self::with_pool(Arc::clone(HostPool::global()), workers, batch, bins)
+    }
+
+    /// Backend on an explicit pool (tests pin budgets this way).
+    pub fn with_pool(
+        pool: Arc<HostPool>,
+        workers: usize,
+        batch: usize,
+        bins: usize,
+    ) -> NativeBackend {
         NativeBackend {
             workers: workers.max(1),
             batch: batch.max(1),
             bins: bins.max(1),
+            pool,
             metrics: Mutex::new(BackendMetrics::default()),
         }
     }
@@ -71,9 +96,10 @@ impl NativeBackend {
         self.bins
     }
 
-    /// Shared batched driver: validate the shape, fan chunks out over the
-    /// pool, run `kernel` once per point into its output row, stitch the
-    /// chunk outputs back together in point order.
+    /// Shared batched driver: validate the shape, preallocate the whole
+    /// output matrix, hand each chunk a disjoint `&mut` row-slice of it,
+    /// and fan the chunks out over the shared pool — kernels write rows
+    /// in place, so nothing is collected or copied afterwards.
     fn run_batched<F>(
         &self,
         values: &[f32],
@@ -100,23 +126,24 @@ impl NativeBackend {
         }
         let t0 = Instant::now();
         let n_chunks = n_points.div_ceil(self.batch);
-        let chunks: Vec<Vec<f32>> = pool::parallel_for(n_chunks, self.workers, |c| {
-            let lo = c * self.batch;
-            let hi = ((c + 1) * self.batch).min(n_points);
-            let mut out = vec![0f32; (hi - lo) * out_cols];
-            let mut scratch = Scratch::new(self.bins);
-            for (i, p) in (lo..hi).enumerate() {
-                kernel(
-                    &values[p * obs..(p + 1) * obs],
-                    &mut scratch,
-                    &mut out[i * out_cols..(i + 1) * out_cols],
-                );
-            }
-            out
-        });
-        let mut data = Vec::with_capacity(n_points * out_cols);
-        for c in &chunks {
-            data.extend_from_slice(c);
+        let mut data = vec![0f32; n_points * out_cols];
+        if n_points > 0 {
+            let chunks: Vec<(usize, &mut [f32])> = data
+                .chunks_mut(self.batch * out_cols)
+                .enumerate()
+                .collect();
+            self.pool.parallel_map(chunks, self.workers, |(c, out)| {
+                let lo = c * self.batch;
+                let hi = (lo + self.batch).min(n_points);
+                let mut scratch = Scratch::new(self.bins);
+                for (i, p) in (lo..hi).enumerate() {
+                    kernel(
+                        &values[p * obs..(p + 1) * obs],
+                        &mut scratch,
+                        &mut out[i * out_cols..(i + 1) * out_cols],
+                    );
+                }
+            });
         }
         let dt = t0.elapsed().as_secs_f64();
         let mut m = self.metrics.lock().unwrap();
@@ -160,7 +187,7 @@ impl Backend for NativeBackend {
 
     fn run_stats(&self, values: &[f32], n_points: usize, obs: usize) -> Result<OutMatrix> {
         self.run_batched(values, n_points, obs, 12, |v, scratch, out| {
-            let s = PointStats::of_with_scratch(v, &mut scratch.quant);
+            let s = PointStats::of_converted(v, &mut scratch.vals, &mut scratch.quant);
             // STATS_COLS order — the manifest contract.
             out[0] = s.mean as f32;
             out[1] = s.std as f32;
@@ -186,9 +213,14 @@ impl Backend for NativeBackend {
     ) -> Result<OutMatrix> {
         let candidates = candidate_set(n_types)?;
         self.run_batched(values, n_points, obs, 5, |v, scratch, out| {
-            let s = PointStats::of_with_scratch(v, &mut scratch.quant);
-            stats::histogram_into(v, s.min, s.max, &mut scratch.hist);
-            let best = stats::fit_best_with_hist(&s, &scratch.hist, v.len(), candidates);
+            // Fused per-point pipeline: one f32→f64 conversion feeds the
+            // moments pass, the histogram and the Eq. 5 edges; the edges
+            // are shared by every candidate type in the argmin.
+            let s = PointStats::of_converted(v, &mut scratch.vals, &mut scratch.quant);
+            stats::histogram_f64_into(&scratch.vals, s.min, s.max, &mut scratch.hist);
+            stats::fill_edges(s.min, s.max, &mut scratch.edges);
+            let best =
+                stats::fit_best_prepared(&s, &scratch.hist, &scratch.edges, v.len(), candidates);
             out[0] = best.dist.id() as f32;
             out[1] = best.error as f32;
             out[2] = best.params[0] as f32;
@@ -205,8 +237,14 @@ impl Backend for NativeBackend {
         dist: DistType,
     ) -> Result<OutMatrix> {
         self.run_batched(values, n_points, obs, 4, |v, scratch, out| {
-            let s = PointStats::of_with_scratch(v, &mut scratch.quant);
-            let f = stats::fit_single_with_hist(v, &s, dist, &mut scratch.hist);
+            let s = PointStats::of_converted(v, &mut scratch.vals, &mut scratch.quant);
+            let f = stats::fit_single_prepared(
+                &scratch.vals,
+                &s,
+                dist,
+                &mut scratch.hist,
+                &mut scratch.edges,
+            );
             out[0] = f.error as f32;
             out[1] = f.params[0] as f32;
             out[2] = f.params[1] as f32;
@@ -283,6 +321,28 @@ mod tests {
                 .run_fit_all(&values, 70, 40, 10)
                 .unwrap();
             assert_eq!(out.data, reference.data, "workers={workers} batch={batch}");
+        }
+    }
+
+    #[test]
+    fn results_independent_of_pool_budget() {
+        // The acceptance contract: output bytes are identical whatever
+        // the host thread budget is.
+        let values = gamma_batch(60, 48, 3);
+        let reference = NativeBackend::with_options(4, 16, 32)
+            .run_fit_all(&values, 60, 48, 10)
+            .unwrap();
+        for budget in [1usize, 2, 6] {
+            let pool = HostPool::new(budget);
+            let b = NativeBackend::with_pool(Arc::clone(&pool), 4, 16, 32);
+            let out = b.run_fit_all(&values, 60, 48, 10).unwrap();
+            assert_eq!(out.data, reference.data, "budget={budget}");
+            let st = b.run_stats(&values, 60, 48).unwrap();
+            let st_ref = NativeBackend::with_options(2, 32, 32)
+                .run_stats(&values, 60, 48)
+                .unwrap();
+            assert_eq!(st.data, st_ref.data, "stats budget={budget}");
+            pool.stop();
         }
     }
 }

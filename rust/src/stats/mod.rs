@@ -112,22 +112,27 @@ pub struct PointStats {
 impl PointStats {
     /// Compute from one observation vector.
     pub fn of(v: &[f32]) -> PointStats {
-        Self::of_with_scratch(v, &mut Vec::new())
+        Self::of_converted(v, &mut Vec::new(), &mut Vec::new())
     }
 
-    /// Same, reusing `scratch` for the quantile subsample so batched
-    /// callers (the native backend's inner loop) allocate nothing per
-    /// point.
-    pub fn of_with_scratch(v: &[f32], scratch: &mut Vec<f32>) -> PointStats {
+    /// The one accumulation implementation (every caller funnels here,
+    /// so backend/oracle bit-parity cannot drift): converts `v` to f64
+    /// exactly once into `vals` — left filled so batched callers reuse
+    /// it for the histogram pass without re-converting — and uses
+    /// `quant` as the quantile-subsample scratch. Both buffers may be
+    /// empty `Vec`s; the native backend's inner loop passes per-chunk
+    /// scratch so it allocates nothing per point.
+    pub fn of_converted(v: &[f32], vals: &mut Vec<f64>, quant: &mut Vec<f64>) -> PointStats {
         let n = v.len();
         assert!(n >= 2, "need at least 2 observations");
         let nf = n as f64;
+        vals.clear();
+        vals.extend(v.iter().map(|&x| x as f64));
         let (mut s1, mut s2, mut s3, mut s4) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
         let (mut mn, mut mx) = (f64::INFINITY, f64::NEG_INFINITY);
         let (mut sl, mut sl2) = (0.0f64, 0.0f64);
         let mut npos = 0usize;
-        for &x in v {
-            let x = x as f64;
+        for &x in vals.iter() {
             let x2 = x * x;
             s1 += x;
             s2 += x2;
@@ -154,9 +159,9 @@ impl PointStats {
         // graphs use (distfit.QUANTILE_SUBSAMPLE = 256): observations are
         // i.i.d. across simulations, so the stride is a uniform subsample.
         let stride = n.div_ceil(256);
-        scratch.clear();
-        scratch.extend(v.iter().copied().step_by(stride));
-        let sorted = &mut scratch[..];
+        quant.clear();
+        quant.extend(vals.iter().copied().step_by(stride));
+        let sorted = &mut quant[..];
         sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let m = sorted.len();
         let pct = |q: f64| -> f64 {
@@ -164,7 +169,7 @@ impl PointStats {
             let lo = pos.floor() as usize;
             let hi = pos.ceil() as usize;
             let frac = pos - lo as f64;
-            sorted[lo] as f64 * (1.0 - frac) + sorted[hi] as f64 * frac
+            sorted[lo] * (1.0 - frac) + sorted[hi] * frac
         };
         PointStats {
             mean: m1,
@@ -201,12 +206,37 @@ pub fn histogram(v: &[f32], mn: f64, mx: f64, bins: usize) -> Vec<f64> {
 
 /// [`histogram`] into a caller-owned buffer (`out.len()` bins), so the
 /// batched backends can reuse one buffer across a whole point batch.
+/// The bin index uses a precomputed inverse range (`bins / range`), one
+/// multiply per value instead of a divide; [`histogram_f64_into`] MUST
+/// use the identical formula, or backend/oracle parity drifts.
+///
+/// Note (cross-version): this formula replaced `((x-mn)/rng)*bins` in
+/// the host-pool/fused-kernel PR — the two round differently for rare
+/// exactly-on-boundary values, so fits persisted by older builds may
+/// differ by one adjacent-bin reassignment. The contract has always
+/// been oracle parity (both sides share this function), not stability
+/// of historical bits.
 pub fn histogram_into(v: &[f32], mn: f64, mx: f64, out: &mut [f64]) {
     let bins = out.len();
     out.fill(0.0);
-    let rng = (mx - mn).max(1e-30);
+    let inv = bins as f64 / (mx - mn).max(1e-30);
     for &x in v {
-        let idx = (((x as f64 - mn) / rng) * bins as f64).floor();
+        let idx = ((x as f64 - mn) * inv).floor();
+        let idx = (idx.max(0.0) as usize).min(bins - 1);
+        out[idx] += 1.0;
+    }
+}
+
+/// [`histogram_into`] over already-converted f64 observations (the
+/// fused backend path reuses the conversion done by
+/// [`PointStats::of_converted`]). Formula identical to the f32 version
+/// — f32→f64 conversion is exact, so the two are bit-compatible.
+pub fn histogram_f64_into(vals: &[f64], mn: f64, mx: f64, out: &mut [f64]) {
+    let bins = out.len();
+    out.fill(0.0);
+    let inv = bins as f64 / (mx - mn).max(1e-30);
+    for &x in vals {
+        let idx = ((x - mn) * inv).floor();
         let idx = (idx.max(0.0) as usize).min(bins - 1);
         out[idx] += 1.0;
     }
@@ -291,13 +321,39 @@ pub fn cdf(t: DistType, p: &[f64; 3], x: f64) -> f64 {
     }
 }
 
+/// Fill `edges` (one per histogram bin) with the upper Eq. 5 interval
+/// boundaries over [mn, mx]. Edges depend only on the point's range, so
+/// the fused backend computes them once per point and shares them
+/// across every candidate type instead of recomputing `bins` edges per
+/// candidate — the formula matches the historical per-candidate one
+/// exactly, so hoisting is bit-neutral.
+pub fn fill_edges(mn: f64, mx: f64, edges: &mut [f64]) {
+    let bins = edges.len() as f64;
+    for (k, e) in edges.iter_mut().enumerate() {
+        *e = mn + (mx - mn) * (k + 1) as f64 / bins;
+    }
+}
+
 /// Eq. 5: histogram-vs-CDF discrepancy over `bins` equal intervals.
 pub fn eq5_error(t: DistType, p: &[f64; 3], hist: &[f64], mn: f64, mx: f64, n_obs: usize) -> f64 {
-    let bins = hist.len();
+    let mut edges = vec![0.0; hist.len()];
+    fill_edges(mn, mx, &mut edges);
+    eq5_error_with_edges(t, p, hist, &edges, mn, n_obs)
+}
+
+/// [`eq5_error`] with caller-precomputed interval edges (the no-alloc
+/// hot path; `edges` comes from [`fill_edges`] over the same [mn, mx]).
+pub fn eq5_error_with_edges(
+    t: DistType,
+    p: &[f64; 3],
+    hist: &[f64],
+    edges: &[f64],
+    mn: f64,
+    n_obs: usize,
+) -> f64 {
     let mut err = 0.0;
     let mut prev = cdf(t, p, mn);
-    for (k, h) in hist.iter().enumerate() {
-        let edge = mn + (mx - mn) * (k + 1) as f64 / bins as f64;
+    for (h, &edge) in hist.iter().zip(edges) {
         let cur = cdf(t, p, edge);
         err += (h / n_obs as f64 - (cur - prev)).abs();
         prev = cur;
@@ -318,8 +374,8 @@ pub fn fit_single_with_stats(v: &[f32], s: &PointStats, t: DistType, bins: usize
 }
 
 /// Single-type fit body with caller-owned stats + histogram buffer (the
-/// batched backend's no-allocation path). `hist` is filled — only when
-/// the type's support guard passes — with `hist.len()` Eq. 5 intervals.
+/// compat no-allocation path). `hist` is filled — only when the type's
+/// support guard passes — with `hist.len()` Eq. 5 intervals.
 pub fn fit_single_with_hist(
     v: &[f32],
     s: &PointStats,
@@ -340,6 +396,32 @@ pub fn fit_single_with_hist(
     }
 }
 
+/// Fully fused single-type fit over a prepared point: pre-converted f64
+/// observations (from [`PointStats::of_converted`]) plus caller scratch
+/// histogram/edges buffers, filled only when the support guard passes.
+/// Zero allocation, one conversion pass — the batched backend's path.
+pub fn fit_single_prepared(
+    vals: &[f64],
+    s: &PointStats,
+    t: DistType,
+    hist: &mut [f64],
+    edges: &mut [f64],
+) -> FitResult {
+    let (params, supported) = fit_params(t, s);
+    let error = if supported {
+        histogram_f64_into(vals, s.min, s.max, hist);
+        fill_edges(s.min, s.max, edges);
+        eq5_error_with_edges(t, &params, hist, edges, s.min, vals.len())
+    } else {
+        PENALTY_ERROR
+    };
+    FitResult {
+        dist: t,
+        params,
+        error,
+    }
+}
+
 /// Algorithm 3: fit every candidate type, keep the minimum-error PDF.
 pub fn fit_best(v: &[f32], candidates: &[DistType], bins: usize) -> FitResult {
     let s = PointStats::of(v);
@@ -347,13 +429,28 @@ pub fn fit_best(v: &[f32], candidates: &[DistType], bins: usize) -> FitResult {
     fit_best_with_hist(&s, &hist, v.len(), candidates)
 }
 
-/// Algorithm 3 argmin body over precomputed stats + histogram — THE
-/// definition of the fit semantics (support guard → penalty, Eq. 5
-/// otherwise, first minimum wins). Every backend funnels through this
-/// so the 1e-5 parity contract cannot drift.
+/// Algorithm 3 argmin over precomputed stats + histogram (computes the
+/// Eq. 5 edges once, then delegates to [`fit_best_prepared`]).
 pub fn fit_best_with_hist(
     s: &PointStats,
     hist: &[f64],
+    n_obs: usize,
+    candidates: &[DistType],
+) -> FitResult {
+    let mut edges = vec![0.0; hist.len()];
+    fill_edges(s.min, s.max, &mut edges);
+    fit_best_prepared(s, hist, &edges, n_obs, candidates)
+}
+
+/// Algorithm 3 argmin body over precomputed stats + histogram + interval
+/// edges — THE definition of the fit semantics (support guard → penalty,
+/// Eq. 5 otherwise, first minimum wins). Every backend funnels through
+/// this so the 1e-5 parity contract cannot drift; the edges are hoisted
+/// out of the candidate loop (they depend only on the point's range).
+pub fn fit_best_prepared(
+    s: &PointStats,
+    hist: &[f64],
+    edges: &[f64],
     n_obs: usize,
     candidates: &[DistType],
 ) -> FitResult {
@@ -361,7 +458,7 @@ pub fn fit_best_with_hist(
     for &t in candidates {
         let (params, supported) = fit_params(t, s);
         let error = if supported {
-            eq5_error(t, &params, hist, s.min, s.max, n_obs)
+            eq5_error_with_edges(t, &params, hist, edges, s.min, n_obs)
         } else {
             PENALTY_ERROR
         };
@@ -514,6 +611,41 @@ mod tests {
         }
         assert_eq!(DistType::from_id(10), None);
         assert_eq!(DistType::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn prepared_paths_are_bit_identical_to_compat_paths() {
+        // The fused backend path (of_converted + histogram_f64_into +
+        // fill_edges + *_prepared) must be bitwise equal to the compat
+        // oracle path — this is the kernel-parity contract.
+        let v = draws(|r| r.gamma(2.5, 1.5), 1500, 21);
+        let mut vals = Vec::new();
+        let mut quant = Vec::new();
+        let s = PointStats::of_converted(&v, &mut vals, &mut quant);
+        let s0 = PointStats::of(&v);
+        assert_eq!(s.mean.to_bits(), s0.mean.to_bits());
+        assert_eq!(s.skew.to_bits(), s0.skew.to_bits());
+        assert_eq!(s.q50.to_bits(), s0.q50.to_bits());
+        let mut h32 = vec![0.0; DEFAULT_BINS];
+        let mut h64 = vec![0.0; DEFAULT_BINS];
+        histogram_into(&v, s.min, s.max, &mut h32);
+        histogram_f64_into(&vals, s.min, s.max, &mut h64);
+        assert_eq!(h32, h64);
+        let mut edges = vec![0.0; DEFAULT_BINS];
+        fill_edges(s.min, s.max, &mut edges);
+        for &t in &DistType::ALL {
+            let a = fit_single_with_hist(&v, &s, t, &mut vec![0.0; DEFAULT_BINS]);
+            let b = fit_single_prepared(&vals, &s, t, &mut h64, &mut edges);
+            assert_eq!(a.error.to_bits(), b.error.to_bits(), "{t:?} error");
+            for c in 0..3 {
+                assert_eq!(a.params[c].to_bits(), b.params[c].to_bits(), "{t:?} p{c}");
+            }
+        }
+        histogram_f64_into(&vals, s.min, s.max, &mut h64);
+        let best_a = fit_best_with_hist(&s, &h32, v.len(), &DistType::ALL);
+        let best_b = fit_best_prepared(&s, &h64, &edges, v.len(), &DistType::ALL);
+        assert_eq!(best_a.dist, best_b.dist);
+        assert_eq!(best_a.error.to_bits(), best_b.error.to_bits());
     }
 
     #[test]

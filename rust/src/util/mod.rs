@@ -1,13 +1,14 @@
 //! In-tree substrates for crates unavailable in this offline image
 //! (tokio / clap / criterion / serde / rand): a PRNG with distribution
-//! samplers, JSON and TOML-subset codecs, a CLI argument parser, a scoped
-//! thread pool, timing/statistics helpers, and a mini property-testing
-//! harness. See DESIGN.md §Substrates.
+//! samplers, JSON and TOML-subset codecs, a CLI argument parser,
+//! timing/statistics helpers, and a mini property-testing harness. See
+//! DESIGN.md §Substrates. (The scoped thread pool that used to live at
+//! `util::pool` is gone — all host parallelism now routes through the
+//! persistent shared-budget pool in [`crate::runtime::hostpool`].)
 
 pub mod cli;
 pub mod json;
 pub mod lru;
-pub mod pool;
 pub mod prng;
 pub mod testkit;
 pub mod timing;

@@ -7,9 +7,10 @@
 //! With `--features xla` (and `make artifacts`), the same harness also
 //! checks the PJRT engine against the native backend.
 
-use pdfflow::runtime::{Backend, NativeBackend};
+use pdfflow::runtime::{Backend, HostPool, NativeBackend};
 use pdfflow::stats::{self, DistType, PointStats, DEFAULT_BINS};
 use pdfflow::util::prng::Rng;
+use std::sync::Arc;
 
 const TOL: f64 = 1e-5;
 
@@ -159,6 +160,55 @@ fn batching_edge_cases_keep_results_and_shapes() {
     let m = b.metrics();
     assert_eq!(m.executions, 2);
     assert_eq!(m.rows_processed, (batch + 5) as u64);
+}
+
+#[test]
+fn fused_kernel_is_bit_identical_to_stats_oracle() {
+    // Stronger than the 1e-5 closeness: the fused batched kernels must
+    // agree with the scalar oracle to the last f32 bit, across worker /
+    // batch / pool-budget combinations, for every DistType's data.
+    let obs = 180;
+    let n = 21;
+    for (i, &fam) in DistType::ALL.iter().enumerate() {
+        let values = family_batch(fam, n, obs, 500 + i as u64);
+        for (budget, workers, batch) in [(1usize, 1usize, 4usize), (2, 4, 8), (6, 8, 64)] {
+            let pool = HostPool::new(budget);
+            let b = NativeBackend::with_pool(Arc::clone(&pool), workers, batch, DEFAULT_BINS);
+            let st = b.run_stats(&values, n, obs).unwrap();
+            let all = b.run_fit_all(&values, n, obs, 10).unwrap();
+            for p in 0..n {
+                let v = &values[p * obs..(p + 1) * obs];
+                let s = PointStats::of(v);
+                let expect = [
+                    s.mean, s.std, s.min, s.max, s.skew, s.kurt_ex, s.meanlog, s.stdlog,
+                    s.q25, s.q50, s.q75, s.pos_frac,
+                ];
+                for (c, e) in expect.iter().enumerate() {
+                    assert_eq!(
+                        st.row(p)[c].to_bits(),
+                        (*e as f32).to_bits(),
+                        "{fam:?} budget {budget} point {p} stats col {c}"
+                    );
+                }
+                let oracle = stats::fit_best(v, &DistType::ALL, DEFAULT_BINS);
+                let row = all.row(p);
+                assert_eq!(row[0].to_bits(), (oracle.dist.id() as f32).to_bits());
+                assert_eq!(
+                    row[1].to_bits(),
+                    (oracle.error as f32).to_bits(),
+                    "{fam:?} budget {budget} point {p} error"
+                );
+                for c in 0..3 {
+                    assert_eq!(
+                        row[2 + c].to_bits(),
+                        (oracle.params[c] as f32).to_bits(),
+                        "{fam:?} budget {budget} point {p} param {c}"
+                    );
+                }
+            }
+            pool.stop();
+        }
+    }
 }
 
 #[test]

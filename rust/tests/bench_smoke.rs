@@ -1,0 +1,206 @@
+//! Tier-1 smoke recording of the perf trajectory: tiny versions of the
+//! pipeline and queries benches that run inside `cargo test`, write
+//! `BENCH_pipeline.json` / `BENCH_queries.json` at the repo root in the
+//! shared schema `{bench, config, rows: [{threads, throughput}]}`, and
+//! then validate the schema by re-parsing what they wrote. The numbers
+//! are smoke-grade (the test harness runs other suites concurrently) —
+//! `cargo bench --bench pipeline/queries -- --json` rewrites the files
+//! with proper measurements — but they keep the trajectory populated on
+//! every machine the tier-1 suite touches.
+
+use std::time::Instant;
+
+use pdfflow::bench::{bench_json_path, write_bench_json, BenchRow};
+use pdfflow::cluster::{ClusterSpec, SimCluster};
+use pdfflow::config::PipelineConfig;
+use pdfflow::coordinator::{Method, Pipeline, TypeSet};
+use pdfflow::cube::{CubeDims, PointId};
+use pdfflow::datagen::{DatasetSpec, SyntheticDataset};
+use pdfflow::executor::Executor;
+use pdfflow::pdfstore::{QueryEngine, QueryOptions};
+use pdfflow::runtime::{make_backend, Backend, BackendKind, BackendOptions};
+use pdfflow::util::json::Json;
+use pdfflow::util::prng::Rng;
+
+const THREADS: [usize; 4] = [1, 2, 4, 8];
+
+fn native_backend() -> Box<dyn Backend> {
+    make_backend(
+        BackendKind::Native,
+        "artifacts",
+        &BackendOptions {
+            batch: 64,
+            workers: 1,
+            ..BackendOptions::default()
+        },
+    )
+    .expect("backend")
+}
+
+/// Validate the shared schema of a written record and return the rows.
+fn check_schema(name: &str) -> Vec<Json> {
+    let path = bench_json_path(name);
+    let text = std::fs::read_to_string(&path).expect("bench json readable");
+    let doc = Json::parse(&text).expect("bench json parses");
+    assert_eq!(doc.get("bench").and_then(|b| b.as_str()), Some(name));
+    assert!(doc.get("config").is_some(), "{name}: config object");
+    let rows = doc
+        .get("rows")
+        .and_then(|r| r.as_arr())
+        .unwrap_or_else(|| panic!("{name}: rows array"));
+    assert!(!rows.is_empty(), "{name}: rows non-empty");
+    for row in rows {
+        assert!(row.get("threads").and_then(|t| t.as_f64()).is_some());
+        assert!(row.get("throughput").and_then(|t| t.as_f64()).is_some());
+    }
+    rows.to_vec()
+}
+
+#[test]
+fn records_pipeline_bench_json() {
+    let root = std::env::temp_dir().join(format!("pdfflow-benchsmoke-p-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let mut spec = DatasetSpec::tiny();
+    spec.dims = CubeDims::new(32, 16, 4);
+    spec.n_sims = 120;
+    spec.seed = 20180601;
+    let ds = SyntheticDataset::generate(&spec, root.join("data")).expect("dataset");
+    let n_windows = spec.dims.ny.div_ceil(4);
+
+    let run_once = |threads: usize| -> f64 {
+        let backend = native_backend();
+        let cfg = PipelineConfig {
+            batch: 64,
+            window_lines: 4,
+            executor_threads: threads,
+            cache_bytes: 0,
+            ..PipelineConfig::default()
+        };
+        let mut pipe = Pipeline::new(
+            &ds,
+            backend.as_ref(),
+            SimCluster::new(ClusterSpec::lncc()),
+            cfg,
+        );
+        let t0 = Instant::now();
+        pipe.run_slice(Method::Baseline, 2, TypeSet::Four).expect("run");
+        t0.elapsed().as_secs_f64()
+    };
+    let _ = run_once(1); // warm-up
+
+    let rows: Vec<BenchRow> = THREADS
+        .iter()
+        .map(|&threads| {
+            let secs = run_once(threads);
+            BenchRow {
+                threads,
+                throughput: n_windows as f64 / secs,
+                extra: vec![("secs", Json::Num(secs))],
+            }
+        })
+        .collect();
+    write_bench_json(
+        "pipeline",
+        vec![
+            ("profile", Json::Str("tier1-smoke".into())),
+            ("unit", Json::Str("windows_per_s".into())),
+            ("windows", Json::Num(n_windows as f64)),
+            ("observations", Json::Num(spec.n_sims as f64)),
+            ("backend_workers", Json::Num(1.0)),
+            ("window_lines", Json::Num(4.0)),
+        ],
+        rows,
+        Vec::new(),
+    )
+    .expect("write BENCH_pipeline.json");
+
+    let rows = check_schema("pipeline");
+    for row in &rows {
+        assert!(row.get("throughput").and_then(|t| t.as_f64()).unwrap() > 0.0);
+    }
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn records_queries_bench_json() {
+    let root = std::env::temp_dir().join(format!("pdfflow-benchsmoke-q-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let store_dir = root.join("store");
+    let mut spec = DatasetSpec::tiny();
+    spec.dims = CubeDims::new(32, 16, 4);
+    spec.seed = 20180599;
+    let ds = SyntheticDataset::generate(&spec, root.join("data")).expect("dataset");
+    let backend = native_backend();
+    let cfg = PipelineConfig {
+        batch: 64,
+        window_lines: 4,
+        store_dir: Some(store_dir.to_string_lossy().into_owned()),
+        ..PipelineConfig::default()
+    };
+    let mut pipe = Pipeline::new(
+        &ds,
+        backend.as_ref(),
+        SimCluster::new(ClusterSpec::lncc()),
+        cfg,
+    );
+    pipe.run_slice(Method::Baseline, 2, TypeSet::Four).expect("persist");
+
+    let engine = QueryEngine::open(&store_dir, QueryOptions::default()).expect("open store");
+    let slice_pts = spec.dims.slice_points() as u64;
+    let n_queries = 3_000usize;
+    let mut rng = Rng::new(7);
+    let ids: Vec<PointId> = (0..n_queries)
+        .map(|_| PointId(2 * slice_pts + rng.below(slice_pts as usize) as u64))
+        .collect();
+
+    let rows: Vec<BenchRow> = THREADS
+        .iter()
+        .map(|&threads| {
+            engine.clear_cache();
+            let exec = Executor::new(threads);
+            let chunk = ids.len().div_ceil(threads);
+            let chunks: Vec<Vec<PointId>> = ids.chunks(chunk).map(|c| c.to_vec()).collect();
+            // One measurement pass: (xor-of-ids checksum, queries/s).
+            let pass = || -> (u64, f64) {
+                let t0 = Instant::now();
+                let sum = exec
+                    .run(chunks.clone(), |chunk| {
+                        let mut acc = 0u64;
+                        for id in chunk {
+                            acc ^= engine.point_by_id(id).expect("point").point.0;
+                        }
+                        acc
+                    })
+                    .into_iter()
+                    .fold(0, |a, b| a ^ b);
+                (sum, n_queries as f64 / t0.elapsed().as_secs_f64())
+            };
+            let (cold, cold_qps) = pass();
+            let (warm, warm_qps) = pass();
+            assert_eq!(cold, warm, "cold/warm reads diverged");
+            BenchRow {
+                threads,
+                throughput: warm_qps,
+                extra: vec![("cold_qps", Json::Num(cold_qps))],
+            }
+        })
+        .collect();
+    write_bench_json(
+        "queries",
+        vec![
+            ("profile", Json::Str("tier1-smoke".into())),
+            ("unit", Json::Str("warm_queries_per_s".into())),
+            ("n_queries", Json::Num(n_queries as f64)),
+            ("records", Json::Num(engine.store().n_records() as f64)),
+        ],
+        rows,
+        Vec::new(),
+    )
+    .expect("write BENCH_queries.json");
+
+    let rows = check_schema("queries");
+    for row in &rows {
+        assert!(row.get("throughput").and_then(|t| t.as_f64()).unwrap() > 0.0);
+    }
+    let _ = std::fs::remove_dir_all(&root);
+}

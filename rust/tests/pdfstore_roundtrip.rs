@@ -16,7 +16,7 @@ use pdfflow::pdfstore::{
     PdfStore, QueryEngine, QueryOptions, RegionQuery, MANIFEST_NAME, REC_LEN,
 };
 use pdfflow::runtime::{make_backend, Backend, BackendKind, BackendOptions};
-use pdfflow::util::pool;
+use pdfflow::executor::Executor;
 
 const SLICE: usize = 1;
 
@@ -127,8 +127,9 @@ fn concurrent_queries_match_single_threaded() {
     let seq: Vec<_> = ids.iter().map(|&id| serial.point_by_id(id).unwrap()).collect();
     let par = parallel.points(&ids).unwrap();
     assert_eq!(par, seq);
-    // Raw 4-way fan-out through the pool hits the same records.
-    let fanned = pool::parallel_map(ids.clone(), 4, |id| parallel.point_by_id(id).unwrap());
+    // Raw 4-way fan-out through the shared pool hits the same records.
+    let exec = Executor::new(4);
+    let fanned = exec.run(ids.clone(), |id| parallel.point_by_id(id).unwrap());
     assert_eq!(fanned, seq);
 
     // Region + quantile analytics: identical at any thread count.
@@ -149,7 +150,7 @@ fn concurrent_queries_match_single_threaded() {
     assert_eq!(m1.to_bits(), m4.to_bits(), "{m1} vs {m4}");
 
     // Concurrent mixed workload on one shared engine stays identical.
-    let mixed = pool::parallel_map((0..8).collect::<Vec<usize>>(), 4, |i| {
+    let mixed = exec.run((0..8).collect::<Vec<usize>>(), |i| {
         if i % 2 == 0 {
             parallel.region_summary(&q).unwrap().avg_error
         } else {

@@ -8,7 +8,11 @@ use pdfflow::cluster::{ClusterSpec, SimCluster};
 use pdfflow::config::PipelineConfig;
 use pdfflow::coordinator::{Method, Pipeline, SliceReport, TypeSet};
 use pdfflow::datagen::{DatasetSpec, SyntheticDataset};
-use pdfflow::runtime::{make_backend, Backend, BackendKind, BackendOptions};
+use pdfflow::executor::Executor;
+use pdfflow::runtime::{
+    make_backend, Backend, BackendKind, BackendOptions, HostPool, NativeBackend,
+};
+use std::sync::Arc;
 
 const THREADS: [usize; 3] = [1, 2, 8];
 
@@ -136,6 +140,132 @@ fn reuse_is_thread_count_invariant() {
 #[test]
 fn grouping_ml_is_thread_count_invariant() {
     assert_invariant(Method::GroupingMl, "gml");
+}
+
+#[test]
+fn host_budget_bounds_live_threads_under_nested_backend_calls() {
+    // The no-oversubscription acceptance contract: backend chunk
+    // fan-out nested inside executor tasks draws from ONE pool budget —
+    // the pool's thread census stays budget - 1 (workers) + 1 (helping
+    // caller) <= budget, where the old design would have spawned
+    // executor_threads x workers scoped threads.
+    let budget = 4usize;
+    let pool = HostPool::new(budget);
+    let exec = Executor::on_pool(8, Arc::clone(&pool));
+    let backend = NativeBackend::with_pool(Arc::clone(&pool), 8, 8, 32);
+    let mut rng = pdfflow::util::prng::Rng::new(5);
+    let values: Vec<f32> = (0..40 * 60).map(|_| rng.gamma(3.0, 2.0) as f32).collect();
+    let reference = backend.run_fit_all(&values, 40, 60, 10).unwrap();
+    // 16 executor tasks each running a nested batched backend call.
+    let outs = exec.run((0..16).collect::<Vec<_>>(), |_| {
+        backend.run_fit_all(&values, 40, 60, 10).unwrap().data
+    });
+    for (i, o) in outs.iter().enumerate() {
+        assert_eq!(o, &reference.data, "task {i}");
+    }
+    // Census: the pool never grew beyond its fixed worker set, and no
+    // more workers were ever busy at once than exist.
+    assert_eq!(pool.spawned_threads(), budget - 1);
+    assert!(pool.spawned_threads() < pool.budget());
+    let m = pool.metrics();
+    assert!(
+        m.peak_busy <= pool.spawned_threads(),
+        "peak busy {} > workers {}",
+        m.peak_busy,
+        pool.spawned_threads()
+    );
+    pool.stop();
+    // The global pool (defaults path) obeys the same bound.
+    let g = HostPool::global();
+    assert_eq!(g.spawned_threads(), g.budget() - 1);
+}
+
+#[test]
+fn nested_backend_fanout_is_thread_count_invariant() {
+    // Executor width x backend width combinations over the shared pool
+    // must all produce bit-identical slice results.
+    let root = std::env::temp_dir().join(format!(
+        "pdfflow-invariance-nested-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&root);
+    let ds = dataset(&root);
+    let mut fingerprints = Vec::new();
+    for (threads, workers) in [(1usize, 1usize), (2, 4), (8, 2), (8, 8)] {
+        let backend = make_backend(
+            BackendKind::Native,
+            "artifacts",
+            &BackendOptions {
+                batch: 64,
+                workers,
+                ..BackendOptions::default()
+            },
+        )
+        .expect("backend");
+        let cfg = PipelineConfig {
+            batch: 64,
+            window_lines: 4,
+            executor_threads: threads,
+            workers,
+            ..PipelineConfig::default()
+        };
+        let mut pipe =
+            Pipeline::new(&ds, backend.as_ref(), SimCluster::new(ClusterSpec::lncc()), cfg);
+        let report = pipe.run_slice(Method::Grouping, 2, TypeSet::Four).expect("run");
+        fingerprints.push(((threads, workers), fingerprint(&report)));
+    }
+    let (_, base) = fingerprints[0];
+    for ((threads, workers), fp) in &fingerprints[1..] {
+        assert_eq!(
+            *fp, base,
+            "diverged at executor_threads={threads} workers={workers}"
+        );
+    }
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn overlapped_training_matches_ensure_tree_then_run() {
+    // run_slice_overlapped (tree training overlapping first-window
+    // prefetch) must produce the same fit results and identical
+    // persisted bytes as the sequential ensure_tree + run_slice path;
+    // only the cache-hit/NFS attribution moves into (unmeasured) setup.
+    let root = std::env::temp_dir().join(format!(
+        "pdfflow-invariance-overlap-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&root);
+    let ds = dataset(&root);
+
+    let seq_store = root.join("store-seq");
+    let (seq_report, seq_bytes) = run_at(&ds, Method::GroupingMl, &seq_store, 2);
+
+    let ovl_store = root.join("store-ovl");
+    let backend = backend();
+    let cfg = PipelineConfig {
+        batch: 64,
+        window_lines: 4,
+        executor_threads: 2,
+        store_dir: Some(ovl_store.to_string_lossy().into_owned()),
+        ..PipelineConfig::default()
+    };
+    let mut pipe = Pipeline::new(&ds, backend.as_ref(), SimCluster::new(ClusterSpec::lncc()), cfg);
+    let ovl_report = pipe
+        .run_slice_overlapped(Method::GroupingMl, 2, TypeSet::Four, 0, 500)
+        .expect("overlapped run");
+    let ovl_bytes =
+        std::fs::read(ovl_store.join("slice2_grouping+ml_4.seg")).expect("segment bytes");
+
+    assert_eq!(
+        seq_report.avg_error.to_bits(),
+        ovl_report.avg_error.to_bits(),
+        "fit results must not depend on training overlap"
+    );
+    assert_eq!(seq_report.fits, ovl_report.fits);
+    assert_eq!(seq_report.n_points, ovl_report.n_points);
+    assert!(seq_bytes == ovl_bytes, "persisted bytes diverge");
+    assert!(pipe.model_error.is_some(), "overlap path trained the tree");
+    std::fs::remove_dir_all(&root).unwrap();
 }
 
 #[test]
