@@ -8,11 +8,19 @@
 //! quantile-surface analytics throughput. This is the north-star
 //! workload: many concurrent readers asking for served PDFs.
 //!
+//! Two more paths are exercised on every run (so the CI bench-smoke
+//! step covers them on every push): a slice is **rerun and compacted**
+//! (`pdfstore::compact`) and the same queries must answer bit-identical
+//! against the compacted store; and a **closed-loop serving pass**
+//! drives the admission-controlled `ServeFront`, asserting its
+//! in-flight / queue-depth caps and recording the serving row.
+//!
 //! `--json` (or PDFFLOW_BENCH_JSON=1) writes `BENCH_queries.json` at
 //! the repo root in the shared cross-bench schema
 //! `{bench, config, rows: [{threads, throughput}]}` (throughput =
-//! warm-cache queries/s; the cold rate rides along per row).
-//! `PDFFLOW_BENCH_SMOKE=1` shrinks the workload to a CI smoke profile.
+//! warm-cache queries/s; the cold rate and the `mode: "serve"` row ride
+//! along). `PDFFLOW_BENCH_SMOKE=1` shrinks the workload to a CI smoke
+//! profile.
 
 use std::time::Instant;
 
@@ -23,8 +31,9 @@ use pdfflow::coordinator::{Method, Pipeline, TypeSet};
 use pdfflow::cube::{CubeDims, PointId};
 use pdfflow::datagen::{DatasetSpec, SyntheticDataset};
 use pdfflow::executor::Executor;
-use pdfflow::pdfstore::{QueryEngine, QueryOptions, RegionQuery};
+use pdfflow::pdfstore::{compact_run, QueryEngine, QueryOptions, RegionQuery};
 use pdfflow::runtime::{hostpool, make_backend, BackendKind, BackendOptions};
+use pdfflow::serve::{closed_loop, ServeFront, ServeOptions};
 use pdfflow::util::json::Json;
 use pdfflow::util::prng::Rng;
 use pdfflow::util::timing::fmt_bytes;
@@ -179,6 +188,98 @@ fn main() {
     std::hint::black_box(acc);
     println!("region_quantile_mean(P50): {:.1} regions/s", 20.0 / dt);
 
+    // --- Compaction read path (exercised by the CI bench-smoke step on
+    // every push): rerun one slice so the run really holds two
+    // generations, compact, and require bit-identical answers from the
+    // compacted store before measuring it.
+    let fingerprint = |e: &QueryEngine| -> u64 {
+        let mut acc = 0u64;
+        for id in ids.iter().take(2_000) {
+            let rec = e.point_by_id(*id).expect("point");
+            acc = acc
+                .rotate_left(1)
+                .wrapping_add(rec.error.to_bits() as u64 ^ ((rec.dist.id() as u64) << 32));
+        }
+        for q in regions.iter().take(20) {
+            let s = e.region_summary(q).expect("summary");
+            acc = acc.rotate_left(1).wrapping_add(s.avg_error.to_bits());
+        }
+        acc
+    };
+    let before = fingerprint(&engine);
+    pipe.run_slice(Method::Baseline, SLICES[0], TypeSet::Four)
+        .expect("rerun slice (appends a generation)");
+    let rep = compact_run(&store_dir, None).expect("compact");
+    assert!(!rep.already_compact, "rerun should have left generations to compact");
+    println!(
+        "\ncompacted run {} → gen {}: {} → {} segments, {} → {} bytes, {} files retired",
+        rep.run.label(),
+        rep.gen,
+        rep.segments_before,
+        rep.segments_after,
+        rep.bytes_before,
+        rep.bytes_after,
+        rep.retired_files
+    );
+    let compacted = QueryEngine::open(
+        &store_dir,
+        QueryOptions { cache_bytes: 32 << 20, ..QueryOptions::default() },
+    )
+    .expect("open compacted store");
+    assert_eq!(
+        fingerprint(&compacted),
+        before,
+        "query results diverged across compaction"
+    );
+    let t = Instant::now();
+    let mut acc = 0u64;
+    for id in &ids {
+        acc ^= compacted.point_by_id(*id).expect("point").point.0;
+    }
+    std::hint::black_box(acc);
+    let compacted_qps = n_queries as f64 / t.elapsed().as_secs_f64();
+    println!("compacted store: {compacted_qps:.0} q/s (single-threaded, warmable cache)");
+
+    // --- Serving tier: closed-loop clients through the admission-
+    // controlled front door (the north-star shape: bounded concurrency,
+    // overflow shed, not queued without bound).
+    let clients = 8usize;
+    let serve_opts = ServeOptions {
+        max_in_flight: 4,
+        queue_depth: 8,
+    };
+    let front = ServeFront::new(
+        QueryEngine::open(
+            &store_dir,
+            QueryOptions { cache_bytes: 32 << 20, ..QueryOptions::default() },
+        )
+        .expect("open store for serving"),
+        serve_opts,
+    );
+    let load = closed_loop(&front, clients, if smoke { 200 } else { 1_000 }, 11);
+    let sm = &load.metrics;
+    println!(
+        "serve: {} clients closed-loop → {:.0} q/s, {} completed / {} shed, peaks {} in-flight / {} queued",
+        clients,
+        load.throughput,
+        sm.total_completed(),
+        sm.total_shed(),
+        sm.peak_in_flight,
+        sm.peak_queued
+    );
+    assert!(sm.peak_in_flight <= serve_opts.max_in_flight, "in-flight cap violated");
+    assert!(sm.peak_queued <= serve_opts.queue_depth, "queue-depth cap violated");
+    rows.push(BenchRow {
+        threads: clients,
+        throughput: load.throughput,
+        extra: vec![
+            ("mode", Json::Str("serve".into())),
+            ("shed", Json::Num(sm.total_shed() as f64)),
+            ("max_in_flight", Json::Num(serve_opts.max_in_flight as f64)),
+            ("queue_depth", Json::Num(serve_opts.queue_depth as f64)),
+        ],
+    });
+
     if want_json {
         let path = write_bench_json(
             "queries",
@@ -190,7 +291,10 @@ fn main() {
                 ("cache_mb", Json::Num(32.0)),
             ],
             rows,
-            vec![("region_summary_per_s", Json::Num(regions_per_s))],
+            vec![
+                ("region_summary_per_s", Json::Num(regions_per_s)),
+                ("compacted_qps", Json::Num(compacted_qps)),
+            ],
         )
         .expect("write BENCH_queries.json");
         println!("wrote {}", path.display());

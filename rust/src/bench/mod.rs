@@ -77,8 +77,112 @@ pub fn write_bench_json(
         ("rows", Json::Arr(rows)),
     ];
     pairs.extend(extra);
+    let doc = Json::obj(pairs);
+    // Fail fast on a record that would poison the trajectory: an empty
+    // or malformed file is worse than a loud error at the writer.
+    validate_bench_record(name, &doc)?;
     let path = bench_json_path(name);
-    std::fs::write(&path, Json::obj(pairs).to_string())?;
+    std::fs::write(&path, doc.to_string())?;
+    Ok(path)
+}
+
+/// Validate a bench record against the shared cross-bench schema
+/// `{bench, config, rows: [{threads > 0, finite throughput > 0}]}` with
+/// a **non-empty** rows array; returns the rows. Every writer
+/// ([`write_bench_json`], [`upsert_bench_row`]) runs this before
+/// touching disk, and `tests/bench_smoke.rs` re-runs it on what landed,
+/// so BENCH_pipeline.json / BENCH_queries.json always carry usable
+/// points.
+pub fn validate_bench_record(
+    name: &str,
+    doc: &crate::util::json::Json,
+) -> Result<Vec<crate::util::json::Json>> {
+    let bad = |what: String| PdfflowError::Format(format!("bench record {name:?}: {what}"));
+    match doc.get("bench").and_then(|b| b.as_str()) {
+        Some(b) if b == name => {}
+        other => return Err(bad(format!("bench field {other:?} != {name:?}"))),
+    }
+    if doc.get("config").is_none() {
+        return Err(bad("missing config object".into()));
+    }
+    let rows = doc
+        .get("rows")
+        .and_then(|r| r.as_arr())
+        .ok_or_else(|| bad("missing rows array".into()))?;
+    if rows.is_empty() {
+        return Err(bad("rows array is empty (no usable points)".into()));
+    }
+    for (i, row) in rows.iter().enumerate() {
+        let threads = row
+            .get("threads")
+            .and_then(|t| t.as_f64())
+            .ok_or_else(|| bad(format!("row {i}: missing numeric threads")))?;
+        let throughput = row
+            .get("throughput")
+            .and_then(|t| t.as_f64())
+            .ok_or_else(|| bad(format!("row {i}: missing numeric throughput")))?;
+        if !threads.is_finite() || threads < 1.0 || !throughput.is_finite() || throughput <= 0.0 {
+            return Err(bad(format!(
+                "row {i}: threads {threads} / throughput {throughput} not usable"
+            )));
+        }
+    }
+    Ok(rows.to_vec())
+}
+
+/// Parse `BENCH_<name>.json` from the repo root and validate it (see
+/// [`validate_bench_record`]); returns the rows.
+pub fn validate_bench_json(name: &str) -> Result<Vec<crate::util::json::Json>> {
+    let path = bench_json_path(name);
+    let text = std::fs::read_to_string(&path)?;
+    let doc = crate::util::json::Json::parse(&text)
+        .map_err(|e| PdfflowError::Format(format!("{}: {e}", path.display())))?;
+    validate_bench_record(name, &doc)
+}
+
+/// Read-modify-write one row into `BENCH_<name>.json`: rows whose
+/// `mode` extra matches `mode` are replaced, everything else is kept.
+/// Creates a minimal record when the file is missing or unreadable.
+/// This is how `pdfflow serve --bench` lands its serving-throughput row
+/// next to the queries bench's scaling rows without clobbering them.
+pub fn upsert_bench_row(name: &str, mode: &str, row: BenchRow) -> Result<PathBuf> {
+    use crate::util::json::Json;
+    let path = bench_json_path(name);
+    let existing = std::fs::read_to_string(&path)
+        .ok()
+        .and_then(|t| Json::parse(&t).ok())
+        .filter(|doc| validate_bench_record(name, doc).is_ok());
+    let mut rows: Vec<Json> = existing
+        .as_ref()
+        .and_then(|doc| doc.get("rows"))
+        .and_then(|r| r.as_arr())
+        .map(|r| {
+            r.iter()
+                .filter(|row| row.get("mode").and_then(|m| m.as_str()) != Some(mode))
+                .cloned()
+                .collect()
+        })
+        .unwrap_or_default();
+    let mut pairs = vec![
+        ("threads", Json::Num(row.threads as f64)),
+        ("throughput", Json::Num(row.throughput)),
+        ("mode", Json::Str(mode.to_string())),
+    ];
+    pairs.extend(row.extra);
+    rows.push(Json::obj(pairs));
+    // Start from the existing document so top-level extras the bench
+    // wrote (region_summary_per_s, compacted_qps, …) survive the upsert.
+    let mut map = match existing {
+        Some(Json::Obj(m)) => m,
+        _ => std::collections::BTreeMap::new(),
+    };
+    map.insert("bench".to_string(), Json::Str(name.to_string()));
+    map.entry("config".to_string())
+        .or_insert_with(|| Json::obj(Vec::new()));
+    map.insert("rows".to_string(), Json::Arr(rows));
+    let doc = Json::Obj(map);
+    validate_bench_record(name, &doc)?;
+    std::fs::write(&path, doc.to_string())?;
     Ok(path)
 }
 
@@ -746,6 +850,7 @@ impl BenchEnv {
                     types,
                     25_000,
                     cfg.pipeline.window_lines,
+                    mlmodel::LabelSource::Refit,
                 )?;
                 let (params, tune_err, tune_s) = mlmodel::tune_hypers(&data, 42)?;
                 let model = mlmodel::train_model(&data, params, 43)?;

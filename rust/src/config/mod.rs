@@ -53,8 +53,13 @@ pub struct PipelineConfig {
     pub persist_dir: Option<String>,
     /// When set, fit outcomes stream into an indexed, queryable
     /// [`crate::pdfstore`] store at this directory (footer-indexed
-    /// segments + checksummed manifest).
+    /// segments + generational run catalog).
     pub store_dir: Option<String>,
+    /// Run id stamped into persisted segments alongside (method, types)
+    /// — the rerun label the store's catalog keys generations by.
+    /// `None` uses [`crate::pdfstore::DEFAULT_RUN_ID`]. Precedence:
+    /// `--run-id` CLI flag > `pipeline.run_id` config key > default.
+    pub run_id: Option<String>,
     /// Segment block-cache budget for the store's `QueryEngine`, bytes.
     pub query_cache_bytes: u64,
 }
@@ -73,6 +78,7 @@ impl Default for PipelineConfig {
             executor_threads: crate::executor::default_threads(),
             persist_dir: None,
             store_dir: None,
+            run_id: None,
             query_cache_bytes: 64 << 20,
         }
     }
@@ -251,6 +257,11 @@ impl ExperimentConfig {
         if let Some(d) = doc.get("pipeline.store_dir").and_then(|v| v.as_str()) {
             cfg.pipeline.store_dir = Some(d.to_string());
         }
+        if let Some(r) = doc.get("pipeline.run_id").and_then(|v| v.as_str()) {
+            crate::pdfstore::validate_run_id(r)
+                .map_err(|e| PdfflowError::Config(e.to_string()))?;
+            cfg.pipeline.run_id = Some(r.to_string());
+        }
         cfg.pipeline.query_cache_bytes =
             doc.i64_or("pipeline.query_cache_bytes", cfg.pipeline.query_cache_bytes as i64) as u64;
         // Paths + slices + backend.
@@ -326,16 +337,25 @@ batch = 64
         let path = dir.join("store.toml");
         std::fs::write(
             &path,
-            "preset = \"small\"\n[pipeline]\nstore_dir = \"out/store\"\nquery_cache_bytes = 1048576\n",
+            "preset = \"small\"\n[pipeline]\nstore_dir = \"out/store\"\nquery_cache_bytes = 1048576\nrun_id = \"exp-1\"\n",
         )
         .unwrap();
         let c = ExperimentConfig::from_file(&path).unwrap();
         assert_eq!(c.pipeline.store_dir.as_deref(), Some("out/store"));
         assert_eq!(c.pipeline.query_cache_bytes, 1 << 20);
-        // Defaults: no store, 64 MiB query cache.
+        assert_eq!(c.pipeline.run_id.as_deref(), Some("exp-1"));
+        // Defaults: no store, no run id, 64 MiB query cache.
         let d = ExperimentConfig::small();
         assert!(d.pipeline.store_dir.is_none());
+        assert!(d.pipeline.run_id.is_none());
         assert_eq!(d.pipeline.query_cache_bytes, 64 << 20);
+        // Unsafe run ids are rejected at parse time.
+        std::fs::write(
+            &path,
+            "preset = \"small\"\n[pipeline]\nrun_id = \"a/b\"\n",
+        )
+        .unwrap();
+        assert!(ExperimentConfig::from_file(&path).is_err());
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -6,22 +6,89 @@
 //! `fit_all` on points of a training slice (Slice 0) — then train the
 //! CART tree on (mean, std) → type and report the wrong-prediction rate
 //! on a held-out test split as the *model error*.
+//!
+//! When a pdfstore already holds that previous output (a full-fit
+//! "baseline" run over the training slices), the labels are **read back
+//! from the store** instead of refit ([`LabelSource::Store`],
+//! [`store_label_engine`]) — the paper's "reuse of previous results"
+//! applied to model generation itself. The samples are identical either
+//! way (the store holds exactly the full-fit outcome per point), pinned
+//! by `tests/store_generations.rs`.
 
 use crate::cluster::SimCluster;
 use crate::coordinator::loader::{self, LoadedWindow};
 use crate::coordinator::methods::TypeSet;
 use crate::cube::CubeDims;
 use crate::mltree::{self, DecisionTree, Sample, TreeParams};
+use crate::pdfstore::{Catalog, PdfStore, QueryEngine, QueryOptions, RegionQuery, RunSelector};
 use crate::runtime::Backend;
 use crate::storage::{DatasetReader, WindowCache};
 use crate::util::prng::Rng;
-use crate::Result;
+use crate::{PdfflowError, Result};
+
+/// Where the training labels (the "previously generated output") come
+/// from: a fresh full fit, or a prior full-fit run read from the store.
+#[derive(Clone, Copy)]
+pub enum LabelSource<'a> {
+    /// Regenerate by running the full fit over the training windows.
+    Refit,
+    /// Read the per-point types of a prior full-fit run from an open
+    /// store run (built by [`store_label_engine`]).
+    Store(&'a QueryEngine),
+}
 
 /// Labeled training data extracted from a slice's full-fit output.
 pub struct TrainingData {
     pub samples: Vec<Sample>,
-    /// Real seconds spent producing the "previous output" (fit_all runs).
+    /// Real seconds spent producing the "previous output" (fit_all runs
+    /// or store reads).
     pub generation_real_s: f64,
+    /// True when the labels were read from a pdfstore run instead of
+    /// refit.
+    pub from_store: bool,
+}
+
+/// Try to build a store-backed label source: the most recent full-fit
+/// ("baseline") run with this candidate-type set, in a store whose
+/// geometry matches and whose resolved view fully covers every training
+/// slice. `None` means "refit" — a missing or unusable store is never
+/// an error, just the slow path.
+pub fn store_label_engine(
+    store_dir: Option<&str>,
+    dims: &CubeDims,
+    n_obs: usize,
+    train_slices: &[usize],
+    types: TypeSet,
+) -> Option<QueryEngine> {
+    let dir = std::path::Path::new(store_dir?);
+    if !Catalog::exists(dir) {
+        return None;
+    }
+    let catalog = Catalog::load(dir).ok()?;
+    if catalog.dims != *dims || catalog.n_obs != n_obs {
+        return None;
+    }
+    let key = catalog
+        .runs
+        .iter()
+        .filter(|r| r.key.method == "baseline" && r.key.types == types.n_types())
+        .max_by_key(|r| r.seq)?
+        .key
+        .clone();
+    let store = PdfStore::open_run(dir, RunSelector::Key(&key)).ok()?;
+    let covered = train_slices
+        .iter()
+        .all(|&z| store.covers_lines(z, 0, dims.ny.saturating_sub(1)));
+    if !covered {
+        return None;
+    }
+    Some(QueryEngine::new(
+        store,
+        QueryOptions {
+            cache_bytes: 8 << 20,
+            ..QueryOptions::default()
+        },
+    ))
 }
 
 /// Slices whose previously generated output trains the tree. The paper
@@ -47,6 +114,9 @@ pub fn training_slices(dims: &CubeDims, train_slice: usize, n_layers: usize) -> 
 
 /// Produce labeled (mean, std) → type samples from up to `max_points`
 /// points spread over `train_slices` (paper: 25000 points of Slice 0).
+/// Features always come from loading the windows (mean/std of the raw
+/// observations); `labels` decides whether the type labels are refit or
+/// read back from a prior store run.
 #[allow(clippy::too_many_arguments)]
 pub fn build_training_data(
     reader: &DatasetReader,
@@ -58,9 +128,11 @@ pub fn build_training_data(
     types: TypeSet,
     max_points: usize,
     window_lines: usize,
+    labels: LabelSource,
 ) -> Result<TrainingData> {
     let mut samples = Vec::new();
     let mut gen_s = 0.0;
+    let from_store = matches!(labels, LabelSource::Store(_));
     let per_slice = max_points.div_ceil(train_slices.len().max(1));
     for &train_slice in train_slices {
         let mut slice_taken = 0usize;
@@ -72,15 +144,54 @@ pub fn build_training_data(
             let take = (per_slice - slice_taken)
                 .min(max_points - samples.len())
                 .min(lw.n_points());
-            let values = &lw.obs.data[..take * lw.obs.n_obs];
             let t0 = std::time::Instant::now();
-            let out = backend.run_fit_all(values, take, lw.obs.n_obs, types.n_types())?;
+            let window_labels: Vec<usize> = match labels {
+                LabelSource::Refit => {
+                    let values = &lw.obs.data[..take * lw.obs.n_obs];
+                    let out = backend.run_fit_all(values, take, lw.obs.n_obs, types.n_types())?;
+                    (0..take).map(|p| out.row(p)[0] as usize).collect()
+                }
+                LabelSource::Store(engine) => {
+                    let q = RegionQuery {
+                        z: train_slice,
+                        x0: 0,
+                        x1: dims.nx - 1,
+                        y0: window.y0,
+                        y1: window.y0 + window.lines - 1,
+                    };
+                    let recs = engine.region(&q)?;
+                    if recs.len() < take {
+                        return Err(PdfflowError::Format(format!(
+                            "store run {} holds {} records for slice {train_slice} lines \
+                             {}..{}, training needs {take}",
+                            engine.store().run_key().label(),
+                            recs.len(),
+                            q.y0,
+                            q.y1
+                        )));
+                    }
+                    // Region scans return point-id order == window point
+                    // order; pin that before trusting the labels.
+                    let mut out = Vec::with_capacity(take);
+                    for (p, rec) in recs[..take].iter().enumerate() {
+                        if rec.point != lw.obs.point_ids[p] {
+                            return Err(PdfflowError::Format(format!(
+                                "store row mismatch at training point {p}: store {:?}, \
+                                 window {:?}",
+                                rec.point, lw.obs.point_ids[p]
+                            )));
+                        }
+                        out.push(rec.dist.id());
+                    }
+                    out
+                }
+            };
             gen_s += t0.elapsed().as_secs_f64();
-            for p in 0..take {
+            for (p, &label) in window_labels.iter().enumerate() {
                 let (mean, std) = lw.mean_std(p);
                 samples.push(Sample {
                     features: vec![mean, std],
-                    label: out.row(p)[0] as usize,
+                    label,
                 });
             }
             slice_taken += take;
@@ -89,6 +200,7 @@ pub fn build_training_data(
     Ok(TrainingData {
         samples,
         generation_real_s: gen_s,
+        from_store,
     })
 }
 
@@ -101,6 +213,8 @@ pub struct TrainedModel {
     pub train_real_s: f64,
     pub n_train: usize,
     pub n_test: usize,
+    /// True when the training labels were read back from a store run.
+    pub from_store: bool,
 }
 
 /// Train with fixed hyper-parameters on a random train/test split
@@ -123,6 +237,7 @@ pub fn train_model(data: &TrainingData, params: TreeParams, seed: u64) -> Result
         train_real_s,
         n_train: train.len(),
         n_test: test.len(),
+        from_store: data.from_store,
     })
 }
 

@@ -40,7 +40,7 @@ use crate::cube::Window;
 use crate::datagen::SyntheticDataset;
 use crate::executor::{Executor, StageMetrics};
 use crate::mltree::DecisionTree;
-use crate::pdfstore::{PdfRecord, SegmentWriter, StoreWriter, REC_LEN};
+use crate::pdfstore::{PdfRecord, RunKey, SegmentWriter, StoreWriter, DEFAULT_RUN_ID, REC_LEN};
 use crate::runtime::hostpool::HostPool;
 use crate::runtime::Backend;
 use crate::storage::{CacheStats, DatasetReader, WindowCache};
@@ -141,6 +141,10 @@ pub struct Pipeline<'a> {
     store: Option<StoreWriter>,
     pub tree: Option<DecisionTree>,
     pub model_error: Option<f64>,
+    /// True when the current tree's training labels were read back from
+    /// a prior store run instead of refit (ROADMAP's store-backed tree
+    /// training).
+    pub tree_from_store: bool,
 }
 
 impl<'a> Pipeline<'a> {
@@ -161,6 +165,7 @@ impl<'a> Pipeline<'a> {
             store: None,
             tree: None,
             model_error: None,
+            tree_from_store: false,
         }
     }
 
@@ -181,7 +186,11 @@ impl<'a> Pipeline<'a> {
 
     /// Train (or re-train) the decision tree from `train_slice`'s full-fit
     /// output (paper §5.3.1; tree generation is *not* part of the measured
-    /// PDF-computation time). Returns the model error.
+    /// PDF-computation time). When `cfg.store_dir` holds a matching prior
+    /// full-fit run, the training labels are read back through the store's
+    /// `QueryEngine` instead of refit (`tree_from_store` records which
+    /// path ran; the samples — and so the tree — are identical either
+    /// way). Returns the model error.
     pub fn ensure_tree(
         &mut self,
         train_slice: usize,
@@ -202,8 +211,10 @@ impl<'a> Pipeline<'a> {
             types,
             max_points,
             self.cfg.window_lines,
+            self.cfg.store_dir.as_deref(),
         )?;
         self.model_error = Some(model.model_error);
+        self.tree_from_store = model.from_store;
         self.tree = Some(model.tree);
         Ok(model.model_error)
     }
@@ -212,6 +223,7 @@ impl<'a> Pipeline<'a> {
     pub fn set_tree(&mut self, tree: DecisionTree) {
         self.tree = Some(tree);
         self.model_error = None;
+        self.tree_from_store = false;
     }
 
     /// Run the full slice (paper's "Execution of One Slice").
@@ -249,11 +261,13 @@ impl<'a> Pipeline<'a> {
                 let backend = self.backend;
                 let spec = self.cluster.spec.clone();
                 let window_lines = self.cfg.window_lines;
+                let store_dir = self.cfg.store_dir.clone();
                 // Prefetch charges go to a throwaway ledger: warm-up is
                 // setup, like training itself.
                 let prefetch_cluster = SimCluster::new(spec.clone());
                 let warm = &windows[..k];
                 let trained = &trained;
+                let store_dir = &store_dir;
                 let task = |i: usize| {
                     if i == 0 {
                         let r = train_tree_model(
@@ -265,6 +279,7 @@ impl<'a> Pipeline<'a> {
                             types,
                             max_points,
                             window_lines,
+                            store_dir.as_deref(),
                         );
                         *trained.lock().unwrap() = Some(r);
                     } else {
@@ -283,6 +298,7 @@ impl<'a> Pipeline<'a> {
             }
             let model = trained.into_inner().unwrap().expect("training task ran")?;
             self.model_error = Some(model.model_error);
+            self.tree_from_store = model.from_store;
             self.tree = Some(model.tree);
         }
         self.run_windows(method, types, windows, slice)
@@ -504,8 +520,18 @@ impl<'a> Pipeline<'a> {
         Ok(Some(std::io::BufWriter::new(std::fs::File::create(path)?)))
     }
 
+    /// The run identity this pipeline stamps into every segment it
+    /// persists: `(method, types, run_id)`, with `run_id` from
+    /// `cfg.run_id` (`--run-id`) or the default.
+    pub fn run_key(&self, method: Method, types: TypeSet) -> RunKey {
+        let run_id = self.cfg.run_id.as_deref().unwrap_or(DEFAULT_RUN_ID);
+        RunKey::new(method.name(), types.n_types(), run_id)
+    }
+
     /// Open a pdfstore segment for this run when `cfg.store_dir` is set,
-    /// lazily attaching the store writer on first use.
+    /// lazily attaching the store writer on first use. The catalog
+    /// assigns the generation, so a rerun of the same `(method, types,
+    /// run_id, slice)` appends instead of overwriting.
     fn open_store_segment(
         &mut self,
         method: Method,
@@ -520,11 +546,8 @@ impl<'a> Pipeline<'a> {
             self.store = Some(StoreWriter::create(&dir, spec.dims, spec.n_sims)?);
         }
         let store = self.store.as_ref().expect("just created");
-        Ok(Some(store.open_segment(
-            slice,
-            method.name(),
-            types.n_types(),
-        )?))
+        let key = self.run_key(method, types);
+        Ok(Some(store.open_segment(slice, &key)?))
     }
 
     /// The attached pdfstore writer, if this pipeline persists to one.
@@ -561,10 +584,26 @@ fn train_tree_model(
     types: TypeSet,
     max_points: usize,
     window_lines: usize,
+    store_dir: Option<&str>,
 ) -> Result<mlmodel::TrainedModel> {
     let dims = reader.dataset().spec.dims;
     let scratch = SimCluster::new(cluster_spec);
     let slices = mlmodel::training_slices(&dims, train_slice, reader.dataset().spec.n_value_layers());
+    // Store-backed training (ROADMAP follow-up): when the store already
+    // holds a matching full-fit run, read the "previous output" back
+    // instead of refitting it. Falls back to the refit path whenever the
+    // store is absent, mismatched, or incomplete.
+    let engine = mlmodel::store_label_engine(
+        store_dir,
+        &dims,
+        reader.dataset().spec.n_sims,
+        &slices,
+        types,
+    );
+    let labels = match &engine {
+        Some(e) => mlmodel::LabelSource::Store(e),
+        None => mlmodel::LabelSource::Refit,
+    };
     let data = mlmodel::build_training_data(
         reader,
         cache,
@@ -575,6 +614,7 @@ fn train_tree_model(
         types,
         max_points,
         window_lines,
+        labels,
     )?;
     mlmodel::train_model(&data, Default::default(), 42)
 }

@@ -37,13 +37,19 @@
 //! `rust/README.md` for the full backend matrix.
 //!
 //! Downstream of the pipeline, the [`pdfstore`] subsystem persists every
-//! fitted PDF into a partitioned, checksummed on-disk store (per-slice
-//! segment files with footer window indexes + a self-describing
-//! manifest) and serves point lookups, rectangular region scans and
-//! analytical density/CDF/quantile queries through a sharded-LRU-cached
-//! [`pdfstore::QueryEngine`] — the layer that turns the batch
-//! reproduction into a servable system (`store` / `query` CLI
-//! subcommands, `cargo bench --bench queries` for throughput).
+//! fitted PDF into a partitioned, checksummed on-disk store: per-slice
+//! segment files with footer window indexes, organized by a
+//! **generational run catalog** — every run `(method, types, run_id)`
+//! owns immutable segments, reruns append generations instead of
+//! clobbering, and `pdfstore::compact` collapses a run to one dense
+//! generation with bit-identical query results. Reads go through the
+//! sharded-LRU-cached [`pdfstore::QueryEngine`] (point lookups, region
+//! scans, density/CDF/quantile analytics), and the [`serve`] layer puts
+//! an admission-controlled front door (in-flight + queue-depth caps,
+//! shed-with-error, per-class latency/shed counters) on top — the
+//! layers that turn the batch reproduction into a servable system
+//! (`store` / `query` / `serve` CLI subcommands, `cargo bench --bench
+//! queries` for throughput).
 
 pub mod bench;
 pub mod cluster;
@@ -57,6 +63,7 @@ pub mod pdfstore;
 pub mod rdd;
 pub mod runtime;
 pub mod sampling;
+pub mod serve;
 pub mod stats;
 pub mod storage;
 pub mod util;
@@ -70,12 +77,15 @@ pub mod prelude {
     pub use crate::datagen::SyntheticDataset;
     pub use crate::executor::Executor;
     pub use crate::mltree::DecisionTree;
-    pub use crate::pdfstore::{PdfStore, QueryEngine, QueryOptions, RegionQuery};
+    pub use crate::pdfstore::{
+        compact_run, PdfStore, QueryEngine, QueryOptions, RegionQuery, RunKey, RunSelector,
+    };
     #[cfg(feature = "xla")]
     pub use crate::runtime::Engine;
     pub use crate::runtime::{
         make_backend, Backend, BackendKind, BackendOptions, HostPool, NativeBackend,
     };
+    pub use crate::serve::{closed_loop, ServeFront, ServeOptions};
     pub use crate::stats::DistType;
 }
 
@@ -94,6 +104,17 @@ pub enum PdfflowError {
     Format(String),
     #[error("invalid argument: {0}")]
     InvalidArg(String),
+    /// Load shed by the serving tier's admission control — the caller
+    /// should back off and retry, nothing is wrong with the request.
+    #[error("overloaded: {0}")]
+    Overloaded(String),
+}
+
+impl PdfflowError {
+    /// True for admission-control sheds (retryable by design).
+    pub fn is_overload(&self) -> bool {
+        matches!(self, PdfflowError::Overloaded(_))
+    }
 }
 
 #[cfg(feature = "xla")]

@@ -13,9 +13,13 @@
 //! pdfflow figure    <fig06..fig20|treestats|all> [--full]  paper figures
 //! pdfflow artifacts-check                                   compile every artifact
 //! pdfflow store     --preset set1 --store-dir DIR --method grouping --types 4
-//!                   [--slice Z] [--lines N]                persist fitted PDFs to a pdfstore
-//! pdfflow query     --store-dir DIR [--point x,y,z] [--region z[,y0,y1[,x0,x1]]]
+//!                   [--slice Z] [--lines N] [--run-id ID]  persist fitted PDFs to a pdfstore run
+//! pdfflow store compact --store-dir DIR [--run ID]         collapse a run's generations
+//! pdfflow query     --store-dir DIR [--run ID] [--point x,y,z] [--region z[,y0,y1[,x0,x1]]]
 //!                   [--quantile Q] [--threads N] [--host-threads N] [--cache-mb MB] [--verify]
+//! pdfflow serve     --store-dir DIR [--run ID] [--clients N] [--queries N]
+//!                   [--max-in-flight N] [--queue-depth N] [--bench]
+//!                   closed-loop load through the admission-controlled serving tier
 //! ```
 //!
 //! `--config FILE` loads a TOML experiment config instead of `--preset`.
@@ -31,14 +35,20 @@ use pdfflow::config::ExperimentConfig;
 use pdfflow::coordinator::sampling::{full_slice_features, run_sampling};
 use pdfflow::coordinator::{mlmodel, Method, Pipeline, Sampler, TypeSet};
 use pdfflow::datagen::SyntheticDataset;
-use pdfflow::pdfstore::{PdfStore, QueryEngine, QueryOptions, RegionQuery};
+use pdfflow::pdfstore::{
+    compact_run, validate_run_id, PdfStore, QueryEngine, QueryOptions, RegionQuery, RunSelector,
+};
 use pdfflow::runtime::BackendKind;
+use pdfflow::serve::{closed_loop, Class, ServeFront, ServeOptions};
 use pdfflow::storage::{DatasetReader, WindowCache};
 use pdfflow::util::cli::Args;
 use pdfflow::util::timing::{fmt_bytes, fmt_secs};
 
 fn main() {
-    let args = match Args::parse(std::env::args().skip(1), &["tune", "full", "verbose", "verify"]) {
+    let args = match Args::parse(
+        std::env::args().skip(1),
+        &["tune", "full", "verbose", "verify", "bench"],
+    ) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("argument error: {e}");
@@ -95,6 +105,10 @@ fn load_config(args: &Args) -> Result<ExperimentConfig> {
     if let Some(b) = args.opt("backend") {
         cfg.backend = BackendKind::resolve(Some(b))?;
     }
+    if let Some(r) = args.opt("run-id") {
+        validate_run_id(r)?;
+        cfg.pipeline.run_id = Some(r.to_string());
+    }
     Ok(cfg)
 }
 
@@ -125,10 +139,11 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("artifacts-check") => cmd_artifacts_check(args),
         Some("store") => cmd_store(args),
         Some("query") => cmd_query(args),
+        Some("serve") => cmd_serve(args),
         Some(other) => Err(anyhow!("unknown subcommand {other:?} (see --help in README)")),
         None => {
             println!("pdfflow — parallel computation of PDFs on big spatial data");
-            println!("subcommands: generate run sample features train-tree tune-window qoi figure artifacts-check store query");
+            println!("subcommands: generate run sample features train-tree tune-window qoi figure artifacts-check store query serve");
             Ok(())
         }
     }
@@ -172,8 +187,9 @@ fn cmd_run(args: &Args) -> Result<()> {
         let r = pipe.run_slice_overlapped(method, cfg.slice, types, cfg.train_slice, 25_000)?;
         if let Some(err) = pipe.model_error {
             println!(
-                "decision tree trained on slice {} (model error {err:.4}, overlapped with first-window loads)",
-                cfg.train_slice
+                "decision tree trained on slice {} (model error {err:.4}, overlapped with first-window loads{})",
+                cfg.train_slice,
+                if pipe.tree_from_store { ", labels read from store" } else { "" }
             );
         }
         r
@@ -211,6 +227,19 @@ fn cmd_run(args: &Args) -> Result<()> {
             p.peak_busy,
             p.peak_queue_depth
         );
+        println!(
+            "  pool items: {} stolen by workers / {} drained by helping callers",
+            p.items_stolen, p.items_helped
+        );
+        let hist: Vec<String> = p
+            .per_worker
+            .iter()
+            .enumerate()
+            .map(|(k, w)| format!("w{k} {} ({} tickets)", fmt_secs(w.busy_s), w.tickets))
+            .collect();
+        if !hist.is_empty() {
+            println!("  worker busy histogram: {}", hist.join(", "));
+        }
     }
     Ok(())
 }
@@ -286,6 +315,20 @@ fn cmd_train_tree(args: &Args) -> Result<()> {
     let cache = WindowCache::new(cfg.pipeline.cache_bytes);
     let cluster = SimCluster::new(cfg.cluster.clone());
     let slices = mlmodel::training_slices(&ds.spec.dims, cfg.train_slice, ds.spec.n_value_layers());
+    // Store-backed training: when the configured store already holds a
+    // matching full-fit run, read the "previous output" instead of
+    // refitting it.
+    let label_engine = mlmodel::store_label_engine(
+        cfg.pipeline.store_dir.as_deref(),
+        &ds.spec.dims,
+        ds.spec.n_sims,
+        &slices,
+        types,
+    );
+    let labels = match &label_engine {
+        Some(e) => mlmodel::LabelSource::Store(e),
+        None => mlmodel::LabelSource::Refit,
+    };
     let data = mlmodel::build_training_data(
         &reader,
         &cache,
@@ -296,12 +339,18 @@ fn cmd_train_tree(args: &Args) -> Result<()> {
         types,
         25_000,
         cfg.pipeline.window_lines,
+        labels,
     )?;
     println!(
-        "training data: {} samples from slice {} ({} generating the previous output)",
+        "training data: {} samples from slice {} ({} {} the previous output)",
         data.samples.len(),
         cfg.train_slice,
-        fmt_secs(data.generation_real_s)
+        fmt_secs(data.generation_real_s),
+        if data.from_store {
+            "reading back"
+        } else {
+            "generating"
+        },
     );
     let params = if args.flag("tune") {
         let (params, err, secs) = mlmodel::tune_hypers(&data, 42)?;
@@ -415,9 +464,47 @@ fn cmd_qoi(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `pdfflow store compact`: collapse a run's generations into one dense
+/// segment per slice (query results bit-identical; old files retired).
+fn cmd_store_compact(args: &Args) -> Result<()> {
+    let store_dir = args
+        .opt("store-dir")
+        .ok_or_else(|| anyhow!("store compact needs --store-dir DIR"))?;
+    let t0 = std::time::Instant::now();
+    let rep = compact_run(store_dir, args.opt("run"))?;
+    if rep.already_compact {
+        println!(
+            "run {} already compact: {} slice(s), {} segment(s), {} (generation {})",
+            rep.run.label(),
+            rep.slices,
+            rep.segments_after,
+            fmt_bytes(rep.bytes_after),
+            rep.gen,
+        );
+        return Ok(());
+    }
+    println!(
+        "compacted run {} to generation {} in {}: {} → {} segment(s), {} → {} on disk, \
+         {} records, {} file(s) retired",
+        rep.run.label(),
+        rep.gen,
+        fmt_secs(t0.elapsed().as_secs_f64()),
+        rep.segments_before,
+        rep.segments_after,
+        fmt_bytes(rep.bytes_before),
+        fmt_bytes(rep.bytes_after),
+        rep.records,
+        rep.retired_files,
+    );
+    Ok(())
+}
+
 /// Run the pipeline with the pdfstore persist sink and report the
 /// resulting store (Algorithm 1's persist phase, made queryable).
 fn cmd_store(args: &Args) -> Result<()> {
+    if args.positional.first().map(|s| s.as_str()) == Some("compact") {
+        return cmd_store_compact(args);
+    }
     let mut cfg = load_config(args)?;
     let store_dir = args
         .opt("store-dir")
@@ -450,9 +537,11 @@ fn cmd_store(args: &Args) -> Result<()> {
     );
     let store = PdfStore::open(&store_dir)?;
     println!(
-        "store {}: {} segment(s), {} records, {} on disk (manifest verified)",
+        "store {} run {}: {} segment(s) in {} generation(s), {} records, {} on disk (catalog verified)",
         store_dir,
+        store.run_key().label(),
         store.n_segments(),
+        store.run().n_generations(),
         store.n_records(),
         fmt_bytes(store.total_bytes()),
     );
@@ -530,8 +619,9 @@ fn cmd_query(args: &Args) -> Result<()> {
         Some(qs) => Some(qs.parse().context("--quantile")?),
         None => None,
     };
-    let engine = QueryEngine::open(
+    let engine = QueryEngine::open_run(
         store_dir,
+        RunSelector::from_opt(args.opt("run")),
         QueryOptions {
             cache_bytes,
             workers: threads,
@@ -540,13 +630,15 @@ fn cmd_query(args: &Args) -> Result<()> {
     )?;
     let dims = engine.dims();
     println!(
-        "store {}: {}x{}x{} cube, {} observations, {} segment(s), {} records, {}",
+        "store {} run {}: {}x{}x{} cube, {} observations, {} segment(s) in {} generation(s), {} records, {}",
         store_dir,
+        engine.store().run_key().label(),
         dims.nx,
         dims.ny,
         dims.nz,
-        engine.store().manifest.n_obs,
+        engine.store().n_obs(),
         engine.store().n_segments(),
+        engine.store().run().n_generations(),
         engine.store().n_records(),
         fmt_bytes(engine.store().total_bytes()),
     );
@@ -619,6 +711,120 @@ fn cmd_query(args: &Args) -> Result<()> {
         fmt_bytes(m.bytes),
         m.entries
     );
+    Ok(())
+}
+
+/// Closed-loop load through the admission-controlled serving tier:
+/// `--clients` synchronous clients drive point/region/analytic queries
+/// against one `ServeFront`; the in-flight and queue-depth caps bound
+/// concurrency, the overflow is shed with an error. `--bench` upserts
+/// the serving row into BENCH_queries.json next to the raw engine rows.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let store_dir = args
+        .opt("store-dir")
+        .ok_or_else(|| anyhow!("serve needs --store-dir DIR"))?;
+    if let Some(t) = args.opt("host-threads") {
+        let n = t.parse::<usize>().context("--host-threads")?.max(1);
+        let got = pdfflow::runtime::hostpool::configure(n);
+        if got != n {
+            eprintln!("note: host pool already sized at {got} threads (requested {n})");
+        }
+    }
+    let cache_bytes = match args.opt("cache-mb") {
+        Some(mb) => mb.parse::<u64>().context("--cache-mb")? << 20,
+        None => 64 << 20,
+    };
+    let defaults = ServeOptions::default();
+    let max_in_flight = args
+        .usize_or("max-in-flight", defaults.max_in_flight)
+        .map_err(|e| anyhow!(e))?
+        .max(1);
+    let queue_depth = args
+        .usize_or("queue-depth", 2 * max_in_flight)
+        .map_err(|e| anyhow!(e))?;
+    let clients = args
+        .usize_or("clients", 2 * (max_in_flight + queue_depth))
+        .map_err(|e| anyhow!(e))?
+        .max(1);
+    let total = args.usize_or("queries", 20_000).map_err(|e| anyhow!(e))?;
+    let per_client = total.div_ceil(clients).max(1);
+
+    let engine = QueryEngine::open_run(
+        store_dir,
+        RunSelector::from_opt(args.opt("run")),
+        QueryOptions {
+            cache_bytes,
+            ..QueryOptions::default()
+        },
+    )?;
+    println!(
+        "serving store {} run {}: {} records, caps {} in-flight / {} queued, {} clients x {} requests",
+        store_dir,
+        engine.store().run_key().label(),
+        engine.store().n_records(),
+        max_in_flight,
+        queue_depth,
+        clients,
+        per_client,
+    );
+    let front = ServeFront::new(
+        engine,
+        ServeOptions {
+            max_in_flight,
+            queue_depth,
+        },
+    );
+    let rep = closed_loop(&front, clients, per_client, 42);
+    let m = &rep.metrics;
+    println!(
+        "served {} of {} requests in {} — {:.0} q/s, {} shed, peaks {} in-flight / {} queued",
+        m.total_completed(),
+        rep.requests,
+        fmt_secs(rep.secs),
+        rep.throughput,
+        m.total_shed(),
+        m.peak_in_flight,
+        m.peak_queued,
+    );
+    for c in Class::ALL {
+        let cm = m.class(c);
+        if cm.admitted + cm.shed == 0 {
+            continue;
+        }
+        println!(
+            "  {:<9} admitted {:>7}  completed {:>7}  shed {:>6}  errors {:>4}  avg {}  max {}  queued {}",
+            c.name(),
+            cm.admitted,
+            cm.completed,
+            cm.shed,
+            cm.errors,
+            fmt_secs(cm.avg_latency_s()),
+            fmt_secs(cm.latency_s_max),
+            fmt_secs(cm.queue_s_sum),
+        );
+    }
+    if args.flag("bench") {
+        let path = pdfflow::bench::upsert_bench_row(
+            "queries",
+            "serve",
+            pdfflow::bench::BenchRow {
+                threads: clients,
+                throughput: rep.throughput,
+                extra: vec![
+                    ("shed", pdfflow::util::json::Json::Num(m.total_shed() as f64)),
+                    (
+                        "max_in_flight",
+                        pdfflow::util::json::Json::Num(max_in_flight as f64),
+                    ),
+                    (
+                        "queue_depth",
+                        pdfflow::util::json::Json::Num(queue_depth as f64),
+                    ),
+                ],
+            },
+        )?;
+        println!("serving row recorded in {}", path.display());
+    }
     Ok(())
 }
 

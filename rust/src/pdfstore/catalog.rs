@@ -1,0 +1,648 @@
+//! The generational run catalog: the store's single source of truth.
+//!
+//! The paper's workflow refits the same spatial data many times — per
+//! method, per candidate-type set, per experiment rerun — and explicitly
+//! reuses "previous results" across runs. A last-writer-wins manifest
+//! (the store's first incarnation) silently clobbers exactly the runs
+//! you would want to compare against. The catalog fixes that by making
+//! persisted output **immutable and generational**, the same
+//! partition-indexed organization the Random Sample Partition model
+//! argues for (Salloum et al., arXiv 1712.04146):
+//!
+//! * A **run** is identified by `(method, types, run_id)`. Every run
+//!   owns its own segment files; two runs never share or overwrite a
+//!   file.
+//! * Within a run, each written segment carries a **generation**
+//!   number. Re-persisting a slice in the same run appends a new
+//!   generation instead of truncating the old file; readers resolve
+//!   window-by-window to the newest generation
+//!   ([`RunEntry::resolve_slice`]). Compaction
+//!   ([`crate::pdfstore::compact`]) rewrites the resolved view as one
+//!   dense generation and retires the rest.
+//! * The catalog itself (`CATALOG.json`) is a checksummed JSON document
+//!   swapped atomically (tmp + rename), so the store on disk is always
+//!   openable: a crash mid-write or mid-compaction leaves stray files
+//!   the catalog simply does not reference.
+//!
+//! Nothing in a store directory is trusted unless the catalog names it;
+//! that is what makes crash recovery a no-op.
+
+use std::collections::HashSet;
+use std::path::Path;
+
+use crate::cube::CubeDims;
+use crate::pdfstore::fnv64;
+use crate::pdfstore::segment::{SegmentMeta, WindowEntry};
+use crate::util::json::Json;
+use crate::{PdfflowError, Result};
+
+/// Catalog file name inside a store directory.
+pub const CATALOG_NAME: &str = "CATALOG.json";
+/// Manifest file name of the pre-generational store format; detected
+/// only to fail with a diagnosable error instead of orphaning the data.
+pub const LEGACY_MANIFEST_NAME: &str = "MANIFEST.json";
+/// Catalog format version (bumped from the manifest-era 1).
+pub const CATALOG_VERSION: u32 = 2;
+/// The run id used when none is configured (`--run-id` / config).
+pub const DEFAULT_RUN_ID: &str = "default";
+
+/// Identity of one run: the paper's experiment coordinates plus a
+/// user-chosen rerun label.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct RunKey {
+    pub method: String,
+    /// Candidate-type count of the run (4 or 10 in the paper).
+    pub types: usize,
+    pub run_id: String,
+}
+
+impl RunKey {
+    pub fn new(method: &str, types: usize, run_id: &str) -> RunKey {
+        RunKey {
+            method: method.to_string(),
+            types,
+            run_id: run_id.to_string(),
+        }
+    }
+
+    /// Human-readable `run/method/types` label for reports.
+    pub fn label(&self) -> String {
+        format!("{}/{}/{}", self.run_id, self.method, self.types)
+    }
+}
+
+/// Run ids become file-name components, so they are restricted to a
+/// safe alphabet. Rejecting here keeps every later path join trivial.
+/// `"latest"` is reserved: the run selector resolves it to the most
+/// recently written run, so a run actually named that would be
+/// unaddressable.
+pub fn validate_run_id(id: &str) -> Result<()> {
+    if id == "latest" {
+        return Err(PdfflowError::InvalidArg(
+            "run id \"latest\" is reserved for run selection".into(),
+        ));
+    }
+    let ok = !id.is_empty()
+        && id.len() <= 64
+        && id
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.'));
+    if ok {
+        Ok(())
+    } else {
+        Err(PdfflowError::InvalidArg(format!(
+            "run id {id:?} must be 1..=64 chars of [A-Za-z0-9._-]"
+        )))
+    }
+}
+
+/// One run's catalog entry: identity, recency, and its segment list
+/// (all generations; resolution picks among them at read time).
+#[derive(Clone, Debug)]
+pub struct RunEntry {
+    pub key: RunKey,
+    /// Store-wide monotone sequence of this run's last update; the
+    /// "latest" run is the one with the highest `seq` (no wall-clock in
+    /// the format, so the ordering is deterministic and testable).
+    pub seq: u64,
+    pub segments: Vec<SegmentMeta>,
+}
+
+/// One resolved window of a slice: which segment (by index into `segs`
+/// as passed to [`RunEntry::resolve_slice`]) and which window entry of
+/// its footer serves these lines.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ResolvedWindow {
+    /// Index into the segment list the resolution ran over.
+    pub seg: usize,
+    /// Window index inside that segment's footer.
+    pub win: usize,
+    pub entry: WindowEntry,
+}
+
+impl RunEntry {
+    /// Highest generation number present in this run, if any.
+    pub fn max_gen(&self) -> Option<usize> {
+        self.segments.iter().map(|s| s.gen).max()
+    }
+
+    /// Distinct generation count (what compaction collapses to 1).
+    pub fn n_generations(&self) -> usize {
+        let mut gens: Vec<usize> = self.segments.iter().map(|s| s.gen).collect();
+        gens.sort_unstable();
+        gens.dedup();
+        gens.len()
+    }
+
+    /// Generation the next segment written for `slice` must carry: one
+    /// past the newest existing generation of that slice (0 for a slice
+    /// this run has never persisted). This is what turns a rerun into
+    /// an append instead of an overwrite.
+    pub fn next_gen_for_slice(&self, slice: usize) -> usize {
+        self.segments
+            .iter()
+            .filter(|s| s.slice == slice)
+            .map(|s| s.gen + 1)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Slices this run has persisted, ascending.
+    pub fn slices(&self) -> Vec<usize> {
+        let mut out: Vec<usize> = self.segments.iter().map(|s| s.slice).collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Resolve one slice's readable windows: newest generation wins,
+    /// whole-window shadowing. Segments are scanned newest generation
+    /// first (ties broken toward the later catalog entry — the later
+    /// write); a window is accepted when its line range overlaps no
+    /// already-accepted window, and skipped when newer windows cover
+    /// it entirely. A *partially* covered window — a rerun that used a
+    /// different window grid — is a hard error: silently dropping it
+    /// would lose the lines the newer generation did not rewrite, and
+    /// a later compaction would make that loss permanent. The result is
+    /// sorted by `y0` and non-overlapping — exactly the view compaction
+    /// materializes, which is why queries are bit-identical before and
+    /// after a compact.
+    ///
+    /// `windows_of(i)` supplies segment `i`'s decoded footer entries
+    /// (the caller owns the open readers; the catalog itself never
+    /// touches segment files).
+    pub fn resolve_slice(
+        &self,
+        slice: usize,
+        windows_of: impl Fn(usize) -> Vec<WindowEntry>,
+    ) -> Result<Vec<ResolvedWindow>> {
+        let mut order: Vec<usize> = (0..self.segments.len())
+            .filter(|&i| self.segments[i].slice == slice)
+            .collect();
+        // Newest generation first; within a generation, the later
+        // catalog entry (the later finished write) first.
+        order.sort_by(|&a, &b| {
+            self.segments[b]
+                .gen
+                .cmp(&self.segments[a].gen)
+                .then(b.cmp(&a))
+        });
+        let mut accepted: Vec<ResolvedWindow> = Vec::new();
+        for seg in order {
+            for (win, entry) in windows_of(seg).into_iter().enumerate() {
+                let (lo, hi) = (entry.y0, entry.y0 + entry.lines);
+                let overlaps = accepted
+                    .iter()
+                    .any(|a| a.entry.y0 < hi && lo < a.entry.y0 + a.entry.lines);
+                if !overlaps {
+                    accepted.push(ResolvedWindow { seg, win, entry });
+                    continue;
+                }
+                // Fully covered by newer windows → shadowed, skip. The
+                // accepted set is non-overlapping, so walking it in y0
+                // order measures coverage exactly.
+                let mut ranges: Vec<(u64, u64)> = accepted
+                    .iter()
+                    .map(|a| (a.entry.y0, a.entry.y0 + a.entry.lines))
+                    .collect();
+                ranges.sort_unstable();
+                let mut need = lo;
+                for (a0, a1) in ranges {
+                    if a0 <= need && need < a1 {
+                        need = a1;
+                    }
+                    if need >= hi {
+                        break;
+                    }
+                }
+                if need < hi {
+                    return Err(PdfflowError::Format(format!(
+                        "run {}: slice {slice} window [{lo},{hi}) of {} is only partially \
+                         shadowed by newer generations — the run mixes window grids; rerun \
+                         the full slice (or rerun with the original window size), then compact",
+                        self.key.label(),
+                        self.segments[seg].file,
+                    )));
+                }
+            }
+        }
+        accepted.sort_by_key(|a| a.entry.y0);
+        Ok(accepted)
+    }
+}
+
+/// The store catalog: geometry + every run's generational segment list.
+#[derive(Clone, Debug)]
+pub struct Catalog {
+    pub dims: CubeDims,
+    pub n_obs: usize,
+    /// Next value of the monotone run-update sequence.
+    pub next_seq: u64,
+    pub runs: Vec<RunEntry>,
+}
+
+impl Catalog {
+    pub fn new(dims: CubeDims, n_obs: usize) -> Catalog {
+        Catalog {
+            dims,
+            n_obs,
+            next_seq: 1,
+            runs: Vec::new(),
+        }
+    }
+
+    pub fn run(&self, key: &RunKey) -> Option<&RunEntry> {
+        self.runs.iter().find(|r| &r.key == key)
+    }
+
+    /// The most recently updated run, if any.
+    pub fn latest(&self) -> Option<&RunEntry> {
+        self.runs.iter().max_by_key(|r| r.seq)
+    }
+
+    /// Resolve a run selector: `None` / `"latest"` → most recently
+    /// updated run; otherwise the most recently updated run whose
+    /// `run_id` matches. Every failure names what exists, so a typo'd
+    /// `--run` is diagnosable from the error alone.
+    pub fn select(&self, selector: Option<&str>) -> Result<&RunEntry> {
+        let known = || {
+            let mut ids: Vec<String> = self.runs.iter().map(|r| r.key.label()).collect();
+            ids.sort();
+            ids.join(", ")
+        };
+        match selector {
+            None | Some("latest") => self.latest().ok_or_else(|| {
+                PdfflowError::InvalidArg("store catalog holds no runs yet".into())
+            }),
+            Some(id) => self
+                .runs
+                .iter()
+                .filter(|r| r.key.run_id == id)
+                .max_by_key(|r| r.seq)
+                .ok_or_else(|| {
+                    PdfflowError::InvalidArg(format!(
+                        "no run with id {id:?} in store (have: {})",
+                        known()
+                    ))
+                }),
+        }
+    }
+
+    /// Register a finished segment under its run (created on first
+    /// write) and mark the run as the store's most recent.
+    pub fn add_segment(&mut self, meta: SegmentMeta) {
+        let key = RunKey::new(&meta.method, meta.types, &meta.run);
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        match self.runs.iter_mut().find(|r| r.key == key) {
+            Some(run) => {
+                run.seq = seq;
+                run.segments.push(meta);
+            }
+            None => self.runs.push(RunEntry {
+                key,
+                seq,
+                segments: vec![meta],
+            }),
+        }
+    }
+
+    /// Replace a run's whole segment list (compaction's publish step)
+    /// and bump its recency.
+    pub fn replace_run_segments(&mut self, key: &RunKey, segments: Vec<SegmentMeta>) -> Result<()> {
+        let seq = self.next_seq;
+        let run = self
+            .runs
+            .iter_mut()
+            .find(|r| &r.key == key)
+            .ok_or_else(|| {
+                PdfflowError::InvalidArg(format!("run {} not in catalog", key.label()))
+            })?;
+        run.seq = seq;
+        run.segments = segments;
+        self.next_seq += 1;
+        Ok(())
+    }
+
+    /// Every segment file any run references (orphan detection).
+    pub fn referenced_files(&self) -> HashSet<String> {
+        self.runs
+            .iter()
+            .flat_map(|r| r.segments.iter().map(|s| s.file.clone()))
+            .collect()
+    }
+
+    fn body_json(&self) -> Json {
+        let runs: Vec<Json> = self
+            .runs
+            .iter()
+            .map(|r| {
+                let segs: Vec<Json> = r
+                    .segments
+                    .iter()
+                    .map(|s| {
+                        Json::obj(vec![
+                            ("file", Json::Str(s.file.clone())),
+                            ("slice", Json::Num(s.slice as f64)),
+                            ("gen", Json::Num(s.gen as f64)),
+                            ("windows", Json::Num(s.n_windows as f64)),
+                            ("records", Json::Num(s.n_records as f64)),
+                            ("bytes", Json::Num(s.bytes as f64)),
+                            ("checksum", Json::Str(format!("{:016x}", s.checksum))),
+                        ])
+                    })
+                    .collect();
+                Json::obj(vec![
+                    ("id", Json::Str(r.key.run_id.clone())),
+                    ("method", Json::Str(r.key.method.clone())),
+                    ("types", Json::Num(r.key.types as f64)),
+                    ("seq", Json::Num(r.seq as f64)),
+                    ("segments", Json::Arr(segs)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("version", Json::Num(CATALOG_VERSION as f64)),
+            (
+                "dims",
+                Json::Arr(vec![
+                    Json::Num(self.dims.nx as f64),
+                    Json::Num(self.dims.ny as f64),
+                    Json::Num(self.dims.nz as f64),
+                ]),
+            ),
+            ("n_obs", Json::Num(self.n_obs as f64)),
+            ("next_seq", Json::Num(self.next_seq as f64)),
+            ("runs", Json::Arr(runs)),
+        ])
+    }
+
+    /// Atomic swap with a self-checksum: serialize the body, checksum
+    /// it, write `CATALOG.json.tmp`, rename over `CATALOG.json`. A
+    /// crash at any point leaves either the old catalog or the new one,
+    /// never a torn file — the publish point of every write and every
+    /// compaction.
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        let body = self.body_json();
+        let body_text = body.to_string();
+        let sum = fnv64(body_text.as_bytes());
+        let doc = Json::obj(vec![
+            ("body", body),
+            ("checksum", Json::Str(format!("{sum:016x}"))),
+        ]);
+        let tmp = dir.join(format!("{CATALOG_NAME}.tmp"));
+        std::fs::write(&tmp, doc.to_string())?;
+        std::fs::rename(&tmp, dir.join(CATALOG_NAME))?;
+        Ok(())
+    }
+
+    /// True when `dir` holds a catalog file.
+    pub fn exists(dir: &Path) -> bool {
+        dir.join(CATALOG_NAME).exists()
+    }
+
+    /// Load and verify the self-checksum; any mismatch is a hard error —
+    /// a store with a broken catalog must not serve queries. A
+    /// directory holding only the pre-generational `MANIFEST.json` gets
+    /// a migration error, not a bare file-not-found.
+    pub fn load(dir: &Path) -> Result<Catalog> {
+        let path = dir.join(CATALOG_NAME);
+        if !path.exists() && dir.join(LEGACY_MANIFEST_NAME).exists() {
+            return Err(PdfflowError::Format(format!(
+                "{} holds a legacy manifest-format store ({LEGACY_MANIFEST_NAME}, \
+                 pre-generational catalog); re-persist the runs into a fresh store \
+                 directory",
+                dir.display()
+            )));
+        }
+        let text = std::fs::read_to_string(&path)?;
+        let doc = Json::parse(&text)
+            .map_err(|e| PdfflowError::Format(format!("{}: {e}", path.display())))?;
+        let bad = |what: &str| PdfflowError::Format(format!("{}: {what}", path.display()));
+        let body = doc.get("body").ok_or_else(|| bad("missing body"))?;
+        let want = doc
+            .get("checksum")
+            .and_then(|c| c.as_str())
+            .and_then(parse_hex64)
+            .ok_or_else(|| bad("missing checksum"))?;
+        let got = fnv64(body.to_string().as_bytes());
+        if got != want {
+            return Err(bad(&format!(
+                "catalog checksum mismatch (stored {want:016x}, computed {got:016x})"
+            )));
+        }
+        let version = body
+            .get("version")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| bad("missing version"))?;
+        if version != CATALOG_VERSION as usize {
+            return Err(bad(&format!("unsupported catalog version {version}")));
+        }
+        let dims_arr = body
+            .get("dims")
+            .and_then(|d| d.as_arr())
+            .ok_or_else(|| bad("missing dims"))?;
+        if dims_arr.len() != 3 {
+            return Err(bad("dims must have 3 entries"));
+        }
+        let dim = |i: usize| dims_arr[i].as_usize().ok_or_else(|| bad("bad dims entry"));
+        let dims = CubeDims::new(dim(0)?, dim(1)?, dim(2)?);
+        let n_obs = body
+            .get("n_obs")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| bad("missing n_obs"))?;
+        let next_seq = body
+            .get("next_seq")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| bad("missing next_seq"))? as u64;
+        let mut runs = Vec::new();
+        for r in body
+            .get("runs")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| bad("missing runs"))?
+        {
+            let run_id = r
+                .get("id")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| bad("run missing id"))?
+                .to_string();
+            let method = r
+                .get("method")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| bad("run missing method"))?
+                .to_string();
+            let types = r
+                .get("types")
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| bad("run missing types"))?;
+            let seq = r
+                .get("seq")
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| bad("run missing seq"))? as u64;
+            let mut segments = Vec::new();
+            for s in r
+                .get("segments")
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| bad("run missing segments"))?
+            {
+                let field = |k: &str| s.get(k).and_then(|v| v.as_usize());
+                segments.push(SegmentMeta {
+                    file: s
+                        .get("file")
+                        .and_then(|v| v.as_str())
+                        .ok_or_else(|| bad("segment missing file"))?
+                        .to_string(),
+                    slice: field("slice").ok_or_else(|| bad("segment missing slice"))?,
+                    method: method.clone(),
+                    types,
+                    run: run_id.clone(),
+                    gen: field("gen").ok_or_else(|| bad("segment missing gen"))?,
+                    n_windows: field("windows").ok_or_else(|| bad("segment missing windows"))?,
+                    n_records: field("records").ok_or_else(|| bad("segment missing records"))?
+                        as u64,
+                    bytes: field("bytes").ok_or_else(|| bad("segment missing bytes"))? as u64,
+                    checksum: s
+                        .get("checksum")
+                        .and_then(|v| v.as_str())
+                        .and_then(parse_hex64)
+                        .ok_or_else(|| bad("segment missing checksum"))?,
+                });
+            }
+            runs.push(RunEntry {
+                key: RunKey {
+                    method,
+                    types,
+                    run_id,
+                },
+                seq,
+                segments,
+            });
+        }
+        Ok(Catalog {
+            dims,
+            n_obs,
+            next_seq,
+            runs,
+        })
+    }
+}
+
+fn parse_hex64(s: &str) -> Option<u64> {
+    u64::from_str_radix(s, 16).ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(slice: usize, run: &str, gen: usize, file: &str) -> SegmentMeta {
+        SegmentMeta {
+            file: file.into(),
+            slice,
+            method: "baseline".into(),
+            types: 4,
+            run: run.into(),
+            gen,
+            n_windows: 2,
+            n_records: 64,
+            bytes: 1800,
+            checksum: 0x1234_5678_9abc_def0,
+        }
+    }
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("pdfflow-cat-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn roundtrip_and_tamper_detection() {
+        let dir = tmp("rt");
+        let mut c = Catalog::new(CubeDims::new(16, 12, 8), 100);
+        c.add_segment(meta(1, "a", 0, "slice1_baseline_4_a_g0.seg"));
+        c.add_segment(meta(1, "a", 1, "slice1_baseline_4_a_g1.seg"));
+        c.add_segment(meta(2, "b", 0, "slice2_baseline_4_b_g0.seg"));
+        c.save(&dir).unwrap();
+        let back = Catalog::load(&dir).unwrap();
+        assert_eq!(back.dims, c.dims);
+        assert_eq!(back.n_obs, 100);
+        assert_eq!(back.next_seq, c.next_seq);
+        assert_eq!(back.runs.len(), 2);
+        let a = back.run(&RunKey::new("baseline", 4, "a")).unwrap();
+        assert_eq!(a.segments, c.runs[0].segments);
+        assert_eq!(a.max_gen(), Some(1));
+        assert_eq!(a.next_gen_for_slice(1), 2);
+        assert_eq!(a.next_gen_for_slice(5), 0);
+        // Latest is run "b" (added last).
+        assert_eq!(back.latest().unwrap().key.run_id, "b");
+        assert_eq!(back.select(Some("a")).unwrap().key.run_id, "a");
+        assert!(back.select(Some("zzz")).is_err());
+        // Tamper inside the body: the self-checksum must reject it.
+        let path = dir.join(CATALOG_NAME);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let tampered = text.replacen("\"slice\":1", "\"slice\":3", 1);
+        assert_ne!(text, tampered);
+        std::fs::write(&path, tampered).unwrap();
+        assert!(Catalog::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn resolution_prefers_newest_generation_per_window() {
+        let mut c = Catalog::new(CubeDims::new(4, 8, 2), 10);
+        // gen0 covers lines 0..8 in two windows; gen1 rewrites lines 4..8.
+        c.add_segment(meta(0, "a", 0, "g0.seg"));
+        c.add_segment(meta(0, "a", 1, "g1.seg"));
+        let run = c.run(&RunKey::new("baseline", 4, "a")).unwrap();
+        let windows = |seg: usize| -> Vec<WindowEntry> {
+            match run.segments[seg].gen {
+                0 => vec![
+                    WindowEntry { y0: 0, lines: 4, offset: 8, n_records: 16 },
+                    WindowEntry { y0: 4, lines: 4, offset: 456, n_records: 16 },
+                ],
+                _ => vec![WindowEntry { y0: 4, lines: 4, offset: 8, n_records: 16 }],
+            }
+        };
+        let resolved = run.resolve_slice(0, windows).unwrap();
+        assert_eq!(resolved.len(), 2);
+        // Lines 0..4 come from gen0, lines 4..8 from gen1.
+        assert_eq!(resolved[0].entry.y0, 0);
+        assert_eq!(run.segments[resolved[0].seg].gen, 0);
+        assert_eq!(resolved[1].entry.y0, 4);
+        assert_eq!(run.segments[resolved[1].seg].gen, 1);
+    }
+
+    #[test]
+    fn misaligned_generations_are_an_error_not_silent_loss() {
+        // gen0 window [0,8); gen1 rewrote only [0,6) with a different
+        // grid. Whole-window shadowing would drop gen0's lines 6..8 —
+        // resolution must refuse instead.
+        let mut c = Catalog::new(CubeDims::new(4, 8, 2), 10);
+        c.add_segment(meta(0, "a", 0, "g0.seg"));
+        c.add_segment(meta(0, "a", 1, "g1.seg"));
+        let run = c.run(&RunKey::new("baseline", 4, "a")).unwrap();
+        let windows = |seg: usize| -> Vec<WindowEntry> {
+            match run.segments[seg].gen {
+                0 => vec![WindowEntry { y0: 0, lines: 8, offset: 8, n_records: 32 }],
+                _ => vec![WindowEntry { y0: 0, lines: 6, offset: 8, n_records: 24 }],
+            }
+        };
+        let err = run.resolve_slice(0, windows).unwrap_err();
+        assert!(
+            err.to_string().contains("partially shadowed"),
+            "unexpected error: {err}"
+        );
+    }
+
+    #[test]
+    fn run_id_validation() {
+        assert!(validate_run_id("default").is_ok());
+        assert!(validate_run_id("exp-2.1_b").is_ok());
+        assert!(validate_run_id("").is_err());
+        assert!(validate_run_id("a/b").is_err());
+        assert!(validate_run_id("latest").is_err(), "reserved selector id");
+        assert!(validate_run_id(&"x".repeat(65)).is_err());
+    }
+}

@@ -1,0 +1,143 @@
+//! Compaction: collapse a run's generations into one dense layout.
+//!
+//! A long-lived run accumulates generations — every rerun of a slice
+//! appends a new segment, and readers resolve window-by-window to the
+//! newest one, leaving shadowed windows as dead bytes on disk and extra
+//! open file handles per query. `compact_run` rewrites the run's
+//! *resolved view* (exactly what queries can see, nothing else) into
+//! one fresh segment per slice — windows sorted by `y0`, no shadowed
+//! data, rebuilt footer index and trailer checksum — publishes it as a
+//! new generation with one atomic catalog swap, and only then unlinks
+//! the superseded files.
+//!
+//! Two properties fall out of that ordering:
+//!
+//! * **Bit-identical reads.** The rewrite streams decoded records
+//!   through the same 28-byte codec (encode∘decode is the identity), in
+//!   the same resolved window order a query would visit, so every
+//!   point / region / analytic query answers identically before and
+//!   after — pinned by `tests/store_generations.rs`.
+//! * **Crash safety.** Until the catalog swap, new files are unlinked
+//!   `.tmp`s or unreferenced `.seg`s that no open path ever touches; a
+//!   crash at any point cold-opens to the previous generation with
+//!   `verify()` clean. After the swap, old files are garbage whose
+//!   deletion is best-effort.
+
+use std::path::Path;
+
+use crate::pdfstore::{
+    Catalog, PdfStore, RunKey, RunSelector, SegmentMeta, SegmentWriter,
+};
+use crate::Result;
+
+/// What one compaction did (CLI `pdfflow store compact` prints this).
+#[derive(Clone, Debug)]
+pub struct CompactReport {
+    pub run: RunKey,
+    /// Generation the compacted segments were published as. When the
+    /// run was already dense this is the existing generation and
+    /// nothing was rewritten.
+    pub gen: usize,
+    /// True when the run was already one dense generation (no-op).
+    pub already_compact: bool,
+    pub slices: usize,
+    pub segments_before: usize,
+    pub segments_after: usize,
+    pub bytes_before: u64,
+    pub bytes_after: u64,
+    /// Records reachable through the resolved view (unchanged by
+    /// compaction, by construction).
+    pub records: u64,
+    /// Superseded segment files unlinked after the catalog swap.
+    pub retired_files: usize,
+}
+
+/// Compact one run of the store at `dir` (see module docs). `selector`
+/// picks the run the way `pdfflow query --run` does: `None` = latest.
+pub fn compact_run(dir: impl AsRef<Path>, selector: Option<&str>) -> Result<CompactReport> {
+    let dir = dir.as_ref();
+    let store = PdfStore::open_run(dir, RunSelector::from_opt(selector))?;
+    let key = store.run_key().clone();
+    let slices = store.slices();
+    let segments_before = store.n_segments();
+    let bytes_before = store.total_bytes();
+    let records = store.n_records();
+
+    // Already dense? One segment per slice and nothing shadowed means a
+    // rewrite would reproduce the same files under a new name — skip.
+    let dense = store.run().segments.len() == slices.len()
+        && slices.iter().all(|&z| {
+            let parts = store.slice_parts(z).unwrap_or(&[]);
+            let seg_windows: usize = store
+                .run()
+                .segments
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| s.slice == z)
+                .map(|(i, _)| store.segment(i).entries.len())
+                .sum();
+            parts.len() == seg_windows
+        });
+    if dense {
+        return Ok(CompactReport {
+            gen: store.run().max_gen().unwrap_or(0),
+            already_compact: true,
+            slices: slices.len(),
+            segments_before,
+            segments_after: segments_before,
+            bytes_before,
+            bytes_after: bytes_before,
+            records,
+            retired_files: 0,
+            run: key,
+        });
+    }
+
+    let new_gen = store.run().max_gen().map(|g| g + 1).unwrap_or(0);
+    let old_files: Vec<String> = store.run().segments.iter().map(|s| s.file.clone()).collect();
+
+    // Rewrite the resolved view, one dense segment per slice. Files are
+    // complete (tmp + rename inside `finish`) before anything points at
+    // them.
+    let mut new_metas: Vec<SegmentMeta> = Vec::with_capacity(slices.len());
+    for &z in &slices {
+        let parts = store.slice_parts(z).expect("slice listed but unresolved");
+        let mut w = SegmentWriter::create(dir, z, &key.method, key.types, &key.run_id, new_gen)?;
+        for part in parts {
+            let records = store.segment(part.seg).read_window(part.win)?;
+            w.append_records(part.entry.y0, part.entry.lines, &records)?;
+        }
+        new_metas.push(w.finish()?);
+    }
+    let bytes_after = new_metas.iter().map(|m| m.bytes).sum();
+    let segments_after = new_metas.len();
+
+    // Publish: reload the catalog (the open above holds a snapshot),
+    // swap the run's segment list, save atomically. This is the single
+    // point where readers move to the new generation.
+    drop(store);
+    let mut catalog = Catalog::load(dir)?;
+    catalog.replace_run_segments(&key, new_metas)?;
+    catalog.save(dir)?;
+
+    // Retire superseded files — garbage now, deletion best-effort (a
+    // crash here just leaves unreferenced files).
+    let mut retired = 0usize;
+    for f in &old_files {
+        if std::fs::remove_file(dir.join(f)).is_ok() {
+            retired += 1;
+        }
+    }
+    Ok(CompactReport {
+        run: key,
+        gen: new_gen,
+        already_compact: false,
+        slices: slices.len(),
+        segments_before,
+        segments_after,
+        bytes_before,
+        bytes_after,
+        records,
+        retired_files: retired,
+    })
+}

@@ -5,22 +5,30 @@
 //! *servable*. The write path streams each slice's fit outcomes into a
 //! per-slice **segment file** of fixed-width records in window order,
 //! with a footer index (window → byte range) so any point or region is
-//! reachable with one positioned read; a **checksummed manifest**
-//! (JSON, FNV-64 self-checksum) makes the store self-describing, so a
-//! cold process reopens it with no data rescan — the same
-//! partition-local independence the Random Sample Partition data model
-//! argues for (Salloum et al., arXiv 1712.04146). The read path
-//! ([`QueryEngine`]) serves point lookups, rectangular region scans and
-//! analytical queries (density / CDF / quantile via [`crate::stats`])
-//! through a sharded LRU block cache, fanned out as executor stages on
-//! the shared [`crate::runtime::hostpool`] budget.
+//! reachable with one positioned read. Segments are organized by a
+//! **generational run [`catalog`]** (`CATALOG.json`, checksummed,
+//! swapped atomically): every run `(method, types, run_id)` owns its
+//! own immutable segment files, reruns append new *generations* instead
+//! of clobbering, and a cold process reopens any run with no data
+//! rescan — the partition-local independence the Random Sample
+//! Partition data model argues for (Salloum et al., arXiv 1712.04146).
+//! [`compact`] rewrites a run's resolved view into dense, window-sorted
+//! segments and retires superseded generations, query results
+//! bit-identical. The read path ([`QueryEngine`]) serves point lookups,
+//! rectangular region scans and analytical queries (density / CDF /
+//! quantile via [`crate::stats`]) through a sharded LRU block cache,
+//! fanned out as executor stages on the shared
+//! [`crate::runtime::hostpool`] budget; [`crate::serve`] puts an
+//! admission-controlled front door on top.
 //!
 //! On-disk layout of a store directory:
 //!
 //! ```text
 //! store/
-//!   MANIFEST.json                 checksummed manifest (see StoreManifest)
-//!   slice201_baseline_4.seg       one segment per persisted slice run
+//!   CATALOG.json                            checksummed run catalog
+//!   slice2_baseline_4_default_g0.seg        slice 2, run default/baseline/4, generation 0
+//!   slice2_baseline_4_default_g1.seg        ... a rerun appended generation 1
+//!   slice2_grouping_4_exp1_g0.seg           a different run: separate files
 //!   ...
 //! ```
 //!
@@ -38,8 +46,10 @@
 //! The trailer checksum is FNV-64 over every byte before the checksum
 //! field, so corruption anywhere in the payload or index is detectable
 //! ([`PdfStore::verify`]); truncation is caught at open time against the
-//! manifest's byte count.
+//! catalog's byte count, and the catalog carries its own self-checksum.
 
+pub mod catalog;
+pub mod compact;
 pub mod query;
 pub mod segment;
 
@@ -48,17 +58,19 @@ use std::path::{Path, PathBuf};
 
 use crate::cube::{CubeDims, PointId};
 use crate::stats::{DistType, FitResult};
-use crate::util::json::Json;
 use crate::{PdfflowError, Result};
 
+pub use catalog::{
+    validate_run_id, Catalog, ResolvedWindow, RunEntry, RunKey, CATALOG_NAME, DEFAULT_RUN_ID,
+    LEGACY_MANIFEST_NAME,
+};
+pub use compact::{compact_run, CompactReport};
 pub use query::{CacheMeters, QueryEngine, QueryOptions, RegionQuery, RegionSummary};
 pub use segment::{SegmentMeta, SegmentReader, SegmentWriter, WindowEntry};
 
 /// Fixed record width: point id u64 + type u32 + error f32 + 3 param f32.
 pub const REC_LEN: usize = 28;
-/// Manifest file name inside a store directory.
-pub const MANIFEST_NAME: &str = "MANIFEST.json";
-/// Manifest/segment format version.
+/// Segment format version.
 pub const FORMAT_VERSION: u32 = 1;
 
 /// Streaming FNV-1a 64-bit checksum (offline crc substitute; the store
@@ -155,153 +167,43 @@ impl PdfRecord {
     }
 }
 
-/// Self-describing store metadata: cube geometry plus one entry per
-/// segment. Serialized as `{"body": {...}, "checksum": "<fnv64 hex>"}`
-/// where the checksum covers the serialized body byte-for-byte.
-#[derive(Clone, Debug)]
-pub struct StoreManifest {
-    pub dims: CubeDims,
-    pub n_obs: usize,
-    pub segments: Vec<SegmentMeta>,
+/// Run selection when opening a store for reads.
+#[derive(Clone, Copy, Debug)]
+pub enum RunSelector<'a> {
+    /// The most recently updated run.
+    Latest,
+    /// The most recently updated run with this `run_id`.
+    Id(&'a str),
+    /// An exact `(method, types, run_id)` run.
+    Key(&'a RunKey),
 }
 
-impl StoreManifest {
-    fn body_json(&self) -> Json {
-        let segs: Vec<Json> = self
-            .segments
-            .iter()
-            .map(|s| {
-                Json::obj(vec![
-                    ("file", Json::Str(s.file.clone())),
-                    ("slice", Json::Num(s.slice as f64)),
-                    ("method", Json::Str(s.method.clone())),
-                    ("types", Json::Num(s.types as f64)),
-                    ("windows", Json::Num(s.n_windows as f64)),
-                    ("records", Json::Num(s.n_records as f64)),
-                    ("bytes", Json::Num(s.bytes as f64)),
-                    ("checksum", Json::Str(format!("{:016x}", s.checksum))),
-                ])
-            })
-            .collect();
-        Json::obj(vec![
-            ("version", Json::Num(FORMAT_VERSION as f64)),
-            (
-                "dims",
-                Json::Arr(vec![
-                    Json::Num(self.dims.nx as f64),
-                    Json::Num(self.dims.ny as f64),
-                    Json::Num(self.dims.nz as f64),
-                ]),
-            ),
-            ("n_obs", Json::Num(self.n_obs as f64)),
-            ("segments", Json::Arr(segs)),
-        ])
+impl<'a> RunSelector<'a> {
+    /// CLI form: `None`/`"latest"` → latest, anything else → by id.
+    pub fn from_opt(opt: Option<&'a str>) -> RunSelector<'a> {
+        match opt {
+            None | Some("latest") => RunSelector::Latest,
+            Some(id) => RunSelector::Id(id),
+        }
     }
-
-    /// Write atomically (temp file + rename) with a self-checksum.
-    pub fn save(&self, dir: &Path) -> Result<()> {
-        let body = self.body_json();
-        let body_text = body.to_string();
-        let sum = fnv64(body_text.as_bytes());
-        let doc = Json::obj(vec![
-            ("body", body),
-            ("checksum", Json::Str(format!("{sum:016x}"))),
-        ]);
-        let tmp = dir.join(format!("{MANIFEST_NAME}.tmp"));
-        std::fs::write(&tmp, doc.to_string())?;
-        std::fs::rename(&tmp, dir.join(MANIFEST_NAME))?;
-        Ok(())
-    }
-
-    /// Load and verify the self-checksum; any mismatch is a hard error —
-    /// a store with a broken manifest must not serve queries.
-    pub fn load(dir: &Path) -> Result<StoreManifest> {
-        let path = dir.join(MANIFEST_NAME);
-        let text = std::fs::read_to_string(&path)?;
-        let doc = Json::parse(&text)
-            .map_err(|e| PdfflowError::Format(format!("{}: {e}", path.display())))?;
-        let bad = |what: &str| PdfflowError::Format(format!("{}: {what}", path.display()));
-        let body = doc.get("body").ok_or_else(|| bad("missing body"))?;
-        let want = doc
-            .get("checksum")
-            .and_then(|c| c.as_str())
-            .and_then(parse_hex64)
-            .ok_or_else(|| bad("missing checksum"))?;
-        let got = fnv64(body.to_string().as_bytes());
-        if got != want {
-            return Err(bad(&format!(
-                "manifest checksum mismatch (stored {want:016x}, computed {got:016x})"
-            )));
-        }
-        let version = body
-            .get("version")
-            .and_then(|v| v.as_usize())
-            .ok_or_else(|| bad("missing version"))?;
-        if version != FORMAT_VERSION as usize {
-            return Err(bad(&format!("unsupported store version {version}")));
-        }
-        let dims_arr = body
-            .get("dims")
-            .and_then(|d| d.as_arr())
-            .ok_or_else(|| bad("missing dims"))?;
-        if dims_arr.len() != 3 {
-            return Err(bad("dims must have 3 entries"));
-        }
-        let dim = |i: usize| dims_arr[i].as_usize().ok_or_else(|| bad("bad dims entry"));
-        let dims = CubeDims::new(dim(0)?, dim(1)?, dim(2)?);
-        let n_obs = body
-            .get("n_obs")
-            .and_then(|v| v.as_usize())
-            .ok_or_else(|| bad("missing n_obs"))?;
-        let mut segments = Vec::new();
-        for s in body
-            .get("segments")
-            .and_then(|v| v.as_arr())
-            .ok_or_else(|| bad("missing segments"))?
-        {
-            let field = |k: &str| s.get(k).and_then(|v| v.as_usize());
-            segments.push(SegmentMeta {
-                file: s
-                    .get("file")
-                    .and_then(|v| v.as_str())
-                    .ok_or_else(|| bad("segment missing file"))?
-                    .to_string(),
-                slice: field("slice").ok_or_else(|| bad("segment missing slice"))?,
-                method: s
-                    .get("method")
-                    .and_then(|v| v.as_str())
-                    .ok_or_else(|| bad("segment missing method"))?
-                    .to_string(),
-                types: field("types").ok_or_else(|| bad("segment missing types"))?,
-                n_windows: field("windows").ok_or_else(|| bad("segment missing windows"))?,
-                n_records: field("records").ok_or_else(|| bad("segment missing records"))?
-                    as u64,
-                bytes: field("bytes").ok_or_else(|| bad("segment missing bytes"))? as u64,
-                checksum: s
-                    .get("checksum")
-                    .and_then(|v| v.as_str())
-                    .and_then(parse_hex64)
-                    .ok_or_else(|| bad("segment missing checksum"))?,
-            });
-        }
-        Ok(StoreManifest {
-            dims,
-            n_obs,
-            segments,
-        })
-    }
-}
-
-fn parse_hex64(s: &str) -> Option<u64> {
-    u64::from_str_radix(s, 16).ok()
 }
 
 /// Write side of a store: the pipeline's persist sink. Segments are
-/// opened per slice run; the manifest is rewritten (atomically) after
-/// each finished segment, so the store on disk is always openable.
+/// opened per slice run; the catalog is rewritten (atomic swap) after
+/// each finished segment, so the store on disk is always openable and
+/// no file is ever referenced before it is complete.
+///
+/// `add_segment` re-reads the on-disk catalog before every swap, so a
+/// compaction (or another writer) that published between this writer's
+/// segments is preserved rather than overwritten with a stale snapshot
+/// — the catalog never ends up referencing files a racing compaction
+/// already unlinked. True simultaneous load-modify-save races still
+/// resolve last-swap-wins (crash-safe, possibly dropping the slower
+/// writer's entry), so one live `StoreWriter` per directory remains
+/// the supported mode.
 pub struct StoreWriter {
     dir: PathBuf,
-    manifest: StoreManifest,
+    catalog: Catalog,
 }
 
 impl StoreWriter {
@@ -310,114 +212,226 @@ impl StoreWriter {
     pub fn create(dir: impl AsRef<Path>, dims: CubeDims, n_obs: usize) -> Result<StoreWriter> {
         let dir = dir.as_ref().to_path_buf();
         std::fs::create_dir_all(&dir)?;
-        let manifest = if dir.join(MANIFEST_NAME).exists() {
-            let m = StoreManifest::load(&dir)?;
-            if m.dims != dims || m.n_obs != n_obs {
+        if !Catalog::exists(&dir) && dir.join(catalog::LEGACY_MANIFEST_NAME).exists() {
+            // Starting a fresh catalog next to manifest-era segments
+            // would silently orphan them; surface the format change.
+            return Err(PdfflowError::Format(format!(
+                "{} holds a legacy manifest-format store; persist into a fresh directory",
+                dir.display()
+            )));
+        }
+        let catalog = if Catalog::exists(&dir) {
+            let c = Catalog::load(&dir)?;
+            if c.dims != dims || c.n_obs != n_obs {
                 return Err(PdfflowError::InvalidArg(format!(
                     "store at {} holds a {}x{}x{} cube with {} observations; \
                      refusing to mix in {}x{}x{} with {}",
                     dir.display(),
-                    m.dims.nx,
-                    m.dims.ny,
-                    m.dims.nz,
-                    m.n_obs,
+                    c.dims.nx,
+                    c.dims.ny,
+                    c.dims.nz,
+                    c.n_obs,
                     dims.nx,
                     dims.ny,
                     dims.nz,
                     n_obs
                 )));
             }
-            m
+            c
         } else {
-            let m = StoreManifest {
-                dims,
-                n_obs,
-                segments: Vec::new(),
-            };
-            m.save(&dir)?;
-            m
+            let c = Catalog::new(dims, n_obs);
+            c.save(&dir)?;
+            c
         };
-        Ok(StoreWriter { dir, manifest })
+        Ok(StoreWriter { dir, catalog })
     }
 
     pub fn dir(&self) -> &Path {
         &self.dir
     }
 
-    pub fn manifest(&self) -> &StoreManifest {
-        &self.manifest
+    pub fn catalog(&self) -> &Catalog {
+        &self.catalog
     }
 
-    /// Open a segment writer for one slice run.
-    pub fn open_segment(&self, slice: usize, method: &str, types: usize) -> Result<SegmentWriter> {
-        SegmentWriter::create(&self.dir, slice, method, types)
+    /// Open a segment writer for one slice of a run. The generation is
+    /// assigned here: one past the run's newest existing generation of
+    /// this slice, so a rerun appends instead of overwriting.
+    pub fn open_segment(&self, slice: usize, key: &RunKey) -> Result<SegmentWriter> {
+        validate_run_id(&key.run_id)?;
+        let gen = self
+            .catalog
+            .run(key)
+            .map(|r| r.next_gen_for_slice(slice))
+            .unwrap_or(0);
+        SegmentWriter::create(&self.dir, slice, &key.method, key.types, &key.run_id, gen)
     }
 
-    /// Register a finished segment and persist the manifest. A segment
-    /// with the same file name (same slice/method/types rerun) replaces
-    /// its previous entry. Segments stay in completion order, which is
-    /// what gives slice resolution its last-writer-wins semantics.
+    /// Register a finished segment under its run and persist the
+    /// catalog (atomic swap — the publish point of the write). The
+    /// on-disk catalog is re-read first so a compaction that published
+    /// since this writer attached is carried forward, not clobbered.
     pub fn add_segment(&mut self, meta: SegmentMeta) -> Result<()> {
-        self.manifest.segments.retain(|s| s.file != meta.file);
-        self.manifest.segments.push(meta);
-        self.manifest.save(&self.dir)
+        if let Ok(fresh) = Catalog::load(&self.dir) {
+            if fresh.dims == self.catalog.dims && fresh.n_obs == self.catalog.n_obs {
+                self.catalog = fresh;
+            }
+        }
+        self.catalog.add_segment(meta);
+        self.catalog.save(&self.dir)
     }
 }
 
-/// Read side: manifest + one open reader per segment. Opening validates
-/// lengths, magics and the footer index — no payload rescan.
+/// One resolved, readable window of an open store: segment index (into
+/// the open run's reader list) + window index + its footer entry.
+pub type SlicePart = ResolvedWindow;
+
+/// Read side: one **run view** over the catalog. Opening selects a run
+/// (latest or named), opens its segment readers — validating lengths,
+/// magics and footer indexes, no payload rescan — and resolves every
+/// slice to its newest-generation window set.
 pub struct PdfStore {
     pub dir: PathBuf,
-    pub manifest: StoreManifest,
+    pub catalog: Catalog,
+    run_idx: usize,
     segments: Vec<SegmentReader>,
-    /// slice → index into `segments`; a slice persisted twice (different
-    /// method/types) resolves to the most recently completed segment
-    /// (manifest entries are kept in completion order).
-    by_slice: HashMap<usize, usize>,
+    /// slice → resolved windows (sorted by y0, non-overlapping): the
+    /// newest generation wins window-by-window, so a partially rerun
+    /// slice reads new lines from the new generation and untouched
+    /// lines from the old one.
+    slices: HashMap<usize, Vec<SlicePart>>,
 }
 
 impl PdfStore {
+    /// Open the most recently updated run.
     pub fn open(dir: impl AsRef<Path>) -> Result<PdfStore> {
+        Self::open_run(dir, RunSelector::Latest)
+    }
+
+    /// Open a specific run of the store.
+    pub fn open_run(dir: impl AsRef<Path>, sel: RunSelector) -> Result<PdfStore> {
         let dir = dir.as_ref().to_path_buf();
-        let manifest = StoreManifest::load(&dir)?;
-        let mut segments = Vec::with_capacity(manifest.segments.len());
-        let mut by_slice = HashMap::new();
-        for (i, meta) in manifest.segments.iter().enumerate() {
-            let reader = SegmentReader::open(&dir, meta)?;
-            by_slice.insert(meta.slice, i);
-            segments.push(reader);
+        let catalog = Catalog::load(&dir)?;
+        let entry = match sel {
+            RunSelector::Latest => catalog.select(None)?,
+            RunSelector::Id(id) => catalog.select(Some(id))?,
+            RunSelector::Key(key) => catalog.run(key).ok_or_else(|| {
+                PdfflowError::InvalidArg(format!("no run {} in store", key.label()))
+            })?,
+        };
+        let run_idx = catalog
+            .runs
+            .iter()
+            .position(|r| r.key == entry.key)
+            .expect("selected run is in the catalog");
+        let run = &catalog.runs[run_idx];
+        let mut segments = Vec::with_capacity(run.segments.len());
+        for meta in &run.segments {
+            segments.push(SegmentReader::open(&dir, meta)?);
+        }
+        let mut slices = HashMap::new();
+        for z in run.slices() {
+            let resolved = run.resolve_slice(z, |seg| segments[seg].entries.clone())?;
+            slices.insert(z, resolved);
         }
         Ok(PdfStore {
             dir,
-            manifest,
+            catalog,
+            run_idx,
             segments,
-            by_slice,
+            slices,
         })
     }
 
+    /// The open run's catalog entry.
+    pub fn run(&self) -> &RunEntry {
+        &self.catalog.runs[self.run_idx]
+    }
+
+    /// The open run's identity.
+    pub fn run_key(&self) -> &RunKey {
+        &self.run().key
+    }
+
+    pub fn dims(&self) -> CubeDims {
+        self.catalog.dims
+    }
+
+    pub fn n_obs(&self) -> usize {
+        self.catalog.n_obs
+    }
+
+    /// Segment files of the open run (all generations).
     pub fn n_segments(&self) -> usize {
         self.segments.len()
     }
 
+    /// Records reachable through the resolved view (shadowed
+    /// generations excluded).
     pub fn n_records(&self) -> u64 {
-        self.manifest.segments.iter().map(|s| s.n_records).sum()
+        self.slices
+            .values()
+            .flat_map(|parts| parts.iter().map(|p| p.entry.n_records))
+            .sum()
     }
 
+    /// On-disk bytes of the open run's segments (all generations).
     pub fn total_bytes(&self) -> u64 {
-        self.manifest.segments.iter().map(|s| s.bytes).sum()
+        self.run().segments.iter().map(|s| s.bytes).sum()
     }
 
     pub fn segment(&self, idx: usize) -> &SegmentReader {
         &self.segments[idx]
     }
 
-    /// Segment serving slice `z`, if persisted.
-    pub fn segment_for_slice(&self, z: usize) -> Option<(usize, &SegmentReader)> {
-        self.by_slice.get(&z).map(|&i| (i, &self.segments[i]))
+    /// Slices the open run serves, ascending.
+    pub fn slices(&self) -> Vec<usize> {
+        let mut out: Vec<usize> = self.slices.keys().copied().collect();
+        out.sort_unstable();
+        out
     }
 
-    /// Full-payload checksum verification of every segment (reads all
-    /// bytes; open() itself stays index-only).
+    /// Resolved windows of slice `z`, if persisted.
+    pub fn slice_parts(&self, z: usize) -> Option<&[SlicePart]> {
+        self.slices.get(&z).map(|v| v.as_slice())
+    }
+
+    /// The resolved window covering line `y` of slice `z`, if any.
+    pub fn find_part(&self, z: usize, y: usize) -> Option<SlicePart> {
+        let parts = self.slices.get(&z)?;
+        let y = y as u64;
+        // Parts are sorted by y0 and non-overlapping.
+        let idx = parts.partition_point(|p| p.entry.y0 <= y);
+        if idx == 0 {
+            return None;
+        }
+        let p = parts[idx - 1];
+        (y < p.entry.y0 + p.entry.lines).then_some(p)
+    }
+
+    /// True when the resolved view covers every line in `[y0, y1]` of
+    /// slice `z` with no gap (store-backed training requires this).
+    pub fn covers_lines(&self, z: usize, y0: usize, y1: usize) -> bool {
+        let Some(parts) = self.slices.get(&z) else {
+            return false;
+        };
+        let mut next = y0 as u64;
+        for p in parts.iter() {
+            if p.entry.y0 > next {
+                break; // gap
+            }
+            if p.entry.y0 + p.entry.lines > next {
+                next = p.entry.y0 + p.entry.lines;
+            }
+            if next > y1 as u64 {
+                return true;
+            }
+        }
+        next > y1 as u64
+    }
+
+    /// Full-payload checksum verification of every open segment (reads
+    /// all bytes; open() itself stays index-only).
     pub fn verify(&self) -> Result<()> {
         for seg in &self.segments {
             seg.verify()?;
@@ -471,36 +485,19 @@ mod tests {
     }
 
     #[test]
-    fn manifest_roundtrip_and_tamper_detection() {
-        let dir = std::env::temp_dir().join(format!("pdfflow-manifest-{}", std::process::id()));
+    fn store_writer_assigns_generations_and_refuses_geometry_mix() {
+        let dir = std::env::temp_dir().join(format!("pdfflow-sw-{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&dir);
-        std::fs::create_dir_all(&dir).unwrap();
-        let m = StoreManifest {
-            dims: CubeDims::new(16, 12, 8),
-            n_obs: 100,
-            segments: vec![SegmentMeta {
-                file: "slice1_baseline_4.seg".into(),
-                slice: 1,
-                method: "baseline".into(),
-                types: 4,
-                n_windows: 3,
-                n_records: 192,
-                bytes: 5412,
-                checksum: 0xdead_beef_cafe_f00d,
-            }],
-        };
-        m.save(&dir).unwrap();
-        let back = StoreManifest::load(&dir).unwrap();
-        assert_eq!(back.dims, m.dims);
-        assert_eq!(back.n_obs, 100);
-        assert_eq!(back.segments, m.segments);
-        // Tamper with one digit inside the body: checksum must catch it.
-        let path = dir.join(MANIFEST_NAME);
-        let text = std::fs::read_to_string(&path).unwrap();
-        let tampered = text.replacen("\"slice\":1", "\"slice\":2", 1);
-        assert_ne!(text, tampered);
-        std::fs::write(&path, tampered).unwrap();
-        assert!(StoreManifest::load(&dir).is_err());
+        let dims = CubeDims::new(4, 4, 2);
+        let w = StoreWriter::create(&dir, dims, 50).unwrap();
+        let key = RunKey::new("baseline", 4, "default");
+        // Empty store: first segment of any slice is generation 0.
+        let sw = w.open_segment(1, &key).unwrap();
+        drop(sw); // abandoned tmp file; never registered
+        assert!(StoreWriter::create(&dir, CubeDims::new(5, 4, 2), 50).is_err());
+        assert!(StoreWriter::create(&dir, dims, 51).is_err());
+        // Invalid run ids are rejected before any file is created.
+        assert!(w.open_segment(1, &RunKey::new("baseline", 4, "a/b")).is_err());
         std::fs::remove_dir_all(&dir).unwrap();
     }
 }

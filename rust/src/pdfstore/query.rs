@@ -15,7 +15,7 @@ use std::sync::Arc;
 
 use crate::cube::{CubeDims, PointId};
 use crate::executor::Executor;
-use crate::pdfstore::{PdfRecord, PdfStore, REC_LEN};
+use crate::pdfstore::{PdfRecord, PdfStore, RunSelector, SlicePart, REC_LEN};
 use crate::runtime::hostpool;
 use crate::stats::{self, density, PENALTY_ERROR};
 use crate::util::lru::ShardedStampLru;
@@ -174,8 +174,18 @@ impl QueryEngine {
         }
     }
 
+    /// Open the store's most recently updated run.
     pub fn open(dir: impl AsRef<Path>, opts: QueryOptions) -> Result<QueryEngine> {
         Ok(QueryEngine::new(PdfStore::open(dir)?, opts))
+    }
+
+    /// Open a named run of the store (`pdfflow query --run`).
+    pub fn open_run(
+        dir: impl AsRef<Path>,
+        sel: RunSelector,
+        opts: QueryOptions,
+    ) -> Result<QueryEngine> {
+        Ok(QueryEngine::new(PdfStore::open_run(dir, sel)?, opts))
     }
 
     pub fn store(&self) -> &PdfStore {
@@ -183,7 +193,7 @@ impl QueryEngine {
     }
 
     pub fn dims(&self) -> CubeDims {
-        self.store.manifest.dims
+        self.store.dims()
     }
 
     pub fn meters(&self) -> CacheMeters {
@@ -214,16 +224,15 @@ impl QueryEngine {
                 dims.nx, dims.ny, dims.nz
             )));
         }
-        let (seg_idx, seg) = self.store.segment_for_slice(z).ok_or_else(|| {
-            PdfflowError::InvalidArg(format!("slice {z} is not persisted in this store"))
+        let part = self.store.find_part(z, y).ok_or_else(|| {
+            PdfflowError::InvalidArg(format!(
+                "slice {z} line {y} is not persisted in run {}",
+                self.store.run_key().label()
+            ))
         })?;
-        let win_idx = seg.find_window(y).ok_or_else(|| {
-            PdfflowError::Format(format!("slice {z} segment has no window covering line {y}"))
-        })?;
-        let entry = seg.entries[win_idx];
-        let block = self.block(seg_idx, win_idx)?;
+        let block = self.block(part.seg, part.win)?;
         // Window order == point-id order: the offset is pure arithmetic.
-        let idx = (y - entry.y0 as usize) * dims.nx + x;
+        let idx = (y - part.entry.y0 as usize) * dims.nx + x;
         let rec = block.get(idx).copied().ok_or_else(|| {
             PdfflowError::Format(format!(
                 "window block of slice {z} line {y} holds {} records, wanted index {idx}",
@@ -264,32 +273,34 @@ impl QueryEngine {
         Ok(out)
     }
 
-    /// Windows of slice `z`'s segment overlapping line range [y0, y1].
-    fn region_windows(&self, q: &RegionQuery) -> Result<(usize, Vec<usize>)> {
-        let (seg_idx, seg) = self.store.segment_for_slice(q.z).ok_or_else(|| {
-            PdfflowError::InvalidArg(format!("slice {} is not persisted in this store", q.z))
+    /// Resolved windows of slice `z` overlapping line range [y0, y1] —
+    /// in y0 order, which is what keeps parallel merges deterministic.
+    fn region_parts(&self, q: &RegionQuery) -> Result<Vec<SlicePart>> {
+        let parts = self.store.slice_parts(q.z).ok_or_else(|| {
+            PdfflowError::InvalidArg(format!(
+                "slice {} is not persisted in run {}",
+                q.z,
+                self.store.run_key().label()
+            ))
         })?;
-        let wins: Vec<usize> = seg
-            .entries
+        Ok(parts
             .iter()
-            .enumerate()
-            .filter(|(_, e)| {
-                let (lo, hi) = (e.y0 as usize, (e.y0 + e.lines) as usize);
+            .filter(|p| {
+                let (lo, hi) = (p.entry.y0 as usize, (p.entry.y0 + p.entry.lines) as usize);
                 hi > q.y0 && lo <= q.y1
             })
-            .map(|(i, _)| i)
-            .collect();
-        Ok((seg_idx, wins))
+            .copied()
+            .collect())
     }
 
     /// Rectangular region scan: all records with x0≤x≤x1, y0≤y≤y1 on
     /// slice z, in point-id order. Window blocks are fetched in parallel.
     pub fn region(&self, q: &RegionQuery) -> Result<Vec<PdfRecord>> {
         let dims = self.dims();
-        let (seg_idx, wins) = self.region_windows(q)?;
+        let wins = self.region_parts(q)?;
         let q = *q;
-        let parts = self.exec.try_run(wins, |win_idx| -> Result<Vec<PdfRecord>> {
-            let block = self.block(seg_idx, win_idx)?;
+        let parts = self.exec.try_run(wins, |part| -> Result<Vec<PdfRecord>> {
+            let block = self.block(part.seg, part.win)?;
             Ok(block
                 .iter()
                 .filter(|rec| {
@@ -311,7 +322,7 @@ impl QueryEngine {
     /// order, so the result is identical at any thread count.
     pub fn region_summary(&self, q: &RegionQuery) -> Result<RegionSummary> {
         let dims = self.dims();
-        let (seg_idx, wins) = self.region_windows(q)?;
+        let wins = self.region_parts(q)?;
         let q = *q;
         struct Partial {
             n: usize,
@@ -320,8 +331,8 @@ impl QueryEngine {
             types: [u64; 10],
             hist: [u64; ERROR_HIST_BINS],
         }
-        let parts = self.exec.try_run(wins, |win_idx| -> Result<Partial> {
-            let block = self.block(seg_idx, win_idx)?;
+        let parts = self.exec.try_run(wins, |part| -> Result<Partial> {
+            let block = self.block(part.seg, part.win)?;
             let mut p = Partial {
                 n: 0,
                 err_sum: 0.0,
@@ -386,10 +397,10 @@ impl QueryEngine {
     /// merged in window order (thread-count invariant).
     pub fn region_quantile_mean(&self, q: &RegionQuery, p: f64) -> Result<f64> {
         let dims = self.dims();
-        let (seg_idx, wins) = self.region_windows(q)?;
+        let wins = self.region_parts(q)?;
         let q = *q;
-        let parts = self.exec.try_run(wins, |win_idx| -> Result<(usize, f64)> {
-            let block = self.block(seg_idx, win_idx)?;
+        let parts = self.exec.try_run(wins, |part| -> Result<(usize, f64)> {
+            let block = self.block(part.seg, part.win)?;
             let mut n = 0usize;
             let mut sum = 0.0f64;
             for rec in block.iter() {

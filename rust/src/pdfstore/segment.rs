@@ -59,7 +59,10 @@ impl WindowEntry {
     }
 }
 
-/// Manifest entry describing one finished segment.
+/// Catalog entry describing one finished segment. Every segment is
+/// stamped with its full run identity `(method, types, run)` plus the
+/// generation it was written in — the coordinates the generational
+/// catalog resolves reads by.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct SegmentMeta {
     /// File name inside the store directory.
@@ -68,6 +71,11 @@ pub struct SegmentMeta {
     pub method: String,
     /// Candidate-type count of the producing run.
     pub types: usize,
+    /// Run id of the producing run (see [`crate::pdfstore::RunKey`]).
+    pub run: String,
+    /// Generation within the run: reruns of a slice append `gen + 1`
+    /// instead of overwriting, compaction publishes a fresh generation.
+    pub gen: usize,
     pub n_windows: usize,
     pub n_records: u64,
     /// Total file length in bytes (truncation guard).
@@ -88,6 +96,8 @@ pub struct SegmentWriter {
     slice: usize,
     method: String,
     types: usize,
+    run: String,
+    gen: usize,
     entries: Vec<WindowEntry>,
     hash: Fnv64,
     /// Bytes written so far (everything the checksum covers).
@@ -96,8 +106,18 @@ pub struct SegmentWriter {
 }
 
 impl SegmentWriter {
-    pub fn create(dir: &Path, slice: usize, method: &str, types: usize) -> Result<SegmentWriter> {
-        let file_name = format!("slice{slice}_{method}_{types}.seg");
+    /// Open a segment for `(slice, method, types, run, gen)`. The file
+    /// name carries all five coordinates, so two runs — or two
+    /// generations of one run — can never collide on disk.
+    pub fn create(
+        dir: &Path,
+        slice: usize,
+        method: &str,
+        types: usize,
+        run: &str,
+        gen: usize,
+    ) -> Result<SegmentWriter> {
+        let file_name = format!("slice{slice}_{method}_{types}_{run}_g{gen}.seg");
         let final_path = dir.join(&file_name);
         let tmp_path = dir.join(format!("{file_name}.tmp"));
         let mut w = SegmentWriter {
@@ -108,6 +128,8 @@ impl SegmentWriter {
             slice,
             method: method.to_string(),
             types,
+            run: run.to_string(),
+            gen,
             entries: Vec::new(),
             hash: Fnv64::new(),
             offset: 0,
@@ -146,14 +168,7 @@ impl SegmentWriter {
                 outcomes.len()
             )));
         }
-        if let Some(last) = self.entries.last() {
-            if (window.y0 as u64) < last.y0 + last.lines {
-                return Err(PdfflowError::InvalidArg(format!(
-                    "windows must be appended in line order: y0 {} after y0 {} (+{} lines)",
-                    window.y0, last.y0, last.lines
-                )));
-            }
-        }
+        self.check_line_order(window.y0 as u64)?;
         let start = self.offset;
         let mut buf = [0u8; REC_LEN];
         for (id, o) in ids.iter().zip(outcomes) {
@@ -174,6 +189,40 @@ impl SegmentWriter {
         });
         self.n_records += ids.len() as u64;
         Ok(self.offset - start)
+    }
+
+    /// Append one window of already-decoded records (compaction's
+    /// rewrite path). Bit-exact: `PdfRecord` encode∘decode is the
+    /// identity on the 28-byte wire form, so a compacted segment holds
+    /// byte-identical record payloads.
+    pub fn append_records(&mut self, y0: u64, lines: u64, records: &[PdfRecord]) -> Result<u64> {
+        self.check_line_order(y0)?;
+        let start = self.offset;
+        let mut buf = [0u8; REC_LEN];
+        for rec in records {
+            rec.encode(&mut buf);
+            self.write(&buf)?;
+        }
+        self.entries.push(WindowEntry {
+            y0,
+            lines,
+            offset: start,
+            n_records: records.len() as u64,
+        });
+        self.n_records += records.len() as u64;
+        Ok(self.offset - start)
+    }
+
+    fn check_line_order(&self, y0: u64) -> Result<()> {
+        if let Some(last) = self.entries.last() {
+            if y0 < last.y0 + last.lines {
+                return Err(PdfflowError::InvalidArg(format!(
+                    "windows must be appended in line order: y0 {} after y0 {} (+{} lines)",
+                    y0, last.y0, last.lines
+                )));
+            }
+        }
+        Ok(())
     }
 
     /// Write the footer index + checksummed trailer and close the file.
@@ -199,6 +248,8 @@ impl SegmentWriter {
             slice: self.slice,
             method: self.method,
             types: self.types,
+            run: self.run,
+            gen: self.gen,
             n_windows: self.entries.len(),
             n_records: self.n_records,
             bytes: self.offset + 12,
@@ -375,7 +426,7 @@ mod tests {
     #[test]
     fn write_then_read_windows_back() {
         let dir = tmp("rw");
-        let mut w = SegmentWriter::create(&dir, 3, "baseline", 4).unwrap();
+        let mut w = SegmentWriter::create(&dir, 3, "baseline", 4, "default", 0).unwrap();
         let w0 = Window { z: 3, y0: 0, lines: 2 };
         let w1 = Window { z: 3, y0: 2, lines: 1 };
         let o0 = outcomes(8, 0);
@@ -385,6 +436,8 @@ mod tests {
         let meta = w.finish().unwrap();
         assert_eq!(meta.n_windows, 2);
         assert_eq!(meta.n_records, 12);
+        assert_eq!(meta.file, "slice3_baseline_4_default_g0.seg");
+        assert_eq!((meta.run.as_str(), meta.gen), ("default", 0));
         assert_eq!(
             meta.bytes,
             HEADER_LEN + 12 * REC_LEN as u64 + 2 * ENTRY_LEN + TRAILER_LEN
@@ -406,9 +459,35 @@ mod tests {
     }
 
     #[test]
+    fn append_records_is_bit_identical_to_append_window() {
+        // Compaction's rewrite path must reproduce the exact bytes the
+        // outcome path wrote.
+        let dir = tmp("recs");
+        let mut w = SegmentWriter::create(&dir, 5, "grouping", 4, "a", 0).unwrap();
+        let win = Window { z: 5, y0: 0, lines: 2 };
+        w.append_window(&win, &ids(10, 6), &outcomes(6, 3)).unwrap();
+        let meta = w.finish().unwrap();
+        let original = std::fs::read(dir.join(&meta.file)).unwrap();
+        let r = SegmentReader::open(&dir, &meta).unwrap();
+        let records = r.read_window(0).unwrap();
+
+        let mut w2 = SegmentWriter::create(&dir, 5, "grouping", 4, "a", 1).unwrap();
+        w2.append_records(0, 2, &records).unwrap();
+        let meta2 = w2.finish().unwrap();
+        let rewritten = std::fs::read(dir.join(&meta2.file)).unwrap();
+        assert_eq!(original, rewritten, "rewrite changed segment bytes");
+        assert_eq!(meta.checksum, meta2.checksum);
+        // Out-of-order record windows are rejected like outcome windows.
+        let mut w3 = SegmentWriter::create(&dir, 5, "grouping", 4, "a", 2).unwrap();
+        w3.append_records(4, 2, &records).unwrap();
+        assert!(w3.append_records(3, 1, &records).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
     fn rejects_out_of_order_windows_and_wrong_slice() {
         let dir = tmp("order");
-        let mut w = SegmentWriter::create(&dir, 1, "baseline", 4).unwrap();
+        let mut w = SegmentWriter::create(&dir, 1, "baseline", 4, "default", 0).unwrap();
         w.append_window(&Window { z: 1, y0: 2, lines: 2 }, &ids(0, 4), &outcomes(4, 0))
             .unwrap();
         assert!(w
@@ -423,7 +502,7 @@ mod tests {
     #[test]
     fn truncation_is_rejected_at_open() {
         let dir = tmp("trunc");
-        let mut w = SegmentWriter::create(&dir, 0, "baseline", 4).unwrap();
+        let mut w = SegmentWriter::create(&dir, 0, "baseline", 4, "default", 0).unwrap();
         w.append_window(&Window { z: 0, y0: 0, lines: 1 }, &ids(0, 6), &outcomes(6, 1))
             .unwrap();
         let meta = w.finish().unwrap();
@@ -438,7 +517,7 @@ mod tests {
     #[test]
     fn payload_corruption_is_caught_by_verify() {
         let dir = tmp("corrupt");
-        let mut w = SegmentWriter::create(&dir, 0, "baseline", 4).unwrap();
+        let mut w = SegmentWriter::create(&dir, 0, "baseline", 4, "default", 0).unwrap();
         w.append_window(&Window { z: 0, y0: 0, lines: 1 }, &ids(0, 6), &outcomes(6, 2))
             .unwrap();
         let meta = w.finish().unwrap();

@@ -84,8 +84,19 @@ pub fn on_pool_worker() -> bool {
     ON_POOL_WORKER.with(|c| c.get())
 }
 
-/// Aggregate pool observability counters.
+/// Per-worker slice of the pool counters: one bar of the busy-time
+/// histogram the verbose CLI prints (a skewed histogram means one
+/// worker is pinned on long tickets while the rest idle).
 #[derive(Clone, Copy, Debug, Default)]
+pub struct WorkerMetrics {
+    /// Tickets this worker executed.
+    pub tickets: u64,
+    /// Wall-clock seconds this worker spent inside tickets.
+    pub busy_s: f64,
+}
+
+/// Aggregate pool observability counters.
+#[derive(Clone, Debug, Default)]
 pub struct PoolMetrics {
     /// Total compute budget (workers + the helping caller slot).
     pub budget: usize,
@@ -101,6 +112,14 @@ pub struct PoolMetrics {
     pub busy_seconds: f64,
     /// Deepest ticket queue ever observed.
     pub peak_queue_depth: usize,
+    /// Batch items drained by a thread other than the scope's
+    /// submitter — work *stolen* from the caller by the help-first
+    /// scheduler's pool workers.
+    pub items_stolen: u64,
+    /// Batch items the submitting callers drained themselves.
+    pub items_helped: u64,
+    /// Per-worker busy-time histogram (one entry per persistent worker).
+    pub per_worker: Vec<WorkerMetrics>,
 }
 
 /// A type-erased pointer to a live [`ScopeCtx`] plus its monomorphized
@@ -124,6 +143,14 @@ struct TicketLedger {
 struct ScopeCtx<F> {
     f: *const F,
     n: usize,
+    /// The pool this scope draws from — alive for the whole scope (the
+    /// [`ScopeHandle`] borrows it), used only to attribute drained item
+    /// counts to the steal/help meters.
+    pool: *const HostPool,
+    /// Thread that submitted the scope: items it drains itself are
+    /// *helped*, items any other thread drains are *stolen* — accurate
+    /// even for scopes submitted from inside a pool ticket.
+    submitter: std::thread::ThreadId,
     cursor: AtomicUsize,
     cancelled: AtomicBool,
     tickets: Mutex<TicketLedger>,
@@ -144,6 +171,7 @@ impl<F: Fn(usize) + Sync> ScopeCtx<F> {
     fn drain(&self) {
         // Safety: see the module-level liveness invariant.
         let f = unsafe { &*self.f };
+        let mut ran = 0u64;
         loop {
             if self.cancelled.load(Ordering::Relaxed) {
                 break;
@@ -152,6 +180,7 @@ impl<F: Fn(usize) + Sync> ScopeCtx<F> {
             if i >= self.n {
                 break;
             }
+            ran += 1;
             let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i)));
             if let Err(p) = r {
                 // First panic wins; remaining items are cancelled and
@@ -162,6 +191,19 @@ impl<F: Fn(usize) + Sync> ScopeCtx<F> {
                     *slot = Some(p);
                 }
             }
+        }
+        if ran > 0 {
+            // Attribute drained items: drained by the submitting thread
+            // itself they are helped, drained by anyone else (a pool
+            // worker running this scope's ticket) they were stolen.
+            // Safety: the pool outlives the scope.
+            let pool = unsafe { &*self.pool };
+            let meter = if std::thread::current().id() == self.submitter {
+                &pool.items_helped
+            } else {
+                &pool.items_stolen
+            };
+            meter.fetch_add(ran, Ordering::Relaxed);
         }
     }
 
@@ -238,6 +280,13 @@ impl<F: Fn(usize) + Sync> Drop for ScopeHandle<'_, F> {
     }
 }
 
+/// One worker's always-on counters (the busy-time histogram source).
+#[derive(Default)]
+struct WorkerStat {
+    tickets: AtomicU64,
+    busy_nanos: AtomicU64,
+}
+
 /// The persistent work-stealing host pool (see module docs).
 pub struct HostPool {
     budget: usize,
@@ -247,9 +296,13 @@ pub struct HostPool {
     shutdown: AtomicBool,
     busy: AtomicUsize,
     peak_busy: AtomicUsize,
-    tickets_run: AtomicU64,
-    busy_nanos: AtomicU64,
     peak_queue: AtomicUsize,
+    items_stolen: AtomicU64,
+    items_helped: AtomicU64,
+    /// Per-worker ticket/busy counters; the aggregate `tickets_run` /
+    /// `busy_seconds` metrics are sums over these, so the histogram and
+    /// its total can never disagree.
+    worker_stats: Vec<WorkerStat>,
 }
 
 impl std::fmt::Debug for HostPool {
@@ -261,7 +314,7 @@ impl std::fmt::Debug for HostPool {
     }
 }
 
-fn worker_loop(pool: Arc<HostPool>) {
+fn worker_loop(pool: Arc<HostPool>, k: usize) {
     ON_POOL_WORKER.with(|c| c.set(true));
     loop {
         let ticket = {
@@ -282,9 +335,10 @@ fn worker_loop(pool: Arc<HostPool>) {
         // Safety: the owning scope is still joined on this ticket
         // (revocation removes only *queued* tickets), so ctx is alive.
         unsafe { (ticket.run)(ticket.ctx) };
-        pool.tickets_run.fetch_add(1, Ordering::Relaxed);
-        pool.busy_nanos
-            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        let nanos = t0.elapsed().as_nanos() as u64;
+        let stat = &pool.worker_stats[k];
+        stat.tickets.fetch_add(1, Ordering::Relaxed);
+        stat.busy_nanos.fetch_add(nanos, Ordering::Relaxed);
         pool.busy.fetch_sub(1, Ordering::Relaxed);
     }
 }
@@ -306,15 +360,16 @@ impl HostPool {
             shutdown: AtomicBool::new(false),
             busy: AtomicUsize::new(0),
             peak_busy: AtomicUsize::new(0),
-            tickets_run: AtomicU64::new(0),
-            busy_nanos: AtomicU64::new(0),
             peak_queue: AtomicUsize::new(0),
+            items_stolen: AtomicU64::new(0),
+            items_helped: AtomicU64::new(0),
+            worker_stats: (0..workers).map(|_| WorkerStat::default()).collect(),
         });
         for k in 0..workers {
             let p = Arc::clone(&pool);
             std::thread::Builder::new()
                 .name(format!("pdfflow-host-{k}"))
-                .spawn(move || worker_loop(p))
+                .spawn(move || worker_loop(p, k))
                 .expect("spawn host pool worker");
         }
         pool
@@ -353,14 +408,25 @@ impl HostPool {
     }
 
     pub fn metrics(&self) -> PoolMetrics {
+        let per_worker: Vec<WorkerMetrics> = self
+            .worker_stats
+            .iter()
+            .map(|s| WorkerMetrics {
+                tickets: s.tickets.load(Ordering::Relaxed),
+                busy_s: s.busy_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+            })
+            .collect();
         PoolMetrics {
             budget: self.budget,
             workers: self.spawned,
             busy: self.busy.load(Ordering::Relaxed),
             peak_busy: self.peak_busy.load(Ordering::Relaxed),
-            tickets_run: self.tickets_run.load(Ordering::Relaxed),
-            busy_seconds: self.busy_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+            tickets_run: per_worker.iter().map(|w| w.tickets).sum(),
+            busy_seconds: per_worker.iter().map(|w| w.busy_s).sum(),
             peak_queue_depth: self.peak_queue.load(Ordering::Relaxed),
+            items_stolen: self.items_stolen.load(Ordering::Relaxed),
+            items_helped: self.items_helped.load(Ordering::Relaxed),
+            per_worker,
         }
     }
 
@@ -393,6 +459,8 @@ impl HostPool {
         let ctx = Box::new(ScopeCtx {
             f: work as *const F,
             n,
+            pool: self as *const HostPool,
+            submitter: std::thread::current().id(),
             cursor: AtomicUsize::new(0),
             cancelled: AtomicBool::new(false),
             tickets: Mutex::new(TicketLedger {
@@ -567,6 +635,45 @@ mod tests {
         handle.help();
         handle.join();
         assert_eq!(hits.load(Ordering::Relaxed), 10);
+        pool.stop();
+    }
+
+    #[test]
+    fn steal_and_help_meters_account_every_item() {
+        let pool = HostPool::new(3);
+        let before = pool.metrics();
+        pool.parallel_map((0..400).collect::<Vec<_>>(), 3, |i| {
+            // A little work so the workers actually claim tickets.
+            std::hint::black_box(i * 7)
+        });
+        let m = pool.metrics();
+        let drained =
+            (m.items_stolen + m.items_helped) - (before.items_stolen + before.items_helped);
+        assert_eq!(drained, 400, "every item drained exactly once");
+        // Per-worker histogram covers exactly the spawned workers and
+        // sums to the aggregate ticket/busy counters.
+        assert_eq!(m.per_worker.len(), pool.spawned_threads());
+        let tickets: u64 = m.per_worker.iter().map(|w| w.tickets).sum();
+        assert_eq!(tickets, m.tickets_run);
+        let busy: f64 = m.per_worker.iter().map(|w| w.busy_s).sum();
+        assert!((busy - m.busy_seconds).abs() < 1e-9);
+        pool.stop();
+    }
+
+    #[test]
+    fn zero_worker_pool_attributes_everything_to_helping() {
+        // With no workers every ticket is revoked and the caller drains
+        // the whole batch itself: all 10 items metered as helped, none
+        // as stolen — deterministically.
+        let pool = HostPool::new(1);
+        let work = |_i: usize| {};
+        let handle = pool.scope_tickets(10, 4, &work);
+        handle.help();
+        handle.join();
+        let m = pool.metrics();
+        assert_eq!(m.items_helped, 10);
+        assert_eq!(m.items_stolen, 0);
+        assert!(m.per_worker.is_empty());
         pool.stop();
     }
 

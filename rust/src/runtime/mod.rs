@@ -32,7 +32,7 @@ pub mod native;
 #[cfg(feature = "xla")]
 pub mod xla_engine;
 
-pub use hostpool::{HostPool, PoolMetrics};
+pub use hostpool::{HostPool, PoolMetrics, WorkerMetrics};
 pub use manifest::{ArtifactInfo, ArtifactKind, Manifest};
 pub use native::NativeBackend;
 #[cfg(feature = "xla")]

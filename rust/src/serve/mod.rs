@@ -1,0 +1,425 @@
+//! The serving front door: bounded admission over the query engine.
+//!
+//! The ROADMAP's millions-of-users north star needs more than a fast
+//! [`crate::pdfstore::QueryEngine`] — it needs the engine to stay fast
+//! *under overload*. An unbounded caller population would otherwise
+//! pile onto the shared [`crate::runtime::hostpool`] budget until every
+//! query is slow (the classic congestion collapse). [`ServeFront`] puts
+//! two caps in front of the engine:
+//!
+//! * **`max_in_flight`** — queries executing concurrently. Admitted
+//!   requests run on the *caller's* thread (the engine's internal
+//!   fan-out still draws pool slots help-first), so the cap bounds how
+//!   much of the compute budget serving may consume at once.
+//! * **`queue_depth`** — callers allowed to wait for admission. One
+//!   past that, requests are **shed immediately** with
+//!   [`crate::PdfflowError::Overloaded`] instead of queuing without
+//!   bound — the caller gets a fast, explicit signal to back off, and
+//!   latency of admitted requests stays bounded by design.
+//!
+//! Every request is classified (point / region / analytic) and metered:
+//! admitted, completed, shed, error counts plus latency and queue-wait
+//! sums/maxima per class, and the peak in-flight / queued levels ever
+//! observed — the counters a load balancer or autoscaler would watch.
+//!
+//! [`closed_loop`] is the matching load driver: N synchronous clients,
+//! each issuing its next request only after the previous one finished —
+//! the closed-loop shape of `pdfflow serve --bench`, whose serving row
+//! lands in `BENCH_queries.json` next to the raw engine numbers.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+use crate::cube::PointId;
+use crate::pdfstore::{PdfRecord, QueryEngine, RegionQuery, RegionSummary};
+use crate::util::prng::Rng;
+use crate::{PdfflowError, Result};
+
+/// Admission knobs (`pdfflow serve --max-in-flight N --queue-depth N`).
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOptions {
+    /// Queries executing concurrently; further arrivals wait.
+    pub max_in_flight: usize,
+    /// Callers allowed to wait for admission; beyond this, shed.
+    pub queue_depth: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        let width = crate::runtime::hostpool::default_budget();
+        ServeOptions {
+            max_in_flight: width.max(1),
+            queue_depth: 2 * width.max(1),
+        }
+    }
+}
+
+/// One query request through the front door.
+#[derive(Clone, Copy, Debug)]
+pub enum Request {
+    /// Point lookup by flat id.
+    Point(PointId),
+    /// Analytical region summary.
+    Region(RegionQuery),
+    /// Mean quantile-`p` surface over a region (the heaviest class).
+    QuantileMean(RegionQuery, f64),
+}
+
+/// The matching replies.
+#[derive(Clone, Debug)]
+pub enum Reply {
+    Point(PdfRecord),
+    Region(RegionSummary),
+    QuantileMean(f64),
+}
+
+/// Request classes metered independently (their costs differ by orders
+/// of magnitude, so one blended latency number would hide saturation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Class {
+    Point = 0,
+    Region = 1,
+    Analytic = 2,
+}
+
+impl Class {
+    pub const ALL: [Class; 3] = [Class::Point, Class::Region, Class::Analytic];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Class::Point => "point",
+            Class::Region => "region",
+            Class::Analytic => "analytic",
+        }
+    }
+}
+
+impl Request {
+    pub fn class(&self) -> Class {
+        match self {
+            Request::Point(_) => Class::Point,
+            Request::Region(_) => Class::Region,
+            Request::QuantileMean(_, _) => Class::Analytic,
+        }
+    }
+}
+
+/// Always-on per-class counters (atomics; snapshot via `metrics()`).
+#[derive(Default)]
+struct ClassCounters {
+    admitted: AtomicU64,
+    completed: AtomicU64,
+    shed: AtomicU64,
+    errors: AtomicU64,
+    latency_nanos: AtomicU64,
+    latency_max_nanos: AtomicU64,
+    queue_nanos: AtomicU64,
+}
+
+/// Snapshot of one class's counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ClassMetrics {
+    /// Requests that passed admission (executed or errored).
+    pub admitted: u64,
+    /// Requests that returned a successful reply.
+    pub completed: u64,
+    /// Requests rejected at the door (queue full).
+    pub shed: u64,
+    /// Admitted requests whose query returned an error.
+    pub errors: u64,
+    /// Summed end-to-end latency (queue wait + execution), seconds.
+    pub latency_s_sum: f64,
+    /// Worst end-to-end latency, seconds.
+    pub latency_s_max: f64,
+    /// Summed admission-queue wait, seconds.
+    pub queue_s_sum: f64,
+}
+
+impl ClassMetrics {
+    pub fn avg_latency_s(&self) -> f64 {
+        if self.admitted == 0 {
+            0.0
+        } else {
+            self.latency_s_sum / self.admitted as f64
+        }
+    }
+}
+
+/// Snapshot of the whole front door.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServeMetrics {
+    pub point: ClassMetrics,
+    pub region: ClassMetrics,
+    pub analytic: ClassMetrics,
+    /// Most queries ever executing at once (must never exceed
+    /// `max_in_flight` — the admission contract).
+    pub peak_in_flight: usize,
+    /// Most callers ever waiting at once (must never exceed
+    /// `queue_depth`).
+    pub peak_queued: usize,
+}
+
+impl ServeMetrics {
+    pub fn class(&self, c: Class) -> &ClassMetrics {
+        match c {
+            Class::Point => &self.point,
+            Class::Region => &self.region,
+            Class::Analytic => &self.analytic,
+        }
+    }
+
+    pub fn total_completed(&self) -> u64 {
+        self.point.completed + self.region.completed + self.analytic.completed
+    }
+
+    pub fn total_shed(&self) -> u64 {
+        self.point.shed + self.region.shed + self.analytic.shed
+    }
+}
+
+/// Admission gate state (one mutex; the engine work runs outside it).
+struct Gate {
+    in_flight: usize,
+    queued: usize,
+    peak_in_flight: usize,
+    peak_queued: usize,
+}
+
+/// The admission-controlled serving layer over one open [`QueryEngine`]
+/// run. All methods take `&self`; one front is shared by every client
+/// thread.
+pub struct ServeFront {
+    engine: QueryEngine,
+    opts: ServeOptions,
+    gate: Mutex<Gate>,
+    cv: Condvar,
+    classes: [ClassCounters; 3],
+}
+
+impl ServeFront {
+    pub fn new(engine: QueryEngine, opts: ServeOptions) -> ServeFront {
+        ServeFront {
+            engine,
+            opts: ServeOptions {
+                max_in_flight: opts.max_in_flight.max(1),
+                queue_depth: opts.queue_depth,
+            },
+            gate: Mutex::new(Gate {
+                in_flight: 0,
+                queued: 0,
+                peak_in_flight: 0,
+                peak_queued: 0,
+            }),
+            cv: Condvar::new(),
+            classes: Default::default(),
+        }
+    }
+
+    pub fn engine(&self) -> &QueryEngine {
+        &self.engine
+    }
+
+    pub fn options(&self) -> ServeOptions {
+        self.opts
+    }
+
+    /// Submit one request through admission control. Blocks while
+    /// queued (bounded by `queue_depth` peers), sheds with
+    /// [`PdfflowError::Overloaded`] when the queue is full.
+    pub fn submit(&self, req: Request) -> Result<Reply> {
+        let class = &self.classes[req.class() as usize];
+        let arrived = Instant::now();
+        // Admission: take an execution slot or a bounded queue slot.
+        {
+            let mut g = self.gate.lock().unwrap();
+            if g.in_flight >= self.opts.max_in_flight {
+                if g.queued >= self.opts.queue_depth {
+                    class.shed.fetch_add(1, Ordering::Relaxed);
+                    return Err(PdfflowError::Overloaded(format!(
+                        "serve queue full ({} in flight, {} queued)",
+                        g.in_flight, g.queued
+                    )));
+                }
+                g.queued += 1;
+                g.peak_queued = g.peak_queued.max(g.queued);
+                while g.in_flight >= self.opts.max_in_flight {
+                    g = self.cv.wait(g).unwrap();
+                }
+                g.queued -= 1;
+            }
+            g.in_flight += 1;
+            g.peak_in_flight = g.peak_in_flight.max(g.in_flight);
+        }
+        let queue_wait = arrived.elapsed();
+        class.admitted.fetch_add(1, Ordering::Relaxed);
+
+        let result = match req {
+            Request::Point(id) => self.engine.point_by_id(id).map(Reply::Point),
+            Request::Region(q) => self.engine.region_summary(&q).map(Reply::Region),
+            Request::QuantileMean(q, p) => {
+                self.engine.region_quantile_mean(&q, p).map(Reply::QuantileMean)
+            }
+        };
+
+        // Release the slot before metering, so a successor is admitted
+        // as early as possible.
+        {
+            let mut g = self.gate.lock().unwrap();
+            g.in_flight -= 1;
+        }
+        self.cv.notify_one();
+
+        let latency = arrived.elapsed().as_nanos() as u64;
+        class.queue_nanos
+            .fetch_add(queue_wait.as_nanos() as u64, Ordering::Relaxed);
+        class.latency_nanos.fetch_add(latency, Ordering::Relaxed);
+        class.latency_max_nanos.fetch_max(latency, Ordering::Relaxed);
+        match &result {
+            Ok(_) => {
+                class.completed.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(_) => {
+                class.errors.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        result
+    }
+
+    pub fn metrics(&self) -> ServeMetrics {
+        let snap = |c: &ClassCounters| ClassMetrics {
+            admitted: c.admitted.load(Ordering::Relaxed),
+            completed: c.completed.load(Ordering::Relaxed),
+            shed: c.shed.load(Ordering::Relaxed),
+            errors: c.errors.load(Ordering::Relaxed),
+            latency_s_sum: c.latency_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+            latency_s_max: c.latency_max_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+            queue_s_sum: c.queue_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+        };
+        let g = self.gate.lock().unwrap();
+        ServeMetrics {
+            point: snap(&self.classes[0]),
+            region: snap(&self.classes[1]),
+            analytic: snap(&self.classes[2]),
+            peak_in_flight: g.peak_in_flight,
+            peak_queued: g.peak_queued,
+        }
+    }
+}
+
+/// Result of one closed-loop load run.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    pub clients: usize,
+    /// Requests issued across all clients (completed + shed + errors).
+    pub requests: u64,
+    pub secs: f64,
+    /// Successful replies per second.
+    pub throughput: f64,
+    pub metrics: ServeMetrics,
+}
+
+/// Deterministic request mix for one client: mostly points, some region
+/// summaries, a few quantile surfaces — the north-star read blend.
+fn next_request(rng: &mut Rng, front: &ServeFront, slices: &[usize]) -> Request {
+    let dims = front.engine().dims();
+    let z = slices[rng.below(slices.len())];
+    let slice_pts = dims.slice_points() as u64;
+    match rng.below(10) {
+        0..=7 => Request::Point(PointId(z as u64 * slice_pts + rng.below(slice_pts as usize) as u64)),
+        8 => {
+            let x0 = rng.below((dims.nx / 2).max(1));
+            let y0 = rng.below((dims.ny / 2).max(1));
+            Request::Region(RegionQuery {
+                z,
+                x0,
+                x1: (x0 + dims.nx / 2).min(dims.nx - 1),
+                y0,
+                y1: (y0 + dims.ny / 2).min(dims.ny - 1),
+            })
+        }
+        _ => {
+            let y0 = rng.below((dims.ny / 2).max(1));
+            Request::QuantileMean(
+                RegionQuery {
+                    z,
+                    x0: 0,
+                    x1: (dims.nx / 4).min(dims.nx - 1),
+                    y0,
+                    y1: (y0 + dims.ny / 4).min(dims.ny - 1),
+                },
+                0.5,
+            )
+        }
+    }
+}
+
+/// Drive the front door with `clients` synchronous clients, each
+/// issuing `requests_per_client` requests back-to-back (closed loop: a
+/// client's next request waits for its previous reply or shed). Clients
+/// are plain OS threads — they model external callers, not pool work;
+/// the admitted queries inside still fan out help-first on the shared
+/// host pool. Shed requests count as issued, not completed.
+pub fn closed_loop(
+    front: &ServeFront,
+    clients: usize,
+    requests_per_client: usize,
+    seed: u64,
+) -> LoadReport {
+    let clients = clients.max(1);
+    let slices = front.engine().store().slices();
+    assert!(!slices.is_empty(), "closed_loop needs a non-empty store");
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for k in 0..clients {
+            let slices = &slices;
+            s.spawn(move || {
+                let mut rng = Rng::new(seed ^ (0x9e37_79b9_7f4a_7c15u64.wrapping_mul(k as u64 + 1)));
+                for _ in 0..requests_per_client {
+                    let req = next_request(&mut rng, front, slices);
+                    // Shed and query errors are the driver's signal to
+                    // keep going — a real client would back off and
+                    // retry; the closed loop just issues its next
+                    // request.
+                    let _ = front.submit(req);
+                }
+            });
+        }
+    });
+    let secs = t0.elapsed().as_secs_f64();
+    let metrics = front.metrics();
+    let requests = (clients * requests_per_client) as u64;
+    LoadReport {
+        clients,
+        requests,
+        secs,
+        throughput: if secs > 0.0 {
+            metrics.total_completed() as f64 / secs
+        } else {
+            0.0
+        },
+        metrics,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_names_and_request_classification() {
+        assert_eq!(Request::Point(PointId(0)).class(), Class::Point);
+        let q = RegionQuery { z: 0, x0: 0, x1: 1, y0: 0, y1: 1 };
+        assert_eq!(Request::Region(q).class(), Class::Region);
+        assert_eq!(Request::QuantileMean(q, 0.5).class(), Class::Analytic);
+        for c in Class::ALL {
+            assert!(!c.name().is_empty());
+        }
+    }
+
+    #[test]
+    fn class_metrics_avg_handles_zero() {
+        let m = ClassMetrics::default();
+        assert_eq!(m.avg_latency_s(), 0.0);
+    }
+}

@@ -2,15 +2,20 @@
 //! pipeline and queries benches that run inside `cargo test`, write
 //! `BENCH_pipeline.json` / `BENCH_queries.json` at the repo root in the
 //! shared schema `{bench, config, rows: [{threads, throughput}]}`, and
-//! then validate the schema by re-parsing what they wrote. The numbers
-//! are smoke-grade (the test harness runs other suites concurrently) —
-//! `cargo bench --bench pipeline/queries -- --json` rewrites the files
-//! with proper measurements — but they keep the trajectory populated on
-//! every machine the tier-1 suite touches.
+//! then validate what landed through the shared
+//! `bench::validate_bench_json` checker — an empty or schema-violating
+//! rows array **fails the tier**, so the trajectory files always carry
+//! usable points. The queries record additionally carries a serving
+//! row (`mode: "serve"`): closed-loop throughput through the
+//! admission-controlled `ServeFront`. The numbers are smoke-grade (the
+//! test harness runs other suites concurrently) — `cargo bench --bench
+//! pipeline/queries -- --json` rewrites the files with proper
+//! measurements — but they keep the trajectory populated on every
+//! machine the tier-1 suite touches.
 
 use std::time::Instant;
 
-use pdfflow::bench::{bench_json_path, write_bench_json, BenchRow};
+use pdfflow::bench::{validate_bench_json, write_bench_json, BenchRow};
 use pdfflow::cluster::{ClusterSpec, SimCluster};
 use pdfflow::config::PipelineConfig;
 use pdfflow::coordinator::{Method, Pipeline, TypeSet};
@@ -19,6 +24,7 @@ use pdfflow::datagen::{DatasetSpec, SyntheticDataset};
 use pdfflow::executor::Executor;
 use pdfflow::pdfstore::{QueryEngine, QueryOptions};
 use pdfflow::runtime::{make_backend, Backend, BackendKind, BackendOptions};
+use pdfflow::serve::{closed_loop, ServeFront, ServeOptions};
 use pdfflow::util::json::Json;
 use pdfflow::util::prng::Rng;
 
@@ -37,23 +43,11 @@ fn native_backend() -> Box<dyn Backend> {
     .expect("backend")
 }
 
-/// Validate the shared schema of a written record and return the rows.
+/// Shared-schema validation of a written record; returns the rows.
+/// `validate_bench_json` rejects empty rows and malformed fields, so a
+/// bench that recorded nothing usable fails loudly here.
 fn check_schema(name: &str) -> Vec<Json> {
-    let path = bench_json_path(name);
-    let text = std::fs::read_to_string(&path).expect("bench json readable");
-    let doc = Json::parse(&text).expect("bench json parses");
-    assert_eq!(doc.get("bench").and_then(|b| b.as_str()), Some(name));
-    assert!(doc.get("config").is_some(), "{name}: config object");
-    let rows = doc
-        .get("rows")
-        .and_then(|r| r.as_arr())
-        .unwrap_or_else(|| panic!("{name}: rows array"));
-    assert!(!rows.is_empty(), "{name}: rows non-empty");
-    for row in rows {
-        assert!(row.get("threads").and_then(|t| t.as_f64()).is_some());
-        assert!(row.get("throughput").and_then(|t| t.as_f64()).is_some());
-    }
-    rows.to_vec()
+    validate_bench_json(name).expect("bench record validates against the shared schema")
 }
 
 #[test]
@@ -153,7 +147,7 @@ fn records_queries_bench_json() {
         .map(|_| PointId(2 * slice_pts + rng.below(slice_pts as usize) as u64))
         .collect();
 
-    let rows: Vec<BenchRow> = THREADS
+    let mut rows: Vec<BenchRow> = THREADS
         .iter()
         .map(|&threads| {
             engine.clear_cache();
@@ -185,6 +179,35 @@ fn records_queries_bench_json() {
             }
         })
         .collect();
+
+    // The serving row: closed-loop load through the admission-controlled
+    // front door, recorded next to the raw engine rows (mode: "serve").
+    let clients = 4usize;
+    let front = ServeFront::new(
+        QueryEngine::open(&store_dir, QueryOptions::default()).expect("open store for serving"),
+        ServeOptions {
+            max_in_flight: 2,
+            queue_depth: 4,
+        },
+    );
+    let load = closed_loop(&front, clients, 150, 11);
+    assert!(
+        load.metrics.total_completed() > 0,
+        "serving tier completed no requests"
+    );
+    assert!(load.metrics.peak_in_flight <= 2, "in-flight cap violated");
+    assert!(load.metrics.peak_queued <= 4, "queue-depth cap violated");
+    rows.push(BenchRow {
+        threads: clients,
+        throughput: load.throughput,
+        extra: vec![
+            ("mode", Json::Str("serve".into())),
+            ("shed", Json::Num(load.metrics.total_shed() as f64)),
+            ("max_in_flight", Json::Num(2.0)),
+            ("queue_depth", Json::Num(4.0)),
+        ],
+    });
+
     write_bench_json(
         "queries",
         vec![

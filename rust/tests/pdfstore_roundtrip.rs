@@ -1,9 +1,10 @@
 //! End-to-end pdfstore tests: a pipeline run persists a slice, a fresh
-//! process-equivalent reopen (manifest alone, no rescan) serves point /
+//! process-equivalent reopen (catalog alone, no rescan) serves point /
 //! region / quantile queries, and concurrent reads are bit-identical to
 //! single-threaded ones. Also covers the corruption surface: truncated
-//! segments, flipped payload bytes and tampered manifests must all be
-//! rejected rather than served.
+//! segments, flipped payload bytes and tampered catalogs must all be
+//! rejected rather than served. (Generational / compaction / crash
+//! coverage lives in `tests/store_generations.rs`.)
 
 use std::path::PathBuf;
 
@@ -13,7 +14,7 @@ use pdfflow::coordinator::{Method, Pipeline, TypeSet};
 use pdfflow::cube::PointId;
 use pdfflow::datagen::{DatasetSpec, SyntheticDataset};
 use pdfflow::pdfstore::{
-    PdfStore, QueryEngine, QueryOptions, RegionQuery, MANIFEST_NAME, REC_LEN,
+    PdfStore, QueryEngine, QueryOptions, RegionQuery, CATALOG_NAME, REC_LEN,
 };
 use pdfflow::runtime::{make_backend, Backend, BackendKind, BackendOptions};
 use pdfflow::executor::Executor;
@@ -169,9 +170,9 @@ fn concurrent_queries_match_single_threaded() {
 #[test]
 fn truncated_segment_is_rejected_at_open() {
     let (root, store_dir, _, _) = build_store("trunc");
-    let manifest = PdfStore::open(&store_dir).unwrap();
-    let seg_file = store_dir.join(&manifest.manifest.segments[0].file);
-    drop(manifest);
+    let store = PdfStore::open(&store_dir).unwrap();
+    let seg_file = store_dir.join(&store.run().segments[0].file);
+    drop(store);
     let len = std::fs::metadata(&seg_file).unwrap().len();
     let f = std::fs::OpenOptions::new().write(true).open(&seg_file).unwrap();
     f.set_len(len - 13).unwrap();
@@ -181,10 +182,10 @@ fn truncated_segment_is_rejected_at_open() {
 }
 
 #[test]
-fn corrupt_payload_fails_verify_and_tampered_manifest_fails_open() {
+fn corrupt_payload_fails_verify_and_tampered_catalog_fails_open() {
     let (root, store_dir, _, _) = build_store("corrupt");
     let store = PdfStore::open(&store_dir).unwrap();
-    let seg_file = store_dir.join(&store.manifest.segments[0].file);
+    let seg_file = store_dir.join(&store.run().segments[0].file);
     drop(store);
     // Flip one payload byte (length unchanged): open still succeeds off
     // the index, but the full checksum pass must fail.
@@ -194,13 +195,13 @@ fn corrupt_payload_fails_verify_and_tampered_manifest_fails_open() {
     let store = PdfStore::open(&store_dir).unwrap();
     assert!(store.verify().is_err(), "corrupt payload passed verify");
     drop(store);
-    // Tampered manifest body (DatasetSpec::tiny has 100 observations;
+    // Tampered catalog body (DatasetSpec::tiny has 100 observations;
     // claim 101): the self-checksum must reject it.
-    let mpath = store_dir.join(MANIFEST_NAME);
-    let text = std::fs::read_to_string(&mpath).unwrap();
+    let cpath = store_dir.join(CATALOG_NAME);
+    let text = std::fs::read_to_string(&cpath).unwrap();
     let tampered = text.replacen("\"n_obs\":100", "\"n_obs\":101", 1);
     assert_ne!(text, tampered);
-    std::fs::write(&mpath, tampered).unwrap();
-    assert!(PdfStore::open(&store_dir).is_err(), "tampered manifest accepted");
+    std::fs::write(&cpath, tampered).unwrap();
+    assert!(PdfStore::open(&store_dir).is_err(), "tampered catalog accepted");
     std::fs::remove_dir_all(&root).unwrap();
 }

@@ -1,0 +1,395 @@
+//! Generational-catalog acceptance tests: reruns append generations
+//! instead of clobbering, runs are selectable at query time, compaction
+//! is bit-identical and crash-safe, the serving front door enforces its
+//! admission caps under closed-loop load, and store-backed tree
+//! training equals the refit path.
+
+use std::path::{Path, PathBuf};
+
+use pdfflow::cluster::{ClusterSpec, SimCluster};
+use pdfflow::config::PipelineConfig;
+use pdfflow::coordinator::{mlmodel, Method, Pipeline, TypeSet};
+use pdfflow::datagen::{DatasetSpec, SyntheticDataset};
+use pdfflow::pdfstore::{
+    compact_run, Catalog, PdfStore, QueryEngine, QueryOptions, RegionQuery, RunSelector,
+    CATALOG_NAME,
+};
+use pdfflow::runtime::{make_backend, Backend, BackendKind, BackendOptions};
+use pdfflow::serve::{closed_loop, Request, ServeFront, ServeOptions};
+
+fn backend() -> Box<dyn Backend> {
+    make_backend(
+        BackendKind::Native,
+        "artifacts",
+        &BackendOptions {
+            batch: 64,
+            ..BackendOptions::default()
+        },
+    )
+    .expect("native backend")
+}
+
+fn root_dir(tag: &str) -> PathBuf {
+    let root = std::env::temp_dir().join(format!("pdfflow-gens-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    root
+}
+
+fn pipeline_cfg(store_dir: Option<&Path>, run_id: Option<&str>) -> PipelineConfig {
+    PipelineConfig {
+        batch: 64,
+        window_lines: 4,
+        store_dir: store_dir.map(|p| p.to_string_lossy().into_owned()),
+        run_id: run_id.map(|s| s.to_string()),
+        ..PipelineConfig::default()
+    }
+}
+
+/// Bit-exact face of everything the query surface can answer for one
+/// slice: every record's wire bits, the region summary, a quantile
+/// surface. Identical u64 ⇔ identical answers.
+fn query_fingerprint(engine: &QueryEngine, z: usize) -> u64 {
+    let dims = engine.dims();
+    let full = RegionQuery::slice(&dims, z);
+    let mut acc = 0x9e37_79b9_7f4a_7c15u64;
+    for rec in engine.region(&full).expect("region scan") {
+        acc = acc
+            .rotate_left(7)
+            .wrapping_add(rec.point.0)
+            .wrapping_add((rec.dist.id() as u64) << 48)
+            .wrapping_add(rec.error.to_bits() as u64)
+            .wrapping_add((rec.params[0].to_bits() as u64) << 16)
+            .wrapping_add((rec.params[1].to_bits() as u64) << 24)
+            .wrapping_add((rec.params[2].to_bits() as u64) << 32);
+    }
+    let s = engine.region_summary(&full).expect("summary");
+    acc = acc.rotate_left(9).wrapping_add(s.avg_error.to_bits());
+    acc = acc.rotate_left(9).wrapping_add(s.max_error.to_bits());
+    let q = RegionQuery {
+        z,
+        x0: 1,
+        x1: dims.nx - 2,
+        y0: 1,
+        y1: dims.ny - 2,
+    };
+    let m = engine.region_quantile_mean(&q, 0.5).expect("quantile mean");
+    acc.rotate_left(9).wrapping_add(m.to_bits())
+}
+
+#[test]
+fn reruns_append_generations_and_runs_are_selectable() {
+    let root = root_dir("append");
+    let ds = SyntheticDataset::generate(&DatasetSpec::tiny(), root.join("data")).unwrap();
+    let store = root.join("store");
+    let backend = backend();
+
+    // Run "a" (baseline) persists slice 1, then reruns the same slice:
+    // the rerun must append generation 1, not truncate generation 0.
+    let mut pa = Pipeline::new(
+        &ds,
+        backend.as_ref(),
+        SimCluster::new(ClusterSpec::lncc()),
+        pipeline_cfg(Some(&store), Some("a")),
+    );
+    pa.run_slice(Method::Baseline, 1, TypeSet::Four).unwrap();
+    let g0_bytes = std::fs::read(store.join("slice1_baseline_4_a_g0.seg")).unwrap();
+    pa.run_slice(Method::Baseline, 1, TypeSet::Four).unwrap();
+    assert_eq!(
+        std::fs::read(store.join("slice1_baseline_4_a_g0.seg")).unwrap(),
+        g0_bytes,
+        "rerun clobbered the prior generation"
+    );
+    let g1_bytes = std::fs::read(store.join("slice1_baseline_4_a_g1.seg")).unwrap();
+    // Deterministic pipeline: the rerun wrote identical content.
+    assert_eq!(g0_bytes, g1_bytes);
+
+    // Run "b" (different method + run id) never touches run "a" files.
+    let mut pb = Pipeline::new(
+        &ds,
+        backend.as_ref(),
+        SimCluster::new(ClusterSpec::lncc()),
+        pipeline_cfg(Some(&store), Some("b")),
+    );
+    pb.run_slice(Method::Grouping, 1, TypeSet::Four).unwrap();
+    assert_eq!(
+        std::fs::read(store.join("slice1_baseline_4_a_g0.seg")).unwrap(),
+        g0_bytes
+    );
+    assert!(store.join("slice1_grouping_4_b_g0.seg").exists());
+
+    // Catalog shape: two runs; run "a" holds two generations of slice 1.
+    let catalog = Catalog::load(&store).unwrap();
+    assert_eq!(catalog.runs.len(), 2);
+    let a = catalog.select(Some("a")).unwrap();
+    assert_eq!(a.segments.len(), 2);
+    assert_eq!(a.n_generations(), 2);
+    assert_eq!(a.next_gen_for_slice(1), 2);
+
+    // Latest run is "b" (most recent write); --run selects "a".
+    let latest = PdfStore::open(&store).unwrap();
+    assert_eq!(latest.run_key().run_id, "b");
+    assert_eq!(latest.run_key().method, "grouping");
+    let run_a = PdfStore::open_run(&store, RunSelector::Id("a")).unwrap();
+    assert_eq!(run_a.run_key().method, "baseline");
+    assert_eq!(run_a.n_segments(), 2);
+    // Resolved view: exactly one record set for the slice (newest gen),
+    // even though two generations are on disk.
+    let n = ds.spec.dims.slice_points() as u64;
+    assert_eq!(run_a.n_records(), n);
+    run_a.verify().unwrap();
+
+    // Both runs answer queries independently.
+    let ea = QueryEngine::new(run_a, QueryOptions::default());
+    let eb = QueryEngine::open(&store, QueryOptions::default()).unwrap();
+    let pa_rec = ea.point(3, 2, 1).unwrap();
+    let pb_rec = eb.point(3, 2, 1).unwrap();
+    assert_eq!(pa_rec.point, pb_rec.point);
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn compaction_is_bit_identical_and_retires_generations() {
+    let root = root_dir("compact");
+    let ds = SyntheticDataset::generate(&DatasetSpec::tiny(), root.join("data")).unwrap();
+    let store = root.join("store");
+    let backend = backend();
+    let mut pipe = Pipeline::new(
+        &ds,
+        backend.as_ref(),
+        SimCluster::new(ClusterSpec::lncc()),
+        pipeline_cfg(Some(&store), Some("exp")),
+    );
+    // Generation 0 covers the whole slice; generation 1 reruns only the
+    // first 8 lines — the resolved view must mix generations
+    // window-by-window (lines 0..8 from gen 1, the rest from gen 0).
+    pipe.run_slice(Method::Baseline, 1, TypeSet::Four).unwrap();
+    pipe.run_lines(Method::Baseline, 1, TypeSet::Four, 8).unwrap();
+
+    let before_engine = QueryEngine::open_run(
+        &store,
+        RunSelector::Id("exp"),
+        QueryOptions::default(),
+    )
+    .unwrap();
+    assert_eq!(before_engine.store().n_segments(), 2);
+    let before = query_fingerprint(&before_engine, 1);
+    drop(before_engine);
+
+    let rep = compact_run(&store, Some("exp")).unwrap();
+    assert!(!rep.already_compact);
+    assert_eq!(rep.segments_before, 2);
+    assert_eq!(rep.segments_after, 1);
+    assert_eq!(rep.retired_files, 2);
+    assert!(rep.bytes_after < rep.bytes_before, "compaction must drop dead bytes");
+
+    // Old generations are gone from disk; the new one answers
+    // bit-identically and passes a full checksum verify.
+    assert!(!store.join("slice1_baseline_4_exp_g0.seg").exists());
+    assert!(!store.join("slice1_baseline_4_exp_g1.seg").exists());
+    assert!(store.join(format!("slice1_baseline_4_exp_g{}.seg", rep.gen)).exists());
+    let after_engine = QueryEngine::open_run(
+        &store,
+        RunSelector::Id("exp"),
+        QueryOptions::default(),
+    )
+    .unwrap();
+    assert_eq!(after_engine.store().n_segments(), 1);
+    after_engine.store().verify().unwrap();
+    assert_eq!(
+        query_fingerprint(&after_engine, 1),
+        before,
+        "query results diverged across compaction"
+    );
+
+    // Compacting a dense run is a no-op.
+    let rep2 = compact_run(&store, Some("exp")).unwrap();
+    assert!(rep2.already_compact);
+    assert_eq!(rep2.retired_files, 0);
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn crashed_compaction_cold_opens_to_previous_generation() {
+    let root = root_dir("crash");
+    let ds = SyntheticDataset::generate(&DatasetSpec::tiny(), root.join("data")).unwrap();
+    let store = root.join("store");
+    let backend = backend();
+    let mut pipe = Pipeline::new(
+        &ds,
+        backend.as_ref(),
+        SimCluster::new(ClusterSpec::lncc()),
+        pipeline_cfg(Some(&store), Some("exp")),
+    );
+    pipe.run_slice(Method::Baseline, 1, TypeSet::Four).unwrap();
+    pipe.run_lines(Method::Baseline, 1, TypeSet::Four, 8).unwrap();
+    let engine = QueryEngine::open(&store, QueryOptions::default()).unwrap();
+    let before = query_fingerprint(&engine, 1);
+    drop(engine);
+
+    // Simulate a crash mid-compaction: a half-written segment tmp, an
+    // orphan segment that never made it into the catalog, and a
+    // truncated catalog tmp from a dying save. None of these is
+    // referenced by CATALOG.json, so a cold open must ignore them all.
+    std::fs::write(store.join("slice1_baseline_4_exp_g7.seg.tmp"), b"PDFS\x01\x00garbage").unwrap();
+    std::fs::write(store.join("slice1_baseline_4_exp_g7.seg"), b"PDFSorphaned-not-in-catalog").unwrap();
+    let catalog_text = std::fs::read_to_string(store.join(CATALOG_NAME)).unwrap();
+    std::fs::write(
+        store.join(format!("{CATALOG_NAME}.tmp")),
+        &catalog_text[..catalog_text.len() / 2],
+    )
+    .unwrap();
+
+    let engine = QueryEngine::open(&store, QueryOptions::default()).unwrap();
+    engine.store().verify().unwrap();
+    assert_eq!(
+        query_fingerprint(&engine, 1),
+        before,
+        "crash debris changed query results"
+    );
+    drop(engine);
+
+    // A later compaction still succeeds over the debris and stays
+    // bit-identical.
+    let rep = compact_run(&store, None).unwrap();
+    assert!(!rep.already_compact);
+    let engine = QueryEngine::open(&store, QueryOptions::default()).unwrap();
+    assert_eq!(query_fingerprint(&engine, 1), before);
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn serve_front_enforces_admission_caps_under_closed_loop_load() {
+    let root = root_dir("serve");
+    let ds = SyntheticDataset::generate(&DatasetSpec::tiny(), root.join("data")).unwrap();
+    let store = root.join("store");
+    let backend = backend();
+    let mut pipe = Pipeline::new(
+        &ds,
+        backend.as_ref(),
+        SimCluster::new(ClusterSpec::lncc()),
+        pipeline_cfg(Some(&store), None),
+    );
+    pipe.run_slice(Method::Baseline, 1, TypeSet::Four).unwrap();
+
+    let engine = QueryEngine::open(&store, QueryOptions::default()).unwrap();
+    // First point of slice 1 (the persisted slice).
+    let first_id = pdfflow::cube::PointId(ds.spec.dims.slice_points() as u64);
+    let direct = engine.point_by_id(first_id).unwrap();
+    let opts = ServeOptions {
+        max_in_flight: 1,
+        queue_depth: 1,
+    };
+    let front = ServeFront::new(engine, opts);
+
+    // Replies through the front match direct engine answers.
+    match front.submit(Request::Point(first_id)).unwrap() {
+        pdfflow::serve::Reply::Point(rec) => assert_eq!(rec, direct),
+        other => panic!("unexpected reply {other:?}"),
+    }
+
+    // 8 closed-loop clients against capacity 1+1: concurrency must stay
+    // inside the caps and the overflow must be shed, not queued.
+    let load = closed_loop(&front, 8, 200, 99);
+    let m = &load.metrics;
+    assert_eq!(load.requests, 8 * 200);
+    assert!(m.total_completed() > 0, "nothing served");
+    assert!(
+        m.peak_in_flight <= opts.max_in_flight,
+        "in-flight cap violated: {} > {}",
+        m.peak_in_flight,
+        opts.max_in_flight
+    );
+    assert!(
+        m.peak_queued <= opts.queue_depth,
+        "queue-depth cap violated: {} > {}",
+        m.peak_queued,
+        opts.queue_depth
+    );
+    assert!(m.total_shed() > 0, "8 clients on capacity 2 never shed");
+    // Ledger closes: every request completed, shed, or errored.
+    let accounted = m.total_completed()
+        + m.total_shed()
+        + m.point.errors
+        + m.region.errors
+        + m.analytic.errors;
+    assert_eq!(accounted, load.requests);
+    // Shed is an explicit, typed signal.
+    let err = pdfflow::PdfflowError::Overloaded("x".into());
+    assert!(err.is_overload());
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn store_backed_training_matches_refit() {
+    let root = root_dir("train");
+    let ds = SyntheticDataset::generate(&DatasetSpec::tiny(), root.join("data")).unwrap();
+    let store = root.join("store");
+    let backend = backend();
+
+    // Persist a full-fit baseline run over every training slice — the
+    // "previously generated output" the paper's §5.3.1 trains on.
+    let slices = mlmodel::training_slices(&ds.spec.dims, 0, ds.spec.n_value_layers());
+    let mut writer = Pipeline::new(
+        &ds,
+        backend.as_ref(),
+        SimCluster::new(ClusterSpec::lncc()),
+        pipeline_cfg(Some(&store), None),
+    );
+    for &z in &slices {
+        writer.run_slice(Method::Baseline, z, TypeSet::Four).unwrap();
+    }
+    drop(writer);
+
+    // Store-backed: labels read through the QueryEngine.
+    let mut from_store = Pipeline::new(
+        &ds,
+        backend.as_ref(),
+        SimCluster::new(ClusterSpec::lncc()),
+        pipeline_cfg(Some(&store), None),
+    );
+    let err_store = from_store.ensure_tree(0, TypeSet::Four, 500).unwrap();
+    assert!(
+        from_store.tree_from_store,
+        "matching prior run present but training refit anyway"
+    );
+
+    // Refit path: no store configured.
+    let mut refit = Pipeline::new(
+        &ds,
+        backend.as_ref(),
+        SimCluster::new(ClusterSpec::lncc()),
+        pipeline_cfg(None, None),
+    );
+    let err_refit = refit.ensure_tree(0, TypeSet::Four, 500).unwrap();
+    assert!(!refit.tree_from_store);
+
+    // Same samples → bit-identical model error and tree.
+    assert_eq!(err_store.to_bits(), err_refit.to_bits());
+    assert_eq!(
+        from_store.tree.as_ref().unwrap().to_json().to_string(),
+        refit.tree.as_ref().unwrap().to_json().to_string(),
+        "store-backed tree diverged from refit tree"
+    );
+
+    // A store that does not cover the training slices falls back to the
+    // refit path (here: a store holding only one slice).
+    let partial_store = root.join("partial");
+    let mut partial_writer = Pipeline::new(
+        &ds,
+        backend.as_ref(),
+        SimCluster::new(ClusterSpec::lncc()),
+        pipeline_cfg(Some(&partial_store), None),
+    );
+    partial_writer.run_slice(Method::Baseline, slices[0], TypeSet::Four).unwrap();
+    drop(partial_writer);
+    let mut fallback = Pipeline::new(
+        &ds,
+        backend.as_ref(),
+        SimCluster::new(ClusterSpec::lncc()),
+        pipeline_cfg(Some(&partial_store), None),
+    );
+    let err_fallback = fallback.ensure_tree(0, TypeSet::Four, 500).unwrap();
+    assert!(!fallback.tree_from_store, "incomplete store must fall back to refit");
+    assert_eq!(err_fallback.to_bits(), err_refit.to_bits());
+    std::fs::remove_dir_all(&root).unwrap();
+}

@@ -67,7 +67,7 @@ fn run_at(
         pipe.ensure_tree(0, TypeSet::Four, 500).expect("tree");
     }
     let report = pipe.run_slice(method, 2, TypeSet::Four).expect("slice run");
-    let seg = store_dir.join(format!("slice2_{}_4.seg", method.name()));
+    let seg = store_dir.join(format!("slice2_{}_4_default_g0.seg", method.name()));
     let bytes = std::fs::read(&seg).expect("segment bytes");
     (report, bytes)
 }
@@ -254,7 +254,7 @@ fn overlapped_training_matches_ensure_tree_then_run() {
         .run_slice_overlapped(Method::GroupingMl, 2, TypeSet::Four, 0, 500)
         .expect("overlapped run");
     let ovl_bytes =
-        std::fs::read(ovl_store.join("slice2_grouping+ml_4.seg")).expect("segment bytes");
+        std::fs::read(ovl_store.join("slice2_grouping+ml_4_default_g0.seg")).expect("segment bytes");
 
     assert_eq!(
         seq_report.avg_error.to_bits(),
