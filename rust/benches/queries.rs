@@ -1,12 +1,15 @@
 //! Query-throughput harness for the pdfstore serving layer (criterion
 //! substitute; harness = false).
 //!
-//! Builds a store by running the pipeline's persist phase over two
-//! slices, then measures queries/sec against the `QueryEngine` under
-//! 1..N threads, cold cache (cleared before each pass) vs warm cache
-//! (second pass over the same keys), plus region-summary and
-//! quantile-surface analytics throughput. This is the north-star
-//! workload: many concurrent readers asking for served PDFs.
+//! Builds **one** store through the shared
+//! [`pdfflow::bench::QueryStoreFixture`] (the pipeline's persist phase
+//! over two slices) and reuses it across every mode: point queries/sec
+//! against the `QueryEngine` under 1..N threads, cold cache (cleared
+//! before each pass) vs warm cache (second pass over the same keys),
+//! region-summary and quantile-surface analytics, and the spatial tier
+//! (grid-index-pruned box / radius / kNN sweeps plus one per-cell
+//! aggregation). This is the north-star workload: many concurrent
+//! readers asking for served PDFs.
 //!
 //! Two more paths are exercised on every run (so the CI bench-smoke
 //! step covers them on every push): a slice is **rerun and compacted**
@@ -18,27 +21,25 @@
 //! `--json` (or PDFFLOW_BENCH_JSON=1) writes `BENCH_queries.json` at
 //! the repo root in the shared cross-bench schema
 //! `{bench, config, rows: [{threads, throughput}]}` (throughput =
-//! warm-cache queries/s; the cold rate and the `mode: "serve"` row ride
-//! along). `PDFFLOW_BENCH_SMOKE=1` shrinks the workload to a CI smoke
-//! profile.
+//! warm-cache queries/s; the cold rate, the `mode: "serve"` row and the
+//! `mode: "spatial_*"` rows ride along). `PDFFLOW_BENCH_SMOKE=1`
+//! shrinks the workload to a CI smoke profile.
 
 use std::time::Instant;
 
-use pdfflow::bench::{write_bench_json, BenchRow};
-use pdfflow::cluster::{ClusterSpec, SimCluster};
-use pdfflow::config::PipelineConfig;
-use pdfflow::coordinator::{Method, Pipeline, TypeSet};
-use pdfflow::cube::{CubeDims, PointId};
-use pdfflow::datagen::{DatasetSpec, SyntheticDataset};
+use pdfflow::bench::{write_bench_json, BenchRow, QueryStoreFixture};
+use pdfflow::cube::CubeDims;
 use pdfflow::executor::Executor;
-use pdfflow::pdfstore::{compact_run, QueryEngine, QueryOptions, RegionQuery};
-use pdfflow::runtime::{hostpool, make_backend, BackendKind, BackendOptions};
+use pdfflow::pdfstore::{compact_run, QueryEngine, RegionQuery};
+use pdfflow::runtime::hostpool;
 use pdfflow::serve::{closed_loop, ServeFront, ServeOptions};
+use pdfflow::spatial::{BoxQuery, KnnQuery, RadiusQuery};
 use pdfflow::util::json::Json;
 use pdfflow::util::prng::Rng;
 use pdfflow::util::timing::fmt_bytes;
 
 const SLICES: [usize; 2] = [2, 3];
+const CACHE_BYTES: u64 = 32 << 20;
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -46,50 +47,24 @@ fn main() {
         || std::env::var("PDFFLOW_BENCH_JSON").is_ok();
     let smoke = std::env::var("PDFFLOW_BENCH_SMOKE").is_ok();
 
-    let root = std::env::temp_dir().join(format!("pdfflow-querybench-{}", std::process::id()));
-    let _ = std::fs::remove_dir_all(&root);
-    let store_dir = root.join("store");
-
     // A mid-size cube: 64 x 48 lines x 6 slices, 100 observations
-    // (smoke: 32 x 16 x 6).
-    let mut spec = DatasetSpec::tiny();
-    spec.dims = if smoke {
+    // (smoke: 32 x 16 x 6). One build feeds every mode below.
+    let dims = if smoke {
         CubeDims::new(32, 16, 6)
     } else {
         CubeDims::new(64, 48, 6)
     };
-    spec.seed = 20180599;
-    let ds = SyntheticDataset::generate(&spec, root.join("data")).expect("dataset");
-    let backend = make_backend(
-        BackendKind::Native,
-        "artifacts",
-        &BackendOptions { batch: 64, ..BackendOptions::default() },
-    )
-    .expect("backend");
-    let mut cfg = PipelineConfig { batch: 64, window_lines: 8, ..PipelineConfig::default() };
-    cfg.store_dir = Some(store_dir.to_string_lossy().into_owned());
-    let mut pipe = Pipeline::new(
-        &ds,
-        backend.as_ref(),
-        SimCluster::new(ClusterSpec::lncc()),
-        cfg,
-    );
     let t0 = Instant::now();
-    for z in SLICES {
-        pipe.run_slice(Method::Baseline, z, TypeSet::Four).expect("persist slice");
-    }
+    let fixture =
+        QueryStoreFixture::build("querybench", dims, 20180599, 8, &SLICES).expect("store build");
     println!(
         "== query benches: store of {} points x {} slices built in {:.2}s ==",
-        spec.dims.slice_points(),
+        dims.slice_points(),
         SLICES.len(),
         t0.elapsed().as_secs_f64()
     );
 
-    let engine = QueryEngine::open(
-        &store_dir,
-        QueryOptions { cache_bytes: 32 << 20, ..QueryOptions::default() },
-    )
-    .expect("open store");
+    let engine = fixture.engine(CACHE_BYTES).expect("open store");
     println!(
         "store: {} records, {} on disk",
         engine.store().n_records(),
@@ -97,15 +72,8 @@ fn main() {
     );
 
     // Deterministic random point workload across both slices.
-    let mut rng = Rng::new(7);
-    let slice_pts = spec.dims.slice_points() as u64;
     let n_queries = if smoke { 4_000usize } else { 20_000usize };
-    let ids: Vec<PointId> = (0..n_queries)
-        .map(|_| {
-            let z = SLICES[rng.below(SLICES.len())] as u64;
-            PointId(z * slice_pts + rng.below(slice_pts as usize) as u64)
-        })
-        .collect();
+    let ids = fixture.point_ids(n_queries, 7);
 
     println!(
         "\n{:<10} {:>14} {:>14}  ({} point queries)",
@@ -123,7 +91,7 @@ fn main() {
             }
             let t = Instant::now();
             let chunk = ids.len().div_ceil(threads);
-            let chunks: Vec<Vec<PointId>> = ids.chunks(chunk).map(|c| c.to_vec()).collect();
+            let chunks: Vec<Vec<_>> = ids.chunks(chunk).map(|c| c.to_vec()).collect();
             let exec = Executor::new(threads);
             let results = exec.run(chunks, |chunk| {
                 let mut acc = 0u64;
@@ -155,16 +123,17 @@ fn main() {
 
     // Analytical throughput: region summaries and quantile surfaces over
     // random sub-rectangles of one slice.
+    let mut rng = Rng::new(9);
     let mut regions = Vec::new();
     for _ in 0..200 {
-        let x0 = rng.below(spec.dims.nx / 2);
-        let y0 = rng.below(spec.dims.ny / 2);
+        let x0 = rng.below(dims.nx / 2);
+        let y0 = rng.below(dims.ny / 2);
         regions.push(RegionQuery {
             z: SLICES[rng.below(SLICES.len())],
             x0,
-            x1: x0 + spec.dims.nx / 2 - 1,
+            x1: x0 + dims.nx / 2 - 1,
             y0,
-            y1: y0 + spec.dims.ny / 2 - 1,
+            y1: y0 + dims.ny / 2 - 1,
         });
     }
     let t = Instant::now();
@@ -188,10 +157,112 @@ fn main() {
     std::hint::black_box(acc);
     println!("region_quantile_mean(P50): {:.1} regions/s", 20.0 / dt);
 
+    // --- Spatial tier over the same store build: grid-index-pruned 3D
+    // box summaries, radius scans and kNN lookups, plus one per-cell
+    // aggregation pass. The engine fans window scans out on the host
+    // pool internally, so the rows record that width.
+    let spatial_threads = hostpool::default_budget().max(1);
+    let n_spatial = if smoke { 400usize } else { 2_000usize };
+    let mut srng = Rng::new(23);
+    let rand_point = |rng: &mut Rng| (rng.below(dims.nx), rng.below(dims.ny), rng.below(dims.nz));
+    let boxes: Vec<BoxQuery> = (0..n_spatial)
+        .map(|_| {
+            let c = rand_point(&mut srng);
+            BoxQuery::around(&dims, c, 1 + srng.below(8))
+        })
+        .collect();
+    let t = Instant::now();
+    let mut pts = 0usize;
+    for q in &boxes {
+        pts += engine.box_summary(q).expect("box").n_points;
+    }
+    let dt = t.elapsed().as_secs_f64();
+    let box_per_s = boxes.len() as f64 / dt;
+    println!(
+        "\nspatial box_summary: {:.0} boxes/s ({:.2}M points/s summarized)",
+        box_per_s,
+        pts as f64 / dt / 1e6
+    );
+
+    let radii: Vec<RadiusQuery> = (0..n_spatial)
+        .map(|_| {
+            let (x, y, z) = rand_point(&mut srng);
+            RadiusQuery {
+                x,
+                y,
+                z,
+                radius: 1.0 + srng.below(5) as f64,
+            }
+        })
+        .collect();
+    let t = Instant::now();
+    let mut hits = 0usize;
+    for q in &radii {
+        hits += engine.radius_records(q).expect("radius").len();
+    }
+    let radius_per_s = radii.len() as f64 / t.elapsed().as_secs_f64();
+    println!(
+        "spatial radius_records: {:.0} queries/s ({:.1} records/query)",
+        radius_per_s,
+        hits as f64 / radii.len() as f64
+    );
+
+    let knns: Vec<KnnQuery> = (0..n_spatial)
+        .map(|_| {
+            let (x, y, z) = rand_point(&mut srng);
+            KnnQuery {
+                x,
+                y,
+                z,
+                k: 1 + srng.below(16),
+            }
+        })
+        .collect();
+    let t = Instant::now();
+    let mut acc = 0u64;
+    for q in &knns {
+        acc ^= engine.knn(q).expect("knn").last().expect("k >= 1").point.0;
+    }
+    std::hint::black_box(acc);
+    let knn_per_s = knns.len() as f64 / t.elapsed().as_secs_f64();
+    println!("spatial knn: {knn_per_s:.0} queries/s");
+
+    let agg_passes = if smoke { 5usize } else { 20usize };
+    let t = Instant::now();
+    let mut cells = 0usize;
+    for _ in 0..agg_passes {
+        cells = engine
+            .cell_aggregate(&BoxQuery::whole(&dims))
+            .expect("aggregate")
+            .cells
+            .len();
+    }
+    let agg_per_s = agg_passes as f64 / t.elapsed().as_secs_f64();
+    println!(
+        "spatial cell_aggregate(whole cube): {agg_per_s:.1} passes/s ({cells} occupied cells)"
+    );
+    for (mode, throughput, n) in [
+        ("spatial_box", box_per_s, n_spatial),
+        ("spatial_radius", radius_per_s, n_spatial),
+        ("spatial_knn", knn_per_s, n_spatial),
+        ("spatial_agg", agg_per_s, agg_passes),
+    ] {
+        rows.push(BenchRow {
+            threads: spatial_threads,
+            throughput,
+            extra: vec![
+                ("mode", Json::Str(mode.into())),
+                ("queries", Json::Num(n as f64)),
+            ],
+        });
+    }
+
     // --- Compaction read path (exercised by the CI bench-smoke step on
     // every push): rerun one slice so the run really holds two
     // generations, compact, and require bit-identical answers from the
-    // compacted store before measuring it.
+    // compacted store before measuring it. The fingerprint folds point,
+    // region AND spatial answers, so compaction cannot silently change
+    // any tier.
     let fingerprint = |e: &QueryEngine| -> u64 {
         let mut acc = 0u64;
         for id in ids.iter().take(2_000) {
@@ -204,12 +275,17 @@ fn main() {
             let s = e.region_summary(q).expect("summary");
             acc = acc.rotate_left(1).wrapping_add(s.avg_error.to_bits());
         }
+        for q in boxes.iter().take(20) {
+            let s = e.box_summary(q).expect("box");
+            acc = acc.rotate_left(1).wrapping_add(s.err_sum.to_bits());
+        }
         acc
     };
     let before = fingerprint(&engine);
-    pipe.run_slice(Method::Baseline, SLICES[0], TypeSet::Four)
+    fixture
+        .persist_slice(SLICES[0])
         .expect("rerun slice (appends a generation)");
-    let rep = compact_run(&store_dir, None).expect("compact");
+    let rep = compact_run(fixture.store_dir(), None).expect("compact");
     assert!(!rep.already_compact, "rerun should have left generations to compact");
     println!(
         "\ncompacted run {} → gen {}: {} → {} segments, {} → {} bytes, {} files retired",
@@ -221,11 +297,7 @@ fn main() {
         rep.bytes_after,
         rep.retired_files
     );
-    let compacted = QueryEngine::open(
-        &store_dir,
-        QueryOptions { cache_bytes: 32 << 20, ..QueryOptions::default() },
-    )
-    .expect("open compacted store");
+    let compacted = fixture.engine(CACHE_BYTES).expect("open compacted store");
     assert_eq!(
         fingerprint(&compacted),
         before,
@@ -242,18 +314,15 @@ fn main() {
 
     // --- Serving tier: closed-loop clients through the admission-
     // controlled front door (the north-star shape: bounded concurrency,
-    // overflow shed, not queued without bound).
+    // overflow shed, not queued without bound). The request mix now
+    // includes spatial box / radius / kNN classes.
     let clients = 8usize;
     let serve_opts = ServeOptions {
         max_in_flight: 4,
         queue_depth: 8,
     };
     let front = ServeFront::new(
-        QueryEngine::open(
-            &store_dir,
-            QueryOptions { cache_bytes: 32 << 20, ..QueryOptions::default() },
-        )
-        .expect("open store for serving"),
+        fixture.engine(CACHE_BYTES).expect("open store for serving"),
         serve_opts,
     );
     let load = closed_loop(&front, clients, if smoke { 200 } else { 1_000 }, 11);
@@ -299,6 +368,4 @@ fn main() {
         .expect("write BENCH_queries.json");
         println!("wrote {}", path.display());
     }
-
-    let _ = std::fs::remove_dir_all(&root);
 }

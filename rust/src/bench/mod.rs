@@ -11,16 +11,18 @@
 use std::path::PathBuf;
 
 use crate::cluster::{ClusterSpec, SimCluster};
-use crate::config::ExperimentConfig;
+use crate::config::{ExperimentConfig, PipelineConfig};
 use crate::coordinator::{
     sampling::{full_slice_features, run_sampling},
     Method, Pipeline, Sampler, TypeSet,
 };
 use crate::coordinator::mlmodel;
-use crate::cube::CubeDims;
-use crate::datagen::SyntheticDataset;
+use crate::cube::{CubeDims, PointId};
+use crate::datagen::{DatasetSpec, SyntheticDataset};
+use crate::pdfstore::{QueryEngine, QueryOptions};
 use crate::runtime::{make_backend, Backend, BackendKind, BackendOptions};
 use crate::storage::{DatasetReader, WindowCache};
+use crate::util::prng::Rng;
 use crate::util::timing::fmt_secs;
 use crate::{PdfflowError, Result};
 
@@ -130,6 +132,17 @@ pub fn validate_bench_record(
     Ok(rows.to_vec())
 }
 
+/// Profile tag (`config.profile`) of the committed `BENCH_<name>.json`,
+/// when the file exists and parses. The tier-1 smoke tests use this to
+/// reject a `"placeholder"` record checked into the repo **before**
+/// rewriting the file: the trajectory files must always carry measured
+/// rows, never zero-throughput stand-ins.
+pub fn committed_profile(name: &str) -> Option<String> {
+    let text = std::fs::read_to_string(bench_json_path(name)).ok()?;
+    let doc = crate::util::json::Json::parse(&text).ok()?;
+    Some(doc.get("config")?.get("profile")?.as_str()?.to_string())
+}
+
 /// Parse `BENCH_<name>.json` from the repo root and validate it (see
 /// [`validate_bench_record`]); returns the rows.
 pub fn validate_bench_json(name: &str) -> Result<Vec<crate::util::json::Json>> {
@@ -184,6 +197,123 @@ pub fn upsert_bench_row(name: &str, mode: &str, row: BenchRow) -> Result<PathBuf
     validate_bench_record(name, &doc)?;
     std::fs::write(&path, doc.to_string())?;
     Ok(path)
+}
+
+/// One store build shared across every query-bench mode.
+///
+/// `benches/queries.rs` and the tier-1 smoke recorder
+/// (`tests/bench_smoke.rs`) all drive point, serving and spatial passes
+/// over the same fitted store; building it once per process — dataset
+/// generation plus the pipeline's persist phase — instead of re-fitting
+/// per mode is what keeps those harnesses smoke-fast. The fixture owns
+/// its temp root and removes it on drop.
+pub struct QueryStoreFixture {
+    root: PathBuf,
+    ds: SyntheticDataset,
+    backend: Box<dyn Backend>,
+    window_lines: usize,
+    /// Slices persisted into the store, ascending.
+    pub slices: Vec<usize>,
+}
+
+impl QueryStoreFixture {
+    /// Generate the dataset under a process-unique temp root (`tag`
+    /// keeps concurrent harnesses apart) and persist `slices`
+    /// (Baseline, 4-types) into a store at `<root>/store`.
+    pub fn build(
+        tag: &str,
+        dims: CubeDims,
+        seed: u64,
+        window_lines: usize,
+        slices: &[usize],
+    ) -> Result<QueryStoreFixture> {
+        let root = std::env::temp_dir().join(format!("pdfflow-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        let mut spec = DatasetSpec::tiny();
+        spec.dims = dims;
+        spec.seed = seed;
+        let ds = SyntheticDataset::generate(&spec, root.join("data"))?;
+        let backend = make_backend(
+            BackendKind::Native,
+            "artifacts",
+            &BackendOptions {
+                batch: 64,
+                ..BackendOptions::default()
+            },
+        )?;
+        let fixture = QueryStoreFixture {
+            root,
+            ds,
+            backend,
+            window_lines,
+            slices: slices.to_vec(),
+        };
+        for &z in slices {
+            fixture.persist_slice(z)?;
+        }
+        Ok(fixture)
+    }
+
+    /// Cube dims of the generated dataset.
+    pub fn dims(&self) -> CubeDims {
+        self.ds.spec.dims
+    }
+
+    /// On-disk store directory (open it with [`QueryEngine::open`] or
+    /// point the `pdfflow query` CLI at it).
+    pub fn store_dir(&self) -> PathBuf {
+        self.root.join("store")
+    }
+
+    /// Run the persist phase for one slice. Calling it again for an
+    /// already-persisted slice appends a generation — the compaction
+    /// passes rely on this to create something to compact.
+    pub fn persist_slice(&self, z: usize) -> Result<()> {
+        let cfg = PipelineConfig {
+            batch: 64,
+            window_lines: self.window_lines,
+            store_dir: Some(self.store_dir().to_string_lossy().into_owned()),
+            ..PipelineConfig::default()
+        };
+        let mut pipe = Pipeline::new(
+            &self.ds,
+            self.backend.as_ref(),
+            SimCluster::new(ClusterSpec::lncc()),
+            cfg,
+        );
+        pipe.run_slice(Method::Baseline, z, TypeSet::Four)?;
+        Ok(())
+    }
+
+    /// Fresh engine over the store with a `cache_bytes` sharded LRU.
+    pub fn engine(&self, cache_bytes: u64) -> Result<QueryEngine> {
+        QueryEngine::open(
+            self.store_dir(),
+            QueryOptions {
+                cache_bytes,
+                ..QueryOptions::default()
+            },
+        )
+    }
+
+    /// Deterministic random point workload spread across the persisted
+    /// slices.
+    pub fn point_ids(&self, n: usize, seed: u64) -> Vec<PointId> {
+        let mut rng = Rng::new(seed);
+        let slice_pts = self.dims().slice_points() as u64;
+        (0..n)
+            .map(|_| {
+                let z = self.slices[rng.below(self.slices.len())] as u64;
+                PointId(z * slice_pts + rng.below(slice_pts as usize) as u64)
+            })
+            .collect()
+    }
+}
+
+impl Drop for QueryStoreFixture {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.root);
+    }
 }
 
 /// Bench environment: compute backend + dataset root + scale.

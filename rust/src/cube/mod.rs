@@ -82,6 +82,96 @@ impl CubeDims {
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct PointId(pub u64);
 
+/// Uniform grid of 3D cells over a cube — the coordinate layer of the
+/// spatial tier ([`crate::spatial`]). Cells are `sx × sy × sz`-point
+/// boxes (edge cells truncated to the cube boundary) addressed z-major
+/// like point ids. Cell ↔ window math lives here because a [`Window`]
+/// is a y-run of one slice: it overlaps exactly the cell rows whose
+/// y-range intersects its lines, in the z-layer of its slice.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CellGrid {
+    pub dims: CubeDims,
+    /// Cell side along x (points per cell).
+    pub sx: usize,
+    /// Cell side along y (lines per cell).
+    pub sy: usize,
+    /// Cell side along z (slices per cell).
+    pub sz: usize,
+}
+
+impl CellGrid {
+    pub fn new(dims: CubeDims, sx: usize, sy: usize, sz: usize) -> CellGrid {
+        assert!(sx > 0 && sy > 0 && sz > 0, "cell sides must be positive");
+        CellGrid { dims, sx, sy, sz }
+    }
+
+    /// Default grid for a cube: about 8 cells per axis, at least one
+    /// point per cell side.
+    pub fn default_for(dims: CubeDims) -> CellGrid {
+        let side = |n: usize| n.div_ceil(8).max(1);
+        CellGrid::new(dims, side(dims.nx), side(dims.ny), side(dims.nz))
+    }
+
+    /// Cell counts per axis.
+    pub fn ncx(&self) -> usize {
+        self.dims.nx.div_ceil(self.sx)
+    }
+
+    pub fn ncy(&self) -> usize {
+        self.dims.ny.div_ceil(self.sy)
+    }
+
+    pub fn ncz(&self) -> usize {
+        self.dims.nz.div_ceil(self.sz)
+    }
+
+    pub fn n_cells(&self) -> usize {
+        self.ncx() * self.ncy() * self.ncz()
+    }
+
+    /// Cell coordinates of a point.
+    pub fn cell_of(&self, x: usize, y: usize, z: usize) -> (usize, usize, usize) {
+        debug_assert!(x < self.dims.nx && y < self.dims.ny && z < self.dims.nz);
+        (x / self.sx, y / self.sy, z / self.sz)
+    }
+
+    /// Flat cell index — z-major, mirroring [`CubeDims::point_id`].
+    pub fn cell_index(&self, (cx, cy, cz): (usize, usize, usize)) -> usize {
+        debug_assert!(cx < self.ncx() && cy < self.ncy() && cz < self.ncz());
+        (cz * self.ncy() + cy) * self.ncx() + cx
+    }
+
+    /// Inverse of [`cell_index`](Self::cell_index).
+    pub fn cell_at(&self, idx: usize) -> (usize, usize, usize) {
+        let cx = idx % self.ncx();
+        let cy = (idx / self.ncx()) % self.ncy();
+        let cz = idx / (self.ncx() * self.ncy());
+        (cx, cy, cz)
+    }
+
+    /// Inclusive point ranges of one cell: `((x0,x1),(y0,y1),(z0,z1))`,
+    /// truncated at the cube boundary.
+    pub fn cell_bounds(
+        &self,
+        (cx, cy, cz): (usize, usize, usize),
+    ) -> ((usize, usize), (usize, usize), (usize, usize)) {
+        let side = |c: usize, s: usize, n: usize| (c * s, ((c + 1) * s - 1).min(n - 1));
+        (
+            side(cx, self.sx, self.dims.nx),
+            side(cy, self.sy, self.dims.ny),
+            side(cz, self.sz, self.dims.nz),
+        )
+    }
+
+    /// Cell rows a window overlaps: inclusive cy range + the cz layer.
+    /// A window spans every x, so its cell set is the full cx row of
+    /// each returned (cy, cz) — the reason the spatial index buckets by
+    /// (cy, cz) and resolves the x axis per record.
+    pub fn cells_of_window(&self, w: &Window) -> (std::ops::RangeInclusive<usize>, usize) {
+        (w.y0 / self.sy..=w.y1() / self.sy, w.z / self.sz)
+    }
+}
+
 /// A run of consecutive lines inside one slice.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Window {
@@ -93,6 +183,11 @@ pub struct Window {
 impl Window {
     pub fn n_points(&self, dims: &CubeDims) -> usize {
         self.lines * dims.nx
+    }
+
+    /// Last line of the window, inclusive.
+    pub fn y1(&self) -> usize {
+        self.y0 + self.lines - 1
     }
 
     /// Contiguous byte range of this window inside one dataset file body.
@@ -185,5 +280,45 @@ mod tests {
     #[should_panic(expected = "window must have at least one line")]
     fn zero_window_panics() {
         dims().windows(0, 0);
+    }
+
+    #[test]
+    fn cell_grid_index_roundtrip_and_counts() {
+        let g = CellGrid::new(CubeDims::new(10, 7, 5), 3, 2, 2);
+        assert_eq!((g.ncx(), g.ncy(), g.ncz()), (4, 4, 3));
+        assert_eq!(g.n_cells(), 48);
+        for idx in 0..g.n_cells() {
+            assert_eq!(g.cell_index(g.cell_at(idx)), idx);
+        }
+        // Every point lands in exactly the cell whose bounds contain it.
+        for z in 0..5 {
+            for y in 0..7 {
+                for x in 0..10 {
+                    let c = g.cell_of(x, y, z);
+                    let ((x0, x1), (y0, y1), (z0, z1)) = g.cell_bounds(c);
+                    assert!(x0 <= x && x <= x1 && y0 <= y && y <= y1 && z0 <= z && z <= z1);
+                }
+            }
+        }
+        // Edge cells truncate to the cube boundary.
+        assert_eq!(g.cell_bounds((3, 3, 2)), ((9, 9), (6, 6), (4, 4)));
+    }
+
+    #[test]
+    fn cell_grid_default_covers_cube() {
+        let g = CellGrid::default_for(CubeDims::new(251, 501, 501));
+        assert!(g.ncx() * g.sx >= 251 && g.ncy() * g.sy >= 501);
+        let tiny = CellGrid::default_for(CubeDims::new(2, 3, 1));
+        assert_eq!((tiny.sx, tiny.sy, tiny.sz), (1, 1, 1));
+    }
+
+    #[test]
+    fn window_cell_rows() {
+        let d = CubeDims::new(6, 20, 4);
+        let g = CellGrid::new(d, 2, 4, 2);
+        let w = Window { z: 3, y0: 6, lines: 5 }; // lines 6..=10 → cy 1..=2
+        let (cys, cz) = g.cells_of_window(&w);
+        assert_eq!((cys, cz), (1..=2, 1));
+        assert_eq!(w.y1(), 10);
     }
 }

@@ -49,7 +49,10 @@
 //! shed-with-error, per-class latency/shed counters) on top — the
 //! layers that turn the batch reproduction into a servable system
 //! (`store` / `query` / `serve` CLI subcommands, `cargo bench --bench
-//! queries` for throughput).
+//! queries` for throughput). The [`spatial`] tier adds grid-indexed 3D
+//! box / radius / kNN queries, per-cell aggregation of fit outcomes and
+//! cross-run diffs on top of the store, each verified bit-identical
+//! against a brute-force oracle (`tests/spatial_oracle.rs`).
 
 pub mod bench;
 pub mod cluster;
@@ -64,6 +67,7 @@ pub mod rdd;
 pub mod runtime;
 pub mod sampling;
 pub mod serve;
+pub mod spatial;
 pub mod stats;
 pub mod storage;
 pub mod util;
@@ -73,7 +77,7 @@ pub mod prelude {
     pub use crate::cluster::{ClusterSpec, SimCluster};
     pub use crate::config::ExperimentConfig;
     pub use crate::coordinator::{Method, Pipeline, SliceReport, TypeSet};
-    pub use crate::cube::{CubeDims, PointId, Window};
+    pub use crate::cube::{CellGrid, CubeDims, PointId, Window};
     pub use crate::datagen::SyntheticDataset;
     pub use crate::executor::Executor;
     pub use crate::mltree::DecisionTree;
@@ -86,6 +90,7 @@ pub mod prelude {
         make_backend, Backend, BackendKind, BackendOptions, HostPool, NativeBackend,
     };
     pub use crate::serve::{closed_loop, ServeFront, ServeOptions};
+    pub use crate::spatial::{BoxQuery, KnnQuery, RadiusQuery, RunDiff, SpatialAggregate};
     pub use crate::stats::DistType;
 }
 

@@ -16,6 +16,8 @@
 //!                   [--slice Z] [--lines N] [--run-id ID]  persist fitted PDFs to a pdfstore run
 //! pdfflow store compact --store-dir DIR [--run ID]         collapse a run's generations
 //! pdfflow query     --store-dir DIR [--run ID] [--point x,y,z] [--region z[,y0,y1[,x0,x1]]]
+//!                   [--box z0,z1[,y0,y1[,x0,x1]]] [--agg] [--radius x,y,z,r] [--knn x,y,z,k]
+//!                   [--diff-run ID] [--cells sx,sy,sz]
 //!                   [--quantile Q] [--threads N] [--host-threads N] [--cache-mb MB] [--verify]
 //! pdfflow serve     --store-dir DIR [--run ID] [--clients N] [--queries N]
 //!                   [--max-in-flight N] [--queue-depth N] [--bench]
@@ -40,6 +42,7 @@ use pdfflow::pdfstore::{
 };
 use pdfflow::runtime::BackendKind;
 use pdfflow::serve::{closed_loop, Class, ServeFront, ServeOptions};
+use pdfflow::spatial::{BoxQuery, KnnQuery, RadiusQuery};
 use pdfflow::storage::{DatasetReader, WindowCache};
 use pdfflow::util::cli::Args;
 use pdfflow::util::timing::{fmt_bytes, fmt_secs};
@@ -47,7 +50,7 @@ use pdfflow::util::timing::{fmt_bytes, fmt_secs};
 fn main() {
     let args = match Args::parse(
         std::env::args().skip(1),
-        &["tune", "full", "verbose", "verify", "bench"],
+        &["tune", "full", "verbose", "verify", "bench", "agg"],
     ) {
         Ok(a) => a,
         Err(e) => {
@@ -582,6 +585,75 @@ fn parse_region(s: &str, dims: &pdfflow::cube::CubeDims) -> Result<RegionQuery> 
     Ok(q)
 }
 
+/// Parse "z0,z1", "z0,z1,y0,y1" or "z0,z1,y0,y1,x0,x1" into a 3D box
+/// (inclusive bounds; omitted axes span the whole cube).
+fn parse_box(s: &str, dims: &pdfflow::cube::CubeDims) -> Result<BoxQuery> {
+    let parts: Vec<usize> = s
+        .split(',')
+        .map(|p| p.trim().parse().context("--box"))
+        .collect::<Result<_>>()?;
+    let mut q = BoxQuery::whole(dims);
+    match parts.len() {
+        2 | 4 | 6 => {
+            q.z0 = parts[0];
+            q.z1 = parts[1];
+        }
+        _ => return Err(anyhow!("--box expects z0,z1[,y0,y1[,x0,x1]], got {s:?}")),
+    }
+    if parts.len() >= 4 {
+        q.y0 = parts[2];
+        q.y1 = parts[3];
+    }
+    if parts.len() == 6 {
+        q.x0 = parts[4];
+        q.x1 = parts[5];
+    }
+    Ok(q)
+}
+
+/// Parse "x,y,z,r" into a radius query (r may be fractional).
+fn parse_radius(s: &str) -> Result<RadiusQuery> {
+    let parts: Vec<&str> = s.split(',').map(|p| p.trim()).collect();
+    if parts.len() != 4 {
+        return Err(anyhow!("--radius expects x,y,z,r, got {s:?}"));
+    }
+    Ok(RadiusQuery {
+        x: parts[0].parse().context("--radius x")?,
+        y: parts[1].parse().context("--radius y")?,
+        z: parts[2].parse().context("--radius z")?,
+        radius: parts[3].parse().context("--radius r")?,
+    })
+}
+
+/// Parse "x,y,z,k" into a k-nearest-neighbor query.
+fn parse_knn(s: &str) -> Result<KnnQuery> {
+    let parts: Vec<usize> = s
+        .split(',')
+        .map(|p| p.trim().parse().context("--knn"))
+        .collect::<Result<_>>()?;
+    if parts.len() != 4 {
+        return Err(anyhow!("--knn expects x,y,z,k, got {s:?}"));
+    }
+    Ok(KnnQuery {
+        x: parts[0],
+        y: parts[1],
+        z: parts[2],
+        k: parts[3],
+    })
+}
+
+/// Parse "sx,sy,sz" into spatial-grid cell sides.
+fn parse_cells(s: &str) -> Result<[usize; 3]> {
+    let parts: Vec<usize> = s
+        .split(',')
+        .map(|p| p.trim().parse().context("--cells"))
+        .collect::<Result<_>>()?;
+    if parts.len() != 3 || parts.contains(&0) {
+        return Err(anyhow!("--cells expects positive sx,sy,sz, got {s:?}"));
+    }
+    Ok([parts[0], parts[1], parts[2]])
+}
+
 /// Serve point / region / analytical queries from an existing store.
 fn cmd_query(args: &Args) -> Result<()> {
     let store_dir = args
@@ -619,15 +691,17 @@ fn cmd_query(args: &Args) -> Result<()> {
         Some(qs) => Some(qs.parse().context("--quantile")?),
         None => None,
     };
-    let engine = QueryEngine::open_run(
-        store_dir,
-        RunSelector::from_opt(args.opt("run")),
-        QueryOptions {
-            cache_bytes,
-            workers: threads,
-            ..QueryOptions::default()
-        },
-    )?;
+    let cell = match args.opt("cells") {
+        Some(c) => Some(parse_cells(c)?),
+        None => None,
+    };
+    let opts = QueryOptions {
+        cache_bytes,
+        workers: threads,
+        cell,
+        ..QueryOptions::default()
+    };
+    let engine = QueryEngine::open_run(store_dir, RunSelector::from_opt(args.opt("run")), opts)?;
     let dims = engine.dims();
     println!(
         "store {} run {}: {}x{}x{} cube, {} observations, {} segment(s) in {} generation(s), {} records, {}",
@@ -700,6 +774,146 @@ fn cmd_query(args: &Args) -> Result<()> {
         if let Some(p) = quantile {
             let mean_q = engine.region_quantile_mean(&q, p)?;
             println!("  mean P{:.0} over region: {:.4}", p * 100.0, mean_q);
+        }
+    }
+    if let Some(b) = args.opt("box") {
+        let q = parse_box(b, &dims)?;
+        let t0 = std::time::Instant::now();
+        let s = engine.box_summary(&q)?;
+        println!(
+            "box z[{},{}] y[{},{}] x[{},{}]: {} points, avg E {:.4}, max E {:.4} ({})",
+            q.z0,
+            q.z1,
+            q.y0,
+            q.y1,
+            q.x0,
+            q.x1,
+            s.n_points,
+            s.avg_error,
+            s.max_error,
+            fmt_secs(t0.elapsed().as_secs_f64()),
+        );
+        for (i, &n) in s.type_counts.iter().enumerate() {
+            if n > 0 {
+                println!(
+                    "  {:<12} {:>8} ({:>6.2}%)",
+                    pdfflow::stats::DistType::from_id(i).unwrap().name(),
+                    n,
+                    100.0 * n as f64 / s.n_points.max(1) as f64
+                );
+            }
+        }
+        if args.flag("agg") {
+            let grid = engine.spatial_index().grid();
+            let agg = engine.cell_aggregate(&q)?;
+            println!(
+                "cell aggregation ({}x{}x{} cells of {}x{}x{} points): {} non-empty, {} boundary",
+                grid.ncx(),
+                grid.ncy(),
+                grid.ncz(),
+                grid.sx,
+                grid.sy,
+                grid.sz,
+                agg.cells.len(),
+                agg.boundary.len(),
+            );
+            for c in &agg.cells {
+                println!(
+                    "  cell ({},{},{}): {} points, dominant {}, mean E {:.4}, max E {:.4}",
+                    c.cell.0,
+                    c.cell.1,
+                    c.cell.2,
+                    c.n_points,
+                    c.dominant.name(),
+                    c.mean_error(),
+                    c.max_error,
+                );
+            }
+        }
+    }
+    if let Some(r) = args.opt("radius") {
+        let q = parse_radius(r)?;
+        let t0 = std::time::Instant::now();
+        let recs = engine.radius_records(&q)?;
+        println!(
+            "radius {} around ({},{},{}): {} records ({})",
+            q.radius,
+            q.x,
+            q.y,
+            q.z,
+            recs.len(),
+            fmt_secs(t0.elapsed().as_secs_f64()),
+        );
+        for rec in recs.iter().take(8) {
+            let (x, y, z) = dims.coords(rec.point);
+            println!(
+                "  ({x},{y},{z}) id {}: {} fit err {:.4}",
+                rec.point.0,
+                rec.dist.name(),
+                rec.error
+            );
+        }
+        if recs.len() > 8 {
+            println!("  ... {} more", recs.len() - 8);
+        }
+    }
+    if let Some(kq) = args.opt("knn") {
+        let q = parse_knn(kq)?;
+        let t0 = std::time::Instant::now();
+        let recs = engine.knn(&q)?;
+        println!(
+            "{} nearest records around ({},{},{}) ({}):",
+            recs.len(),
+            q.x,
+            q.y,
+            q.z,
+            fmt_secs(t0.elapsed().as_secs_f64()),
+        );
+        for rec in &recs {
+            let (x, y, z) = dims.coords(rec.point);
+            let d2 = pdfflow::spatial::dist2((x, y, z), (q.x, q.y, q.z));
+            println!(
+                "  ({x},{y},{z}) id {} d {:.3}: {} fit err {:.4}",
+                rec.point.0,
+                (d2 as f64).sqrt(),
+                rec.dist.name(),
+                rec.error
+            );
+        }
+    }
+    if let Some(other_id) = args.opt("diff-run") {
+        let other = QueryEngine::open_run(store_dir, RunSelector::Id(other_id), opts)?;
+        let q = match args.opt("box") {
+            Some(b) => parse_box(b, &dims)?,
+            None => BoxQuery::whole(&dims),
+        };
+        let t0 = std::time::Instant::now();
+        let d = engine.diff_run(&other, &q)?;
+        println!(
+            "diff run {} vs {} over z[{},{}] y[{},{}] x[{},{}] ({}):",
+            engine.store().run_key().label(),
+            other.store().run_key().label(),
+            q.z0,
+            q.z1,
+            q.y0,
+            q.y1,
+            q.x0,
+            q.x1,
+            fmt_secs(t0.elapsed().as_secs_f64()),
+        );
+        println!(
+            "  {} compared ({} only here, {} only there), {} type changes in {} cell(s), \
+             mean |ΔE| {:.5}, max |ΔE| {:.5}",
+            d.n_compared,
+            d.only_a,
+            d.only_b,
+            d.type_changed,
+            d.changed_cells.len(),
+            d.mean_err_delta(),
+            d.max_err_delta,
+        );
+        for &(cx, cy, cz) in d.changed_cells.iter().take(8) {
+            println!("  changed cell ({cx},{cy},{cz})");
         }
     }
     let m = engine.meters();

@@ -10,13 +10,18 @@
 //! both fronts share the generic [`crate::util::lru::ShardedStampLru`]
 //! core.
 
+use std::collections::{BTreeMap, BTreeSet};
 use std::path::Path;
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
-use crate::cube::{CubeDims, PointId};
+use crate::cube::{CellGrid, CubeDims, PointId};
 use crate::executor::Executor;
 use crate::pdfstore::{PdfRecord, PdfStore, RunSelector, SlicePart, REC_LEN};
 use crate::runtime::hostpool;
+use crate::spatial::{
+    dist2, dominant_type, BoxQuery, CellSummary, GridIndex, KnnQuery, RadiusQuery, RunDiff,
+    SpatialAggregate,
+};
 use crate::stats::{self, density, PENALTY_ERROR};
 use crate::util::lru::ShardedStampLru;
 use crate::{PdfflowError, Result};
@@ -142,6 +147,10 @@ pub struct QueryOptions {
     /// Width cap for fanned-out queries: how many slots of the shared
     /// host-pool budget one query may draw (not a thread count).
     pub workers: usize,
+    /// Spatial-grid cell sides `[sx, sy, sz]` for the engine's
+    /// [`GridIndex`]; `None` → [`CellGrid::default_for`] (~8 cells per
+    /// axis). CLI `--cells`.
+    pub cell: Option<[usize; 3]>,
 }
 
 impl Default for QueryOptions {
@@ -150,6 +159,7 @@ impl Default for QueryOptions {
             cache_bytes: 64 << 20,
             shards: 8,
             workers: hostpool::default_budget(),
+            cell: None,
         }
     }
 }
@@ -163,6 +173,11 @@ pub struct QueryEngine {
     /// Fan-out stage executor on the shared host pool (the ROADMAP
     /// follow-up that replaced the old per-call scoped `util::pool`).
     exec: Executor,
+    /// Cell-side override for the spatial index (`QueryOptions::cell`).
+    cell: Option<[usize; 3]>,
+    /// Lazily built spatial grid index — first spatial query pays the
+    /// (cheap, catalog-only) build; point/region paths never do.
+    index: OnceLock<GridIndex>,
 }
 
 impl QueryEngine {
@@ -171,6 +186,8 @@ impl QueryEngine {
             store,
             cache: ShardedLru::new(opts.cache_bytes, opts.shards),
             exec: Executor::new(opts.workers.max(1)),
+            cell: opts.cell,
+            index: OnceLock::new(),
         }
     }
 
@@ -293,19 +310,19 @@ impl QueryEngine {
             .collect())
     }
 
-    /// Rectangular region scan: all records with x0≤x≤x1, y0≤y≤y1 on
-    /// slice z, in point-id order. Window blocks are fetched in parallel.
-    pub fn region(&self, q: &RegionQuery) -> Result<Vec<PdfRecord>> {
+    /// Parallel filtered scan over resolved windows: records inside the
+    /// box, concatenated in the order `wins` was given. Every caller
+    /// passes windows ascending `(z, y0)`, so output is point-id order
+    /// and identical at any thread count.
+    fn scan_windows(&self, wins: Vec<SlicePart>, b: BoxQuery) -> Result<Vec<PdfRecord>> {
         let dims = self.dims();
-        let wins = self.region_parts(q)?;
-        let q = *q;
         let parts = self.exec.try_run(wins, |part| -> Result<Vec<PdfRecord>> {
             let block = self.block(part.seg, part.win)?;
             Ok(block
                 .iter()
                 .filter(|rec| {
-                    let (x, y, _) = dims.coords(rec.point);
-                    x >= q.x0 && x <= q.x1 && y >= q.y0 && y <= q.y1
+                    let (x, y, z) = dims.coords(rec.point);
+                    b.contains(x, y, z)
                 })
                 .copied()
                 .collect())
@@ -317,13 +334,11 @@ impl QueryEngine {
         Ok(out)
     }
 
-    /// Analytical region query: error statistics + type/error histograms.
-    /// Per-window partials are computed in parallel and merged in window
-    /// order, so the result is identical at any thread count.
-    pub fn region_summary(&self, q: &RegionQuery) -> Result<RegionSummary> {
+    /// Parallel analytical scan: per-window partials merged in the order
+    /// `wins` was given (the module-level determinism contract — see
+    /// [`crate::spatial`]).
+    fn summarize_windows(&self, wins: Vec<SlicePart>, b: BoxQuery) -> Result<RegionSummary> {
         let dims = self.dims();
-        let wins = self.region_parts(q)?;
-        let q = *q;
         struct Partial {
             n: usize,
             err_sum: f64,
@@ -341,8 +356,8 @@ impl QueryEngine {
                 hist: [0; ERROR_HIST_BINS],
             };
             for rec in block.iter() {
-                let (x, y, _) = dims.coords(rec.point);
-                if x < q.x0 || x > q.x1 || y < q.y0 || y > q.y1 {
+                let (x, y, z) = dims.coords(rec.point);
+                if !b.contains(x, y, z) {
                     continue;
                 }
                 p.n += 1;
@@ -372,6 +387,286 @@ impl QueryEngine {
             s.avg_error = err_sum / s.n_points as f64;
         }
         Ok(s)
+    }
+
+    /// One slice's inclusive rectangle as a 3D box.
+    fn region_box(q: &RegionQuery) -> BoxQuery {
+        BoxQuery {
+            x0: q.x0,
+            x1: q.x1,
+            y0: q.y0,
+            y1: q.y1,
+            z0: q.z,
+            z1: q.z,
+        }
+    }
+
+    /// Rectangular region scan: all records with x0≤x≤x1, y0≤y≤y1 on
+    /// slice z, in point-id order. Window blocks are fetched in parallel.
+    pub fn region(&self, q: &RegionQuery) -> Result<Vec<PdfRecord>> {
+        let wins = self.region_parts(q)?;
+        self.scan_windows(wins, Self::region_box(q))
+    }
+
+    /// Analytical region query: error statistics + type/error histograms.
+    /// Per-window partials are computed in parallel and merged in window
+    /// order, so the result is identical at any thread count.
+    pub fn region_summary(&self, q: &RegionQuery) -> Result<RegionSummary> {
+        let wins = self.region_parts(q)?;
+        self.summarize_windows(wins, Self::region_box(q))
+    }
+
+    /// The engine's spatial grid index, built lazily from the catalog's
+    /// resolved view (no payload reads).
+    pub fn spatial_index(&self) -> &GridIndex {
+        self.index.get_or_init(|| {
+            let grid = match self.cell {
+                Some([sx, sy, sz]) => CellGrid::new(self.dims(), sx, sy, sz),
+                None => CellGrid::default_for(self.dims()),
+            };
+            GridIndex::build(&self.store, grid)
+        })
+    }
+
+    /// Index-pruned candidate windows of a box, ascending `(z, y0)`.
+    fn box_parts(&self, q: &BoxQuery) -> Vec<SlicePart> {
+        self.spatial_index()
+            .parts_for_box(q)
+            .into_iter()
+            .map(|(_, p)| p)
+            .collect()
+    }
+
+    /// True 3D box scan: all records inside the box, point-id order.
+    /// Unlike [`region`](Self::region), slices the run never persisted
+    /// are skipped, not an error — a 3D box queries the resolved view,
+    /// whatever subset of the cube it covers.
+    pub fn box_records(&self, q: &BoxQuery) -> Result<Vec<PdfRecord>> {
+        self.scan_windows(self.box_parts(q), *q)
+    }
+
+    /// Analytical summary of a 3D box (same statistics as a region
+    /// summary, computed over the box's resolved records).
+    pub fn box_summary(&self, q: &BoxQuery) -> Result<RegionSummary> {
+        self.summarize_windows(self.box_parts(q), *q)
+    }
+
+    /// Radius query: records within Euclidean `radius` of the center
+    /// (point-index units), point-id order. Pruned to the ball's
+    /// bounding box via the index; the membership predicate is the
+    /// exact integer squared distance against `radius²`.
+    pub fn radius_records(&self, q: &RadiusQuery) -> Result<Vec<PdfRecord>> {
+        let dims = self.dims();
+        if q.radius < 0.0 {
+            return Ok(Vec::new());
+        }
+        let b = q.bounding_box(&dims);
+        let wins = self.box_parts(&b);
+        let r2 = q.radius * q.radius;
+        let center = (q.x, q.y, q.z);
+        let records = self.scan_windows(wins, b)?;
+        Ok(records
+            .into_iter()
+            .filter(|rec| dist2(dims.coords(rec.point), center) as f64 <= r2)
+            .collect())
+    }
+
+    /// k nearest stored records around a point, ordered by `(squared
+    /// distance, PointId)` — ties always break toward the lower point
+    /// id. Searches an expanding Chebyshev box through the index,
+    /// stopping once the k-th candidate provably beats everything
+    /// outside the box (points beyond a half-width `h` box are at
+    /// squared distance > h², so they can neither displace nor tie).
+    pub fn knn(&self, q: &KnnQuery) -> Result<Vec<PdfRecord>> {
+        let dims = self.dims();
+        let k = q.k.min(self.store.n_records() as usize);
+        if k == 0 {
+            return Ok(Vec::new());
+        }
+        let center = (q.x, q.y, q.z);
+        let grid = self.spatial_index().grid();
+        let whole = BoxQuery::whole(&dims);
+        let mut half = grid.sx.max(grid.sy).max(grid.sz);
+        loop {
+            let b = BoxQuery::around(&dims, center, half);
+            let mut cand = self.scan_windows(self.box_parts(&b), b)?;
+            cand.sort_unstable_by_key(|rec| (dist2(dims.coords(rec.point), center), rec.point));
+            let settled = cand.len() >= k
+                && dist2(dims.coords(cand[k - 1].point), center) <= half as u64 * half as u64;
+            if settled || b == whole {
+                cand.truncate(k);
+                return Ok(cand);
+            }
+            half *= 2;
+        }
+    }
+
+    /// Per-cell aggregation of fit outcomes over a box: dominant
+    /// distribution type, mean Eq. 5 error and max error per grid cell,
+    /// plus the type-transition boundary cells. Parallel per window,
+    /// merged in window order (thread-count invariant).
+    pub fn cell_aggregate(&self, q: &BoxQuery) -> Result<SpatialAggregate> {
+        let dims = self.dims();
+        let grid = self.spatial_index().grid();
+        let wins = self.box_parts(q);
+        let q = *q;
+        #[derive(Clone, Copy)]
+        struct Acc {
+            n: usize,
+            types: [u64; 10],
+            err_sum: f64,
+            max: f32,
+        }
+        const ZERO: Acc = Acc {
+            n: 0,
+            types: [0; 10],
+            err_sum: 0.0,
+            max: 0.0,
+        };
+        let parts = self.exec.try_run(wins, |part| -> Result<BTreeMap<usize, Acc>> {
+            let block = self.block(part.seg, part.win)?;
+            let mut m: BTreeMap<usize, Acc> = BTreeMap::new();
+            for rec in block.iter() {
+                let (x, y, z) = dims.coords(rec.point);
+                if !q.contains(x, y, z) {
+                    continue;
+                }
+                let a = m.entry(grid.cell_index(grid.cell_of(x, y, z))).or_insert(ZERO);
+                a.n += 1;
+                a.types[rec.dist.id()] += 1;
+                a.err_sum += rec.error as f64;
+                a.max = a.max.max(rec.error);
+            }
+            Ok(m)
+        })?;
+        let mut cells: BTreeMap<usize, Acc> = BTreeMap::new();
+        for m in parts {
+            for (idx, w) in m {
+                let a = cells.entry(idx).or_insert(ZERO);
+                a.n += w.n;
+                for i in 0..10 {
+                    a.types[i] += w.types[i];
+                }
+                a.err_sum += w.err_sum;
+                a.max = a.max.max(w.max);
+            }
+        }
+        let summaries: Vec<CellSummary> = cells
+            .iter()
+            .map(|(&idx, a)| CellSummary {
+                cell: grid.cell_at(idx),
+                n_points: a.n,
+                type_counts: a.types,
+                dominant: dominant_type(&a.types),
+                err_sum: a.err_sum,
+                max_error: a.max,
+            })
+            .collect();
+        let boundary = Self::boundary_of(&grid, &summaries);
+        Ok(SpatialAggregate {
+            grid,
+            cells: summaries,
+            boundary,
+        })
+    }
+
+    /// Type-transition boundary cells: non-empty cells with a non-empty
+    /// 6-neighbor of a different dominant type, ascending cell index
+    /// (independent twin of `spatial::oracle::boundary_cells`).
+    fn boundary_of(grid: &CellGrid, cells: &[CellSummary]) -> Vec<(usize, usize, usize)> {
+        let dom: std::collections::HashMap<(usize, usize, usize), usize> =
+            cells.iter().map(|c| (c.cell, c.dominant.id())).collect();
+        let (ncx, ncy, ncz) = (grid.ncx(), grid.ncy(), grid.ncz());
+        let mut out = Vec::new();
+        for c in cells {
+            let (cx, cy, cz) = c.cell;
+            let neighbor = |dx: isize, dy: isize, dz: isize| -> Option<(usize, usize, usize)> {
+                let (nx, ny, nz) = (cx as isize + dx, cy as isize + dy, cz as isize + dz);
+                (nx >= 0 && ny >= 0 && nz >= 0)
+                    .then_some((nx as usize, ny as usize, nz as usize))
+                    .filter(|&(a, b, c)| a < ncx && b < ncy && c < ncz)
+            };
+            let me = c.dominant.id();
+            let deltas: [(isize, isize, isize); 6] =
+                [(-1, 0, 0), (1, 0, 0), (0, -1, 0), (0, 1, 0), (0, 0, -1), (0, 0, 1)];
+            if deltas.iter().any(|&(dx, dy, dz)| {
+                neighbor(dx, dy, dz)
+                    .and_then(|n| dom.get(&n))
+                    .is_some_and(|&d| d != me)
+            }) {
+                out.push(c.cell);
+            }
+        }
+        out
+    }
+
+    /// Cross-run diff over a box: this engine is side A, `other` side B
+    /// (each opened through the generational catalog — `open_run` with
+    /// any [`RunSelector`]). Compares fitted type/error maps point by
+    /// point; deltas accumulate in point-id order (thread invariant).
+    pub fn diff_run(&self, other: &QueryEngine, q: &BoxQuery) -> Result<RunDiff> {
+        let dims = self.dims();
+        if other.dims() != dims {
+            return Err(PdfflowError::InvalidArg(format!(
+                "diff across different cubes: {}x{}x{} vs {}x{}x{}",
+                dims.nx,
+                dims.ny,
+                dims.nz,
+                other.dims().nx,
+                other.dims().ny,
+                other.dims().nz
+            )));
+        }
+        let grid = self.spatial_index().grid();
+        let a = self.box_records(q)?;
+        let b = other.box_records(q)?;
+        let mut d = RunDiff {
+            n_compared: 0,
+            only_a: 0,
+            only_b: 0,
+            type_changed: 0,
+            type_counts_a: [0; 10],
+            type_counts_b: [0; 10],
+            err_delta_sum: 0.0,
+            max_err_delta: 0.0,
+            changed_cells: Vec::new(),
+            grid,
+        };
+        let mut changed: BTreeSet<usize> = BTreeSet::new();
+        let (mut i, mut j) = (0usize, 0usize);
+        // Both sides are in ascending point-id order: a linear merge join.
+        while i < a.len() && j < b.len() {
+            match a[i].point.cmp(&b[j].point) {
+                std::cmp::Ordering::Less => {
+                    d.only_a += 1;
+                    i += 1;
+                }
+                std::cmp::Ordering::Greater => {
+                    d.only_b += 1;
+                    j += 1;
+                }
+                std::cmp::Ordering::Equal => {
+                    let (ra, rb) = (a[i], b[j]);
+                    d.n_compared += 1;
+                    d.type_counts_a[ra.dist.id()] += 1;
+                    d.type_counts_b[rb.dist.id()] += 1;
+                    let delta = (ra.error - rb.error).abs();
+                    d.err_delta_sum += delta as f64;
+                    d.max_err_delta = d.max_err_delta.max(delta);
+                    if ra.dist != rb.dist {
+                        d.type_changed += 1;
+                        let (x, y, z) = dims.coords(ra.point);
+                        changed.insert(grid.cell_index(grid.cell_of(x, y, z)));
+                    }
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        d.only_a += a.len() - i;
+        d.only_b += b.len() - j;
+        d.changed_cells = changed.into_iter().map(|idx| grid.cell_at(idx)).collect();
+        Ok(d)
     }
 
     /// Density of a stored PDF at `x` (the paper's §1 deliverable shape).

@@ -17,7 +17,8 @@
 //!   bound — the caller gets a fast, explicit signal to back off, and
 //!   latency of admitted requests stays bounded by design.
 //!
-//! Every request is classified (point / region / analytic) and metered:
+//! Every request is classified (point / region / analytic, plus the
+//! spatial box / radius / knn / diff classes) and metered:
 //! admitted, completed, shed, error counts plus latency and queue-wait
 //! sums/maxima per class, and the peak in-flight / queued levels ever
 //! observed — the counters a load balancer or autoscaler would watch.
@@ -33,6 +34,7 @@ use std::time::Instant;
 
 use crate::cube::PointId;
 use crate::pdfstore::{PdfRecord, QueryEngine, RegionQuery, RegionSummary};
+use crate::spatial::{BoxQuery, KnnQuery, RadiusQuery, RunDiff};
 use crate::util::prng::Rng;
 use crate::{PdfflowError, Result};
 
@@ -64,6 +66,15 @@ pub enum Request {
     Region(RegionQuery),
     /// Mean quantile-`p` surface over a region (the heaviest class).
     QuantileMean(RegionQuery, f64),
+    /// 3D box summary through the spatial tier.
+    Box(BoxQuery),
+    /// Records within a Euclidean radius of a point.
+    Radius(RadiusQuery),
+    /// k nearest stored records around a point.
+    Knn(KnnQuery),
+    /// Cross-run type/error diff over a box (needs a diff engine —
+    /// [`ServeFront::with_diff`]).
+    DiffRun(BoxQuery),
 }
 
 /// The matching replies.
@@ -72,6 +83,10 @@ pub enum Reply {
     Point(PdfRecord),
     Region(RegionSummary),
     QuantileMean(f64),
+    Box(RegionSummary),
+    Radius(Vec<PdfRecord>),
+    Knn(Vec<PdfRecord>),
+    DiffRun(RunDiff),
 }
 
 /// Request classes metered independently (their costs differ by orders
@@ -81,16 +96,32 @@ pub enum Class {
     Point = 0,
     Region = 1,
     Analytic = 2,
+    Box = 3,
+    Radius = 4,
+    Knn = 5,
+    Diff = 6,
 }
 
 impl Class {
-    pub const ALL: [Class; 3] = [Class::Point, Class::Region, Class::Analytic];
+    pub const ALL: [Class; 7] = [
+        Class::Point,
+        Class::Region,
+        Class::Analytic,
+        Class::Box,
+        Class::Radius,
+        Class::Knn,
+        Class::Diff,
+    ];
 
     pub fn name(self) -> &'static str {
         match self {
             Class::Point => "point",
             Class::Region => "region",
             Class::Analytic => "analytic",
+            Class::Box => "box",
+            Class::Radius => "radius",
+            Class::Knn => "knn",
+            Class::Diff => "diff",
         }
     }
 }
@@ -101,6 +132,10 @@ impl Request {
             Request::Point(_) => Class::Point,
             Request::Region(_) => Class::Region,
             Request::QuantileMean(_, _) => Class::Analytic,
+            Request::Box(_) => Class::Box,
+            Request::Radius(_) => Class::Radius,
+            Request::Knn(_) => Class::Knn,
+            Request::DiffRun(_) => Class::Diff,
         }
     }
 }
@@ -152,6 +187,10 @@ pub struct ServeMetrics {
     pub point: ClassMetrics,
     pub region: ClassMetrics,
     pub analytic: ClassMetrics,
+    pub spatial_box: ClassMetrics,
+    pub radius: ClassMetrics,
+    pub knn: ClassMetrics,
+    pub diff: ClassMetrics,
     /// Most queries ever executing at once (must never exceed
     /// `max_in_flight` — the admission contract).
     pub peak_in_flight: usize,
@@ -166,15 +205,19 @@ impl ServeMetrics {
             Class::Point => &self.point,
             Class::Region => &self.region,
             Class::Analytic => &self.analytic,
+            Class::Box => &self.spatial_box,
+            Class::Radius => &self.radius,
+            Class::Knn => &self.knn,
+            Class::Diff => &self.diff,
         }
     }
 
     pub fn total_completed(&self) -> u64 {
-        self.point.completed + self.region.completed + self.analytic.completed
+        Class::ALL.iter().map(|&c| self.class(c).completed).sum()
     }
 
     pub fn total_shed(&self) -> u64 {
-        self.point.shed + self.region.shed + self.analytic.shed
+        Class::ALL.iter().map(|&c| self.class(c).shed).sum()
     }
 }
 
@@ -191,16 +234,19 @@ struct Gate {
 /// thread.
 pub struct ServeFront {
     engine: QueryEngine,
+    /// Side-B engine for cross-run diff requests ([`Self::with_diff`]).
+    diff: Option<QueryEngine>,
     opts: ServeOptions,
     gate: Mutex<Gate>,
     cv: Condvar,
-    classes: [ClassCounters; 3],
+    classes: [ClassCounters; 7],
 }
 
 impl ServeFront {
     pub fn new(engine: QueryEngine, opts: ServeOptions) -> ServeFront {
         ServeFront {
             engine,
+            diff: None,
             opts: ServeOptions {
                 max_in_flight: opts.max_in_flight.max(1),
                 queue_depth: opts.queue_depth,
@@ -214,6 +260,14 @@ impl ServeFront {
             cv: Condvar::new(),
             classes: Default::default(),
         }
+    }
+
+    /// Attach the side-B engine that [`Request::DiffRun`] compares
+    /// against (typically another run of the same store, selected via
+    /// the generational catalog).
+    pub fn with_diff(mut self, diff: QueryEngine) -> ServeFront {
+        self.diff = Some(diff);
+        self
     }
 
     pub fn engine(&self) -> &QueryEngine {
@@ -260,6 +314,15 @@ impl ServeFront {
             Request::QuantileMean(q, p) => {
                 self.engine.region_quantile_mean(&q, p).map(Reply::QuantileMean)
             }
+            Request::Box(q) => self.engine.box_summary(&q).map(Reply::Box),
+            Request::Radius(q) => self.engine.radius_records(&q).map(Reply::Radius),
+            Request::Knn(q) => self.engine.knn(&q).map(Reply::Knn),
+            Request::DiffRun(q) => match &self.diff {
+                Some(other) => self.engine.diff_run(other, &q).map(Reply::DiffRun),
+                None => Err(PdfflowError::InvalidArg(
+                    "diff requests need a diff engine (ServeFront::with_diff)".into(),
+                )),
+            },
         };
 
         // Release the slot before metering, so a successor is admitted
@@ -301,6 +364,10 @@ impl ServeFront {
             point: snap(&self.classes[0]),
             region: snap(&self.classes[1]),
             analytic: snap(&self.classes[2]),
+            spatial_box: snap(&self.classes[3]),
+            radius: snap(&self.classes[4]),
+            knn: snap(&self.classes[5]),
+            diff: snap(&self.classes[6]),
             peak_in_flight: g.peak_in_flight,
             peak_queued: g.peak_queued,
         }
@@ -320,14 +387,16 @@ pub struct LoadReport {
 }
 
 /// Deterministic request mix for one client: mostly points, some region
-/// summaries, a few quantile surfaces — the north-star read blend.
+/// summaries, a few quantile surfaces, and a sprinkle of spatial box /
+/// radius / kNN queries — the north-star read blend. (Diff requests are
+/// not in the generic mix; they need a second run attached.)
 fn next_request(rng: &mut Rng, front: &ServeFront, slices: &[usize]) -> Request {
     let dims = front.engine().dims();
     let z = slices[rng.below(slices.len())];
     let slice_pts = dims.slice_points() as u64;
-    match rng.below(10) {
-        0..=7 => Request::Point(PointId(z as u64 * slice_pts + rng.below(slice_pts as usize) as u64)),
-        8 => {
+    match rng.below(16) {
+        0..=9 => Request::Point(PointId(z as u64 * slice_pts + rng.below(slice_pts as usize) as u64)),
+        10 | 11 => {
             let x0 = rng.below((dims.nx / 2).max(1));
             let y0 = rng.below((dims.ny / 2).max(1));
             Request::Region(RegionQuery {
@@ -338,7 +407,7 @@ fn next_request(rng: &mut Rng, front: &ServeFront, slices: &[usize]) -> Request 
                 y1: (y0 + dims.ny / 2).min(dims.ny - 1),
             })
         }
-        _ => {
+        12 => {
             let y0 = rng.below((dims.ny / 2).max(1));
             Request::QuantileMean(
                 RegionQuery {
@@ -351,6 +420,30 @@ fn next_request(rng: &mut Rng, front: &ServeFront, slices: &[usize]) -> Request 
                 0.5,
             )
         }
+        13 => {
+            let x0 = rng.below((dims.nx / 2).max(1));
+            let y0 = rng.below((dims.ny / 2).max(1));
+            Request::Box(BoxQuery {
+                x0,
+                x1: (x0 + dims.nx / 2).min(dims.nx - 1),
+                y0,
+                y1: (y0 + dims.ny / 2).min(dims.ny - 1),
+                z0: z.saturating_sub(1),
+                z1: (z + 1).min(dims.nz - 1),
+            })
+        }
+        14 => Request::Radius(RadiusQuery {
+            x: rng.below(dims.nx),
+            y: rng.below(dims.ny),
+            z,
+            radius: 1.0 + rng.below(4) as f64,
+        }),
+        _ => Request::Knn(KnnQuery {
+            x: rng.below(dims.nx),
+            y: rng.below(dims.ny),
+            z,
+            k: 1 + rng.below(16),
+        }),
     }
 }
 
@@ -412,7 +505,14 @@ mod tests {
         let q = RegionQuery { z: 0, x0: 0, x1: 1, y0: 0, y1: 1 };
         assert_eq!(Request::Region(q).class(), Class::Region);
         assert_eq!(Request::QuantileMean(q, 0.5).class(), Class::Analytic);
-        for c in Class::ALL {
+        let b = BoxQuery { x0: 0, x1: 1, y0: 0, y1: 1, z0: 0, z1: 0 };
+        assert_eq!(Request::Box(b).class(), Class::Box);
+        assert_eq!(Request::DiffRun(b).class(), Class::Diff);
+        let r = RadiusQuery { x: 0, y: 0, z: 0, radius: 1.0 };
+        assert_eq!(Request::Radius(r).class(), Class::Radius);
+        assert_eq!(Request::Knn(KnnQuery { x: 0, y: 0, z: 0, k: 3 }).class(), Class::Knn);
+        for (i, c) in Class::ALL.into_iter().enumerate() {
+            assert_eq!(c as usize, i, "class discriminants index the counter array");
             assert!(!c.name().is_empty());
         }
     }

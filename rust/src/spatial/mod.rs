@@ -1,0 +1,351 @@
+//! Spatial query tier over the fitted-PDF store (ROADMAP: "scenario"
+//! queries beyond per-point PDFs).
+//!
+//! The store persists one [`PdfRecord`] per cube point, window by
+//! window; this module adds the spatial vocabulary on top:
+//!
+//! * [`BoxQuery`] — true 3D axis-aligned boxes (inclusive bounds).
+//! * [`RadiusQuery`] / [`KnnQuery`] — Euclidean neighborhoods around a
+//!   point, distances in point-index units. Squared distances are
+//!   exact `u64` integers, so ordering never depends on float rounding;
+//!   kNN ties are broken by ascending [`PointId`](crate::cube::PointId).
+//! * [`GridIndex`] — a uniform [`CellGrid`] index mapping cells to the
+//!   resolved `(slice, window, line-range)` parts that overlap them,
+//!   the pruning structure behind the
+//!   [`QueryEngine`](crate::pdfstore::QueryEngine) spatial entry points
+//!   (grid partitioning as in SedonaSpark-style spatial datasets).
+//! * [`SpatialAggregate`] — per-cell aggregation of fitted parameters:
+//!   dominant [`DistType`], mean Eq. 5 error, and the type-transition
+//!   *boundary cells* where the dominant type changes between
+//!   neighboring cells.
+//! * [`RunDiff`] — a cross-run comparison of two runs' type/error maps
+//!   over a region (both sides selected through the generational
+//!   catalog via [`RunSelector`](crate::pdfstore::RunSelector)).
+//!
+//! **Determinism contract.** Every aggregate defined here is
+//! bit-identical at any thread count *and* bit-comparable against the
+//! brute-force [`oracle`]: per-cell and per-region error sums are
+//! defined as the window-order fold of within-window point-order
+//! partial sums (windows ordered by `(z, y0)` — which is first-point-id
+//! order), and cross-run error deltas accumulate in point-id order.
+//! The engine and the oracle both implement this definition, so the
+//! oracle-differential suite (`tests/spatial_oracle.rs`) can assert
+//! exact equality, not tolerance.
+
+pub mod oracle;
+
+use crate::cube::{CellGrid, CubeDims};
+use crate::pdfstore::{PdfStore, SlicePart};
+use crate::stats::DistType;
+
+/// Inclusive 3D axis-aligned box. An inverted axis (`x1 < x0`, …)
+/// makes the box empty — useful for "no match" sentinels and exercised
+/// by the oracle suite's edge cases.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BoxQuery {
+    pub x0: usize,
+    pub x1: usize,
+    pub y0: usize,
+    pub y1: usize,
+    pub z0: usize,
+    pub z1: usize,
+}
+
+impl BoxQuery {
+    /// The whole cube.
+    pub fn whole(dims: &CubeDims) -> BoxQuery {
+        BoxQuery {
+            x0: 0,
+            x1: dims.nx.saturating_sub(1),
+            y0: 0,
+            y1: dims.ny.saturating_sub(1),
+            z0: 0,
+            z1: dims.nz.saturating_sub(1),
+        }
+    }
+
+    /// A single-point box.
+    pub fn point(x: usize, y: usize, z: usize) -> BoxQuery {
+        BoxQuery { x0: x, x1: x, y0: y, y1: y, z0: z, z1: z }
+    }
+
+    /// The Chebyshev ball of half-width `half` around a point, clamped
+    /// to the cube (the kNN search frontier and radius bounding box).
+    pub fn around(dims: &CubeDims, (x, y, z): (usize, usize, usize), half: usize) -> BoxQuery {
+        BoxQuery {
+            x0: x.saturating_sub(half),
+            x1: (x + half).min(dims.nx.saturating_sub(1)),
+            y0: y.saturating_sub(half),
+            y1: (y + half).min(dims.ny.saturating_sub(1)),
+            z0: z.saturating_sub(half),
+            z1: (z + half).min(dims.nz.saturating_sub(1)),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.x1 < self.x0 || self.y1 < self.y0 || self.z1 < self.z0
+    }
+
+    pub fn n_points(&self) -> usize {
+        if self.is_empty() {
+            return 0;
+        }
+        (self.x1 - self.x0 + 1) * (self.y1 - self.y0 + 1) * (self.z1 - self.z0 + 1)
+    }
+
+    pub fn contains(&self, x: usize, y: usize, z: usize) -> bool {
+        x >= self.x0
+            && x <= self.x1
+            && y >= self.y0
+            && y <= self.y1
+            && z >= self.z0
+            && z <= self.z1
+    }
+}
+
+/// Euclidean ball around a grid point; `radius` in point-index units.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RadiusQuery {
+    pub x: usize,
+    pub y: usize,
+    pub z: usize,
+    pub radius: f64,
+}
+
+impl RadiusQuery {
+    /// The clamped bounding box of the ball: any cube point outside it
+    /// is farther than `radius` on some axis.
+    pub fn bounding_box(&self, dims: &CubeDims) -> BoxQuery {
+        if self.radius < 0.0 {
+            // Empty sentinel (inverted x axis).
+            return BoxQuery { x0: 1, x1: 0, y0: 0, y1: 0, z0: 0, z1: 0 };
+        }
+        BoxQuery::around(dims, (self.x, self.y, self.z), self.radius.floor() as usize)
+    }
+}
+
+/// k nearest stored records around a grid point, ordered by
+/// `(squared distance, PointId)` — exact integers, so the order (and
+/// every tie) is deterministic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KnnQuery {
+    pub x: usize,
+    pub y: usize,
+    pub z: usize,
+    pub k: usize,
+}
+
+/// Exact squared Euclidean distance between two grid points.
+pub fn dist2(a: (usize, usize, usize), b: (usize, usize, usize)) -> u64 {
+    let d = |p: usize, q: usize| {
+        let d = p.abs_diff(q) as u64;
+        d * d
+    };
+    d(a.0, b.0) + d(a.1, b.1) + d(a.2, b.2)
+}
+
+/// Uniform grid index over a store's resolved view: each (cy, cz) cell
+/// row maps to the resolved windows overlapping it. Windows span every
+/// x of their lines, so the x axis of the 3D grid is resolved per
+/// record during the scan; the index prunes on (y, z) — the axes the
+/// on-disk layout actually partitions.
+pub struct GridIndex {
+    grid: CellGrid,
+    /// Bucket per (cz * ncy + cy): indices into `parts`, ascending.
+    buckets: Vec<Vec<u32>>,
+    /// Every resolved window, ascending `(z, y0)` — first-point-id
+    /// order, the deterministic merge order for every spatial scan.
+    parts: Vec<(usize, SlicePart)>,
+}
+
+impl GridIndex {
+    /// Build the index over every resolved window of the open run.
+    pub fn build(store: &PdfStore, grid: CellGrid) -> GridIndex {
+        let ncy = grid.ncy();
+        let mut buckets = vec![Vec::new(); ncy * grid.ncz()];
+        let mut parts: Vec<(usize, SlicePart)> = Vec::new();
+        for z in store.slices() {
+            let cz = z / grid.sz;
+            for p in store.slice_parts(z).unwrap_or(&[]) {
+                let idx = parts.len() as u32;
+                parts.push((z, *p));
+                let y1 = (p.entry.y0 + p.entry.lines - 1) as usize;
+                for cy in p.entry.y0 as usize / grid.sy..=y1 / grid.sy {
+                    buckets[cz * ncy + cy].push(idx);
+                }
+            }
+        }
+        GridIndex { grid, buckets, parts }
+    }
+
+    pub fn grid(&self) -> CellGrid {
+        self.grid
+    }
+
+    /// Indexed windows (the whole resolved view).
+    pub fn n_parts(&self) -> usize {
+        self.parts.len()
+    }
+
+    /// Candidate windows for a box: union of the overlapped cell rows'
+    /// buckets, exact-filtered by (z, y) overlap, ascending `(z, y0)`.
+    pub fn parts_for_box(&self, q: &BoxQuery) -> Vec<(usize, SlicePart)> {
+        let dims = self.grid.dims;
+        if q.is_empty() || q.y0 >= dims.ny || q.z0 >= dims.nz || dims.ny == 0 {
+            return Vec::new();
+        }
+        let y1 = q.y1.min(dims.ny - 1);
+        let z1 = q.z1.min(dims.nz - 1);
+        let ncy = self.grid.ncy();
+        let mut idxs: Vec<u32> = Vec::new();
+        for cz in q.z0 / self.grid.sz..=z1 / self.grid.sz {
+            for cy in q.y0 / self.grid.sy..=y1 / self.grid.sy {
+                idxs.extend(&self.buckets[cz * ncy + cy]);
+            }
+        }
+        idxs.sort_unstable();
+        idxs.dedup();
+        idxs.into_iter()
+            .map(|i| self.parts[i as usize])
+            .filter(|(z, p)| {
+                let (lo, hi) = (p.entry.y0 as usize, (p.entry.y0 + p.entry.lines) as usize);
+                *z >= q.z0 && *z <= z1 && hi > q.y0 && lo <= y1
+            })
+            .collect()
+    }
+}
+
+/// Aggregated fit outcomes of one grid cell (intersected with the
+/// query box: edge cells summarize only their in-box points).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CellSummary {
+    /// Cell coordinates `(cx, cy, cz)`.
+    pub cell: (usize, usize, usize),
+    pub n_points: usize,
+    /// Count per `DistType` id.
+    pub type_counts: [u64; 10],
+    /// Most frequent type (ties → lowest type id).
+    pub dominant: DistType,
+    /// Eq. 5 error sum in the documented deterministic order (window-
+    /// order fold of within-window partial sums; see module docs).
+    pub err_sum: f64,
+    pub max_error: f32,
+}
+
+impl CellSummary {
+    pub fn mean_error(&self) -> f64 {
+        if self.n_points == 0 {
+            0.0
+        } else {
+            self.err_sum / self.n_points as f64
+        }
+    }
+}
+
+/// Result of a per-cell spatial aggregation over a box.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SpatialAggregate {
+    pub grid: CellGrid,
+    /// Non-empty cells, ascending flat cell index.
+    pub cells: Vec<CellSummary>,
+    /// Type-transition boundary cells: non-empty cells with at least
+    /// one non-empty 6-neighbor of a different dominant type (both
+    /// sides of a transition are boundary cells). Ascending cell index.
+    pub boundary: Vec<(usize, usize, usize)>,
+}
+
+/// The dominant type of a count vector: max count, ties to lowest id.
+pub fn dominant_type(counts: &[u64; 10]) -> DistType {
+    let mut best = 0usize;
+    for (id, &n) in counts.iter().enumerate() {
+        if n > counts[best] {
+            best = id;
+        }
+    }
+    DistType::from_id(best).expect("type ids 0..10 are always valid")
+}
+
+/// Cross-run comparison of two runs' fitted type/error maps over a
+/// box. "Compared" points are covered by both runs' resolved views;
+/// coverage differences are counted, not an error — two runs may have
+/// persisted different slices or line ranges.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunDiff {
+    /// Points present in both runs inside the box.
+    pub n_compared: usize,
+    /// In-box points covered by only one side.
+    pub only_a: usize,
+    pub only_b: usize,
+    /// Compared points whose fitted `DistType` differs.
+    pub type_changed: usize,
+    /// Type histograms of the compared points, per side.
+    pub type_counts_a: [u64; 10],
+    pub type_counts_b: [u64; 10],
+    /// Point-id-order sum of `|err_a − err_b|` over compared points.
+    pub err_delta_sum: f64,
+    pub max_err_delta: f32,
+    /// Grid cells holding at least one type-changed point, ascending
+    /// flat cell index of `grid`.
+    pub changed_cells: Vec<(usize, usize, usize)>,
+    /// The grid `changed_cells` refers to.
+    pub grid: CellGrid,
+}
+
+impl RunDiff {
+    pub fn mean_err_delta(&self) -> f64 {
+        if self.n_compared == 0 {
+            0.0
+        } else {
+            self.err_delta_sum / self.n_compared as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn box_geometry() {
+        let dims = CubeDims::new(8, 6, 4);
+        let whole = BoxQuery::whole(&dims);
+        assert_eq!(whole.n_points(), 8 * 6 * 4);
+        assert!(whole.contains(7, 5, 3));
+        let p = BoxQuery::point(2, 3, 1);
+        assert_eq!(p.n_points(), 1);
+        assert!(p.contains(2, 3, 1) && !p.contains(2, 3, 2));
+        let empty = BoxQuery { x0: 3, x1: 2, ..whole };
+        assert!(empty.is_empty());
+        assert_eq!(empty.n_points(), 0);
+        // around() clamps at the cube edge.
+        let b = BoxQuery::around(&dims, (0, 5, 1), 2);
+        assert_eq!(b, BoxQuery { x0: 0, x1: 2, y0: 3, y1: 5, z0: 0, z1: 3 });
+    }
+
+    #[test]
+    fn squared_distances_are_exact() {
+        assert_eq!(dist2((0, 0, 0), (3, 4, 0)), 25);
+        assert_eq!(dist2((5, 2, 1), (2, 2, 1)), 9);
+        assert_eq!(dist2((1, 1, 1), (1, 1, 1)), 0);
+        // Symmetric in both argument orders.
+        assert_eq!(dist2((9, 0, 3), (1, 7, 0)), dist2((1, 7, 0), (9, 0, 3)));
+    }
+
+    #[test]
+    fn radius_bounding_box() {
+        let dims = CubeDims::new(10, 10, 10);
+        let q = RadiusQuery { x: 5, y: 5, z: 5, radius: 2.9 };
+        assert_eq!(q.bounding_box(&dims), BoxQuery::around(&dims, (5, 5, 5), 2));
+        let none = RadiusQuery { x: 5, y: 5, z: 5, radius: -1.0 };
+        assert!(none.bounding_box(&dims).is_empty());
+    }
+
+    #[test]
+    fn dominant_breaks_ties_by_lowest_id() {
+        let mut counts = [0u64; 10];
+        counts[3] = 5;
+        counts[7] = 5;
+        assert_eq!(dominant_type(&counts), DistType::from_id(3).unwrap());
+        assert_eq!(dominant_type(&[0; 10]), DistType::from_id(0).unwrap());
+    }
+}

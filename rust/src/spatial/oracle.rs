@@ -1,0 +1,283 @@
+//! Brute-force reference implementations of every spatial query.
+//!
+//! Each function answers by exhaustively scanning **every** resolved
+//! window of the store — no grid index, no block cache, no executor —
+//! so it is trivially correct and independent of the fast paths in
+//! [`QueryEngine`](crate::pdfstore::QueryEngine). The oracle-
+//! differential suite (`tests/spatial_oracle.rs`) asserts the indexed
+//! engine answers are *bit-identical* to these on randomized stores.
+//!
+//! The only shared contract is the deterministic summation order
+//! documented in [`crate::spatial`]: error sums fold per-window
+//! record-order partials in `(z, y0)` window order, and diff deltas
+//! accumulate in point-id order. Both sides implement that definition
+//! with their own loop structure.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::cube::CellGrid;
+use crate::pdfstore::query::{RegionSummary, ERROR_HIST_BINS};
+use crate::pdfstore::{PdfRecord, PdfStore, SlicePart};
+use crate::stats::PENALTY_ERROR;
+use crate::Result;
+
+use super::{
+    dist2, dominant_type, BoxQuery, CellSummary, KnnQuery, RadiusQuery, RunDiff, SpatialAggregate,
+};
+
+/// Every resolved window of the store, ascending `(z, y0)` — the
+/// canonical deterministic scan order.
+fn all_windows(store: &PdfStore) -> Vec<(usize, SlicePart)> {
+    let mut out = Vec::new();
+    for z in store.slices() {
+        for p in store.slice_parts(z).unwrap_or(&[]) {
+            out.push((z, *p));
+        }
+    }
+    out
+}
+
+/// Full-scan box query: all records inside the box, point-id order.
+pub fn box_records(store: &PdfStore, q: &BoxQuery) -> Result<Vec<PdfRecord>> {
+    let dims = store.dims();
+    let mut out = Vec::new();
+    for (_, p) in all_windows(store) {
+        for rec in store.segment(p.seg).read_window(p.win)? {
+            let (x, y, z) = dims.coords(rec.point);
+            if q.contains(x, y, z) {
+                out.push(rec);
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Full-scan analytical box summary (same shape as a 2D region
+/// summary, computed over the 3D box).
+pub fn box_summary(store: &PdfStore, q: &BoxQuery) -> Result<RegionSummary> {
+    let dims = store.dims();
+    let mut s = RegionSummary {
+        n_points: 0,
+        avg_error: 0.0,
+        max_error: 0.0,
+        type_counts: [0; 10],
+        error_hist: [0; ERROR_HIST_BINS],
+    };
+    let mut err_sum = 0.0f64;
+    for (_, p) in all_windows(store) {
+        // Per-window partial, folded in window order (module contract).
+        let mut win_sum = 0.0f64;
+        for rec in store.segment(p.seg).read_window(p.win)? {
+            let (x, y, z) = dims.coords(rec.point);
+            if !q.contains(x, y, z) {
+                continue;
+            }
+            s.n_points += 1;
+            let e = rec.error as f64;
+            win_sum += e;
+            s.max_error = s.max_error.max(e);
+            s.type_counts[rec.dist.id()] += 1;
+            let bin = ((e / PENALTY_ERROR) * ERROR_HIST_BINS as f64).floor();
+            s.error_hist[(bin.max(0.0) as usize).min(ERROR_HIST_BINS - 1)] += 1;
+        }
+        err_sum += win_sum;
+    }
+    if s.n_points > 0 {
+        s.avg_error = err_sum / s.n_points as f64;
+    }
+    Ok(s)
+}
+
+/// Full-scan radius query: all records within Euclidean `radius` of the
+/// center, point-id order. The predicate is the exact integer squared
+/// distance compared against `radius²` in f64 — identical on both the
+/// oracle and the indexed path.
+pub fn radius_records(store: &PdfStore, q: &RadiusQuery) -> Result<Vec<PdfRecord>> {
+    if q.radius < 0.0 {
+        return Ok(Vec::new());
+    }
+    let dims = store.dims();
+    let r2 = q.radius * q.radius;
+    let center = (q.x, q.y, q.z);
+    let mut out = Vec::new();
+    for (_, p) in all_windows(store) {
+        for rec in store.segment(p.seg).read_window(p.win)? {
+            if dist2(dims.coords(rec.point), center) as f64 <= r2 {
+                out.push(rec);
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Full-scan k-nearest-neighbors: every stored record ranked by
+/// `(squared distance, PointId)`, truncated to `k`.
+pub fn knn(store: &PdfStore, q: &KnnQuery) -> Result<Vec<PdfRecord>> {
+    let dims = store.dims();
+    let center = (q.x, q.y, q.z);
+    let mut all = Vec::new();
+    for (_, p) in all_windows(store) {
+        all.extend(store.segment(p.seg).read_window(p.win)?);
+    }
+    all.sort_unstable_by_key(|rec| (dist2(dims.coords(rec.point), center), rec.point));
+    all.truncate(q.k);
+    Ok(all)
+}
+
+/// Full-scan per-cell aggregation over a box.
+pub fn cell_aggregate(store: &PdfStore, grid: CellGrid, q: &BoxQuery) -> Result<SpatialAggregate> {
+    let dims = store.dims();
+    struct Acc {
+        n: usize,
+        types: [u64; 10],
+        err_sum: f64,
+        max: f32,
+    }
+    let mut cells: BTreeMap<usize, Acc> = BTreeMap::new();
+    for (_, p) in all_windows(store) {
+        // Window-order fold of per-window partials (module contract).
+        let mut partial: BTreeMap<usize, Acc> = BTreeMap::new();
+        for rec in store.segment(p.seg).read_window(p.win)? {
+            let (x, y, z) = dims.coords(rec.point);
+            if !q.contains(x, y, z) {
+                continue;
+            }
+            let idx = grid.cell_index(grid.cell_of(x, y, z));
+            let a = partial.entry(idx).or_insert(Acc {
+                n: 0,
+                types: [0; 10],
+                err_sum: 0.0,
+                max: 0.0,
+            });
+            a.n += 1;
+            a.types[rec.dist.id()] += 1;
+            a.err_sum += rec.error as f64;
+            a.max = a.max.max(rec.error);
+        }
+        for (idx, w) in partial {
+            let a = cells.entry(idx).or_insert(Acc {
+                n: 0,
+                types: [0; 10],
+                err_sum: 0.0,
+                max: 0.0,
+            });
+            a.n += w.n;
+            for i in 0..10 {
+                a.types[i] += w.types[i];
+            }
+            a.err_sum += w.err_sum;
+            a.max = a.max.max(w.max);
+        }
+    }
+    let summaries: Vec<CellSummary> = cells
+        .iter()
+        .map(|(&idx, a)| CellSummary {
+            cell: grid.cell_at(idx),
+            n_points: a.n,
+            type_counts: a.types,
+            dominant: dominant_type(&a.types),
+            err_sum: a.err_sum,
+            max_error: a.max,
+        })
+        .collect();
+    Ok(SpatialAggregate {
+        grid,
+        boundary: boundary_cells(&grid, &summaries),
+        cells: summaries,
+    })
+}
+
+/// Type-transition boundary cells of an aggregation: non-empty cells
+/// with at least one non-empty 6-neighbor of a different dominant type,
+/// ascending flat cell index.
+pub fn boundary_cells(grid: &CellGrid, cells: &[CellSummary]) -> Vec<(usize, usize, usize)> {
+    let dominant: BTreeMap<usize, u8> = cells
+        .iter()
+        .map(|c| (grid.cell_index(c.cell), c.dominant.id() as u8))
+        .collect();
+    let (ncx, ncy, ncz) = (grid.ncx(), grid.ncy(), grid.ncz());
+    let mut out = Vec::new();
+    for c in cells {
+        let (cx, cy, cz) = c.cell;
+        let mut neighbors: Vec<(usize, usize, usize)> = Vec::with_capacity(6);
+        if cx > 0 {
+            neighbors.push((cx - 1, cy, cz));
+        }
+        if cx + 1 < ncx {
+            neighbors.push((cx + 1, cy, cz));
+        }
+        if cy > 0 {
+            neighbors.push((cx, cy - 1, cz));
+        }
+        if cy + 1 < ncy {
+            neighbors.push((cx, cy + 1, cz));
+        }
+        if cz > 0 {
+            neighbors.push((cx, cy, cz - 1));
+        }
+        if cz + 1 < ncz {
+            neighbors.push((cx, cy, cz + 1));
+        }
+        let me = c.dominant.id() as u8;
+        if neighbors
+            .iter()
+            .any(|&n| dominant.get(&grid.cell_index(n)).is_some_and(|&d| d != me))
+        {
+            out.push(c.cell);
+        }
+    }
+    out
+}
+
+/// Full-scan cross-run diff: join both runs' in-box records by point
+/// id, accumulating deltas in point-id order (module contract).
+pub fn diff(
+    store_a: &PdfStore,
+    store_b: &PdfStore,
+    grid: CellGrid,
+    q: &BoxQuery,
+) -> Result<RunDiff> {
+    let collect = |store: &PdfStore| -> Result<BTreeMap<u64, PdfRecord>> {
+        Ok(box_records(store, q)?
+            .into_iter()
+            .map(|r| (r.point.0, r))
+            .collect())
+    };
+    let a = collect(store_a)?;
+    let b = collect(store_b)?;
+    let dims = store_a.dims();
+    let mut d = RunDiff {
+        n_compared: 0,
+        only_a: 0,
+        only_b: 0,
+        type_changed: 0,
+        type_counts_a: [0; 10],
+        type_counts_b: [0; 10],
+        err_delta_sum: 0.0,
+        max_err_delta: 0.0,
+        changed_cells: Vec::new(),
+        grid,
+    };
+    let mut changed: BTreeSet<usize> = BTreeSet::new();
+    for (id, ra) in &a {
+        match b.get(id) {
+            None => d.only_a += 1,
+            Some(rb) => {
+                d.n_compared += 1;
+                d.type_counts_a[ra.dist.id()] += 1;
+                d.type_counts_b[rb.dist.id()] += 1;
+                let delta = (ra.error - rb.error).abs();
+                d.err_delta_sum += delta as f64;
+                d.max_err_delta = d.max_err_delta.max(delta);
+                if ra.dist != rb.dist {
+                    d.type_changed += 1;
+                    let (x, y, z) = dims.coords(ra.point);
+                    changed.insert(grid.cell_index(grid.cell_of(x, y, z)));
+                }
+            }
+        }
+    }
+    d.only_b = b.len() - d.n_compared;
+    d.changed_cells = changed.into_iter().map(|i| grid.cell_at(i)).collect();
+    Ok(d)
+}

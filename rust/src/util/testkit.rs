@@ -42,6 +42,17 @@ fn master_seed() -> u64 {
         .unwrap_or(0xC0FFEE)
 }
 
+/// Randomized-case count for property suites: the
+/// `PDFFLOW_PROPTEST_CASES` env var when set (CI cranks it up), the
+/// suite's `default` otherwise.
+pub fn cases(default: usize) -> usize {
+    std::env::var("PDFFLOW_PROPTEST_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(default)
+}
+
 /// Assert helper returning CaseResult instead of panicking, so `check`
 /// can attach the case seed.
 #[macro_export]

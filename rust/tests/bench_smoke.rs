@@ -5,9 +5,15 @@
 //! then validate what landed through the shared
 //! `bench::validate_bench_json` checker — an empty or schema-violating
 //! rows array **fails the tier**, so the trajectory files always carry
-//! usable points. The queries record additionally carries a serving
-//! row (`mode: "serve"`): closed-loop throughput through the
-//! admission-controlled `ServeFront`. The numbers are smoke-grade (the
+//! usable points. Before rewriting, each test also rejects a
+//! `"placeholder"` profile in the committed file: zero-throughput
+//! stand-in records must never be checked in again now that real
+//! baselines exist. The queries record additionally carries a serving
+//! row (`mode: "serve"`) — closed-loop throughput through the
+//! admission-controlled `ServeFront` — and spatial rows
+//! (`mode: "spatial_box"` / `"spatial_radius"` / `"spatial_knn"`) from
+//! the grid-indexed query tier, all over **one** store build via the
+//! shared `bench::QueryStoreFixture`. The numbers are smoke-grade (the
 //! test harness runs other suites concurrently) — `cargo bench --bench
 //! pipeline/queries -- --json` rewrites the files with proper
 //! measurements — but they keep the trajectory populated on every
@@ -15,16 +21,18 @@
 
 use std::time::Instant;
 
-use pdfflow::bench::{validate_bench_json, write_bench_json, BenchRow};
+use pdfflow::bench::{
+    committed_profile, validate_bench_json, write_bench_json, BenchRow, QueryStoreFixture,
+};
 use pdfflow::cluster::{ClusterSpec, SimCluster};
 use pdfflow::config::PipelineConfig;
 use pdfflow::coordinator::{Method, Pipeline, TypeSet};
-use pdfflow::cube::{CubeDims, PointId};
+use pdfflow::cube::CubeDims;
 use pdfflow::datagen::{DatasetSpec, SyntheticDataset};
 use pdfflow::executor::Executor;
-use pdfflow::pdfstore::{QueryEngine, QueryOptions};
 use pdfflow::runtime::{make_backend, Backend, BackendKind, BackendOptions};
 use pdfflow::serve::{closed_loop, ServeFront, ServeOptions};
+use pdfflow::spatial::{BoxQuery, KnnQuery, RadiusQuery};
 use pdfflow::util::json::Json;
 use pdfflow::util::prng::Rng;
 
@@ -43,6 +51,19 @@ fn native_backend() -> Box<dyn Backend> {
     .expect("backend")
 }
 
+/// The committed `BENCH_<name>.json` must never be a placeholder again:
+/// this tier records real baselines on every run, so a zero-throughput
+/// stand-in in the tree means someone reverted the trajectory.
+fn reject_committed_placeholder(name: &str) {
+    if let Some(profile) = committed_profile(name) {
+        assert_ne!(
+            profile, "placeholder",
+            "committed BENCH_{name}.json carries a placeholder profile; \
+             re-record it (cargo test, or cargo bench --bench {name} -- --json)"
+        );
+    }
+}
+
 /// Shared-schema validation of a written record; returns the rows.
 /// `validate_bench_json` rejects empty rows and malformed fields, so a
 /// bench that recorded nothing usable fails loudly here.
@@ -52,6 +73,7 @@ fn check_schema(name: &str) -> Vec<Json> {
 
 #[test]
 fn records_pipeline_bench_json() {
+    reject_committed_placeholder("pipeline");
     let root = std::env::temp_dir().join(format!("pdfflow-benchsmoke-p-{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&root);
     let mut spec = DatasetSpec::tiny();
@@ -117,35 +139,16 @@ fn records_pipeline_bench_json() {
 
 #[test]
 fn records_queries_bench_json() {
-    let root = std::env::temp_dir().join(format!("pdfflow-benchsmoke-q-{}", std::process::id()));
-    let _ = std::fs::remove_dir_all(&root);
-    let store_dir = root.join("store");
-    let mut spec = DatasetSpec::tiny();
-    spec.dims = CubeDims::new(32, 16, 4);
-    spec.seed = 20180599;
-    let ds = SyntheticDataset::generate(&spec, root.join("data")).expect("dataset");
-    let backend = native_backend();
-    let cfg = PipelineConfig {
-        batch: 64,
-        window_lines: 4,
-        store_dir: Some(store_dir.to_string_lossy().into_owned()),
-        ..PipelineConfig::default()
-    };
-    let mut pipe = Pipeline::new(
-        &ds,
-        backend.as_ref(),
-        SimCluster::new(ClusterSpec::lncc()),
-        cfg,
-    );
-    pipe.run_slice(Method::Baseline, 2, TypeSet::Four).expect("persist");
-
-    let engine = QueryEngine::open(&store_dir, QueryOptions::default()).expect("open store");
-    let slice_pts = spec.dims.slice_points() as u64;
+    reject_committed_placeholder("queries");
+    // One store build (dataset + persist phase) feeds the point, serve
+    // and spatial passes below.
+    let fixture =
+        QueryStoreFixture::build("benchsmoke-q", CubeDims::new(32, 16, 4), 20180599, 4, &[2])
+            .expect("store build");
+    let dims = fixture.dims();
+    let engine = fixture.engine(0).expect("open store");
     let n_queries = 3_000usize;
-    let mut rng = Rng::new(7);
-    let ids: Vec<PointId> = (0..n_queries)
-        .map(|_| PointId(2 * slice_pts + rng.below(slice_pts as usize) as u64))
-        .collect();
+    let ids = fixture.point_ids(n_queries, 7);
 
     let mut rows: Vec<BenchRow> = THREADS
         .iter()
@@ -153,7 +156,7 @@ fn records_queries_bench_json() {
             engine.clear_cache();
             let exec = Executor::new(threads);
             let chunk = ids.len().div_ceil(threads);
-            let chunks: Vec<Vec<PointId>> = ids.chunks(chunk).map(|c| c.to_vec()).collect();
+            let chunks: Vec<Vec<_>> = ids.chunks(chunk).map(|c| c.to_vec()).collect();
             // One measurement pass: (xor-of-ids checksum, queries/s).
             let pass = || -> (u64, f64) {
                 let t0 = Instant::now();
@@ -180,11 +183,63 @@ fn records_queries_bench_json() {
         })
         .collect();
 
+    // Spatial rows: grid-index-pruned box summaries, radius scans and
+    // kNN lookups over the same store. Smoke-grade but real — the rows
+    // must clear the schema's throughput > 0 bar like everything else.
+    let n_spatial = 300usize;
+    let mut rng = Rng::new(23);
+    let t0 = Instant::now();
+    let mut pts = 0usize;
+    for _ in 0..n_spatial {
+        let c = (rng.below(dims.nx), rng.below(dims.ny), rng.below(dims.nz));
+        let q = BoxQuery::around(&dims, c, 1 + rng.below(6));
+        pts += engine.box_summary(&q).expect("box").n_points;
+    }
+    assert!(pts > 0, "spatial smoke boxes matched no records");
+    let box_per_s = n_spatial as f64 / t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    for _ in 0..n_spatial {
+        let q = RadiusQuery {
+            x: rng.below(dims.nx),
+            y: rng.below(dims.ny),
+            z: rng.below(dims.nz),
+            radius: 1.0 + rng.below(4) as f64,
+        };
+        std::hint::black_box(engine.radius_records(&q).expect("radius").len());
+    }
+    let radius_per_s = n_spatial as f64 / t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    for _ in 0..n_spatial {
+        let q = KnnQuery {
+            x: rng.below(dims.nx),
+            y: rng.below(dims.ny),
+            z: rng.below(dims.nz),
+            k: 1 + rng.below(8),
+        };
+        let hits = engine.knn(&q).expect("knn");
+        assert_eq!(hits.len(), q.k.min(engine.store().n_records() as usize));
+    }
+    let knn_per_s = n_spatial as f64 / t0.elapsed().as_secs_f64();
+    for (mode, throughput) in [
+        ("spatial_box", box_per_s),
+        ("spatial_radius", radius_per_s),
+        ("spatial_knn", knn_per_s),
+    ] {
+        rows.push(BenchRow {
+            threads: 1,
+            throughput,
+            extra: vec![
+                ("mode", Json::Str(mode.into())),
+                ("queries", Json::Num(n_spatial as f64)),
+            ],
+        });
+    }
+
     // The serving row: closed-loop load through the admission-controlled
     // front door, recorded next to the raw engine rows (mode: "serve").
     let clients = 4usize;
     let front = ServeFront::new(
-        QueryEngine::open(&store_dir, QueryOptions::default()).expect("open store for serving"),
+        fixture.engine(0).expect("open store for serving"),
         ServeOptions {
             max_in_flight: 2,
             queue_depth: 4,
@@ -225,5 +280,13 @@ fn records_queries_bench_json() {
     for row in &rows {
         assert!(row.get("throughput").and_then(|t| t.as_f64()).unwrap() > 0.0);
     }
-    let _ = std::fs::remove_dir_all(&root);
+    let spatial_rows = rows
+        .iter()
+        .filter(|r| {
+            r.get("mode")
+                .and_then(|m| m.as_str())
+                .is_some_and(|m| m.starts_with("spatial_"))
+        })
+        .count();
+    assert_eq!(spatial_rows, 3, "spatial rows missing from BENCH_queries.json");
 }

@@ -1,0 +1,423 @@
+//! Oracle-differential property tests for the spatial query tier.
+//!
+//! Every spatial query kind — 3D box scan/summary, radius, kNN,
+//! per-cell aggregation, cross-run diff — is checked **bit-identical**
+//! against the brute-force oracle in `pdfflow::spatial::oracle`, which
+//! answers by full store scans with none of the engine's machinery (no
+//! grid index, no block cache, no host-pool fan-out). Stores are
+//! synthesized directly through the writer API over randomized cube
+//! shapes, per-slice window heights, slice holes and window gaps, and
+//! each case draws a random worker count and grid geometry, so the
+//! comparison covers region edges (empty box, single point, whole
+//! cube, boxes straddling slice/window boundaries) and any thread
+//! count. Case count per property: `testkit::cases(60)` — override
+//! with `PDFFLOW_PROPTEST_CASES` (CI cranks it up).
+
+use std::path::{Path, PathBuf};
+
+use pdfflow::cube::{CellGrid, CubeDims};
+use pdfflow::pdfstore::{PdfRecord, QueryEngine, QueryOptions, RunKey, RunSelector, StoreWriter};
+use pdfflow::prop_assert;
+use pdfflow::spatial::{dist2, oracle, BoxQuery, KnnQuery, RadiusQuery};
+use pdfflow::stats::DistType;
+use pdfflow::util::prng::Rng;
+use pdfflow::util::testkit;
+
+/// Observation count recorded in every synthesized catalog (the spatial
+/// tier never reads it, but reruns must agree with the first writer).
+const N_OBS: usize = 50;
+
+fn case_dir(tag: &str) -> PathBuf {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    static N: AtomicUsize = AtomicUsize::new(0);
+    std::env::temp_dir().join(format!(
+        "pdfflow-spatialoracle-{tag}-{}-{}",
+        std::process::id(),
+        N.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+fn random_dims(rng: &mut Rng) -> CubeDims {
+    CubeDims::new(2 + rng.below(8), 3 + rng.below(17), 2 + rng.below(4))
+}
+
+/// Synthesize one run of a store directly through the writer API (no
+/// fit pipeline): each persisted slice is covered by windows of a
+/// random per-slice height, with occasional skipped slices (holes the
+/// resolved view never saw) and occasional window gaps inside a slice.
+fn synth_run(dir: &Path, dims: CubeDims, key: &RunKey, rng: &mut Rng) -> Result<(), String> {
+    let err = |e: pdfflow::PdfflowError| e.to_string();
+    let mut w = StoreWriter::create(dir, dims, N_OBS).map_err(err)?;
+    let mut persisted = false;
+    for z in 0..dims.nz {
+        let last = z == dims.nz - 1;
+        if !(last && !persisted) && rng.below(6) == 0 {
+            continue; // hole: this run never fitted slice z
+        }
+        persisted = true;
+        let mut sw = w.open_segment(z, key).map_err(err)?;
+        let window_lines = 1 + rng.below(dims.ny.min(5));
+        let mut y0 = 0usize;
+        while y0 < dims.ny {
+            let lines = window_lines.min(dims.ny - y0);
+            if y0 > 0 && rng.below(8) == 0 {
+                y0 += lines; // gap: a window this run never persisted
+                continue;
+            }
+            let mut records = Vec::with_capacity(lines * dims.nx);
+            for y in y0..y0 + lines {
+                for x in 0..dims.nx {
+                    records.push(PdfRecord {
+                        point: dims.point_id(x, y, z),
+                        dist: DistType::from_id(rng.below(10)).unwrap(),
+                        error: (rng.below(2000) as f32) / 1000.0,
+                        params: [rng.f32(), rng.f32(), rng.f32()],
+                    });
+                }
+            }
+            sw.append_records(y0 as u64, lines as u64, &records).map_err(err)?;
+            y0 += lines;
+        }
+        w.add_segment(sw.finish().map_err(err)?).map_err(err)?;
+    }
+    Ok(())
+}
+
+/// Random engine knobs: worker width (the invariance axis) and grid
+/// geometry (None → `CellGrid::default_for`, Some → arbitrary sides,
+/// possibly larger than the cube).
+fn random_opts(dims: CubeDims, rng: &mut Rng) -> QueryOptions {
+    let cell = if rng.below(2) == 0 {
+        Some([
+            1 + rng.below(dims.nx + 1),
+            1 + rng.below(dims.ny + 1),
+            1 + rng.below(dims.nz + 1),
+        ])
+    } else {
+        None
+    };
+    QueryOptions {
+        cache_bytes: 1 << 20,
+        workers: [1, 2, 3, 8][rng.below(4)],
+        cell,
+        ..QueryOptions::default()
+    }
+}
+
+/// One synthesized single-run store + engine over it.
+fn synth_case(tag: &str, rng: &mut Rng) -> Result<(PathBuf, QueryEngine), String> {
+    let dims = random_dims(rng);
+    let dir = case_dir(tag);
+    let _ = std::fs::remove_dir_all(&dir);
+    synth_run(&dir, dims, &RunKey::new("baseline", 4, "a"), rng)?;
+    let engine = QueryEngine::open(&dir, random_opts(dims, rng)).map_err(|e| e.to_string())?;
+    Ok((dir, engine))
+}
+
+/// Random box over (and slightly beyond) the cube, biased toward the
+/// edge shapes the index must get right.
+fn random_box(dims: CubeDims, rng: &mut Rng) -> BoxQuery {
+    let pair = |rng: &mut Rng, n: usize| {
+        let (a, b) = (rng.below(n + 2), rng.below(n + 2));
+        (a.min(b), a.max(b))
+    };
+    match rng.below(8) {
+        // Empty by inversion: no point can satisfy x0 <= x <= x1.
+        0 => BoxQuery {
+            x0: 1,
+            x1: 0,
+            y0: 0,
+            y1: 0,
+            z0: 0,
+            z1: 0,
+        },
+        1 => BoxQuery::point(rng.below(dims.nx), rng.below(dims.ny), rng.below(dims.nz)),
+        2 => BoxQuery::whole(&dims),
+        // Slab straddling a slice boundary.
+        3 => {
+            let z = rng.below(dims.nz);
+            BoxQuery {
+                z0: z.saturating_sub(1),
+                z1: (z + 1).min(dims.nz - 1),
+                ..BoxQuery::whole(&dims)
+            }
+        }
+        // Thin y-band straddling window boundaries.
+        4 => {
+            let y = rng.below(dims.ny);
+            BoxQuery {
+                y0: y.saturating_sub(1),
+                y1: (y + 1).min(dims.ny - 1),
+                ..BoxQuery::whole(&dims)
+            }
+        }
+        _ => {
+            let (x0, x1) = pair(rng, dims.nx);
+            let (y0, y1) = pair(rng, dims.ny);
+            let (z0, z1) = pair(rng, dims.nz);
+            BoxQuery {
+                x0,
+                x1,
+                y0,
+                y1,
+                z0,
+                z1,
+            }
+        }
+    }
+}
+
+#[test]
+fn box_queries_match_oracle() {
+    testkit::check("spatial_box_oracle", testkit::cases(60), |rng| {
+        let (dir, engine) = synth_case("box", rng)?;
+        for _ in 0..4 {
+            let q = random_box(engine.dims(), rng);
+            let got = engine.box_records(&q).map_err(|e| e.to_string())?;
+            let want = oracle::box_records(engine.store(), &q).map_err(|e| e.to_string())?;
+            prop_assert!(
+                got == want,
+                "box_records mismatch for {q:?}: {} vs {} records",
+                got.len(),
+                want.len()
+            );
+            let gs = engine.box_summary(&q).map_err(|e| e.to_string())?;
+            let ws = oracle::box_summary(engine.store(), &q).map_err(|e| e.to_string())?;
+            prop_assert!(gs == ws, "box_summary mismatch for {q:?}: {gs:?} vs {ws:?}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+        Ok(())
+    });
+}
+
+#[test]
+fn radius_queries_match_oracle() {
+    testkit::check("spatial_radius_oracle", testkit::cases(60), |rng| {
+        let (dir, engine) = synth_case("radius", rng)?;
+        let dims = engine.dims();
+        for _ in 0..4 {
+            let q = RadiusQuery {
+                // Centers may sit slightly outside the cube.
+                x: rng.below(dims.nx + 2),
+                y: rng.below(dims.ny + 2),
+                z: rng.below(dims.nz + 2),
+                radius: match rng.below(6) {
+                    0 => -1.0,
+                    1 => 0.0,
+                    2 => 0.7,
+                    3 => 2.5,
+                    4 => (dims.nx + dims.ny + dims.nz) as f64,
+                    _ => rng.uniform(0.0, dims.ny as f64),
+                },
+            };
+            let got = engine.radius_records(&q).map_err(|e| e.to_string())?;
+            let want = oracle::radius_records(engine.store(), &q).map_err(|e| e.to_string())?;
+            prop_assert!(
+                got == want,
+                "radius mismatch for {q:?}: {} vs {} records",
+                got.len(),
+                want.len()
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+        Ok(())
+    });
+}
+
+#[test]
+fn knn_matches_oracle_with_deterministic_ties() {
+    testkit::check("spatial_knn_oracle", testkit::cases(60), |rng| {
+        let (dir, engine) = synth_case("knn", rng)?;
+        let dims = engine.dims();
+        let n_records = engine.store().n_records() as usize;
+        for _ in 0..4 {
+            let q = KnnQuery {
+                x: rng.below(dims.nx + 2),
+                y: rng.below(dims.ny + 2),
+                z: rng.below(dims.nz + 2),
+                // 0, tiny, mid, and beyond-the-store k values.
+                k: match rng.below(4) {
+                    0 => 0,
+                    1 => 1,
+                    2 => 1 + rng.below(n_records.max(1)),
+                    _ => n_records + 1 + rng.below(5),
+                },
+            };
+            let got = engine.knn(&q).map_err(|e| e.to_string())?;
+            let want = oracle::knn(engine.store(), &q).map_err(|e| e.to_string())?;
+            prop_assert!(
+                got == want,
+                "knn mismatch for {q:?}: {} vs {} records",
+                got.len(),
+                want.len()
+            );
+            prop_assert!(got.len() == q.k.min(n_records), "knn returned wrong count for {q:?}");
+            // Ties break toward the lower PointId: the (distance, id)
+            // key must be strictly increasing.
+            let center = (q.x, q.y, q.z);
+            for w in got.windows(2) {
+                let a = (dist2(dims.coords(w[0].point), center), w[0].point);
+                let b = (dist2(dims.coords(w[1].point), center), w[1].point);
+                prop_assert!(a < b, "knn order not strictly increasing at {a:?} vs {b:?}");
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+        Ok(())
+    });
+}
+
+#[test]
+fn cell_aggregation_matches_oracle() {
+    testkit::check("spatial_agg_oracle", testkit::cases(60), |rng| {
+        let (dir, engine) = synth_case("agg", rng)?;
+        for _ in 0..3 {
+            let q = random_box(engine.dims(), rng);
+            let grid = engine.spatial_index().grid();
+            let got = engine.cell_aggregate(&q).map_err(|e| e.to_string())?;
+            let want =
+                oracle::cell_aggregate(engine.store(), grid, &q).map_err(|e| e.to_string())?;
+            prop_assert!(
+                got == want,
+                "cell_aggregate mismatch for {q:?}: {} vs {} cells, boundary {} vs {}",
+                got.cells.len(),
+                want.cells.len(),
+                got.boundary.len(),
+                want.boundary.len()
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+        Ok(())
+    });
+}
+
+#[test]
+fn cross_run_diff_matches_oracle() {
+    testkit::check("spatial_diff_oracle", testkit::cases(60), |rng| {
+        let dims = random_dims(rng);
+        let dir = case_dir("diff");
+        let _ = std::fs::remove_dir_all(&dir);
+        // Two runs in one generational catalog, with independent slice
+        // holes and window gaps so only_a/only_b are exercised.
+        synth_run(&dir, dims, &RunKey::new("baseline", 4, "a"), rng)?;
+        synth_run(&dir, dims, &RunKey::new("baseline", 4, "b"), rng)?;
+        let opts = random_opts(dims, rng);
+        let ea = QueryEngine::open_run(&dir, RunSelector::Id("a"), opts)
+            .map_err(|e| e.to_string())?;
+        let eb = QueryEngine::open_run(&dir, RunSelector::Id("b"), opts)
+            .map_err(|e| e.to_string())?;
+        for _ in 0..3 {
+            let q = random_box(dims, rng);
+            let got = ea.diff_run(&eb, &q).map_err(|e| e.to_string())?;
+            let want = oracle::diff(ea.store(), eb.store(), ea.spatial_index().grid(), &q)
+                .map_err(|e| e.to_string())?;
+            prop_assert!(got == want, "diff mismatch for {q:?}: {got:?} vs {want:?}");
+        }
+        // A run diffed against itself reports no drift at all.
+        let q = BoxQuery::whole(&dims);
+        let zero = ea.diff_run(&ea, &q).map_err(|e| e.to_string())?;
+        prop_assert!(
+            zero.only_a == 0
+                && zero.only_b == 0
+                && zero.type_changed == 0
+                && zero.err_delta_sum == 0.0
+                && zero.max_err_delta == 0.0
+                && zero.changed_cells.is_empty(),
+            "self-diff reported drift: {zero:?}"
+        );
+        prop_assert!(
+            zero.n_compared as u64 == ea.store().n_records(),
+            "self-diff compared {} of {} records",
+            zero.n_compared,
+            ea.store().n_records()
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+        Ok(())
+    });
+}
+
+/// Deterministic pin of the kNN tie contract: a uniform 3x3 plane of
+/// equidistant points around the center must come back in ascending
+/// PointId order, k truncating that order.
+#[test]
+fn knn_tie_break_is_point_id_order() {
+    let dims = CubeDims::new(3, 3, 2);
+    let dir = case_dir("tiepin");
+    let _ = std::fs::remove_dir_all(&dir);
+    let key = RunKey::new("baseline", 4, "a");
+    let mut w = StoreWriter::create(&dir, dims, N_OBS).expect("create");
+    let mut sw = w.open_segment(0, &key).expect("segment");
+    let records: Vec<PdfRecord> = (0..dims.ny)
+        .flat_map(|y| {
+            (0..dims.nx).map(move |x| PdfRecord {
+                point: dims.point_id(x, y, 0),
+                dist: DistType::Normal,
+                error: 0.5,
+                params: [0.0; 3],
+            })
+        })
+        .collect();
+    sw.append_records(0, dims.ny as u64, &records).expect("append");
+    w.add_segment(sw.finish().expect("finish")).expect("add");
+    let engine = QueryEngine::open(&dir, QueryOptions::default()).expect("open");
+    // Center of the plane: the 4 axis neighbors all sit at distance 1,
+    // the 4 diagonals at sqrt(2). Ties resolve by ascending PointId.
+    let got = engine.knn(&KnnQuery { x: 1, y: 1, z: 0, k: 5 }).expect("knn");
+    let ids: Vec<u64> = got.iter().map(|r| r.point.0).collect();
+    let center = dims.point_id(1, 1, 0).0;
+    assert_eq!(ids[0], center, "nearest must be the center itself");
+    let axis: Vec<u64> = vec![
+        dims.point_id(1, 0, 0).0,
+        dims.point_id(0, 1, 0).0,
+        dims.point_id(2, 1, 0).0,
+        dims.point_id(1, 2, 0).0,
+    ];
+    assert_eq!(&ids[1..], &axis[..], "distance-1 ties must come back in PointId order");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// CellGrid geometry vs the oracle's boundary detector on a hand-built
+/// two-type store: every cell bordering the type transition is flagged,
+/// cells away from it are not.
+#[test]
+fn boundary_cells_flag_type_transitions() {
+    let dims = CubeDims::new(4, 4, 2);
+    let dir = case_dir("boundary");
+    let _ = std::fs::remove_dir_all(&dir);
+    let key = RunKey::new("baseline", 4, "a");
+    let mut w = StoreWriter::create(&dir, dims, N_OBS).expect("create");
+    for z in 0..dims.nz {
+        let mut sw = w.open_segment(z, &key).expect("segment");
+        let records: Vec<PdfRecord> = (0..dims.ny)
+            .flat_map(|y| {
+                (0..dims.nx).map(move |x| PdfRecord {
+                    point: dims.point_id(x, y, z),
+                    // Left half Normal, right half Gamma: one vertical
+                    // type transition between x=1 and x=2.
+                    dist: if x < 2 { DistType::Normal } else { DistType::Gamma },
+                    error: 1.0,
+                    params: [0.0; 3],
+                })
+            })
+            .collect();
+        sw.append_records(0, dims.ny as u64, &records).expect("append");
+        w.add_segment(sw.finish().expect("finish")).expect("add");
+    }
+    // 2-wide cells along x → cells (0,*,*) are all-Normal, (1,*,*) all-
+    // Gamma; every cell touches the transition, so all are boundary.
+    let opts = QueryOptions {
+        cell: Some([2, 4, 2]),
+        ..QueryOptions::default()
+    };
+    let engine = QueryEngine::open(&dir, opts).expect("open");
+    let agg = engine.cell_aggregate(&BoxQuery::whole(&dims)).expect("agg");
+    assert_eq!(agg.cells.len(), 2, "expected one all-Normal and one all-Gamma cell");
+    assert_eq!(
+        agg.boundary,
+        vec![(0, 0, 0), (1, 0, 0)],
+        "both cells border the type transition"
+    );
+    let grid = CellGrid::new(dims, 2, 4, 2);
+    let want = oracle::cell_aggregate(engine.store(), grid, &BoxQuery::whole(&dims)).expect("agg");
+    assert_eq!(agg, want, "engine and oracle disagree on the hand-built cube");
+    let _ = std::fs::remove_dir_all(&dir);
+}

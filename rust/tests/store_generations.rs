@@ -11,11 +11,12 @@ use pdfflow::config::PipelineConfig;
 use pdfflow::coordinator::{mlmodel, Method, Pipeline, TypeSet};
 use pdfflow::datagen::{DatasetSpec, SyntheticDataset};
 use pdfflow::pdfstore::{
-    compact_run, Catalog, PdfStore, QueryEngine, QueryOptions, RegionQuery, RunSelector,
+    compact_run, Catalog, PdfRecord, PdfStore, QueryEngine, QueryOptions, RegionQuery, RunSelector,
     CATALOG_NAME,
 };
 use pdfflow::runtime::{make_backend, Backend, BackendKind, BackendOptions};
-use pdfflow::serve::{closed_loop, Request, ServeFront, ServeOptions};
+use pdfflow::serve::{closed_loop, Class, Request, ServeFront, ServeOptions};
+use pdfflow::spatial::{BoxQuery, KnnQuery, RadiusQuery};
 
 fn backend() -> Box<dyn Backend> {
     make_backend(
@@ -45,22 +46,26 @@ fn pipeline_cfg(store_dir: Option<&Path>, run_id: Option<&str>) -> PipelineConfi
     }
 }
 
+fn fold_record(acc: u64, rec: &PdfRecord) -> u64 {
+    acc.rotate_left(7)
+        .wrapping_add(rec.point.0)
+        .wrapping_add((rec.dist.id() as u64) << 48)
+        .wrapping_add(rec.error.to_bits() as u64)
+        .wrapping_add((rec.params[0].to_bits() as u64) << 16)
+        .wrapping_add((rec.params[1].to_bits() as u64) << 24)
+        .wrapping_add((rec.params[2].to_bits() as u64) << 32)
+}
+
 /// Bit-exact face of everything the query surface can answer for one
 /// slice: every record's wire bits, the region summary, a quantile
-/// surface. Identical u64 ⇔ identical answers.
+/// surface, and the spatial tier (box scan + summary, radius ball, kNN,
+/// cell aggregation). Identical u64 ⇔ identical answers.
 fn query_fingerprint(engine: &QueryEngine, z: usize) -> u64 {
     let dims = engine.dims();
     let full = RegionQuery::slice(&dims, z);
     let mut acc = 0x9e37_79b9_7f4a_7c15u64;
     for rec in engine.region(&full).expect("region scan") {
-        acc = acc
-            .rotate_left(7)
-            .wrapping_add(rec.point.0)
-            .wrapping_add((rec.dist.id() as u64) << 48)
-            .wrapping_add(rec.error.to_bits() as u64)
-            .wrapping_add((rec.params[0].to_bits() as u64) << 16)
-            .wrapping_add((rec.params[1].to_bits() as u64) << 24)
-            .wrapping_add((rec.params[2].to_bits() as u64) << 32);
+        acc = fold_record(acc, &rec);
     }
     let s = engine.region_summary(&full).expect("summary");
     acc = acc.rotate_left(9).wrapping_add(s.avg_error.to_bits());
@@ -73,7 +78,53 @@ fn query_fingerprint(engine: &QueryEngine, z: usize) -> u64 {
         y1: dims.ny - 2,
     };
     let m = engine.region_quantile_mean(&q, 0.5).expect("quantile mean");
-    acc.rotate_left(9).wrapping_add(m.to_bits())
+    acc = acc.rotate_left(9).wrapping_add(m.to_bits());
+    // Spatial surface over the same slice: a box straddling its z
+    // neighbors, a radius ball and kNN at the slice center, and the
+    // per-cell aggregation — all must answer bit-identically across
+    // compaction and rerun generations.
+    let bx = BoxQuery {
+        x0: 1,
+        x1: dims.nx - 2,
+        y0: 1,
+        y1: dims.ny - 2,
+        z0: z.saturating_sub(1),
+        z1: (z + 1).min(dims.nz - 1),
+    };
+    for rec in engine.box_records(&bx).expect("box records") {
+        acc = fold_record(acc, &rec);
+    }
+    let bs = engine.box_summary(&bx).expect("box summary");
+    acc = acc.rotate_left(9).wrapping_add(bs.avg_error.to_bits());
+    acc = acc.rotate_left(9).wrapping_add(bs.max_error.to_bits());
+    let ball = RadiusQuery {
+        x: dims.nx / 2,
+        y: dims.ny / 2,
+        z,
+        radius: 2.5,
+    };
+    for rec in engine.radius_records(&ball).expect("radius records") {
+        acc = fold_record(acc, &rec);
+    }
+    let near = KnnQuery {
+        x: 1,
+        y: 2,
+        z,
+        k: 9,
+    };
+    for rec in engine.knn(&near).expect("knn") {
+        acc = fold_record(acc, &rec);
+    }
+    let agg = engine.cell_aggregate(&bx).expect("cell aggregate");
+    for cell in &agg.cells {
+        acc = acc
+            .rotate_left(5)
+            .wrapping_add(cell.n_points as u64)
+            .wrapping_add(cell.err_sum.to_bits())
+            .wrapping_add(cell.max_error.to_bits() as u64)
+            .wrapping_add((cell.dominant.id() as u64) << 40);
+    }
+    acc.rotate_left(5).wrapping_add(agg.boundary.len() as u64)
 }
 
 #[test]
@@ -163,6 +214,14 @@ fn compaction_is_bit_identical_and_retires_generations() {
     // first 8 lines — the resolved view must mix generations
     // window-by-window (lines 0..8 from gen 1, the rest from gen 0).
     pipe.run_slice(Method::Baseline, 1, TypeSet::Four).unwrap();
+    let g0_engine = QueryEngine::open_run(
+        &store,
+        RunSelector::Id("exp"),
+        QueryOptions::default(),
+    )
+    .unwrap();
+    let g0 = query_fingerprint(&g0_engine, 1);
+    drop(g0_engine);
     pipe.run_lines(Method::Baseline, 1, TypeSet::Four, 8).unwrap();
 
     let before_engine = QueryEngine::open_run(
@@ -174,6 +233,9 @@ fn compaction_is_bit_identical_and_retires_generations() {
     assert_eq!(before_engine.store().n_segments(), 2);
     let before = query_fingerprint(&before_engine, 1);
     drop(before_engine);
+    // The rerun is deterministic: appending generation 1 must not change
+    // any query answer (spatial included) versus the gen-0-only view.
+    assert_eq!(before, g0, "appended generation changed query answers");
 
     let rep = compact_run(&store, Some("exp")).unwrap();
     assert!(!rep.already_compact);
@@ -306,12 +368,10 @@ fn serve_front_enforces_admission_caps_under_closed_loop_load() {
         opts.queue_depth
     );
     assert!(m.total_shed() > 0, "8 clients on capacity 2 never shed");
-    // Ledger closes: every request completed, shed, or errored.
-    let accounted = m.total_completed()
-        + m.total_shed()
-        + m.point.errors
-        + m.region.errors
-        + m.analytic.errors;
+    // Ledger closes: every request completed, shed, or errored — summed
+    // across all seven request classes, spatial included.
+    let errors: u64 = Class::ALL.iter().map(|&c| m.class(c).errors).sum();
+    let accounted = m.total_completed() + m.total_shed() + errors;
     assert_eq!(accounted, load.requests);
     // Shed is an explicit, typed signal.
     let err = pdfflow::PdfflowError::Overloaded("x".into());

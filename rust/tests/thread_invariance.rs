@@ -9,9 +9,11 @@ use pdfflow::config::PipelineConfig;
 use pdfflow::coordinator::{Method, Pipeline, SliceReport, TypeSet};
 use pdfflow::datagen::{DatasetSpec, SyntheticDataset};
 use pdfflow::executor::Executor;
+use pdfflow::pdfstore::{QueryEngine, QueryOptions, RunKey, RunSelector};
 use pdfflow::runtime::{
     make_backend, Backend, BackendKind, BackendOptions, HostPool, NativeBackend,
 };
+use pdfflow::spatial::{BoxQuery, KnnQuery, RadiusQuery};
 use std::sync::Arc;
 
 const THREADS: [usize; 3] = [1, 2, 8];
@@ -265,6 +267,74 @@ fn overlapped_training_matches_ensure_tree_then_run() {
     assert_eq!(seq_report.n_points, ovl_report.n_points);
     assert!(seq_bytes == ovl_bytes, "persisted bytes diverge");
     assert!(pipe.model_error.is_some(), "overlap path trained the tree");
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn spatial_queries_are_worker_count_invariant() {
+    // Spatial answers are a property of the persisted store, not of the
+    // host-pool width: box / radius / kNN / cell aggregation / cross-run
+    // diff must be bit-identical whether the engine fans its window
+    // scans over 1, 2 or 8 workers. Two runs (baseline + grouping) live
+    // in one catalog so the diff side exercises RunSelector::Key too.
+    let root = std::env::temp_dir().join(format!(
+        "pdfflow-invariance-spatial-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&root);
+    let ds = dataset(&root);
+    let store = root.join("store");
+    run_at(&ds, Method::Baseline, &store, 2);
+    run_at(&ds, Method::Grouping, &store, 2);
+    let key_a = RunKey::new("baseline", 4, "default");
+    let key_b = RunKey::new("grouping", 4, "default");
+
+    let answers = |workers: usize| {
+        let opts = QueryOptions {
+            workers,
+            ..QueryOptions::default()
+        };
+        let a = QueryEngine::open_run(&store, RunSelector::Key(&key_a), opts).expect("engine a");
+        let b = QueryEngine::open_run(&store, RunSelector::Key(&key_b), opts).expect("engine b");
+        let bx = BoxQuery {
+            x0: 2,
+            x1: 13,
+            y0: 1,
+            y1: 10,
+            z0: 1,
+            z1: 3,
+        };
+        let whole = BoxQuery::whole(&a.dims());
+        let radius = RadiusQuery {
+            x: 8,
+            y: 6,
+            z: 2,
+            radius: 3.5,
+        };
+        let knn = KnnQuery {
+            x: 3,
+            y: 4,
+            z: 2,
+            k: 17,
+        };
+        (
+            a.box_records(&bx).expect("box records"),
+            a.box_summary(&bx).expect("box summary"),
+            a.radius_records(&radius).expect("radius records"),
+            a.knn(&knn).expect("knn"),
+            a.cell_aggregate(&whole).expect("cell aggregate"),
+            a.diff_run(&b, &whole).expect("diff run"),
+        )
+    };
+
+    let base = answers(THREADS[0]);
+    for threads in &THREADS[1..] {
+        assert_eq!(
+            answers(*threads),
+            base,
+            "spatial answers diverge at {threads} workers"
+        );
+    }
     std::fs::remove_dir_all(&root).unwrap();
 }
 
