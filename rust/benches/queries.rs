@@ -349,6 +349,56 @@ fn main() {
         ],
     });
 
+    // --- Telemetry overhead: the identical warm point-query pass with
+    // span tracing enabled vs disabled. The point hot path carries only
+    // always-on relaxed counters (spans sit at stage / segment-I/O
+    // granularity), so the delta must stay inside the 3% budget the
+    // telemetry layer promises. Interleaved best-of passes with a few
+    // retries keep scheduler noise from failing the assertion.
+    let overhead_ids = fixture.point_ids(if smoke { 2_000 } else { 10_000 }, 31);
+    let pass = |e: &QueryEngine| -> f64 {
+        let t = Instant::now();
+        let mut acc = 0u64;
+        for id in &overhead_ids {
+            acc ^= e.point_by_id(*id).expect("point").point.0;
+        }
+        std::hint::black_box(acc);
+        overhead_ids.len() as f64 / t.elapsed().as_secs_f64()
+    };
+    pass(&compacted); // warm the block cache so both states read memory
+    let (mut qps_on, mut qps_off, mut delta_pct) = (0.0f64, 0.0f64, f64::INFINITY);
+    for _attempt in 0..5 {
+        let (mut best_on, mut best_off) = (0.0f64, 0.0f64);
+        for _ in 0..3 {
+            pdfflow::telemetry::set_enabled(true);
+            best_on = best_on.max(pass(&compacted));
+            pdfflow::telemetry::set_enabled(false);
+            best_off = best_off.max(pass(&compacted));
+        }
+        (qps_on, qps_off) = (best_on, best_off);
+        delta_pct = (best_off - best_on) / best_off * 100.0;
+        if delta_pct <= 3.0 {
+            break;
+        }
+    }
+    pdfflow::telemetry::set_enabled(true);
+    println!(
+        "telemetry overhead: enabled {qps_on:.0} q/s vs disabled {qps_off:.0} q/s ({delta_pct:+.2}%)"
+    );
+    assert!(
+        delta_pct <= 3.0,
+        "telemetry overhead {delta_pct:.2}% exceeds the 3% budget"
+    );
+    rows.push(BenchRow {
+        threads: 1,
+        throughput: qps_on,
+        extra: vec![
+            ("mode", Json::Str("telemetry_overhead".into())),
+            ("disabled_qps", Json::Num(qps_off)),
+            ("delta_pct", Json::Num(delta_pct)),
+        ],
+    });
+
     if want_json {
         let path = write_bench_json(
             "queries",

@@ -73,6 +73,15 @@ pub fn write_bench_json(
             Json::obj(pairs)
         })
         .collect();
+    // Provenance: every trajectory point is joinable with the telemetry
+    // snapshots (same git_rev/build_profile keys) — perf claims in
+    // ROADMAP must cite rows that carry these.
+    let mut config = config;
+    config.push(("git_rev", Json::Str(crate::telemetry::export::git_rev())));
+    config.push((
+        "build_profile",
+        Json::Str(crate::telemetry::export::build_profile().to_string()),
+    ));
     let mut pairs = vec![
         ("bench", Json::Str(name.to_string())),
         ("config", Json::obj(config)),
@@ -190,8 +199,21 @@ pub fn upsert_bench_row(name: &str, mode: &str, row: BenchRow) -> Result<PathBuf
         _ => std::collections::BTreeMap::new(),
     };
     map.insert("bench".to_string(), Json::Str(name.to_string()));
-    map.entry("config".to_string())
+    let config = map
+        .entry("config".to_string())
         .or_insert_with(|| Json::obj(Vec::new()));
+    if let Json::Obj(c) = config {
+        // Refresh provenance: the upserted row was measured by *this*
+        // build, so the record's joinable keys must say so.
+        c.insert(
+            "git_rev".to_string(),
+            Json::Str(crate::telemetry::export::git_rev()),
+        );
+        c.insert(
+            "build_profile".to_string(),
+            Json::Str(crate::telemetry::export::build_profile().to_string()),
+        );
+    }
     map.insert("rows".to_string(), Json::Arr(rows));
     let doc = Json::Obj(map);
     validate_bench_record(name, &doc)?;

@@ -381,11 +381,16 @@ impl<'a> Pipeline<'a> {
         }
 
         let mut stage = StageMetrics::default();
+        let span_stage = crate::span!("stage", "{} slice {slice}", method.name());
         exec.run_sequenced_metered(
             windows,
             |window| -> Result<Staged> {
+                let _span = crate::span!("window", "z{} y0 {}", window.z, window.y0);
                 let scratch = SimCluster::new(spec.clone());
-                let lw = loader::load_window(reader, cache, backend, &scratch, window)?;
+                let lw = {
+                    let _s = crate::span!("load", "y0 {}", window.y0);
+                    loader::load_window(reader, cache, backend, &scratch, window)?
+                };
                 let fit = if fit_in_task {
                     // Window-level parallelism already fills the stage
                     // width, so the nested RDD stages run sequentially.
@@ -393,6 +398,7 @@ impl<'a> Pipeline<'a> {
                     // from the same shared HostPool budget as the window
                     // tasks themselves — knobs cap widths, they no
                     // longer multiply thread counts.
+                    let _s = crate::span!("fit", "y0 {}", window.y0);
                     Some(methods::fit_window(
                         backend,
                         &scratch,
@@ -424,18 +430,25 @@ impl<'a> Pipeline<'a> {
                 } = staged;
                 let fit = match fit {
                     Some(fit) => fit,
-                    None => methods::fit_window(
-                        backend, &scratch, exec_ref, method, types, &lw, tree, reuse,
-                        quantum, partitions,
-                    )?,
+                    None => {
+                        // Reuse-method fits run here in the ordered sink.
+                        let _s = crate::span!("fit", "y0 {}", window.y0);
+                        methods::fit_window(
+                            backend, &scratch, exec_ref, method, types, &lw, tree, reuse,
+                            quantum, partitions,
+                        )?
+                    }
                 };
                 let mut persist_bytes = 0u64;
-                if let Some(f) = persist.as_mut() {
-                    persist_bytes += persist_window(f, &lw.obs.point_ids, &fit.outcomes)?;
-                }
-                if let Some(sw) = segment.as_mut() {
-                    persist_bytes +=
-                        sw.append_window(&window, &lw.obs.point_ids, &fit.outcomes)?;
+                {
+                    let _s = crate::span!("persist", "y0 {}", window.y0);
+                    if let Some(f) = persist.as_mut() {
+                        persist_bytes += persist_window(f, &lw.obs.point_ids, &fit.outcomes)?;
+                    }
+                    if let Some(sw) = segment.as_mut() {
+                        persist_bytes +=
+                            sw.append_window(&window, &lw.obs.point_ids, &fit.outcomes)?;
+                    }
                 }
                 // Persisted output travels back to the shared store: charge
                 // it like any other data path (one append batch per sink).
@@ -470,6 +483,7 @@ impl<'a> Pipeline<'a> {
             },
             &mut stage,
         )?;
+        drop(span_stage);
         if let Some(sw) = segment {
             let meta = sw.finish()?;
             self.store

@@ -67,6 +67,20 @@ pub struct StageMetrics {
     pub peak_pending: usize,
 }
 
+/// Process-wide per-task duration histogram (`executor.task_ns`).
+/// Every executor instance feeds it; per-stage assertions stay on the
+/// caller-owned [`StageMetrics`].
+fn task_hist() -> &'static crate::telemetry::Histogram {
+    static HIST: std::sync::OnceLock<Arc<crate::telemetry::Histogram>> = std::sync::OnceLock::new();
+    HIST.get_or_init(|| crate::telemetry::Registry::global().histogram("executor.task_ns"))
+}
+
+/// Process-wide consumed-task counter (`executor.tasks`).
+fn task_counter() -> &'static crate::telemetry::Counter {
+    static C: std::sync::OnceLock<Arc<crate::telemetry::Counter>> = std::sync::OnceLock::new();
+    C.get_or_init(|| crate::telemetry::Registry::global().counter("executor.tasks"))
+}
+
 /// A stage executor with a width cap on the shared host-pool budget.
 #[derive(Clone, Debug)]
 pub struct Executor {
@@ -218,8 +232,11 @@ impl Executor {
             for (i, t) in tasks.into_iter().enumerate() {
                 let t0 = Instant::now();
                 let r = worker(t)?;
+                let nanos = t0.elapsed().as_nanos() as u64;
+                task_hist().record(nanos);
+                task_counter().inc();
                 metrics.tasks += 1;
-                metrics.busy_s += t0.elapsed().as_secs_f64();
+                metrics.busy_s += nanos as f64 / 1e9;
                 metrics.peak_in_flight = metrics.peak_in_flight.max(1);
                 consumer(i, r)?;
             }
@@ -274,7 +291,9 @@ impl Executor {
                 peak_in_flight.fetch_max(live, Ordering::Relaxed);
                 let t0 = Instant::now();
                 let outcome = catch_unwind(AssertUnwindSafe(|| worker(t)));
-                busy_nanos.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                let nanos = t0.elapsed().as_nanos() as u64;
+                task_hist().record(nanos);
+                busy_nanos.fetch_add(nanos, Ordering::Relaxed);
                 in_flight.fetch_sub(1, Ordering::Relaxed);
                 match outcome {
                     Ok(r) => {
@@ -361,6 +380,7 @@ impl Executor {
         drop(cancel); // wake parked claim loops
         drop(rx); // in-flight sends fail fast
         handle.join(); // revoke queued tickets, wait for claimed ones
+        task_counter().add(consumed_n);
         metrics.tasks += consumed_n;
         metrics.busy_s += busy_nanos.load(Ordering::Relaxed) as f64 / 1e9;
         metrics.peak_in_flight = metrics

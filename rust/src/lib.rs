@@ -70,6 +70,7 @@ pub mod serve;
 pub mod spatial;
 pub mod stats;
 pub mod storage;
+pub mod telemetry;
 pub mod util;
 
 /// Convenience re-exports for examples and binaries.

@@ -22,7 +22,12 @@
 //! pdfflow serve     --store-dir DIR [--run ID] [--clients N] [--queries N]
 //!                   [--max-in-flight N] [--queue-depth N] [--bench]
 //!                   closed-loop load through the admission-controlled serving tier
+//! pdfflow telemetry validate <snapshot.json>             check an exported metrics snapshot
 //! ```
+//!
+//! `run` and `serve` take `--metrics-out PATH` to export the telemetry
+//! registry (JSON snapshot at PATH, Prometheus text at PATH.prom).
+//! `PDFFLOW_TRACE=0` disables span tracing and the flight recorder.
 //!
 //! `--config FILE` loads a TOML experiment config instead of `--preset`.
 //! Every subcommand except `artifacts-check` (PJRT-only by nature)
@@ -41,9 +46,11 @@ use pdfflow::pdfstore::{
     compact_run, validate_run_id, PdfStore, QueryEngine, QueryOptions, RegionQuery, RunSelector,
 };
 use pdfflow::runtime::BackendKind;
-use pdfflow::serve::{closed_loop, Class, ServeFront, ServeOptions};
+use pdfflow::serve::{closed_loop, ServeFront, ServeOptions};
 use pdfflow::spatial::{BoxQuery, KnnQuery, RadiusQuery};
 use pdfflow::storage::{DatasetReader, WindowCache};
+use pdfflow::telemetry::flight;
+use pdfflow::telemetry::text::{render_text, CacheLine, Section};
 use pdfflow::util::cli::Args;
 use pdfflow::util::timing::{fmt_bytes, fmt_secs};
 
@@ -58,8 +65,16 @@ fn main() {
             std::process::exit(2);
         }
     };
+    // A panic anywhere dumps the span flight recorder before unwinding.
+    flight::install_crash_hook();
     if let Err(e) = dispatch(&args) {
         eprintln!("error: {e:#}");
+        if pdfflow::telemetry::enabled() {
+            match flight::dump("error") {
+                Ok(p) => eprintln!("flight recorder dumped to {}", p.display()),
+                Err(de) => eprintln!("flight recorder dump failed: {de}"),
+            }
+        }
         std::process::exit(1);
     }
 }
@@ -143,10 +158,11 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("store") => cmd_store(args),
         Some("query") => cmd_query(args),
         Some("serve") => cmd_serve(args),
+        Some("telemetry") => cmd_telemetry(args),
         Some(other) => Err(anyhow!("unknown subcommand {other:?} (see --help in README)")),
         None => {
             println!("pdfflow — parallel computation of PDFs on big spatial data");
-            println!("subcommands: generate run sample features train-tree tune-window qoi figure artifacts-check store query serve");
+            println!("subcommands: generate run sample features train-tree tune-window qoi figure artifacts-check store query serve telemetry");
             Ok(())
         }
     }
@@ -171,6 +187,9 @@ fn cmd_generate(args: &Args) -> Result<()> {
 
 fn cmd_run(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
+    if let Some(d) = &cfg.pipeline.store_dir {
+        flight::set_dump_dir(d);
+    }
     let method = Method::from_name(&args.opt_or("method", "baseline"))
         .ok_or_else(|| anyhow!("unknown --method (one of: baseline grouping reuse ml grouping+ml reuse+ml)"))?;
     let types = types_of(args)?;
@@ -212,37 +231,26 @@ fn cmd_run(args: &Args) -> Result<()> {
         for (k, v) in pipe.cluster.breakdown() {
             println!("  sim {k:<14} {}", fmt_secs(v));
         }
-        let e = r.exec;
-        println!(
-            "  stage window: {} tasks, busy {}, peak in-flight {}, peak reorder {}",
-            e.tasks,
-            fmt_secs(e.busy_s),
-            e.peak_in_flight,
-            e.peak_pending
-        );
         let p = pdfflow::runtime::HostPool::global().metrics();
-        println!(
-            "  host pool: budget {} ({} workers), {} tickets, busy {}, peak busy {}, peak queue {}",
-            p.budget,
-            p.workers,
-            p.tickets_run,
-            fmt_secs(p.busy_seconds),
-            p.peak_busy,
-            p.peak_queue_depth
+        print!(
+            "{}",
+            render_text(&[Section::Stage("window", &r.exec), Section::Pool(&p)])
         );
+    }
+    write_metrics_if_asked(args)?;
+    Ok(())
+}
+
+/// Shared `--metrics-out PATH` handling: write the JSON snapshot at
+/// PATH and the Prometheus text rendering at PATH.prom.
+fn write_metrics_if_asked(args: &Args) -> Result<()> {
+    if let Some(out) = args.opt("metrics-out") {
+        let (json_path, prom_path) = pdfflow::telemetry::export::write_metrics(out)?;
         println!(
-            "  pool items: {} stolen by workers / {} drained by helping callers",
-            p.items_stolen, p.items_helped
+            "metrics written to {} and {}",
+            json_path.display(),
+            prom_path.display()
         );
-        let hist: Vec<String> = p
-            .per_worker
-            .iter()
-            .enumerate()
-            .map(|(k, w)| format!("w{k} {} ({} tickets)", fmt_secs(w.busy_s), w.tickets))
-            .collect();
-        if !hist.is_empty() {
-            println!("  worker busy histogram: {}", hist.join(", "));
-        }
     }
     Ok(())
 }
@@ -515,6 +523,7 @@ fn cmd_store(args: &Args) -> Result<()> {
         .or_else(|| cfg.pipeline.store_dir.clone())
         .ok_or_else(|| anyhow!("store needs --store-dir DIR (or pipeline.store_dir in --config)"))?;
     cfg.pipeline.store_dir = Some(store_dir.clone());
+    flight::set_dump_dir(&store_dir);
     let method = Method::from_name(&args.opt_or("method", "baseline"))
         .ok_or_else(|| anyhow!("unknown --method (one of: baseline grouping reuse ml grouping+ml reuse+ml)"))?;
     let types = types_of(args)?;
@@ -659,6 +668,7 @@ fn cmd_query(args: &Args) -> Result<()> {
     let store_dir = args
         .opt("store-dir")
         .ok_or_else(|| anyhow!("query needs --store-dir DIR"))?;
+    flight::set_dump_dir(store_dir);
     let file_cfg = match args.opt("config") {
         Some(path) => Some(ExperimentConfig::from_file(path).context("loading --config")?),
         None => None,
@@ -917,13 +927,18 @@ fn cmd_query(args: &Args) -> Result<()> {
         }
     }
     let m = engine.meters();
-    println!(
-        "cache: {} hits / {} misses / {} evictions, {} resident in {} blocks",
-        m.hits,
-        m.misses,
-        m.evictions,
-        fmt_bytes(m.bytes),
-        m.entries
+    print!(
+        "{}",
+        render_text(&[Section::Cache(
+            "cache",
+            CacheLine {
+                hits: m.hits,
+                misses: m.misses,
+                evictions: m.evictions,
+                bytes: m.bytes,
+                entries: m.entries,
+            },
+        )])
     );
     Ok(())
 }
@@ -937,6 +952,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let store_dir = args
         .opt("store-dir")
         .ok_or_else(|| anyhow!("serve needs --store-dir DIR"))?;
+    flight::set_dump_dir(store_dir);
     if let Some(t) = args.opt("host-threads") {
         let n = t.parse::<usize>().context("--host-threads")?.max(1);
         let got = pdfflow::runtime::hostpool::configure(n);
@@ -988,6 +1004,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
             queue_depth,
         },
     );
+    // Publish the per-class latency/queue histograms so --metrics-out
+    // snapshots carry the full serve distribution, not just the table.
+    front.register_metrics();
     let rep = closed_loop(&front, clients, per_client, 42);
     let m = &rep.metrics;
     println!(
@@ -1000,23 +1019,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         m.peak_in_flight,
         m.peak_queued,
     );
-    for c in Class::ALL {
-        let cm = m.class(c);
-        if cm.admitted + cm.shed == 0 {
-            continue;
-        }
-        println!(
-            "  {:<9} admitted {:>7}  completed {:>7}  shed {:>6}  errors {:>4}  avg {}  max {}  queued {}",
-            c.name(),
-            cm.admitted,
-            cm.completed,
-            cm.shed,
-            cm.errors,
-            fmt_secs(cm.avg_latency_s()),
-            fmt_secs(cm.latency_s_max),
-            fmt_secs(cm.queue_s_sum),
-        );
-    }
+    print!("{}", render_text(&[Section::Serve(m)]));
     if args.flag("bench") {
         let path = pdfflow::bench::upsert_bench_row(
             "queries",
@@ -1039,7 +1042,32 @@ fn cmd_serve(args: &Args) -> Result<()> {
         )?;
         println!("serving row recorded in {}", path.display());
     }
+    write_metrics_if_asked(args)?;
     Ok(())
+}
+
+/// `pdfflow telemetry validate <snapshot.json>`: re-parse an exported
+/// metrics snapshot against the `pdfflow.telemetry.v1` schema — the CI
+/// gate that keeps exporter and consumers honest.
+fn cmd_telemetry(args: &Args) -> Result<()> {
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("validate") => {
+            let path = args
+                .positional
+                .get(1)
+                .ok_or_else(|| anyhow!("usage: pdfflow telemetry validate <snapshot.json>"))?;
+            let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+            let j = pdfflow::util::json::Json::parse(&text)
+                .map_err(|e| anyhow!("parsing {path}: {e}"))?;
+            let n = pdfflow::telemetry::export::validate_snapshot(&j)?;
+            println!(
+                "{path}: valid {} snapshot, {n} metrics",
+                pdfflow::telemetry::export::SCHEMA
+            );
+            Ok(())
+        }
+        _ => Err(anyhow!("usage: pdfflow telemetry validate <snapshot.json>")),
+    }
 }
 
 fn cmd_figure(args: &Args) -> Result<()> {

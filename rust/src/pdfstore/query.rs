@@ -49,9 +49,14 @@ pub struct ShardedLru {
 impl ShardedLru {
     pub fn new(capacity_bytes: u64, n_shards: usize) -> ShardedLru {
         ShardedLru {
-            lru: ShardedStampLru::new(capacity_bytes, n_shards, |b: &Arc<Vec<PdfRecord>>| {
-                (b.len() * REC_LEN) as u64
-            }),
+            // Mirrored in the process registry as `cache.qblock.*`
+            // (summed across engines; `meters()` stays instance-exact).
+            lru: ShardedStampLru::with_label(
+                capacity_bytes,
+                n_shards,
+                |b: &Arc<Vec<PdfRecord>>| (b.len() * REC_LEN) as u64,
+                "qblock",
+            ),
         }
     }
 

@@ -155,6 +155,7 @@ impl SegmentWriter {
         ids: &[PointId],
         outcomes: &[FitOutcome],
     ) -> Result<u64> {
+        let _span = crate::span!("segment.write", "y0 {} x{}", window.y0, ids.len());
         if window.z != self.slice {
             return Err(PdfflowError::InvalidArg(format!(
                 "segment holds slice {}, got window of slice {}",
@@ -227,6 +228,7 @@ impl SegmentWriter {
 
     /// Write the footer index + checksummed trailer and close the file.
     pub fn finish(mut self) -> Result<SegmentMeta> {
+        let _span = crate::span!("segment.finish", "{}", self.file_name);
         let footer_off = self.offset;
         let mut footer = Vec::with_capacity(self.entries.len() * ENTRY_LEN as usize + 16);
         for e in &self.entries {
@@ -361,6 +363,7 @@ impl SegmentReader {
 
     /// Read and decode one window's records (one positioned read).
     pub fn read_window(&self, idx: usize) -> Result<Vec<PdfRecord>> {
+        let _span = crate::span!("segment.read", "{} win {idx}", self.meta.file);
         let e = &self.entries[idx];
         let mut buf = vec![0u8; (e.n_records as usize) * REC_LEN];
         self.file.read_exact_at(&mut buf, e.offset)?;

@@ -339,8 +339,19 @@ fn worker_loop(pool: Arc<HostPool>, k: usize) {
         let stat = &pool.worker_stats[k];
         stat.tickets.fetch_add(1, Ordering::Relaxed);
         stat.busy_nanos.fetch_add(nanos, Ordering::Relaxed);
+        ticket_hist().record(nanos);
         pool.busy.fetch_sub(1, Ordering::Relaxed);
     }
+}
+
+/// Process-wide ticket-duration histogram (`pool.ticket_ns`). All
+/// pools feed it — test pools included — so it measures the host's
+/// overall task-size distribution; per-pool assertions stay on the
+/// instance-local [`WorkerStat`] atomics above.
+fn ticket_hist() -> &'static crate::telemetry::Histogram {
+    static HIST: std::sync::OnceLock<std::sync::Arc<crate::telemetry::Histogram>> =
+        std::sync::OnceLock::new();
+    HIST.get_or_init(|| crate::telemetry::Registry::global().histogram("pool.ticket_ns"))
 }
 
 impl HostPool {

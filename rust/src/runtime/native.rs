@@ -29,6 +29,23 @@ use crate::{PdfflowError, Result};
 use super::hostpool::HostPool;
 use super::{Backend, BackendMetrics, OutMatrix};
 
+/// Process-wide backend counters (`backend.executions`,
+/// `backend.rows`) — summed over every backend instance, so exporters
+/// see the host's total kernel traffic.
+fn global_counters() -> &'static (
+    Arc<crate::telemetry::Counter>,
+    Arc<crate::telemetry::Counter>,
+) {
+    static C: std::sync::OnceLock<(
+        Arc<crate::telemetry::Counter>,
+        Arc<crate::telemetry::Counter>,
+    )> = std::sync::OnceLock::new();
+    C.get_or_init(|| {
+        let r = crate::telemetry::Registry::global();
+        (r.counter("backend.executions"), r.counter("backend.rows"))
+    })
+}
+
 /// Per-chunk scratch, reused across every point of the chunk: the
 /// f64-converted observation vector, the quantile subsample, and the
 /// Eq. 5 histogram + interval edges.
@@ -146,6 +163,13 @@ impl NativeBackend {
             });
         }
         let dt = t0.elapsed().as_secs_f64();
+        {
+            // Process totals for exporters; instance-local `metrics`
+            // below stays the per-backend source of truth.
+            let (execs, rows) = global_counters();
+            execs.add(n_chunks as u64);
+            rows.add(n_points as u64);
+        }
         let mut m = self.metrics.lock().unwrap();
         m.executions += n_chunks as u64;
         m.rows_processed += n_points as u64;

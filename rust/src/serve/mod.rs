@@ -29,12 +29,13 @@
 //! lands in `BENCH_queries.json` next to the raw engine numbers.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
 use crate::cube::PointId;
 use crate::pdfstore::{PdfRecord, QueryEngine, RegionQuery, RegionSummary};
 use crate::spatial::{BoxQuery, KnnQuery, RadiusQuery, RunDiff};
+use crate::telemetry::{Histogram, Registry, Span};
 use crate::util::prng::Rng;
 use crate::{PdfflowError, Result};
 
@@ -124,6 +125,19 @@ impl Class {
             Class::Diff => "diff",
         }
     }
+
+    /// Static span name for this class's service-time span.
+    fn span_name(self) -> &'static str {
+        match self {
+            Class::Point => "serve.point",
+            Class::Region => "serve.region",
+            Class::Analytic => "serve.analytic",
+            Class::Box => "serve.box",
+            Class::Radius => "serve.radius",
+            Class::Knn => "serve.knn",
+            Class::Diff => "serve.diff",
+        }
+    }
 }
 
 impl Request {
@@ -141,15 +155,24 @@ impl Request {
 }
 
 /// Always-on per-class counters (atomics; snapshot via `metrics()`).
+///
+/// Latency and queue wait live in log-linear [`Histogram`]s rather
+/// than the old raw `AtomicU64` nanosecond sums: the histogram's sum
+/// saturates instead of silently wrapping after ~2^64 ns of recorded
+/// latency, and percentiles (p50/p95/p99) fall out of the buckets.
+/// The histograms are front-owned `Arc`s so every `ServeFront` keeps
+/// instance-exact metrics; [`ServeFront::register_metrics`] shares the
+/// same handles with the process registry for exporters.
 #[derive(Default)]
 struct ClassCounters {
     admitted: AtomicU64,
     completed: AtomicU64,
     shed: AtomicU64,
     errors: AtomicU64,
-    latency_nanos: AtomicU64,
-    latency_max_nanos: AtomicU64,
-    queue_nanos: AtomicU64,
+    /// End-to-end latency (queue wait + execution), nanoseconds.
+    latency: Arc<Histogram>,
+    /// Admission-queue wait, nanoseconds.
+    queue: Arc<Histogram>,
 }
 
 /// Snapshot of one class's counters.
@@ -167,6 +190,13 @@ pub struct ClassMetrics {
     pub latency_s_sum: f64,
     /// Worst end-to-end latency, seconds.
     pub latency_s_max: f64,
+    /// Median end-to-end latency, seconds (log-linear bucket bound,
+    /// ≤ ~3% relative error).
+    pub latency_p50_s: f64,
+    /// 95th-percentile end-to-end latency, seconds.
+    pub latency_p95_s: f64,
+    /// 99th-percentile end-to-end latency, seconds.
+    pub latency_p99_s: f64,
     /// Summed admission-queue wait, seconds.
     pub queue_s_sum: f64,
 }
@@ -274,6 +304,26 @@ impl ServeFront {
         &self.engine
     }
 
+    /// Share this front's per-class latency/queue histograms with the
+    /// process registry as `serve.<class>.latency_ns` /
+    /// `serve.<class>.queue_ns`, so `--metrics-out` snapshots carry
+    /// them. Call once on the front actually serving traffic (tests
+    /// construct throwaway fronts that stay unregistered).
+    pub fn register_metrics(&self) {
+        let reg = Registry::global();
+        for c in Class::ALL {
+            let counters = &self.classes[c as usize];
+            reg.register_histogram(
+                &format!("serve.{}.latency_ns", c.name()),
+                Arc::clone(&counters.latency),
+            );
+            reg.register_histogram(
+                &format!("serve.{}.queue_ns", c.name()),
+                Arc::clone(&counters.queue),
+            );
+        }
+    }
+
     pub fn options(&self) -> ServeOptions {
         self.opts
     }
@@ -308,6 +358,10 @@ impl ServeFront {
         let queue_wait = arrived.elapsed();
         class.admitted.fetch_add(1, Ordering::Relaxed);
 
+        // Service-time span (the latency histogram below covers the
+        // full queue-wait + execution path; this span is execution
+        // only).
+        let span = Span::enter(req.class().span_name());
         let result = match req {
             Request::Point(id) => self.engine.point_by_id(id).map(Reply::Point),
             Request::Region(q) => self.engine.region_summary(&q).map(Reply::Region),
@@ -325,6 +379,8 @@ impl ServeFront {
             },
         };
 
+        drop(span);
+
         // Release the slot before metering, so a successor is admitted
         // as early as possible.
         {
@@ -333,11 +389,8 @@ impl ServeFront {
         }
         self.cv.notify_one();
 
-        let latency = arrived.elapsed().as_nanos() as u64;
-        class.queue_nanos
-            .fetch_add(queue_wait.as_nanos() as u64, Ordering::Relaxed);
-        class.latency_nanos.fetch_add(latency, Ordering::Relaxed);
-        class.latency_max_nanos.fetch_max(latency, Ordering::Relaxed);
+        class.queue.record_duration(queue_wait);
+        class.latency.record_duration(arrived.elapsed());
         match &result {
             Ok(_) => {
                 class.completed.fetch_add(1, Ordering::Relaxed);
@@ -355,9 +408,12 @@ impl ServeFront {
             completed: c.completed.load(Ordering::Relaxed),
             shed: c.shed.load(Ordering::Relaxed),
             errors: c.errors.load(Ordering::Relaxed),
-            latency_s_sum: c.latency_nanos.load(Ordering::Relaxed) as f64 / 1e9,
-            latency_s_max: c.latency_max_nanos.load(Ordering::Relaxed) as f64 / 1e9,
-            queue_s_sum: c.queue_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+            latency_s_sum: c.latency.sum() as f64 / 1e9,
+            latency_s_max: c.latency.max() as f64 / 1e9,
+            latency_p50_s: c.latency.quantile(0.50) as f64 / 1e9,
+            latency_p95_s: c.latency.quantile(0.95) as f64 / 1e9,
+            latency_p99_s: c.latency.quantile(0.99) as f64 / 1e9,
+            queue_s_sum: c.queue.sum() as f64 / 1e9,
         };
         let g = self.gate.lock().unwrap();
         ServeMetrics {

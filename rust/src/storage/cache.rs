@@ -57,7 +57,15 @@ pub struct WindowCache {
 impl WindowCache {
     pub fn new(capacity_bytes: u64) -> Self {
         WindowCache {
-            lru: ShardedStampLru::new(capacity_bytes, 1, |m: &Arc<ObsMatrix>| m.bytes()),
+            // Mirrored in the process registry as `cache.window.*` —
+            // every pipeline window cache sums into one exported meter
+            // while `stats()` stays instance-exact.
+            lru: ShardedStampLru::with_label(
+                capacity_bytes,
+                1,
+                |m: &Arc<ObsMatrix>| m.bytes(),
+                "window",
+            ),
         }
     }
 

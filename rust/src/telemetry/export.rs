@@ -1,0 +1,280 @@
+//! Exporters: JSON snapshot (`pdfflow.telemetry.v1`) and Prometheus
+//! text format, plus the provenance block (git rev, build profile)
+//! that makes snapshots joinable with `BENCH_*.json` rows.
+//!
+//! `pdfflow run|serve --metrics-out PATH` writes the JSON snapshot at
+//! `PATH` and the Prometheus rendering at `PATH.prom`;
+//! `pdfflow telemetry validate PATH` re-parses a snapshot against
+//! [`validate_snapshot`] (the CI step).
+
+use std::path::Path;
+
+use crate::util::json::Json;
+use crate::{PdfflowError, Result};
+
+use super::{hist, Metric, Registry};
+
+/// Schema tag stamped into every snapshot.
+pub const SCHEMA: &str = "pdfflow.telemetry.v1";
+
+/// Current git revision, read from `.git` with plain file I/O (no
+/// subprocess): walks up from the current directory to the repo root,
+/// resolves `HEAD` through refs and `packed-refs`. "unknown" when not
+/// in a checkout (e.g. an unpacked release tarball).
+pub fn git_rev() -> String {
+    fn resolve(dir: &Path) -> Option<String> {
+        let head = std::fs::read_to_string(dir.join(".git/HEAD")).ok()?;
+        let head = head.trim();
+        let Some(refname) = head.strip_prefix("ref: ") else {
+            return Some(head.to_string()); // detached HEAD: raw hash
+        };
+        if let Ok(h) = std::fs::read_to_string(dir.join(".git").join(refname)) {
+            return Some(h.trim().to_string());
+        }
+        let packed = std::fs::read_to_string(dir.join(".git/packed-refs")).ok()?;
+        packed.lines().find_map(|l| {
+            let (hash, name) = l.split_once(' ')?;
+            (name.trim() == refname).then(|| hash.to_string())
+        })
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| Path::new(".").to_path_buf());
+    loop {
+        if let Some(rev) = resolve(&dir) {
+            return rev;
+        }
+        if !dir.pop() {
+            return "unknown".into();
+        }
+    }
+}
+
+/// Build profile this binary was compiled with.
+pub fn build_profile() -> &'static str {
+    if cfg!(debug_assertions) {
+        "debug"
+    } else {
+        "release"
+    }
+}
+
+/// Provenance block shared by telemetry snapshots, flight-recorder
+/// dumps, and (via [`crate::bench`]) the BENCH JSON configs.
+pub fn provenance() -> Json {
+    let ts = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    Json::obj(vec![
+        ("git_rev", Json::Str(git_rev())),
+        ("profile", Json::Str(build_profile().into())),
+        ("unix_ts", Json::Num(ts as f64)),
+    ])
+}
+
+fn histogram_json(h: &super::Histogram) -> Json {
+    let buckets: Vec<Json> = h
+        .nonzero_buckets()
+        .into_iter()
+        .map(|(idx, c)| {
+            let (lo, hi) = hist::bucket_bounds(idx);
+            Json::Arr(vec![
+                Json::Num(lo as f64),
+                Json::Num(hi as f64),
+                Json::Num(c as f64),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("type", Json::Str("histogram".into())),
+        ("count", Json::Num(h.count() as f64)),
+        ("sum", Json::Num(h.sum() as f64)),
+        ("min", Json::Num(h.min().unwrap_or(0) as f64)),
+        ("max", Json::Num(h.max() as f64)),
+        ("mean", Json::Num(h.mean())),
+        ("p50", Json::Num(h.quantile(0.50) as f64)),
+        ("p95", Json::Num(h.quantile(0.95) as f64)),
+        ("p99", Json::Num(h.quantile(0.99) as f64)),
+        ("buckets", Json::Arr(buckets)),
+    ])
+}
+
+/// The `metrics` object: every registered metric, rendered by type.
+pub fn metrics_json() -> Json {
+    super::publish_process_metrics();
+    let mut pairs = Vec::new();
+    for (name, metric) in Registry::global().snapshot() {
+        let v = match &metric {
+            Metric::Counter(c) => Json::obj(vec![
+                ("type", Json::Str("counter".into())),
+                ("value", Json::Num(c.get() as f64)),
+            ]),
+            Metric::Gauge(g) => Json::obj(vec![
+                ("type", Json::Str("gauge".into())),
+                ("value", Json::Num(g.get())),
+            ]),
+            Metric::Histogram(h) => histogram_json(h),
+        };
+        pairs.push((name, v));
+    }
+    Json::Obj(pairs.into_iter().collect())
+}
+
+/// Full snapshot document (schema + provenance + metrics).
+pub fn snapshot() -> Json {
+    Json::obj(vec![
+        ("schema", Json::Str(SCHEMA.into())),
+        ("provenance", provenance()),
+        ("metrics", metrics_json()),
+    ])
+}
+
+/// Sanitize a dotted metric name into a Prometheus identifier.
+fn prom_name(name: &str) -> String {
+    let mut out = String::with_capacity(name.len() + 8);
+    out.push_str("pdfflow_");
+    for c in name.chars() {
+        out.push(if c.is_ascii_alphanumeric() { c } else { '_' });
+    }
+    out
+}
+
+/// Render the registry in the Prometheus text exposition format.
+pub fn prometheus() -> String {
+    super::publish_process_metrics();
+    let mut out = String::new();
+    for (name, metric) in Registry::global().snapshot() {
+        let p = prom_name(&name);
+        match &metric {
+            Metric::Counter(c) => {
+                out.push_str(&format!("# TYPE {p} counter\n{p} {}\n", c.get()));
+            }
+            Metric::Gauge(g) => {
+                out.push_str(&format!("# TYPE {p} gauge\n{p} {}\n", g.get()));
+            }
+            Metric::Histogram(h) => {
+                out.push_str(&format!("# TYPE {p} histogram\n"));
+                let mut cum = 0u64;
+                for (idx, c) in h.nonzero_buckets() {
+                    cum += c;
+                    let (_, hi) = hist::bucket_bounds(idx);
+                    out.push_str(&format!("{p}_bucket{{le=\"{hi}\"}} {cum}\n"));
+                }
+                out.push_str(&format!("{p}_bucket{{le=\"+Inf\"}} {}\n", h.count()));
+                out.push_str(&format!("{p}_sum {}\n", h.sum()));
+                out.push_str(&format!("{p}_count {}\n", h.count()));
+            }
+        }
+    }
+    out
+}
+
+fn need<'a>(j: &'a Json, key: &str, what: &str) -> Result<&'a Json> {
+    j.get(key)
+        .ok_or_else(|| PdfflowError::Format(format!("{what}: missing key {key:?}")))
+}
+
+fn need_num(j: &Json, key: &str, what: &str) -> Result<f64> {
+    need(j, key, what)?
+        .as_f64()
+        .ok_or_else(|| PdfflowError::Format(format!("{what}: {key:?} is not a number")))
+}
+
+/// Validate a parsed snapshot against the `pdfflow.telemetry.v1`
+/// schema: schema tag, provenance (git_rev + profile), and every
+/// metric well-formed for its declared type. Returns the metric count.
+pub fn validate_snapshot(j: &Json) -> Result<usize> {
+    match need(j, "schema", "snapshot")?.as_str() {
+        Some(SCHEMA) => {}
+        other => {
+            return Err(PdfflowError::Format(format!(
+                "snapshot: schema {other:?}, expected {SCHEMA:?}"
+            )))
+        }
+    }
+    let prov = need(j, "provenance", "snapshot")?;
+    for key in ["git_rev", "profile"] {
+        if need(prov, key, "provenance")?.as_str().is_none() {
+            return Err(PdfflowError::Format(format!(
+                "provenance: {key:?} is not a string"
+            )));
+        }
+    }
+    need_num(prov, "unix_ts", "provenance")?;
+    let Json::Obj(metrics) = need(j, "metrics", "snapshot")? else {
+        return Err(PdfflowError::Format("snapshot: metrics is not an object".into()));
+    };
+    for (name, m) in metrics {
+        let what = format!("metric {name:?}");
+        match need(m, "type", &what)?.as_str() {
+            Some("counter") | Some("gauge") => {
+                need_num(m, "value", &what)?;
+            }
+            Some("histogram") => {
+                let count = need_num(m, "count", &what)?;
+                for key in ["sum", "min", "max", "mean", "p50", "p95", "p99"] {
+                    need_num(m, key, &what)?;
+                }
+                let buckets = need(m, "buckets", &what)?
+                    .as_arr()
+                    .ok_or_else(|| PdfflowError::Format(format!("{what}: buckets not an array")))?;
+                let mut total = 0.0;
+                for b in buckets {
+                    let t = b.as_arr().filter(|t| t.len() == 3).ok_or_else(|| {
+                        PdfflowError::Format(format!("{what}: bucket is not [low,high,count]"))
+                    })?;
+                    total += t[2].as_f64().unwrap_or(f64::NAN);
+                }
+                if total != count {
+                    return Err(PdfflowError::Format(format!(
+                        "{what}: bucket counts sum to {total}, count says {count}"
+                    )));
+                }
+            }
+            other => {
+                return Err(PdfflowError::Format(format!(
+                    "{what}: unknown type {other:?}"
+                )))
+            }
+        }
+    }
+    Ok(metrics.len())
+}
+
+/// Write the JSON snapshot at `path` and the Prometheus text at
+/// `path.prom`. Returns the two paths.
+pub fn write_metrics(path: impl AsRef<Path>) -> Result<(std::path::PathBuf, std::path::PathBuf)> {
+    let json_path = path.as_ref().to_path_buf();
+    if let Some(parent) = json_path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(&json_path, format!("{}\n", snapshot()))?;
+    let mut prom_path = json_path.clone().into_os_string();
+    prom_path.push(".prom");
+    let prom_path = std::path::PathBuf::from(prom_path);
+    std::fs::write(&prom_path, prometheus())?;
+    Ok((json_path, prom_path))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn git_rev_resolves_in_this_checkout() {
+        // The repo this crate lives in is a git checkout; the rev must
+        // be a 40-hex hash there. Elsewhere, "unknown" is acceptable.
+        let rev = git_rev();
+        assert!(
+            rev == "unknown" || (rev.len() == 40 && rev.chars().all(|c| c.is_ascii_hexdigit())),
+            "unexpected git rev {rev:?}"
+        );
+    }
+
+    #[test]
+    fn prom_names_are_sanitized() {
+        assert_eq!(prom_name("cache.window.hits"), "pdfflow_cache_window_hits");
+        assert_eq!(prom_name("span.serve.point.ns"), "pdfflow_span_serve_point_ns");
+    }
+}

@@ -1,0 +1,191 @@
+//! Flight recorder: a bounded ring of recent span events, dumped to
+//! `<dump_dir>/flightrec-<ts>.json` on panic or error exit.
+//!
+//! A TB-scale pipeline that dies hours in leaves nothing behind unless
+//! something was continuously recording. The ring keeps the last
+//! `PDFFLOW_FLIGHTREC_CAP` (default 8192) begin/end/mark events —
+//! enough to reconstruct what every thread was inside when the process
+//! died — and the dump includes a full metrics snapshot, so the one
+//! JSON file answers both "where was it" and "how far had it got".
+//!
+//! The recorder is armed by [`install_crash_hook`] (the CLI does this
+//! at startup); library users can also call [`dump`] directly. Pushes
+//! are gated by [`crate::telemetry::enabled`], so the ring costs
+//! nothing when tracing is off.
+
+use std::collections::VecDeque;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed};
+use std::sync::{Mutex, OnceLock};
+
+use crate::util::json::Json;
+
+/// What an [`Event`] marks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    Begin,
+    End,
+    Mark,
+}
+
+impl Kind {
+    fn name(self) -> &'static str {
+        match self {
+            Kind::Begin => "begin",
+            Kind::End => "end",
+            Kind::Mark => "mark",
+        }
+    }
+}
+
+/// One recorded span boundary or marker.
+#[derive(Clone, Debug)]
+pub struct Event {
+    /// Global order (monotone across threads).
+    pub seq: u64,
+    /// Nanoseconds since process telemetry epoch.
+    pub t_ns: u64,
+    /// Dense per-process thread id.
+    pub thread: u64,
+    /// Span nesting depth on that thread at event time.
+    pub depth: u32,
+    pub kind: Kind,
+    pub name: &'static str,
+    pub detail: Option<String>,
+}
+
+fn ring_cap() -> usize {
+    static CAP: OnceLock<usize> = OnceLock::new();
+    *CAP.get_or_init(|| {
+        std::env::var("PDFFLOW_FLIGHTREC_CAP")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or(8192)
+    })
+}
+
+struct Ring {
+    events: Mutex<VecDeque<Event>>,
+    dropped: AtomicU64,
+}
+
+fn ring() -> &'static Ring {
+    static RING: OnceLock<Ring> = OnceLock::new();
+    RING.get_or_init(|| Ring {
+        events: Mutex::new(VecDeque::with_capacity(ring_cap().min(1024))),
+        dropped: AtomicU64::new(0),
+    })
+}
+
+/// Append an event, evicting the oldest past capacity.
+pub(crate) fn push(ev: Event) {
+    let r = ring();
+    let mut q = r.events.lock().unwrap();
+    if q.len() >= ring_cap() {
+        q.pop_front();
+        r.dropped.fetch_add(1, Relaxed);
+    }
+    q.push_back(ev);
+}
+
+/// Drain and return every buffered event (test hook; resets the ring).
+pub fn take_events() -> Vec<Event> {
+    let r = ring();
+    let mut q = r.events.lock().unwrap();
+    q.drain(..).collect()
+}
+
+/// Events evicted from the ring since process start.
+pub fn dropped() -> u64 {
+    ring().dropped.load(Relaxed)
+}
+
+static DUMP_DIR: OnceLock<Mutex<PathBuf>> = OnceLock::new();
+
+fn dump_dir_lock() -> &'static Mutex<PathBuf> {
+    DUMP_DIR.get_or_init(|| Mutex::new(PathBuf::from(".")))
+}
+
+/// Where crash dumps land — the CLI points this at the store dir as
+/// soon as one is known, so the dump sits next to the data it
+/// describes.
+pub fn set_dump_dir(dir: impl AsRef<Path>) {
+    *dump_dir_lock().lock().unwrap() = dir.as_ref().to_path_buf();
+}
+
+fn event_json(ev: &Event) -> Json {
+    let mut pairs = vec![
+        ("seq", Json::Num(ev.seq as f64)),
+        ("t_ns", Json::Num(ev.t_ns as f64)),
+        ("thread", Json::Num(ev.thread as f64)),
+        ("depth", Json::Num(ev.depth as f64)),
+        ("kind", Json::Str(ev.kind.name().into())),
+        ("name", Json::Str(ev.name.into())),
+    ];
+    if let Some(d) = &ev.detail {
+        pairs.push(("detail", Json::Str(d.clone())));
+    }
+    Json::obj(pairs)
+}
+
+/// Serialize the current ring + metrics snapshot (without clearing).
+pub fn dump_json(reason: &str) -> Json {
+    let r = ring();
+    let events: Vec<Json> = r.events.lock().unwrap().iter().map(event_json).collect();
+    Json::obj(vec![
+        ("schema", Json::Str("pdfflow.flightrec.v1".into())),
+        ("reason", Json::Str(reason.into())),
+        ("provenance", super::export::provenance()),
+        ("dropped", Json::Num(r.dropped.load(Relaxed) as f64)),
+        ("events", Json::Arr(events)),
+        ("metrics", super::export::metrics_json()),
+    ])
+}
+
+/// Write `flightrec-<unix_ts>.json` into the configured dump dir.
+/// Returns the path written. Never panics (a crash hook must not).
+pub fn dump(reason: &str) -> std::io::Result<PathBuf> {
+    let dir = dump_dir_lock().lock().unwrap().clone();
+    let ts = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let mut path = dir.join(format!("flightrec-{ts}.json"));
+    // Two crashes in one second must not clobber each other.
+    let mut k = 0;
+    while path.exists() {
+        k += 1;
+        path = dir.join(format!("flightrec-{ts}-{k}.json"));
+    }
+    std::fs::create_dir_all(&dir)?;
+    std::fs::write(&path, format!("{}\n", dump_json(reason)))?;
+    Ok(path)
+}
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+
+/// Arm (or disarm) crash dumping without reinstalling the hook.
+pub fn arm(on: bool) {
+    ARMED.store(on, Relaxed);
+}
+
+/// Install a panic hook that dumps the flight recorder, chaining the
+/// previously-installed hook. Idempotent; the hook only fires while
+/// armed (see [`arm`]).
+pub fn install_crash_hook() {
+    static INSTALLED: OnceLock<()> = OnceLock::new();
+    INSTALLED.get_or_init(|| {
+        arm(true);
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            if ARMED.load(Relaxed) && crate::telemetry::enabled() {
+                match dump("panic") {
+                    Ok(p) => eprintln!("flight recorder dumped to {}", p.display()),
+                    Err(e) => eprintln!("flight recorder dump failed: {e}"),
+                }
+            }
+            prev(info);
+        }));
+    });
+}

@@ -1,0 +1,244 @@
+//! Log-linear (HDR-style) concurrent histogram.
+//!
+//! Values are bucketed with 5 sub-bucket bits per power of two: buckets
+//! 0..32 hold the exact values 0..32, and every octave above that is
+//! split into 32 geometrically-placed sub-buckets, so any recorded
+//! value is off by at most 1/32 (~3%) of itself. The full `u64` range
+//! fits in [`NBUCKETS`] buckets, recording is a handful of relaxed
+//! atomic ops (no locks, no allocation), and histograms merge
+//! associatively — the properties that let one histogram sit on the
+//! serve hot path and still answer p50/p95/p99 at export time.
+//!
+//! The running `sum` saturates instead of wrapping: a long-lived
+//! nanosecond sum overflows `u64` after ~584 years of *recorded* time,
+//! but a wrapped sum silently corrupts derived means, which is exactly
+//! the `serve::ClassMetrics::latency_nanos` hazard this type replaces.
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+/// Sub-bucket resolution: 2^5 = 32 sub-buckets per octave.
+pub const SUB_BITS: u32 = 5;
+/// Sub-buckets per octave.
+pub const SUBS: usize = 1 << SUB_BITS;
+/// Total buckets covering all of `u64` (octaves 0..=59, 32 subs each).
+pub const NBUCKETS: usize = SUBS * 60;
+
+/// Bucket index of a value (total order preserving).
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v < SUBS as u64 {
+        return v as usize;
+    }
+    let msb = 63 - v.leading_zeros();
+    let octave = (msb - SUB_BITS + 1) as usize;
+    let sub = ((v >> (msb - SUB_BITS)) & (SUBS as u64 - 1)) as usize;
+    octave * SUBS + sub
+}
+
+/// Inclusive `[low, high]` value range covered by bucket `idx`.
+#[inline]
+pub fn bucket_bounds(idx: usize) -> (u64, u64) {
+    if idx < SUBS {
+        return (idx as u64, idx as u64);
+    }
+    let octave = (idx / SUBS) as u32;
+    let sub = (idx % SUBS) as u64;
+    let msb = octave + SUB_BITS - 1;
+    let low = (1u64 << msb) + (sub << (msb - SUB_BITS));
+    let high = low + (1u64 << (msb - SUB_BITS)) - 1;
+    (low, high)
+}
+
+fn saturating_fetch_add(cell: &AtomicU64, v: u64) {
+    let mut cur = cell.load(Relaxed);
+    loop {
+        let next = cur.saturating_add(v);
+        match cell.compare_exchange_weak(cur, next, Relaxed, Relaxed) {
+            Ok(_) => return,
+            Err(now) => cur = now,
+        }
+    }
+}
+
+/// Concurrent log-linear histogram. All recording ops are lock-free
+/// relaxed atomics; reads are racy-but-consistent-enough snapshots
+/// (exact once writers quiesce).
+pub struct Histogram {
+    buckets: Box<[AtomicU64]>,
+    count: AtomicU64,
+    /// Saturating sum of recorded values (never wraps).
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        let buckets: Vec<AtomicU64> = (0..NBUCKETS).map(|_| AtomicU64::new(0)).collect();
+        Histogram {
+            buckets: buckets.into_boxed_slice(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Relaxed);
+        self.count.fetch_add(1, Relaxed);
+        saturating_fetch_add(&self.sum, v);
+        self.min.fetch_min(v, Relaxed);
+        self.max.fetch_max(v, Relaxed);
+    }
+
+    #[inline]
+    pub fn record_duration(&self, d: std::time::Duration) {
+        self.record(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Relaxed)
+    }
+
+    /// Smallest recorded value (`None` while empty).
+    pub fn min(&self) -> Option<u64> {
+        let m = self.min.load(Relaxed);
+        if m == u64::MAX && self.count() == 0 {
+            None
+        } else {
+            Some(m)
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max.load(Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum() as f64 / n as f64
+        }
+    }
+
+    /// Value at quantile `q` in [0, 1] — the upper bound of the bucket
+    /// holding the ceil(q·count)-th recorded value, clamped to the
+    /// exact observed max (so `quantile(1.0) == max()`).
+    pub fn quantile(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * n as f64).ceil() as u64).clamp(1, n);
+        let mut cum = 0u64;
+        for (idx, b) in self.buckets.iter().enumerate() {
+            let c = b.load(Relaxed);
+            if c == 0 {
+                continue;
+            }
+            cum += c;
+            if cum >= rank {
+                return bucket_bounds(idx).1.min(self.max());
+            }
+        }
+        self.max()
+    }
+
+    /// Fold `other` into `self`. Associative and commutative: merging
+    /// per-shard histograms in any grouping yields the same totals.
+    pub fn merge(&self, other: &Histogram) {
+        for (mine, theirs) in self.buckets.iter().zip(other.buckets.iter()) {
+            let c = theirs.load(Relaxed);
+            if c > 0 {
+                mine.fetch_add(c, Relaxed);
+            }
+        }
+        self.count.fetch_add(other.count(), Relaxed);
+        saturating_fetch_add(&self.sum, other.sum());
+        if let Some(m) = other.min() {
+            self.min.fetch_min(m, Relaxed);
+        }
+        self.max.fetch_max(other.max(), Relaxed);
+    }
+
+    /// Zero every counter (bench harness use; racy under writers).
+    pub fn reset(&self) {
+        for b in self.buckets.iter() {
+            b.store(0, Relaxed);
+        }
+        self.count.store(0, Relaxed);
+        self.sum.store(0, Relaxed);
+        self.min.store(u64::MAX, Relaxed);
+        self.max.store(0, Relaxed);
+    }
+
+    /// Non-empty buckets as `(index, count)` in index order.
+    pub fn nonzero_buckets(&self) -> Vec<(usize, u64)> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter_map(|(i, b)| {
+                let c = b.load(Relaxed);
+                (c > 0).then_some((i, c))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_values_are_exact() {
+        for v in 0..SUBS as u64 {
+            assert_eq!(bucket_index(v), v as usize);
+            assert_eq!(bucket_bounds(v as usize), (v, v));
+        }
+    }
+
+    #[test]
+    fn buckets_tile_u64_without_gaps() {
+        // Bounds must be contiguous: high(i) + 1 == low(i+1).
+        for idx in 0..NBUCKETS - 1 {
+            let (_, high) = bucket_bounds(idx);
+            let (low_next, _) = bucket_bounds(idx + 1);
+            assert_eq!(high.wrapping_add(1), low_next, "gap after bucket {idx}");
+        }
+        assert_eq!(bucket_bounds(NBUCKETS - 1).1, u64::MAX);
+    }
+
+    #[test]
+    fn index_matches_bounds() {
+        for &v in &[0u64, 1, 31, 32, 33, 63, 64, 100, 1000, 1 << 20, u64::MAX] {
+            let idx = bucket_index(v);
+            let (lo, hi) = bucket_bounds(idx);
+            assert!(lo <= v && v <= hi, "value {v} outside bucket {idx} [{lo},{hi}]");
+        }
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        let mut v = 1u64;
+        while v < u64::MAX / 3 {
+            let (lo, hi) = bucket_bounds(bucket_index(v));
+            // Bucket width ≤ low/32 for v ≥ 32; exact below.
+            assert!(hi - lo <= lo.max(1) / SUBS as u64 + 1);
+            v = v.wrapping_mul(3) + 7;
+        }
+    }
+}

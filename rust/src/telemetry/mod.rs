@@ -1,0 +1,392 @@
+//! Unified telemetry: metrics registry, span tracing, flight recorder.
+//!
+//! The source paper's whole contribution is an execution-time argument;
+//! this module is the one surface every perf claim in this repo reports
+//! against. Three layers:
+//!
+//! * **Registry** — a process-wide map of named [`Counter`]s,
+//!   [`Gauge`]s, and log-linear [`Histogram`]s. Handles are `Arc`s:
+//!   registration takes a mutex once, after which the hot path is
+//!   relaxed atomics only. Names are dotted (`pool.ticket_ns`,
+//!   `cache.window.hits`); exporters map them to Prometheus /
+//!   JSON identifiers.
+//! * **Spans** — RAII timers ([`Span::enter`], the [`span!`] macro)
+//!   at pipeline-stage granularity (load → fit → persist, segment
+//!   I/O, serve requests). Each closed span records its duration into
+//!   the `span.<name>.ns` histogram and pushes begin/end events into
+//!   the flight recorder. Spans are gated: compile-time by the
+//!   `telemetry` cargo feature (on by default), run-time by
+//!   `PDFFLOW_TRACE` (`0`/`off`/`false` disables) or
+//!   [`set_enabled`]. Disabled spans cost one relaxed load.
+//! * **Flight recorder** ([`flight`]) — a bounded ring of recent span
+//!   events dumped to `flightrec-<ts>.json` on panic or error exit, so
+//!   a killed TB-scale run is diagnosable post-mortem.
+//!
+//! Always-on meters (cache hit/miss counters, pool/backend totals) stay
+//! live regardless of the trace gate — they are cheap and the existing
+//! metrics structs' accessors are derived from them.
+
+pub mod export;
+pub mod flight;
+pub mod hist;
+pub mod text;
+
+use std::cell::Cell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering::Relaxed};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+pub use hist::Histogram;
+
+/// Monotonic counter (relaxed atomics; never decreases).
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Relaxed)
+    }
+}
+
+/// Last-write-wins `f64` gauge (bits stored in an `AtomicU64`).
+#[derive(Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn new() -> Gauge {
+        Gauge(AtomicU64::new(0f64.to_bits()))
+    }
+
+    #[inline]
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Relaxed))
+    }
+}
+
+/// One registered metric (shared handle).
+#[derive(Clone)]
+pub enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+impl Metric {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) => "gauge",
+            Metric::Histogram(_) => "histogram",
+        }
+    }
+}
+
+/// Named-metric registry. Get-or-create returns shared handles;
+/// the map mutex is only held during registration and snapshot.
+#[derive(Default)]
+pub struct Registry {
+    metrics: Mutex<BTreeMap<String, Metric>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// The process-wide registry every instrumented subsystem feeds.
+    pub fn global() -> &'static Registry {
+        static GLOBAL: OnceLock<Registry> = OnceLock::new();
+        GLOBAL.get_or_init(Registry::new)
+    }
+
+    /// Get-or-create a counter. A name already registered as another
+    /// type yields a fresh detached handle (recorded values are then
+    /// invisible to exporters rather than corrupting the other metric).
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut m = self.metrics.lock().unwrap();
+        let entry = m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Counter(Arc::new(Counter::new())));
+        match entry {
+            Metric::Counter(c) => Arc::clone(c),
+            _ => {
+                debug_assert!(false, "metric {name:?} registered as {}", entry.kind());
+                Arc::new(Counter::new())
+            }
+        }
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut m = self.metrics.lock().unwrap();
+        let entry = m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Gauge(Arc::new(Gauge::new())));
+        match entry {
+            Metric::Gauge(g) => Arc::clone(g),
+            _ => {
+                debug_assert!(false, "metric {name:?} registered as {}", entry.kind());
+                Arc::new(Gauge::new())
+            }
+        }
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut m = self.metrics.lock().unwrap();
+        let entry = m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Histogram(Arc::new(Histogram::new())));
+        match entry {
+            Metric::Histogram(h) => Arc::clone(h),
+            _ => {
+                debug_assert!(false, "metric {name:?} registered as {}", entry.kind());
+                Arc::new(Histogram::new())
+            }
+        }
+    }
+
+    /// Register (or replace) `name` with an externally-owned histogram
+    /// — how per-instance metrics (serve class latencies) surface in
+    /// the process snapshot without giving up instance-exact accessors.
+    pub fn register_histogram(&self, name: &str, h: Arc<Histogram>) {
+        self.metrics
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), Metric::Histogram(h));
+    }
+
+    /// Convenience: point gauge write without keeping the handle.
+    pub fn set_gauge(&self, name: &str, v: f64) {
+        self.gauge(name).set(v);
+    }
+
+    /// Stable-ordered snapshot of every registered metric.
+    pub fn snapshot(&self) -> Vec<(String, Metric)> {
+        self.metrics
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Trace gate
+// ---------------------------------------------------------------------
+
+/// 0 = unresolved, 1 = off, 2 = on.
+static TRACE_STATE: AtomicU8 = AtomicU8::new(0);
+
+fn env_trace_default() -> bool {
+    // Tracing defaults ON; PDFFLOW_TRACE=0|off|false disables it.
+    match std::env::var("PDFFLOW_TRACE") {
+        Ok(v) => !matches!(v.trim().to_ascii_lowercase().as_str(), "0" | "off" | "false"),
+        Err(_) => true,
+    }
+}
+
+/// Is span tracing / flight recording live? One relaxed load after the
+/// first call; compiled to `false` without the `telemetry` feature.
+#[inline]
+pub fn enabled() -> bool {
+    #[cfg(not(feature = "telemetry"))]
+    {
+        false
+    }
+    #[cfg(feature = "telemetry")]
+    {
+        match TRACE_STATE.load(Relaxed) {
+            0 => {
+                let on = env_trace_default();
+                TRACE_STATE.store(if on { 2 } else { 1 }, Relaxed);
+                on
+            }
+            1 => false,
+            _ => true,
+        }
+    }
+}
+
+/// Programmatic override of the trace gate (benches, tests).
+pub fn set_enabled(on: bool) {
+    TRACE_STATE.store(if on { 2 } else { 1 }, Relaxed);
+}
+
+// ---------------------------------------------------------------------
+// Spans
+// ---------------------------------------------------------------------
+
+/// Nanoseconds since the first telemetry event in this process.
+pub fn now_ns() -> u64 {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+static NEXT_THREAD_ID: AtomicU64 = AtomicU64::new(0);
+static NEXT_SEQ: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    static THREAD_ID: u64 = NEXT_THREAD_ID.fetch_add(1, Relaxed);
+    static DEPTH: Cell<u32> = const { Cell::new(0) };
+}
+
+/// Small dense id of the calling thread (assigned on first use).
+pub fn thread_id() -> u64 {
+    THREAD_ID.with(|t| *t)
+}
+
+fn next_seq() -> u64 {
+    NEXT_SEQ.fetch_add(1, Relaxed)
+}
+
+/// RAII span: times a region, records `span.<name>.ns` on drop, and
+/// books begin/end events into the flight recorder. Construct via
+/// [`Span::enter`] / [`Span::enter_with`] / the [`span!`] macro.
+/// When tracing is disabled this is a no-op (no clock read).
+pub struct Span {
+    name: &'static str,
+    start: Option<Instant>,
+}
+
+impl Span {
+    #[inline]
+    pub fn enter(name: &'static str) -> Span {
+        Span::begin(name, None)
+    }
+
+    /// Like [`Span::enter`], but attaches a detail string — the closure
+    /// only runs (and allocates) when tracing is live.
+    #[inline]
+    pub fn enter_with(name: &'static str, detail: impl FnOnce() -> String) -> Span {
+        if !enabled() {
+            return Span { name, start: None };
+        }
+        Span::begin(name, Some(detail()))
+    }
+
+    fn begin(name: &'static str, detail: Option<String>) -> Span {
+        if !enabled() {
+            return Span { name, start: None };
+        }
+        let depth = DEPTH.with(|d| {
+            let v = d.get();
+            d.set(v + 1);
+            v
+        });
+        flight::push(flight::Event {
+            seq: next_seq(),
+            t_ns: now_ns(),
+            thread: thread_id(),
+            depth,
+            kind: flight::Kind::Begin,
+            name,
+            detail,
+        });
+        Span {
+            name,
+            start: Some(Instant::now()),
+        }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some(t0) = self.start else { return };
+        let elapsed = t0.elapsed();
+        let depth = DEPTH.with(|d| {
+            let v = d.get().saturating_sub(1);
+            d.set(v);
+            v
+        });
+        span_hist(self.name).record_duration(elapsed);
+        flight::push(flight::Event {
+            seq: next_seq(),
+            t_ns: now_ns(),
+            thread: thread_id(),
+            depth,
+            kind: flight::Kind::End,
+            name: self.name,
+            detail: None,
+        });
+    }
+}
+
+/// Cached `span.<name>.ns` histogram handles, keyed by the static span
+/// name — closing a span never allocates a registry key string twice.
+fn span_hist(name: &'static str) -> Arc<Histogram> {
+    static CACHE: OnceLock<Mutex<BTreeMap<&'static str, Arc<Histogram>>>> = OnceLock::new();
+    let cache = CACHE.get_or_init(|| Mutex::new(BTreeMap::new()));
+    let mut map = cache.lock().unwrap();
+    Arc::clone(
+        map.entry(name)
+            .or_insert_with(|| Registry::global().histogram(&format!("span.{name}.ns"))),
+    )
+}
+
+/// Drop a point-in-time marker event into the flight recorder.
+pub fn mark(name: &'static str, detail: impl FnOnce() -> String) {
+    if !enabled() {
+        return;
+    }
+    flight::push(flight::Event {
+        seq: next_seq(),
+        t_ns: now_ns(),
+        thread: thread_id(),
+        depth: DEPTH.with(|d| d.get()),
+        kind: flight::Kind::Mark,
+        name,
+        detail: Some(detail()),
+    });
+}
+
+/// Time a region until end of scope:
+/// `let _s = span!("fit");` or `let _s = span!("fit", "slice {z} window {w}");`
+/// The detail format arguments are only evaluated when tracing is live.
+#[macro_export]
+macro_rules! span {
+    ($name:literal) => {
+        $crate::telemetry::Span::enter($name)
+    };
+    ($name:literal, $($fmt:tt)+) => {
+        $crate::telemetry::Span::enter_with($name, || format!($($fmt)+))
+    };
+}
+
+// ---------------------------------------------------------------------
+// Process-level publication
+// ---------------------------------------------------------------------
+
+/// Copy point-in-time process metrics (host-pool occupancy) into the
+/// registry so exports carry them. Called by exporters right before a
+/// snapshot; cheap and idempotent.
+pub fn publish_process_metrics() {
+    let p = crate::runtime::hostpool::HostPool::global().metrics();
+    let r = Registry::global();
+    r.set_gauge("pool.budget", p.budget as f64);
+    r.set_gauge("pool.workers", p.workers as f64);
+    r.set_gauge("pool.tickets_run", p.tickets_run as f64);
+    r.set_gauge("pool.busy_seconds", p.busy_seconds);
+    r.set_gauge("pool.peak_busy", p.peak_busy as f64);
+    r.set_gauge("pool.peak_queue_depth", p.peak_queue_depth as f64);
+    r.set_gauge("pool.items_stolen", p.items_stolen as f64);
+    r.set_gauge("pool.items_helped", p.items_helped as f64);
+}

@@ -1,0 +1,113 @@
+//! Human-readable metric rendering — the one place the CLI's verbose
+//! blocks (pool, stage, cache, serve) are formatted, replacing the
+//! copy-pasted `println!` runs each subcommand used to carry.
+
+use std::fmt::Write as _;
+
+use crate::executor::StageMetrics;
+use crate::runtime::hostpool::PoolMetrics;
+use crate::serve::{Class, ServeMetrics};
+use crate::util::timing::{fmt_bytes, fmt_secs};
+
+/// Cache meter line data (both `storage::CacheStats` and
+/// `pdfstore::CacheMeters` convert into this).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheLine {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub bytes: u64,
+    pub entries: usize,
+}
+
+/// One renderable block of the verbose report.
+pub enum Section<'a> {
+    /// Host-pool occupancy + per-worker busy histogram.
+    Pool(&'a PoolMetrics),
+    /// One executor stage's counters, labeled.
+    Stage(&'a str, &'a StageMetrics),
+    /// One cache's meters, labeled.
+    Cache(&'a str, CacheLine),
+    /// The serving tier's per-class table.
+    Serve(&'a ServeMetrics),
+}
+
+/// Render the given sections as the CLI's indented verbose text.
+pub fn render_text(sections: &[Section]) -> String {
+    let mut out = String::new();
+    for s in sections {
+        match s {
+            Section::Pool(p) => {
+                let _ = writeln!(
+                    out,
+                    "  host pool: budget {} ({} workers), {} tickets, busy {}, peak busy {}, peak queue {}",
+                    p.budget,
+                    p.workers,
+                    p.tickets_run,
+                    fmt_secs(p.busy_seconds),
+                    p.peak_busy,
+                    p.peak_queue_depth
+                );
+                let _ = writeln!(
+                    out,
+                    "  pool items: {} stolen by workers / {} drained by helping callers",
+                    p.items_stolen, p.items_helped
+                );
+                let hist: Vec<String> = p
+                    .per_worker
+                    .iter()
+                    .enumerate()
+                    .map(|(k, w)| format!("w{k} {} ({} tickets)", fmt_secs(w.busy_s), w.tickets))
+                    .collect();
+                if !hist.is_empty() {
+                    let _ = writeln!(out, "  worker busy histogram: {}", hist.join(", "));
+                }
+            }
+            Section::Stage(label, e) => {
+                let _ = writeln!(
+                    out,
+                    "  stage {label}: {} tasks, busy {}, peak in-flight {}, peak reorder {}",
+                    e.tasks,
+                    fmt_secs(e.busy_s),
+                    e.peak_in_flight,
+                    e.peak_pending
+                );
+            }
+            Section::Cache(label, m) => {
+                let _ = writeln!(
+                    out,
+                    "{label}: {} hits / {} misses / {} evictions, {} resident in {} blocks",
+                    m.hits,
+                    m.misses,
+                    m.evictions,
+                    fmt_bytes(m.bytes),
+                    m.entries
+                );
+            }
+            Section::Serve(m) => {
+                for c in Class::ALL {
+                    let cm = m.class(c);
+                    if cm.admitted + cm.shed == 0 {
+                        continue;
+                    }
+                    let _ = writeln!(
+                        out,
+                        "  {:<9} admitted {:>7}  completed {:>7}  shed {:>6}  errors {:>4}  \
+                         p50 {}  p95 {}  p99 {}  max {}  queued {}",
+                        c.name(),
+                        cm.admitted,
+                        cm.completed,
+                        cm.shed,
+                        cm.errors,
+                        fmt_secs(cm.latency_p50_s),
+                        fmt_secs(cm.latency_p95_s),
+                        fmt_secs(cm.latency_p99_s),
+                        fmt_secs(cm.latency_s_max),
+                        fmt_secs(cm.queue_s_sum),
+                    );
+                }
+            }
+        }
+    }
+    out
+}

@@ -13,7 +13,9 @@
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
+
+use crate::telemetry::{Counter, Registry};
 
 /// Aggregated observability counters of a sharded LRU.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -44,6 +46,11 @@ pub struct ShardedStampLru<K, V> {
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
+    /// Shared process-registry counters (`cache.<label>.hits` / misses
+    /// / evictions), bumped alongside the instance meters when the
+    /// cache was built [`Self::with_label`]. Labelless caches (unit
+    /// tests, scratch caches) stay invisible to exporters.
+    published: Option<[Arc<Counter>; 3]>,
 }
 
 impl<K: Hash + Eq + Clone, V: Clone> ShardedStampLru<K, V> {
@@ -64,7 +71,28 @@ impl<K: Hash + Eq + Clone, V: Clone> ShardedStampLru<K, V> {
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
+            published: None,
         }
+    }
+
+    /// Like [`Self::new`], but also mirrors the meters into the process
+    /// registry under `cache.<label>.{hits,misses,evictions}`. Several
+    /// instances may share one label; the registry counters then sum
+    /// their traffic while each instance's `stats()` stays exact.
+    pub fn with_label(
+        capacity_bytes: u64,
+        n_shards: usize,
+        weigh: fn(&V) -> u64,
+        label: &str,
+    ) -> Self {
+        let r = Registry::global();
+        let mut lru = Self::new(capacity_bytes, n_shards, weigh);
+        lru.published = Some([
+            r.counter(&format!("cache.{label}.hits")),
+            r.counter(&format!("cache.{label}.misses")),
+            r.counter(&format!("cache.{label}.evictions")),
+        ]);
+        lru
     }
 
     fn shard_of(&self, key: &K) -> usize {
@@ -85,10 +113,16 @@ impl<K: Hash + Eq + Clone, V: Clone> ShardedStampLru<K, V> {
         match found {
             Some(v) => {
                 self.hits.fetch_add(1, Ordering::Relaxed);
+                if let Some([h, _, _]) = &self.published {
+                    h.inc();
+                }
                 Some(v)
             }
             None => {
                 self.misses.fetch_add(1, Ordering::Relaxed);
+                if let Some([_, m, _]) = &self.published {
+                    m.inc();
+                }
                 None
             }
         }
@@ -119,6 +153,9 @@ impl<K: Hash + Eq + Clone, V: Clone> ShardedStampLru<K, V> {
             let (_, evicted) = g.map.remove(&victim).unwrap();
             g.bytes -= (self.weigh)(&evicted);
             self.evictions.fetch_add(1, Ordering::Relaxed);
+            if let Some([_, _, e]) = &self.published {
+                e.inc();
+            }
         }
     }
 

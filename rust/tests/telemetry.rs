@@ -1,0 +1,255 @@
+//! Integration contract of the telemetry layer: histogram algebra,
+//! span nesting/ordering determinism across pool widths, the flight
+//! recorder's panic dump, and the exported-snapshot schema.
+//!
+//! Tests that touch process-global state (the trace gate, the flight
+//! ring, the dump dir) serialize through [`gate`] — the ring is one per
+//! process and `cargo test` runs tests concurrently.
+
+use std::collections::BTreeMap;
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use pdfflow::executor::Executor;
+use pdfflow::telemetry::{self, export, flight, hist, Histogram, Registry, Span};
+use pdfflow::util::json::Json;
+
+fn gate() -> MutexGuard<'static, ()> {
+    static GATE: OnceLock<Mutex<()>> = OnceLock::new();
+    GATE.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+}
+
+fn hist_of(vals: &[u64]) -> Histogram {
+    let h = Histogram::new();
+    for &v in vals {
+        h.record(v);
+    }
+    h
+}
+
+#[test]
+fn histogram_buckets_contain_their_values_and_quantiles_order() {
+    let vals: Vec<u64> = (0..12).map(|k| 3u64.pow(k)).collect();
+    let h = hist_of(&vals);
+    assert_eq!(h.count(), vals.len() as u64);
+    assert_eq!(h.sum(), vals.iter().sum::<u64>());
+    assert_eq!(h.min(), Some(1));
+    assert_eq!(h.max(), *vals.last().unwrap());
+    for &v in &vals {
+        let (lo, hi) = hist::bucket_bounds(hist::bucket_index(v));
+        assert!(lo <= v && v <= hi, "value {v} outside its bucket [{lo},{hi}]");
+    }
+    // Quantiles are monotone, end at the exact max, and each sits within
+    // the 1/32 relative-error bound of a true order statistic.
+    let mut prev = 0u64;
+    for q in [0.0, 0.25, 0.50, 0.75, 0.95, 0.99, 1.0] {
+        let v = h.quantile(q);
+        assert!(v >= prev, "quantile({q}) = {v} < quantile(prev) = {prev}");
+        prev = v;
+    }
+    assert_eq!(h.quantile(1.0), h.max());
+    let p50 = h.quantile(0.50);
+    let exact = vals[vals.len().div_ceil(2) - 1];
+    assert!(
+        p50 >= exact && p50 - exact <= exact / 32 + 1,
+        "p50 {p50} vs exact median {exact}"
+    );
+}
+
+#[test]
+fn histogram_merge_is_associative_and_commutative() {
+    let a = hist_of(&[1, 2, 3, 100, 5_000]);
+    let b = hist_of(&[7, 7, 7, 1 << 30]);
+    let c = hist_of(&[0, u64::MAX, 42]);
+    let left = Histogram::new(); // (a ∪ b) ∪ c
+    left.merge(&a);
+    left.merge(&b);
+    left.merge(&c);
+    let right = Histogram::new(); // b ∪ (c ∪ a), different grouping+order
+    right.merge(&b);
+    right.merge(&c);
+    right.merge(&a);
+    assert_eq!(left.nonzero_buckets(), right.nonzero_buckets());
+    assert_eq!(left.count(), right.count());
+    assert_eq!(left.sum(), right.sum());
+    assert_eq!(left.min(), right.min());
+    assert_eq!(left.max(), right.max());
+    assert_eq!(left.count(), 12);
+    // Saturating sum: u64::MAX is present, so the total pins at MAX
+    // instead of wrapping into a small number.
+    assert_eq!(left.sum(), u64::MAX);
+}
+
+/// One parallel pass: every item opens an outer span with a nested
+/// inner span; returns the flight events our spans produced.
+fn spanned_pass(width: usize, items: usize) -> Vec<flight::Event> {
+    flight::take_events(); // start from an empty ring
+    let exec = Executor::new(width);
+    exec.run((0..items).collect::<Vec<_>>(), |i| {
+        let _outer = Span::enter_with("tel.test.outer", || format!("item {i}"));
+        let _inner = pdfflow::span!("tel.test.inner");
+        std::hint::black_box(i * i)
+    });
+    flight::take_events()
+        .into_iter()
+        .filter(|e| e.name.starts_with("tel.test."))
+        .collect()
+}
+
+#[test]
+fn span_events_nest_and_match_across_pool_widths() {
+    let _g = gate();
+    telemetry::set_enabled(true);
+    let items = 24usize;
+    let mut per_width: Vec<Vec<String>> = Vec::new();
+    for width in [1usize, 2, 8] {
+        let mut events = spanned_pass(width, items);
+        // Every span closed: 2 spans x (begin + end) per item.
+        assert_eq!(events.len(), 4 * items, "width {width}: event count");
+        // Seq is assigned before the ring lock, so ring order can lag it
+        // slightly across threads; seq order is the canonical timeline
+        // (and stays chronological within each thread).
+        events.sort_by_key(|e| e.seq);
+        let mut seqs: Vec<u64> = events.iter().map(|e| e.seq).collect();
+        seqs.dedup();
+        assert_eq!(seqs.len(), events.len(), "global seq is unique");
+        // Per-thread stack discipline: an End always closes the most
+        // recent Begin on that thread, and inner nests inside outer.
+        let mut stacks: BTreeMap<u64, Vec<&'static str>> = BTreeMap::new();
+        for e in &events {
+            let stack = stacks.entry(e.thread).or_default();
+            match e.kind {
+                flight::Kind::Begin => {
+                    assert_eq!(e.depth as usize, stack.len(), "begin depth");
+                    if e.name == "tel.test.inner" {
+                        assert_eq!(stack.last(), Some(&"tel.test.outer"), "inner outside outer");
+                    }
+                    stack.push(e.name);
+                }
+                flight::Kind::End => {
+                    assert_eq!(stack.pop(), Some(e.name), "end closes wrong span");
+                    assert_eq!(e.depth as usize, stack.len(), "end depth");
+                }
+                flight::Kind::Mark => unreachable!("no marks emitted"),
+            }
+        }
+        assert!(stacks.values().all(|s| s.is_empty()), "unclosed spans");
+        // The work itself — which items ran, under which labels — is
+        // width-invariant even though interleaving is not.
+        let mut details: Vec<String> = events
+            .iter()
+            .filter_map(|e| e.detail.clone())
+            .collect();
+        details.sort();
+        per_width.push(details);
+    }
+    assert_eq!(per_width[0].len(), items);
+    assert!(
+        per_width.iter().all(|d| *d == per_width[0]),
+        "span details diverge across pool widths"
+    );
+    // Closed spans also landed in the registry's span histograms.
+    let h = Registry::global().histogram("span.tel.test.inner.ns");
+    assert!(h.count() >= 3 * items as u64, "span histogram undercounts");
+}
+
+#[test]
+fn flight_recorder_dumps_parseable_json_on_panic() {
+    let _g = gate();
+    telemetry::set_enabled(true);
+    let dir = std::env::temp_dir().join(format!("pdfflow-flightrec-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    flight::set_dump_dir(&dir);
+    flight::install_crash_hook();
+    let caught = std::panic::catch_unwind(|| {
+        let _s = pdfflow::span!("tel.test.crash", "about to die");
+        panic!("injected crash");
+    });
+    assert!(caught.is_err(), "the injected panic must propagate");
+    // Leave later (unrelated) test panics without a hooked dump.
+    flight::arm(false);
+    flight::set_dump_dir(".");
+    let dump = std::fs::read_dir(&dir)
+        .expect("dump dir exists")
+        .filter_map(|e| e.ok())
+        .find(|e| {
+            let n = e.file_name().to_string_lossy().into_owned();
+            n.starts_with("flightrec-") && n.ends_with(".json")
+        })
+        .expect("a flightrec-<ts>.json dump was written");
+    let text = std::fs::read_to_string(dump.path()).expect("readable dump");
+    let j = Json::parse(&text).expect("dump parses as JSON");
+    assert_eq!(
+        j.get("schema").and_then(|s| s.as_str()),
+        Some("pdfflow.flightrec.v1")
+    );
+    assert_eq!(j.get("reason").and_then(|s| s.as_str()), Some("panic"));
+    let events = j.get("events").and_then(|e| e.as_arr()).expect("events array");
+    assert!(
+        events.iter().any(|e| {
+            e.get("name").and_then(|n| n.as_str()) == Some("tel.test.crash")
+                && e.get("detail").and_then(|d| d.as_str()) == Some("about to die")
+        }),
+        "the in-flight span at panic time is in the dump"
+    );
+    assert!(j.get("metrics").is_some(), "dump carries a metrics snapshot");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn exported_snapshot_validates_and_corruption_is_rejected() {
+    let _g = gate();
+    Registry::global().counter("tel.test.export.count").add(3);
+    Registry::global().set_gauge("tel.test.export.gauge", 1.5);
+    Registry::global()
+        .histogram("tel.test.export.hist")
+        .record(1234);
+    let snap = export::snapshot();
+    let n = export::validate_snapshot(&snap).expect("fresh snapshot validates");
+    assert!(n >= 3, "snapshot holds at least the metrics just registered");
+    // The same document survives a print → parse round trip.
+    let reparsed = Json::parse(&snap.to_string()).expect("snapshot reparses");
+    assert_eq!(export::validate_snapshot(&reparsed).expect("reparsed ok"), n);
+
+    // Corruption 1: wrong schema tag.
+    let Json::Obj(mut m) = reparsed.clone() else { panic!("snapshot is an object") };
+    m.insert("schema".into(), Json::Str("bogus.v0".into()));
+    assert!(export::validate_snapshot(&Json::Obj(m)).is_err());
+
+    // Corruption 2: a histogram whose bucket counts disagree with count.
+    let Json::Obj(mut m) = reparsed.clone() else { panic!() };
+    let Some(Json::Obj(metrics)) = m.get_mut("metrics") else { panic!() };
+    let Some(Json::Obj(h)) = metrics.get_mut("tel.test.export.hist") else {
+        panic!("exported histogram present")
+    };
+    h.insert("count".into(), Json::Num(999.0));
+    assert!(export::validate_snapshot(&Json::Obj(m)).is_err());
+
+    // Corruption 3: provenance missing.
+    let Json::Obj(mut m) = reparsed else { panic!() };
+    m.remove("provenance");
+    assert!(export::validate_snapshot(&Json::Obj(m)).is_err());
+
+    // The Prometheus rendering carries the same families, sanitized.
+    let prom = export::prometheus();
+    assert!(prom.contains("pdfflow_tel_test_export_count 3"));
+    assert!(prom.contains("# TYPE pdfflow_tel_test_export_hist histogram"));
+    assert!(prom.contains("pdfflow_tel_test_export_hist_count 1"));
+}
+
+#[test]
+fn write_metrics_emits_both_formats() {
+    let _g = gate();
+    Registry::global().counter("tel.test.write.count").inc();
+    let dir = std::env::temp_dir().join(format!("pdfflow-metrics-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let (json_path, prom_path) =
+        export::write_metrics(dir.join("metrics.json")).expect("write_metrics");
+    assert_eq!(prom_path, dir.join("metrics.json.prom"));
+    let j = Json::parse(&std::fs::read_to_string(&json_path).unwrap()).expect("json parses");
+    export::validate_snapshot(&j).expect("written snapshot validates");
+    let prom = std::fs::read_to_string(&prom_path).unwrap();
+    assert!(prom.contains("pdfflow_tel_test_write_count"));
+    std::fs::remove_dir_all(&dir).unwrap();
+}

@@ -339,6 +339,43 @@ fn spatial_queries_are_worker_count_invariant() {
 }
 
 #[test]
+fn telemetry_tracing_does_not_perturb_results() {
+    // Span tracing observes the pipeline, it must never participate:
+    // the same run with tracing on and off — and at different widths
+    // while traced — produces identical report aggregates and
+    // bit-identical persisted segment bytes.
+    let root = std::env::temp_dir().join(format!(
+        "pdfflow-invariance-telemetry-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&root);
+    let ds = dataset(&root);
+    pdfflow::telemetry::set_enabled(true);
+    let (r_on1, b_on1) = run_at(&ds, Method::Grouping, &root.join("store-on1"), 1);
+    let (r_on8, b_on8) = run_at(&ds, Method::Grouping, &root.join("store-on8"), 8);
+    pdfflow::telemetry::set_enabled(false);
+    let (r_off, b_off) = run_at(&ds, Method::Grouping, &root.join("store-off"), 8);
+    pdfflow::telemetry::set_enabled(true);
+    assert_eq!(
+        fingerprint(&r_on1),
+        fingerprint(&r_on8),
+        "traced runs diverge across widths"
+    );
+    assert_eq!(
+        fingerprint(&r_on8),
+        fingerprint(&r_off),
+        "tracing changed report aggregates"
+    );
+    assert!(b_on1 == b_on8, "traced segment bytes diverge across widths");
+    assert!(b_on8 == b_off, "tracing changed persisted segment bytes");
+    // The traced runs really did trace: the stage spans exist with a
+    // plausible number of closures.
+    let spans = pdfflow::telemetry::Registry::global().histogram("span.window.ns");
+    assert!(spans.count() > 0, "no window spans were recorded");
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
 fn simulated_ledger_is_thread_count_invariant() {
     // The shared SimCluster ledger is merged in window order, so even
     // the *simulated* persist/shuffle accounts (pure functions of bytes,
