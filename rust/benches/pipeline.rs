@@ -25,8 +25,9 @@ use pdfflow::config::PipelineConfig;
 use pdfflow::coordinator::{Method, Pipeline, SliceReport, TypeSet};
 use pdfflow::cube::CubeDims;
 use pdfflow::datagen::{DatasetSpec, SyntheticDataset};
-use pdfflow::runtime::{make_backend, BackendKind, BackendOptions};
+use pdfflow::runtime::{make_backend, Backend, BackendKind, BackendOptions};
 use pdfflow::util::json::Json;
+use pdfflow::util::prng::Rng;
 
 const SLICE: usize = 2;
 const THREADS: [usize; 4] = [1, 2, 4, 8];
@@ -120,8 +121,39 @@ fn main() {
     }
     println!("(reports identical across all thread counts)");
 
+    // Kernel micro-bench: fused run_fit_all over an in-memory batch (no
+    // I/O, no window machinery), so kernel-only changes are visible
+    // separately from end-to-end windows/s. Full shared-pool width —
+    // this row measures the kernel + backend fan-out, not the driver.
+    let kern_points = if smoke { 2048usize } else { 8192 };
+    let kern_obs = spec.n_sims;
+    let kern_types = 10usize;
+    let kernel_fps = {
+        let mut rng = Rng::new(20180602);
+        let values: Vec<f32> = (0..kern_points * kern_obs)
+            .map(|_| rng.gamma(3.0, 2.0) as f32)
+            .collect();
+        let backend = make_backend(BackendKind::Native, "artifacts", &BackendOptions::default())
+            .expect("backend");
+        backend
+            .run_fit_all(&values, kern_points, kern_obs, kern_types)
+            .expect("warm-up");
+        let reps = if smoke { 3usize } else { 5 };
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            backend
+                .run_fit_all(&values, kern_points, kern_obs, kern_types)
+                .expect("fit");
+        }
+        (reps * kern_points) as f64 / t0.elapsed().as_secs_f64()
+    };
+    println!(
+        "kernel: {kernel_fps:.0} fit points/s ({kern_points} points x {kern_obs} obs, \
+         {kern_types} types)"
+    );
+
     if want_json {
-        let bench_rows: Vec<BenchRow> = rows
+        let mut bench_rows: Vec<BenchRow> = rows
             .iter()
             .map(|(threads, secs, wps, speedup)| BenchRow {
                 threads: *threads,
@@ -132,6 +164,17 @@ fn main() {
                 ],
             })
             .collect();
+        bench_rows.push(BenchRow {
+            threads: pdfflow::runtime::hostpool::default_budget(),
+            throughput: kernel_fps,
+            extra: vec![
+                ("mode", Json::Str("kernel".into())),
+                ("unit", Json::Str("fit_points_per_s".into())),
+                ("points", Json::Num(kern_points as f64)),
+                ("obs", Json::Num(kern_obs as f64)),
+                ("types", Json::Num(kern_types as f64)),
+            ],
+        });
         let (err_bits, fits) = fingerprint.expect("at least one run");
         let path = write_bench_json(
             "pipeline",

@@ -62,6 +62,13 @@ pub struct PipelineConfig {
     pub run_id: Option<String>,
     /// Segment block-cache budget for the store's `QueryEngine`, bytes.
     pub query_cache_bytes: u64,
+    /// Let the backend adapt its chunk width and fan-out between
+    /// windows from the host pool's occupancy meters
+    /// ([`crate::runtime::AdaptiveController`]); `batch`/`workers` stay
+    /// the seed and clamp anchors. On by default — results are pinned
+    /// bitwise width-invariant, so only scheduling granularity moves.
+    /// Set `pipeline.adaptive_batch = false` to pin the fixed widths.
+    pub adaptive_batch: bool,
 }
 
 impl Default for PipelineConfig {
@@ -80,6 +87,7 @@ impl Default for PipelineConfig {
             store_dir: None,
             run_id: None,
             query_cache_bytes: 64 << 20,
+            adaptive_batch: true,
         }
     }
 }
@@ -202,6 +210,7 @@ impl ExperimentConfig {
                 batch: self.pipeline.batch,
                 workers: self.pipeline.workers,
                 bins: self.pipeline.bins,
+                adaptive: self.pipeline.adaptive_batch,
             },
         )
     }
@@ -240,6 +249,8 @@ impl ExperimentConfig {
         cfg.pipeline.batch = doc.usize_or("pipeline.batch", cfg.pipeline.batch);
         cfg.pipeline.bins = doc.usize_or("pipeline.bins", cfg.pipeline.bins);
         cfg.pipeline.workers = doc.usize_or("pipeline.workers", cfg.pipeline.workers);
+        cfg.pipeline.adaptive_batch =
+            doc.bool_or("pipeline.adaptive_batch", cfg.pipeline.adaptive_batch);
         cfg.pipeline.executor_threads = doc
             .usize_or("pipeline.executor_threads", cfg.pipeline.executor_threads)
             .max(1);
@@ -319,6 +330,7 @@ nodes = 20
 [pipeline]
 window_lines = 7
 batch = 64
+adaptive_batch = false
 "#,
         )
         .unwrap();
@@ -327,6 +339,9 @@ batch = 64
         assert_eq!(c.dataset.n_sims, 128);
         assert_eq!(c.cluster.nodes, 20);
         assert_eq!(c.pipeline.window_lines, 7);
+        assert!(!c.pipeline.adaptive_batch, "adaptive_batch key must parse");
+        // Default stays adaptive.
+        assert!(ExperimentConfig::small().pipeline.adaptive_batch);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

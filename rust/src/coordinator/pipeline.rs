@@ -357,8 +357,23 @@ impl<'a> Pipeline<'a> {
 
         // Stage split: worker tasks share the pipeline's read side, the
         // sequenced sink owns the write side (ordered persist, report
-        // vector, shared-ledger merge).
-        let exec = Executor::new(self.cfg.executor_threads);
+        // vector, shared-ledger merge). With adaptive batching on, the
+        // stage width is clamped to the window count and the shared
+        // pool budget — wider fan-out cannot run more tasks than either
+        // bound allows, it only deepens the queue the backend's own
+        // adaptive fan-out then has to share. Results are pinned
+        // thread-count invariant, so the clamp is a pure scheduling
+        // choice; `pipeline.adaptive_batch = false` keeps the raw knob.
+        let exec_width = if self.cfg.adaptive_batch {
+            self.cfg
+                .executor_threads
+                .min(windows.len().max(1))
+                .min(crate::runtime::HostPool::global().budget())
+                .max(1)
+        } else {
+            self.cfg.executor_threads
+        };
+        let exec = Executor::new(exec_width);
         let exec_ref = &exec;
         let reader = &self.reader;
         let cache = &self.cache;

@@ -1,0 +1,332 @@
+//! Occupancy-adaptive batch sizing for the native backend.
+//!
+//! The backend's chunk width (`pipeline.batch`) and fan-out width
+//! (`pipeline.workers`) are static knobs; the right values depend on
+//! observation length, candidate count and how loaded the host already
+//! is. This controller closes the loop using the pool meters the
+//! telemetry layer already maintains: between backend calls (i.e.
+//! between pipeline windows) it reads the [`PoolMetrics`] deltas —
+//! tickets run, busy seconds, per-worker busy histogram — and steers
+//! the chunk width toward a mean per-ticket cost inside
+//! [`TARGET_LOW_NS`, `TARGET_HIGH_NS`]:
+//!
+//! - tickets cheaper than the low water mark are mostly scheduling
+//!   overhead → double the batch (and once the batch is maxed, halve
+//!   the fan-out so fewer slots contend for the tiny queue);
+//! - tickets above the high water mark starve the tail (the last chunk
+//!   pins one worker while the rest idle) → halve the batch and restore
+//!   full fan-out;
+//! - a skewed per-worker busy histogram (one worker > [`SKEW_FACTOR`] ×
+//!   the mean) is the same tail-starvation signal seen sideways → halve
+//!   the batch;
+//! - in-band tickets restore the fan-out cap and leave the batch alone.
+//!
+//! Decisions are clamped to `[min_batch, max_batch]` (never excluding
+//! the configured seed width) and published as telemetry:
+//! `backend.batch_width` / `backend.fanout_width` gauges and a
+//! `backend.adapt_events` counter, so `pdfflow telemetry validate` and
+//! the Prometheus export see every move the controller makes.
+//!
+//! **Determinism.** The backend's output bytes are pinned bitwise
+//! independent of batch size, worker width and pool budget
+//! (`results_independent_of_batch_and_workers` /
+//! `_pool_budget` / the thread-invariance suite), so the controller can
+//! only change *when* rows are computed, never *what* they contain.
+//! Pin `pipeline.adaptive_batch = false` (config) to keep the fixed
+//! widths, e.g. when comparing chunk-count-sensitive metrics across
+//! runs.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::telemetry::{Counter, Gauge, Registry};
+
+use super::hostpool::PoolMetrics;
+
+/// Mean per-ticket cost below which chunks are considered too fine
+/// (scheduling overhead dominates): 0.25 ms.
+pub const TARGET_LOW_NS: f64 = 250_000.0;
+/// Mean per-ticket cost above which chunks are considered too coarse
+/// (tail starvation dominates): 20 ms.
+pub const TARGET_HIGH_NS: f64 = 20_000_000.0;
+/// One worker busier than `SKEW_FACTOR ×` the per-worker mean marks a
+/// skewed ticket histogram.
+pub const SKEW_FACTOR: f64 = 4.0;
+/// Default hard clamp on the adapted chunk width (the configured seed
+/// width widens the clamp if it falls outside).
+pub const MIN_BATCH: usize = 16;
+/// See [`MIN_BATCH`].
+pub const MAX_BATCH: usize = 16384;
+
+/// Occupancy deltas are measured against the previous observation.
+#[derive(Default)]
+struct Baseline {
+    tickets: u64,
+    busy_s: f64,
+    worker_busy: Vec<f64>,
+}
+
+/// The between-windows batch/fan-out controller (see module docs).
+pub struct AdaptiveController {
+    min_batch: usize,
+    max_batch: usize,
+    /// Configured fan-out cap; the controller only ever narrows it.
+    cap: usize,
+    batch: AtomicUsize,
+    fanout: AtomicUsize,
+    last: Mutex<Baseline>,
+    adapt_events: Arc<Counter>,
+    batch_gauge: Arc<Gauge>,
+    fanout_gauge: Arc<Gauge>,
+}
+
+impl AdaptiveController {
+    /// Controller seeded at the configured chunk width and fan-out cap.
+    /// Registers its telemetry handles immediately so the metric
+    /// families exist (at the seed values) even before the first
+    /// adaptation.
+    pub fn new(seed_batch: usize, workers: usize) -> AdaptiveController {
+        let seed = seed_batch.max(1);
+        let cap = workers.max(1);
+        let r = Registry::global();
+        let batch_gauge = r.gauge("backend.batch_width");
+        let fanout_gauge = r.gauge("backend.fanout_width");
+        batch_gauge.set(seed as f64);
+        fanout_gauge.set(cap as f64);
+        AdaptiveController {
+            min_batch: MIN_BATCH.min(seed),
+            max_batch: MAX_BATCH.max(seed),
+            cap,
+            batch: AtomicUsize::new(seed),
+            fanout: AtomicUsize::new(cap),
+            last: Mutex::new(Baseline::default()),
+            adapt_events: r.counter("backend.adapt_events"),
+            batch_gauge,
+            fanout_gauge,
+        }
+    }
+
+    /// Current chunk width.
+    pub fn batch(&self) -> usize {
+        self.batch.load(Ordering::Relaxed)
+    }
+
+    /// Current fan-out width (≤ the configured cap).
+    pub fn fanout(&self) -> usize {
+        self.fanout.load(Ordering::Relaxed)
+    }
+
+    /// Fold one pool-meter observation into the controller. Called at
+    /// the top of every batched backend call; concurrent callers skip
+    /// the observation instead of blocking (the widths they read are
+    /// whatever the last completed observation chose).
+    pub fn observe(&self, m: &PoolMetrics) {
+        let Ok(mut last) = self.last.try_lock() else {
+            return;
+        };
+        let d_tickets = m.tickets_run.saturating_sub(last.tickets);
+        let d_busy = (m.busy_seconds - last.busy_s).max(0.0);
+        let mut skewed = false;
+        if m.per_worker.len() == last.worker_busy.len() {
+            let deltas: Vec<f64> = m
+                .per_worker
+                .iter()
+                .zip(&last.worker_busy)
+                .map(|(w, prev)| (w.busy_s - prev).max(0.0))
+                .collect();
+            let active = deltas.iter().filter(|&&d| d > 0.0).count();
+            if active >= 2 {
+                let sum: f64 = deltas.iter().sum();
+                let mean = sum / deltas.len() as f64;
+                let max = deltas.iter().cloned().fold(0.0, f64::max);
+                skewed = mean > 0.0 && max > SKEW_FACTOR * mean;
+            }
+        }
+        last.tickets = m.tickets_run;
+        last.busy_s = m.busy_seconds;
+        last.worker_busy.clear();
+        last.worker_busy.extend(m.per_worker.iter().map(|w| w.busy_s));
+        drop(last);
+        if d_tickets == 0 {
+            return; // nothing ran on pool workers since last look
+        }
+        let mean_ns = d_busy * 1e9 / d_tickets as f64;
+        let batch = self.batch();
+        let fanout = self.fanout();
+        let (mut new_batch, mut new_fanout) = (batch, fanout);
+        if mean_ns < TARGET_LOW_NS {
+            if batch < self.max_batch {
+                new_batch = (batch * 2).min(self.max_batch);
+            } else if fanout > 1 {
+                // Chunks are maxed and still cheap: the work item itself
+                // is tiny, so stop spreading it across the whole budget.
+                new_fanout = (fanout / 2).max(1);
+            }
+        } else if mean_ns > TARGET_HIGH_NS || skewed {
+            new_batch = (batch / 2).max(self.min_batch);
+            new_fanout = self.cap;
+        } else {
+            new_fanout = self.cap;
+        }
+        if new_batch != batch || new_fanout != fanout {
+            self.batch.store(new_batch, Ordering::Relaxed);
+            self.fanout.store(new_fanout, Ordering::Relaxed);
+            self.adapt_events.inc();
+            self.batch_gauge.set(new_batch as f64);
+            self.fanout_gauge.set(new_fanout as f64);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::hostpool::WorkerMetrics;
+
+    fn meters(tickets: u64, busy_s: f64, per_worker: Vec<WorkerMetrics>) -> PoolMetrics {
+        PoolMetrics {
+            budget: 4,
+            workers: per_worker.len(),
+            tickets_run: tickets,
+            busy_seconds: busy_s,
+            per_worker,
+            ..PoolMetrics::default()
+        }
+    }
+
+    fn even_workers(busy_each: f64) -> Vec<WorkerMetrics> {
+        (0..3)
+            .map(|_| WorkerMetrics {
+                tickets: 1,
+                busy_s: busy_each,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn cheap_tickets_grow_batch_then_narrow_fanout() {
+        let c = AdaptiveController::new(64, 8);
+        let mut tickets = 0u64;
+        let mut busy = 0.0f64;
+        let mut grow_steps = 0;
+        // 50 µs mean tickets: far under the low water mark.
+        while c.batch() < MAX_BATCH {
+            tickets += 100;
+            busy += 100.0 * 50e-6; // 100 tickets × 50 µs
+            c.observe(&meters(tickets, busy, even_workers(busy / 3.0)));
+            grow_steps += 1;
+            assert!(grow_steps < 64, "batch never reached the max clamp");
+        }
+        assert_eq!(c.fanout(), 8, "fan-out untouched while batch can grow");
+        // Still cheap at the max batch: fan-out halves toward 1.
+        tickets += 100;
+        busy += 100.0 * 50e-6;
+        c.observe(&meters(tickets, busy, even_workers(busy / 3.0)));
+        assert_eq!(c.batch(), MAX_BATCH);
+        assert_eq!(c.fanout(), 4);
+    }
+
+    #[test]
+    fn expensive_tickets_shrink_batch_and_restore_fanout() {
+        let c = AdaptiveController::new(256, 8);
+        // Drive fan-out down first with cheap tickets at a pinned batch.
+        let mut t = 0u64;
+        let mut b = 0.0f64;
+        for _ in 0..40 {
+            t += 50;
+            b += 50.0 * 10e-6;
+            c.observe(&meters(t, b, even_workers(b / 3.0)));
+        }
+        assert!(c.fanout() < 8);
+        let shrunk_from = c.batch();
+        // One 100 ms-mean observation: halve the batch, restore width.
+        t += 10;
+        b += 10.0 * 0.1;
+        c.observe(&meters(t, b, even_workers(b / 3.0)));
+        assert_eq!(c.batch(), (shrunk_from / 2).max(MIN_BATCH));
+        assert_eq!(c.fanout(), 8);
+    }
+
+    #[test]
+    fn batch_clamps_at_min_and_seed_widens_clamp() {
+        let c = AdaptiveController::new(4, 2);
+        // Seed below MIN_BATCH widens the low clamp to the seed.
+        let mut t = 0u64;
+        let mut b = 0.0f64;
+        for _ in 0..20 {
+            t += 10;
+            b += 10.0 * 0.1; // 100 ms tickets, forever too coarse
+            c.observe(&meters(t, b, even_workers(b / 3.0)));
+        }
+        assert_eq!(c.batch(), 4, "never adapts below the configured seed");
+    }
+
+    #[test]
+    fn zero_ticket_delta_changes_nothing() {
+        let c = AdaptiveController::new(128, 4);
+        let m = meters(0, 0.0, even_workers(0.0));
+        c.observe(&m);
+        c.observe(&m);
+        assert_eq!(c.batch(), 128);
+        assert_eq!(c.fanout(), 4);
+    }
+
+    #[test]
+    fn skewed_worker_histogram_halves_batch() {
+        let c = AdaptiveController::new(512, 4);
+        // Prime the baseline (worker deltas need a previous snapshot of
+        // the same worker count before skew can be judged).
+        let idle: Vec<WorkerMetrics> = vec![WorkerMetrics::default(); 8];
+        c.observe(&meters(0, 0.0, idle));
+        // In-band mean (1 ms) but one of eight workers carries ~all of
+        // the busy time: max delta ≈ 7.4 × the per-worker mean.
+        let mut lopsided = vec![WorkerMetrics::default(); 8];
+        for w in &mut lopsided {
+            *w = WorkerMetrics {
+                tickets: 10,
+                busy_s: 0.01,
+            };
+        }
+        lopsided[0] = WorkerMetrics {
+            tickets: 930,
+            busy_s: 0.93,
+        };
+        c.observe(&meters(1000, 1.0, lopsided));
+        assert_eq!(c.batch(), 256);
+    }
+
+    #[test]
+    fn in_band_tickets_restore_fanout_only() {
+        let c = AdaptiveController::new(128, 6);
+        // Narrow the fan-out with cheap maxed-batch traffic first.
+        let mut t = 0u64;
+        let mut b = 0.0f64;
+        for _ in 0..40 {
+            t += 50;
+            b += 50.0 * 10e-6;
+            c.observe(&meters(t, b, even_workers(b / 3.0)));
+        }
+        let narrowed = c.fanout();
+        assert!(narrowed < 6);
+        let batch = c.batch();
+        // One in-band (2 ms mean, even) observation restores the cap.
+        t += 50;
+        b += 50.0 * 2e-3;
+        c.observe(&meters(t, b, even_workers(b / 3.0)));
+        assert_eq!(c.fanout(), 6);
+        assert_eq!(c.batch(), batch, "in-band leaves the batch alone");
+    }
+
+    #[test]
+    fn decisions_are_published_as_telemetry() {
+        let c = AdaptiveController::new(32, 4);
+        let before = Registry::global().counter("backend.adapt_events").get();
+        c.observe(&meters(100, 100.0 * 50e-9, even_workers(0.0)));
+        let after = Registry::global().counter("backend.adapt_events").get();
+        assert!(after > before, "adaptation must bump backend.adapt_events");
+        // The gauges are process-global (other controllers in parallel
+        // tests may write them too), so assert liveness, not the value.
+        assert!(Registry::global().gauge("backend.batch_width").get() >= 1.0);
+        assert!(Registry::global().gauge("backend.fanout_width").get() >= 1.0);
+    }
+}

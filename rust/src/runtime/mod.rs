@@ -26,12 +26,14 @@
 //! the `PDFFLOW_BACKEND` environment variable, the `backend` config
 //! key, or the `--backend` CLI flag.
 
+pub mod adaptive;
 pub mod hostpool;
 pub mod manifest;
 pub mod native;
 #[cfg(feature = "xla")]
 pub mod xla_engine;
 
+pub use adaptive::AdaptiveController;
 pub use hostpool::{HostPool, PoolMetrics, WorkerMetrics};
 pub use manifest::{ArtifactInfo, ArtifactKind, Manifest};
 pub use native::NativeBackend;
@@ -190,6 +192,13 @@ pub struct BackendOptions {
     pub workers: usize,
     /// Eq. 5 interval count for the native backend (XLA bakes its own).
     pub bins: usize,
+    /// Let the native backend adapt its chunk and fan-out widths from
+    /// the pool occupancy meters between calls ([`AdaptiveController`];
+    /// `batch`/`workers` become the seed and clamp anchors). Off by
+    /// default so directly-constructed backends keep the fixed chunk
+    /// geometry their tests pin; the pipeline enables it via
+    /// `pipeline.adaptive_batch`.
+    pub adaptive: bool,
 }
 
 impl Default for BackendOptions {
@@ -198,6 +207,7 @@ impl Default for BackendOptions {
             batch: 256,
             workers: hostpool::default_budget(),
             bins: crate::stats::DEFAULT_BINS,
+            adaptive: false,
         }
     }
 }
@@ -211,11 +221,13 @@ pub fn make_backend(
     opts: &BackendOptions,
 ) -> Result<Box<dyn Backend>> {
     match kind {
-        BackendKind::Native => Ok(Box::new(NativeBackend::with_options(
-            opts.workers,
-            opts.batch,
-            opts.bins,
-        ))),
+        BackendKind::Native => {
+            let mut b = NativeBackend::with_options(opts.workers, opts.batch, opts.bins);
+            if opts.adaptive {
+                b.enable_adaptive();
+            }
+            Ok(Box::new(b))
+        }
         #[cfg(feature = "xla")]
         BackendKind::Xla => Ok(Box::new(Engine::load_default(artifacts_dir)?)),
         #[cfg(not(feature = "xla"))]

@@ -26,6 +26,7 @@ use std::time::Instant;
 use crate::stats::{self, DistType, PointStats};
 use crate::{PdfflowError, Result};
 
+use super::adaptive::AdaptiveController;
 use super::hostpool::HostPool;
 use super::{Backend, BackendMetrics, OutMatrix};
 
@@ -74,6 +75,11 @@ pub struct NativeBackend {
     bins: usize,
     pool: Arc<HostPool>,
     metrics: Mutex<BackendMetrics>,
+    /// Optional occupancy-adaptive chunk/fan-out controller. `None`
+    /// (every constructor's default) keeps the fixed `batch`/`workers`
+    /// widths — the mode the chunk-count-pinning tests rely on; the
+    /// pipeline turns it on via `pipeline.adaptive_batch`.
+    adaptive: Option<AdaptiveController>,
 }
 
 impl NativeBackend {
@@ -102,7 +108,22 @@ impl NativeBackend {
             bins: bins.max(1),
             pool,
             metrics: Mutex::new(BackendMetrics::default()),
+            adaptive: None,
         }
+    }
+
+    /// Switch this backend from fixed widths to the occupancy-adaptive
+    /// controller (seeded at the configured `batch`/`workers`, which
+    /// also anchor its clamps). Output bytes are unaffected — chunk
+    /// geometry is pinned bitwise-irrelevant by the invariance tests —
+    /// only scheduling granularity changes.
+    pub fn enable_adaptive(&mut self) {
+        self.adaptive = Some(AdaptiveController::new(self.batch, self.workers));
+    }
+
+    /// True when the occupancy-adaptive controller is steering widths.
+    pub fn adaptive(&self) -> bool {
+        self.adaptive.is_some()
     }
 
     pub fn batch(&self) -> usize {
@@ -142,16 +163,24 @@ impl NativeBackend {
             )));
         }
         let t0 = Instant::now();
-        let n_chunks = n_points.div_ceil(self.batch);
+        // Chunk geometry for this call: fixed knobs, or whatever the
+        // adaptive controller chose after folding in the pool meters
+        // accumulated since the previous call (i.e. the last window).
+        let (batch, width) = match &self.adaptive {
+            Some(ctl) => {
+                ctl.observe(&self.pool.metrics());
+                (ctl.batch(), ctl.fanout())
+            }
+            None => (self.batch, self.workers),
+        };
+        let n_chunks = n_points.div_ceil(batch);
         let mut data = vec![0f32; n_points * out_cols];
         if n_points > 0 {
-            let chunks: Vec<(usize, &mut [f32])> = data
-                .chunks_mut(self.batch * out_cols)
-                .enumerate()
-                .collect();
-            self.pool.parallel_map(chunks, self.workers, |(c, out)| {
-                let lo = c * self.batch;
-                let hi = (lo + self.batch).min(n_points);
+            let chunks: Vec<(usize, &mut [f32])> =
+                data.chunks_mut(batch * out_cols).enumerate().collect();
+            self.pool.parallel_map(chunks, width, |(c, out)| {
+                let lo = c * batch;
+                let hi = (lo + batch).min(n_points);
                 let mut scratch = Scratch::new(self.bins);
                 for (i, p) in (lo..hi).enumerate() {
                     kernel(
@@ -346,6 +375,59 @@ mod tests {
                 .unwrap();
             assert_eq!(out.data, reference.data, "workers={workers} batch={batch}");
         }
+    }
+
+    #[test]
+    fn simd_width_edge_cases_hit_scalar_remainder() {
+        // Observation vectors around the 4-lane SIMD width (width−1,
+        // width, width+1, non-multiple tails) and single-point batches
+        // must produce exactly what the scalar oracle produces — the
+        // vector kernels' remainder loops ARE the scalar loops.
+        let b = NativeBackend::with_options(2, 8, 32);
+        for obs in [2usize, 3, 4, 5, 7, 8, 9, 13, 33] {
+            for n_points in [1usize, 3, 4, 5, 7] {
+                let values = gamma_batch(n_points, obs, 40 + obs as u64);
+                let out = b.run_fit_all(&values, n_points, obs, 10).unwrap();
+                assert_eq!((out.n_rows, out.n_cols), (n_points, 5));
+                let st = b.run_stats(&values, n_points, obs).unwrap();
+                for p in 0..n_points {
+                    let v = &values[p * obs..(p + 1) * obs];
+                    let best =
+                        crate::stats::fit_best(v, &DistType::ALL, crate::stats::DEFAULT_BINS);
+                    assert_eq!(out.data[p * 5], best.dist.id() as f32, "obs={obs} p={p}");
+                    assert_eq!(out.data[p * 5 + 1], best.error as f32, "obs={obs} p={p}");
+                    let s = PointStats::of(v);
+                    assert_eq!(st.data[p * 12], s.mean as f32, "obs={obs} p={p} mean");
+                    assert_eq!(st.data[p * 12 + 2], s.min as f32, "obs={obs} p={p} min");
+                    assert_eq!(st.data[p * 12 + 3], s.max as f32, "obs={obs} p={p} max");
+                }
+            }
+        }
+        // Empty observation vectors stay rejected, empty batches empty.
+        assert!(b.run_stats(&[], 1, 0).is_err());
+        assert!(b.run_stats(&[1.0], 1, 1).is_err());
+        assert!(b.run_stats(&[], 0, 0).unwrap().data.is_empty());
+    }
+
+    #[test]
+    fn adaptive_controller_does_not_change_output_bits() {
+        let values = gamma_batch(150, 40, 5);
+        let reference = NativeBackend::with_options(4, 32, 32)
+            .run_fit_all(&values, 150, 40, 10)
+            .unwrap();
+        let mut b = NativeBackend::with_options(4, 32, 32);
+        b.enable_adaptive();
+        assert!(b.adaptive());
+        // Several calls so the controller actually moves between them.
+        for round in 0..4 {
+            let out = b.run_fit_all(&values, 150, 40, 10).unwrap();
+            assert_eq!(out.data, reference.data, "round {round}");
+        }
+        let st_ref = NativeBackend::with_options(4, 32, 32)
+            .run_stats(&values, 150, 40)
+            .unwrap();
+        let st = b.run_stats(&values, 150, 40).unwrap();
+        assert_eq!(st.data, st_ref.data);
     }
 
     #[test]

@@ -13,6 +13,7 @@
 //!    same `PointStats` this module computes.
 
 pub mod density;
+pub mod simd;
 pub mod special;
 
 use special::{betainc, erf, gammainc_p, gammaln};
@@ -126,10 +127,14 @@ impl PointStats {
         let n = v.len();
         assert!(n >= 2, "need at least 2 observations");
         let nf = n as f64;
-        vals.clear();
-        vals.extend(v.iter().map(|&x| x as f64));
+        // Conversion + min/max go through the SIMD layer (exact f32→f64
+        // widening; min/max folding is order-independent, and the AVX2
+        // path re-folds the NaN/±0.0 corner cases scalar-exactly). The
+        // moment and log-sum accumulators below stay a sequential scalar
+        // fold: their values depend on summation order, and the parity
+        // contract pins them to these exact bits.
+        let (mn, mx) = simd::convert_minmax(v, vals);
         let (mut s1, mut s2, mut s3, mut s4) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
-        let (mut mn, mut mx) = (f64::INFINITY, f64::NEG_INFINITY);
         let (mut sl, mut sl2) = (0.0f64, 0.0f64);
         let mut npos = 0usize;
         for &x in vals.iter() {
@@ -138,8 +143,6 @@ impl PointStats {
             s2 += x2;
             s3 += x2 * x;
             s4 += x2 * x2;
-            mn = mn.min(x);
-            mx = mx.max(x);
             if x > 0.0 {
                 let lx = x.ln();
                 sl += lx;
@@ -217,14 +220,7 @@ pub fn histogram(v: &[f32], mn: f64, mx: f64, bins: usize) -> Vec<f64> {
 /// been oracle parity (both sides share this function), not stability
 /// of historical bits.
 pub fn histogram_into(v: &[f32], mn: f64, mx: f64, out: &mut [f64]) {
-    let bins = out.len();
-    out.fill(0.0);
-    let inv = bins as f64 / (mx - mn).max(1e-30);
-    for &x in v {
-        let idx = ((x as f64 - mn) * inv).floor();
-        let idx = (idx.max(0.0) as usize).min(bins - 1);
-        out[idx] += 1.0;
-    }
+    simd::histogram_into(v, mn, mx, out)
 }
 
 /// [`histogram_into`] over already-converted f64 observations (the
@@ -232,14 +228,7 @@ pub fn histogram_into(v: &[f32], mn: f64, mx: f64, out: &mut [f64]) {
 /// [`PointStats::of_converted`]). Formula identical to the f32 version
 /// — f32→f64 conversion is exact, so the two are bit-compatible.
 pub fn histogram_f64_into(vals: &[f64], mn: f64, mx: f64, out: &mut [f64]) {
-    let bins = out.len();
-    out.fill(0.0);
-    let inv = bins as f64 / (mx - mn).max(1e-30);
-    for &x in vals {
-        let idx = ((x - mn) * inv).floor();
-        let idx = (idx.max(0.0) as usize).min(bins - 1);
-        out[idx] += 1.0;
-    }
+    simd::histogram_f64_into(vals, mn, mx, out)
 }
 
 /// Fit one type: (params, supported). Mirrors `distfit._FITTERS`.
@@ -328,10 +317,7 @@ pub fn cdf(t: DistType, p: &[f64; 3], x: f64) -> f64 {
 /// candidate — the formula matches the historical per-candidate one
 /// exactly, so hoisting is bit-neutral.
 pub fn fill_edges(mn: f64, mx: f64, edges: &mut [f64]) {
-    let bins = edges.len() as f64;
-    for (k, e) in edges.iter_mut().enumerate() {
-        *e = mn + (mx - mn) * (k + 1) as f64 / bins;
-    }
+    simd::fill_edges(mn, mx, edges)
 }
 
 /// Eq. 5: histogram-vs-CDF discrepancy over `bins` equal intervals.
@@ -356,6 +342,28 @@ pub fn eq5_error_with_edges(
     for (h, &edge) in hist.iter().zip(edges) {
         let cur = cdf(t, p, edge);
         err += (h / n_obs as f64 - (cur - prev)).abs();
+        prev = cur;
+    }
+    err
+}
+
+/// [`eq5_error_with_edges`] over an already-normalized histogram
+/// (`hist_norm[k] = hist[k] / n_obs`). Bit-identical to the unnormalized
+/// form — same dividends, same divisor, same fold order — but lets
+/// [`fit_best_prepared`] pay the `bins` divisions once per point instead
+/// of once per candidate type.
+pub fn eq5_error_prenorm_with_edges(
+    t: DistType,
+    p: &[f64; 3],
+    hist_norm: &[f64],
+    edges: &[f64],
+    mn: f64,
+) -> f64 {
+    let mut err = 0.0;
+    let mut prev = cdf(t, p, mn);
+    for (&hn, &edge) in hist_norm.iter().zip(edges) {
+        let cur = cdf(t, p, edge);
+        err += (hn - (cur - prev)).abs();
         prev = cur;
     }
     err
@@ -454,11 +462,29 @@ pub fn fit_best_prepared(
     n_obs: usize,
     candidates: &[DistType],
 ) -> FitResult {
+    // Normalize the histogram once and share it across every candidate
+    // (bins divisions per point instead of bins × candidates) — the
+    // quotients are the exact values the per-candidate loop would have
+    // computed, so the Eq. 5 fold sees identical bits. Common bin
+    // counts fit in a stack buffer; oversized configs take a heap copy.
+    const STACK_BINS: usize = 64;
+    let nf = n_obs as f64;
+    let mut stack = [0.0f64; STACK_BINS];
+    let mut heap = Vec::new();
+    let hnorm: &[f64] = if hist.len() <= STACK_BINS {
+        for (d, &h) in stack.iter_mut().zip(hist) {
+            *d = h / nf;
+        }
+        &stack[..hist.len()]
+    } else {
+        heap.extend(hist.iter().map(|&h| h / nf));
+        &heap
+    };
     let mut best: Option<FitResult> = None;
     for &t in candidates {
         let (params, supported) = fit_params(t, s);
         let error = if supported {
-            eq5_error_with_edges(t, &params, hist, edges, s.min, n_obs)
+            eq5_error_prenorm_with_edges(t, &params, hnorm, edges, s.min)
         } else {
             PENALTY_ERROR
         };
@@ -646,6 +672,31 @@ mod tests {
         let best_b = fit_best_prepared(&s, &h64, &edges, v.len(), &DistType::ALL);
         assert_eq!(best_a.dist, best_b.dist);
         assert_eq!(best_a.error.to_bits(), best_b.error.to_bits());
+    }
+
+    #[test]
+    fn prenormalized_eq5_is_bit_identical() {
+        // fit_best_prepared divides the histogram by n_obs once and
+        // shares the quotients across candidates; the fold must see the
+        // exact bits the per-candidate division produced.
+        let v = draws(|r| r.lognormal(0.5, 0.8), 900, 22);
+        let mut vals = Vec::new();
+        let mut quant = Vec::new();
+        let s = PointStats::of_converted(&v, &mut vals, &mut quant);
+        let mut hist = vec![0.0; DEFAULT_BINS];
+        histogram_f64_into(&vals, s.min, s.max, &mut hist);
+        let mut edges = vec![0.0; DEFAULT_BINS];
+        fill_edges(s.min, s.max, &mut edges);
+        let hnorm: Vec<f64> = hist.iter().map(|&h| h / v.len() as f64).collect();
+        for &t in &DistType::ALL {
+            let (p, ok) = fit_params(t, &s);
+            if !ok {
+                continue;
+            }
+            let a = eq5_error_with_edges(t, &p, &hist, &edges, s.min, v.len());
+            let b = eq5_error_prenorm_with_edges(t, &p, &hnorm, &edges, s.min);
+            assert_eq!(a.to_bits(), b.to_bits(), "{t:?}");
+        }
     }
 
     #[test]

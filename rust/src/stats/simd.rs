@@ -1,0 +1,547 @@
+//! Explicit-width SIMD kernels for the per-point fit hot loops, with an
+//! always-available scalar fallback and runtime AVX2 dispatch.
+//!
+//! **Tolerance policy: zero.** Every routine here is pinned bit-identical
+//! to the scalar oracle in `stats` — the backend-parity and
+//! thread-invariance suites compare reports with `to_bits`, and persisted
+//! segments are checksummed, so a lane-reassociated float is a
+//! correctness bug, not a rounding footnote. That constraint decides
+//! what gets vectorized:
+//!
+//! - **f32→f64 conversion** (`convert_minmax`): `vcvtps2pd` is exact.
+//! - **min/max reduction**: associative and commutative for ordinary
+//!   values, so lane folding is bit-neutral; the two cases where
+//!   `vminpd`/`vmaxpd` diverge from Rust's `f64::min`/`max` (NaN
+//!   operands, ±0.0 ties) are detected and re-folded with the exact
+//!   scalar sequence — see `convert_minmax` below.
+//! - **histogram bucket fill** (`histogram_into`/`histogram_f64_into`):
+//!   the bin index is a pure elementwise expression and the `+1.0`
+//!   count increments are exact small integers, order-independent.
+//! - **Eq. 5 interval edges** (`fill_edges`): pure elementwise.
+//!
+//! The loops that stay scalar stay for a reason: the moment
+//! accumulators (`s1..s4`, log sums) and the Eq. 5 error fold are
+//! sequential sums whose value depends on evaluation order, and the
+//! candidate CDFs call special functions (`erf`, `betainc`,
+//! `gammainc_p`) with data-dependent branches. Vectorizing those means
+//! reassociating, and reassociating means new bits. The fused fit path
+//! instead buys its Eq. 5 win allocation-free: `fit_best_prepared`
+//! normalizes the histogram once per point and shares it across all
+//! candidates (bit-identical — same dividends, divisor, and fold order).
+//!
+//! Dispatch is controlled by `PDFFLOW_SIMD`:
+//!
+//! - `off` / `0` — never dispatch (alias of `scalar`; both run the
+//!   canonical loops).
+//! - `scalar` — force the scalar fallback even where AVX2 is available.
+//! - `auto` (default, also any unrecognized value) — use AVX2 when the
+//!   CPU reports it, scalar otherwise.
+//!
+//! Tests flip the mode programmatically with [`set_mode`]; because the
+//! two paths are bit-identical, a concurrent test observing a mid-flight
+//! mode change can not observe different results.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Kernel dispatch mode (see module docs for the `PDFFLOW_SIMD` values).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdMode {
+    /// Never dispatch to vector kernels (functionally identical to
+    /// `Scalar`; kept distinct so the knob surface reads naturally).
+    Off,
+    /// Force the scalar fallback loops.
+    Scalar,
+    /// Runtime-dispatch: AVX2 where the CPU has it, scalar otherwise.
+    Auto,
+}
+
+const UNRESOLVED: u8 = 0;
+const MODE_OFF: u8 = 1;
+const MODE_SCALAR: u8 = 2;
+const MODE_AUTO: u8 = 3;
+
+static MODE: AtomicU8 = AtomicU8::new(UNRESOLVED);
+
+/// Current dispatch mode; resolves `PDFFLOW_SIMD` on first use.
+pub fn mode() -> SimdMode {
+    match MODE.load(Ordering::Relaxed) {
+        MODE_OFF => SimdMode::Off,
+        MODE_SCALAR => SimdMode::Scalar,
+        MODE_AUTO => SimdMode::Auto,
+        _ => {
+            let env = std::env::var("PDFFLOW_SIMD")
+                .map(|s| s.to_ascii_lowercase())
+                .unwrap_or_default();
+            let m = match env.as_str() {
+                "off" | "0" => SimdMode::Off,
+                "scalar" => SimdMode::Scalar,
+                _ => SimdMode::Auto,
+            };
+            set_mode(m);
+            m
+        }
+    }
+}
+
+/// Override the dispatch mode (tests use this for scalar-vs-SIMD
+/// differential passes; safe because both paths are bit-identical).
+pub fn set_mode(m: SimdMode) {
+    let v = match m {
+        SimdMode::Off => MODE_OFF,
+        SimdMode::Scalar => MODE_SCALAR,
+        SimdMode::Auto => MODE_AUTO,
+    };
+    MODE.store(v, Ordering::Relaxed);
+}
+
+/// True when the AVX2 kernels are actually in use (mode is `Auto` and
+/// the CPU reports the feature).
+pub fn active() -> bool {
+    mode() == SimdMode::Auto && avx2_available()
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_available() -> bool {
+    static AVX2: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *AVX2.get_or_init(|| std::arch::is_x86_feature_detected!("avx2"))
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_available() -> bool {
+    false
+}
+
+/// Histogram bin counts above this fall back to scalar so the f64→i32
+/// index conversion can never leave i32 range. Real configs use 16–256
+/// bins; this is a safety rail, not a tuning knob.
+const MAX_SIMD_BINS: usize = 1 << 30;
+
+/// Convert `v` to f64 into `vals` (cleared first) and return the
+/// `(min, max)` of the converted values, bit-identical to the scalar
+/// sequential fold `mn.min(x)` / `mx.max(x)` from `±INFINITY` seeds.
+pub fn convert_minmax(v: &[f32], vals: &mut Vec<f64>) -> (f64, f64) {
+    #[cfg(target_arch = "x86_64")]
+    if active() && v.len() >= 8 {
+        // SAFETY: dispatch is gated on runtime AVX2 detection.
+        return unsafe { avx2::convert_minmax(v, vals) };
+    }
+    scalar::convert_minmax(v, vals)
+}
+
+/// Equal-width histogram fill over f32 observations (canonical formula
+/// lives in [`scalar::histogram_into`]; AVX2 path is bit-identical).
+pub fn histogram_into(v: &[f32], mn: f64, mx: f64, out: &mut [f64]) {
+    #[cfg(target_arch = "x86_64")]
+    if active() && v.len() >= 8 && !out.is_empty() && out.len() <= MAX_SIMD_BINS {
+        // SAFETY: dispatch is gated on runtime AVX2 detection.
+        unsafe { avx2::histogram_into(v, mn, mx, out) };
+        return;
+    }
+    scalar::histogram_into(v, mn, mx, out)
+}
+
+/// [`histogram_into`] over already-converted f64 observations.
+pub fn histogram_f64_into(vals: &[f64], mn: f64, mx: f64, out: &mut [f64]) {
+    #[cfg(target_arch = "x86_64")]
+    if active() && vals.len() >= 8 && !out.is_empty() && out.len() <= MAX_SIMD_BINS {
+        // SAFETY: dispatch is gated on runtime AVX2 detection.
+        unsafe { avx2::histogram_f64_into(vals, mn, mx, out) };
+        return;
+    }
+    scalar::histogram_f64_into(vals, mn, mx, out)
+}
+
+/// Fill the Eq. 5 upper interval edges over `[mn, mx]`.
+pub fn fill_edges(mn: f64, mx: f64, edges: &mut [f64]) {
+    #[cfg(target_arch = "x86_64")]
+    if active() && edges.len() >= 8 {
+        // SAFETY: dispatch is gated on runtime AVX2 detection.
+        unsafe { avx2::fill_edges(mn, mx, edges) };
+        return;
+    }
+    scalar::fill_edges(mn, mx, edges)
+}
+
+/// The canonical scalar loops. These bodies ARE the semantics — the
+/// AVX2 module reproduces them bit-for-bit, and `stats` delegates its
+/// public functions here so there is exactly one scalar definition.
+mod scalar {
+    pub fn convert_minmax(v: &[f32], vals: &mut Vec<f64>) -> (f64, f64) {
+        vals.clear();
+        vals.extend(v.iter().map(|&x| x as f64));
+        let (mut mn, mut mx) = (f64::INFINITY, f64::NEG_INFINITY);
+        for &x in vals.iter() {
+            mn = mn.min(x);
+            mx = mx.max(x);
+        }
+        (mn, mx)
+    }
+
+    pub fn histogram_into(v: &[f32], mn: f64, mx: f64, out: &mut [f64]) {
+        let bins = out.len();
+        out.fill(0.0);
+        let inv = bins as f64 / (mx - mn).max(1e-30);
+        for &x in v {
+            let idx = ((x as f64 - mn) * inv).floor();
+            let idx = (idx.max(0.0) as usize).min(bins - 1);
+            out[idx] += 1.0;
+        }
+    }
+
+    pub fn histogram_f64_into(vals: &[f64], mn: f64, mx: f64, out: &mut [f64]) {
+        let bins = out.len();
+        out.fill(0.0);
+        let inv = bins as f64 / (mx - mn).max(1e-30);
+        for &x in vals {
+            let idx = ((x - mn) * inv).floor();
+            let idx = (idx.max(0.0) as usize).min(bins - 1);
+            out[idx] += 1.0;
+        }
+    }
+
+    pub fn fill_edges(mn: f64, mx: f64, edges: &mut [f64]) {
+        let bins = edges.len() as f64;
+        for (k, e) in edges.iter_mut().enumerate() {
+            *e = mn + (mx - mn) * (k + 1) as f64 / bins;
+        }
+    }
+}
+
+/// AVX2 kernels. Every function is `target_feature(enable = "avx2")`
+/// and only reachable through the runtime-detected dispatchers above.
+///
+/// Bit-parity arguments, per kernel:
+///
+/// - `convert_minmax`: `vcvtps2pd` is exact. `vminpd`/`vmaxpd` pick
+///   `a < b ? a : b` (resp. `>`), which equals the true min/max for any
+///   ordered, non-tied pair — lane folding is then bit-neutral because
+///   min/max are associative and commutative. The two divergent cases
+///   are (1) NaN operands, where the instructions return the second
+///   operand while Rust's `f64::min`/`max` return the non-NaN side, and
+///   (2) ±0.0 ties, where the instructions return the second operand's
+///   zero regardless of sign. Case 1 is detected with an accumulated
+///   unordered-compare mask; case 2 can only matter when the reduced
+///   result is itself a zero. Either trigger re-folds the already
+///   converted f64 slice with the exact scalar sequence, so the
+///   returned bits always match the scalar oracle.
+/// - `histogram_*`: the scalar index is
+///   `(((x - mn) * inv).floor().max(0.0) as usize).min(bins - 1)`.
+///   The vector path computes the same `floor((x - mn) * inv)`, clamps
+///   with `vmaxpd(t, 0.0)` (returns `+0.0` for NaN or `-0.0` lanes,
+///   exactly like `f64::max(NaN, 0.0)` / `(-0.0).max(0.0)`), then
+///   clamps high in the f64 domain with `vminpd(t, bins - 1)` — which
+///   maps `+inf` and huge finites to the top bin just as the saturating
+///   `as usize` cast followed by `.min(bins - 1)` does — before the
+///   (now always in-range, hence exact) f64→i32 conversion. The `+1.0`
+///   increments are exact integer bumps in any order.
+/// - `fill_edges`: `mn + (mx - mn) * k / bins` evaluated with the same
+///   operation order per element; the lane counter advances by adding
+///   4.0, exact for every representable index.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn reduce_min(v: __m256d) -> f64 {
+        let lo = _mm256_castpd256_pd128(v);
+        let hi = _mm256_extractf128_pd::<1>(v);
+        let m = _mm_min_pd(lo, hi);
+        let s = _mm_min_sd(m, _mm_unpackhi_pd(m, m));
+        _mm_cvtsd_f64(s)
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn reduce_max(v: __m256d) -> f64 {
+        let lo = _mm256_castpd256_pd128(v);
+        let hi = _mm256_extractf128_pd::<1>(v);
+        let m = _mm_max_pd(lo, hi);
+        let s = _mm_max_sd(m, _mm_unpackhi_pd(m, m));
+        _mm_cvtsd_f64(s)
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn convert_minmax(v: &[f32], vals: &mut Vec<f64>) -> (f64, f64) {
+        let n = v.len();
+        vals.clear();
+        vals.resize(n, 0.0);
+        let src = v.as_ptr();
+        let dst = vals.as_mut_ptr();
+        let mut vmn = _mm256_set1_pd(f64::INFINITY);
+        let mut vmx = _mm256_set1_pd(f64::NEG_INFINITY);
+        let mut unord = _mm256_setzero_pd();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let d = _mm256_cvtps_pd(_mm_loadu_ps(src.add(i)));
+            _mm256_storeu_pd(dst.add(i), d);
+            vmn = _mm256_min_pd(vmn, d);
+            vmx = _mm256_max_pd(vmx, d);
+            unord = _mm256_or_pd(unord, _mm256_cmp_pd::<_CMP_UNORD_Q>(d, d));
+            i += 4;
+        }
+        let (mut mn, mut mx) = (reduce_min(vmn), reduce_max(vmx));
+        let saw_nan = _mm256_movemask_pd(unord) != 0;
+        for (d, &xf) in vals[i..].iter_mut().zip(&v[i..]) {
+            let x = xf as f64;
+            *d = x;
+            mn = mn.min(x);
+            mx = mx.max(x);
+        }
+        // vminpd/vmaxpd diverge from f64::min/max only on NaN operands
+        // or ±0.0 ties; a ±0.0 tie can only have affected the answer if
+        // the answer IS a zero. Re-fold those rare cases exactly.
+        if saw_nan || mn == 0.0 || mx == 0.0 {
+            let (mut smn, mut smx) = (f64::INFINITY, f64::NEG_INFINITY);
+            for &x in vals.iter() {
+                smn = smn.min(x);
+                smx = smx.max(x);
+            }
+            return (smn, smx);
+        }
+        (mn, mx)
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn histogram_into(v: &[f32], mn: f64, mx: f64, out: &mut [f64]) {
+        let bins = out.len();
+        out.fill(0.0);
+        let inv = bins as f64 / (mx - mn).max(1e-30);
+        let vmn = _mm256_set1_pd(mn);
+        let vinv = _mm256_set1_pd(inv);
+        let vzero = _mm256_setzero_pd();
+        let vtop = _mm256_set1_pd((bins - 1) as f64);
+        let n = v.len();
+        let src = v.as_ptr();
+        let mut idx4 = [0i32; 4];
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let x = _mm256_cvtps_pd(_mm_loadu_ps(src.add(i)));
+            let t = _mm256_floor_pd(_mm256_mul_pd(_mm256_sub_pd(x, vmn), vinv));
+            let t = _mm256_max_pd(t, vzero);
+            let t = _mm256_min_pd(t, vtop);
+            let b4 = _mm256_cvttpd_epi32(t);
+            _mm_storeu_si128(idx4.as_mut_ptr() as *mut __m128i, b4);
+            for &b in &idx4 {
+                *out.get_unchecked_mut(b as usize) += 1.0;
+            }
+            i += 4;
+        }
+        for &x in &v[i..] {
+            let idx = ((x as f64 - mn) * inv).floor();
+            let idx = (idx.max(0.0) as usize).min(bins - 1);
+            out[idx] += 1.0;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn histogram_f64_into(vals: &[f64], mn: f64, mx: f64, out: &mut [f64]) {
+        let bins = out.len();
+        out.fill(0.0);
+        let inv = bins as f64 / (mx - mn).max(1e-30);
+        let vmn = _mm256_set1_pd(mn);
+        let vinv = _mm256_set1_pd(inv);
+        let vzero = _mm256_setzero_pd();
+        let vtop = _mm256_set1_pd((bins - 1) as f64);
+        let n = vals.len();
+        let src = vals.as_ptr();
+        let mut idx4 = [0i32; 4];
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let x = _mm256_loadu_pd(src.add(i));
+            let t = _mm256_floor_pd(_mm256_mul_pd(_mm256_sub_pd(x, vmn), vinv));
+            let t = _mm256_max_pd(t, vzero);
+            let t = _mm256_min_pd(t, vtop);
+            let b4 = _mm256_cvttpd_epi32(t);
+            _mm_storeu_si128(idx4.as_mut_ptr() as *mut __m128i, b4);
+            for &b in &idx4 {
+                *out.get_unchecked_mut(b as usize) += 1.0;
+            }
+            i += 4;
+        }
+        for &x in &vals[i..] {
+            let idx = ((x - mn) * inv).floor();
+            let idx = (idx.max(0.0) as usize).min(bins - 1);
+            out[idx] += 1.0;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn fill_edges(mn: f64, mx: f64, edges: &mut [f64]) {
+        let n = edges.len();
+        let bins = n as f64;
+        let vmn = _mm256_set1_pd(mn);
+        let vrange = _mm256_set1_pd(mx - mn);
+        let vbins = _mm256_set1_pd(bins);
+        let vfour = _mm256_set1_pd(4.0);
+        let mut kv = _mm256_setr_pd(1.0, 2.0, 3.0, 4.0);
+        let dst = edges.as_mut_ptr();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let e = _mm256_add_pd(vmn, _mm256_div_pd(_mm256_mul_pd(vrange, kv), vbins));
+            _mm256_storeu_pd(dst.add(i), e);
+            kv = _mm256_add_pd(kv, vfour);
+            i += 4;
+        }
+        for (k, e) in edges.iter_mut().enumerate().skip(i) {
+            *e = mn + (mx - mn) * (k + 1) as f64 / bins;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn adversarial_vectors() -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(20260808);
+        let mut out: Vec<Vec<f32>> = Vec::new();
+        let lens = [
+            0usize, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 15, 16, 17, 31, 32, 33, 100, 257,
+            1000,
+        ];
+        for &n in &lens {
+            out.push((0..n).map(|_| rng.normal(0.0, 3.0) as f32).collect());
+        }
+        // All-equal, all-zero, mixed-sign-zero, and non-finite payloads.
+        out.push(vec![7.25; 40]);
+        out.push(vec![0.0; 40]);
+        out.push(vec![0.0, -0.0, 0.0, -0.0, 1.0, -1.0, 0.0, -0.0, -0.0]);
+        out.push(vec![-0.0; 9]);
+        let mut weird: Vec<f32> = (0..37).map(|_| rng.uniform(-5.0, 5.0) as f32).collect();
+        weird[3] = f32::NAN;
+        weird[17] = f32::INFINITY;
+        weird[29] = f32::NEG_INFINITY;
+        weird[31] = f32::MIN_POSITIVE / 2.0; // subnormal
+        out.push(weird);
+        out.push(vec![f32::NAN; 13]);
+        out
+    }
+
+    fn scalar_minmax(v: &[f32]) -> (Vec<f64>, f64, f64) {
+        let mut vals = Vec::new();
+        let (mn, mx) = super::scalar::convert_minmax(v, &mut vals);
+        (vals, mn, mx)
+    }
+
+    #[test]
+    fn env_mode_parsing_and_override() {
+        let prev = mode();
+        set_mode(SimdMode::Scalar);
+        assert_eq!(mode(), SimdMode::Scalar);
+        assert!(!active());
+        set_mode(SimdMode::Off);
+        assert!(!active());
+        set_mode(SimdMode::Auto);
+        assert_eq!(mode(), SimdMode::Auto);
+        set_mode(prev);
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_convert_minmax_is_bit_identical() {
+        if !avx2_available() {
+            return;
+        }
+        for (case, v) in adversarial_vectors().iter().enumerate() {
+            let (svals, smn, smx) = scalar_minmax(v);
+            let mut avals = Vec::new();
+            let (amn, amx) = unsafe { super::avx2::convert_minmax(v, &mut avals) };
+            assert_eq!(svals.len(), avals.len(), "case {case}");
+            for (a, b) in svals.iter().zip(&avals) {
+                assert_eq!(a.to_bits(), b.to_bits(), "case {case} converted value");
+            }
+            assert_eq!(smn.to_bits(), amn.to_bits(), "case {case} min");
+            assert_eq!(smx.to_bits(), amx.to_bits(), "case {case} max");
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_histograms_are_bit_identical() {
+        if !avx2_available() {
+            return;
+        }
+        for (case, v) in adversarial_vectors().iter().enumerate() {
+            let (vals, mut mn, mut mx) = scalar_minmax(v);
+            if !mn.is_finite() || !mx.is_finite() || mn > mx {
+                // Degenerate ranges (empty / all-NaN / ±inf payloads):
+                // pin a finite range so the bin formula is exercised on
+                // the raw values, non-finite entries included.
+                (mn, mx) = (-4.0, 4.0);
+            }
+            for bins in [1usize, 2, 3, 4, 5, 7, 8, 32, 33] {
+                let mut s32 = vec![0.0; bins];
+                let mut a32 = vec![0.0; bins];
+                super::scalar::histogram_into(v, mn, mx, &mut s32);
+                unsafe { super::avx2::histogram_into(v, mn, mx, &mut a32) };
+                assert_eq!(s32, a32, "case {case} bins {bins} (f32)");
+                let mut s64 = vec![0.0; bins];
+                let mut a64 = vec![0.0; bins];
+                super::scalar::histogram_f64_into(&vals, mn, mx, &mut s64);
+                unsafe { super::avx2::histogram_f64_into(&vals, mn, mx, &mut a64) };
+                assert_eq!(s64, a64, "case {case} bins {bins} (f64)");
+                // Degenerate zero-width range: every value lands in one
+                // bin through the huge 1e-30-guarded inverse.
+                let mut sz = vec![0.0; bins];
+                let mut az = vec![0.0; bins];
+                super::scalar::histogram_f64_into(&vals, 1.5, 1.5, &mut sz);
+                unsafe { super::avx2::histogram_f64_into(&vals, 1.5, 1.5, &mut az) };
+                assert_eq!(sz, az, "case {case} bins {bins} (zero-width)");
+            }
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_fill_edges_is_bit_identical() {
+        if !avx2_available() {
+            return;
+        }
+        for bins in [1usize, 2, 3, 4, 5, 7, 8, 9, 31, 32, 33, 100, 257] {
+            for &(mn, mx) in &[(-3.5f64, 9.25f64), (0.0, 1.0), (-1e30, 1e30), (2.0, 2.0)] {
+                let mut s = vec![0.0; bins];
+                let mut a = vec![0.0; bins];
+                super::scalar::fill_edges(mn, mx, &mut s);
+                unsafe { super::avx2::fill_edges(mn, mx, &mut a) };
+                for (x, y) in s.iter().zip(&a) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "bins {bins} range {mn}..{mx}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dispatch_matches_scalar_in_every_mode() {
+        let prev = mode();
+        for m in [SimdMode::Off, SimdMode::Scalar, SimdMode::Auto] {
+            set_mode(m);
+            for v in adversarial_vectors() {
+                let (svals, smn, smx) = scalar_minmax(&v);
+                let mut dvals = Vec::new();
+                let (dmn, dmx) = convert_minmax(&v, &mut dvals);
+                assert_eq!(smn.to_bits(), dmn.to_bits(), "{m:?} min");
+                assert_eq!(smx.to_bits(), dmx.to_bits(), "{m:?} max");
+                assert_eq!(svals.len(), dvals.len());
+                let (mn, mx) = if smn.is_finite() && smx.is_finite() && smn <= smx {
+                    (smn, smx)
+                } else {
+                    (-4.0, 4.0)
+                };
+                let mut sh = vec![0.0; 32];
+                let mut dh = vec![0.0; 32];
+                super::scalar::histogram_into(&v, mn, mx, &mut sh);
+                histogram_into(&v, mn, mx, &mut dh);
+                assert_eq!(sh, dh, "{m:?} f32 histogram");
+                super::scalar::histogram_f64_into(&svals, mn, mx, &mut sh);
+                histogram_f64_into(&dvals, mn, mx, &mut dh);
+                assert_eq!(sh, dh, "{m:?} f64 histogram");
+                let mut se = vec![0.0; 32];
+                let mut de = vec![0.0; 32];
+                super::scalar::fill_edges(mn, mx, &mut se);
+                fill_edges(mn, mx, &mut de);
+                assert_eq!(se, de, "{m:?} edges");
+            }
+        }
+        set_mode(prev);
+    }
+}

@@ -234,6 +234,44 @@ fn unsupported_types_get_penalty_error() {
     }
 }
 
+#[test]
+fn simd_and_scalar_paths_are_bit_identical() {
+    // The SIMD tolerance policy is zero: forced-scalar and
+    // runtime-dispatched (`PDFFLOW_SIMD=scalar` vs `auto`) runs must
+    // produce byte-identical output matrices for all 10 DistTypes at
+    // every tested length — including observation counts around the
+    // 4-lane width (width−1, width, width+1) and non-multiple tails.
+    // On hardware without AVX2 both modes run the same scalar loops and
+    // the comparison is trivially true; the CI matrix runs the whole
+    // suite under both env values so each mode also gets a full pass.
+    use pdfflow::stats::simd::{self, SimdMode};
+    let prev = simd::mode();
+    let obs_lens = [2usize, 3, 4, 5, 7, 8, 9, 31, 32, 33, 100, 257];
+    let mut rng = Rng::new(20180603);
+    for (i, &fam) in DistType::ALL.iter().enumerate() {
+        for &obs in &obs_lens {
+            // A couple of randomized point counts per (family, length).
+            for _ in 0..2 {
+                let n = 1 + (rng.uniform(0.0, 24.0) as usize);
+                let values = family_batch(fam, n, obs, 500 + i as u64 + obs as u64);
+                let b = backend_with_batch(8);
+                simd::set_mode(SimdMode::Scalar);
+                let scalar_fit = b.run_fit_all(&values, n, obs, 10).unwrap();
+                let scalar_stats = b.run_stats(&values, n, obs).unwrap();
+                let scalar_single = b.run_fit_single(&values, n, obs, fam).unwrap();
+                simd::set_mode(SimdMode::Auto);
+                let auto_fit = b.run_fit_all(&values, n, obs, 10).unwrap();
+                let auto_stats = b.run_stats(&values, n, obs).unwrap();
+                let auto_single = b.run_fit_single(&values, n, obs, fam).unwrap();
+                assert_eq!(scalar_fit.data, auto_fit.data, "{fam:?} obs={obs} fit_all");
+                assert_eq!(scalar_stats.data, auto_stats.data, "{fam:?} obs={obs} stats");
+                assert_eq!(scalar_single.data, auto_single.data, "{fam:?} obs={obs} single");
+            }
+        }
+    }
+    simd::set_mode(prev);
+}
+
 #[cfg(feature = "xla")]
 mod xla_parity {
     use super::*;

@@ -104,7 +104,7 @@ fn records_pipeline_bench_json() {
     };
     let _ = run_once(1); // warm-up
 
-    let rows: Vec<BenchRow> = THREADS
+    let mut rows: Vec<BenchRow> = THREADS
         .iter()
         .map(|&threads| {
             let secs = run_once(threads);
@@ -115,6 +115,44 @@ fn records_pipeline_bench_json() {
             }
         })
         .collect();
+
+    // Kernel micro-row: fused run_fit_all throughput with no pipeline
+    // around it, so kernel-only changes stay visible separately from
+    // the end-to-end windows/s trajectory.
+    let kern_points = 1024usize;
+    let kern_obs = spec.n_sims;
+    let kern_types = 10usize;
+    let kernel_fps = {
+        let mut rng = Rng::new(20180602);
+        let values: Vec<f32> = (0..kern_points * kern_obs)
+            .map(|_| rng.gamma(3.0, 2.0) as f32)
+            .collect();
+        let backend = make_backend(BackendKind::Native, "artifacts", &BackendOptions::default())
+            .expect("backend");
+        backend
+            .run_fit_all(&values, kern_points, kern_obs, kern_types)
+            .expect("warm-up");
+        let t0 = Instant::now();
+        let reps = 2usize;
+        for _ in 0..reps {
+            backend
+                .run_fit_all(&values, kern_points, kern_obs, kern_types)
+                .expect("fit");
+        }
+        (reps * kern_points) as f64 / t0.elapsed().as_secs_f64()
+    };
+    rows.push(BenchRow {
+        threads: pdfflow::runtime::hostpool::default_budget(),
+        throughput: kernel_fps,
+        extra: vec![
+            ("mode", Json::Str("kernel".into())),
+            ("unit", Json::Str("fit_points_per_s".into())),
+            ("points", Json::Num(kern_points as f64)),
+            ("obs", Json::Num(kern_obs as f64)),
+            ("types", Json::Num(kern_types as f64)),
+        ],
+    });
+
     write_bench_json(
         "pipeline",
         vec![
@@ -134,6 +172,11 @@ fn records_pipeline_bench_json() {
     for row in &rows {
         assert!(row.get("throughput").and_then(|t| t.as_f64()).unwrap() > 0.0);
     }
+    let kernel_rows = rows
+        .iter()
+        .filter(|r| r.get("mode").and_then(|m| m.as_str()) == Some("kernel"))
+        .count();
+    assert_eq!(kernel_rows, 1, "pipeline record must carry the kernel micro-row");
     let _ = std::fs::remove_dir_all(&root);
 }
 

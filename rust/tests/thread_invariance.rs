@@ -145,6 +145,59 @@ fn grouping_ml_is_thread_count_invariant() {
 }
 
 #[test]
+fn adaptive_batching_is_result_invariant() {
+    // `pipeline.adaptive_batch` + the backend's occupancy-adaptive
+    // controller may only change scheduling granularity (chunk width,
+    // fan-out), never results: a fixed-width run and an adaptive run
+    // must agree on report aggregates and persisted segment bytes, bit
+    // for bit.
+    let root = std::env::temp_dir().join(format!(
+        "pdfflow-invariance-adapt-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&root);
+    let ds = dataset(&root);
+    let mut runs = Vec::new();
+    for (tag, adaptive) in [("fixed", false), ("adaptive", true)] {
+        let store = root.join(format!("store-{tag}"));
+        let backend = make_backend(
+            BackendKind::Native,
+            "artifacts",
+            &BackendOptions {
+                batch: 64,
+                adaptive,
+                ..BackendOptions::default()
+            },
+        )
+        .expect("native backend");
+        let cfg = PipelineConfig {
+            batch: 64,
+            window_lines: 4,
+            executor_threads: 4,
+            adaptive_batch: adaptive,
+            store_dir: Some(store.to_string_lossy().into_owned()),
+            ..PipelineConfig::default()
+        };
+        let mut pipe =
+            Pipeline::new(&ds, backend.as_ref(), SimCluster::new(ClusterSpec::lncc()), cfg);
+        let report = pipe.run_slice(Method::Grouping, 2, TypeSet::Four).expect("run");
+        let bytes = std::fs::read(store.join("slice2_grouping_4_default_g0.seg"))
+            .expect("segment bytes");
+        runs.push((report, bytes));
+    }
+    assert_eq!(
+        fingerprint(&runs[0].0),
+        fingerprint(&runs[1].0),
+        "adaptive batching changed report aggregates"
+    );
+    assert!(
+        runs[0].1 == runs[1].1,
+        "adaptive batching changed persisted segment bytes"
+    );
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
 fn host_budget_bounds_live_threads_under_nested_backend_calls() {
     // The no-oversubscription acceptance contract: backend chunk
     // fan-out nested inside executor tasks draws from ONE pool budget —
