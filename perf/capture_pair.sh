@@ -1,0 +1,68 @@
+#!/usr/bin/env sh
+# Capture a before/after pair of tier1-smoke telemetry snapshots with
+# the binary's own exporter, so perf PRs can commit real evidence
+# instead of claims.
+#
+#   perf/capture_pair.sh <before-rev> [<after-rev>] [<tag>]
+#
+# For each rev this clones the repo into a temp dir at exactly that
+# commit (detached, so the binary's pure-fs git_rev reader records the
+# raw hash), builds the release binary, runs the tier1-smoke workload
+# (`run --preset small --lines 4`) with --metrics-out, and validates
+# the snapshot with the same binary. Output lands at
+# perf/<tag>-{before,after}-tier1-smoke.metrics.json (+ .prom).
+#
+# after-rev defaults to HEAD; tag defaults to "pair". Example for the
+# PR 8 SIMD evidence:
+#
+#   perf/capture_pair.sh 0d34285f HEAD pr8
+#
+# Revisions that already stamp provenance.report_fingerprint (PR 8
+# fix-up onward) let you check "same results, less time" straight from
+# the two JSON files. When the before rev predates the field, compare
+# the `report fingerprint` stdout line of the after binary run with
+# PDFFLOW_SIMD=off vs auto instead — same code path the pair is
+# claiming didn't change.
+set -eu
+
+BEFORE=${1:?usage: perf/capture_pair.sh <before-rev> [<after-rev>] [<tag>]}
+AFTER=${2:-HEAD}
+TAG=${3:-pair}
+REPO=$(cd "$(dirname "$0")/.." && pwd)
+OUT=$REPO/perf
+WORK=$(mktemp -d)
+trap 'rm -rf "$WORK"' EXIT INT TERM
+
+capture() { # $1 = rev-ish, $2 = snapshot path
+    rev=$(git -C "$REPO" rev-parse "$1")
+    clone=$WORK/$rev
+    git clone -q --no-checkout "$REPO" "$clone"
+    git -C "$clone" checkout -q --detach "$rev"
+    echo "== building $rev"
+    (cd "$clone" && cargo build -q --release)
+    bin=$clone/target/release/pdfflow
+    echo "== capturing $2"
+    (cd "$clone" && "$bin" run --preset small --lines 4 --metrics-out "$2")
+    (cd "$clone" && "$bin" telemetry validate "$2")
+}
+
+capture "$BEFORE" "$OUT/$TAG-before-tier1-smoke.metrics.json"
+capture "$AFTER" "$OUT/$TAG-after-tier1-smoke.metrics.json"
+
+if command -v python3 >/dev/null 2>&1; then
+    python3 - "$OUT/$TAG-before-tier1-smoke.metrics.json" \
+              "$OUT/$TAG-after-tier1-smoke.metrics.json" <<'EOF'
+import json, sys
+pair = [json.load(open(p)) for p in sys.argv[1:3]]
+for label, snap in zip(("before", "after"), pair):
+    prov = snap["provenance"]
+    fit = snap["metrics"].get("span.fit.ns", {})
+    print(f"{label}: git_rev {prov['git_rev'][:12]} "
+          f"fingerprint {prov.get('report_fingerprint', '-')} "
+          f"span.fit.ns p50 {fit.get('p50', '-')} count {fit.get('count', '-')}")
+fps = [p["provenance"].get("report_fingerprint") for p in pair]
+if all(fps):
+    print("report fingerprints match" if fps[0] == fps[1]
+          else "WARNING: report fingerprints DIFFER — results changed")
+EOF
+fi

@@ -179,6 +179,15 @@ fn main() {
         let path = write_bench_json(
             "pipeline",
             vec![
+                (
+                    "note",
+                    Json::Str(format!(
+                        "recorded by `cargo bench --bench pipeline -- --json`{}; the tier-1 \
+                         smoke test (tests/bench_smoke.rs) rewrites this file with a \
+                         tier1-smoke profile on every `cargo test` run",
+                        if smoke { " (PDFFLOW_BENCH_SMOKE=1)" } else { "" }
+                    )),
+                ),
                 ("profile", Json::Str(String::from(if smoke { "smoke" } else { "full" }))),
                 ("unit", Json::Str("windows_per_s".into())),
                 ("windows", Json::Num(n_windows as f64)),

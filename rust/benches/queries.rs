@@ -403,6 +403,15 @@ fn main() {
         let path = write_bench_json(
             "queries",
             vec![
+                (
+                    "note",
+                    Json::Str(format!(
+                        "recorded by `cargo bench --bench queries -- --json`{}; the tier-1 \
+                         smoke test (tests/bench_smoke.rs) rewrites this file with a \
+                         tier1-smoke profile on every `cargo test` run",
+                        if smoke { " (PDFFLOW_BENCH_SMOKE=1)" } else { "" }
+                    )),
+                ),
                 ("profile", Json::Str(String::from(if smoke { "smoke" } else { "full" }))),
                 ("unit", Json::Str("warm_queries_per_s".into())),
                 ("n_queries", Json::Num(n_queries as f64)),

@@ -107,6 +107,38 @@ impl SliceReport {
         self.load_sim_s + self.fit_sim_s + self.persist_sim_s
     }
 
+    /// FNV-64 over the deterministic face of the report: every field
+    /// that must not depend on executor width, backend chunking, or
+    /// SIMD dispatch (times are measurements and are excluded), folded
+    /// per window in window order. Two runs over the same dataset and
+    /// method must agree bit-for-bit; `pdfflow run` stamps this into
+    /// `--metrics-out` snapshots (`provenance.report_fingerprint`) so
+    /// perf before/after pairs carry a checkable no-behavior-change
+    /// witness.
+    pub fn fingerprint(&self) -> u64 {
+        let mut bytes = Vec::with_capacity(80 + 56 * self.windows.len());
+        let mut push = |v: u64| bytes.extend_from_slice(&v.to_le_bytes());
+        push(self.avg_error.to_bits());
+        push(self.n_points as u64);
+        push(self.fits as u64);
+        push(self.groups as u64);
+        push(self.reuse_hits as u64);
+        push(self.shuffle_bytes);
+        push(self.persist_bytes);
+        push(self.cache_hits as u64);
+        push(self.cache_misses as u64);
+        for w in &self.windows {
+            push(w.n_points as u64);
+            push(w.fits as u64);
+            push(w.groups as u64);
+            push(w.reuse_hits as u64);
+            push(w.shuffle_bytes);
+            push(w.persist_bytes);
+            push(w.err_sum.to_bits());
+        }
+        crate::pdfstore::fnv64(&bytes)
+    }
+
     /// One human-readable summary row (bench drivers print these).
     pub fn row(&self) -> String {
         format!(

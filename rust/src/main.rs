@@ -216,7 +216,13 @@ fn cmd_run(args: &Args) -> Result<()> {
         }
         r
     };
+    // Deterministic result witness: printed here and stamped into any
+    // --metrics-out snapshot (provenance.report_fingerprint), so perf
+    // before/after pairs can prove the results didn't change.
+    let fp = r.fingerprint();
+    pdfflow::telemetry::export::set_report_fingerprint(fp);
     println!("{}", r.row());
+    println!("report fingerprint {fp:016x}");
     println!(
         "slice {} ({} points, {} windows) on {} ({} nodes x {} cores), {} backend",
         r.slice,

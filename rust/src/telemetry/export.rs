@@ -57,6 +57,23 @@ pub fn build_profile() -> &'static str {
     }
 }
 
+/// Report fingerprint published into snapshot provenance, when the
+/// driving command produced one (see
+/// [`set_report_fingerprint`]). `u64::MAX` sentinel = unset; the real
+/// value is an FNV-64 so any collision with the sentinel is harmless
+/// (the field is merely omitted).
+static REPORT_FINGERPRINT: std::sync::atomic::AtomicU64 =
+    std::sync::atomic::AtomicU64::new(u64::MAX);
+
+/// Record the run's deterministic report fingerprint
+/// (`SliceReport::fingerprint`) so the next snapshot carries it as
+/// `provenance.report_fingerprint` (16-hex-digit string). Perf
+/// before/after snapshot pairs use this to prove "same results, less
+/// time" from the committed artifacts alone.
+pub fn set_report_fingerprint(fp: u64) {
+    REPORT_FINGERPRINT.store(fp, std::sync::atomic::Ordering::Relaxed);
+}
+
 /// Provenance block shared by telemetry snapshots, flight-recorder
 /// dumps, and (via [`crate::bench`]) the BENCH JSON configs.
 pub fn provenance() -> Json {
@@ -64,11 +81,16 @@ pub fn provenance() -> Json {
         .duration_since(std::time::UNIX_EPOCH)
         .map(|d| d.as_secs())
         .unwrap_or(0);
-    Json::obj(vec![
+    let mut pairs = vec![
         ("git_rev", Json::Str(git_rev())),
         ("profile", Json::Str(build_profile().into())),
         ("unix_ts", Json::Num(ts as f64)),
-    ])
+    ];
+    let fp = REPORT_FINGERPRINT.load(std::sync::atomic::Ordering::Relaxed);
+    if fp != u64::MAX {
+        pairs.push(("report_fingerprint", Json::Str(format!("{fp:016x}"))));
+    }
+    Json::obj(pairs)
 }
 
 fn histogram_json(h: &super::Histogram) -> Json {
@@ -276,5 +298,24 @@ mod tests {
     fn prom_names_are_sanitized() {
         assert_eq!(prom_name("cache.window.hits"), "pdfflow_cache_window_hits");
         assert_eq!(prom_name("span.serve.point.ns"), "pdfflow_span_serve_point_ns");
+    }
+
+    #[test]
+    fn report_fingerprint_lands_in_provenance_and_validates() {
+        set_report_fingerprint(0x0123_4567_89ab_cdef);
+        let prov = provenance();
+        assert_eq!(
+            prov.get("report_fingerprint").and_then(|f| f.as_str()),
+            Some("0123456789abcdef")
+        );
+        // The extra provenance key must not break the v1 validator.
+        // (Built by hand rather than via snapshot(): the live registry
+        // is shared with concurrently-running tests.)
+        let doc = Json::obj(vec![
+            ("schema", Json::Str(SCHEMA.into())),
+            ("provenance", prov),
+            ("metrics", Json::obj(Vec::new())),
+        ]);
+        validate_snapshot(&doc).expect("snapshot with fingerprint validates");
     }
 }

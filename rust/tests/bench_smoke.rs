@@ -156,6 +156,15 @@ fn records_pipeline_bench_json() {
     write_bench_json(
         "pipeline",
         vec![
+            (
+                "note",
+                Json::Str(
+                    "tier1-smoke baseline recorded by tests/bench_smoke.rs (32x16x4 cube, \
+                     120 observations, Baseline/4-types over slice 2); regenerated on every \
+                     tier-1 run and by `cargo bench --bench pipeline -- --json`"
+                        .into(),
+                ),
+            ),
             ("profile", Json::Str("tier1-smoke".into())),
             ("unit", Json::Str("windows_per_s".into())),
             ("windows", Json::Num(n_windows as f64)),
@@ -309,6 +318,15 @@ fn records_queries_bench_json() {
     write_bench_json(
         "queries",
         vec![
+            (
+                "note",
+                Json::Str(
+                    "tier1-smoke baseline recorded by tests/bench_smoke.rs (32x16x4 cube, \
+                     slice 2 persisted, shared QueryStoreFixture build); regenerated on every \
+                     tier-1 run and by `cargo bench --bench queries -- --json`"
+                        .into(),
+                ),
+            ),
             ("profile", Json::Str("tier1-smoke".into())),
             ("unit", Json::Str("warm_queries_per_s".into())),
             ("n_queries", Json::Num(n_queries as f64)),
