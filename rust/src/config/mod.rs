@@ -110,6 +110,10 @@ pub struct ExperimentConfig {
     /// Compute backend. Precedence: `--backend` CLI flag > `backend`
     /// config key > `PDFFLOW_BACKEND` env > native.
     pub backend: BackendKind,
+    /// Fault-injection spec installed at startup (`faults.spec` config
+    /// key; the `PDFFLOW_FAULTS` env takes precedence — see
+    /// [`crate::fault`] for the grammar). `None` leaves injection idle.
+    pub faults: Option<String>,
 }
 
 /// Backend default for programmatic constructors: the `PDFFLOW_BACKEND`
@@ -135,6 +139,7 @@ impl ExperimentConfig {
             data_dir: "data/set1".into(),
             artifacts_dir: "artifacts".into(),
             backend: default_backend(),
+            faults: None,
         }
     }
 
@@ -182,6 +187,7 @@ impl ExperimentConfig {
             data_dir: "data/small".into(),
             artifacts_dir: "artifacts".into(),
             backend: default_backend(),
+            faults: None,
         }
     }
 
@@ -287,6 +293,9 @@ impl ExperimentConfig {
                     PdfflowError::Config(format!("unknown backend {s:?} (native|xla)"))
                 })?
             }
+        }
+        if let Some(s) = doc.get("faults.spec").and_then(|v| v.as_str()) {
+            cfg.faults = Some(s.to_string());
         }
         Ok(cfg)
     }

@@ -61,7 +61,12 @@ pub fn load_window(
     let (obs, cache_hit) = match cache.get(&window) {
         Some(m) => (m, true),
         None => {
-            let m = Arc::new(reader.read_window(&window)?);
+            // NFS reads are the classic transient-failure surface;
+            // bounded retry keeps a blip from killing a whole run.
+            let m = Arc::new(crate::fault::retry("loader.read", || {
+                crate::fault::check("loader.read")?;
+                reader.read_window(&window)
+            })?);
             cache.put(&window, Arc::clone(&m));
             (m, false)
         }

@@ -1,0 +1,519 @@
+//! Deterministic fault injection and the shared retry/backoff policy.
+//!
+//! A *failpoint* is a named site on a durability-critical I/O path
+//! (`segment.read`, `catalog.save`, ...). When the process is armed
+//! with a fault spec — via the `PDFFLOW_FAULTS` environment variable or
+//! the `faults.spec` config key — each site consults its clause and may
+//! inject a transient I/O error ([`check`]) or flip one byte of a
+//! buffer in flight ([`mangle`]). Triggers draw from a seeded
+//! per-failpoint PRNG stream, so a given spec replays the exact same
+//! fault sequence on every run: the torture suite
+//! (`tests/fault_torture.rs`) depends on this determinism.
+//!
+//! When no spec is armed the entire subsystem compiles down to one
+//! relaxed atomic load per hook — the same discipline as the telemetry
+//! span gate — so production paths pay nothing for carrying the hooks.
+//!
+//! # Spec grammar
+//!
+//! Comma-separated clauses:
+//!
+//! ```text
+//! seed=<u64>                      PRNG seed (default 0)
+//! retry=<attempts>:<backoff_ms>   override the retry policy
+//! <site>=<kind>[:<prob>[:<max>]]  arm a failpoint
+//! ```
+//!
+//! `kind` is `io` (inject a transient error) or `corrupt` (flip one
+//! byte); `prob` is the per-visit trigger probability (default 1.0);
+//! `max` caps the total number of firings (default unlimited).
+//! Example: `seed=7,segment.read=io:0.5:3,catalog.save=corrupt`.
+//!
+//! # Retry policy
+//!
+//! [`retry`] wraps an I/O closure and re-runs it on transient errors
+//! ([`crate::PdfflowError::is_transient`]) with bounded exponential
+//! backoff. The policy comes from the armed spec's `retry=` clause,
+//! else `PDFFLOW_RETRY_ATTEMPTS` / `PDFFLOW_RETRY_BACKOFF_MS`, else 3
+//! attempts starting at 10 ms. Each re-run increments
+//! `io.retry.attempts`; giving up increments `io.retry.exhausted` and
+//! drops a flight-recorder mark.
+
+use std::sync::atomic::{AtomicU8, Ordering::Relaxed};
+use std::sync::{Mutex, OnceLock};
+use std::time::Duration;
+
+use crate::telemetry::{self, Registry};
+use crate::util::prng::Rng;
+use crate::{PdfflowError, Result};
+
+/// Counter bumped once per injected fault (both kinds).
+pub const INJECTED: &str = "fault.injected";
+/// Counter bumped once per transient-error re-run inside [`retry`].
+pub const RETRY_ATTEMPTS: &str = "io.retry.attempts";
+/// Counter bumped when [`retry`] gives up on a transient error.
+pub const RETRY_EXHAUSTED: &str = "io.retry.exhausted";
+
+/// Ceiling on a single backoff sleep, keeping worst-case retry latency
+/// bounded no matter how the knobs are set.
+const MAX_BACKOFF_MS: u64 = 250;
+
+/// What an armed failpoint injects when it fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Kind {
+    /// A transient I/O error (`ErrorKind::Interrupted`).
+    Io,
+    /// One flipped byte in the buffer passing through [`mangle`].
+    Corrupt,
+}
+
+#[derive(Debug)]
+struct Failpoint {
+    site: String,
+    kind: Kind,
+    prob: f64,
+    /// Remaining firings; `None` = unlimited.
+    remaining: Option<u64>,
+    rng: Rng,
+}
+
+impl Failpoint {
+    fn fire(&mut self) -> bool {
+        if self.remaining == Some(0) {
+            return false;
+        }
+        // Always consume one draw so the stream position depends only
+        // on the visit count, not on earlier outcomes.
+        let roll = self.rng.f64();
+        let hit = self.prob >= 1.0 || roll < self.prob;
+        if hit {
+            if let Some(n) = &mut self.remaining {
+                *n -= 1;
+            }
+        }
+        hit
+    }
+}
+
+/// Bounded-backoff retry knobs used by [`retry`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Total tries, including the first (clamped to ≥ 1).
+    pub attempts: u32,
+    /// First backoff sleep; doubles per retry, capped at 250 ms.
+    pub backoff_ms: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { attempts: 3, backoff_ms: 10 }
+    }
+}
+
+#[derive(Debug)]
+struct Plan {
+    points: Vec<Failpoint>,
+    retry: Option<RetryPolicy>,
+}
+
+/// 0 = unresolved (env not consulted yet), 1 = idle, 2 = armed.
+static STATE: AtomicU8 = AtomicU8::new(0);
+static PLAN: Mutex<Option<Plan>> = Mutex::new(None);
+static ENV_POLICY: OnceLock<RetryPolicy> = OnceLock::new();
+
+/// Whether any fault spec is armed. One relaxed load on the hot path;
+/// the first call resolves `PDFFLOW_FAULTS` from the environment.
+#[inline]
+pub fn active() -> bool {
+    match STATE.load(Relaxed) {
+        1 => false,
+        2 => true,
+        _ => resolve_env(),
+    }
+}
+
+#[cold]
+fn resolve_env() -> bool {
+    match std::env::var("PDFFLOW_FAULTS") {
+        Ok(spec) if !spec.trim().is_empty() => match install(&spec) {
+            Ok(()) => true,
+            Err(e) => {
+                eprintln!("pdfflow: ignoring PDFFLOW_FAULTS: {e}");
+                clear();
+                false
+            }
+        },
+        _ => {
+            STATE.store(1, Relaxed);
+            false
+        }
+    }
+}
+
+/// Parse `spec` and arm it process-wide, replacing any prior plan.
+pub fn install(spec: &str) -> Result<()> {
+    let plan = parse(spec)?;
+    *PLAN.lock().unwrap() = Some(plan);
+    STATE.store(2, Relaxed);
+    Ok(())
+}
+
+/// Disarm all failpoints (tests call this between scenarios).
+pub fn clear() {
+    *PLAN.lock().unwrap() = None;
+    STATE.store(1, Relaxed);
+}
+
+fn parse(spec: &str) -> Result<Plan> {
+    fn bad(clause: &str, why: &str) -> PdfflowError {
+        PdfflowError::Config(format!("fault spec clause {clause:?}: {why}"))
+    }
+    let clauses = || spec.split(',').map(str::trim).filter(|c| !c.is_empty());
+    // Pass 1: the seed, so failpoint streams don't depend on where the
+    // seed= clause sits relative to the site clauses.
+    let mut seed = 0u64;
+    for clause in clauses() {
+        if let Some(v) = clause.strip_prefix("seed=") {
+            seed = v.parse().map_err(|_| bad(clause, "seed must be a u64"))?;
+        }
+    }
+    let root = Rng::new(seed ^ 0x5eed_fa17_5eed_fa17);
+    let mut points: Vec<Failpoint> = Vec::new();
+    let mut retry = None;
+    for clause in clauses() {
+        let Some((key, val)) = clause.split_once('=') else {
+            return Err(bad(clause, "expected key=value"));
+        };
+        match key {
+            "seed" => {}
+            "retry" => {
+                let (a, b) = val
+                    .split_once(':')
+                    .ok_or_else(|| bad(clause, "expected retry=attempts:backoff_ms"))?;
+                retry = Some(RetryPolicy {
+                    attempts: a.parse().map_err(|_| bad(clause, "attempts must be a u32"))?,
+                    backoff_ms: b.parse().map_err(|_| bad(clause, "backoff_ms must be a u64"))?,
+                });
+            }
+            site => {
+                let mut it = val.split(':');
+                let kind = match it.next().unwrap_or("") {
+                    "io" => Kind::Io,
+                    "corrupt" => Kind::Corrupt,
+                    other => return Err(bad(clause, &format!("unknown kind {other:?} (want io|corrupt)"))),
+                };
+                let prob = match it.next() {
+                    None | Some("") => 1.0,
+                    Some(p) => {
+                        let p: f64 = p.parse().map_err(|_| bad(clause, "prob must be a float"))?;
+                        if !(0.0..=1.0).contains(&p) {
+                            return Err(bad(clause, "prob must be in [0, 1]"));
+                        }
+                        p
+                    }
+                };
+                let remaining = match it.next() {
+                    None | Some("") => None,
+                    Some(m) => Some(m.parse().map_err(|_| bad(clause, "max must be a u64"))?),
+                };
+                if it.next().is_some() {
+                    return Err(bad(clause, "too many ':' fields (kind[:prob[:max]])"));
+                }
+                let stream = points.len() as u64;
+                points.push(Failpoint {
+                    site: site.to_string(),
+                    kind,
+                    prob,
+                    remaining,
+                    rng: root.fork(stream),
+                });
+            }
+        }
+    }
+    Ok(Plan { points, retry })
+}
+
+/// Failpoint hook for error injection. Idle: one relaxed load. Armed
+/// with an `io` clause for `site` that fires: returns a transient
+/// `Io(Interrupted)` error, bumps `fault.injected`, and marks the
+/// flight recorder.
+#[inline]
+pub fn check(site: &'static str) -> Result<()> {
+    if !active() {
+        return Ok(());
+    }
+    check_armed(site)
+}
+
+#[cold]
+fn check_armed(site: &'static str) -> Result<()> {
+    {
+        let mut plan = PLAN.lock().unwrap();
+        let Some(p) = plan
+            .as_mut()
+            .and_then(|p| p.points.iter_mut().find(|p| p.kind == Kind::Io && p.site == site))
+        else {
+            return Ok(());
+        };
+        if !p.fire() {
+            return Ok(());
+        }
+    }
+    Registry::global().counter(INJECTED).inc();
+    telemetry::mark("fault.injected", || format!("io fault at {site}"));
+    Err(PdfflowError::Io(std::io::Error::new(
+        std::io::ErrorKind::Interrupted,
+        format!("injected fault at {site}"),
+    )))
+}
+
+/// Failpoint hook for data corruption. Idle: one relaxed load. Armed
+/// with a `corrupt` clause for `site` that fires: flips one
+/// deterministically chosen byte of `buf` in place and returns `true`.
+///
+/// Callers on write paths must hash the *original* bytes before
+/// mangling, so injected write corruption stays detectable downstream
+/// instead of being checksummed into truth.
+#[inline]
+pub fn mangle(site: &'static str, buf: &mut [u8]) -> bool {
+    if !active() || buf.is_empty() {
+        return false;
+    }
+    mangle_armed(site, buf)
+}
+
+#[cold]
+fn mangle_armed(site: &'static str, buf: &mut [u8]) -> bool {
+    let at = {
+        let mut plan = PLAN.lock().unwrap();
+        let Some(p) = plan
+            .as_mut()
+            .and_then(|p| p.points.iter_mut().find(|p| p.kind == Kind::Corrupt && p.site == site))
+        else {
+            return false;
+        };
+        if !p.fire() {
+            return false;
+        }
+        p.rng.below(buf.len())
+    };
+    buf[at] ^= 0x40;
+    Registry::global().counter(INJECTED).inc();
+    telemetry::mark("fault.injected", || format!("corrupt fault at {site}, byte {at}"));
+    true
+}
+
+/// The effective retry policy: armed spec's `retry=` clause, else the
+/// `PDFFLOW_RETRY_*` environment knobs, else the default (3 × 10 ms).
+pub fn policy() -> RetryPolicy {
+    if STATE.load(Relaxed) == 2 {
+        if let Some(p) = PLAN.lock().unwrap().as_ref().and_then(|p| p.retry) {
+            return p;
+        }
+    }
+    *ENV_POLICY.get_or_init(|| {
+        let env_u64 = |key: &str| std::env::var(key).ok().and_then(|v| v.parse::<u64>().ok());
+        RetryPolicy {
+            attempts: env_u64("PDFFLOW_RETRY_ATTEMPTS").unwrap_or(3).max(1) as u32,
+            backoff_ms: env_u64("PDFFLOW_RETRY_BACKOFF_MS").unwrap_or(10),
+        }
+    })
+}
+
+/// Run `f`, re-running it on transient errors with bounded exponential
+/// backoff per [`policy`]. Permanent errors return immediately; a
+/// transient error on the last attempt bumps `io.retry.exhausted`,
+/// marks the flight recorder, and is returned.
+pub fn retry<T>(op: &'static str, mut f: impl FnMut() -> Result<T>) -> Result<T> {
+    let pol = policy();
+    let attempts = pol.attempts.max(1);
+    let mut delay_ms = pol.backoff_ms.min(MAX_BACKOFF_MS);
+    for attempt in 1..=attempts {
+        match f() {
+            Ok(v) => return Ok(v),
+            Err(e) if e.is_transient() => {
+                if attempt == attempts {
+                    Registry::global().counter(RETRY_EXHAUSTED).inc();
+                    telemetry::mark("io.retry.exhausted", || {
+                        format!("{op}: gave up after {attempts} attempts: {e}")
+                    });
+                    return Err(e);
+                }
+                Registry::global().counter(RETRY_ATTEMPTS).inc();
+                if delay_ms > 0 {
+                    std::thread::sleep(Duration::from_millis(delay_ms));
+                }
+                delay_ms = (delay_ms * 2).min(MAX_BACKOFF_MS);
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    unreachable!("retry returns within its attempts")
+}
+
+/// Eagerly create the fault/retry/quarantine counter families so they
+/// export (as zeros) even on runs where nothing went wrong — the CI
+/// telemetry smoke greps for them unconditionally.
+pub fn register_metrics() {
+    let r = Registry::global();
+    for name in [INJECTED, RETRY_ATTEMPTS, RETRY_EXHAUSTED, crate::pdfstore::QUARANTINED] {
+        let _ = r.counter(name);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Fault state is process-global and lib tests run in parallel, so
+    /// every test that installs a plan serializes here and uses
+    /// `test.*` site names no real I/O path consults.
+    static LOCK: Mutex<()> = Mutex::new(());
+
+    fn counter(name: &str) -> u64 {
+        Registry::global().counter(name).get()
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for spec in [
+            "nonsense",
+            "seed=abc",
+            "x=badkind",
+            "x=io:2.0",
+            "x=io:0.5:1:extra",
+            "retry=3",
+            "retry=a:b",
+        ] {
+            assert!(parse(spec).is_err(), "spec {spec:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn parse_accepts_full_grammar() {
+        let p = parse("seed=7, segment.read=io:0.5:3 ,catalog.save=corrupt,retry=5:0").unwrap();
+        assert_eq!(p.points.len(), 2);
+        assert_eq!(p.points[0].site, "segment.read");
+        assert_eq!(p.points[0].kind, Kind::Io);
+        assert_eq!(p.points[0].prob, 0.5);
+        assert_eq!(p.points[0].remaining, Some(3));
+        assert_eq!(p.points[1].kind, Kind::Corrupt);
+        assert_eq!(p.points[1].prob, 1.0);
+        assert_eq!(p.points[1].remaining, None);
+        assert_eq!(p.retry, Some(RetryPolicy { attempts: 5, backoff_ms: 0 }));
+    }
+
+    #[test]
+    fn idle_hooks_are_no_ops() {
+        let _g = LOCK.lock().unwrap();
+        clear();
+        assert!(check("test.idle").is_ok());
+        let mut buf = [1u8, 2, 3];
+        assert!(!mangle("test.idle", &mut buf));
+        assert_eq!(buf, [1, 2, 3]);
+    }
+
+    #[test]
+    fn max_caps_the_number_of_firings() {
+        let _g = LOCK.lock().unwrap();
+        install("seed=1,test.capped=io:1:2").unwrap();
+        let before = counter(INJECTED);
+        let fired = (0..10).filter(|_| check("test.capped").is_err()).count();
+        clear();
+        assert_eq!(fired, 2);
+        assert_eq!(counter(INJECTED) - before, 2);
+    }
+
+    #[test]
+    fn zero_probability_never_fires_and_other_sites_pass() {
+        let _g = LOCK.lock().unwrap();
+        install("seed=3,test.never=io:0").unwrap();
+        for _ in 0..50 {
+            assert!(check("test.never").is_ok());
+            assert!(check("test.other").is_ok());
+        }
+        clear();
+    }
+
+    #[test]
+    fn trigger_sequence_is_deterministic_for_a_seed() {
+        let _g = LOCK.lock().unwrap();
+        let run = || {
+            install("seed=42,test.seq=io:0.3").unwrap();
+            let hits: Vec<bool> = (0..64).map(|_| check("test.seq").is_err()).collect();
+            clear();
+            hits
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b);
+        assert!(a.iter().any(|&h| h), "prob 0.3 over 64 visits should fire");
+        assert!(a.iter().any(|&h| !h), "prob 0.3 over 64 visits should also pass");
+    }
+
+    #[test]
+    fn mangle_flips_exactly_one_byte() {
+        let _g = LOCK.lock().unwrap();
+        install("seed=5,test.buf=corrupt:1:1").unwrap();
+        let orig: Vec<u8> = (0..128).collect();
+        let mut buf = orig.clone();
+        assert!(mangle("test.buf", &mut buf));
+        let diffs: Vec<usize> = (0..orig.len()).filter(|&i| orig[i] != buf[i]).collect();
+        assert_eq!(diffs.len(), 1);
+        assert_eq!(orig[diffs[0]] ^ buf[diffs[0]], 0x40);
+        // The max=1 cap is spent; a second visit leaves the buffer alone.
+        let mut again = orig.clone();
+        assert!(!mangle("test.buf", &mut again));
+        assert_eq!(again, orig);
+        clear();
+    }
+
+    #[test]
+    fn retry_recovers_from_transient_errors_and_counts() {
+        let _g = LOCK.lock().unwrap();
+        install("retry=4:0").unwrap();
+        let before = counter(RETRY_ATTEMPTS);
+        let mut failures = 2;
+        let out = retry("test.retry", || {
+            if failures > 0 {
+                failures -= 1;
+                Err(PdfflowError::Io(std::io::Error::from(std::io::ErrorKind::Interrupted)))
+            } else {
+                Ok(7u32)
+            }
+        });
+        clear();
+        assert_eq!(out.unwrap(), 7);
+        assert_eq!(counter(RETRY_ATTEMPTS) - before, 2);
+    }
+
+    #[test]
+    fn retry_does_not_retry_permanent_errors() {
+        let _g = LOCK.lock().unwrap();
+        install("retry=5:0").unwrap();
+        let mut calls = 0;
+        let out: Result<()> = retry("test.perm", || {
+            calls += 1;
+            Err(PdfflowError::Format("permanent".into()))
+        });
+        clear();
+        assert!(matches!(out, Err(PdfflowError::Format(_))));
+        assert_eq!(calls, 1);
+    }
+
+    #[test]
+    fn retry_exhaustion_is_counted() {
+        let _g = LOCK.lock().unwrap();
+        install("retry=3:0").unwrap();
+        let before = counter(RETRY_EXHAUSTED);
+        let mut calls = 0;
+        let out: Result<()> = retry("test.exhaust", || {
+            calls += 1;
+            Err(PdfflowError::Io(std::io::Error::from(std::io::ErrorKind::Interrupted)))
+        });
+        clear();
+        assert!(out.is_err());
+        assert_eq!(calls, 3);
+        assert_eq!(counter(RETRY_EXHAUSTED) - before, 1);
+    }
+}

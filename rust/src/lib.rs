@@ -61,6 +61,7 @@ pub mod coordinator;
 pub mod cube;
 pub mod datagen;
 pub mod executor;
+pub mod fault;
 pub mod mltree;
 pub mod pdfstore;
 pub mod rdd;
@@ -120,6 +121,23 @@ impl PdfflowError {
     /// True for admission-control sheds (retryable by design).
     pub fn is_overload(&self) -> bool {
         matches!(self, PdfflowError::Overloaded(_))
+    }
+
+    /// True for errors worth retrying: raw I/O failures and admission
+    /// sheds. Corruption (`Format`) and misuse (`Config`/`InvalidArg`)
+    /// are permanent — retrying them cannot help, and [`fault::retry`]
+    /// returns them immediately. Missing files and denied permissions
+    /// are I/O errors that won't heal either, so they are permanent
+    /// too.
+    pub fn is_transient(&self) -> bool {
+        match self {
+            PdfflowError::Io(e) => !matches!(
+                e.kind(),
+                std::io::ErrorKind::NotFound | std::io::ErrorKind::PermissionDenied
+            ),
+            PdfflowError::Overloaded(_) => true,
+            _ => false,
+        }
     }
 }
 

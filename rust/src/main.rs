@@ -15,6 +15,9 @@
 //! pdfflow store     --preset set1 --store-dir DIR --method grouping --types 4
 //!                   [--slice Z] [--lines N] [--run-id ID]  persist fitted PDFs to a pdfstore run
 //! pdfflow store compact --store-dir DIR [--run ID]         collapse a run's generations
+//! pdfflow store verify  --store-dir DIR [--run ID]         checksum every segment of a run
+//! pdfflow store scrub   --store-dir DIR [--repair]         sweep every run; --repair rewrites
+//!                                                          salvageable runs from survivors
 //! pdfflow query     --store-dir DIR [--run ID] [--point x,y,z] [--region z[,y0,y1[,x0,x1]]]
 //!                   [--box z0,z1[,y0,y1[,x0,x1]]] [--agg] [--radius x,y,z,r] [--knn x,y,z,k]
 //!                   [--diff-run ID] [--cells sx,sy,sz]
@@ -28,6 +31,8 @@
 //! `run` and `serve` take `--metrics-out PATH` to export the telemetry
 //! registry (JSON snapshot at PATH, Prometheus text at PATH.prom).
 //! `PDFFLOW_TRACE=0` disables span tracing and the flight recorder.
+//! `PDFFLOW_FAULTS=<spec>` (or the `faults.spec` config key) arms the
+//! deterministic fault-injection harness — see the `fault` module docs.
 //!
 //! `--config FILE` loads a TOML experiment config instead of `--preset`.
 //! Every subcommand except `artifacts-check` (PJRT-only by nature)
@@ -57,7 +62,7 @@ use pdfflow::util::timing::{fmt_bytes, fmt_secs};
 fn main() {
     let args = match Args::parse(
         std::env::args().skip(1),
-        &["tune", "full", "verbose", "verify", "bench", "agg"],
+        &["tune", "full", "verbose", "verify", "bench", "agg", "repair"],
     ) {
         Ok(a) => a,
         Err(e) => {
@@ -67,6 +72,9 @@ fn main() {
     };
     // A panic anywhere dumps the span flight recorder before unwinding.
     flight::install_crash_hook();
+    // Register the robustness counter families eagerly so exported
+    // snapshots list them even at zero.
+    pdfflow::fault::register_metrics();
     if let Err(e) = dispatch(&args) {
         eprintln!("error: {e:#}");
         if pdfflow::telemetry::enabled() {
@@ -126,6 +134,13 @@ fn load_config(args: &Args) -> Result<ExperimentConfig> {
     if let Some(r) = args.opt("run-id") {
         validate_run_id(r)?;
         cfg.pipeline.run_id = Some(r.to_string());
+    }
+    // Arm configured fault injection (the PDFFLOW_FAULTS env, resolved
+    // lazily by the fault module, takes precedence over the config key).
+    if let Some(spec) = &cfg.faults {
+        if std::env::var_os("PDFFLOW_FAULTS").is_none() {
+            pdfflow::fault::install(spec).context("faults.spec")?;
+        }
     }
     Ok(cfg)
 }
@@ -516,11 +531,70 @@ fn cmd_store_compact(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `pdfflow store verify`: full-payload checksum verification of every
+/// segment of one run, printed one line per segment; exit nonzero when
+/// anything failed.
+fn cmd_store_verify(args: &Args) -> Result<()> {
+    let store_dir = args
+        .opt("store-dir")
+        .ok_or_else(|| anyhow!("store verify needs --store-dir DIR"))?;
+    let store = PdfStore::open_run_tolerant(store_dir, RunSelector::from_opt(args.opt("run")))?;
+    let report = store.verify_report();
+    print!("{}", report.render());
+    if report.all_ok() {
+        println!(
+            "run {}: all {} segment(s) verified",
+            store.run_key().label(),
+            report.segments.len()
+        );
+        Ok(())
+    } else {
+        Err(anyhow!(
+            "run {}: {} of {} segment(s) failed verification",
+            store.run_key().label(),
+            report.n_bad(),
+            report.segments.len()
+        ))
+    }
+}
+
+/// `pdfflow store scrub [--repair]`: sweep every run of the catalog,
+/// quarantine corrupt segments, and (with --repair) rewrite salvageable
+/// runs from the surviving generations via the compaction path. Exit
+/// nonzero while damage remains.
+fn cmd_store_scrub(args: &Args) -> Result<()> {
+    let store_dir = args
+        .opt("store-dir")
+        .ok_or_else(|| anyhow!("store scrub needs --store-dir DIR"))?;
+    flight::set_dump_dir(store_dir);
+    let t0 = std::time::Instant::now();
+    let report = pdfflow::pdfstore::scrub_store(store_dir, args.flag("repair"))?;
+    print!("{}", report.render());
+    println!(
+        "scrubbed {} run(s) in {}: {} bad segment(s)",
+        report.runs.len(),
+        fmt_secs(t0.elapsed().as_secs_f64()),
+        report.total_bad(),
+    );
+    if report.needs_attention() {
+        Err(anyhow!(if args.flag("repair") {
+            "store damage remains (coverage lost; re-persist the affected runs)"
+        } else {
+            "store has corrupt segments (rerun with --repair to rewrite salvageable runs)"
+        }))
+    } else {
+        Ok(())
+    }
+}
+
 /// Run the pipeline with the pdfstore persist sink and report the
 /// resulting store (Algorithm 1's persist phase, made queryable).
 fn cmd_store(args: &Args) -> Result<()> {
-    if args.positional.first().map(|s| s.as_str()) == Some("compact") {
-        return cmd_store_compact(args);
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("compact") => return cmd_store_compact(args),
+        Some("verify") => return cmd_store_verify(args),
+        Some("scrub") => return cmd_store_scrub(args),
+        _ => {}
     }
     let mut cfg = load_config(args)?;
     let store_dir = args
@@ -733,8 +807,16 @@ fn cmd_query(args: &Args) -> Result<()> {
         fmt_bytes(engine.store().total_bytes()),
     );
     if args.flag("verify") {
-        engine.store().verify()?;
-        println!("all segment checksums verified");
+        let report = engine.store().verify_report();
+        print!("{}", report.render());
+        if !report.all_ok() {
+            return Err(anyhow!(
+                "{} of {} segment(s) failed verification",
+                report.n_bad(),
+                report.segments.len()
+            ));
+        }
+        println!("all {} segment checksum(s) verified", report.segments.len());
     }
     if let Some(p) = args.opt("point") {
         let (x, y, z) = parse_point(p)?;

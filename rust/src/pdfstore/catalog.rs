@@ -41,8 +41,10 @@ pub const CATALOG_NAME: &str = "CATALOG.json";
 /// Manifest file name of the pre-generational store format; detected
 /// only to fail with a diagnosable error instead of orphaning the data.
 pub const LEGACY_MANIFEST_NAME: &str = "MANIFEST.json";
-/// Catalog format version (bumped from the manifest-era 1).
-pub const CATALOG_VERSION: u32 = 2;
+/// Catalog format version (bumped from the manifest-era 1; v3 added
+/// per-segment covered-line ranges, paired with segment format v2's
+/// per-window payload checksums).
+pub const CATALOG_VERSION: u32 = 3;
 /// The run id used when none is configured (`--run-id` / config).
 pub const DEFAULT_RUN_ID: &str = "default";
 
@@ -349,6 +351,20 @@ impl Catalog {
                             ("records", Json::Num(s.n_records as f64)),
                             ("bytes", Json::Num(s.bytes as f64)),
                             ("checksum", Json::Str(format!("{:016x}", s.checksum))),
+                            (
+                                "cover",
+                                Json::Arr(
+                                    s.cover
+                                        .iter()
+                                        .map(|&(lo, hi)| {
+                                            Json::Arr(vec![
+                                                Json::Num(lo as f64),
+                                                Json::Num(hi as f64),
+                                            ])
+                                        })
+                                        .collect(),
+                                ),
+                            ),
                         ])
                     })
                     .collect();
@@ -391,9 +407,13 @@ impl Catalog {
             ("checksum", Json::Str(format!("{sum:016x}"))),
         ]);
         let tmp = dir.join(format!("{CATALOG_NAME}.tmp"));
-        std::fs::write(&tmp, doc.to_string())?;
-        std::fs::rename(&tmp, dir.join(CATALOG_NAME))?;
-        Ok(())
+        let text = doc.to_string();
+        crate::fault::retry("catalog.save", || {
+            crate::fault::check("catalog.save")?;
+            std::fs::write(&tmp, &text)?;
+            std::fs::rename(&tmp, dir.join(CATALOG_NAME))?;
+            Ok(())
+        })
     }
 
     /// True when `dir` holds a catalog file.
@@ -415,7 +435,10 @@ impl Catalog {
                 dir.display()
             )));
         }
-        let text = std::fs::read_to_string(&path)?;
+        let text = crate::fault::retry("catalog.load", || {
+            crate::fault::check("catalog.load")?;
+            Ok(std::fs::read_to_string(&path)?)
+        })?;
         let doc = Json::parse(&text)
             .map_err(|e| PdfflowError::Format(format!("{}: {e}", path.display())))?;
         let bad = |what: &str| PdfflowError::Format(format!("{}: {what}", path.display()));
@@ -506,6 +529,27 @@ impl Catalog {
                         .and_then(|v| v.as_str())
                         .and_then(parse_hex64)
                         .ok_or_else(|| bad("segment missing checksum"))?,
+                    cover: {
+                        let mut cover = Vec::new();
+                        for c in s
+                            .get("cover")
+                            .and_then(|v| v.as_arr())
+                            .ok_or_else(|| bad("segment missing cover"))?
+                        {
+                            let pair = c
+                                .as_arr()
+                                .filter(|p| p.len() == 2)
+                                .ok_or_else(|| bad("cover range is not [start,end]"))?;
+                            let range = |i: usize| {
+                                pair[i]
+                                    .as_usize()
+                                    .map(|v| v as u64)
+                                    .ok_or_else(|| bad("bad cover bound"))
+                            };
+                            cover.push((range(0)?, range(1)?));
+                        }
+                        cover
+                    },
                 });
             }
             runs.push(RunEntry {
@@ -547,6 +591,7 @@ mod tests {
             n_records: 64,
             bytes: 1800,
             checksum: 0x1234_5678_9abc_def0,
+            cover: vec![(0, 8)],
         }
     }
 
@@ -599,10 +644,10 @@ mod tests {
         let windows = |seg: usize| -> Vec<WindowEntry> {
             match run.segments[seg].gen {
                 0 => vec![
-                    WindowEntry { y0: 0, lines: 4, offset: 8, n_records: 16 },
-                    WindowEntry { y0: 4, lines: 4, offset: 456, n_records: 16 },
+                    WindowEntry { y0: 0, lines: 4, offset: 8, n_records: 16, checksum: 0 },
+                    WindowEntry { y0: 4, lines: 4, offset: 456, n_records: 16, checksum: 0 },
                 ],
-                _ => vec![WindowEntry { y0: 4, lines: 4, offset: 8, n_records: 16 }],
+                _ => vec![WindowEntry { y0: 4, lines: 4, offset: 8, n_records: 16, checksum: 0 }],
             }
         };
         let resolved = run.resolve_slice(0, windows).unwrap();
@@ -625,8 +670,8 @@ mod tests {
         let run = c.run(&RunKey::new("baseline", 4, "a")).unwrap();
         let windows = |seg: usize| -> Vec<WindowEntry> {
             match run.segments[seg].gen {
-                0 => vec![WindowEntry { y0: 0, lines: 8, offset: 8, n_records: 32 }],
-                _ => vec![WindowEntry { y0: 0, lines: 6, offset: 8, n_records: 24 }],
+                0 => vec![WindowEntry { y0: 0, lines: 8, offset: 8, n_records: 32, checksum: 0 }],
+                _ => vec![WindowEntry { y0: 0, lines: 6, offset: 8, n_records: 24, checksum: 0 }],
             }
         };
         let err = run.resolve_slice(0, windows).unwrap_err();

@@ -65,18 +65,21 @@ pub fn compact_run(dir: impl AsRef<Path>, selector: Option<&str>) -> Result<Comp
 
     // Already dense? One segment per slice and nothing shadowed means a
     // rewrite would reproduce the same files under a new name — skip.
-    let dense = store.run().segments.len() == slices.len()
+    // A quarantined segment is never dense: the rewrite is exactly how
+    // its resolved stand-ins become durable.
+    let dense = store.n_quarantined() == 0
+        && store.run().segments.len() == slices.len()
         && slices.iter().all(|&z| {
-            let parts = store.slice_parts(z).unwrap_or(&[]);
+            let parts = store.resolved_parts(z).map(|p| p.len()).unwrap_or(0);
             let seg_windows: usize = store
                 .run()
                 .segments
                 .iter()
                 .enumerate()
                 .filter(|(_, s)| s.slice == z)
-                .map(|(i, _)| store.segment(i).entries.len())
+                .map(|(i, _)| store.reader(i).map(|r| r.entries.len()).unwrap_or(0))
                 .sum();
-            parts.len() == seg_windows
+            parts == seg_windows
         });
     if dense {
         return Ok(CompactReport {
@@ -96,38 +99,12 @@ pub fn compact_run(dir: impl AsRef<Path>, selector: Option<&str>) -> Result<Comp
     let new_gen = store.run().max_gen().map(|g| g + 1).unwrap_or(0);
     let old_files: Vec<String> = store.run().segments.iter().map(|s| s.file.clone()).collect();
 
-    // Rewrite the resolved view, one dense segment per slice. Files are
-    // complete (tmp + rename inside `finish`) before anything points at
-    // them.
-    let mut new_metas: Vec<SegmentMeta> = Vec::with_capacity(slices.len());
-    for &z in &slices {
-        let parts = store.slice_parts(z).expect("slice listed but unresolved");
-        let mut w = SegmentWriter::create(dir, z, &key.method, key.types, &key.run_id, new_gen)?;
-        for part in parts {
-            let records = store.segment(part.seg).read_window(part.win)?;
-            w.append_records(part.entry.y0, part.entry.lines, &records)?;
-        }
-        new_metas.push(w.finish()?);
-    }
+    let new_metas = rewrite_resolved(dir, &store, new_gen)?;
     let bytes_after = new_metas.iter().map(|m| m.bytes).sum();
     let segments_after = new_metas.len();
 
-    // Publish: reload the catalog (the open above holds a snapshot),
-    // swap the run's segment list, save atomically. This is the single
-    // point where readers move to the new generation.
     drop(store);
-    let mut catalog = Catalog::load(dir)?;
-    catalog.replace_run_segments(&key, new_metas)?;
-    catalog.save(dir)?;
-
-    // Retire superseded files — garbage now, deletion best-effort (a
-    // crash here just leaves unreferenced files).
-    let mut retired = 0usize;
-    for f in &old_files {
-        if std::fs::remove_file(dir.join(f)).is_ok() {
-            retired += 1;
-        }
-    }
+    let retired = publish_run(dir, &key, new_metas, &old_files)?;
     Ok(CompactReport {
         run: key,
         gen: new_gen,
@@ -140,4 +117,54 @@ pub fn compact_run(dir: impl AsRef<Path>, selector: Option<&str>) -> Result<Comp
         records,
         retired_files: retired,
     })
+}
+
+/// Rewrite `store`'s resolved view into one dense segment per slice at
+/// generation `new_gen`. Files are complete (tmp + rename inside
+/// `finish`) before anything points at them. Shared by compaction and
+/// by scrub's `--repair`, which is what lets a repair reuse the
+/// bit-identical rewrite path.
+pub(crate) fn rewrite_resolved(
+    dir: &Path,
+    store: &PdfStore,
+    new_gen: usize,
+) -> Result<Vec<SegmentMeta>> {
+    let key = store.run_key();
+    let slices = store.slices();
+    let mut new_metas: Vec<SegmentMeta> = Vec::with_capacity(slices.len());
+    for &z in &slices {
+        let parts = store.slice_parts(z)?.expect("slice listed but unresolved");
+        let mut w = SegmentWriter::create(dir, z, &key.method, key.types, &key.run_id, new_gen)?;
+        for part in parts.iter() {
+            let records = store.reader(part.seg)?.read_window(part.win)?;
+            w.append_records(part.entry.y0, part.entry.lines, &records)?;
+        }
+        new_metas.push(w.finish()?);
+    }
+    Ok(new_metas)
+}
+
+/// Publish rewritten segments: reload the catalog (the caller's open
+/// holds a snapshot), swap the run's segment list, save atomically —
+/// the single point where readers move to the new generation — then
+/// retire the superseded files (garbage now, deletion best-effort; a
+/// crash here just leaves unreferenced files). Returns the retired
+/// count.
+pub(crate) fn publish_run(
+    dir: &Path,
+    key: &RunKey,
+    new_metas: Vec<SegmentMeta>,
+    old_files: &[String],
+) -> Result<usize> {
+    crate::fault::check("compact.publish")?;
+    let mut catalog = Catalog::load(dir)?;
+    catalog.replace_run_segments(key, new_metas)?;
+    catalog.save(dir)?;
+    let mut retired = 0usize;
+    for f in old_files {
+        if std::fs::remove_file(dir.join(f)).is_ok() {
+            retired += 1;
+        }
+    }
+    Ok(retired)
 }

@@ -38,26 +38,43 @@
 //! [magic "PDFS"][version u32]                      8-byte header
 //! [record x n]                                     28-byte records, window order
 //! [footer: per window y0 u64, lines u64,
-//!          offset u64, n_records u64]              32 bytes per window
+//!          offset u64, n_records u64,
+//!          payload checksum u64]                   40 bytes per window
 //! [footer_off u64][n_windows u64]
 //! [checksum u64][magic "SFTR"]                     trailer
 //! ```
 //!
 //! The trailer checksum is FNV-64 over every byte before the checksum
 //! field, so corruption anywhere in the payload or index is detectable
-//! ([`PdfStore::verify`]); truncation is caught at open time against the
-//! catalog's byte count, and the catalog carries its own self-checksum.
+//! ([`PdfStore::verify`]); each footer entry additionally carries an
+//! FNV-64 of its own window payload, validated on every
+//! `read_window`, so the query path catches bit rot the moment it is
+//! read. Truncation is caught at open time against the catalog's byte
+//! count, and the catalog carries its own self-checksum.
+//!
+//! A segment that fails these checks is **quarantined** rather than
+//! fatal: the run re-resolves without it, newest-generation-first, and
+//! keeps serving as long as the surviving generations still cover
+//! every line the run ever covered (provable from the per-segment
+//! `cover` ranges persisted in the catalog). Slices whose coverage is
+//! lost become typed errors; `pdfstore::scrub` scans, reports, and —
+//! with repair — rewrites salvageable runs from the surviving
+//! generations.
 
 pub mod catalog;
 pub mod compact;
 pub mod query;
+pub mod scrub;
 pub mod segment;
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, BTreeSet, HashMap};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::{Arc, RwLock};
 
 use crate::cube::{CubeDims, PointId};
 use crate::stats::{DistType, FitResult};
+use crate::telemetry::{self, Registry};
 use crate::{PdfflowError, Result};
 
 pub use catalog::{
@@ -66,12 +83,16 @@ pub use catalog::{
 };
 pub use compact::{compact_run, CompactReport};
 pub use query::{CacheMeters, QueryEngine, QueryOptions, RegionQuery, RegionSummary};
+pub use scrub::{scrub_store, ScrubReport, ScrubRun, ScrubSegment};
 pub use segment::{SegmentMeta, SegmentReader, SegmentWriter, WindowEntry};
 
 /// Fixed record width: point id u64 + type u32 + error f32 + 3 param f32.
 pub const REC_LEN: usize = 28;
-/// Segment format version.
-pub const FORMAT_VERSION: u32 = 1;
+/// Segment format version (v2: 40-byte footer entries carrying
+/// per-window payload checksums).
+pub const FORMAT_VERSION: u32 = 2;
+/// Counter bumped once per segment quarantined in this process.
+pub const QUARANTINED: &str = "store.quarantined_segments";
 
 /// Streaming FNV-1a 64-bit checksum (offline crc substitute; the store
 /// needs tamper/corruption detection, not cryptographic strength).
@@ -286,20 +307,117 @@ impl StoreWriter {
 /// the open run's reader list) + window index + its footer entry.
 pub type SlicePart = ResolvedWindow;
 
+/// Merge `[start, end)` ranges into canonical form: sorted,
+/// non-overlapping, non-adjacent, empties dropped. Two range sets
+/// describe the same line set iff their canonical forms are equal —
+/// the comparison the quarantine fallback uses to prove no line was
+/// silently lost.
+fn merge_ranges(mut v: Vec<(u64, u64)>) -> Vec<(u64, u64)> {
+    v.sort_unstable();
+    let mut out: Vec<(u64, u64)> = Vec::new();
+    for (s, e) in v {
+        if s >= e {
+            continue;
+        }
+        match out.last_mut() {
+            Some(last) if s <= last.1 => last.1 = last.1.max(e),
+            _ => out.push((s, e)),
+        }
+    }
+    out
+}
+
+/// Resolution outcome of one slice under the current quarantine set.
+#[derive(Clone, Debug)]
+enum SliceState {
+    /// Fully covered (possibly through older generations).
+    Ok(Arc<Vec<SlicePart>>),
+    /// Some lines the run once covered are no longer reachable; reads
+    /// of this slice return this message as a typed `Format` error.
+    Unresolvable(String),
+}
+
+/// Mutable resolution state of an open store: which segments are
+/// quarantined, and the per-slice views resolved around them.
+struct ResolveState {
+    /// Segment indexes quarantined (open failures + read-time checksum
+    /// failures).
+    bad: BTreeSet<usize>,
+    slices: HashMap<usize, SliceState>,
+    /// Slices that resolve Ok but lean on older generations because a
+    /// newer-generation segment is quarantined (the `degraded: true`
+    /// serve surface).
+    degraded: BTreeSet<usize>,
+}
+
+/// Verification outcome of one catalog segment.
+#[derive(Clone, Debug)]
+pub struct SegmentVerify {
+    /// Index into the open run's segment list.
+    pub idx: usize,
+    pub file: String,
+    pub slice: usize,
+    pub gen: usize,
+    /// `None` = checksums good; otherwise why the segment is bad.
+    pub error: Option<String>,
+}
+
+/// Full-store verification report: one row per segment, never
+/// aborted early.
+#[derive(Clone, Debug, Default)]
+pub struct VerifyReport {
+    pub segments: Vec<SegmentVerify>,
+}
+
+impl VerifyReport {
+    pub fn n_bad(&self) -> usize {
+        self.segments.iter().filter(|s| s.error.is_some()).count()
+    }
+
+    pub fn all_ok(&self) -> bool {
+        self.n_bad() == 0
+    }
+
+    /// One line per segment, `ok`/`BAD` prefixed — the CLI listing.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for s in &self.segments {
+            match &s.error {
+                None => out.push_str(&format!("ok  {} (slice {}, gen {})\n", s.file, s.slice, s.gen)),
+                Some(e) => out.push_str(&format!(
+                    "BAD {} (slice {}, gen {}): {e}\n",
+                    s.file, s.slice, s.gen
+                )),
+            }
+        }
+        out
+    }
+}
+
 /// Read side: one **run view** over the catalog. Opening selects a run
 /// (latest or named), opens its segment readers — validating lengths,
 /// magics and footer indexes, no payload rescan — and resolves every
 /// slice to its newest-generation window set.
+///
+/// A segment that fails validation (at open, or later at read time via
+/// a per-window checksum mismatch) is **quarantined**: the run
+/// re-resolves without it, falling back newest-generation-first, and
+/// the per-segment `cover` ranges in the catalog prove whether every
+/// line the run ever covered is still reachable. Covered slices keep
+/// serving (flagged degraded); slices with lost coverage become typed
+/// errors. `open` fails only when coverage is already lost at open
+/// time.
 pub struct PdfStore {
     pub dir: PathBuf,
     pub catalog: Catalog,
     run_idx: usize,
-    segments: Vec<SegmentReader>,
-    /// slice → resolved windows (sorted by y0, non-overlapping): the
-    /// newest generation wins window-by-window, so a partially rerun
-    /// slice reads new lines from the new generation and untouched
-    /// lines from the old one.
-    slices: HashMap<usize, Vec<SlicePart>>,
+    /// One slot per catalog segment; `Err` holds why open failed (the
+    /// slot is auto-quarantined).
+    segments: Vec<std::result::Result<SegmentReader, String>>,
+    state: RwLock<ResolveState>,
+    /// Bumped on every quarantine; readers key caches (spatial index,
+    /// block cache retries) off it.
+    epoch: AtomicU64,
 }
 
 impl PdfStore {
@@ -308,8 +426,28 @@ impl PdfStore {
         Self::open_run(dir, RunSelector::Latest)
     }
 
-    /// Open a specific run of the store.
+    /// Open a specific run of the store. Fails if any slice's coverage
+    /// is already unresolvable (e.g. the only copy of a window is
+    /// corrupt); tolerates bad segments whose lines older generations
+    /// still cover.
     pub fn open_run(dir: impl AsRef<Path>, sel: RunSelector) -> Result<PdfStore> {
+        let store = Self::open_run_tolerant(dir, sel)?;
+        let bad = store.unresolvable_slices();
+        if let Some((z, why)) = bad.first() {
+            return Err(PdfflowError::Format(format!(
+                "store run {}: {} unresolvable slice(s); slice {z}: {why}",
+                store.run_key().label(),
+                bad.len()
+            )));
+        }
+        Ok(store)
+    }
+
+    /// Open like [`Self::open_run`] but keep the store usable even when
+    /// slices are unresolvable (reads of those slices return typed
+    /// errors). The scrub path uses this to report and repair stores a
+    /// strict open would reject.
+    pub fn open_run_tolerant(dir: impl AsRef<Path>, sel: RunSelector) -> Result<PdfStore> {
         let dir = dir.as_ref().to_path_buf();
         let catalog = Catalog::load(&dir)?;
         let entry = match sel {
@@ -326,20 +464,27 @@ impl PdfStore {
             .expect("selected run is in the catalog");
         let run = &catalog.runs[run_idx];
         let mut segments = Vec::with_capacity(run.segments.len());
-        for meta in &run.segments {
-            segments.push(SegmentReader::open(&dir, meta)?);
+        let mut bad = BTreeSet::new();
+        for (idx, meta) in run.segments.iter().enumerate() {
+            match SegmentReader::open(&dir, meta) {
+                Ok(r) => segments.push(Ok(r)),
+                Err(e) => {
+                    bad.insert(idx);
+                    segments.push(Err(e.to_string()));
+                }
+            }
         }
-        let mut slices = HashMap::new();
-        for z in run.slices() {
-            let resolved = run.resolve_slice(z, |seg| segments[seg].entries.clone())?;
-            slices.insert(z, resolved);
+        for &idx in &bad {
+            note_quarantine(&run.segments[idx].file, segments[idx].as_ref().err());
         }
+        let (slices, degraded) = resolve_all(run, &segments, &bad);
         Ok(PdfStore {
             dir,
             catalog,
             run_idx,
             segments,
-            slices,
+            state: RwLock::new(ResolveState { bad, slices, degraded }),
+            epoch: AtomicU64::new(0),
         })
     }
 
@@ -367,11 +512,15 @@ impl PdfStore {
     }
 
     /// Records reachable through the resolved view (shadowed
-    /// generations excluded).
+    /// generations and unresolvable slices excluded).
     pub fn n_records(&self) -> u64 {
-        self.slices
+        let st = self.state.read().unwrap();
+        st.slices
             .values()
-            .flat_map(|parts| parts.iter().map(|p| p.entry.n_records))
+            .filter_map(|s| match s {
+                SliceState::Ok(parts) => Some(parts.iter().map(|p| p.entry.n_records).sum::<u64>()),
+                SliceState::Unresolvable(_) => None,
+            })
             .sum()
     }
 
@@ -380,39 +529,145 @@ impl PdfStore {
         self.run().segments.iter().map(|s| s.bytes).sum()
     }
 
-    pub fn segment(&self, idx: usize) -> &SegmentReader {
-        &self.segments[idx]
+    /// Reader for segment `idx`; a typed error if the segment failed to
+    /// open or has been quarantined.
+    pub fn reader(&self, idx: usize) -> Result<&SegmentReader> {
+        if self.state.read().unwrap().bad.contains(&idx) {
+            let file = &self.run().segments[idx].file;
+            return Err(PdfflowError::Format(format!("{file}: segment is quarantined")));
+        }
+        match &self.segments[idx] {
+            Ok(r) => Ok(r),
+            Err(e) => Err(PdfflowError::Format(e.clone())),
+        }
     }
 
-    /// Slices the open run serves, ascending.
+    /// Quarantine segment `idx` (idempotent; returns whether this call
+    /// changed anything). Re-resolves every slice around the bad
+    /// segment, bumps the store epoch, counts
+    /// `store.quarantined_segments` and marks the flight recorder.
+    pub fn quarantine_segment(&self, idx: usize, why: &str) -> bool {
+        {
+            let mut st = self.state.write().unwrap();
+            if !st.bad.insert(idx) {
+                return false;
+            }
+            let (slices, degraded) = resolve_all(self.run(), &self.segments, &st.bad);
+            st.slices = slices;
+            st.degraded = degraded;
+        }
+        self.epoch.fetch_add(1, Relaxed);
+        note_quarantine(&self.run().segments[idx].file, Some(&why.to_string()));
+        true
+    }
+
+    /// Monotone counter bumped on every quarantine; derived caches key
+    /// off it.
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Relaxed)
+    }
+
+    /// Segments currently quarantined (open failures included).
+    pub fn n_quarantined(&self) -> usize {
+        self.state.read().unwrap().bad.len()
+    }
+
+    /// True when any segment is quarantined — i.e. answers may be
+    /// served through generation fallback.
+    pub fn is_degraded(&self) -> bool {
+        self.n_quarantined() > 0
+    }
+
+    /// True when any slice in `[z0, z1]` resolves through generation
+    /// fallback around a quarantined segment.
+    pub fn degraded_in(&self, z0: usize, z1: usize) -> bool {
+        let st = self.state.read().unwrap();
+        st.degraded.iter().any(|&z| z0 <= z && z <= z1)
+    }
+
+    /// The first unresolvable slice in `[z0, z1]`, with its reason.
+    pub fn unresolvable_in(&self, z0: usize, z1: usize) -> Option<(usize, String)> {
+        let st = self.state.read().unwrap();
+        let mut hits: Vec<(usize, String)> = st
+            .slices
+            .iter()
+            .filter(|(z, _)| z0 <= **z && **z <= z1)
+            .filter_map(|(z, s)| match s {
+                SliceState::Unresolvable(why) => Some((*z, why.clone())),
+                SliceState::Ok(_) => None,
+            })
+            .collect();
+        hits.sort_unstable_by_key(|(z, _)| *z);
+        hits.into_iter().next()
+    }
+
+    /// Every unresolvable slice, ascending.
+    pub fn unresolvable_slices(&self) -> Vec<(usize, String)> {
+        let st = self.state.read().unwrap();
+        let mut out: Vec<(usize, String)> = st
+            .slices
+            .iter()
+            .filter_map(|(z, s)| match s {
+                SliceState::Unresolvable(why) => Some((*z, why.clone())),
+                SliceState::Ok(_) => None,
+            })
+            .collect();
+        out.sort_unstable_by_key(|(z, _)| *z);
+        out
+    }
+
+    /// Slices the open run serves, ascending (unresolvable included —
+    /// reads of those yield typed errors).
     pub fn slices(&self) -> Vec<usize> {
-        let mut out: Vec<usize> = self.slices.keys().copied().collect();
+        let st = self.state.read().unwrap();
+        let mut out: Vec<usize> = st.slices.keys().copied().collect();
         out.sort_unstable();
         out
     }
 
-    /// Resolved windows of slice `z`, if persisted.
-    pub fn slice_parts(&self, z: usize) -> Option<&[SlicePart]> {
-        self.slices.get(&z).map(|v| v.as_slice())
+    /// Resolved windows of slice `z`: `Ok(None)` if the slice was never
+    /// persisted, a typed error if its coverage is unresolvable.
+    pub fn slice_parts(&self, z: usize) -> Result<Option<Arc<Vec<SlicePart>>>> {
+        let st = self.state.read().unwrap();
+        match st.slices.get(&z) {
+            None => Ok(None),
+            Some(SliceState::Ok(parts)) => Ok(Some(parts.clone())),
+            Some(SliceState::Unresolvable(why)) => Err(PdfflowError::Format(format!(
+                "slice {z} is unresolvable: {why}"
+            ))),
+        }
+    }
+
+    /// Lenient variant of [`Self::slice_parts`]: unresolvable slices
+    /// read as absent. For best-effort consumers (index builds) whose
+    /// callers do their own strict pre-checks.
+    pub fn resolved_parts(&self, z: usize) -> Option<Arc<Vec<SlicePart>>> {
+        match self.state.read().unwrap().slices.get(&z) {
+            Some(SliceState::Ok(parts)) => Some(parts.clone()),
+            _ => None,
+        }
     }
 
     /// The resolved window covering line `y` of slice `z`, if any.
-    pub fn find_part(&self, z: usize, y: usize) -> Option<SlicePart> {
-        let parts = self.slices.get(&z)?;
+    pub fn find_part(&self, z: usize, y: usize) -> Result<Option<SlicePart>> {
+        let Some(parts) = self.slice_parts(z)? else {
+            return Ok(None);
+        };
         let y = y as u64;
         // Parts are sorted by y0 and non-overlapping.
         let idx = parts.partition_point(|p| p.entry.y0 <= y);
         if idx == 0 {
-            return None;
+            return Ok(None);
         }
         let p = parts[idx - 1];
-        (y < p.entry.y0 + p.entry.lines).then_some(p)
+        Ok((y < p.entry.y0 + p.entry.lines).then_some(p))
     }
 
     /// True when the resolved view covers every line in `[y0, y1]` of
     /// slice `z` with no gap (store-backed training requires this).
+    /// Unresolvable slices cover nothing.
     pub fn covers_lines(&self, z: usize, y0: usize, y1: usize) -> bool {
-        let Some(parts) = self.slices.get(&z) else {
+        let Some(parts) = self.resolved_parts(z) else {
             return false;
         };
         let mut next = y0 as u64;
@@ -430,14 +685,113 @@ impl PdfStore {
         next > y1 as u64
     }
 
-    /// Full-payload checksum verification of every open segment (reads
-    /// all bytes; open() itself stays index-only).
-    pub fn verify(&self) -> Result<()> {
-        for seg in &self.segments {
-            seg.verify()?;
+    /// Full-payload checksum verification of every catalog segment of
+    /// the open run — never aborts early; one row per segment. Open
+    /// failures and quarantines report their stored reason.
+    pub fn verify_report(&self) -> VerifyReport {
+        let quarantined: BTreeSet<usize> = self.state.read().unwrap().bad.clone();
+        let mut report = VerifyReport::default();
+        for (idx, meta) in self.run().segments.iter().enumerate() {
+            let error = match &self.segments[idx] {
+                Err(e) => Some(e.clone()),
+                Ok(seg) => seg.verify().err().map(|e| e.to_string()).or_else(|| {
+                    quarantined
+                        .contains(&idx)
+                        .then(|| "segment is quarantined".to_string())
+                }),
+            };
+            report.segments.push(SegmentVerify {
+                idx,
+                file: meta.file.clone(),
+                slice: meta.slice,
+                gen: meta.gen,
+                error,
+            });
         }
-        Ok(())
+        report
     }
+
+    /// Full-store verification; `Err` carries the complete per-segment
+    /// listing when anything failed.
+    pub fn verify(&self) -> Result<()> {
+        let report = self.verify_report();
+        if report.all_ok() {
+            Ok(())
+        } else {
+            Err(PdfflowError::Format(format!(
+                "{} corrupt segment(s):\n{}",
+                report.n_bad(),
+                report.render()
+            )))
+        }
+    }
+}
+
+/// Count + flight-mark one quarantined segment.
+fn note_quarantine(file: &str, why: Option<&String>) {
+    Registry::global().counter(QUARANTINED).inc();
+    let detail = why.cloned().unwrap_or_default();
+    telemetry::mark("store.quarantine", || format!("{file}: {detail}"));
+}
+
+/// Resolve every slice of `run` with the quarantined set excluded, and
+/// prove per slice that the surviving generations still cover every
+/// line the run ever covered (from the catalog `cover` ranges). Returns
+/// the per-slice states plus the set of slices that lean on fallback.
+fn resolve_all(
+    run: &RunEntry,
+    segments: &[std::result::Result<SegmentReader, String>],
+    bad: &BTreeSet<usize>,
+) -> (HashMap<usize, SliceState>, BTreeSet<usize>) {
+    // Expected coverage per slice: union over ALL catalog segments
+    // (healthy and bad alike) — newest-first shadowing means the run
+    // served every line any generation covered.
+    let mut expected: BTreeMap<usize, Vec<(u64, u64)>> = BTreeMap::new();
+    for meta in &run.segments {
+        expected.entry(meta.slice).or_default().extend(meta.cover.iter().copied());
+    }
+    let mut slices = HashMap::new();
+    let mut degraded = BTreeSet::new();
+    for z in run.slices() {
+        let resolved = run.resolve_slice(z, |seg| {
+            if bad.contains(&seg) {
+                return Vec::new();
+            }
+            match &segments[seg] {
+                Ok(r) => r.entries.clone(),
+                Err(_) => Vec::new(),
+            }
+        });
+        let state = match resolved {
+            Err(e) => SliceState::Unresolvable(e.to_string()),
+            Ok(parts) => {
+                let want = merge_ranges(expected.remove(&z).unwrap_or_default());
+                let got = merge_ranges(
+                    parts
+                        .iter()
+                        .map(|p| (p.entry.y0, p.entry.y0 + p.entry.lines))
+                        .collect(),
+                );
+                if want != got {
+                    SliceState::Unresolvable(format!(
+                        "coverage lost to quarantine: run covered lines {want:?}, survivors cover {got:?}"
+                    ))
+                } else {
+                    let uses_bad_slice = run
+                        .segments
+                        .iter()
+                        .enumerate()
+                        .any(|(i, m)| m.slice == z && bad.contains(&i));
+                    if uses_bad_slice {
+                        degraded.insert(z);
+                    }
+                    SliceState::Ok(Arc::new(parts))
+                }
+            }
+        };
+        slices.insert(z, state);
+    }
+    (slices, degraded)
 }
 
 #[cfg(test)]

@@ -12,7 +12,7 @@
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::path::Path;
-use std::sync::{Arc, OnceLock};
+use std::sync::{Arc, Mutex};
 
 use crate::cube::{CellGrid, CubeDims, PointId};
 use crate::executor::Executor;
@@ -180,9 +180,10 @@ pub struct QueryEngine {
     exec: Executor,
     /// Cell-side override for the spatial index (`QueryOptions::cell`).
     cell: Option<[usize; 3]>,
-    /// Lazily built spatial grid index — first spatial query pays the
-    /// (cheap, catalog-only) build; point/region paths never do.
-    index: OnceLock<GridIndex>,
+    /// Lazily built spatial grid index, keyed by the store epoch so a
+    /// quarantine invalidates it — first spatial query per epoch pays
+    /// the (cheap, catalog-only) build; point/region paths never do.
+    index: Mutex<Option<(u64, Arc<GridIndex>)>>,
 }
 
 impl QueryEngine {
@@ -192,7 +193,7 @@ impl QueryEngine {
             cache: ShardedLru::new(opts.cache_bytes, opts.shards),
             exec: Executor::new(opts.workers.max(1)),
             cell: opts.cell,
-            index: OnceLock::new(),
+            index: Mutex::new(None),
         }
     }
 
@@ -226,19 +227,74 @@ impl QueryEngine {
         self.cache.clear()
     }
 
-    /// Fetch (through the cache) one window block.
+    /// Fetch (through the cache) one window block. A checksum failure
+    /// (`Format`) quarantines the whole segment — its other windows can
+    /// no longer be trusted — and drops the block cache so stale blocks
+    /// of the bad segment cannot be served; the caller's
+    /// [`Self::with_fallback`] wrapper then re-runs the query against
+    /// the re-resolved (fallback) view.
     fn block(&self, seg_idx: usize, win_idx: usize) -> Result<Arc<Vec<PdfRecord>>> {
         let key = (seg_idx as u32, win_idx as u32);
         if let Some(b) = self.cache.get(&key) {
             return Ok(b);
         }
-        let block = Arc::new(self.store.segment(seg_idx).read_window(win_idx)?);
-        self.cache.put(key, Arc::clone(&block));
-        Ok(block)
+        match self.store.reader(seg_idx).and_then(|r| r.read_window(win_idx)) {
+            Ok(records) => {
+                let block = Arc::new(records);
+                self.cache.put(key, Arc::clone(&block));
+                Ok(block)
+            }
+            Err(e) => {
+                if matches!(e, PdfflowError::Format(_))
+                    && self.store.quarantine_segment(seg_idx, &e.to_string())
+                {
+                    self.cache.clear();
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// Run a query closure; when it fails *and* a quarantine advanced
+    /// the store epoch mid-query, re-run it against the re-resolved
+    /// view (newest surviving generation first). Bounded by the segment
+    /// count — each retry consumes at least one fresh quarantine, so
+    /// this cannot loop.
+    fn with_fallback<T>(&self, f: impl Fn() -> Result<T>) -> Result<T> {
+        let mut tries = 0usize;
+        loop {
+            let epoch = self.store.epoch();
+            match f() {
+                Ok(v) => return Ok(v),
+                Err(e) => {
+                    tries += 1;
+                    if self.store.epoch() == epoch || tries > self.store.n_segments() + 1 {
+                        return Err(e);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Typed error when any slice in `[z0, z1]` lost coverage to a
+    /// quarantine — box-shaped queries skip never-persisted slices by
+    /// design, so without this check an unresolvable slice would read
+    /// as a silently smaller answer.
+    fn check_resolvable(&self, z0: usize, z1: usize) -> Result<()> {
+        if let Some((z, why)) = self.store.unresolvable_in(z0, z1) {
+            return Err(PdfflowError::Format(format!(
+                "slice {z} is unresolvable: {why}"
+            )));
+        }
+        Ok(())
     }
 
     /// Point lookup by coordinates.
     pub fn point(&self, x: usize, y: usize, z: usize) -> Result<PdfRecord> {
+        self.with_fallback(|| self.point_inner(x, y, z))
+    }
+
+    fn point_inner(&self, x: usize, y: usize, z: usize) -> Result<PdfRecord> {
         let dims = self.dims();
         if x >= dims.nx || y >= dims.ny || z >= dims.nz {
             return Err(PdfflowError::InvalidArg(format!(
@@ -246,7 +302,7 @@ impl QueryEngine {
                 dims.nx, dims.ny, dims.nz
             )));
         }
-        let part = self.store.find_part(z, y).ok_or_else(|| {
+        let part = self.store.find_part(z, y)?.ok_or_else(|| {
             PdfflowError::InvalidArg(format!(
                 "slice {z} line {y} is not persisted in run {}",
                 self.store.run_key().label()
@@ -298,7 +354,7 @@ impl QueryEngine {
     /// Resolved windows of slice `z` overlapping line range [y0, y1] —
     /// in y0 order, which is what keeps parallel merges deterministic.
     fn region_parts(&self, q: &RegionQuery) -> Result<Vec<SlicePart>> {
-        let parts = self.store.slice_parts(q.z).ok_or_else(|| {
+        let parts = self.store.slice_parts(q.z)?.ok_or_else(|| {
             PdfflowError::InvalidArg(format!(
                 "slice {} is not persisted in run {}",
                 q.z,
@@ -409,28 +465,40 @@ impl QueryEngine {
     /// Rectangular region scan: all records with x0≤x≤x1, y0≤y≤y1 on
     /// slice z, in point-id order. Window blocks are fetched in parallel.
     pub fn region(&self, q: &RegionQuery) -> Result<Vec<PdfRecord>> {
-        let wins = self.region_parts(q)?;
-        self.scan_windows(wins, Self::region_box(q))
+        self.with_fallback(|| {
+            let wins = self.region_parts(q)?;
+            self.scan_windows(wins, Self::region_box(q))
+        })
     }
 
     /// Analytical region query: error statistics + type/error histograms.
     /// Per-window partials are computed in parallel and merged in window
     /// order, so the result is identical at any thread count.
     pub fn region_summary(&self, q: &RegionQuery) -> Result<RegionSummary> {
-        let wins = self.region_parts(q)?;
-        self.summarize_windows(wins, Self::region_box(q))
+        self.with_fallback(|| {
+            let wins = self.region_parts(q)?;
+            self.summarize_windows(wins, Self::region_box(q))
+        })
     }
 
-    /// The engine's spatial grid index, built lazily from the catalog's
-    /// resolved view (no payload reads).
-    pub fn spatial_index(&self) -> &GridIndex {
-        self.index.get_or_init(|| {
-            let grid = match self.cell {
-                Some([sx, sy, sz]) => CellGrid::new(self.dims(), sx, sy, sz),
-                None => CellGrid::default_for(self.dims()),
-            };
-            GridIndex::build(&self.store, grid)
-        })
+    /// The engine's spatial grid index for the current store epoch,
+    /// built lazily from the catalog's resolved view (no payload
+    /// reads); rebuilt after a quarantine re-resolves the store.
+    pub fn spatial_index(&self) -> Arc<GridIndex> {
+        let epoch = self.store.epoch();
+        let mut guard = self.index.lock().unwrap();
+        if let Some((built_at, idx)) = guard.as_ref() {
+            if *built_at == epoch {
+                return Arc::clone(idx);
+            }
+        }
+        let grid = match self.cell {
+            Some([sx, sy, sz]) => CellGrid::new(self.dims(), sx, sy, sz),
+            None => CellGrid::default_for(self.dims()),
+        };
+        let idx = Arc::new(GridIndex::build(&self.store, grid));
+        *guard = Some((epoch, Arc::clone(&idx)));
+        idx
     }
 
     /// Index-pruned candidate windows of a box, ascending `(z, y0)`.
@@ -447,13 +515,19 @@ impl QueryEngine {
     /// are skipped, not an error — a 3D box queries the resolved view,
     /// whatever subset of the cube it covers.
     pub fn box_records(&self, q: &BoxQuery) -> Result<Vec<PdfRecord>> {
-        self.scan_windows(self.box_parts(q), *q)
+        self.with_fallback(|| {
+            self.check_resolvable(q.z0, q.z1)?;
+            self.scan_windows(self.box_parts(q), *q)
+        })
     }
 
     /// Analytical summary of a 3D box (same statistics as a region
     /// summary, computed over the box's resolved records).
     pub fn box_summary(&self, q: &BoxQuery) -> Result<RegionSummary> {
-        self.summarize_windows(self.box_parts(q), *q)
+        self.with_fallback(|| {
+            self.check_resolvable(q.z0, q.z1)?;
+            self.summarize_windows(self.box_parts(q), *q)
+        })
     }
 
     /// Radius query: records within Euclidean `radius` of the center
@@ -465,15 +539,18 @@ impl QueryEngine {
         if q.radius < 0.0 {
             return Ok(Vec::new());
         }
-        let b = q.bounding_box(&dims);
-        let wins = self.box_parts(&b);
-        let r2 = q.radius * q.radius;
-        let center = (q.x, q.y, q.z);
-        let records = self.scan_windows(wins, b)?;
-        Ok(records
-            .into_iter()
-            .filter(|rec| dist2(dims.coords(rec.point), center) as f64 <= r2)
-            .collect())
+        self.with_fallback(|| {
+            let b = q.bounding_box(&dims);
+            self.check_resolvable(b.z0, b.z1)?;
+            let wins = self.box_parts(&b);
+            let r2 = q.radius * q.radius;
+            let center = (q.x, q.y, q.z);
+            let records = self.scan_windows(wins, b)?;
+            Ok(records
+                .into_iter()
+                .filter(|rec| dist2(dims.coords(rec.point), center) as f64 <= r2)
+                .collect())
+        })
     }
 
     /// k nearest stored records around a point, ordered by `(squared
@@ -484,26 +561,31 @@ impl QueryEngine {
     /// squared distance > h², so they can neither displace nor tie).
     pub fn knn(&self, q: &KnnQuery) -> Result<Vec<PdfRecord>> {
         let dims = self.dims();
-        let k = q.k.min(self.store.n_records() as usize);
-        if k == 0 {
-            return Ok(Vec::new());
-        }
-        let center = (q.x, q.y, q.z);
-        let grid = self.spatial_index().grid();
-        let whole = BoxQuery::whole(&dims);
-        let mut half = grid.sx.max(grid.sy).max(grid.sz);
-        loop {
-            let b = BoxQuery::around(&dims, center, half);
-            let mut cand = self.scan_windows(self.box_parts(&b), b)?;
-            cand.sort_unstable_by_key(|rec| (dist2(dims.coords(rec.point), center), rec.point));
-            let settled = cand.len() >= k
-                && dist2(dims.coords(cand[k - 1].point), center) <= half as u64 * half as u64;
-            if settled || b == whole {
-                cand.truncate(k);
-                return Ok(cand);
+        self.with_fallback(|| {
+            // The expanding search may touch any slice; any lost
+            // coverage could change the answer silently.
+            self.check_resolvable(0, dims.nz.saturating_sub(1))?;
+            let k = q.k.min(self.store.n_records() as usize);
+            if k == 0 {
+                return Ok(Vec::new());
             }
-            half *= 2;
-        }
+            let center = (q.x, q.y, q.z);
+            let grid = self.spatial_index().grid();
+            let whole = BoxQuery::whole(&dims);
+            let mut half = grid.sx.max(grid.sy).max(grid.sz);
+            loop {
+                let b = BoxQuery::around(&dims, center, half);
+                let mut cand = self.scan_windows(self.box_parts(&b), b)?;
+                cand.sort_unstable_by_key(|rec| (dist2(dims.coords(rec.point), center), rec.point));
+                let settled = cand.len() >= k
+                    && dist2(dims.coords(cand[k - 1].point), center) <= half as u64 * half as u64;
+                if settled || b == whole {
+                    cand.truncate(k);
+                    return Ok(cand);
+                }
+                half *= 2;
+            }
+        })
     }
 
     /// Per-cell aggregation of fit outcomes over a box: dominant
@@ -511,6 +593,11 @@ impl QueryEngine {
     /// plus the type-transition boundary cells. Parallel per window,
     /// merged in window order (thread-count invariant).
     pub fn cell_aggregate(&self, q: &BoxQuery) -> Result<SpatialAggregate> {
+        self.with_fallback(|| self.cell_aggregate_inner(q))
+    }
+
+    fn cell_aggregate_inner(&self, q: &BoxQuery) -> Result<SpatialAggregate> {
+        self.check_resolvable(q.z0, q.z1)?;
         let dims = self.dims();
         let grid = self.spatial_index().grid();
         let wins = self.box_parts(q);
@@ -696,6 +783,10 @@ impl QueryEngine {
     /// "the median velocity surface of this block". Parallel per window,
     /// merged in window order (thread-count invariant).
     pub fn region_quantile_mean(&self, q: &RegionQuery, p: f64) -> Result<f64> {
+        self.with_fallback(|| self.region_quantile_mean_inner(q, p))
+    }
+
+    fn region_quantile_mean_inner(&self, q: &RegionQuery, p: f64) -> Result<f64> {
         let dims = self.dims();
         let wins = self.region_parts(q)?;
         let q = *q;

@@ -1,0 +1,295 @@
+//! Store scrub: offline corruption sweep and repair.
+//!
+//! `pdfflow store scrub [--repair]` walks **every run** in the catalog,
+//! full-payload-verifies every segment ([`PdfStore::verify_report`] —
+//! the same checksums the read path enforces window-by-window),
+//! quarantines each failure, and reports per run what survives:
+//!
+//! * **bad** segments — checksum or open failures, quarantined;
+//! * **unresolvable** slices — coverage the surviving generations can
+//!   no longer prove (those reads are typed errors until re-persisted);
+//! * with `--repair`, salvageable runs (bad segments present, no
+//!   coverage lost) are rewritten through the compaction path
+//!   (`compact::rewrite_resolved` + `compact::publish_run`): the
+//!   resolved fallback view — bit-identical to what queries serve —
+//!   becomes one dense new generation, and the corrupt files are
+//!   retired with the rest of the superseded generations.
+//!
+//! Scrub never deletes data it cannot re-derive: a run with lost
+//! coverage is reported, not rewritten, so the damaged files stay on
+//! disk for forensics or a re-run of the pipeline.
+
+use std::path::Path;
+
+use crate::pdfstore::compact::{publish_run, rewrite_resolved};
+use crate::pdfstore::{Catalog, PdfStore, RunKey, RunSelector};
+use crate::Result;
+
+/// One segment's scrub outcome (mirrors [`super::SegmentVerify`], owned
+/// by run so the report serializes flat).
+#[derive(Clone, Debug)]
+pub struct ScrubSegment {
+    pub file: String,
+    pub slice: usize,
+    pub gen: usize,
+    /// `None` = checksums good; otherwise why the segment is bad.
+    pub error: Option<String>,
+}
+
+/// Scrub outcome of one run.
+#[derive(Clone, Debug)]
+pub struct ScrubRun {
+    pub run: RunKey,
+    pub segments: Vec<ScrubSegment>,
+    /// Segments that failed verification (all quarantined).
+    pub bad: usize,
+    /// Slices whose coverage the surviving generations cannot prove,
+    /// with the reason. Non-empty blocks repair.
+    pub unresolvable: Vec<(usize, String)>,
+    /// True when `--repair` rewrote this run to a fresh generation.
+    pub repaired: bool,
+    /// Generation the repair published, when it ran.
+    pub repaired_gen: Option<usize>,
+    /// Superseded files (corrupt ones included) unlinked by the repair.
+    pub retired_files: usize,
+}
+
+/// Whole-catalog scrub report.
+#[derive(Clone, Debug, Default)]
+pub struct ScrubReport {
+    pub runs: Vec<ScrubRun>,
+}
+
+impl ScrubReport {
+    /// Bad segments across every run.
+    pub fn total_bad(&self) -> usize {
+        self.runs.iter().map(|r| r.bad).sum()
+    }
+
+    /// True when every segment of every run verified clean.
+    pub fn all_ok(&self) -> bool {
+        self.total_bad() == 0
+    }
+
+    /// True when damage remains after this scrub: bad segments that were
+    /// not repaired away, or coverage that repair could not restore.
+    pub fn needs_attention(&self) -> bool {
+        self.runs
+            .iter()
+            .any(|r| (r.bad > 0 && !r.repaired) || !r.unresolvable.is_empty())
+    }
+
+    /// Multi-line CLI listing, one block per run.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for r in &self.runs {
+            out.push_str(&format!(
+                "run {}: {} segment(s), {} bad\n",
+                r.run.label(),
+                r.segments.len(),
+                r.bad
+            ));
+            for s in &r.segments {
+                match &s.error {
+                    None => out.push_str(&format!(
+                        "  ok  {} (slice {}, gen {})\n",
+                        s.file, s.slice, s.gen
+                    )),
+                    Some(e) => out.push_str(&format!(
+                        "  BAD {} (slice {}, gen {}): {e}\n",
+                        s.file, s.slice, s.gen
+                    )),
+                }
+            }
+            for (z, why) in &r.unresolvable {
+                out.push_str(&format!("  slice {z} UNRESOLVABLE: {why}\n"));
+            }
+            if r.repaired {
+                out.push_str(&format!(
+                    "  repaired -> generation {} ({} file(s) retired)\n",
+                    r.repaired_gen.unwrap_or(0),
+                    r.retired_files
+                ));
+            } else if r.bad > 0 {
+                out.push_str(if r.unresolvable.is_empty() {
+                    "  salvageable: older generations cover every line (rerun with --repair)\n"
+                } else {
+                    "  NOT salvageable: coverage lost; re-persist the run\n"
+                });
+            }
+        }
+        out
+    }
+}
+
+/// Scrub every run in the store at `dir` (see module docs). With
+/// `repair`, salvageable runs are rewritten via the compaction path;
+/// without it, the sweep is read-only.
+pub fn scrub_store(dir: impl AsRef<Path>, repair: bool) -> Result<ScrubReport> {
+    let dir = dir.as_ref();
+    let keys: Vec<RunKey> = Catalog::load(dir)?
+        .runs
+        .iter()
+        .map(|r| r.key.clone())
+        .collect();
+    let mut report = ScrubReport::default();
+    for key in keys {
+        // Tolerant open: a run a strict open would reject (coverage
+        // already lost) is exactly what scrub must be able to report.
+        let store = PdfStore::open_run_tolerant(dir, RunSelector::Key(&key))?;
+        let verify = store.verify_report();
+        for s in &verify.segments {
+            if let Some(e) = &s.error {
+                store.quarantine_segment(s.idx, e);
+            }
+        }
+        let segments: Vec<ScrubSegment> = verify
+            .segments
+            .iter()
+            .map(|s| ScrubSegment {
+                file: s.file.clone(),
+                slice: s.slice,
+                gen: s.gen,
+                error: s.error.clone(),
+            })
+            .collect();
+        let bad = verify.n_bad();
+        let unresolvable = store.unresolvable_slices();
+        let mut run = ScrubRun {
+            run: key.clone(),
+            segments,
+            bad,
+            unresolvable,
+            repaired: false,
+            repaired_gen: None,
+            retired_files: 0,
+        };
+        if repair && bad > 0 && run.unresolvable.is_empty() {
+            // The resolved fallback view is fully covered — materialize
+            // it as a fresh dense generation, exactly as compaction
+            // would, then retire every superseded file (the corrupt
+            // ones among them).
+            let new_gen = store.run().max_gen().map(|g| g + 1).unwrap_or(0);
+            let old_files: Vec<String> =
+                store.run().segments.iter().map(|s| s.file.clone()).collect();
+            let new_metas = rewrite_resolved(dir, &store, new_gen)?;
+            drop(store);
+            run.retired_files = publish_run(dir, &key, new_metas, &old_files)?;
+            run.repaired = true;
+            run.repaired_gen = Some(new_gen);
+        }
+        report.runs.push(run);
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cube::{CubeDims, PointId};
+    use crate::pdfstore::{PdfRecord, StoreWriter};
+    use crate::stats::DistType;
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("pdfflow-scrub-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn records(base: u64, n: u64) -> Vec<PdfRecord> {
+        (0..n)
+            .map(|i| PdfRecord {
+                point: PointId(base + i),
+                dist: DistType::Normal,
+                error: 0.5,
+                params: [1.0, 2.0, 0.0],
+            })
+            .collect()
+    }
+
+    /// Two generations of one slice: gen 0 covers lines 0..4, gen 1
+    /// rewrites the same lines. Returns the store dir.
+    fn two_gen_store(tag: &str) -> std::path::PathBuf {
+        let dir = tmp(tag);
+        let dims = CubeDims::new(4, 4, 2);
+        let mut w = StoreWriter::create(&dir, dims, 16).unwrap();
+        let key = RunKey::new("baseline", 4, "default");
+        for _gen in 0..2 {
+            let mut sw = w.open_segment(1, &key).unwrap();
+            sw.append_records(0, 4, &records(100, 16)).unwrap();
+            let meta = sw.finish().unwrap();
+            w.add_segment(meta).unwrap();
+        }
+        dir
+    }
+
+    fn flip_payload_byte(path: &std::path::Path) {
+        let mut bytes = std::fs::read(path).unwrap();
+        bytes[16] ^= 0x01; // inside the first record, after the header
+        std::fs::write(path, bytes).unwrap();
+    }
+
+    #[test]
+    fn clean_store_scrubs_clean() {
+        let dir = two_gen_store("clean");
+        let report = scrub_store(&dir, false).unwrap();
+        assert!(report.all_ok(), "{}", report.render());
+        assert!(!report.needs_attention());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn scrub_reports_then_repairs_a_corrupt_generation() {
+        let dir = two_gen_store("repair");
+        flip_payload_byte(&dir.join("slice1_baseline_4_default_g1.seg"));
+
+        // Read-only sweep: finds the bad segment, changes nothing.
+        let report = scrub_store(&dir, false).unwrap();
+        assert_eq!(report.total_bad(), 1, "{}", report.render());
+        let r = &report.runs[0];
+        assert!(!r.repaired);
+        assert!(r.unresolvable.is_empty(), "gen 0 still covers the lines");
+        assert!(report.needs_attention());
+
+        // Repair: the surviving gen-0 view becomes a fresh generation
+        // and both old files are retired.
+        let report = scrub_store(&dir, true).unwrap();
+        let r = &report.runs[0];
+        assert!(r.repaired, "{}", report.render());
+        assert_eq!(r.repaired_gen, Some(2));
+        assert_eq!(r.retired_files, 2);
+        assert!(!report.needs_attention());
+
+        // The repaired store is clean, whole, and serves gen 0's bytes.
+        let store = PdfStore::open(&dir).unwrap();
+        store.verify().unwrap();
+        assert_eq!(store.n_segments(), 1);
+        assert_eq!(store.n_records(), 16);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn lost_coverage_is_reported_not_repaired() {
+        let dir = tmp("lost");
+        let dims = CubeDims::new(4, 4, 2);
+        let mut w = StoreWriter::create(&dir, dims, 16).unwrap();
+        let key = RunKey::new("baseline", 4, "default");
+        let mut sw = w.open_segment(1, &key).unwrap();
+        sw.append_records(0, 4, &records(100, 16)).unwrap();
+        let meta = sw.finish().unwrap();
+        w.add_segment(meta).unwrap();
+        // The only copy of the slice goes bad: nothing to fall back to.
+        flip_payload_byte(&dir.join("slice1_baseline_4_default_g0.seg"));
+
+        let report = scrub_store(&dir, true).unwrap();
+        let r = &report.runs[0];
+        assert_eq!(r.bad, 1, "{}", report.render());
+        assert!(!r.repaired, "must not rewrite a run with lost coverage");
+        assert_eq!(r.unresolvable.len(), 1);
+        assert!(report.needs_attention());
+        // The damaged file is left in place for forensics.
+        assert!(dir.join("slice1_baseline_4_default_g0.seg").exists());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -26,7 +26,7 @@ pub const TRAILER_MAGIC: &[u8; 4] = b"SFTR";
 /// Header bytes: magic + version.
 pub const HEADER_LEN: u64 = 8;
 /// Footer bytes per window entry.
-pub const ENTRY_LEN: u64 = 32;
+pub const ENTRY_LEN: u64 = 40;
 /// Trailer bytes: footer_off + n_windows + checksum + magic.
 pub const TRAILER_LEN: u64 = 28;
 
@@ -38,6 +38,10 @@ pub struct WindowEntry {
     /// Absolute byte offset of the window's first record.
     pub offset: u64,
     pub n_records: u64,
+    /// FNV-64 over the window's record payload, validated on every
+    /// `read_window` — the granule that lets the query path catch bit
+    /// rot at read time instead of waiting for a full `verify` pass.
+    pub checksum: u64,
 }
 
 impl WindowEntry {
@@ -46,6 +50,7 @@ impl WindowEntry {
         out.extend_from_slice(&self.lines.to_le_bytes());
         out.extend_from_slice(&self.offset.to_le_bytes());
         out.extend_from_slice(&self.n_records.to_le_bytes());
+        out.extend_from_slice(&self.checksum.to_le_bytes());
     }
 
     fn decode(b: &[u8]) -> WindowEntry {
@@ -55,6 +60,7 @@ impl WindowEntry {
             lines: u64_at(8),
             offset: u64_at(16),
             n_records: u64_at(24),
+            checksum: u64_at(32),
         }
     }
 }
@@ -82,6 +88,13 @@ pub struct SegmentMeta {
     pub bytes: u64,
     /// FNV-64 over every byte before the trailer's checksum field.
     pub checksum: u64,
+    /// Merged, sorted `[start, end)` line ranges this segment's windows
+    /// cover. Persisted in the catalog so that after a segment is
+    /// quarantined the store can prove whether the surviving
+    /// generations still cover every line the run ever served — a
+    /// coverage mismatch makes the slice a typed error instead of a
+    /// silently shrunken answer.
+    pub cover: Vec<(u64, u64)>,
 }
 
 /// Streaming writer for one segment. Records stream into a `.tmp` file
@@ -140,10 +153,22 @@ impl SegmentWriter {
         Ok(w)
     }
 
+    /// Hash-then-write. The running checksum always covers the
+    /// *original* bytes; when a `segment.write` corruption fault is
+    /// armed, only the copy that reaches the disk is mangled — so
+    /// injected write corruption stays detectable by the same checks
+    /// that catch real bit rot, instead of being checksummed into
+    /// truth.
     fn write(&mut self, bytes: &[u8]) -> Result<()> {
-        self.f.write_all(bytes)?;
         self.hash.update(bytes);
         self.offset += bytes.len() as u64;
+        if crate::fault::active() {
+            let mut copy = bytes.to_vec();
+            crate::fault::mangle("segment.write", &mut copy);
+            self.f.write_all(&copy)?;
+        } else {
+            self.f.write_all(bytes)?;
+        }
         Ok(())
     }
 
@@ -170,8 +195,10 @@ impl SegmentWriter {
             )));
         }
         self.check_line_order(window.y0 as u64)?;
+        crate::fault::check("segment.write")?;
         let start = self.offset;
         let mut buf = [0u8; REC_LEN];
+        let mut win_hash = Fnv64::new();
         for (id, o) in ids.iter().zip(outcomes) {
             PdfRecord {
                 point: *id,
@@ -180,6 +207,7 @@ impl SegmentWriter {
                 params: o.params,
             }
             .encode(&mut buf);
+            win_hash.update(&buf);
             self.write(&buf)?;
         }
         self.entries.push(WindowEntry {
@@ -187,6 +215,7 @@ impl SegmentWriter {
             lines: window.lines as u64,
             offset: start,
             n_records: ids.len() as u64,
+            checksum: win_hash.finish(),
         });
         self.n_records += ids.len() as u64;
         Ok(self.offset - start)
@@ -198,10 +227,13 @@ impl SegmentWriter {
     /// byte-identical record payloads.
     pub fn append_records(&mut self, y0: u64, lines: u64, records: &[PdfRecord]) -> Result<u64> {
         self.check_line_order(y0)?;
+        crate::fault::check("segment.write")?;
         let start = self.offset;
         let mut buf = [0u8; REC_LEN];
+        let mut win_hash = Fnv64::new();
         for rec in records {
             rec.encode(&mut buf);
+            win_hash.update(&buf);
             self.write(&buf)?;
         }
         self.entries.push(WindowEntry {
@@ -209,6 +241,7 @@ impl SegmentWriter {
             lines,
             offset: start,
             n_records: records.len() as u64,
+            checksum: win_hash.finish(),
         });
         self.n_records += records.len() as u64;
         Ok(self.offset - start)
@@ -244,7 +277,18 @@ impl SegmentWriter {
         self.f.write_all(TRAILER_MAGIC)?;
         self.f.flush()?;
         drop(self.f);
+        crate::fault::check("segment.finish")?;
         std::fs::rename(&self.tmp_path, &self.final_path)?;
+        // Merge adjacent windows into the covered-line ranges; entries
+        // are in line order, so one forward pass suffices.
+        let mut cover: Vec<(u64, u64)> = Vec::new();
+        for e in &self.entries {
+            let end = e.y0 + e.lines;
+            match cover.last_mut() {
+                Some(last) if last.1 == e.y0 => last.1 = end,
+                _ => cover.push((e.y0, end)),
+            }
+        }
         Ok(SegmentMeta {
             file: self.file_name,
             slice: self.slice,
@@ -256,6 +300,7 @@ impl SegmentWriter {
             n_records: self.n_records,
             bytes: self.offset + 12,
             checksum,
+            cover,
         })
     }
 }
@@ -361,12 +406,28 @@ impl SegmentReader {
         (y < e.y0 + e.lines).then_some(idx - 1)
     }
 
-    /// Read and decode one window's records (one positioned read).
+    /// Read, checksum-validate and decode one window's records (one
+    /// positioned read). Transient read errors are retried per
+    /// [`crate::fault::retry`]; a per-window checksum mismatch is a
+    /// permanent `Format` error the query engine turns into a
+    /// quarantine.
     pub fn read_window(&self, idx: usize) -> Result<Vec<PdfRecord>> {
         let _span = crate::span!("segment.read", "{} win {idx}", self.meta.file);
         let e = &self.entries[idx];
         let mut buf = vec![0u8; (e.n_records as usize) * REC_LEN];
-        self.file.read_exact_at(&mut buf, e.offset)?;
+        crate::fault::retry("segment.read", || {
+            crate::fault::check("segment.read")?;
+            self.file.read_exact_at(&mut buf, e.offset)?;
+            Ok(())
+        })?;
+        crate::fault::mangle("segment.read", &mut buf);
+        let got = crate::pdfstore::fnv64(&buf);
+        if got != e.checksum {
+            return Err(PdfflowError::Format(format!(
+                "{} window {idx}: payload checksum {got:016x} != index {:016x} (corrupt segment)",
+                self.meta.file, e.checksum
+            )));
+        }
         let mut out = Vec::with_capacity(e.n_records as usize);
         for chunk in buf.chunks_exact(REC_LEN) {
             out.push(PdfRecord::decode(chunk)?);
@@ -441,6 +502,7 @@ mod tests {
         assert_eq!(meta.n_records, 12);
         assert_eq!(meta.file, "slice3_baseline_4_default_g0.seg");
         assert_eq!((meta.run.as_str(), meta.gen), ("default", 0));
+        assert_eq!(meta.cover, vec![(0, 3)], "adjacent windows merge into one range");
         assert_eq!(
             meta.bytes,
             HEADER_LEN + 12 * REC_LEN as u64 + 2 * ENTRY_LEN + TRAILER_LEN
@@ -530,6 +592,22 @@ mod tests {
         std::fs::write(&path, &bytes).unwrap();
         let r = SegmentReader::open(&dir, &meta).unwrap(); // index still sane
         assert!(r.verify().is_err());
+        // The per-window checksum catches it at read time too — this is
+        // what the query engine's quarantine path keys off.
+        assert!(matches!(r.read_window(0), Err(PdfflowError::Format(_))));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn gapped_windows_produce_split_cover() {
+        let dir = tmp("cover");
+        let mut w = SegmentWriter::create(&dir, 2, "baseline", 4, "default", 0).unwrap();
+        w.append_window(&Window { z: 2, y0: 0, lines: 2 }, &ids(0, 4), &outcomes(4, 0))
+            .unwrap();
+        w.append_window(&Window { z: 2, y0: 5, lines: 1 }, &ids(9, 2), &outcomes(2, 1))
+            .unwrap();
+        let meta = w.finish().unwrap();
+        assert_eq!(meta.cover, vec![(0, 2), (5, 6)]);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 }

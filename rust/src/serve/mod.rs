@@ -23,6 +23,13 @@
 //! sums/maxima per class, and the peak in-flight / queued levels ever
 //! observed — the counters a load balancer or autoscaler would watch.
 //!
+//! Replies carry a **degraded** flag ([`Served`]): when a segment has
+//! been quarantined and the answer's slice range is served through
+//! generation fallback, the reply is still exact for the surviving
+//! data but the caller is told the store is running on fallback
+//! copies. Degraded replies bump the per-class
+//! `serve.<class>.degraded` counters.
+//!
 //! [`closed_loop`] is the matching load driver: N synchronous clients,
 //! each issuing its next request only after the previous one finished —
 //! the closed-loop shape of `pdfflow serve --bench`, whose serving row
@@ -35,7 +42,7 @@ use std::time::Instant;
 use crate::cube::PointId;
 use crate::pdfstore::{PdfRecord, QueryEngine, RegionQuery, RegionSummary};
 use crate::spatial::{BoxQuery, KnnQuery, RadiusQuery, RunDiff};
-use crate::telemetry::{Histogram, Registry, Span};
+use crate::telemetry::{Counter, Histogram, Registry, Span};
 use crate::util::prng::Rng;
 use crate::{PdfflowError, Result};
 
@@ -88,6 +95,17 @@ pub enum Reply {
     Radius(Vec<PdfRecord>),
     Knn(Vec<PdfRecord>),
     DiffRun(RunDiff),
+}
+
+/// A successful reply plus its serving condition.
+#[derive(Clone, Debug)]
+pub struct Served {
+    pub reply: Reply,
+    /// True when the answer's slice range is served through generation
+    /// fallback around a quarantined segment: the data returned is
+    /// intact (checksummed, coverage-proven), but it came from older
+    /// generation copies and the store needs a scrub/repair.
+    pub degraded: bool,
 }
 
 /// Request classes metered independently (their costs differ by orders
@@ -169,6 +187,8 @@ struct ClassCounters {
     completed: AtomicU64,
     shed: AtomicU64,
     errors: AtomicU64,
+    /// Successful replies served with `degraded: true`.
+    degraded: AtomicU64,
     /// End-to-end latency (queue wait + execution), nanoseconds.
     latency: Arc<Histogram>,
     /// Admission-queue wait, nanoseconds.
@@ -186,6 +206,8 @@ pub struct ClassMetrics {
     pub shed: u64,
     /// Admitted requests whose query returned an error.
     pub errors: u64,
+    /// Successful replies flagged `degraded` (generation fallback).
+    pub degraded: u64,
     /// Summed end-to-end latency (queue wait + execution), seconds.
     pub latency_s_sum: f64,
     /// Worst end-to-end latency, seconds.
@@ -270,6 +292,9 @@ pub struct ServeFront {
     gate: Mutex<Gate>,
     cv: Condvar,
     classes: [ClassCounters; 7],
+    /// Process-registry `serve.<class>.degraded` counters (shared
+    /// handles; registered eagerly so exporters list them at zero).
+    degraded_counters: [Arc<Counter>; 7],
 }
 
 impl ServeFront {
@@ -289,6 +314,9 @@ impl ServeFront {
             }),
             cv: Condvar::new(),
             classes: Default::default(),
+            degraded_counters: std::array::from_fn(|i| {
+                Registry::global().counter(&format!("serve.{}.degraded", Class::ALL[i].name()))
+            }),
         }
     }
 
@@ -328,10 +356,44 @@ impl ServeFront {
         self.opts
     }
 
+    /// True when `req`'s answer would be served through generation
+    /// fallback around a quarantined segment. Evaluated *after* the
+    /// query ran, so a quarantine triggered by this very request is
+    /// reflected in its own reply.
+    fn request_degraded(&self, req: &Request) -> bool {
+        let store = self.engine.store();
+        if !store.is_degraded() && !matches!(req, Request::DiffRun(_)) {
+            return false;
+        }
+        let dims = store.dims();
+        match *req {
+            Request::Point(id) => {
+                let (_, _, z) = dims.coords(id);
+                store.degraded_in(z, z)
+            }
+            Request::Region(q) | Request::QuantileMean(q, _) => store.degraded_in(q.z, q.z),
+            Request::Box(q) => store.degraded_in(q.z0, q.z1),
+            Request::Radius(q) => {
+                let b = q.bounding_box(&dims);
+                !b.is_empty() && store.degraded_in(b.z0, b.z1)
+            }
+            // kNN may expand to any slice, so any quarantine taints it.
+            Request::Knn(_) => store.is_degraded(),
+            Request::DiffRun(q) => {
+                store.degraded_in(q.z0, q.z1)
+                    || self
+                        .diff
+                        .as_ref()
+                        .is_some_and(|d| d.store().degraded_in(q.z0, q.z1))
+            }
+        }
+    }
+
     /// Submit one request through admission control. Blocks while
     /// queued (bounded by `queue_depth` peers), sheds with
-    /// [`PdfflowError::Overloaded`] when the queue is full.
-    pub fn submit(&self, req: Request) -> Result<Reply> {
+    /// [`PdfflowError::Overloaded`] when the queue is full. Successful
+    /// replies say whether they were served degraded ([`Served`]).
+    pub fn submit(&self, req: Request) -> Result<Served> {
         let class = &self.classes[req.class() as usize];
         let arrived = Instant::now();
         // Admission: take an execution slot or a bounded queue slot.
@@ -391,15 +453,21 @@ impl ServeFront {
 
         class.queue.record_duration(queue_wait);
         class.latency.record_duration(arrived.elapsed());
-        match &result {
-            Ok(_) => {
+        match result {
+            Ok(reply) => {
                 class.completed.fetch_add(1, Ordering::Relaxed);
+                let degraded = self.request_degraded(&req);
+                if degraded {
+                    class.degraded.fetch_add(1, Ordering::Relaxed);
+                    self.degraded_counters[req.class() as usize].inc();
+                }
+                Ok(Served { reply, degraded })
             }
-            Err(_) => {
+            Err(e) => {
                 class.errors.fetch_add(1, Ordering::Relaxed);
+                Err(e)
             }
         }
-        result
     }
 
     pub fn metrics(&self) -> ServeMetrics {
@@ -408,6 +476,7 @@ impl ServeFront {
             completed: c.completed.load(Ordering::Relaxed),
             shed: c.shed.load(Ordering::Relaxed),
             errors: c.errors.load(Ordering::Relaxed),
+            degraded: c.degraded.load(Ordering::Relaxed),
             latency_s_sum: c.latency.sum() as f64 / 1e9,
             latency_s_max: c.latency.max() as f64 / 1e9,
             latency_p50_s: c.latency.quantile(0.50) as f64 / 1e9,

@@ -160,13 +160,19 @@ pub struct GridIndex {
 
 impl GridIndex {
     /// Build the index over every resolved window of the open run.
+    /// Unresolvable slices index nothing — the engine's strict
+    /// pre-checks turn queries touching them into typed errors before
+    /// the index is consulted.
     pub fn build(store: &PdfStore, grid: CellGrid) -> GridIndex {
         let ncy = grid.ncy();
         let mut buckets = vec![Vec::new(); ncy * grid.ncz()];
         let mut parts: Vec<(usize, SlicePart)> = Vec::new();
         for z in store.slices() {
             let cz = z / grid.sz;
-            for p in store.slice_parts(z).unwrap_or(&[]) {
+            let Some(resolved) = store.resolved_parts(z) else {
+                continue;
+            };
+            for p in resolved.iter() {
                 let idx = parts.len() as u32;
                 parts.push((z, *p));
                 let y1 = (p.entry.y0 + p.entry.lines - 1) as usize;

@@ -26,23 +26,27 @@ use super::{
 };
 
 /// Every resolved window of the store, ascending `(z, y0)` — the
-/// canonical deterministic scan order.
-fn all_windows(store: &PdfStore) -> Vec<(usize, SlicePart)> {
+/// canonical deterministic scan order. Strict: an unresolvable slice
+/// (coverage lost to quarantine) is a typed error, matching the
+/// engine's pre-checks.
+fn all_windows(store: &PdfStore) -> Result<Vec<(usize, SlicePart)>> {
     let mut out = Vec::new();
     for z in store.slices() {
-        for p in store.slice_parts(z).unwrap_or(&[]) {
-            out.push((z, *p));
+        if let Some(parts) = store.slice_parts(z)? {
+            for p in parts.iter() {
+                out.push((z, *p));
+            }
         }
     }
-    out
+    Ok(out)
 }
 
 /// Full-scan box query: all records inside the box, point-id order.
 pub fn box_records(store: &PdfStore, q: &BoxQuery) -> Result<Vec<PdfRecord>> {
     let dims = store.dims();
     let mut out = Vec::new();
-    for (_, p) in all_windows(store) {
-        for rec in store.segment(p.seg).read_window(p.win)? {
+    for (_, p) in all_windows(store)? {
+        for rec in store.reader(p.seg)?.read_window(p.win)? {
             let (x, y, z) = dims.coords(rec.point);
             if q.contains(x, y, z) {
                 out.push(rec);
@@ -64,10 +68,10 @@ pub fn box_summary(store: &PdfStore, q: &BoxQuery) -> Result<RegionSummary> {
         error_hist: [0; ERROR_HIST_BINS],
     };
     let mut err_sum = 0.0f64;
-    for (_, p) in all_windows(store) {
+    for (_, p) in all_windows(store)? {
         // Per-window partial, folded in window order (module contract).
         let mut win_sum = 0.0f64;
-        for rec in store.segment(p.seg).read_window(p.win)? {
+        for rec in store.reader(p.seg)?.read_window(p.win)? {
             let (x, y, z) = dims.coords(rec.point);
             if !q.contains(x, y, z) {
                 continue;
@@ -100,8 +104,8 @@ pub fn radius_records(store: &PdfStore, q: &RadiusQuery) -> Result<Vec<PdfRecord
     let r2 = q.radius * q.radius;
     let center = (q.x, q.y, q.z);
     let mut out = Vec::new();
-    for (_, p) in all_windows(store) {
-        for rec in store.segment(p.seg).read_window(p.win)? {
+    for (_, p) in all_windows(store)? {
+        for rec in store.reader(p.seg)?.read_window(p.win)? {
             if dist2(dims.coords(rec.point), center) as f64 <= r2 {
                 out.push(rec);
             }
@@ -116,8 +120,8 @@ pub fn knn(store: &PdfStore, q: &KnnQuery) -> Result<Vec<PdfRecord>> {
     let dims = store.dims();
     let center = (q.x, q.y, q.z);
     let mut all = Vec::new();
-    for (_, p) in all_windows(store) {
-        all.extend(store.segment(p.seg).read_window(p.win)?);
+    for (_, p) in all_windows(store)? {
+        all.extend(store.reader(p.seg)?.read_window(p.win)?);
     }
     all.sort_unstable_by_key(|rec| (dist2(dims.coords(rec.point), center), rec.point));
     all.truncate(q.k);
@@ -134,10 +138,10 @@ pub fn cell_aggregate(store: &PdfStore, grid: CellGrid, q: &BoxQuery) -> Result<
         max: f32,
     }
     let mut cells: BTreeMap<usize, Acc> = BTreeMap::new();
-    for (_, p) in all_windows(store) {
+    for (_, p) in all_windows(store)? {
         // Window-order fold of per-window partials (module contract).
         let mut partial: BTreeMap<usize, Acc> = BTreeMap::new();
-        for rec in store.segment(p.seg).read_window(p.win)? {
+        for rec in store.reader(p.seg)?.read_window(p.win)? {
             let (x, y, z) = dims.coords(rec.point);
             if !q.contains(x, y, z) {
                 continue;

@@ -1,0 +1,549 @@
+//! Seeded fault-torture suite: the store's single safety contract is
+//! that under injected I/O faults, on-disk bit rot, and truncation,
+//! every query returns one of exactly three outcomes — a bit-identical
+//! answer (possibly flagged `degraded`), or a typed error. **Never a
+//! silently different answer.**
+//!
+//! Fault state is process-global, so every test serializes on one
+//! mutex and disarms via a drop guard even on panic. Run under a
+//! different seed with `PDFFLOW_TORTURE_SEED=<n>` (CI runs seeds 1 and
+//! 2 across both SIMD modes); the randomized rounds derive their fault
+//! specs from it, the scripted scenarios are seed-fixed by design.
+
+use std::path::{Path, PathBuf};
+use std::sync::{Mutex, MutexGuard};
+
+use pdfflow::cluster::{ClusterSpec, SimCluster};
+use pdfflow::config::PipelineConfig;
+use pdfflow::coordinator::{Method, Pipeline, TypeSet};
+use pdfflow::cube::PointId;
+use pdfflow::datagen::{DatasetSpec, SyntheticDataset};
+use pdfflow::fault;
+use pdfflow::pdfstore::{
+    scrub_store, PdfRecord, PdfStore, QueryEngine, QueryOptions, RegionQuery, QUARANTINED,
+};
+use pdfflow::runtime::{make_backend, Backend, BackendKind, BackendOptions};
+use pdfflow::serve::{Class, Reply, Request, ServeFront, ServeOptions};
+use pdfflow::spatial::{BoxQuery, KnnQuery};
+use pdfflow::telemetry::{self, flight, Registry};
+use pdfflow::util::prng::Rng;
+use pdfflow::{PdfflowError, Result};
+
+/// Serialize every test in this binary: the fault plan is one global.
+fn gate() -> MutexGuard<'static, ()> {
+    static GATE: Mutex<()> = Mutex::new(());
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Disarm on scope exit so a panicking scenario can't leak its faults
+/// into the next one.
+struct Disarm;
+impl Drop for Disarm {
+    fn drop(&mut self) {
+        fault::clear();
+    }
+}
+
+fn torture_seed() -> u64 {
+    std::env::var("PDFFLOW_TORTURE_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0)
+}
+
+fn counter(name: &str) -> u64 {
+    Registry::global().counter(name).get()
+}
+
+fn backend() -> Box<dyn Backend> {
+    make_backend(
+        BackendKind::Native,
+        "artifacts",
+        &BackendOptions {
+            batch: 64,
+            ..BackendOptions::default()
+        },
+    )
+    .expect("native backend")
+}
+
+fn root_dir(tag: &str) -> PathBuf {
+    let root = std::env::temp_dir().join(format!("pdfflow-torture-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    root
+}
+
+fn pipeline_cfg(store_dir: &Path) -> PipelineConfig {
+    PipelineConfig {
+        batch: 64,
+        window_lines: 4,
+        store_dir: Some(store_dir.to_string_lossy().into_owned()),
+        run_id: Some("t".to_string()),
+        ..PipelineConfig::default()
+    }
+}
+
+/// Two generations of slice 1 under run "t": g1 fully shadows g0, so
+/// quarantining g1 must fall back to g0 with bit-identical answers.
+fn build_two_gen(root: &Path) -> (SyntheticDataset, PathBuf) {
+    let ds = SyntheticDataset::generate(&DatasetSpec::tiny(), root.join("data")).unwrap();
+    let store = root.join("store");
+    let backend = backend();
+    let mut pipe = Pipeline::new(
+        &ds,
+        backend.as_ref(),
+        SimCluster::new(ClusterSpec::lncc()),
+        pipeline_cfg(&store),
+    );
+    pipe.run_slice(Method::Baseline, 1, TypeSet::Four).unwrap();
+    pipe.run_slice(Method::Baseline, 1, TypeSet::Four).unwrap();
+    (ds, store)
+}
+
+const NEWEST_GEN: &str = "slice1_baseline_4_t_g1.seg";
+
+fn copy_store(src: &Path, dst: &Path) {
+    std::fs::create_dir_all(dst).unwrap();
+    for entry in std::fs::read_dir(src).unwrap() {
+        let entry = entry.unwrap();
+        std::fs::copy(entry.path(), dst.join(entry.file_name())).unwrap();
+    }
+}
+
+fn flip_byte(path: &Path, at: usize) {
+    let mut bytes = std::fs::read(path).unwrap();
+    bytes[at] ^= 0x01;
+    std::fs::write(path, bytes).unwrap();
+}
+
+fn fold_record(acc: u64, rec: &PdfRecord) -> u64 {
+    acc.rotate_left(7)
+        .wrapping_add(rec.point.0)
+        .wrapping_add((rec.dist.id() as u64) << 48)
+        .wrapping_add(rec.error.to_bits() as u64)
+        .wrapping_add((rec.params[0].to_bits() as u64) << 16)
+        .wrapping_add((rec.params[1].to_bits() as u64) << 24)
+        .wrapping_add((rec.params[2].to_bits() as u64) << 32)
+}
+
+/// Fallible bit-exact fingerprint over the query surface of one slice:
+/// record scan, region summary, quantile surface, spatial box and kNN.
+/// Equal u64 ⇔ every answer is bit-identical to the pristine store.
+fn try_fingerprint(engine: &QueryEngine, z: usize) -> Result<u64> {
+    let dims = engine.dims();
+    let full = RegionQuery::slice(&dims, z);
+    let mut acc = 0x9e37_79b9_7f4a_7c15u64;
+    for rec in engine.region(&full)? {
+        acc = fold_record(acc, &rec);
+    }
+    let s = engine.region_summary(&full)?;
+    acc = acc.rotate_left(9).wrapping_add(s.avg_error.to_bits());
+    acc = acc.rotate_left(9).wrapping_add(s.max_error.to_bits());
+    let q = RegionQuery {
+        z,
+        x0: 1,
+        x1: dims.nx - 2,
+        y0: 1,
+        y1: dims.ny - 2,
+    };
+    let m = engine.region_quantile_mean(&q, 0.5)?;
+    acc = acc.rotate_left(9).wrapping_add(m.to_bits());
+    let bx = BoxQuery {
+        x0: 1,
+        x1: dims.nx - 2,
+        y0: 1,
+        y1: dims.ny - 2,
+        z0: z.saturating_sub(1),
+        z1: (z + 1).min(dims.nz - 1),
+    };
+    for rec in engine.box_records(&bx)? {
+        acc = fold_record(acc, &rec);
+    }
+    let near = KnnQuery {
+        x: 1,
+        y: 2,
+        z,
+        k: 9,
+    };
+    for rec in engine.knn(&near)? {
+        acc = fold_record(acc, &rec);
+    }
+    Ok(acc)
+}
+
+/// The torture contract for one damaged store copy: open or query may
+/// fail with a typed error, or every answer must be bit-identical to
+/// the pristine store and flagged degraded — never silent garbage.
+fn expect_flagged_or_typed(dir: &Path, name: &str, pristine: u64) {
+    match QueryEngine::open(dir, QueryOptions::default()) {
+        Err(e) => assert!(!e.to_string().is_empty(), "{name}: untyped open error"),
+        Ok(engine) => match try_fingerprint(&engine, 1) {
+            Ok(fp) => {
+                assert_eq!(fp, pristine, "{name}: silent corruption in a query answer");
+                assert!(
+                    engine.store().is_degraded() || engine.store().n_quarantined() > 0,
+                    "{name}: fallback answer was not flagged"
+                );
+                assert!(engine.store().verify_report().n_bad() >= 1, "{name}");
+            }
+            Err(e) => assert!(!e.to_string().is_empty(), "{name}: untyped query error"),
+        },
+    }
+}
+
+fn pristine_fingerprint(store: &Path) -> u64 {
+    let engine = QueryEngine::open(store, QueryOptions::default()).unwrap();
+    try_fingerprint(&engine, 1).expect("pristine store must answer")
+}
+
+#[test]
+fn transient_read_faults_retry_to_bit_identical_answers() {
+    let _g = gate();
+    let root = root_dir("retry");
+    let (_ds, store) = build_two_gen(&root);
+    let pristine = pristine_fingerprint(&store);
+
+    let _disarm = Disarm;
+    fault::install("seed=1,segment.read=io:1:2,retry=4:0").unwrap();
+    let attempts0 = counter(fault::RETRY_ATTEMPTS);
+    let injected0 = counter(fault::INJECTED);
+    let engine = QueryEngine::open(&store, QueryOptions::default()).unwrap();
+    let fp = try_fingerprint(&engine, 1).expect("retries must absorb transient faults");
+    assert_eq!(fp, pristine, "retried reads changed query answers");
+    assert!(!engine.store().is_degraded(), "transient faults are not degradation");
+    assert!(
+        counter(fault::RETRY_ATTEMPTS) - attempts0 >= 2,
+        "both injected faults should have been retried"
+    );
+    assert!(counter(fault::INJECTED) - injected0 >= 2);
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn checksum_quarantine_falls_back_to_prior_generation() {
+    let _g = gate();
+    let root = root_dir("quarantine");
+    let (_ds, store) = build_two_gen(&root);
+    let pristine = pristine_fingerprint(&store);
+
+    // Flip one payload byte of the newest generation on disk. Open
+    // succeeds (the payload is not rescanned), so the damage must be
+    // caught by the per-window checksum at read time.
+    let g1 = store.join(NEWEST_GEN);
+    let len = std::fs::metadata(&g1).unwrap().len() as usize;
+    flip_byte(&g1, len / 3);
+
+    telemetry::set_enabled(true);
+    let _events = flight::take_events();
+    let quarantined0 = counter(QUARANTINED);
+    let engine = QueryEngine::open(&store, QueryOptions::default()).unwrap();
+    let fp = try_fingerprint(&engine, 1).expect("prior generation must cover the slice");
+    telemetry::set_enabled(false);
+
+    assert_eq!(fp, pristine, "generation fallback changed query answers");
+    assert!(engine.store().is_degraded(), "fallback answers must be flagged");
+    assert_eq!(engine.store().n_quarantined(), 1);
+    assert!(counter(QUARANTINED) - quarantined0 >= 1);
+    let report = engine.store().verify_report();
+    assert_eq!(report.n_bad(), 1);
+    let bad = report.segments.iter().find(|s| s.error.is_some()).unwrap();
+    assert_eq!(bad.file, NEWEST_GEN);
+    let events = flight::take_events();
+    assert!(
+        events.iter().any(|e| e.name == "store.quarantine"),
+        "quarantine must land in the flight recorder"
+    );
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn corruption_matrix_never_returns_silent_garbage() {
+    let _g = gate();
+    let root = root_dir("matrix");
+    let (_ds, store) = build_two_gen(&root);
+    let pristine = pristine_fingerprint(&store);
+    let len = std::fs::metadata(store.join(NEWEST_GEN)).unwrap().len() as usize;
+
+    // One flip per structural region of the newest-generation segment
+    // (header, payload, footer index, trailer checksum), plus a
+    // truncation. Detection points differ (open-time vs read-time);
+    // the contract does not.
+    let flips = [
+        ("header", 4),
+        ("payload", len / 3),
+        ("footer", len - 28 - 8),
+        ("trailer", len - 10),
+    ];
+    for (name, at) in flips {
+        let dir = root.join(name);
+        copy_store(&store, &dir);
+        flip_byte(&dir.join(NEWEST_GEN), at);
+        expect_flagged_or_typed(&dir, name, pristine);
+    }
+    let dir = root.join("truncate");
+    copy_store(&store, &dir);
+    let f = std::fs::OpenOptions::new()
+        .write(true)
+        .open(dir.join(NEWEST_GEN))
+        .unwrap();
+    f.set_len(len as u64 - 10).unwrap();
+    drop(f);
+    expect_flagged_or_typed(&dir, "truncate", pristine);
+
+    // With no prior generation to fall back to, payload damage must be
+    // a typed error — lost coverage is never a shrunken answer.
+    let single = root.join("single");
+    let ds2 = SyntheticDataset::generate(&DatasetSpec::tiny(), root.join("data2")).unwrap();
+    let backend = backend();
+    let mut pipe = Pipeline::new(
+        &ds2,
+        backend.as_ref(),
+        SimCluster::new(ClusterSpec::lncc()),
+        pipeline_cfg(&single),
+    );
+    pipe.run_slice(Method::Baseline, 1, TypeSet::Four).unwrap();
+    let g0 = single.join("slice1_baseline_4_t_g0.seg");
+    let single_len = std::fs::metadata(&g0).unwrap().len() as usize;
+    flip_byte(&g0, single_len / 3);
+    let engine = QueryEngine::open(&single, QueryOptions::default()).unwrap();
+    let dims = engine.dims();
+    let err = match engine.region(&RegionQuery::slice(&dims, 1)) {
+        Ok(_) => panic!("single-generation corruption served an answer"),
+        Err(e) => e,
+    };
+    assert!(matches!(err, PdfflowError::Format(_)), "want typed Format error, got {err}");
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn write_faults_abort_typed_and_corrupt_writes_are_flagged() {
+    let _g = gate();
+    let root = root_dir("write");
+    let ds = SyntheticDataset::generate(&DatasetSpec::tiny(), root.join("data")).unwrap();
+    let backend = backend();
+    let _disarm = Disarm;
+
+    // An injected finish() failure aborts the run with a transient
+    // typed error and leaves the store openable; a clean rerun lands.
+    let store_a = root.join("store-a");
+    let mut pipe = Pipeline::new(
+        &ds,
+        backend.as_ref(),
+        SimCluster::new(ClusterSpec::lncc()),
+        pipeline_cfg(&store_a),
+    );
+    fault::install("seed=1,segment.finish=io:1:1").unwrap();
+    let err = match pipe.run_slice(Method::Baseline, 1, TypeSet::Four) {
+        Ok(_) => panic!("injected finish fault did not abort the run"),
+        Err(e) => e,
+    };
+    assert!(err.is_transient(), "finish fault should surface as transient: {err}");
+    fault::clear();
+    pipe.run_slice(Method::Baseline, 1, TypeSet::Four).unwrap();
+    let engine = QueryEngine::open(&store_a, QueryOptions::default()).unwrap();
+    engine.store().verify().unwrap();
+    drop(engine);
+
+    // Corruption injected *while writing* hashes the original bytes,
+    // so the damage stays detectable: the run completes, verify flags
+    // the segment, and the query path refuses to serve from it.
+    let store_b = root.join("store-b");
+    let mut pipe_b = Pipeline::new(
+        &ds,
+        backend.as_ref(),
+        SimCluster::new(ClusterSpec::lncc()),
+        pipeline_cfg(&store_b),
+    );
+    fault::install("seed=1,segment.write=corrupt:1:1").unwrap();
+    pipe_b.run_slice(Method::Baseline, 1, TypeSet::Four).unwrap();
+    fault::clear();
+    let engine = QueryEngine::open(&store_b, QueryOptions::default()).unwrap();
+    let report = engine.store().verify_report();
+    assert_eq!(report.n_bad(), 1, "corrupt write must fail verification");
+    let dims = engine.dims();
+    let err = match engine.region(&RegionQuery::slice(&dims, 1)) {
+        Ok(_) => panic!("corrupt-on-write segment served an answer"),
+        Err(e) => e,
+    };
+    assert!(matches!(err, PdfflowError::Format(_)));
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn transient_catalog_and_loader_faults_recover_bit_identically() {
+    let _g = gate();
+    let root = root_dir("transient");
+    let ds = SyntheticDataset::generate(&DatasetSpec::tiny(), root.join("data")).unwrap();
+    let backend = backend();
+    let store = root.join("store");
+    let mut pipe = Pipeline::new(
+        &ds,
+        backend.as_ref(),
+        SimCluster::new(ClusterSpec::lncc()),
+        pipeline_cfg(&store),
+    );
+    pipe.run_slice(Method::Baseline, 1, TypeSet::Four).unwrap();
+    drop(pipe);
+    let pristine_bytes = std::fs::read(store.join("slice1_baseline_4_t_g0.seg")).unwrap();
+
+    let _disarm = Disarm;
+
+    // Transient NFS blips during loading retry through to a run whose
+    // output is byte-identical to the unfaulted one.
+    let store2 = root.join("store2");
+    fault::install("seed=2,loader.read=io:1:2,retry=4:0").unwrap();
+    let attempts0 = counter(fault::RETRY_ATTEMPTS);
+    let mut pipe2 = Pipeline::new(
+        &ds,
+        backend.as_ref(),
+        SimCluster::new(ClusterSpec::lncc()),
+        pipeline_cfg(&store2),
+    );
+    pipe2.run_slice(Method::Baseline, 1, TypeSet::Four).unwrap();
+    assert!(counter(fault::RETRY_ATTEMPTS) - attempts0 >= 2);
+    assert_eq!(
+        std::fs::read(store2.join("slice1_baseline_4_t_g0.seg")).unwrap(),
+        pristine_bytes,
+        "loader retries changed the persisted output"
+    );
+    fault::clear();
+
+    // Transient catalog-read faults retry through a cold store open.
+    fault::install("seed=2,catalog.load=io:1:2,retry=4:0").unwrap();
+    let attempts1 = counter(fault::RETRY_ATTEMPTS);
+    let opened = PdfStore::open(&store).unwrap();
+    opened.verify().unwrap();
+    assert!(counter(fault::RETRY_ATTEMPTS) - attempts1 >= 2);
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn scrub_finds_then_repairs_every_quarantined_segment() {
+    let _g = gate();
+    let root = root_dir("scrub");
+    let (_ds, store) = build_two_gen(&root);
+    let pristine = pristine_fingerprint(&store);
+    let g1 = store.join(NEWEST_GEN);
+    let len = std::fs::metadata(&g1).unwrap().len() as usize;
+    flip_byte(&g1, len / 3);
+
+    // Read-only scrub: reports the damage, changes nothing on disk.
+    let report = scrub_store(&store, false).unwrap();
+    assert_eq!(report.total_bad(), 1);
+    assert!(report.needs_attention());
+    assert!(!report.runs[0].repaired);
+    assert!(store.join(NEWEST_GEN).exists());
+
+    // Repair: the surviving generation is rewritten as a fresh dense
+    // generation and the damaged files are retired.
+    let repaired = scrub_store(&store, true).unwrap();
+    assert_eq!(repaired.total_bad(), 1);
+    assert!(!repaired.needs_attention(), "repair left damage behind");
+    assert!(repaired.runs[0].repaired);
+    assert_eq!(repaired.runs[0].repaired_gen, Some(2));
+    assert_eq!(repaired.runs[0].retired_files, 2);
+
+    let engine = QueryEngine::open(&store, QueryOptions::default()).unwrap();
+    engine.store().verify().unwrap();
+    assert!(!engine.store().is_degraded());
+    assert_eq!(engine.store().n_segments(), 1);
+    assert_eq!(
+        try_fingerprint(&engine, 1).unwrap(),
+        pristine,
+        "scrub repair changed query answers"
+    );
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn serve_front_flags_degraded_answers_per_request() {
+    let _g = gate();
+    let root = root_dir("serve");
+    let ds = SyntheticDataset::generate(&DatasetSpec::tiny(), root.join("data")).unwrap();
+    let backend = backend();
+    let store = root.join("store");
+    let mut pipe = Pipeline::new(
+        &ds,
+        backend.as_ref(),
+        SimCluster::new(ClusterSpec::lncc()),
+        pipeline_cfg(&store),
+    );
+    // Slice 1 gets two generations (fallback target), slice 2 one.
+    pipe.run_slice(Method::Baseline, 1, TypeSet::Four).unwrap();
+    pipe.run_slice(Method::Baseline, 1, TypeSet::Four).unwrap();
+    pipe.run_slice(Method::Baseline, 2, TypeSet::Four).unwrap();
+    drop(pipe);
+
+    let n = ds.spec.dims.slice_points() as u64;
+    let id_z1 = PointId(n);
+    let id_z2 = PointId(2 * n);
+    let engine = QueryEngine::open(&store, QueryOptions::default()).unwrap();
+    let direct_z1 = engine.point_by_id(id_z1).unwrap();
+    drop(engine);
+
+    let g1 = store.join(NEWEST_GEN);
+    let len = std::fs::metadata(&g1).unwrap().len() as usize;
+    flip_byte(&g1, len / 3);
+
+    let engine = QueryEngine::open(&store, QueryOptions::default()).unwrap();
+    let front = ServeFront::new(
+        engine,
+        ServeOptions {
+            max_in_flight: 4,
+            queue_depth: 4,
+        },
+    );
+    // Healthy slice before any damage is discovered: not degraded.
+    let served = front.submit(Request::Point(id_z2)).unwrap();
+    assert!(!served.degraded);
+    // The damaged slice quarantines mid-query and answers from the
+    // prior generation — same bits, flagged.
+    let served = front.submit(Request::Point(id_z1)).unwrap();
+    assert!(served.degraded, "fallback answer must be flagged degraded");
+    match served.reply {
+        Reply::Point(rec) => assert_eq!(rec, direct_z1),
+        other => panic!("unexpected reply {other:?}"),
+    }
+    // The healthy slice stays unflagged even with the store degraded.
+    let served = front.submit(Request::Point(id_z2)).unwrap();
+    assert!(!served.degraded, "degradation must not bleed into healthy slices");
+    assert_eq!(front.metrics().class(Class::Point).degraded, 1);
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn randomized_fault_rounds_never_silently_corrupt() {
+    let _g = gate();
+    let seed = torture_seed();
+    let root = root_dir("rand");
+    let (_ds, store) = build_two_gen(&root);
+    let pristine = pristine_fingerprint(&store);
+
+    let _disarm = Disarm;
+    let mut rng = Rng::new(seed ^ 0x7042_7042_7042_7042);
+    for round in 0..4 {
+        // Derive an arbitrary fault cocktail from the torture seed: any
+        // combination is legal, the invariant is universal.
+        let sites = ["segment.read=io", "segment.read=corrupt", "catalog.load=io"];
+        let site = sites[rng.below(3)];
+        let prob = [0.4, 0.8, 1.0][rng.below(3)];
+        let max = 1 + rng.below(3);
+        let spec = format!("seed={},{site}:{prob}:{max},retry=2:0", rng.next_u64() & 0xffff);
+        fault::install(&spec).unwrap();
+        match QueryEngine::open(&store, QueryOptions::default()) {
+            Err(e) => {
+                assert!(!e.to_string().is_empty(), "round {round}: untyped open ({spec})");
+            }
+            Ok(engine) => match try_fingerprint(&engine, 1) {
+                Ok(fp) => {
+                    assert_eq!(fp, pristine, "round {round}: silent corruption ({spec})");
+                }
+                Err(e) => {
+                    assert!(!e.to_string().is_empty(), "round {round}: untyped error ({spec})");
+                }
+            },
+        }
+        fault::clear();
+    }
+    std::fs::remove_dir_all(&root).unwrap();
+}

@@ -343,8 +343,11 @@ fn serve_front_enforces_admission_caps_under_closed_loop_load() {
     };
     let front = ServeFront::new(engine, opts);
 
-    // Replies through the front match direct engine answers.
-    match front.submit(Request::Point(first_id)).unwrap() {
+    // Replies through the front match direct engine answers, and a
+    // healthy store never serves degraded.
+    let served = front.submit(Request::Point(first_id)).unwrap();
+    assert!(!served.degraded, "healthy store flagged degraded");
+    match served.reply {
         pdfflow::serve::Reply::Point(rec) => assert_eq!(rec, direct),
         other => panic!("unexpected reply {other:?}"),
     }
