@@ -1,16 +1,26 @@
 #!/usr/bin/env sh
-# Capture a before/after pair of tier1-smoke telemetry snapshots with
-# the binary's own exporter, so perf PRs can commit real evidence
-# instead of claims.
+# Capture a before/after pair of telemetry snapshots with the binary's
+# own exporter, so perf PRs can commit real evidence instead of claims.
 #
 #   perf/capture_pair.sh <before-rev> [<after-rev>] [<tag>]
+#   PROFILE=serve perf/capture_pair.sh <before-rev> [<after-rev>] [<tag>]
 #
 # For each rev this clones the repo into a temp dir at exactly that
 # commit (detached, so the binary's pure-fs git_rev reader records the
-# raw hash), builds the release binary, runs the tier1-smoke workload
-# (`run --preset small --lines 4`) with --metrics-out, and validates
-# the snapshot with the same binary. Output lands at
-# perf/<tag>-{before,after}-tier1-smoke.metrics.json (+ .prom).
+# raw hash), builds the release binary, runs the selected workload with
+# --metrics-out, and validates the snapshot with the same binary.
+# Output lands at perf/<tag>-{before,after}-<profile>.metrics.json
+# (+ .prom).
+#
+# Profiles (PROFILE env var):
+#   tier1-smoke (default)  `run --preset small --lines 4` — the fit
+#                          kernel workload; compare span.fit.ns.
+#   serve                  build a small store, then drive the socket
+#                          serving front in closed loop
+#                          (`serve --listen 127.0.0.1:0 --clients 8`) —
+#                          compare serve.<class>.latency_ns, the
+#                          serve.*.cache_hit family and the
+#                          store.read_path.{mmap,cached} split.
 #
 # after-rev defaults to HEAD; tag defaults to "pair". Example for the
 # PR 8 SIMD evidence:
@@ -19,15 +29,18 @@
 #
 # Revisions that already stamp provenance.report_fingerprint (PR 8
 # fix-up onward) let you check "same results, less time" straight from
-# the two JSON files. When the before rev predates the field, compare
-# the `report fingerprint` stdout line of the after binary run with
-# PDFFLOW_SIMD=off vs auto instead — same code path the pair is
-# claiming didn't change.
+# the two JSON files for the tier1-smoke profile. When the before rev
+# predates the field, compare the `report fingerprint` stdout line of
+# the after binary run with PDFFLOW_SIMD=off vs auto instead — same
+# code path the pair is claiming didn't change. The serve profile does
+# not stamp a fingerprint (results identity is pinned by
+# tests/serve_net.rs bit-equality instead).
 set -eu
 
-BEFORE=${1:?usage: perf/capture_pair.sh <before-rev> [<after-rev>] [<tag>]}
+BEFORE=${1:?usage: [PROFILE=serve] perf/capture_pair.sh <before-rev> [<after-rev>] [<tag>]}
 AFTER=${2:-HEAD}
 TAG=${3:-pair}
+PROFILE=${PROFILE:-tier1-smoke}
 REPO=$(cd "$(dirname "$0")/.." && pwd)
 OUT=$REPO/perf
 WORK=$(mktemp -d)
@@ -41,25 +54,57 @@ capture() { # $1 = rev-ish, $2 = snapshot path
     echo "== building $rev"
     (cd "$clone" && cargo build -q --release)
     bin=$clone/target/release/pdfflow
-    echo "== capturing $2"
-    (cd "$clone" && "$bin" run --preset small --lines 4 --metrics-out "$2")
+    echo "== capturing $2 ($PROFILE)"
+    case "$PROFILE" in
+    serve)
+        store=$clone/tmp-serve-store
+        (cd "$clone" && "$bin" store --preset small --lines 8 --store-dir "$store")
+        # Server + closed-loop driver in one process: the socket front
+        # listens on an ephemeral loopback port, 8 client connections
+        # drive the mixed request classes, and the snapshot lands on
+        # exit with the serve/net/read-path counter families.
+        (cd "$clone" && "$bin" serve --store-dir "$store" --listen 127.0.0.1:0 \
+            --max-in-flight 4 --queue-depth 8 --clients 8 --queries 4000 \
+            --metrics-out "$2")
+        ;;
+    tier1-smoke)
+        (cd "$clone" && "$bin" run --preset small --lines 4 --metrics-out "$2")
+        ;;
+    *)
+        echo "unknown PROFILE '$PROFILE' (tier1-smoke | serve)" >&2
+        exit 2
+        ;;
+    esac
     (cd "$clone" && "$bin" telemetry validate "$2")
 }
 
-capture "$BEFORE" "$OUT/$TAG-before-tier1-smoke.metrics.json"
-capture "$AFTER" "$OUT/$TAG-after-tier1-smoke.metrics.json"
+capture "$BEFORE" "$OUT/$TAG-before-$PROFILE.metrics.json"
+capture "$AFTER" "$OUT/$TAG-after-$PROFILE.metrics.json"
 
 if command -v python3 >/dev/null 2>&1; then
-    python3 - "$OUT/$TAG-before-tier1-smoke.metrics.json" \
-              "$OUT/$TAG-after-tier1-smoke.metrics.json" <<'EOF'
-import json, sys
+    PROFILE="$PROFILE" python3 - "$OUT/$TAG-before-$PROFILE.metrics.json" \
+              "$OUT/$TAG-after-$PROFILE.metrics.json" <<'EOF'
+import json, os, sys
+profile = os.environ.get("PROFILE", "tier1-smoke")
 pair = [json.load(open(p)) for p in sys.argv[1:3]]
 for label, snap in zip(("before", "after"), pair):
     prov = snap["provenance"]
-    fit = snap["metrics"].get("span.fit.ns", {})
-    print(f"{label}: git_rev {prov['git_rev'][:12]} "
-          f"fingerprint {prov.get('report_fingerprint', '-')} "
-          f"span.fit.ns p50 {fit.get('p50', '-')} count {fit.get('count', '-')}")
+    m = snap["metrics"]
+    if profile == "serve":
+        lat = m.get("serve.point.latency_ns", {})
+        hits = sum(m.get(f"serve.{c}.cache_hit", {}).get("value", 0)
+                   for c in ("point", "region", "analytic", "box", "radius", "knn", "diff"))
+        print(f"{label}: git_rev {prov['git_rev'][:12]} "
+              f"serve.point.latency_ns p50 {lat.get('p50', '-')} "
+              f"count {lat.get('count', '-')} cache_hits {hits:.0f} "
+              f"reads mmap/cached "
+              f"{m.get('store.read_path.mmap', {}).get('value', 0):.0f}/"
+              f"{m.get('store.read_path.cached', {}).get('value', 0):.0f}")
+    else:
+        fit = m.get("span.fit.ns", {})
+        print(f"{label}: git_rev {prov['git_rev'][:12]} "
+              f"fingerprint {prov.get('report_fingerprint', '-')} "
+              f"span.fit.ns p50 {fit.get('p50', '-')} count {fit.get('count', '-')}")
 fps = [p["provenance"].get("report_fingerprint") for p in pair]
 if all(fps):
     print("report fingerprints match" if fps[0] == fps[1]

@@ -14,9 +14,11 @@
 //! Two more paths are exercised on every run (so the CI bench-smoke
 //! step covers them on every push): a slice is **rerun and compacted**
 //! (`pdfstore::compact`) and the same queries must answer bit-identical
-//! against the compacted store; and a **closed-loop serving pass**
-//! drives the admission-controlled `ServeFront`, asserting its
-//! in-flight / queue-depth caps and recording the serving row.
+//! against the compacted store; and **two closed-loop serving passes**
+//! drive the admission-controlled `ServeFront` — once in-process
+//! (`mode: "serve_inproc"`) and once through the socket front over real
+//! loopback TCP (`mode: "serve"`, the row CI asserts on) — each
+//! asserting the in-flight / queue-depth caps.
 //!
 //! `--json` (or PDFFLOW_BENCH_JSON=1) writes `BENCH_queries.json` at
 //! the repo root in the shared cross-bench schema
@@ -25,6 +27,7 @@
 //! `mode: "spatial_*"` rows ride along). `PDFFLOW_BENCH_SMOKE=1`
 //! shrinks the workload to a CI smoke profile.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use pdfflow::bench::{write_bench_json, BenchRow, QueryStoreFixture};
@@ -32,6 +35,7 @@ use pdfflow::cube::CubeDims;
 use pdfflow::executor::Executor;
 use pdfflow::pdfstore::{compact_run, QueryEngine, RegionQuery};
 use pdfflow::runtime::hostpool;
+use pdfflow::serve::net::{closed_loop_net, NetOptions, NetServer};
 use pdfflow::serve::{closed_loop, ServeFront, ServeOptions};
 use pdfflow::spatial::{BoxQuery, KnnQuery, RadiusQuery};
 use pdfflow::util::json::Json;
@@ -315,8 +319,12 @@ fn main() {
     // --- Serving tier: closed-loop clients through the admission-
     // controlled front door (the north-star shape: bounded concurrency,
     // overflow shed, not queued without bound). The request mix now
-    // includes spatial box / radius / kNN classes.
+    // includes spatial box / radius / kNN classes. Two rows land: the
+    // in-process pass (`serve_inproc`, pure front-door cost) and the
+    // socket pass (`serve`, the full wire stack: loopback TCP, frame
+    // codec, dispatch queue), so transport overhead stays visible.
     let clients = 8usize;
+    let requests_per_client = if smoke { 200 } else { 1_000 };
     let serve_opts = ServeOptions {
         max_in_flight: 4,
         queue_depth: 8,
@@ -325,10 +333,10 @@ fn main() {
         fixture.engine(CACHE_BYTES).expect("open store for serving"),
         serve_opts,
     );
-    let load = closed_loop(&front, clients, if smoke { 200 } else { 1_000 }, 11);
+    let load = closed_loop(&front, clients, requests_per_client, 11);
     let sm = &load.metrics;
     println!(
-        "serve: {} clients closed-loop → {:.0} q/s, {} completed / {} shed, peaks {} in-flight / {} queued",
+        "serve(inproc): {} clients closed-loop → {:.0} q/s, {} completed / {} shed, peaks {} in-flight / {} queued",
         clients,
         load.throughput,
         sm.total_completed(),
@@ -342,8 +350,53 @@ fn main() {
         threads: clients,
         throughput: load.throughput,
         extra: vec![
-            ("mode", Json::Str("serve".into())),
+            ("mode", Json::Str("serve_inproc".into())),
+            ("transport", Json::Str("inproc".into())),
             ("shed", Json::Num(sm.total_shed() as f64)),
+            ("max_in_flight", Json::Num(serve_opts.max_in_flight as f64)),
+            ("queue_depth", Json::Num(serve_opts.queue_depth as f64)),
+        ],
+    });
+
+    let front = Arc::new(ServeFront::new(
+        fixture.engine(CACHE_BYTES).expect("open store for socket serving"),
+        serve_opts,
+    ));
+    let server = NetServer::start(
+        Arc::clone(&front),
+        "127.0.0.1:0",
+        NetOptions {
+            workers: serve_opts.max_in_flight,
+            queue_depth: serve_opts.queue_depth,
+        },
+    )
+    .expect("socket front");
+    let net_load = closed_loop_net(&server.addr().to_string(), clients, requests_per_client, 11)
+        .expect("socket closed loop");
+    server.join();
+    assert_eq!(
+        net_load.completed + net_load.shed + net_load.errors,
+        net_load.requests,
+        "socket closed loop lost requests: {net_load:?}"
+    );
+    let nm = front.metrics();
+    println!(
+        "serve(socket): {} clients closed-loop → {:.0} q/s, {} completed / {} shed, peaks {} in-flight / {} queued",
+        clients,
+        net_load.throughput,
+        net_load.completed,
+        net_load.shed,
+        nm.peak_in_flight,
+        nm.peak_queued
+    );
+    assert!(nm.peak_in_flight <= serve_opts.max_in_flight, "in-flight cap violated");
+    rows.push(BenchRow {
+        threads: clients,
+        throughput: net_load.throughput,
+        extra: vec![
+            ("mode", Json::Str("serve".into())),
+            ("transport", Json::Str("socket".into())),
+            ("shed", Json::Num(net_load.shed as f64)),
             ("max_in_flight", Json::Num(serve_opts.max_in_flight as f64)),
             ("queue_depth", Json::Num(serve_opts.queue_depth as f64)),
         ],

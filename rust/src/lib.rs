@@ -84,13 +84,15 @@ pub mod prelude {
     pub use crate::executor::Executor;
     pub use crate::mltree::DecisionTree;
     pub use crate::pdfstore::{
-        compact_run, PdfStore, QueryEngine, QueryOptions, RegionQuery, RunKey, RunSelector,
+        compact_run, PdfStore, QueryEngine, QueryOptions, ReadPath, RegionQuery, RunKey,
+        RunSelector,
     };
     #[cfg(feature = "xla")]
     pub use crate::runtime::Engine;
     pub use crate::runtime::{
         make_backend, Backend, BackendKind, BackendOptions, HostPool, NativeBackend,
     };
+    pub use crate::serve::net::{closed_loop_net, Client, NetOptions, NetServer};
     pub use crate::serve::{closed_loop, ServeFront, ServeOptions};
     pub use crate::spatial::{BoxQuery, KnnQuery, RadiusQuery, RunDiff, SpatialAggregate};
     pub use crate::stats::DistType;

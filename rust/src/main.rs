@@ -24,7 +24,11 @@
 //!                   [--quantile Q] [--threads N] [--host-threads N] [--cache-mb MB] [--verify]
 //! pdfflow serve     --store-dir DIR [--run ID] [--clients N] [--queries N]
 //!                   [--max-in-flight N] [--queue-depth N] [--bench]
-//!                   closed-loop load through the admission-controlled serving tier
+//!                   [--read-path mmap|cached] [--result-cache-mb MB]
+//!                   [--listen ADDR]                        serve over a TCP socket; --clients 0
+//!                                                          serves until a wire shutdown frame
+//! pdfflow serve     --connect ADDR [--clients N] [--queries N] [--shutdown]
+//!                   drive a remote serve socket (client only, no local store)
 //! pdfflow telemetry validate <snapshot.json>             check an exported metrics snapshot
 //! ```
 //!
@@ -48,9 +52,11 @@ use pdfflow::coordinator::sampling::{full_slice_features, run_sampling};
 use pdfflow::coordinator::{mlmodel, Method, Pipeline, Sampler, TypeSet};
 use pdfflow::datagen::SyntheticDataset;
 use pdfflow::pdfstore::{
-    compact_run, validate_run_id, PdfStore, QueryEngine, QueryOptions, RegionQuery, RunSelector,
+    compact_run, validate_run_id, PdfStore, QueryEngine, QueryOptions, ReadPath, RegionQuery,
+    RunSelector,
 };
 use pdfflow::runtime::BackendKind;
+use pdfflow::serve::net::{closed_loop_net, Client, NetOptions, NetServer};
 use pdfflow::serve::{closed_loop, ServeFront, ServeOptions};
 use pdfflow::spatial::{BoxQuery, KnnQuery, RadiusQuery};
 use pdfflow::storage::{DatasetReader, WindowCache};
@@ -62,7 +68,7 @@ use pdfflow::util::timing::{fmt_bytes, fmt_secs};
 fn main() {
     let args = match Args::parse(
         std::env::args().skip(1),
-        &["tune", "full", "verbose", "verify", "bench", "agg", "repair"],
+        &["tune", "full", "verbose", "verify", "bench", "agg", "repair", "shutdown"],
     ) {
         Ok(a) => a,
         Err(e) => {
@@ -1031,15 +1037,60 @@ fn cmd_query(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Closed-loop load through the admission-controlled serving tier:
-/// `--clients` synchronous clients drive point/region/analytic queries
-/// against one `ServeFront`; the in-flight and queue-depth caps bound
-/// concurrency, the overflow is shed with an error. `--bench` upserts
-/// the serving row into BENCH_queries.json next to the raw engine rows.
+/// Closed-loop load through the admission-controlled serving tier.
+///
+/// Three modes:
+/// * default — in-process: `--clients` synchronous clients drive the
+///   request mix straight against one `ServeFront`;
+/// * `--listen ADDR` — the same front behind the TCP socket endpoint;
+///   `--clients 0` serves until a wire `shutdown` frame arrives, any
+///   other count self-drives the closed loop over real loopback
+///   connections (wire encode/decode in every measured latency);
+/// * `--connect ADDR` — pure client: drive a remote server, no store
+///   opened locally; `--shutdown` asks the server to stop afterwards.
+///
+/// `--bench` upserts the serving row into BENCH_queries.json next to
+/// the raw engine rows (socket-driven when `--listen` is active).
 fn cmd_serve(args: &Args) -> Result<()> {
+    let defaults = ServeOptions::default();
+    let max_in_flight = args
+        .usize_or("max-in-flight", defaults.max_in_flight)
+        .map_err(|e| anyhow!(e))?
+        .max(1);
+    let queue_depth = args
+        .usize_or("queue-depth", 2 * max_in_flight)
+        .map_err(|e| anyhow!(e))?;
+    let clients_raw = args
+        .usize_or("clients", 2 * (max_in_flight + queue_depth))
+        .map_err(|e| anyhow!(e))?;
+    let total = args.usize_or("queries", 20_000).map_err(|e| anyhow!(e))?;
+
+    if let Some(addr) = args.opt("connect") {
+        // Client mode: everything lives on the server side.
+        let clients = clients_raw.max(1);
+        let per_client = total.div_ceil(clients).max(1);
+        let rep = closed_loop_net(addr, clients, per_client, 42)?;
+        println!(
+            "drove {} over {} connections: {} ok / {} shed / {} errors of {} in {} — {:.0} q/s",
+            addr,
+            rep.clients,
+            rep.completed,
+            rep.shed,
+            rep.errors,
+            rep.requests,
+            fmt_secs(rep.secs),
+            rep.throughput,
+        );
+        if args.flag("shutdown") {
+            Client::connect(addr)?.shutdown_server()?;
+            println!("server at {addr} acknowledged shutdown");
+        }
+        return Ok(());
+    }
+
     let store_dir = args
         .opt("store-dir")
-        .ok_or_else(|| anyhow!("serve needs --store-dir DIR"))?;
+        .ok_or_else(|| anyhow!("serve needs --store-dir DIR (or --connect ADDR)"))?;
     flight::set_dump_dir(store_dir);
     if let Some(t) = args.opt("host-threads") {
         let n = t.parse::<usize>().context("--host-threads")?.max(1);
@@ -1052,38 +1103,36 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Some(mb) => mb.parse::<u64>().context("--cache-mb")? << 20,
         None => 64 << 20,
     };
-    let defaults = ServeOptions::default();
-    let max_in_flight = args
-        .usize_or("max-in-flight", defaults.max_in_flight)
-        .map_err(|e| anyhow!(e))?
-        .max(1);
-    let queue_depth = args
-        .usize_or("queue-depth", 2 * max_in_flight)
-        .map_err(|e| anyhow!(e))?;
-    let clients = args
-        .usize_or("clients", 2 * (max_in_flight + queue_depth))
-        .map_err(|e| anyhow!(e))?
-        .max(1);
-    let total = args.usize_or("queries", 20_000).map_err(|e| anyhow!(e))?;
-    let per_client = total.div_ceil(clients).max(1);
+    // Serving defaults to the zero-copy mmap read path (PDFFLOW_READ_PATH
+    // still wins when set); batch `query` keeps the block cache default.
+    let read_path = match args.opt("read-path") {
+        Some(s) => ReadPath::parse(s)
+            .ok_or_else(|| anyhow!("--read-path must be `mmap` or `cached`, got {s:?}"))?,
+        None => ReadPath::Mmap,
+    };
+    let result_cache_bytes = match args.opt("result-cache-mb") {
+        Some(mb) => mb.parse::<u64>().context("--result-cache-mb")? << 20,
+        None => pdfflow::serve::rescache::DEFAULT_RESULT_CACHE_BYTES,
+    };
 
     let engine = QueryEngine::open_run(
         store_dir,
         RunSelector::from_opt(args.opt("run")),
         QueryOptions {
             cache_bytes,
+            read_path,
             ..QueryOptions::default()
         },
     )?;
     println!(
-        "serving store {} run {}: {} records, caps {} in-flight / {} queued, {} clients x {} requests",
+        "serving store {} run {}: {} records, caps {} in-flight / {} queued, read path {:?}, result cache {} MiB",
         store_dir,
         engine.store().run_key().label(),
         engine.store().n_records(),
         max_in_flight,
         queue_depth,
-        clients,
-        per_client,
+        engine.read_path(),
+        result_cache_bytes >> 20,
     );
     let front = ServeFront::new(
         engine,
@@ -1091,10 +1140,78 @@ fn cmd_serve(args: &Args) -> Result<()> {
             max_in_flight,
             queue_depth,
         },
-    );
+    )
+    .with_result_cache(result_cache_bytes);
     // Publish the per-class latency/queue histograms so --metrics-out
     // snapshots carry the full serve distribution, not just the table.
     front.register_metrics();
+
+    if let Some(listen) = args.opt("listen") {
+        let front = std::sync::Arc::new(front);
+        let server = NetServer::start(
+            std::sync::Arc::clone(&front),
+            listen,
+            NetOptions {
+                workers: max_in_flight,
+                queue_depth,
+            },
+        )?;
+        let addr = server.addr();
+        println!("listening on {addr}");
+        if clients_raw == 0 {
+            // Serve until a client sends the wire `shutdown` frame.
+            server.wait();
+            println!("shutdown frame received, drained and stopped");
+        } else {
+            let per_client = total.div_ceil(clients_raw).max(1);
+            let rep = closed_loop_net(&addr.to_string(), clients_raw, per_client, 42)?;
+            server.join();
+            println!(
+                "served {} of {} socket requests in {} — {:.0} q/s, {} shed on wire",
+                rep.completed,
+                rep.requests,
+                fmt_secs(rep.secs),
+                rep.throughput,
+                rep.shed,
+            );
+            if args.flag("bench") {
+                let m = front.metrics();
+                let path = pdfflow::bench::upsert_bench_row(
+                    "queries",
+                    "serve",
+                    pdfflow::bench::BenchRow {
+                        threads: rep.clients,
+                        throughput: rep.throughput,
+                        extra: vec![
+                            ("transport", pdfflow::util::json::Json::Str("socket".into())),
+                            ("shed", pdfflow::util::json::Json::Num(m.total_shed() as f64)),
+                            (
+                                "max_in_flight",
+                                pdfflow::util::json::Json::Num(max_in_flight as f64),
+                            ),
+                            (
+                                "queue_depth",
+                                pdfflow::util::json::Json::Num(queue_depth as f64),
+                            ),
+                        ],
+                    },
+                )?;
+                println!("serving row recorded in {}", path.display());
+            }
+        }
+        print!("{}", render_text(&[Section::Serve(&front.metrics())]));
+        if let Some(stats) = front.result_cache().map(|c| c.stats()) {
+            println!(
+                "result cache: {} hits / {} misses, {} entries, {} invalidations",
+                stats.hits, stats.misses, stats.entries, stats.invalidations,
+            );
+        }
+        write_metrics_if_asked(args)?;
+        return Ok(());
+    }
+
+    let clients = clients_raw.max(1);
+    let per_client = total.div_ceil(clients).max(1);
     let rep = closed_loop(&front, clients, per_client, 42);
     let m = &rep.metrics;
     println!(
@@ -1108,6 +1225,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         m.peak_queued,
     );
     print!("{}", render_text(&[Section::Serve(m)]));
+    if let Some(stats) = front.result_cache().map(|c| c.stats()) {
+        println!(
+            "result cache: {} hits / {} misses, {} entries, {} invalidations",
+            stats.hits, stats.misses, stats.entries, stats.invalidations,
+        );
+    }
     if args.flag("bench") {
         let path = pdfflow::bench::upsert_bench_row(
             "queries",
@@ -1116,6 +1239,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 threads: clients,
                 throughput: rep.throughput,
                 extra: vec![
+                    ("transport", pdfflow::util::json::Json::Str("inproc".into())),
                     ("shed", pdfflow::util::json::Json::Num(m.total_shed() as f64)),
                     (
                         "max_in_flight",

@@ -82,7 +82,9 @@ pub use catalog::{
     LEGACY_MANIFEST_NAME,
 };
 pub use compact::{compact_run, CompactReport};
-pub use query::{CacheMeters, QueryEngine, QueryOptions, RegionQuery, RegionSummary};
+pub use query::{
+    CacheMeters, QueryEngine, QueryOptions, ReadPath, RegionQuery, RegionSummary, ERROR_HIST_BINS,
+};
 pub use scrub::{scrub_store, ScrubReport, ScrubRun, ScrubSegment};
 pub use segment::{SegmentMeta, SegmentReader, SegmentWriter, WindowEntry};
 
@@ -565,6 +567,28 @@ impl PdfStore {
     /// off it.
     pub fn epoch(&self) -> u64 {
         self.epoch.load(Relaxed)
+    }
+
+    /// Identity stamp of the on-disk catalog generation this store was
+    /// opened against. Catalog saves are atomic tmp+rename swaps, so
+    /// every rerun / compaction / scrub repair publishes a *new inode*
+    /// — hashing `(ino, mtime, mtime_nsec, len)` of `CATALOG.json`
+    /// yields a value that changes whenever any of those paths swap the
+    /// catalog out from under a long-lived reader. Serve-side result
+    /// caches key entries off this (combined with [`Self::epoch`]) so
+    /// stale answers are impossible across catalog swaps. Returns 0
+    /// when the stat fails (treated as "always stale").
+    pub fn catalog_stamp(&self) -> u64 {
+        use std::os::unix::fs::MetadataExt;
+        let Ok(md) = std::fs::metadata(self.dir.join(CATALOG_NAME)) else {
+            return 0;
+        };
+        let mut h = Fnv64::new();
+        h.update(&md.ino().to_le_bytes());
+        h.update(&md.mtime().to_le_bytes());
+        h.update(&md.mtime_nsec().to_le_bytes());
+        h.update(&md.len().to_le_bytes());
+        h.finish()
     }
 
     /// Segments currently quarantined (open failures included).

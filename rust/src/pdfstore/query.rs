@@ -141,6 +141,39 @@ impl RegionSummary {
     }
 }
 
+/// Which physical path serves window payloads.
+///
+/// Both paths return bit-identical records — `Mmap` is a latency /
+/// memory-traffic optimization, never a semantic one — and `Mmap`
+/// silently degrades to `Cached` per read wherever no file mapping is
+/// available (non-unix build, `--no-default-features`, or a failed
+/// mmap syscall). The `store.read_path.{mmap,cached}` counter pair
+/// records which path actually served each read.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ReadPath {
+    /// Decoded window blocks round-trip through the sharded LRU block
+    /// cache (the original path; default for batch/query workloads).
+    #[default]
+    Cached,
+    /// Borrow window payloads from the mmap'd segment file and decode
+    /// on the fly — no block cache, no read syscall, the kernel page
+    /// cache is the only copy. Per-window checksums still validate on
+    /// first touch per reader, and corruption quarantines exactly like
+    /// the cached path. The serve tier defaults to this.
+    Mmap,
+}
+
+impl ReadPath {
+    /// Parse a CLI/env spelling (`mmap` | `cached`).
+    pub fn parse(s: &str) -> Option<ReadPath> {
+        match s {
+            "mmap" => Some(ReadPath::Mmap),
+            "cached" => Some(ReadPath::Cached),
+            _ => None,
+        }
+    }
+}
+
 /// Engine construction knobs (config key `pipeline.query_cache_bytes`,
 /// CLI `--cache-mb` / `--threads`).
 #[derive(Clone, Copy, Debug)]
@@ -156,6 +189,8 @@ pub struct QueryOptions {
     /// [`GridIndex`]; `None` → [`CellGrid::default_for`] (~8 cells per
     /// axis). CLI `--cells`.
     pub cell: Option<[usize; 3]>,
+    /// Window read path (`PDFFLOW_READ_PATH=mmap|cached` overrides).
+    pub read_path: ReadPath,
 }
 
 impl Default for QueryOptions {
@@ -165,6 +200,7 @@ impl Default for QueryOptions {
             shards: 8,
             workers: hostpool::default_budget(),
             cell: None,
+            read_path: ReadPath::default(),
         }
     }
 }
@@ -184,16 +220,30 @@ pub struct QueryEngine {
     /// quarantine invalidates it — first spatial query per epoch pays
     /// the (cheap, catalog-only) build; point/region paths never do.
     index: Mutex<Option<(u64, Arc<GridIndex>)>>,
+    /// Which physical path serves window payloads (see [`ReadPath`]).
+    read_path: ReadPath,
+    /// Reads served zero-copy out of segment mappings.
+    ctr_mmap: Arc<crate::telemetry::Counter>,
+    /// Reads served through the block cache (hits and fills).
+    ctr_cached: Arc<crate::telemetry::Counter>,
 }
 
 impl QueryEngine {
     pub fn new(store: PdfStore, opts: QueryOptions) -> QueryEngine {
+        let read_path = match std::env::var("PDFFLOW_READ_PATH").ok().as_deref() {
+            Some(s) => ReadPath::parse(s).unwrap_or(opts.read_path),
+            None => opts.read_path,
+        };
+        let reg = crate::telemetry::Registry::global();
         QueryEngine {
             store,
             cache: ShardedLru::new(opts.cache_bytes, opts.shards),
             exec: Executor::new(opts.workers.max(1)),
             cell: opts.cell,
             index: Mutex::new(None),
+            read_path,
+            ctr_mmap: reg.counter("store.read_path.mmap"),
+            ctr_cached: reg.counter("store.read_path.cached"),
         }
     }
 
@@ -227,31 +277,61 @@ impl QueryEngine {
         self.cache.clear()
     }
 
-    /// Fetch (through the cache) one window block. A checksum failure
-    /// (`Format`) quarantines the whole segment — its other windows can
-    /// no longer be trusted — and drops the block cache so stale blocks
-    /// of the bad segment cannot be served; the caller's
+    /// The read path this engine resolved to (after the env override).
+    pub fn read_path(&self) -> ReadPath {
+        self.read_path
+    }
+
+    /// Shared failed-read bookkeeping for both read paths: a checksum
+    /// failure (`Format`) quarantines the whole segment — its other
+    /// windows can no longer be trusted — and drops the block cache so
+    /// stale blocks of the bad segment cannot be served; the caller's
     /// [`Self::with_fallback`] wrapper then re-runs the query against
     /// the re-resolved (fallback) view.
+    fn note_read_error(&self, seg_idx: usize, e: PdfflowError) -> PdfflowError {
+        if matches!(e, PdfflowError::Format(_))
+            && self.store.quarantine_segment(seg_idx, &e.to_string())
+        {
+            self.cache.clear();
+        }
+        e
+    }
+
+    /// Fetch one window block, through whichever path [`ReadPath`]
+    /// selects. The mmap path decodes straight out of the file mapping
+    /// (kernel page cache is the only byte copy) and falls through to
+    /// the cached path when no mapping is available.
     fn block(&self, seg_idx: usize, win_idx: usize) -> Result<Arc<Vec<PdfRecord>>> {
+        #[cfg(all(feature = "mmap", unix))]
+        if self.read_path == ReadPath::Mmap {
+            let mapped = self
+                .store
+                .reader(seg_idx)
+                .ok()
+                .and_then(|r| r.mmap_window(win_idx));
+            if let Some(res) = mapped {
+                return match res {
+                    Ok(records) => {
+                        self.ctr_mmap.inc();
+                        Ok(Arc::new(records))
+                    }
+                    Err(e) => Err(self.note_read_error(seg_idx, e)),
+                };
+            }
+        }
         let key = (seg_idx as u32, win_idx as u32);
         if let Some(b) = self.cache.get(&key) {
+            self.ctr_cached.inc();
             return Ok(b);
         }
         match self.store.reader(seg_idx).and_then(|r| r.read_window(win_idx)) {
             Ok(records) => {
+                self.ctr_cached.inc();
                 let block = Arc::new(records);
                 self.cache.put(key, Arc::clone(&block));
                 Ok(block)
             }
-            Err(e) => {
-                if matches!(e, PdfflowError::Format(_))
-                    && self.store.quarantine_segment(seg_idx, &e.to_string())
-                {
-                    self.cache.clear();
-                }
-                Err(e)
-            }
+            Err(e) => Err(self.note_read_error(seg_idx, e)),
         }
     }
 
@@ -308,9 +388,32 @@ impl QueryEngine {
                 self.store.run_key().label()
             ))
         })?;
-        let block = self.block(part.seg, part.win)?;
         // Window order == point-id order: the offset is pure arithmetic.
         let idx = (y - part.entry.y0 as usize) * dims.nx + x;
+        // Point fast path: one 28-byte decode out of the mapping (the
+        // whole window is checksummed on its first touch), skipping the
+        // block cache and the whole-window decode entirely.
+        #[cfg(all(feature = "mmap", unix))]
+        if self.read_path == ReadPath::Mmap {
+            let mapped = self
+                .store
+                .reader(part.seg)
+                .ok()
+                .and_then(|r| r.mmap_record(part.win, idx));
+            if let Some(res) = mapped {
+                let rec = res.map_err(|e| self.note_read_error(part.seg, e))?;
+                self.ctr_mmap.inc();
+                if rec.point != dims.point_id(x, y, z) {
+                    return Err(PdfflowError::Format(format!(
+                        "store row mismatch: expected point {:?}, found {:?}",
+                        dims.point_id(x, y, z),
+                        rec.point
+                    )));
+                }
+                return Ok(rec);
+            }
+        }
+        let block = self.block(part.seg, part.win)?;
         let rec = block.get(idx).copied().ok_or_else(|| {
             PdfflowError::Format(format!(
                 "window block of slice {z} line {y} holds {} records, wanted index {idx}",

@@ -305,12 +305,93 @@ impl SegmentWriter {
     }
 }
 
+/// Raw read-only file mapping (unix + `mmap` feature). Uses the mmap /
+/// munmap syscalls straight through the C symbols std already links —
+/// no crate — so the build stays dependency-free on the offline image.
+#[cfg(all(feature = "mmap", unix))]
+mod mapped {
+    use std::fs::File;
+    use std::os::unix::io::AsRawFd;
+
+    extern "C" {
+        fn mmap(
+            addr: *mut u8,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut u8;
+        fn munmap(addr: *mut u8, len: usize) -> i32;
+    }
+
+    const PROT_READ: i32 = 1;
+    // MAP_SHARED (not PRIVATE): post-open writes to the file stay
+    // visible through the mapping, so on-disk corruption that lands
+    // after open is still caught by the per-window checksums instead of
+    // being masked by copy-on-write snapshots.
+    const MAP_SHARED: i32 = 1;
+
+    /// Whole-file read-only mapping, unmapped on drop.
+    pub struct SegMap {
+        ptr: *const u8,
+        len: usize,
+    }
+
+    // The mapping is never written through and lives exactly as long as
+    // the owning reader; concurrent shared reads are safe.
+    unsafe impl Send for SegMap {}
+    unsafe impl Sync for SegMap {}
+
+    impl SegMap {
+        /// `None` when the file is empty, too large for the address
+        /// space, or the syscall fails — the reader then serves every
+        /// read through the buffered path, exactly like a non-mmap
+        /// build.
+        pub fn new(file: &File, len: u64) -> Option<SegMap> {
+            let len = usize::try_from(len).ok()?;
+            if len == 0 {
+                return None;
+            }
+            let ptr = unsafe {
+                mmap(std::ptr::null_mut(), len, PROT_READ, MAP_SHARED, file.as_raw_fd(), 0)
+            };
+            if ptr.is_null() || ptr as usize == usize::MAX {
+                return None;
+            }
+            Some(SegMap { ptr, len })
+        }
+
+        pub fn bytes(&self) -> &[u8] {
+            unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+        }
+    }
+
+    impl Drop for SegMap {
+        fn drop(&mut self) {
+            unsafe { munmap(self.ptr as *mut u8, self.len) };
+        }
+    }
+}
+
 /// Open segment: shared file handle (positioned reads, thread-safe) plus
 /// the decoded window index.
 pub struct SegmentReader {
     file: File,
     pub meta: SegmentMeta,
     pub entries: Vec<WindowEntry>,
+    /// Whole-file read-only mapping: lets the query engine borrow warm
+    /// window payloads instead of round-tripping them through the block
+    /// cache. `None` when mapping failed; reads then fall back to
+    /// `read_window`.
+    #[cfg(all(feature = "mmap", unix))]
+    map: Option<mapped::SegMap>,
+    /// One first-touch checksum flag per window. Flags are per-reader,
+    /// and a quarantined reader is never reused, so "validated once per
+    /// reader" is "validated once per resolve epoch" from the engine's
+    /// point of view.
+    #[cfg(all(feature = "mmap", unix))]
+    validated: Vec<std::sync::atomic::AtomicBool>,
 }
 
 impl SegmentReader {
@@ -388,6 +469,10 @@ impl SegmentReader {
             entries.push(e);
         }
         Ok(SegmentReader {
+            #[cfg(all(feature = "mmap", unix))]
+            map: mapped::SegMap::new(&file, len),
+            #[cfg(all(feature = "mmap", unix))]
+            validated: entries.iter().map(|_| std::sync::atomic::AtomicBool::new(false)).collect(),
             file,
             meta: meta.clone(),
             entries,
@@ -428,11 +513,7 @@ impl SegmentReader {
                 self.meta.file, e.checksum
             )));
         }
-        let mut out = Vec::with_capacity(e.n_records as usize);
-        for chunk in buf.chunks_exact(REC_LEN) {
-            out.push(PdfRecord::decode(chunk)?);
-        }
-        Ok(out)
+        decode_records(&buf)
     }
 
     /// Full-payload FNV-64 verification against the manifest checksum
@@ -458,6 +539,102 @@ impl SegmentReader {
         }
         Ok(())
     }
+}
+
+/// Zero-copy read path. Every method returns `None` when no mapping is
+/// available (syscall failed, non-unix, feature off at the call site) —
+/// callers fall back to the buffered [`SegmentReader::read_window`]
+/// path, which keeps semantics identical across platforms.
+#[cfg(all(feature = "mmap", unix))]
+impl SegmentReader {
+    /// Whether this reader carries a usable file mapping.
+    pub fn has_map(&self) -> bool {
+        self.map.is_some()
+    }
+
+    /// Borrow one window's raw payload out of the mapping.
+    fn window_payload(&self, idx: usize) -> Option<&[u8]> {
+        let e = &self.entries[idx];
+        let start = e.offset as usize;
+        let end = start + e.n_records as usize * REC_LEN;
+        self.map.as_ref()?.bytes().get(start..end)
+    }
+
+    /// Checksum-validate a mapped window payload on first touch; later
+    /// touches of the same window skip straight to decoding.
+    fn validate_window(&self, idx: usize, payload: &[u8]) -> Result<()> {
+        use std::sync::atomic::Ordering;
+        if self.validated[idx].load(Ordering::Acquire) {
+            return Ok(());
+        }
+        let e = &self.entries[idx];
+        let got = crate::pdfstore::fnv64(payload);
+        if got != e.checksum {
+            return Err(PdfflowError::Format(format!(
+                "{} window {idx}: payload checksum {got:016x} != index {:016x} (corrupt segment)",
+                self.meta.file, e.checksum
+            )));
+        }
+        self.validated[idx].store(true, Ordering::Release);
+        Ok(())
+    }
+
+    /// Decode one whole window straight out of the mapping — no block
+    /// cache, no read syscall. Under armed fault injection the payload
+    /// is copied and mangled exactly like the buffered path and the
+    /// validated flag is never set, so injected corruption stays as
+    /// detectable here as there.
+    pub fn mmap_window(&self, idx: usize) -> Option<Result<Vec<PdfRecord>>> {
+        let payload = self.window_payload(idx)?;
+        if crate::fault::active() {
+            return Some(self.mmap_window_faulted(idx, payload));
+        }
+        if let Err(e) = self.validate_window(idx, payload) {
+            return Some(Err(e));
+        }
+        Some(decode_records(payload))
+    }
+
+    fn mmap_window_faulted(&self, idx: usize, payload: &[u8]) -> Result<Vec<PdfRecord>> {
+        let mut copy = payload.to_vec();
+        crate::fault::retry("segment.read", || crate::fault::check("segment.read"))?;
+        crate::fault::mangle("segment.read", &mut copy);
+        let e = &self.entries[idx];
+        let got = crate::pdfstore::fnv64(&copy);
+        if got != e.checksum {
+            return Err(PdfflowError::Format(format!(
+                "{} window {idx}: payload checksum {got:016x} != index {:016x} (corrupt segment)",
+                self.meta.file, e.checksum
+            )));
+        }
+        decode_records(&copy)
+    }
+
+    /// Decode a single record out of a mapped window — the point-query
+    /// fast path: first touch checksums the whole window, every later
+    /// hit is one 28-byte decode with zero copies of the payload. Falls
+    /// back to the buffered path (`None`) under armed fault injection so
+    /// injected read faults keep their deterministic schedule.
+    pub fn mmap_record(&self, idx: usize, rec: usize) -> Option<Result<PdfRecord>> {
+        if crate::fault::active() {
+            return None;
+        }
+        let payload = self.window_payload(idx)?;
+        if let Err(e) = self.validate_window(idx, payload) {
+            return Some(Err(e));
+        }
+        let start = rec * REC_LEN;
+        let chunk = payload.get(start..start + REC_LEN)?;
+        Some(PdfRecord::decode(chunk))
+    }
+}
+
+fn decode_records(payload: &[u8]) -> Result<Vec<PdfRecord>> {
+    let mut out = Vec::with_capacity(payload.len() / REC_LEN);
+    for chunk in payload.chunks_exact(REC_LEN) {
+        out.push(PdfRecord::decode(chunk)?);
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -608,6 +785,46 @@ mod tests {
             .unwrap();
         let meta = w.finish().unwrap();
         assert_eq!(meta.cover, vec![(0, 2), (5, 6)]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[cfg(all(feature = "mmap", unix))]
+    #[test]
+    fn mmap_path_matches_buffered_path_and_catches_corruption() {
+        let dir = tmp("mmap");
+        let mut w = SegmentWriter::create(&dir, 0, "baseline", 4, "default", 0).unwrap();
+        w.append_window(&Window { z: 0, y0: 0, lines: 2 }, &ids(0, 8), &outcomes(8, 4))
+            .unwrap();
+        w.append_window(&Window { z: 0, y0: 2, lines: 1 }, &ids(8, 4), &outcomes(4, 7))
+            .unwrap();
+        let meta = w.finish().unwrap();
+        let r = SegmentReader::open(&dir, &meta).unwrap();
+        assert!(r.has_map(), "loopback tmpfs should always map");
+        for idx in 0..2 {
+            let buffered = r.read_window(idx).unwrap();
+            let mapped = r.mmap_window(idx).unwrap().unwrap();
+            assert_eq!(buffered, mapped, "window {idx} differs across read paths");
+            for (i, rec) in buffered.iter().enumerate() {
+                let one = r.mmap_record(idx, i).unwrap().unwrap();
+                assert_eq!(*rec, one);
+            }
+        }
+        // Corruption flipped in after open is visible through the shared
+        // mapping and caught by the first-touch checksum.
+        let mut w2 = SegmentWriter::create(&dir, 1, "baseline", 4, "default", 0).unwrap();
+        w2.append_window(&Window { z: 1, y0: 0, lines: 1 }, &ids(0, 6), &outcomes(6, 2))
+            .unwrap();
+        let meta2 = w2.finish().unwrap();
+        let path = dir.join(&meta2.file);
+        let r2 = SegmentReader::open(&dir, &meta2).unwrap();
+        // In-place flip (no truncate: the inode is mapped).
+        let bytes = std::fs::read(&path).unwrap();
+        let off = HEADER_LEN + 3;
+        let f = std::fs::OpenOptions::new().write(true).open(&path).unwrap();
+        f.write_all_at(&[bytes[off as usize] ^ 0xFF], off).unwrap();
+        drop(f);
+        assert!(matches!(r2.mmap_window(0), Some(Err(PdfflowError::Format(_)))));
+        assert!(matches!(r2.mmap_record(0, 0), Some(Err(PdfflowError::Format(_)))));
         std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -30,21 +30,39 @@
 //! copies. Degraded replies bump the per-class
 //! `serve.<class>.degraded` counters.
 //!
+//! In front of admission sits the **result cache** ([`rescache`]): a
+//! generation-stamped LRU of whole replies. A hit bypasses the gate
+//! entirely (it still counts as admitted + completed, so the
+//! request-ledger invariant `completed + shed + errors == requests`
+//! holds); any catalog swap (rerun / compact / scrub repair) or
+//! quarantine moves the stamp and flushes the cache wholesale, and
+//! degraded replies are never inserted.
+//!
 //! [`closed_loop`] is the matching load driver: N synchronous clients,
 //! each issuing its next request only after the previous one finished —
 //! the closed-loop shape of `pdfflow serve --bench`, whose serving row
 //! lands in `BENCH_queries.json` next to the raw engine numbers.
+//! [`net`] puts the same front behind a real TCP socket (length-prefixed
+//! JSON frames, poll-loop event handling, typed shed replies), and
+//! [`net::closed_loop_net`] drives the identical request mix end-to-end
+//! over loopback — wire included.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use crate::cube::PointId;
-use crate::pdfstore::{PdfRecord, QueryEngine, RegionQuery, RegionSummary};
+use crate::cube::{CubeDims, PointId};
+use crate::pdfstore::{Fnv64, PdfRecord, QueryEngine, RegionQuery, RegionSummary};
 use crate::spatial::{BoxQuery, KnnQuery, RadiusQuery, RunDiff};
 use crate::telemetry::{Counter, Histogram, Registry, Span};
 use crate::util::prng::Rng;
 use crate::{PdfflowError, Result};
+
+pub mod net;
+pub mod rescache;
+pub mod wire;
+
+pub use rescache::{ResultCache, ResultCacheStats};
 
 /// Admission knobs (`pdfflow serve --max-in-flight N --queue-depth N`).
 #[derive(Clone, Copy, Debug)]
@@ -295,6 +313,9 @@ pub struct ServeFront {
     /// Process-registry `serve.<class>.degraded` counters (shared
     /// handles; registered eagerly so exporters list them at zero).
     degraded_counters: [Arc<Counter>; 7],
+    /// Generation-stamped whole-reply cache; `None` when disabled via
+    /// [`Self::with_result_cache`]`(0)`.
+    rescache: Option<ResultCache>,
 }
 
 impl ServeFront {
@@ -317,6 +338,7 @@ impl ServeFront {
             degraded_counters: std::array::from_fn(|i| {
                 Registry::global().counter(&format!("serve.{}.degraded", Class::ALL[i].name()))
             }),
+            rescache: Some(ResultCache::new(rescache::DEFAULT_RESULT_CACHE_BYTES)),
         }
     }
 
@@ -328,8 +350,44 @@ impl ServeFront {
         self
     }
 
+    /// Resize the result cache (`pdfflow serve --result-cache-mb`);
+    /// `0` disables it — every request then executes.
+    pub fn with_result_cache(mut self, capacity_bytes: u64) -> ServeFront {
+        self.rescache = (capacity_bytes > 0).then(|| ResultCache::new(capacity_bytes));
+        self
+    }
+
     pub fn engine(&self) -> &QueryEngine {
         &self.engine
+    }
+
+    /// The front's result cache, when enabled (stats / tests).
+    pub fn result_cache(&self) -> Option<&ResultCache> {
+        self.rescache.as_ref()
+    }
+
+    /// Identity of the store state every cached reply depends on: the
+    /// resolve epoch (bumped by quarantines) folded with the on-disk
+    /// catalog stamp (new inode on every rerun / compact / scrub
+    /// repair), over both engines for diff-capable fronts. Any event
+    /// that could change an answer moves this value.
+    pub fn generation_stamp(&self) -> u64 {
+        let mut h = Fnv64::new();
+        h.update(&self.engine.store().epoch().to_le_bytes());
+        h.update(&self.engine.store().catalog_stamp().to_le_bytes());
+        if let Some(d) = &self.diff {
+            h.update(&d.store().epoch().to_le_bytes());
+            h.update(&d.store().catalog_stamp().to_le_bytes());
+        }
+        h.finish()
+    }
+
+    /// Count a shed that happened upstream of [`Self::submit`] — the
+    /// socket layer sheds at its bounded dispatch queue without ever
+    /// entering the gate, and those rejections must land in the same
+    /// per-class ledger as gate sheds.
+    pub(crate) fn note_shed(&self, class: Class) {
+        self.classes[class as usize].shed.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Share this front's per-class latency/queue histograms with the
@@ -393,9 +451,32 @@ impl ServeFront {
     /// queued (bounded by `queue_depth` peers), sheds with
     /// [`PdfflowError::Overloaded`] when the queue is full. Successful
     /// replies say whether they were served degraded ([`Served`]).
+    ///
+    /// A result-cache hit returns before the admission gate — serving a
+    /// memoized reply draws no engine compute, so making it wait behind
+    /// the in-flight cap would only let queued misses slow down hits.
+    /// Hits still count as admitted + completed (the ledger invariant),
+    /// and record their (near-zero) latency in the class histogram.
     pub fn submit(&self, req: Request) -> Result<Served> {
         let class = &self.classes[req.class() as usize];
         let arrived = Instant::now();
+        let cache_key = self.rescache.as_ref().map(|cache| {
+            let key = rescache::request_key(self.engine.store().run_key().label(), &req);
+            let stamp = self.generation_stamp();
+            (cache, key, stamp)
+        });
+        if let Some((cache, key, stamp)) = &cache_key {
+            if let Some(reply) = cache.get(*stamp, req.class(), key) {
+                class.admitted.fetch_add(1, Ordering::Relaxed);
+                class.completed.fetch_add(1, Ordering::Relaxed);
+                class.queue.record_duration(Duration::ZERO);
+                class.latency.record_duration(arrived.elapsed());
+                return Ok(Served {
+                    reply: (*reply).clone(),
+                    degraded: false,
+                });
+            }
+        }
         // Admission: take an execution slot or a bounded queue slot.
         {
             let mut g = self.gate.lock().unwrap();
@@ -460,6 +541,12 @@ impl ServeFront {
                 if degraded {
                     class.degraded.fetch_add(1, Ordering::Relaxed);
                     self.degraded_counters[req.class() as usize].inc();
+                } else if let Some((cache, key, stamp)) = cache_key {
+                    // Inserted under the *pre-execution* stamp: if the
+                    // catalog swapped or a quarantine landed while the
+                    // query ran, the entry can never be served for the
+                    // new generation (per-entry stamp check).
+                    cache.put(stamp, key, Arc::new(reply.clone()));
                 }
                 Ok(Served { reply, degraded })
             }
@@ -514,9 +601,10 @@ pub struct LoadReport {
 /// Deterministic request mix for one client: mostly points, some region
 /// summaries, a few quantile surfaces, and a sprinkle of spatial box /
 /// radius / kNN queries — the north-star read blend. (Diff requests are
-/// not in the generic mix; they need a second run attached.)
-fn next_request(rng: &mut Rng, front: &ServeFront, slices: &[usize]) -> Request {
-    let dims = front.engine().dims();
+/// not in the generic mix; they need a second run attached.) Shared by
+/// the in-process [`closed_loop`] and the socket-driven
+/// [`net::closed_loop_net`], so the two drivers issue the same blend.
+pub(crate) fn next_request(rng: &mut Rng, dims: &CubeDims, slices: &[usize]) -> Request {
     let z = slices[rng.below(slices.len())];
     let slice_pts = dims.slice_points() as u64;
     match rng.below(16) {
@@ -587,14 +675,16 @@ pub fn closed_loop(
     let clients = clients.max(1);
     let slices = front.engine().store().slices();
     assert!(!slices.is_empty(), "closed_loop needs a non-empty store");
+    let dims = front.engine().dims();
     let t0 = Instant::now();
     std::thread::scope(|s| {
         for k in 0..clients {
             let slices = &slices;
+            let dims = &dims;
             s.spawn(move || {
                 let mut rng = Rng::new(seed ^ (0x9e37_79b9_7f4a_7c15u64.wrapping_mul(k as u64 + 1)));
                 for _ in 0..requests_per_client {
-                    let req = next_request(&mut rng, front, slices);
+                    let req = next_request(&mut rng, dims, slices);
                     // Shed and query errors are the driver's signal to
                     // keep going — a real client would back off and
                     // retry; the closed loop just issues its next

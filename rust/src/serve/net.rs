@@ -1,0 +1,698 @@
+//! TCP socket front end: the [`crate::serve::ServeFront`] behind a real
+//! wire, with no async runtime and no event-loop crate.
+//!
+//! One dedicated thread runs a hand-rolled `poll(2)` event loop over a
+//! nonblocking listener plus every live connection, speaking the
+//! length-prefixed JSON protocol of [`super::wire`]. Parsed query
+//! frames are handed to a small worker pool through a **bounded**
+//! dispatch queue; when that queue is full the request is shed *on the
+//! wire* as a typed `status:"shed"` frame (and counted in the same
+//! per-class ledger as gate sheds via `ServeFront::note_shed`) — the
+//! overload contract of the in-process front survives the socket hop.
+//! Cheap control frames (`meta`, `shutdown`) are answered inline on the
+//! event thread.
+//!
+//! Per connection, requests are answered **in order**: the loop parses
+//! at most one query frame ahead per connection (further pipelined
+//! frames wait buffered until the reply is written), so a synchronous
+//! client can never observe reordering. Shutdown is graceful: the
+//! listener stops accepting, in-flight queries finish, every write
+//! buffer drains (the shutdown ack included), then the loop exits and
+//! the workers follow.
+//!
+//! Counters: `net.conns` (connections accepted), `net.frames_in` /
+//! `net.frames_out`, and `net.sheds` (dispatch-queue sheds).
+//!
+//! [`closed_loop_net`] is the socket twin of [`crate::serve::closed_loop`]:
+//! the *same* deterministic request mix, driven end-to-end over loopback
+//! by N synchronous clients — wire encode/decode included in every
+//! measured latency.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::serve::wire::{self, ControlOrQuery, ServeMeta};
+use crate::serve::{next_request, Request, Served, ServeFront};
+use crate::telemetry::{Counter, Registry};
+use crate::util::json::Json;
+use crate::util::prng::Rng;
+use crate::{PdfflowError, Result};
+
+#[repr(C)]
+struct PollFd {
+    fd: i32,
+    events: i16,
+    revents: i16,
+}
+
+const POLLIN: i16 = 0x1;
+const POLLOUT: i16 = 0x4;
+const POLLERR: i16 = 0x8;
+const POLLHUP: i16 = 0x10;
+const POLLNVAL: i16 = 0x20;
+
+extern "C" {
+    fn poll(fds: *mut PollFd, nfds: u64, timeout: i32) -> i32;
+}
+
+/// Socket-layer knobs (`pdfflow serve --listen`).
+#[derive(Clone, Copy, Debug)]
+pub struct NetOptions {
+    /// Worker threads executing admitted queries. `0` is a valid test
+    /// configuration: with no workers every query frame is shed, which
+    /// makes the typed-shed wire path deterministic.
+    pub workers: usize,
+    /// Bound of the dispatch queue between the event loop and the
+    /// workers; a full queue sheds on the wire.
+    pub queue_depth: usize,
+}
+
+impl Default for NetOptions {
+    fn default() -> Self {
+        let w = crate::runtime::hostpool::default_budget().max(1);
+        NetOptions { workers: w, queue_depth: 2 * w }
+    }
+}
+
+struct Job {
+    conn: u64,
+    req: Request,
+}
+
+/// One live connection's state machine.
+struct Conn {
+    stream: TcpStream,
+    /// Inbound bytes not yet parsed into frames.
+    rbuf: Vec<u8>,
+    /// Outbound bytes; `wpos..` is still unsent.
+    wbuf: Vec<u8>,
+    wpos: usize,
+    /// A query from this connection is with the workers; don't parse
+    /// further frames until its reply is queued (in-order contract).
+    busy: bool,
+    /// Stop reading; drop the connection once `wbuf` drains (used after
+    /// protocol errors so the error frame still goes out).
+    closing: bool,
+    /// Dead now; reaped on the next sweep.
+    closed: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Conn {
+        Conn {
+            stream,
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            wpos: 0,
+            busy: false,
+            closing: false,
+            closed: false,
+        }
+    }
+
+    fn pending_write(&self) -> bool {
+        self.wpos < self.wbuf.len()
+    }
+
+    fn push_frame(&mut self, doc: &Json) {
+        // Infallible: Vec<u8> as Write cannot error.
+        let _ = wire::write_frame(&mut self.wbuf, doc);
+    }
+
+    /// Write as much of `wbuf` as the socket accepts right now.
+    fn flush(&mut self) {
+        while self.pending_write() {
+            match (&self.stream).write(&self.wbuf[self.wpos..]) {
+                Ok(0) => {
+                    self.closed = true;
+                    return;
+                }
+                Ok(n) => self.wpos += n,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.closed = true;
+                    return;
+                }
+            }
+        }
+        self.wbuf.clear();
+        self.wpos = 0;
+        if self.closing {
+            self.closed = true;
+        }
+    }
+
+    /// Drain readable bytes into `rbuf`.
+    fn fill(&mut self) {
+        let mut buf = [0u8; 16 * 1024];
+        loop {
+            match (&self.stream).read(&mut buf) {
+                Ok(0) => {
+                    self.closed = true;
+                    return;
+                }
+                Ok(n) => self.rbuf.extend_from_slice(&buf[..n]),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.closed = true;
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Pop one complete frame off `rbuf`, if buffered. A hostile length
+    /// prefix turns into an error frame and a drain-then-close.
+    fn next_frame(&mut self) -> Option<Json> {
+        if self.rbuf.len() < 4 {
+            return None;
+        }
+        let len = u32::from_le_bytes(self.rbuf[..4].try_into().unwrap()) as usize;
+        if len > wire::MAX_FRAME {
+            self.push_frame(&wire::encode_error(&PdfflowError::Format(format!(
+                "frame length {len} exceeds cap {}",
+                wire::MAX_FRAME
+            ))));
+            self.closing = true;
+            return None;
+        }
+        if self.rbuf.len() < 4 + len {
+            return None;
+        }
+        let text = std::str::from_utf8(&self.rbuf[4..4 + len]).ok().map(str::to_owned);
+        let doc = text.and_then(|t| Json::parse(&t).ok());
+        self.rbuf.drain(..4 + len);
+        match doc {
+            Some(doc) => Some(doc),
+            None => {
+                // Undecodable payload: the stream may be desynced, so
+                // answer once and close instead of guessing.
+                self.push_frame(&wire::encode_error(&PdfflowError::Format(
+                    "unparsable frame payload".into(),
+                )));
+                self.closing = true;
+                None
+            }
+        }
+    }
+}
+
+struct EventLoop {
+    listener: TcpListener,
+    wake_rx: TcpStream,
+    front: Arc<ServeFront>,
+    job_tx: SyncSender<Job>,
+    workers: usize,
+    done: Arc<Mutex<Vec<(u64, Json)>>>,
+    stop: Arc<AtomicBool>,
+    conns: HashMap<u64, Conn>,
+    next_id: u64,
+    /// Jobs dispatched to workers whose completions haven't been
+    /// drained yet (both ends touched only on this thread).
+    outstanding: usize,
+    ctr_conns: Arc<Counter>,
+    ctr_frames_in: Arc<Counter>,
+    ctr_frames_out: Arc<Counter>,
+    ctr_sheds: Arc<Counter>,
+}
+
+impl EventLoop {
+    fn run(mut self) {
+        loop {
+            self.drain_completions();
+            self.conns.retain(|_, c| !c.closed);
+            let stopping = self.stop.load(Ordering::Acquire);
+            if stopping
+                && self.outstanding == 0
+                && self.conns.values().all(|c| !c.pending_write())
+                && self.done.lock().unwrap().is_empty()
+            {
+                // Graceful exit: nothing in flight, every reply (the
+                // shutdown ack included) flushed. Dropping `job_tx`
+                // unblocks the workers' recv loops.
+                return;
+            }
+
+            let mut fds = Vec::with_capacity(self.conns.len() + 2);
+            fds.push(PollFd {
+                fd: self.listener.as_raw_fd(),
+                events: if stopping { 0 } else { POLLIN },
+                revents: 0,
+            });
+            fds.push(PollFd { fd: self.wake_rx.as_raw_fd(), events: POLLIN, revents: 0 });
+            let ids: Vec<u64> = self.conns.keys().copied().collect();
+            for id in &ids {
+                let c = &self.conns[id];
+                let mut events = POLLIN;
+                if c.pending_write() {
+                    events |= POLLOUT;
+                }
+                fds.push(PollFd { fd: c.stream.as_raw_fd(), events, revents: 0 });
+            }
+
+            // 100 ms cap so an externally-set stop flag is noticed even
+            // if the wake byte races the fd registration.
+            let n = unsafe { poll(fds.as_mut_ptr(), fds.len() as u64, 100) };
+            if n <= 0 {
+                continue; // timeout or EINTR
+            }
+
+            if fds[0].revents & POLLIN != 0 {
+                self.accept_ready();
+            }
+            if fds[1].revents & POLLIN != 0 {
+                let mut sink = [0u8; 256];
+                while matches!((&self.wake_rx).read(&mut sink), Ok(n) if n > 0) {}
+            }
+            for (i, id) in ids.iter().enumerate() {
+                let revents = fds[i + 2].revents;
+                if revents != 0 {
+                    self.service(*id, revents);
+                }
+            }
+        }
+    }
+
+    fn accept_ready(&mut self) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let _ = stream.set_nodelay(true);
+                    self.conns.insert(self.next_id, Conn::new(stream));
+                    self.next_id += 1;
+                    self.ctr_conns.inc();
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+                Err(_) => return,
+            }
+        }
+    }
+
+    /// Move finished worker replies into their connections' write
+    /// buffers, then resume parsing any frames the in-order contract
+    /// had parked.
+    fn drain_completions(&mut self) {
+        let finished: Vec<(u64, Json)> = std::mem::take(&mut *self.done.lock().unwrap());
+        for (id, doc) in finished {
+            self.outstanding -= 1;
+            let Some(mut c) = self.conns.remove(&id) else {
+                continue; // connection died while its query ran
+            };
+            c.push_frame(&doc);
+            self.ctr_frames_out.inc();
+            c.busy = false;
+            self.process_frames(id, &mut c);
+            c.flush();
+            self.conns.insert(id, c);
+        }
+    }
+
+    fn service(&mut self, id: u64, revents: i16) {
+        let Some(mut c) = self.conns.remove(&id) else {
+            return;
+        };
+        if revents & (POLLERR | POLLNVAL) != 0 {
+            return; // dropped
+        }
+        if revents & POLLOUT != 0 {
+            c.flush();
+        }
+        if !c.closed && revents & (POLLIN | POLLHUP) != 0 && !c.closing {
+            c.fill();
+            if !c.closed {
+                self.process_frames(id, &mut c);
+                c.flush();
+            }
+        }
+        if !c.closed {
+            self.conns.insert(id, c);
+        }
+    }
+
+    /// Parse and act on buffered frames, respecting the one-outstanding
+    /// -query-per-connection ordering contract.
+    fn process_frames(&mut self, id: u64, c: &mut Conn) {
+        while !c.busy && !c.closing && !c.closed {
+            let Some(doc) = c.next_frame() else {
+                return;
+            };
+            self.ctr_frames_in.inc();
+            match wire::decode_request(&doc) {
+                Err(e) => {
+                    // Unknown op / bad fields: typed error, connection
+                    // stays usable (framing is still intact).
+                    c.push_frame(&wire::encode_error(&e));
+                    self.ctr_frames_out.inc();
+                }
+                Ok(ControlOrQuery::Meta) => {
+                    let store = self.front.engine().store();
+                    let meta = ServeMeta {
+                        dims: store.dims(),
+                        slices: store.slices(),
+                        run: store.run_key().label(),
+                    };
+                    c.push_frame(&wire::encode_meta(&meta));
+                    self.ctr_frames_out.inc();
+                }
+                Ok(ControlOrQuery::Shutdown) => {
+                    c.push_frame(&Json::obj(vec![
+                        ("status", Json::Str("ok".into())),
+                        ("shutdown", Json::Bool(true)),
+                    ]));
+                    self.ctr_frames_out.inc();
+                    self.stop.store(true, Ordering::Release);
+                }
+                Ok(ControlOrQuery::Query(req)) => {
+                    if self.workers == 0 {
+                        self.shed(c, &req);
+                        continue;
+                    }
+                    match self.job_tx.try_send(Job { conn: id, req }) {
+                        Ok(()) => {
+                            c.busy = true;
+                            self.outstanding += 1;
+                        }
+                        Err(TrySendError::Full(Job { req, .. })) => self.shed(c, &req),
+                        Err(TrySendError::Disconnected(_)) => {
+                            c.closing = true;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Typed shed on the wire, charged to the same per-class ledger as
+    /// the admission gate's own sheds.
+    fn shed(&self, c: &mut Conn, req: &Request) {
+        self.front.note_shed(req.class());
+        self.ctr_sheds.inc();
+        c.push_frame(&wire::encode_error(&PdfflowError::Overloaded(
+            "net dispatch queue full".into(),
+        )));
+        self.ctr_frames_out.inc();
+    }
+}
+
+fn worker_loop(
+    rx: Arc<Mutex<Receiver<Job>>>,
+    front: Arc<ServeFront>,
+    done: Arc<Mutex<Vec<(u64, Json)>>>,
+    wake: Arc<TcpStream>,
+) {
+    loop {
+        // Lock only around recv: workers take jobs one at a time, and
+        // the sender side disconnecting is the shutdown signal.
+        let job = { rx.lock().unwrap().recv() };
+        let Ok(job) = job else { return };
+        let doc = match front.submit(job.req) {
+            Ok(served) => wire::encode_served(&served),
+            Err(e) => wire::encode_error(&e),
+        };
+        done.lock().unwrap().push((job.conn, doc));
+        let _ = (&*wake).write(&[1u8]);
+    }
+}
+
+/// Loopback stream pair used to interrupt a blocked `poll`: workers
+/// write one byte to the tx end; the rx end sits in the poll set.
+fn wake_pair() -> std::io::Result<(TcpStream, TcpStream)> {
+    let l = TcpListener::bind(("127.0.0.1", 0))?;
+    let tx = TcpStream::connect(l.local_addr()?)?;
+    let (rx, _) = l.accept()?;
+    rx.set_nonblocking(true)?;
+    Ok((tx, rx))
+}
+
+/// Handle to a running socket server. Dropping it (or calling
+/// [`Self::join`]) requests a graceful stop and joins every thread.
+pub struct NetServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    wake: Arc<TcpStream>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an OS-assigned port) and
+    /// start serving `front` — one event thread plus `opts.workers`
+    /// query workers.
+    pub fn start(front: Arc<ServeFront>, addr: &str, opts: NetOptions) -> Result<NetServer> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        let (wake_tx, wake_rx) = wake_pair()?;
+        let wake = Arc::new(wake_tx);
+        let stop = Arc::new(AtomicBool::new(false));
+        let done: Arc<Mutex<Vec<(u64, Json)>>> = Arc::default();
+        let (job_tx, job_rx) = std::sync::mpsc::sync_channel::<Job>(opts.queue_depth.max(1));
+        let job_rx = Arc::new(Mutex::new(job_rx));
+
+        let mut threads = Vec::with_capacity(opts.workers + 1);
+        let reg = Registry::global();
+        let ev = EventLoop {
+            listener,
+            wake_rx,
+            front: Arc::clone(&front),
+            job_tx,
+            workers: opts.workers,
+            done: Arc::clone(&done),
+            stop: Arc::clone(&stop),
+            conns: HashMap::new(),
+            next_id: 0,
+            outstanding: 0,
+            ctr_conns: reg.counter("net.conns"),
+            ctr_frames_in: reg.counter("net.frames_in"),
+            ctr_frames_out: reg.counter("net.frames_out"),
+            ctr_sheds: reg.counter("net.sheds"),
+        };
+        threads.push(
+            std::thread::Builder::new()
+                .name("pdfflow-net-poll".into())
+                .spawn(move || ev.run())?,
+        );
+        for i in 0..opts.workers {
+            let rx = Arc::clone(&job_rx);
+            let front = Arc::clone(&front);
+            let done = Arc::clone(&done);
+            let wake = Arc::clone(&wake);
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("pdfflow-net-worker-{i}"))
+                    .spawn(move || worker_loop(rx, front, done, wake))?,
+            );
+        }
+        Ok(NetServer { addr: local, stop, wake, threads })
+    }
+
+    /// The bound address (resolves `:0` to the real port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Request a graceful stop (idempotent; returns immediately).
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::Release);
+        let _ = (&*self.wake).write(&[1u8]);
+    }
+
+    /// Stop and join every server thread.
+    pub fn join(mut self) {
+        self.stop();
+        self.join_threads();
+    }
+
+    /// Block until the server stops on its own — a wire `shutdown`
+    /// frame or a concurrent [`Self::stop`] (the `--clients 0` serve
+    /// mode).
+    pub fn wait(mut self) {
+        self.join_threads();
+    }
+
+    fn join_threads(&mut self) {
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.stop();
+        self.join_threads();
+    }
+}
+
+/// Blocking protocol client: one frame out, one frame in.
+pub struct Client {
+    stream: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(Client { stream })
+    }
+
+    /// Ask the server what it is serving (dims, slices, run label).
+    pub fn meta(&mut self) -> Result<ServeMeta> {
+        self.send(&Json::obj(vec![("op", Json::Str("meta".into()))]))?;
+        let doc = self.recv()?;
+        match doc.get("status").and_then(Json::as_str) {
+            Some("ok") => wire::decode_meta(&doc),
+            _ => match wire::decode_response(&doc) {
+                Err(e) => Err(e),
+                Ok(_) => Err(PdfflowError::Format("unexpected reply to meta".into())),
+            },
+        }
+    }
+
+    /// Round-trip one query. Sheds come back as
+    /// [`PdfflowError::Overloaded`]; the connection stays usable after
+    /// them.
+    pub fn query(&mut self, req: &Request) -> Result<Served> {
+        self.send(&wire::encode_request(req))?;
+        wire::decode_response(&self.recv()?)
+    }
+
+    /// Ask the server to shut down gracefully; returns once the server
+    /// acked (its threads may still be draining).
+    pub fn shutdown_server(&mut self) -> Result<()> {
+        self.send(&Json::obj(vec![("op", Json::Str("shutdown".into()))]))?;
+        let doc = self.recv()?;
+        if doc.get("shutdown").and_then(Json::as_bool) == Some(true) {
+            Ok(())
+        } else {
+            Err(PdfflowError::Format("unexpected reply to shutdown".into()))
+        }
+    }
+
+    fn send(&mut self, doc: &Json) -> Result<()> {
+        wire::write_frame(&mut self.stream, doc)?;
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Json> {
+        wire::read_frame(&mut self.stream)?.ok_or_else(|| {
+            PdfflowError::Io(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "server closed the connection",
+            ))
+        })
+    }
+}
+
+/// Result of one socket-driven closed-loop run (client-side view; the
+/// server's per-class metrics live in its own `ServeFront`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NetLoadReport {
+    pub clients: usize,
+    /// Requests issued across all clients (completed + shed + errors).
+    pub requests: u64,
+    pub completed: u64,
+    pub shed: u64,
+    pub errors: u64,
+    pub secs: f64,
+    /// Successful replies per second.
+    pub throughput: f64,
+}
+
+/// Drive a socket server with `clients` synchronous loopback clients,
+/// each on its own connection, issuing the same deterministic request
+/// mix as [`crate::serve::closed_loop`] (identical seeds → identical
+/// blend). Sheds and query errors count and continue; transport
+/// failures abort the run.
+pub fn closed_loop_net(
+    addr: &str,
+    clients: usize,
+    requests_per_client: usize,
+    seed: u64,
+) -> Result<NetLoadReport> {
+    let clients = clients.max(1);
+    let meta = Client::connect(addr)?.meta()?;
+    if meta.slices.is_empty() {
+        return Err(PdfflowError::InvalidArg(
+            "closed_loop_net needs a non-empty store".into(),
+        ));
+    }
+    let totals = Mutex::new((0u64, 0u64, 0u64)); // completed, shed, errors
+    let t0 = Instant::now();
+    std::thread::scope(|s| -> Result<()> {
+        let mut handles = Vec::with_capacity(clients);
+        for k in 0..clients {
+            let meta = &meta;
+            let totals = &totals;
+            handles.push(s.spawn(move || -> Result<()> {
+                let mut client = Client::connect(addr)?;
+                let mut rng =
+                    Rng::new(seed ^ (0x9e37_79b9_7f4a_7c15u64.wrapping_mul(k as u64 + 1)));
+                let (mut completed, mut shed, mut errors) = (0u64, 0u64, 0u64);
+                for _ in 0..requests_per_client {
+                    let req = next_request(&mut rng, &meta.dims, &meta.slices);
+                    match client.query(&req) {
+                        Ok(_) => completed += 1,
+                        Err(e) if e.is_overload() => shed += 1,
+                        Err(PdfflowError::Io(e)) => return Err(PdfflowError::Io(e)),
+                        Err(_) => errors += 1,
+                    }
+                }
+                let mut t = totals.lock().unwrap();
+                t.0 += completed;
+                t.1 += shed;
+                t.2 += errors;
+                Ok(())
+            }));
+        }
+        for h in handles {
+            h.join().expect("closed_loop_net client panicked")?;
+        }
+        Ok(())
+    })?;
+    let secs = t0.elapsed().as_secs_f64();
+    let (completed, shed, errors) = *totals.lock().unwrap();
+    Ok(NetLoadReport {
+        clients,
+        requests: (clients * requests_per_client) as u64,
+        completed,
+        shed,
+        errors,
+        secs,
+        throughput: if secs > 0.0 { completed as f64 / secs } else { 0.0 },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wake_pair_interrupts_poll() {
+        let (tx, rx) = wake_pair().unwrap();
+        (&tx).write_all(&[1]).unwrap();
+        let mut fds = [PollFd { fd: rx.as_raw_fd(), events: POLLIN, revents: 0 }];
+        let n = unsafe { poll(fds.as_mut_ptr(), 1, 1000) };
+        assert_eq!(n, 1, "wake byte must be observable via poll");
+        assert_ne!(fds[0].revents & POLLIN, 0);
+        let mut sink = [0u8; 8];
+        assert_eq!((&rx).read(&mut sink).unwrap(), 1);
+    }
+
+    #[test]
+    fn net_options_default_is_sane() {
+        let o = NetOptions::default();
+        assert!(o.workers >= 1);
+        assert!(o.queue_depth >= o.workers);
+    }
+}

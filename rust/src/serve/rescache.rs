@@ -1,0 +1,234 @@
+//! Serve-side result cache: whole replies keyed by canonicalized
+//! request, generation-stamped so stale answers are structurally
+//! impossible.
+//!
+//! The fast path for a repeated request is not recomputing it — it is
+//! not touching the store at all. Entries are keyed by
+//! `(run, class, canonicalized params)` and stamped with the front's
+//! *generation stamp* (store resolve epoch ⊕ on-disk catalog identity,
+//! see [`crate::pdfstore::PdfStore::catalog_stamp`]). Any event that
+//! could change an answer moves the stamp:
+//!
+//! * a rerun appending a generation, `store compact`, or `store scrub
+//!   --repair` atomically swaps `CATALOG.json` → new inode → new stamp;
+//! * a mid-serve quarantine bumps the resolve epoch → new stamp.
+//!
+//! The first lookup under a moved stamp clears the cache wholesale
+//! (`serve.result_cache.invalidations`); each entry additionally
+//! carries the stamp it was computed under, so a racing insert from
+//! the old generation can never be served after the swap. Degraded
+//! replies are never inserted (the caller enforces this — a degraded
+//! answer is exact but provisional, and must disappear as soon as a
+//! repair lands, not live on in cache).
+//!
+//! Counters: the LRU core publishes `cache.result.{hits,misses,
+//! evictions}`; hits are additionally split per request class as
+//! `serve.<class>.cache_hit`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::serve::{Class, Reply, Request};
+use crate::telemetry::{Counter, Registry};
+use crate::util::lru::ShardedStampLru;
+
+/// Default budget when the front enables the cache (`ServeFront::new`).
+pub const DEFAULT_RESULT_CACHE_BYTES: u64 = 32 << 20;
+
+/// Rough resident weight of one cached reply, for LRU budget
+/// accounting (record vectors dominate; scalar replies are floored at
+/// the key/entry overhead scale).
+fn reply_weight(entry: &(u64, Arc<Reply>)) -> u64 {
+    const REC: u64 = crate::pdfstore::REC_LEN as u64;
+    const BASE: u64 = 64;
+    BASE + match entry.1.as_ref() {
+        Reply::Point(_) => REC,
+        Reply::QuantileMean(_) => 8,
+        Reply::Region(_) | Reply::Box(_) => 256,
+        Reply::Radius(recs) | Reply::Knn(recs) => recs.len() as u64 * REC,
+        Reply::DiffRun(d) => 256 + d.changed_cells.len() as u64 * 24,
+    }
+}
+
+/// Canonical cache key: run label, class name, and every request
+/// parameter in a fixed order. Floats are keyed by their exact bit
+/// pattern — two requests share an entry only when they are the same
+/// request, bit for bit.
+pub fn request_key(run: &str, req: &Request) -> String {
+    let class = req.class().name();
+    match *req {
+        Request::Point(id) => format!("{run}|{class}|{}", id.0),
+        Request::Region(q) => {
+            format!("{run}|{class}|{},{},{},{},{}", q.z, q.x0, q.x1, q.y0, q.y1)
+        }
+        Request::QuantileMean(q, p) => format!(
+            "{run}|{class}|{},{},{},{},{}|{:016x}",
+            q.z,
+            q.x0,
+            q.x1,
+            q.y0,
+            q.y1,
+            p.to_bits()
+        ),
+        Request::Box(q) => format!(
+            "{run}|{class}|{},{},{},{},{},{}",
+            q.x0, q.x1, q.y0, q.y1, q.z0, q.z1
+        ),
+        Request::Radius(q) => format!(
+            "{run}|{class}|{},{},{}|{:016x}",
+            q.x,
+            q.y,
+            q.z,
+            q.radius.to_bits()
+        ),
+        Request::Knn(q) => format!("{run}|{class}|{},{},{}|{}", q.x, q.y, q.z, q.k),
+        Request::DiffRun(q) => format!(
+            "{run}|{class}|{},{},{},{},{},{}",
+            q.x0, q.x1, q.y0, q.y1, q.z0, q.z1
+        ),
+    }
+}
+
+/// Snapshot of the cache's observability counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ResultCacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub bytes: u64,
+    pub entries: usize,
+    /// Wholesale clears triggered by a generation-stamp move.
+    pub invalidations: u64,
+}
+
+/// Generation-stamped reply cache (see module docs).
+pub struct ResultCache {
+    lru: ShardedStampLru<String, (u64, Arc<Reply>)>,
+    /// Stamp the current contents were validated against. `0` is the
+    /// "never rotated" sentinel: the first observed stamp is adopted
+    /// without clearing (nothing resident can be stale yet) and without
+    /// counting an invalidation.
+    stamp: AtomicU64,
+    invalidations: AtomicU64,
+    /// Process-registry `serve.<class>.cache_hit` counters.
+    class_hits: [Arc<Counter>; 7],
+    ctr_invalidations: Arc<Counter>,
+}
+
+impl ResultCache {
+    pub fn new(capacity_bytes: u64) -> ResultCache {
+        let reg = Registry::global();
+        ResultCache {
+            // Mirrored in the process registry as `cache.result.*`.
+            lru: ShardedStampLru::with_label(capacity_bytes, 8, reply_weight, "result"),
+            stamp: AtomicU64::new(0),
+            invalidations: AtomicU64::new(0),
+            class_hits: std::array::from_fn(|i| {
+                reg.counter(&format!("serve.{}.cache_hit", Class::ALL[i].name()))
+            }),
+            ctr_invalidations: reg.counter("serve.result_cache.invalidations"),
+        }
+    }
+
+    /// Drop everything when `stamp` differs from the stamp the resident
+    /// entries were stored under. Racing callers may observe either
+    /// stamp transiently; per-entry stamps (checked in [`Self::get`])
+    /// make that race harmless.
+    fn rotate_to(&self, stamp: u64) {
+        let cur = self.stamp.load(Ordering::Acquire);
+        if cur == stamp {
+            return;
+        }
+        if self
+            .stamp
+            .compare_exchange(cur, stamp, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+            // Adopting the first real stamp is not an invalidation. (If
+            // a genuine stamp ever collides with the sentinel, entries
+            // survive one rotation unflushed; the per-entry stamp check
+            // in `get` still refuses to serve them.)
+            && cur != 0
+        {
+            self.lru.clear();
+            self.invalidations.fetch_add(1, Ordering::Relaxed);
+            self.ctr_invalidations.inc();
+        }
+    }
+
+    /// Cached reply for `key` computed under exactly `stamp`, if any.
+    pub fn get(&self, stamp: u64, class: Class, key: &str) -> Option<Arc<Reply>> {
+        self.rotate_to(stamp);
+        let (entry_stamp, reply) = self.lru.get(&key.to_string())?;
+        if entry_stamp != stamp {
+            return None;
+        }
+        self.class_hits[class as usize].inc();
+        Some(reply)
+    }
+
+    /// Insert a reply computed under `stamp`. A stale insert (the stamp
+    /// moved while the query ran) is stored with its original stamp and
+    /// can therefore never be returned by [`Self::get`] for the new
+    /// generation — at worst it wastes budget until the next rotation.
+    pub fn put(&self, stamp: u64, key: String, reply: Arc<Reply>) {
+        self.lru.put(key, (stamp, reply));
+    }
+
+    pub fn stats(&self) -> ResultCacheStats {
+        let s = self.lru.stats();
+        ResultCacheStats {
+            hits: s.hits,
+            misses: s.misses,
+            evictions: s.evictions,
+            bytes: s.bytes,
+            entries: s.entries,
+            invalidations: self.invalidations.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cube::PointId;
+    use crate::pdfstore::{PdfRecord, RegionQuery};
+    use crate::stats::DistType;
+
+    fn point_reply(i: u64) -> Arc<Reply> {
+        Arc::new(Reply::Point(PdfRecord {
+            point: PointId(i),
+            dist: DistType::Normal,
+            error: 0.25,
+            params: [0.0, 1.0, 0.0],
+        }))
+    }
+
+    #[test]
+    fn keys_are_canonical_and_distinct() {
+        let q = RegionQuery { z: 1, x0: 0, x1: 3, y0: 2, y1: 5 };
+        let a = request_key("r", &Request::Region(q));
+        let b = request_key("r", &Request::QuantileMean(q, 0.5));
+        let c = request_key("r", &Request::QuantileMean(q, 0.25));
+        let d = request_key("other", &Request::Region(q));
+        assert_eq!(a, request_key("r", &Request::Region(q)), "deterministic");
+        assert!(a != b && b != c && a != d, "class, params and run all key");
+    }
+
+    #[test]
+    fn stamp_move_invalidates_wholesale() {
+        let c = ResultCache::new(1 << 20);
+        let req = Request::Point(PointId(7));
+        let key = request_key("r", &req);
+        c.put(1, key.clone(), point_reply(7));
+        assert!(c.get(1, Class::Point, &key).is_some());
+        // New generation: same key, moved stamp → miss + wholesale clear.
+        assert!(c.get(2, Class::Point, &key).is_none());
+        assert_eq!(c.stats().invalidations, 1);
+        assert_eq!(c.stats().entries, 0);
+        // A stale insert under the old stamp is never served.
+        c.put(1, key.clone(), point_reply(7));
+        assert!(c.get(2, Class::Point, &key).is_none());
+        c.put(2, key.clone(), point_reply(7));
+        assert!(c.get(2, Class::Point, &key).is_some());
+    }
+}

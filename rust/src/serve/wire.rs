@@ -1,0 +1,645 @@
+//! Wire form of the serve protocol: length-prefixed JSON frames.
+//!
+//! One frame is a 4-byte little-endian payload length followed by one
+//! UTF-8 JSON document, capped at [`MAX_FRAME`] bytes (a corrupt or
+//! hostile length prefix must not allocate unbounded memory). Requests
+//! carry an `"op"` discriminator; responses carry a `"status"` of
+//! `"ok"`, `"shed"` (admission control said no — a *typed* rejection,
+//! the connection stays usable) or `"error"` (typed query error).
+//!
+//! Fidelity contract: a reply decoded from the wire is **bit-identical**
+//! to the in-process reply. Integers ride through JSON numbers exactly
+//! (all quantities here are far below 2^53); `f64`s rely on Rust's
+//! shortest-roundtrip float formatting; `f32`s widen to `f64` exactly
+//! and narrow back exactly. `tests/serve_net.rs` pins this end to end
+//! for every request class, and the codec tests below pin raw
+//! encode∘decode identity.
+
+use std::io::{Read, Write};
+
+use crate::cube::{CubeDims, PointId};
+use crate::pdfstore::{PdfRecord, RegionQuery, RegionSummary, ERROR_HIST_BINS};
+use crate::serve::{Reply, Request, Served};
+use crate::spatial::{BoxQuery, KnnQuery, RadiusQuery, RunDiff};
+use crate::stats::DistType;
+use crate::util::json::Json;
+use crate::{PdfflowError, Result};
+
+/// Frame payload cap (1 MiB): larger requests are malformed, larger
+/// replies mean the caller asked for a result set that belongs in a
+/// batch export, not a serving hot path.
+pub const MAX_FRAME: usize = 1 << 20;
+
+/// Store facts a client needs before it can generate requests
+/// (`{"op":"meta"}` — the socket closed-loop driver bootstraps on it).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ServeMeta {
+    pub dims: CubeDims,
+    /// Persisted slice indices of the served run.
+    pub slices: Vec<usize>,
+    /// Run label (catalog key) being served.
+    pub run: String,
+}
+
+fn num(n: f64) -> Json {
+    Json::Num(n)
+}
+
+fn unum(n: usize) -> Json {
+    Json::Num(n as f64)
+}
+
+fn bad(what: &str) -> PdfflowError {
+    PdfflowError::Format(format!("wire: missing or malformed field `{what}`"))
+}
+
+fn get_usize(j: &Json, k: &str) -> Result<usize> {
+    j.get(k).and_then(Json::as_usize).ok_or_else(|| bad(k))
+}
+
+fn get_f64(j: &Json, k: &str) -> Result<f64> {
+    j.get(k).and_then(Json::as_f64).ok_or_else(|| bad(k))
+}
+
+fn get_u64(j: &Json, k: &str) -> Result<u64> {
+    j.get(k).and_then(Json::as_f64).map(|n| n as u64).ok_or_else(|| bad(k))
+}
+
+// ---------------------------------------------------------------- frames
+
+/// Write one frame: `u32` little-endian length + JSON bytes.
+pub fn write_frame(w: &mut impl Write, doc: &Json) -> std::io::Result<()> {
+    let payload = doc.to_string().into_bytes();
+    debug_assert!(payload.len() <= MAX_FRAME, "oversized frame produced locally");
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(&payload)
+}
+
+/// Read one frame. `Ok(None)` on clean EOF at a frame boundary; frames
+/// over [`MAX_FRAME`] or unparsable payloads are `InvalidData` errors.
+pub fn read_frame(r: &mut impl Read) -> std::io::Result<Option<Json>> {
+    let mut len = [0u8; 4];
+    match r.read_exact(&mut len) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e),
+    }
+    let len = u32::from_le_bytes(len) as usize;
+    if len > MAX_FRAME {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("frame length {len} exceeds cap {MAX_FRAME}"),
+        ));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    let text = std::str::from_utf8(&payload)
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))?;
+    Json::parse(text)
+        .map(Some)
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))
+}
+
+// -------------------------------------------------------------- requests
+
+fn region_fields(q: &RegionQuery) -> Vec<(&'static str, Json)> {
+    vec![
+        ("z", unum(q.z)),
+        ("x0", unum(q.x0)),
+        ("x1", unum(q.x1)),
+        ("y0", unum(q.y0)),
+        ("y1", unum(q.y1)),
+    ]
+}
+
+fn box_fields(q: &BoxQuery) -> Vec<(&'static str, Json)> {
+    vec![
+        ("x0", unum(q.x0)),
+        ("x1", unum(q.x1)),
+        ("y0", unum(q.y0)),
+        ("y1", unum(q.y1)),
+        ("z0", unum(q.z0)),
+        ("z1", unum(q.z1)),
+    ]
+}
+
+fn region_of(j: &Json) -> Result<RegionQuery> {
+    Ok(RegionQuery {
+        z: get_usize(j, "z")?,
+        x0: get_usize(j, "x0")?,
+        x1: get_usize(j, "x1")?,
+        y0: get_usize(j, "y0")?,
+        y1: get_usize(j, "y1")?,
+    })
+}
+
+fn box_of(j: &Json) -> Result<BoxQuery> {
+    Ok(BoxQuery {
+        x0: get_usize(j, "x0")?,
+        x1: get_usize(j, "x1")?,
+        y0: get_usize(j, "y0")?,
+        y1: get_usize(j, "y1")?,
+        z0: get_usize(j, "z0")?,
+        z1: get_usize(j, "z1")?,
+    })
+}
+
+/// Encode one query request (`op` discriminated).
+pub fn encode_request(req: &Request) -> Json {
+    match *req {
+        Request::Point(id) => {
+            Json::obj(vec![("op", Json::Str("point".into())), ("id", num(id.0 as f64))])
+        }
+        Request::Region(q) => {
+            let mut f = vec![("op", Json::Str("region".into()))];
+            f.extend(region_fields(&q));
+            Json::obj(f)
+        }
+        Request::QuantileMean(q, p) => {
+            let mut f = vec![("op", Json::Str("quantile_mean".into()))];
+            f.extend(region_fields(&q));
+            f.push(("p", num(p)));
+            Json::obj(f)
+        }
+        Request::Box(q) => {
+            let mut f = vec![("op", Json::Str("box".into()))];
+            f.extend(box_fields(&q));
+            Json::obj(f)
+        }
+        Request::Radius(q) => Json::obj(vec![
+            ("op", Json::Str("radius".into())),
+            ("x", unum(q.x)),
+            ("y", unum(q.y)),
+            ("z", unum(q.z)),
+            ("radius", num(q.radius)),
+        ]),
+        Request::Knn(q) => Json::obj(vec![
+            ("op", Json::Str("knn".into())),
+            ("x", unum(q.x)),
+            ("y", unum(q.y)),
+            ("z", unum(q.z)),
+            ("k", unum(q.k)),
+        ]),
+        Request::DiffRun(q) => {
+            let mut f = vec![("op", Json::Str("diff_run".into()))];
+            f.extend(box_fields(&q));
+            Json::obj(f)
+        }
+    }
+}
+
+/// The non-query control frames a server must also understand.
+#[derive(Clone, Debug)]
+pub enum ControlOrQuery {
+    Query(Request),
+    /// `{"op":"meta"}` — describe the served store.
+    Meta,
+    /// `{"op":"shutdown"}` — ack, then stop the server gracefully.
+    Shutdown,
+}
+
+/// Decode one inbound frame into a query or control operation.
+pub fn decode_request(j: &Json) -> Result<ControlOrQuery> {
+    let op = j.get("op").and_then(Json::as_str).ok_or_else(|| bad("op"))?;
+    let req = match op {
+        "meta" => return Ok(ControlOrQuery::Meta),
+        "shutdown" => return Ok(ControlOrQuery::Shutdown),
+        "point" => Request::Point(PointId(get_u64(j, "id")?)),
+        "region" => Request::Region(region_of(j)?),
+        "quantile_mean" => Request::QuantileMean(region_of(j)?, get_f64(j, "p")?),
+        "box" => Request::Box(box_of(j)?),
+        "radius" => Request::Radius(RadiusQuery {
+            x: get_usize(j, "x")?,
+            y: get_usize(j, "y")?,
+            z: get_usize(j, "z")?,
+            radius: get_f64(j, "radius")?,
+        }),
+        "knn" => Request::Knn(KnnQuery {
+            x: get_usize(j, "x")?,
+            y: get_usize(j, "y")?,
+            z: get_usize(j, "z")?,
+            k: get_usize(j, "k")?,
+        }),
+        "diff_run" => Request::DiffRun(box_of(j)?),
+        other => {
+            return Err(PdfflowError::Format(format!("wire: unknown op `{other}`")));
+        }
+    };
+    Ok(ControlOrQuery::Query(req))
+}
+
+// --------------------------------------------------------------- replies
+
+fn encode_record(r: &PdfRecord) -> Json {
+    Json::obj(vec![
+        ("point", num(r.point.0 as f64)),
+        ("dist", unum(r.dist.id())),
+        // f32 → f64 widening is exact; narrowed back on decode.
+        ("error", num(r.error as f64)),
+        (
+            "params",
+            Json::Arr(r.params.iter().map(|&p| num(p as f64)).collect()),
+        ),
+    ])
+}
+
+fn decode_record(j: &Json) -> Result<PdfRecord> {
+    let params = j.get("params").and_then(Json::as_arr).ok_or_else(|| bad("params"))?;
+    if params.len() != 3 {
+        return Err(bad("params"));
+    }
+    let mut p = [0f32; 3];
+    for (slot, v) in p.iter_mut().zip(params) {
+        *slot = v.as_f64().ok_or_else(|| bad("params"))? as f32;
+    }
+    Ok(PdfRecord {
+        point: PointId(get_u64(j, "point")?),
+        dist: DistType::from_id(get_usize(j, "dist")?)
+            .ok_or_else(|| bad("dist"))?,
+        error: get_f64(j, "error")? as f32,
+        params: p,
+    })
+}
+
+fn encode_counts(c: &[u64]) -> Json {
+    Json::Arr(c.iter().map(|&n| num(n as f64)).collect())
+}
+
+fn decode_counts<const N: usize>(j: &Json, k: &str) -> Result<[u64; N]> {
+    let arr = j.get(k).and_then(Json::as_arr).ok_or_else(|| bad(k))?;
+    if arr.len() != N {
+        return Err(bad(k));
+    }
+    let mut out = [0u64; N];
+    for (slot, v) in out.iter_mut().zip(arr) {
+        *slot = v.as_f64().ok_or_else(|| bad(k))? as u64;
+    }
+    Ok(out)
+}
+
+fn encode_summary(s: &RegionSummary) -> Json {
+    Json::obj(vec![
+        ("n_points", unum(s.n_points)),
+        ("avg_error", num(s.avg_error)),
+        ("max_error", num(s.max_error)),
+        ("type_counts", encode_counts(&s.type_counts)),
+        ("error_hist", encode_counts(&s.error_hist)),
+    ])
+}
+
+fn decode_summary(j: &Json) -> Result<RegionSummary> {
+    Ok(RegionSummary {
+        n_points: get_usize(j, "n_points")?,
+        avg_error: get_f64(j, "avg_error")?,
+        max_error: get_f64(j, "max_error")?,
+        type_counts: decode_counts::<10>(j, "type_counts")?,
+        error_hist: decode_counts::<ERROR_HIST_BINS>(j, "error_hist")?,
+    })
+}
+
+fn encode_cells(cells: &[(usize, usize, usize)]) -> Json {
+    Json::Arr(
+        cells
+            .iter()
+            .map(|&(x, y, z)| Json::Arr(vec![unum(x), unum(y), unum(z)]))
+            .collect(),
+    )
+}
+
+fn decode_cells(j: &Json, k: &str) -> Result<Vec<(usize, usize, usize)>> {
+    let arr = j.get(k).and_then(Json::as_arr).ok_or_else(|| bad(k))?;
+    arr.iter()
+        .map(|c| {
+            let c = c.as_arr().filter(|c| c.len() == 3).ok_or_else(|| bad(k))?;
+            let at = |i: usize| c[i].as_usize().ok_or_else(|| bad(k));
+            Ok((at(0)?, at(1)?, at(2)?))
+        })
+        .collect()
+}
+
+fn encode_diff(d: &RunDiff) -> Json {
+    Json::obj(vec![
+        ("n_compared", num(d.n_compared as f64)),
+        ("only_a", num(d.only_a as f64)),
+        ("only_b", num(d.only_b as f64)),
+        ("type_changed", num(d.type_changed as f64)),
+        ("type_counts_a", encode_counts(&d.type_counts_a)),
+        ("type_counts_b", encode_counts(&d.type_counts_b)),
+        ("err_delta_sum", num(d.err_delta_sum)),
+        ("max_err_delta", num(d.max_err_delta as f64)),
+        ("changed_cells", encode_cells(&d.changed_cells)),
+        (
+            "grid",
+            Json::obj(vec![
+                ("nx", unum(d.grid.dims.nx)),
+                ("ny", unum(d.grid.dims.ny)),
+                ("nz", unum(d.grid.dims.nz)),
+                ("sx", unum(d.grid.sx)),
+                ("sy", unum(d.grid.sy)),
+                ("sz", unum(d.grid.sz)),
+            ]),
+        ),
+    ])
+}
+
+fn decode_diff(j: &Json) -> Result<RunDiff> {
+    let g = j.get("grid").ok_or_else(|| bad("grid"))?;
+    let dims = CubeDims::new(get_usize(g, "nx")?, get_usize(g, "ny")?, get_usize(g, "nz")?);
+    let grid = crate::cube::CellGrid::new(
+        dims,
+        get_usize(g, "sx")?,
+        get_usize(g, "sy")?,
+        get_usize(g, "sz")?,
+    );
+    Ok(RunDiff {
+        n_compared: get_usize(j, "n_compared")?,
+        only_a: get_usize(j, "only_a")?,
+        only_b: get_usize(j, "only_b")?,
+        type_changed: get_usize(j, "type_changed")?,
+        type_counts_a: decode_counts::<10>(j, "type_counts_a")?,
+        type_counts_b: decode_counts::<10>(j, "type_counts_b")?,
+        err_delta_sum: get_f64(j, "err_delta_sum")?,
+        max_err_delta: get_f64(j, "max_err_delta")? as f32,
+        changed_cells: decode_cells(j, "changed_cells")?,
+        grid,
+    })
+}
+
+fn encode_reply(r: &Reply) -> (&'static str, Json) {
+    match r {
+        Reply::Point(rec) => ("point", encode_record(rec)),
+        Reply::Region(s) => ("region", encode_summary(s)),
+        Reply::QuantileMean(v) => ("quantile_mean", Json::obj(vec![("value", num(*v))])),
+        Reply::Box(s) => ("box", encode_summary(s)),
+        Reply::Radius(recs) => ("radius", encode_records(recs)),
+        Reply::Knn(recs) => ("knn", encode_records(recs)),
+        Reply::DiffRun(d) => ("diff_run", encode_diff(d)),
+    }
+}
+
+fn encode_records(recs: &[PdfRecord]) -> Json {
+    Json::obj(vec![(
+        "records",
+        Json::Arr(recs.iter().map(encode_record).collect()),
+    )])
+}
+
+fn decode_records(j: &Json) -> Result<Vec<PdfRecord>> {
+    let arr = j.get("records").and_then(Json::as_arr).ok_or_else(|| bad("records"))?;
+    arr.iter().map(decode_record).collect()
+}
+
+// ------------------------------------------------------------- responses
+
+/// Encode a successful reply frame.
+pub fn encode_served(s: &Served) -> Json {
+    let (class, body) = encode_reply(&s.reply);
+    Json::obj(vec![
+        ("status", Json::Str("ok".into())),
+        ("class", Json::Str(class.into())),
+        ("degraded", Json::Bool(s.degraded)),
+        ("reply", body),
+    ])
+}
+
+/// Encode a failed request: admission sheds become `status:"shed"` (a
+/// typed, retryable rejection — the connection stays open), everything
+/// else `status:"error"` with the error kind preserved.
+pub fn encode_error(e: &PdfflowError) -> Json {
+    if e.is_overload() {
+        return Json::obj(vec![
+            ("status", Json::Str("shed".into())),
+            ("error", Json::Str(e.to_string())),
+        ]);
+    }
+    let kind = match e {
+        PdfflowError::Format(_) => "format",
+        PdfflowError::InvalidArg(_) => "invalid_arg",
+        PdfflowError::Io(_) => "io",
+        _ => "other",
+    };
+    Json::obj(vec![
+        ("status", Json::Str("error".into())),
+        ("kind", Json::Str(kind.into())),
+        ("error", Json::Str(e.to_string())),
+    ])
+}
+
+/// Encode the `{"op":"meta"}` response.
+pub fn encode_meta(m: &ServeMeta) -> Json {
+    Json::obj(vec![
+        ("status", Json::Str("ok".into())),
+        (
+            "meta",
+            Json::obj(vec![
+                ("nx", unum(m.dims.nx)),
+                ("ny", unum(m.dims.ny)),
+                ("nz", unum(m.dims.nz)),
+                ("slices", Json::Arr(m.slices.iter().map(|&z| unum(z)).collect())),
+                ("run", Json::Str(m.run.clone())),
+            ]),
+        ),
+    ])
+}
+
+/// Decode a meta response (client side).
+pub fn decode_meta(j: &Json) -> Result<ServeMeta> {
+    let m = j.get("meta").ok_or_else(|| bad("meta"))?;
+    let slices = m
+        .get("slices")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| bad("slices"))?
+        .iter()
+        .map(|v| v.as_usize().ok_or_else(|| bad("slices")))
+        .collect::<Result<Vec<usize>>>()?;
+    Ok(ServeMeta {
+        dims: CubeDims::new(get_usize(m, "nx")?, get_usize(m, "ny")?, get_usize(m, "nz")?),
+        slices,
+        run: m.get("run").and_then(Json::as_str).ok_or_else(|| bad("run"))?.to_string(),
+    })
+}
+
+/// Decode a query response (client side): `ok` frames become [`Served`],
+/// `shed` frames become [`PdfflowError::Overloaded`], `error` frames
+/// are re-typed from their `kind`.
+pub fn decode_response(j: &Json) -> Result<Served> {
+    let status = j.get("status").and_then(Json::as_str).ok_or_else(|| bad("status"))?;
+    match status {
+        "ok" => {}
+        "shed" => {
+            let msg = j.get("error").and_then(Json::as_str).unwrap_or("shed");
+            // Strip the error-display prefix the server serialized with.
+            let msg = msg.strip_prefix("overloaded: ").unwrap_or(msg);
+            return Err(PdfflowError::Overloaded(msg.to_string()));
+        }
+        "error" => {
+            let msg = j
+                .get("error")
+                .and_then(Json::as_str)
+                .unwrap_or("unknown server error")
+                .to_string();
+            return Err(match j.get("kind").and_then(Json::as_str) {
+                Some("invalid_arg") => PdfflowError::InvalidArg(msg),
+                Some("io") => PdfflowError::Io(std::io::Error::other(msg)),
+                _ => PdfflowError::Format(msg),
+            });
+        }
+        other => {
+            return Err(PdfflowError::Format(format!("wire: unknown status `{other}`")));
+        }
+    }
+    let degraded = j.get("degraded").and_then(Json::as_bool).unwrap_or(false);
+    let class = j.get("class").and_then(Json::as_str).ok_or_else(|| bad("class"))?;
+    let body = j.get("reply").ok_or_else(|| bad("reply"))?;
+    let reply = match class {
+        "point" => Reply::Point(decode_record(body)?),
+        "region" => Reply::Region(decode_summary(body)?),
+        "quantile_mean" => Reply::QuantileMean(get_f64(body, "value")?),
+        "box" => Reply::Box(decode_summary(body)?),
+        "radius" => Reply::Radius(decode_records(body)?),
+        "knn" => Reply::Knn(decode_records(body)?),
+        "diff_run" => Reply::DiffRun(decode_diff(body)?),
+        other => {
+            return Err(PdfflowError::Format(format!("wire: unknown class `{other}`")));
+        }
+    };
+    Ok(Served { reply, degraded })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(i: u64) -> PdfRecord {
+        PdfRecord {
+            point: PointId(i),
+            dist: DistType::from_id((i % 10) as usize).unwrap(),
+            // Bit-awkward values on purpose: exercise shortest-roundtrip
+            // float formatting, not just pretty decimals.
+            error: 0.1f32 + (i as f32) / 3.0,
+            params: [1.0 / 3.0, -(i as f32) / 7.0, f32::MIN_POSITIVE],
+        }
+    }
+
+    fn roundtrip_request(req: Request) {
+        let encoded = encode_request(&req);
+        let text = encoded.to_string();
+        let parsed = Json::parse(&text).unwrap();
+        match decode_request(&parsed).unwrap() {
+            ControlOrQuery::Query(back) => {
+                assert_eq!(format!("{req:?}"), format!("{back:?}"), "request mutated on wire")
+            }
+            other => panic!("query decoded as control frame {other:?}"),
+        }
+    }
+
+    fn roundtrip_served(s: Served) {
+        let text = encode_served(&s).to_string();
+        let parsed = Json::parse(&text).unwrap();
+        let back = decode_response(&parsed).unwrap();
+        assert_eq!(back.degraded, s.degraded);
+        assert_eq!(format!("{:?}", back.reply), format!("{:?}", s.reply), "reply mutated on wire");
+    }
+
+    #[test]
+    fn requests_roundtrip_bit_identically() {
+        let region = RegionQuery { z: 2, x0: 1, x1: 30, y0: 0, y1: 15 };
+        let bx = BoxQuery { x0: 0, x1: 7, y0: 1, y1: 9, z0: 1, z1: 3 };
+        roundtrip_request(Request::Point(PointId(123_456)));
+        roundtrip_request(Request::Region(region));
+        roundtrip_request(Request::QuantileMean(region, 0.05 + 0.9 / 7.0));
+        roundtrip_request(Request::Box(bx));
+        roundtrip_request(Request::Radius(RadiusQuery { x: 3, y: 4, z: 1, radius: 2.5 + 1.0 / 3.0 }));
+        roundtrip_request(Request::Knn(KnnQuery { x: 9, y: 2, z: 0, k: 17 }));
+        roundtrip_request(Request::DiffRun(bx));
+    }
+
+    #[test]
+    fn replies_roundtrip_bit_identically() {
+        let summary = RegionSummary {
+            n_points: 512,
+            avg_error: 0.123_456_789_012_345,
+            max_error: 2.0 / 3.0,
+            type_counts: [1, 0, 3, 0, 0, 7, 0, 0, 0, 501],
+            error_hist: [64, 64, 64, 64, 64, 64, 64, 48],
+        };
+        roundtrip_served(Served { reply: Reply::Point(rec(5)), degraded: false });
+        roundtrip_served(Served { reply: Reply::Region(summary.clone()), degraded: true });
+        roundtrip_served(Served {
+            reply: Reply::QuantileMean(1.0 / 3.0),
+            degraded: false,
+        });
+        roundtrip_served(Served { reply: Reply::Box(summary), degraded: false });
+        roundtrip_served(Served {
+            reply: Reply::Radius((0..5).map(rec).collect()),
+            degraded: false,
+        });
+        roundtrip_served(Served {
+            reply: Reply::Knn((10..13).map(rec).collect()),
+            degraded: true,
+        });
+        let dims = CubeDims::new(16, 8, 4);
+        roundtrip_served(Served {
+            reply: Reply::DiffRun(RunDiff {
+                n_compared: 100,
+                only_a: 3,
+                only_b: 0,
+                type_changed: 9,
+                type_counts_a: [10; 10],
+                type_counts_b: [9, 11, 10, 10, 10, 10, 10, 10, 10, 10],
+                err_delta_sum: 0.5 + 1.0 / 7.0,
+                max_err_delta: 0.25,
+                changed_cells: vec![(0, 1, 2), (3, 0, 1)],
+                grid: crate::cube::CellGrid::new(dims, 2, 2, 2),
+            }),
+            degraded: false,
+        });
+    }
+
+    #[test]
+    fn errors_map_to_typed_responses() {
+        let shed = encode_error(&PdfflowError::Overloaded("queue full (2 in flight)".into()));
+        let parsed = Json::parse(&shed.to_string()).unwrap();
+        let back = decode_response(&parsed).unwrap_err();
+        assert!(back.is_overload(), "shed must decode as Overloaded, got {back:?}");
+        assert_eq!(back.to_string(), "overloaded: queue full (2 in flight)");
+
+        let fmt = encode_error(&PdfflowError::Format("bad window".into()));
+        let back = decode_response(&Json::parse(&fmt.to_string()).unwrap()).unwrap_err();
+        assert!(matches!(back, PdfflowError::Format(_)));
+
+        let arg = encode_error(&PdfflowError::InvalidArg("no such slice".into()));
+        let back = decode_response(&Json::parse(&arg.to_string()).unwrap()).unwrap_err();
+        assert!(matches!(back, PdfflowError::InvalidArg(_)));
+    }
+
+    #[test]
+    fn frames_roundtrip_and_reject_oversize() {
+        let doc = encode_request(&Request::Point(PointId(9)));
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &doc).unwrap();
+        write_frame(&mut buf, &Json::obj(vec![("op", Json::Str("meta".into()))])).unwrap();
+        let mut r = &buf[..];
+        assert_eq!(read_frame(&mut r).unwrap().unwrap().to_string(), doc.to_string());
+        assert!(matches!(
+            decode_request(&read_frame(&mut r).unwrap().unwrap()).unwrap(),
+            ControlOrQuery::Meta
+        ));
+        assert!(read_frame(&mut r).unwrap().is_none(), "clean EOF is None");
+
+        let mut evil = Vec::new();
+        evil.extend_from_slice(&(MAX_FRAME as u32 + 1).to_le_bytes());
+        assert!(read_frame(&mut &evil[..]).is_err());
+    }
+
+    #[test]
+    fn meta_roundtrips() {
+        let m = ServeMeta {
+            dims: CubeDims::new(64, 32, 8),
+            slices: vec![0, 2, 5],
+            run: "baseline_4_default".into(),
+        };
+        let parsed = Json::parse(&encode_meta(&m).to_string()).unwrap();
+        assert_eq!(decode_meta(&parsed).unwrap(), m);
+    }
+}

@@ -19,6 +19,7 @@
 //! measurements — but they keep the trajectory populated on every
 //! machine the tier-1 suite touches.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use pdfflow::bench::{
@@ -31,7 +32,8 @@ use pdfflow::cube::CubeDims;
 use pdfflow::datagen::{DatasetSpec, SyntheticDataset};
 use pdfflow::executor::Executor;
 use pdfflow::runtime::{make_backend, Backend, BackendKind, BackendOptions};
-use pdfflow::serve::{closed_loop, ServeFront, ServeOptions};
+use pdfflow::serve::net::{closed_loop_net, NetOptions, NetServer};
+use pdfflow::serve::{ServeFront, ServeOptions};
 use pdfflow::spatial::{BoxQuery, KnnQuery, RadiusQuery};
 use pdfflow::util::json::Json;
 use pdfflow::util::prng::Rng;
@@ -287,29 +289,46 @@ fn records_queries_bench_json() {
         });
     }
 
-    // The serving row: closed-loop load through the admission-controlled
-    // front door, recorded next to the raw engine rows (mode: "serve").
+    // The serving row: closed-loop load driven through the *socket*
+    // front — real loopback TCP connections, wire codec and dispatch
+    // queue included — recorded next to the raw engine rows
+    // (mode: "serve", transport: "socket").
     let clients = 4usize;
-    let front = ServeFront::new(
+    let front = Arc::new(ServeFront::new(
         fixture.engine(0).expect("open store for serving"),
         ServeOptions {
             max_in_flight: 2,
             queue_depth: 4,
         },
+    ));
+    let server = NetServer::start(
+        Arc::clone(&front),
+        "127.0.0.1:0",
+        NetOptions {
+            workers: 2,
+            queue_depth: 4,
+        },
+    )
+    .expect("socket front");
+    let load = closed_loop_net(&server.addr().to_string(), clients, 150, 11)
+        .expect("socket closed loop");
+    server.join();
+    assert!(load.completed > 0, "serving tier completed no requests");
+    assert_eq!(
+        load.completed + load.shed + load.errors,
+        load.requests,
+        "socket closed loop lost requests: {load:?}"
     );
-    let load = closed_loop(&front, clients, 150, 11);
-    assert!(
-        load.metrics.total_completed() > 0,
-        "serving tier completed no requests"
-    );
-    assert!(load.metrics.peak_in_flight <= 2, "in-flight cap violated");
-    assert!(load.metrics.peak_queued <= 4, "queue-depth cap violated");
+    let m = front.metrics();
+    assert!(m.peak_in_flight <= 2, "in-flight cap violated");
+    assert!(m.peak_queued <= 4, "queue-depth cap violated");
     rows.push(BenchRow {
         threads: clients,
         throughput: load.throughput,
         extra: vec![
             ("mode", Json::Str("serve".into())),
-            ("shed", Json::Num(load.metrics.total_shed() as f64)),
+            ("transport", Json::Str("socket".into())),
+            ("shed", Json::Num(load.shed as f64)),
             ("max_in_flight", Json::Num(2.0)),
             ("queue_depth", Json::Num(4.0)),
         ],
@@ -350,4 +369,13 @@ fn records_queries_bench_json() {
         })
         .count();
     assert_eq!(spatial_rows, 3, "spatial rows missing from BENCH_queries.json");
+    let serve_row = rows
+        .iter()
+        .find(|r| r.get("mode").and_then(|m| m.as_str()) == Some("serve"))
+        .expect("serve row missing from BENCH_queries.json");
+    assert_eq!(
+        serve_row.get("transport").and_then(|t| t.as_str()),
+        Some("socket"),
+        "serve row must be driven through the socket front"
+    );
 }

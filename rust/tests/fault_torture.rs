@@ -20,7 +20,8 @@ use pdfflow::cube::PointId;
 use pdfflow::datagen::{DatasetSpec, SyntheticDataset};
 use pdfflow::fault;
 use pdfflow::pdfstore::{
-    scrub_store, PdfRecord, PdfStore, QueryEngine, QueryOptions, RegionQuery, QUARANTINED,
+    scrub_store, PdfRecord, PdfStore, QueryEngine, QueryOptions, ReadPath, RegionQuery,
+    QUARANTINED,
 };
 use pdfflow::runtime::{make_backend, Backend, BackendKind, BackendOptions};
 use pdfflow::serve::{Class, Reply, Request, ServeFront, ServeOptions};
@@ -493,21 +494,120 @@ fn serve_front_flags_degraded_answers_per_request() {
             queue_depth: 4,
         },
     );
-    // Healthy slice before any damage is discovered: not degraded.
+    // Healthy slice before any damage is discovered: not degraded, and
+    // the reply lands in the result cache.
     let served = front.submit(Request::Point(id_z2)).unwrap();
     assert!(!served.degraded);
+    let stats = front.result_cache().unwrap().stats();
+    assert_eq!((stats.entries, stats.invalidations), (1, 0));
     // The damaged slice quarantines mid-query and answers from the
-    // prior generation — same bits, flagged.
+    // prior generation — same bits, flagged, and never cached.
     let served = front.submit(Request::Point(id_z1)).unwrap();
     assert!(served.degraded, "fallback answer must be flagged degraded");
-    match served.reply {
-        Reply::Point(rec) => assert_eq!(rec, direct_z1),
+    match &served.reply {
+        Reply::Point(rec) => assert_eq!(*rec, direct_z1),
         other => panic!("unexpected reply {other:?}"),
     }
-    // The healthy slice stays unflagged even with the store degraded.
+    assert_eq!(
+        front.result_cache().unwrap().stats().entries,
+        1,
+        "degraded reply must not enter the result cache"
+    );
+    // The quarantine bumped the resolve epoch, so the next lookup sees
+    // a moved generation stamp and flushes the pre-quarantine entry
+    // instead of serving it. The healthy slice stays unflagged even
+    // with the store degraded.
     let served = front.submit(Request::Point(id_z2)).unwrap();
     assert!(!served.degraded, "degradation must not bleed into healthy slices");
-    assert_eq!(front.metrics().class(Class::Point).degraded, 1);
+    let stats = front.result_cache().unwrap().stats();
+    assert_eq!(stats.invalidations, 1, "quarantine must flush the result cache");
+    assert_eq!(stats.hits, 0, "a pre-quarantine entry must never be served");
+    // Repeats of the degraded request recompute every time — bit-equal,
+    // still flagged, still uncached.
+    let again = front.submit(Request::Point(id_z1)).unwrap();
+    assert!(again.degraded);
+    match &again.reply {
+        Reply::Point(rec) => assert_eq!(*rec, direct_z1),
+        other => panic!("unexpected reply {other:?}"),
+    }
+    let stats = front.result_cache().unwrap().stats();
+    assert_eq!(stats.hits, 0, "degraded replies must never be served from cache");
+    assert_eq!(front.metrics().class(Class::Point).degraded, 2);
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn mmap_and_cached_read_paths_answer_bit_identically() {
+    let _g = gate();
+    let root = root_dir("readpath");
+    let (_ds, store) = build_two_gen(&root);
+    let pristine = pristine_fingerprint(&store);
+
+    // The full query surface must fingerprint identically on both
+    // physical read paths at every fan-out width.
+    for &workers in &[1usize, 2, 8] {
+        for &read_path in &[ReadPath::Cached, ReadPath::Mmap] {
+            let engine = QueryEngine::open(
+                &store,
+                QueryOptions {
+                    workers,
+                    read_path,
+                    ..QueryOptions::default()
+                },
+            )
+            .unwrap();
+            let fp = try_fingerprint(&engine, 1).unwrap();
+            assert_eq!(
+                fp, pristine,
+                "read path {read_path:?} at {workers} workers changed query answers"
+            );
+            assert!(!engine.store().is_degraded());
+        }
+    }
+
+    // When the mmap machinery is compiled in, the mmap engine must
+    // actually serve zero-copy reads (not silently fall back).
+    if cfg!(all(unix, feature = "mmap")) {
+        let mmap0 = counter("store.read_path.mmap");
+        let engine = QueryEngine::open(
+            &store,
+            QueryOptions {
+                read_path: ReadPath::Mmap,
+                ..QueryOptions::default()
+            },
+        )
+        .unwrap();
+        let _ = try_fingerprint(&engine, 1).unwrap();
+        assert!(
+            counter("store.read_path.mmap") > mmap0,
+            "ReadPath::Mmap served no reads through the mapping"
+        );
+    }
+
+    // Tamper with the newest generation: the mmap path must catch the
+    // damage via the per-window checksum on first touch, quarantine,
+    // and fall back to the prior generation — bit-identical answers,
+    // flagged degraded, exactly like the block-cache path.
+    let damaged = root.join("damaged");
+    copy_store(&store, &damaged);
+    let g1 = damaged.join(NEWEST_GEN);
+    let len = std::fs::metadata(&g1).unwrap().len() as usize;
+    flip_byte(&g1, len / 3);
+    for &read_path in &[ReadPath::Mmap, ReadPath::Cached] {
+        let engine = QueryEngine::open(
+            &damaged,
+            QueryOptions {
+                read_path,
+                ..QueryOptions::default()
+            },
+        )
+        .unwrap();
+        let fp = try_fingerprint(&engine, 1)
+            .unwrap_or_else(|e| panic!("{read_path:?}: fallback must cover the slice: {e}"));
+        assert_eq!(fp, pristine, "{read_path:?}: generation fallback changed answers");
+        assert!(engine.store().is_degraded(), "{read_path:?}: fallback unflagged");
+        assert_eq!(engine.store().n_quarantined(), 1);
+    }
     std::fs::remove_dir_all(&root).unwrap();
 }
 

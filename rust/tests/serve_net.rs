@@ -1,0 +1,410 @@
+//! End-to-end tests of the socket serving front: every request class
+//! round-tripped over a real loopback TCP connection must be
+//! bit-identical to a direct in-process submission; overload must shed
+//! with a *typed* wire reply that leaves the connection usable; and the
+//! generation-stamped result cache must serve bit-identical hits and
+//! flush wholesale on every event that could change an answer
+//! (rerun-appended generation, compaction, scrub repair, mid-serve
+//! quarantine).
+//!
+//! Tests share the process-global telemetry registry, so they serialize
+//! on one mutex and assert on per-front stats or counter deltas only.
+
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use pdfflow::cluster::{ClusterSpec, SimCluster};
+use pdfflow::config::PipelineConfig;
+use pdfflow::coordinator::{Method, Pipeline, TypeSet};
+use pdfflow::cube::PointId;
+use pdfflow::datagen::{DatasetSpec, SyntheticDataset};
+use pdfflow::pdfstore::{
+    compact_run, scrub_store, QueryEngine, QueryOptions, RegionQuery, RunSelector,
+};
+use pdfflow::runtime::{make_backend, Backend, BackendKind, BackendOptions};
+use pdfflow::serve::net::{closed_loop_net, Client, NetOptions, NetServer};
+use pdfflow::serve::{Class, Request, ServeFront, ServeOptions};
+use pdfflow::spatial::{BoxQuery, KnnQuery, RadiusQuery};
+
+fn gate() -> MutexGuard<'static, ()> {
+    static GATE: Mutex<()> = Mutex::new(());
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn backend() -> Box<dyn Backend> {
+    make_backend(
+        BackendKind::Native,
+        "artifacts",
+        &BackendOptions {
+            batch: 64,
+            ..BackendOptions::default()
+        },
+    )
+    .expect("native backend")
+}
+
+fn root_dir(tag: &str) -> PathBuf {
+    let root = std::env::temp_dir().join(format!("pdfflow-servenet-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    root
+}
+
+fn pipeline_cfg(store_dir: &Path, run_id: &str) -> PipelineConfig {
+    PipelineConfig {
+        batch: 64,
+        window_lines: 4,
+        store_dir: Some(store_dir.to_string_lossy().into_owned()),
+        run_id: Some(run_id.to_string()),
+        ..PipelineConfig::default()
+    }
+}
+
+/// Persist `slices` of the tiny dataset under run `run_id`, `reruns + 1`
+/// generations each.
+fn build_store(root: &Path, run_id: &str, slices: &[usize], reruns: usize) -> SyntheticDataset {
+    let ds = SyntheticDataset::generate(&DatasetSpec::tiny(), root.join("data")).unwrap();
+    let backend = backend();
+    let mut pipe = Pipeline::new(
+        &ds,
+        backend.as_ref(),
+        SimCluster::new(ClusterSpec::lncc()),
+        pipeline_cfg(&root.join("store"), run_id),
+    );
+    for _ in 0..=reruns {
+        for &z in slices {
+            pipe.run_slice(Method::Baseline, z, TypeSet::Four).unwrap();
+        }
+    }
+    ds
+}
+
+fn open_engine(store: &Path, run: Option<&str>) -> QueryEngine {
+    QueryEngine::open_run(store, RunSelector::from_opt(run), QueryOptions::default()).unwrap()
+}
+
+/// One request per class (diff included; callers without a diff engine
+/// drop the last element).
+fn all_class_requests(engine: &QueryEngine) -> Vec<Request> {
+    let dims = engine.dims();
+    let region = RegionQuery {
+        z: 1,
+        x0: 1,
+        x1: dims.nx - 2,
+        y0: 1,
+        y1: dims.ny - 2,
+    };
+    let bx = BoxQuery {
+        x0: 0,
+        x1: dims.nx - 1,
+        y0: 0,
+        y1: dims.ny - 1,
+        z0: 1,
+        z1: 2,
+    };
+    vec![
+        Request::Point(PointId(dims.slice_points() as u64 + 3)),
+        Request::Region(region),
+        Request::QuantileMean(region, 0.5),
+        Request::Box(bx),
+        Request::Radius(RadiusQuery {
+            x: dims.nx / 2,
+            y: dims.ny / 2,
+            z: 1,
+            radius: 2.0,
+        }),
+        Request::Knn(KnnQuery {
+            x: 1,
+            y: 2,
+            z: 1,
+            k: 7,
+        }),
+        Request::DiffRun(bx),
+    ]
+}
+
+#[test]
+fn wire_replies_match_direct_submission_bit_for_bit() {
+    let _g = gate();
+    let root = root_dir("parity");
+    build_store(&root, "t", &[1, 2], 0);
+    let store = root.join("store");
+    // Second run for the diff class.
+    {
+        let ds = SyntheticDataset::generate(&DatasetSpec::tiny(), root.join("data-u")).unwrap();
+        let backend = backend();
+        let mut pipe = Pipeline::new(
+            &ds,
+            backend.as_ref(),
+            SimCluster::new(ClusterSpec::lncc()),
+            pipeline_cfg(&store, "u"),
+        );
+        pipe.run_slice(Method::Baseline, 1, TypeSet::Four).unwrap();
+        pipe.run_slice(Method::Baseline, 2, TypeSet::Four).unwrap();
+    }
+    let engine = open_engine(&store, Some("t"));
+    let requests = all_class_requests(&engine);
+    let front = Arc::new(
+        ServeFront::new(
+            engine,
+            ServeOptions {
+                max_in_flight: 4,
+                queue_depth: 8,
+            },
+        )
+        .with_diff(open_engine(&store, Some("u"))),
+    );
+    let server = NetServer::start(
+        Arc::clone(&front),
+        "127.0.0.1:0",
+        NetOptions {
+            workers: 2,
+            queue_depth: 8,
+        },
+    )
+    .unwrap();
+    let addr = server.addr().to_string();
+
+    let mut client = Client::connect(&addr).unwrap();
+    let meta = client.meta().unwrap();
+    assert_eq!(meta.dims, front.engine().dims());
+    assert_eq!(meta.slices, front.engine().store().slices());
+
+    for req in requests {
+        // Wire first (computed, inserted into the result cache), then
+        // direct (served from cache): one pass checks transport
+        // fidelity *and* cache coherence against the same reply.
+        let wire = client.query(&req).unwrap();
+        let direct = front.submit(req).unwrap();
+        assert_eq!(
+            format!("{:?}", wire.reply),
+            format!("{:?}", direct.reply),
+            "wire reply for {req:?} differs from direct submission"
+        );
+        assert_eq!(wire.degraded, direct.degraded);
+        assert!(!wire.degraded, "healthy store must not serve degraded");
+    }
+    let stats = front.result_cache().unwrap().stats();
+    assert!(stats.hits >= 7, "direct submissions should hit the cache, got {stats:?}");
+    server.join();
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn overload_sheds_typed_on_wire_and_connection_stays_usable() {
+    let _g = gate();
+    let root = root_dir("shed");
+    build_store(&root, "t", &[1], 0);
+    let engine = open_engine(&root.join("store"), None);
+    let point = Request::Point(PointId(engine.dims().slice_points() as u64));
+    let region = Request::Region(RegionQuery::slice(&engine.dims(), 1));
+    let front = Arc::new(ServeFront::new(
+        engine,
+        ServeOptions {
+            max_in_flight: 1,
+            queue_depth: 1,
+        },
+    ));
+    // workers: 0 — every query frame sheds at the dispatch queue, which
+    // makes the typed-shed wire path deterministic.
+    let server = NetServer::start(
+        Arc::clone(&front),
+        "127.0.0.1:0",
+        NetOptions {
+            workers: 0,
+            queue_depth: 1,
+        },
+    )
+    .unwrap();
+    let mut client = Client::connect(&server.addr().to_string()).unwrap();
+
+    let err = client.query(&point).unwrap_err();
+    assert!(err.is_overload(), "expected typed shed, got {err:?}");
+    let err = client.query(&region).unwrap_err();
+    assert!(err.is_overload(), "connection must stay usable after a shed");
+    // Control frames still answered after sheds.
+    assert!(!client.meta().unwrap().slices.is_empty());
+
+    // Socket sheds land in the same per-class ledger as gate sheds.
+    let m = front.metrics();
+    assert_eq!(m.class(Class::Point).shed, 1);
+    assert_eq!(m.class(Class::Region).shed, 1);
+    assert_eq!(m.class(Class::Point).admitted, 0, "shed requests never enter the gate");
+    server.join();
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn result_cache_hits_are_bit_identical_and_metered() {
+    let _g = gate();
+    let root = root_dir("cachehit");
+    build_store(&root, "t", &[1], 0);
+    let engine = open_engine(&root.join("store"), None);
+    let req = Request::Region(RegionQuery::slice(&engine.dims(), 1));
+    let front = ServeFront::new(engine, ServeOptions::default());
+
+    let first = front.submit(req).unwrap();
+    let stats = front.result_cache().unwrap().stats();
+    assert_eq!(stats.hits, 0);
+    assert_eq!(stats.entries, 1);
+
+    let second = front.submit(req).unwrap();
+    let stats = front.result_cache().unwrap().stats();
+    assert_eq!(stats.hits, 1, "repeat of an identical request must hit");
+    assert_eq!(
+        format!("{:?}", first.reply),
+        format!("{:?}", second.reply),
+        "cached reply differs from computed reply"
+    );
+    // The ledger counts hits as admitted + completed.
+    let m = front.metrics();
+    assert_eq!(m.class(Class::Region).admitted, 2);
+    assert_eq!(m.class(Class::Region).completed, 2);
+
+    // Disabling the cache really disables it.
+    let engine = open_engine(&root.join("store"), None);
+    let off = ServeFront::new(engine, ServeOptions::default()).with_result_cache(0);
+    assert!(off.result_cache().is_none());
+    off.submit(req).unwrap();
+    off.submit(req).unwrap();
+    assert_eq!(off.metrics().class(Class::Region).completed, 2);
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn rerun_and_compact_invalidate_the_result_cache_wholesale() {
+    let _g = gate();
+    let root = root_dir("swap");
+    let ds = build_store(&root, "t", &[1], 0);
+    let store = root.join("store");
+    let engine = open_engine(&store, None);
+    let req = Request::Region(RegionQuery::slice(&engine.dims(), 1));
+    let front = ServeFront::new(engine, ServeOptions::default());
+
+    let baseline = front.submit(req).unwrap();
+    front.submit(req).unwrap();
+    assert_eq!(front.result_cache().unwrap().stats().hits, 1);
+
+    // A rerun appends generation g1 and atomically swaps CATALOG.json —
+    // the stamp moves, the next lookup flushes wholesale.
+    {
+        let backend = backend();
+        let mut pipe = Pipeline::new(
+            &ds,
+            backend.as_ref(),
+            SimCluster::new(ClusterSpec::lncc()),
+            pipeline_cfg(&store, "t"),
+        );
+        pipe.run_slice(Method::Baseline, 1, TypeSet::Four).unwrap();
+    }
+    let after_rerun = front.submit(req).unwrap();
+    let stats = front.result_cache().unwrap().stats();
+    assert_eq!(stats.invalidations, 1, "catalog swap must flush the cache");
+    // The deterministic rerun shadows g0 with identical records, so the
+    // recomputed answer matches bit for bit.
+    assert_eq!(format!("{:?}", after_rerun.reply), format!("{:?}", baseline.reply));
+
+    // Warm the cache again, then compact: another swap, another flush.
+    front.submit(req).unwrap();
+    compact_run(&store, None).unwrap();
+    let after_compact = front.submit(req).unwrap();
+    let stats = front.result_cache().unwrap().stats();
+    assert_eq!(stats.invalidations, 2, "compaction must flush the cache");
+    assert_eq!(format!("{:?}", after_compact.reply), format!("{:?}", baseline.reply));
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn quarantine_and_scrub_repair_invalidate_and_degraded_is_never_cached() {
+    let _g = gate();
+    let root = root_dir("degraded");
+    build_store(&root, "t", &[1], 1); // two generations: g1 shadows g0
+    let store = root.join("store");
+    let newest = store.join("slice1_baseline_4_t_g1.seg");
+    let len = std::fs::metadata(&newest).unwrap().len() as usize;
+    let mut bytes = std::fs::read(&newest).unwrap();
+    bytes[len / 3] ^= 0x01;
+    std::fs::write(&newest, bytes).unwrap();
+
+    let engine = open_engine(&store, None);
+    let point = Request::Point(PointId(engine.dims().slice_points() as u64 + 2));
+    let front = ServeFront::new(engine, ServeOptions::default());
+
+    // First touch quarantines mid-serve and answers from g0, flagged.
+    let served = front.submit(point).unwrap();
+    assert!(served.degraded, "fallback answer must be flagged");
+    let stats = front.result_cache().unwrap().stats();
+    assert_eq!(stats.entries, 0, "degraded replies must never be cached");
+
+    // The quarantine bumped the epoch → stamp moved → wholesale flush
+    // on the next lookup; repeats stay misses (still degraded).
+    let again = front.submit(point).unwrap();
+    assert!(again.degraded);
+    let stats = front.result_cache().unwrap().stats();
+    assert!(stats.invalidations >= 1, "quarantine must flush the cache, got {stats:?}");
+    assert_eq!(stats.hits, 0, "degraded replies must never be served from cache");
+    assert_eq!(format!("{:?}", again.reply), format!("{:?}", served.reply));
+
+    // Scrub --repair rewrites the survivors into a fresh generation and
+    // swaps the catalog: stamp moves again, and once the front reopens
+    // the repaired store, replies are undegraded and cacheable again.
+    let report = scrub_store(&store, true).unwrap();
+    assert!(report.runs[0].repaired);
+    let inv_before = front.result_cache().unwrap().stats().invalidations;
+    let _ = front.submit(point); // old handles may or may not still resolve; only the flush matters
+    assert!(
+        front.result_cache().unwrap().stats().invalidations > inv_before,
+        "scrub repair must flush the cache"
+    );
+
+    let engine = open_engine(&store, None);
+    let repaired_front = ServeFront::new(engine, ServeOptions::default());
+    let healed = repaired_front.submit(point).unwrap();
+    assert!(!healed.degraded, "repaired store must serve undegraded");
+    assert_eq!(format!("{:?}", healed.reply), format!("{:?}", served.reply));
+    repaired_front.submit(point).unwrap();
+    assert_eq!(repaired_front.result_cache().unwrap().stats().hits, 1);
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn socket_closed_loop_accounts_every_request_and_shuts_down_cleanly() {
+    let _g = gate();
+    let root = root_dir("loop");
+    build_store(&root, "t", &[1, 2], 0);
+    let engine = open_engine(&root.join("store"), None);
+    let front = Arc::new(ServeFront::new(
+        engine,
+        ServeOptions {
+            max_in_flight: 2,
+            queue_depth: 4,
+        },
+    ));
+    let server = NetServer::start(
+        Arc::clone(&front),
+        "127.0.0.1:0",
+        NetOptions {
+            workers: 2,
+            queue_depth: 4,
+        },
+    )
+    .unwrap();
+    let addr = server.addr().to_string();
+
+    let rep = closed_loop_net(&addr, 3, 25, 11).unwrap();
+    assert_eq!(rep.requests, 75);
+    assert_eq!(
+        rep.completed + rep.shed + rep.errors,
+        rep.requests,
+        "every socket request must be accounted: {rep:?}"
+    );
+    assert!(rep.completed > 0, "closed loop made no progress: {rep:?}");
+    // Server-side ledger agrees with the client-side view.
+    let m = front.metrics();
+    let total = m.total_completed() + m.total_shed();
+    assert!(total >= rep.requests, "server ledger lost requests: {m:?} vs {rep:?}");
+
+    // Graceful wire shutdown: ack arrives, threads drain and join.
+    Client::connect(&addr).unwrap().shutdown_server().unwrap();
+    server.wait();
+    std::fs::remove_dir_all(&root).unwrap();
+}
